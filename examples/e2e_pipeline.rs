@@ -1,0 +1,180 @@
+//! End-to-end driver (DESIGN.md §6): proves all layers compose.
+//!
+//!   L2/L1 (AOT JAX + Pallas, via PJRT)  →  real FFN fwd/bwd tensors,
+//!       quantized to e4m3 on-device over several "training" steps;
+//!   L3 codecs  →  per-tensor-type QLC LUTs fitted apriori (paper §7);
+//!   L3 coordinator  →  parallel compression pipeline over the streams;
+//!   L3 collective  →  compressed gradient all-reduce across 8 workers;
+//!   hw model  →  decoder cycle comparison on the harvested data.
+//!
+//! Requires `artifacts/` (run `make artifacts` first).
+//!
+//! Run: `cargo run --release --example e2e_pipeline`
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use qlc::codecs::huffman::HuffmanCodec;
+use qlc::codecs::qlc::{optimizer, QlcCodec};
+use qlc::codecs::Codec;
+use qlc::collective::{engine, Transport};
+use qlc::coordinator::{Pipeline, PipelineConfig};
+use qlc::formats::{BlockQuantizer, Variant};
+use qlc::hw;
+use qlc::runtime::inputs::{make_step_inputs, InputStats};
+use qlc::runtime::Runtime;
+use qlc::stats::Histogram;
+use qlc::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let steps = 6;
+    let workers = 8;
+    println!("=== e2e: {steps} FFN steps via PJRT, then compress + collective ===\n");
+
+    // --- Phase 1: harvest real tensors through the AOT artifacts. ----
+    let t0 = Instant::now();
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    let mut rng = Rng::new(1234);
+    let mut streams: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+    for _ in 0..steps {
+        let ins = make_step_inputs(
+            rt.input_shapes(),
+            InputStats::default(),
+            &mut rng,
+        );
+        for t in rt.harvest_step(&ins)? {
+            streams.entry(t.name).or_default().extend(t.symbols);
+        }
+    }
+    println!(
+        "harvested {} tensor streams × {steps} steps in {:.2?}",
+        streams.len(),
+        t0.elapsed()
+    );
+
+    // --- Phase 2: per-tensor-type LUTs, calibrated on step 0 only. ---
+    println!("\nper-tensor-type compression (LUTs fitted on first 20%):");
+    println!(
+        "  {:<12} {:>8} {:>8} {:>9} {:>9} {:>9}",
+        "tensor", "entropy", "p(zero)", "ideal%", "huffman%", "qlc-opt%"
+    );
+    let mut grad_symbols: Vec<u8> = Vec::new();
+    for (name, symbols) in &streams {
+        let cut = symbols.len() / 5;
+        let cal = Histogram::from_symbols(&symbols[..cut]);
+        let rest = &symbols[cut..];
+        let pmf = Histogram::from_symbols(rest).pmf();
+        let huff = HuffmanCodec::from_histogram(&cal);
+        let scheme = optimizer::optimize_scheme(&cal.pmf().sorted_desc());
+        let qlc_codec = QlcCodec::from_pmf(scheme, &cal.pmf());
+        let h_bytes = huff.encode_to_vec(rest).len();
+        let q_bytes = qlc_codec.encode_to_vec(rest).len();
+        assert_eq!(
+            qlc_codec.decode_from_slice(
+                &qlc_codec.encode_to_vec(rest), rest.len()).unwrap(),
+            rest,
+        );
+        println!(
+            "  {:<12} {:>8.3} {:>8.3} {:>9.2} {:>9.2} {:>9.2}",
+            name,
+            pmf.entropy(),
+            pmf.p[0],
+            pmf.ideal_compressibility() * 100.0,
+            (1.0 - h_bytes as f64 / rest.len() as f64) * 100.0,
+            (1.0 - q_bytes as f64 / rest.len() as f64) * 100.0
+        );
+        if name.ends_with("wgrad") {
+            grad_symbols.extend_from_slice(rest);
+        }
+    }
+
+    // --- Phase 3: coordinator pipeline throughput on the biggest
+    // stream. --------------------------------------------------------
+    let biggest = streams
+        .values()
+        .max_by_key(|s| s.len())
+        .expect("streams nonempty");
+    let cal = Histogram::from_symbols(biggest);
+    let pipe = Pipeline::new(
+        PipelineConfig { workers: 4, chunk_size: 64 * 1024, queue_depth: 8 },
+        "qlc",
+        &cal,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let t0 = Instant::now();
+    let frames = pipe.compress_stream(biggest);
+    let wall = t0.elapsed().as_secs_f64();
+    let m = pipe.metrics();
+    println!(
+        "\ncoordinator pipeline: {} chunks, {:.1}% compressibility, \
+         {:.0} MB/s end-to-end ({} workers)",
+        frames.len(),
+        m.compressibility() * 100.0,
+        biggest.len() as f64 / wall / 1e6,
+        4
+    );
+
+    // --- Phase 4: compressed gradient all-reduce. ---------------------
+    // Split the harvested weight-gradient f32s across workers by
+    // re-running dequantization per worker slice (symbols → values).
+    let quant = BlockQuantizer::new(Variant::ExmY);
+    // Each worker's tensor is itself ring-chunked w ways, so round to
+    // a multiple of workers × block.
+    let per = grad_symbols.len() / workers / (workers * 32) * (workers * 32);
+    let grad_cal = Histogram::from_symbols(&grad_symbols);
+    let worker_grads: Vec<Vec<f32>> = (0..workers)
+        .map(|i| {
+            let slice = &grad_symbols[i * per..(i + 1) * per];
+            let scales = vec![1.0f32; per / 32];
+            quant.dequantize(&qlc::formats::QuantizedBlocks {
+                symbols: slice.to_vec(),
+                scales,
+                variant: Variant::ExmY,
+            })
+        })
+        .collect();
+    for codec in ["raw", "qlc"] {
+        let transport = if codec == "raw" {
+            Transport::Raw
+        } else {
+            Transport::Compressed {
+                codec: "qlc".into(),
+                calibration: Box::new(grad_cal.clone()),
+            }
+        };
+        let (results, rep) =
+            engine::threaded_allreduce(workers, worker_grads.clone(), &transport)
+                .map_err(anyhow::Error::msg)?;
+        assert!(results.iter().all(|r| r == &results[0]));
+        println!(
+            "allreduce[{codec:<4}] wall {:>7.1} ms  wire {:>10} B (raw {})",
+            rep.wall_time_s * 1e3,
+            rep.wire_bytes,
+            rep.raw_bytes
+        );
+    }
+
+    // --- Phase 5: hardware decoder model on harvested FFN1 acts. -----
+    let ffn1 = &streams["ffn1_act"];
+    let hist = Histogram::from_symbols(ffn1);
+    let huff = HuffmanCodec::from_histogram(&hist);
+    let scheme = optimizer::optimize_scheme(&hist.pmf().sorted_desc());
+    let qlc_codec = QlcCodec::from_pmf(scheme, &hist.pmf());
+    let reports = hw::compare_on_stream(huff.book(), &qlc_codec, ffn1);
+    println!("\nhw decoder model on harvested ffn1_act:");
+    for r in &reports {
+        println!(
+            "  {:<16} {:>7.3} cycles/sym  {:>9} storage bits  {:>2} stages",
+            r.model,
+            r.cycles_per_symbol(),
+            r.storage_bits,
+            r.worst_stages
+        );
+    }
+    println!(
+        "  QLC decode speedup vs bit-serial Huffman: {:.2}x",
+        hw::qlc_speedup_vs_serial(&reports)
+    );
+    println!("\ne2e OK");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: quantize a tensor to e4m3, fit a Quad Length Code to
+//! its symbol distribution, compress, decompress, verify.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use qlc::codecs::frame::{self, CodecSpec};
+use qlc::codecs::qlc::{AreaScheme, QlcCodec};
+use qlc::codecs::Codec;
+use qlc::data::{TensorGen, TensorKind};
+use qlc::formats::{BlockQuantizer, Variant};
+use qlc::stats::Histogram;
+use qlc::util::rng::Rng;
+
+fn main() {
+    // 1. A tensor with LLM-activation statistics (or bring your own).
+    let gen = TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY);
+    let mut rng = Rng::new(42);
+    let tensor: Vec<f32> = gen.generate(&mut rng, 1 << 20);
+
+    // 2. Block-32 e4m3 quantization (the paper's §3 setting).
+    let quant = BlockQuantizer::new(Variant::ExmY);
+    let q = quant.quantize(&tensor);
+    println!("quantized {} f32 -> {} e4m3 symbols + {} block scales",
+             tensor.len(), q.symbols.len(), q.scales.len());
+
+    // 3. Fit the paper's Table 1 scheme to the measured PMF.
+    let hist = Histogram::from_symbols(&q.symbols);
+    let pmf = hist.pmf();
+    println!("symbol entropy: {:.3} bits (ideal compressibility {:.1}%)",
+             pmf.entropy(), pmf.ideal_compressibility() * 100.0);
+    let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+
+    // 4. Compress.
+    let encoded = codec.encode_to_vec(&q.symbols);
+    println!(
+        "qlc-t1: {} -> {} bytes ({:.1}% compressibility; paper: 13.9%)",
+        q.symbols.len(),
+        encoded.len(),
+        (1.0 - encoded.len() as f64 / q.symbols.len() as f64) * 100.0
+    );
+
+    // 5. Decompress and verify losslessness.
+    let decoded = codec.decode_from_slice(&encoded, q.symbols.len()).unwrap();
+    assert_eq!(decoded, q.symbols);
+    println!("roundtrip OK (bit-exact)");
+
+    // 6. Or use the self-describing frame container (tables embedded).
+    let spec = CodecSpec::by_name("qlc", &hist).unwrap();
+    let framed = frame::compress(&spec, &q.symbols);
+    let back = frame::decompress(&framed).unwrap();
+    assert_eq!(back, q.symbols);
+    println!(
+        "framed (optimized scheme + embedded LUT): {} bytes",
+        framed.len()
+    );
+
+    // 7. Dequantize to verify the numeric path.  Error is bounded by
+    //    half an e4m3 step of the block's scale.
+    let restored = quant.dequantize(&q);
+    let max_err = tensor
+        .chunks(32)
+        .zip(restored.chunks(32))
+        .zip(&q.scales)
+        .map(|((xs, ys), &scale)| {
+            xs.iter()
+                .zip(ys)
+                .map(|(x, y)| (x - y).abs() / (scale * 480.0))
+                .fold(0f32, f32::max)
+        })
+        .fold(0f32, f32::max);
+    println!(
+        "max quantization error: {:.4} of block absmax (≤ half an e4m3 step)",
+        max_err
+    );
+}

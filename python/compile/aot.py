@@ -1,0 +1,116 @@
+"""AOT compile path: lower the L2 model (and the standalone quantizer)
+to HLO **text** artifacts that the Rust runtime loads via the `xla`
+crate's PJRT CPU client.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/load_hlo/ and its README.
+
+Usage (from ``python/``):  ``python -m compile.aot --out ../artifacts``
+(a single ``--out path/model.hlo.txt`` is also accepted for Makefile
+compatibility — the directory of that path is used).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``{...}``, which the xla_extension 0.5.1 text
+    parser silently reads back as zeros — the e4m3 boundary table inside
+    the Pallas quantizer would be destroyed.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)  # positional: print_large_constants
+
+
+def lower_ffn_step() -> str:
+    return to_hlo_text(jax.jit(model.ffn_step).lower(*model.input_specs()))
+
+
+def lower_quantize() -> str:
+    return to_hlo_text(
+        jax.jit(model.quantize_op).lower(*model.quantize_input_specs())
+    )
+
+
+def build_manifest() -> dict:
+    return {
+        "ffn_step": {
+            "hlo": "ffn_step.hlo.txt",
+            "inputs": [
+                {"name": "x", "shape": [model.N_TOKENS, model.D_MODEL]},
+                {"name": "wg", "shape": [model.D_MODEL, model.D_FF]},
+                {"name": "wu", "shape": [model.D_MODEL, model.D_FF]},
+                {"name": "w2", "shape": [model.D_FF, model.D_MODEL]},
+                {"name": "dy", "shape": [model.N_TOKENS, model.D_MODEL]},
+            ],
+            "outputs": model.output_manifest(),
+        },
+        "quantize": {
+            "hlo": "quantize.hlo.txt",
+            "inputs": [{"name": "x", "shape": [model.QUANT_BLOCKS, 32]}],
+            "outputs": [
+                {
+                    "name": "data",
+                    "symbols_shape": [model.QUANT_BLOCKS, 32],
+                    "scales_shape": [model.QUANT_BLOCKS],
+                }
+            ],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory (or any path inside it)")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    if out_dir.endswith(".txt") or out_dir.endswith(".json"):
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    for name, text in (
+        ("ffn_step.hlo.txt", lower_ffn_step()),
+        ("quantize.hlo.txt", lower_quantize()),
+    ):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(build_manifest(), f, indent=2)
+    print(f"wrote manifest        {manifest_path}")
+
+    # Makefile tracks artifacts/model.hlo.txt as the stamp target; keep a
+    # copy under that name so `make -q artifacts` stays accurate.
+    stamp = os.path.join(out_dir, "model.hlo.txt")
+    with open(os.path.join(out_dir, "ffn_step.hlo.txt")) as f:
+        text = f.read()
+    with open(stamp, "w") as f:
+        f.write(text)
+    print(f"stamped               {stamp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""e4m3 numeric-format tables shared by the Pallas kernel, the jnp
+reference oracle, and the python tests.
+
+Two variants are implemented:
+
+* ``EXMY`` — the eXmY e4m3 used by the paper: all 256 encodings are
+  finite.  Max magnitude = 1.875 * 2**8 = 480.
+* ``OCP`` — the OCP MX e4m3: ``S.1111.111`` is NaN, max magnitude 448.
+  (Only the finite table differs; the paper notes the 2 NaN encodings
+  "will have minimal effect".)
+
+Layout of a symbol byte: ``sign(1) | exponent(4) | mantissa(3)``, bias 7.
+``exp == 0`` encodes subnormals ``m * 2**-9``; otherwise
+``(1 + m/8) * 2**(exp-7)``.
+
+The Rust implementation in ``rust/src/formats/e4m3.rs`` mirrors these
+tables bit-for-bit; ``python/tests/test_e4m3.py`` asserts the golden
+values that the Rust unit tests also assert.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SIGN_BIT = 0x80
+EXP_BITS = 4
+MAN_BITS = 3
+BIAS = 7
+
+EXMY = "exmy"
+OCP = "ocp"
+
+
+def magnitude_table(variant: str = EXMY) -> np.ndarray:
+    """The 128 non-negative magnitudes, indexed by the low 7 bits.
+
+    For the OCP variant index 127 (``1111.111``) is NaN; we return
+    ``inf`` there so that the quantizer never selects it (boundaries
+    computed from the finite prefix only).
+    """
+    mags = np.empty(128, dtype=np.float64)
+    for i in range(128):
+        e = i >> MAN_BITS
+        m = i & ((1 << MAN_BITS) - 1)
+        if e == 0:
+            mags[i] = m * 2.0 ** (1 - BIAS - MAN_BITS)  # m * 2^-9
+        else:
+            mags[i] = (1.0 + m / 8.0) * 2.0 ** (e - BIAS)
+    if variant == OCP:
+        mags[127] = np.inf
+    elif variant != EXMY:
+        raise ValueError(f"unknown e4m3 variant: {variant!r}")
+    return mags
+
+
+def max_finite(variant: str = EXMY) -> float:
+    """Largest finite magnitude: 480 for eXmY, 448 for OCP."""
+    t = magnitude_table(variant)
+    return float(t[np.isfinite(t)].max())
+
+
+def decision_boundaries(variant: str = EXMY) -> np.ndarray:
+    """Midpoints between consecutive finite magnitudes.
+
+    ``idx(x) = #{b : x > b}`` with ties (x == b exactly) resolved to the
+    even index — a deterministic stand-in for round-half-to-even that the
+    jnp oracle, the Pallas kernel, and the Rust quantizer all share.
+    Length 127 for eXmY (128 finite values), 126 for OCP.
+    """
+    mags = magnitude_table(variant)
+    mags = mags[np.isfinite(mags)]
+    return (mags[:-1] + mags[1:]) / 2.0
+
+
+def value_table(variant: str = EXMY) -> np.ndarray:
+    """All 256 symbol values (float64); OCP NaN slots are NaN.
+
+    Index 0x80 is negative zero (-0.0).
+    """
+    mags = magnitude_table(variant)
+    mags = np.where(np.isinf(mags), np.nan, mags)
+    return np.concatenate([mags, -mags])
+
+
+BLOCK = 32  # paper's quantization block size

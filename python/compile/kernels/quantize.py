@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernel: block-scaled e4m3 quantization.
+
+The compute hot-spot of the pipeline: turns f32 tensors into the
+byte-symbol streams that the Quad Length / Huffman codecs compress.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each grid step stages a
+``(row_block, 32)`` tile plus the 127-entry decision-boundary vector in
+VMEM, performs the per-block absmax reduction and the broadcast
+compare-count (the VMEM analogue of the paper's 256-entry LUT) on the
+vector unit, and streams u8 symbols back to HBM.  Lowered with
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import e4m3
+
+
+def _pick_row_block(num_blocks: int, preferred: int = 128) -> int:
+    """Largest power-of-two ≤ ``preferred`` dividing ``num_blocks``."""
+    rb = preferred
+    while rb > 1 and num_blocks % rb != 0:
+        rb //= 2
+    return max(rb, 1)
+
+
+def _quantize_kernel(bounds_ref, x_ref, syms_ref, scales_ref, *, maxf):
+    x = x_ref[...]  # (R, 32) f32 tile in VMEM
+    bounds = bounds_ref[...]  # (num_bounds,) f32 in VMEM
+
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    # Reciprocal-multiply, bit-identical to ref.py and formats::e4m3.rs.
+    scale = jnp.where(absmax > 0, absmax * (1.0 / maxf), jnp.float32(1.0))
+    mag = jnp.minimum(jnp.abs(x) / scale[:, None], maxf)
+
+    # Nearest e4m3 magnitude: count boundaries strictly below, resolve
+    # exact ties to the even index (same rule as ref.py / Rust).
+    gt = (mag[:, :, None] > bounds[None, None, :]).sum(axis=-1)
+    eq = (mag[:, :, None] == bounds[None, None, :]).any(axis=-1)
+    idx = jnp.where(eq & (gt % 2 == 1), gt + 1, gt)
+
+    sign = (x < 0).astype(jnp.uint8)
+    syms_ref[...] = (sign << jnp.uint8(7)) | idx.astype(jnp.uint8)
+    scales_ref[...] = scale
+
+
+def quantize_blocks(x: jnp.ndarray, variant: str = e4m3.EXMY,
+                    row_block: int | None = None):
+    """Pallas quantizer over ``x`` of shape (num_blocks, 32).
+
+    Returns ``(symbols u8 (num_blocks, 32), scales f32 (num_blocks,))``
+    — bit-identical to :func:`ref.quantize_blocks_ref`.
+    """
+    assert x.ndim == 2 and x.shape[1] == e4m3.BLOCK, x.shape
+    num_blocks = x.shape[0]
+    rb = row_block or _pick_row_block(num_blocks)
+    assert num_blocks % rb == 0, (num_blocks, rb)
+
+    bounds = jnp.asarray(e4m3.decision_boundaries(variant), jnp.float32)
+    nb = bounds.shape[0]
+    maxf = float(e4m3.max_finite(variant))
+
+    # maxf must stay a python float: Pallas kernels may not capture
+    # traced array constants, but scalar literals are inlined fine.
+    kernel = functools.partial(_quantize_kernel, maxf=maxf)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_blocks // rb,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda i: (0,)),  # boundaries: replicated
+            pl.BlockSpec((rb, e4m3.BLOCK), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, e4m3.BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_blocks, e4m3.BLOCK), jnp.uint8),
+            jax.ShapeDtypeStruct((num_blocks,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT: Mosaic custom-calls are not runnable
+    )(bounds, x.astype(jnp.float32))
+
+
+def quantize_tensor(x: jnp.ndarray, variant: str = e4m3.EXMY):
+    """Flatten an arbitrary tensor into 32-wide blocks and quantize."""
+    assert x.size % e4m3.BLOCK == 0, x.shape
+    return quantize_blocks(x.reshape(-1, e4m3.BLOCK), variant)
+
+
+def vmem_footprint_bytes(row_block: int = 128,
+                         variant: str = e4m3.EXMY) -> int:
+    """Static VMEM estimate per grid step (DESIGN.md §Perf, L1): input
+    tile + boundary vector + u8 output tile + scale vector + the
+    (R,32,B) compare intermediate the vector unit materializes."""
+    nb = len(e4m3.decision_boundaries(variant))
+    tile_in = row_block * e4m3.BLOCK * 4
+    tile_out = row_block * e4m3.BLOCK * 1
+    scales = row_block * 4
+    compare = row_block * e4m3.BLOCK * nb // 8  # 1-bit lanes, packed
+    return tile_in + tile_out + scales + nb * 4 + compare

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for block-scaled e4m3 quantization.
+
+This is the CORE correctness signal: the Pallas kernel in
+``quantize.py`` must produce bit-identical symbols, and the Rust
+``formats::BlockQuantizer`` mirrors the same decision-boundary rule.
+
+Quantization rule (paper §3: "quantization block size is 32"):
+
+1. split the flat tensor into blocks of 32 contiguous elements;
+2. ``scale = absmax(block) / MAX_FINITE`` (1.0 if the block is all
+   zeros, so zeros encode as symbol 0);
+3. each element's magnitude ``|x| / scale`` is mapped to the nearest
+   e4m3 magnitude via the shared decision boundaries (ties to the even
+   index), clamped to the top code;
+4. symbol byte = ``sign << 7 | magnitude_index``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import e4m3
+
+
+def _tables(variant: str):
+    bounds = jnp.asarray(e4m3.decision_boundaries(variant), dtype=jnp.float32)
+    maxf = jnp.float32(e4m3.max_finite(variant))
+    return bounds, maxf
+
+
+def quantize_blocks_ref(x: jnp.ndarray, variant: str = e4m3.EXMY):
+    """Quantize ``x`` of shape (num_blocks, 32) → (symbols u8, scales f32).
+
+    ``symbols`` has the same shape as ``x``; ``scales`` has shape
+    (num_blocks,).
+    """
+    assert x.ndim == 2 and x.shape[1] == e4m3.BLOCK, x.shape
+    bounds, maxf = _tables(variant)
+    x = x.astype(jnp.float32)
+
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    # Explicit reciprocal-multiply: XLA rewrites division-by-constant as
+    # a multiply, interpret/numpy does not — writing the multiply keeps
+    # ref, kernel and the Rust quantizer bit-identical.
+    scale = jnp.where(absmax > 0, absmax * (jnp.float32(1.0) / maxf),
+                      jnp.float32(1.0))
+    mag = jnp.abs(x) / scale[:, None]
+    mag = jnp.minimum(mag, maxf)
+
+    # idx = #{b : mag > b}; tie (mag == b_i) → even index (i or i+1).
+    gt = (mag[:, :, None] > bounds[None, None, :]).sum(axis=-1)
+    eq = (mag[:, :, None] == bounds[None, None, :]).any(axis=-1)
+    idx = jnp.where(eq & (gt % 2 == 1), gt + 1, gt)
+
+    sign = (x < 0).astype(jnp.uint8)
+    symbols = (sign << 7) | idx.astype(jnp.uint8)
+    return symbols, scale
+
+
+def dequantize_blocks_ref(symbols: jnp.ndarray, scales: jnp.ndarray,
+                          variant: str = e4m3.EXMY) -> jnp.ndarray:
+    """Inverse of :func:`quantize_blocks_ref` (lossy: returns the e4m3
+    grid values)."""
+    table = jnp.asarray(
+        np.nan_to_num(e4m3.value_table(variant)), dtype=jnp.float32
+    )
+    return table[symbols.astype(jnp.int32)] * scales[:, None]
+
+
+def quantize_tensor_ref(x: jnp.ndarray, variant: str = e4m3.EXMY):
+    """Flatten an arbitrary tensor to (N/32, 32) blocks and quantize.
+
+    The caller must ensure ``x.size`` is a multiple of 32 (all model
+    tensors in this repo are).
+    """
+    flat = x.reshape(-1, e4m3.BLOCK)
+    return quantize_blocks_ref(flat, variant)

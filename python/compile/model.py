@@ -1,0 +1,162 @@
+"""Layer-2 JAX model: a Gemma-style GeGLU feed-forward block, forward
+and backward, with every tensor the paper analyzes quantized to e4m3
+symbol streams by the Layer-1 Pallas kernel.
+
+Paper §3: the authors harvest FFN1/FFN2 weight, activation, weight-
+gradient and activation-gradient tensors from Gemma 2B during SFT.  We
+reproduce the same eight tensor *types* from one FFN block:
+
+  index  name            tensor                       PMF character
+  0      ffn1_act        gate = x @ wg                smooth, two-sided
+  1      ffn2_act        h = gelu(gate) * up          zero-spiked (GeGLU)
+  2      ffn1_weight     wg                           smooth
+  3      ffn2_weight     w2                           smooth
+  4      ffn1_wgrad      dL/dwg                       smooth
+  5      ffn2_wgrad      dL/dw2                       smooth
+  6      ffn1_agrad      dL/dgate                     zero-spiked
+  7      ffn2_agrad      dL/dh                        smooth/spiked
+
+"FFN1 activation" is the pre-nonlinearity projection output and "FFN2
+activation" is the post-GeGLU input of the down projection — the paper
+attributes FFN2's dominant zero symbol to "the intervening non-linear
+activation function", which is exactly what GeGLU produces here.
+
+This module is build-time only: ``aot.py`` lowers :func:`ffn_step` once
+to HLO text and the Rust runtime executes it to generate real tensors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quantize
+
+# Artifact dimensions (kept modest: interpret-mode Pallas must run on
+# the CPU PJRT client inside the Rust hot loop).
+N_TOKENS = 256
+D_MODEL = 256
+D_FF = 512
+
+TENSOR_NAMES = (
+    "ffn1_act",
+    "ffn2_act",
+    "ffn1_weight",
+    "ffn2_weight",
+    "ffn1_wgrad",
+    "ffn2_wgrad",
+    "ffn1_agrad",
+    "ffn2_agrad",
+)
+
+
+def _gelu_bf16(t):
+    """GELU evaluated in bfloat16, as in real mixed-precision training.
+
+    This matters for the paper's Fig. 4: in bf16 the tanh saturates to
+    exactly -1 for sufficiently negative pre-activations, so GELU emits
+    *exact zeros* — the source of the dominant zero symbol the paper
+    observes in FFN2 activations ("due to the intervening non-linear
+    activation function").  A pure-f32 GELU never reaches zero and would
+    miss that spike entirely.
+    """
+    return jax.nn.gelu(t.astype(jnp.bfloat16)).astype(jnp.float32)
+
+
+def ffn_forward(x, wg, wu, w2):
+    """GeGLU FFN forward. Returns (y, (gate, up, h))."""
+    gate = x @ wg
+    up = x @ wu
+    h = _gelu_bf16(gate) * up
+    y = h @ w2
+    return y, (gate, up, h)
+
+
+def ffn_backward(x, wg, wu, w2, dy, saved):
+    """Manual backward pass (keeps every intermediate we must harvest)."""
+    gate, up, h = saved
+    dh = dy @ w2.T
+    dw2 = h.T @ dy
+
+    def h_fn(gate, up):
+        return _gelu_bf16(gate) * up
+
+    _, h_vjp = jax.vjp(h_fn, gate, up)
+    dgate, dup = h_vjp(dh)
+
+    dwg = x.T @ dgate
+    dwu = x.T @ dup
+    dx = dgate @ wg.T + dup @ wu.T
+    return dx, dwg, dwu, dw2, dgate, dh
+
+
+def ffn_step(x, wg, wu, w2, dy):
+    """One fwd+bwd step; every harvested tensor quantized to e4m3.
+
+    Returns a flat tuple: for each name in :data:`TENSOR_NAMES`, two
+    entries ``(symbols u8 (blocks, 32), scales f32 (blocks,))`` — 16
+    outputs total.  The Rust runtime consumes this tuple positionally
+    (see ``artifacts/manifest.json``).
+    """
+    y, saved = ffn_forward(x, wg, wu, w2)
+    _, dwg, _, dw2, dgate, dh = ffn_backward(x, wg, wu, w2, dy, saved)
+    gate, _, h = saved
+
+    harvested = (gate, h, wg, w2, dwg, dw2, dgate, dh)
+    outs = []
+    for t in harvested:
+        syms, scales = quantize.quantize_tensor(t)
+        outs.append(syms)
+        outs.append(scales)
+    return tuple(outs)
+
+
+def input_specs():
+    """ShapeDtypeStructs for :func:`ffn_step`, in argument order."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((N_TOKENS, D_MODEL), f32),  # x
+        jax.ShapeDtypeStruct((D_MODEL, D_FF), f32),      # wg
+        jax.ShapeDtypeStruct((D_MODEL, D_FF), f32),      # wu
+        jax.ShapeDtypeStruct((D_FF, D_MODEL), f32),      # w2
+        jax.ShapeDtypeStruct((N_TOKENS, D_MODEL), f32),  # dy
+    )
+
+
+def output_manifest():
+    """Names/shapes of the flat output tuple, for the Rust runtime."""
+    shapes = {
+        "ffn1_act": (N_TOKENS, D_FF),
+        "ffn2_act": (N_TOKENS, D_FF),
+        "ffn1_weight": (D_MODEL, D_FF),
+        "ffn2_weight": (D_FF, D_MODEL),
+        "ffn1_wgrad": (D_MODEL, D_FF),
+        "ffn2_wgrad": (D_FF, D_MODEL),
+        "ffn1_agrad": (N_TOKENS, D_FF),
+        "ffn2_agrad": (N_TOKENS, D_FF),
+    }
+    outs = []
+    for name in TENSOR_NAMES:
+        shape = shapes[name]
+        blocks = shape[0] * shape[1] // 32
+        outs.append({
+            "name": name,
+            "symbols_shape": [blocks, 32],
+            "scales_shape": [blocks],
+        })
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Standalone quantizer artifact: Rust feeds arbitrary (QUANT_BLOCKS, 32)
+# f32 data and gets symbol streams back without re-lowering the model.
+QUANT_BLOCKS = 8192
+
+
+def quantize_op(x):
+    """(QUANT_BLOCKS, 32) f32 → (symbols, scales)."""
+    return quantize.quantize_blocks(x)
+
+
+def quantize_input_specs():
+    return (jax.ShapeDtypeStruct((QUANT_BLOCKS, 32), jnp.float32),)

@@ -1,0 +1,75 @@
+"""AOT artifact tests: HLO text validity, determinism, manifest schema."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def ffn_hlo():
+    return aot.lower_ffn_step()
+
+
+@pytest.fixture(scope="module")
+def quant_hlo():
+    return aot.lower_quantize()
+
+
+class TestHloText:
+    def test_ffn_is_hlo_text(self, ffn_hlo):
+        assert ffn_hlo.startswith("HloModule")
+        assert "ENTRY" in ffn_hlo
+
+    def test_quantize_is_hlo_text(self, quant_hlo):
+        assert quant_hlo.startswith("HloModule")
+
+    def test_no_mosaic_custom_calls(self, ffn_hlo, quant_hlo):
+        # interpret=True must lower Pallas into plain HLO; a Mosaic
+        # custom-call would be unrunnable on the CPU PJRT client.
+        for text in (ffn_hlo, quant_hlo):
+            assert "tpu_custom_call" not in text
+            assert "mosaic" not in text.lower()
+
+    def test_ffn_entry_signature(self, ffn_hlo):
+        # 5 f32 parameters; tuple of 16 outputs (8 × symbols+scales).
+        layout = [l for l in ffn_hlo.splitlines()
+                  if "entry_computation_layout" in l][0]
+        assert layout.count("f32[") >= 5 + 8  # 5 params + 8 scale outputs
+        assert layout.count("u8[") == 8       # 8 symbol outputs
+
+    def test_deterministic_lowering(self, ffn_hlo):
+        assert aot.lower_ffn_step() == ffn_hlo
+
+    def test_no_elided_constants(self, ffn_hlo, quant_hlo):
+        # The default HLO printer elides large literals as "{...}",
+        # which the xla_extension 0.5.1 text parser silently reads back
+        # as zeros — destroying the e4m3 boundary table (this bit us;
+        # see aot.to_hlo_text).
+        for text in (ffn_hlo, quant_hlo):
+            assert "{...}" not in text
+
+
+class TestManifest:
+    def test_schema(self):
+        man = aot.build_manifest()
+        assert set(man) == {"ffn_step", "quantize"}
+        ffn = man["ffn_step"]
+        assert [i["name"] for i in ffn["inputs"]] == \
+            ["x", "wg", "wu", "w2", "dy"]
+        assert [o["name"] for o in ffn["outputs"]] == list(model.TENSOR_NAMES)
+        for o in ffn["outputs"]:
+            blocks, width = o["symbols_shape"]
+            assert width == 32
+            assert o["scales_shape"] == [blocks]
+
+    def test_json_serializable(self):
+        json.dumps(aot.build_manifest())
+
+    def test_block_math(self):
+        man = aot.build_manifest()
+        for o in man["ffn_step"]["outputs"]:
+            if o["name"] == "ffn1_act":
+                assert o["symbols_shape"] == \
+                    [model.N_TOKENS * model.D_FF // 32, 32]

@@ -1,0 +1,103 @@
+"""Golden-value and property tests for the shared e4m3 tables.
+
+The Rust unit tests in ``rust/src/formats/e4m3.rs`` assert the same
+golden values — keep the two lists in sync.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import e4m3
+
+
+class TestMagnitudeTable:
+    def test_length(self):
+        assert e4m3.magnitude_table().shape == (128,)
+
+    def test_zero(self):
+        assert e4m3.magnitude_table()[0] == 0.0
+
+    def test_min_subnormal(self):
+        # 2^-9
+        assert e4m3.magnitude_table()[1] == pytest.approx(0.001953125)
+
+    def test_max_subnormal(self):
+        # 7 * 2^-9
+        assert e4m3.magnitude_table()[7] == pytest.approx(7 * 2.0**-9)
+
+    def test_min_normal(self):
+        # 1.0 * 2^-6
+        assert e4m3.magnitude_table()[8] == pytest.approx(2.0**-6)
+
+    def test_one(self):
+        # exp field 7 (bias 7), mantissa 0 → 1.0 at index 0b0111_000
+        assert e4m3.magnitude_table()[0x38] == 1.0
+
+    def test_max_exmy(self):
+        assert e4m3.max_finite(e4m3.EXMY) == 480.0
+
+    def test_max_ocp(self):
+        assert e4m3.max_finite(e4m3.OCP) == 448.0
+
+    def test_ocp_nan_slot(self):
+        assert np.isinf(e4m3.magnitude_table(e4m3.OCP)[127])
+
+    def test_strictly_increasing(self):
+        t = e4m3.magnitude_table()
+        assert (np.diff(t) > 0).all()
+
+    def test_subnormal_spacing_uniform(self):
+        t = e4m3.magnitude_table()
+        steps = np.diff(t[:9])  # subnormals + first normal
+        assert np.allclose(steps, 2.0**-9)
+
+    def test_golden_spot_values(self):
+        t = e4m3.magnitude_table()
+        # (index, value) pairs mirrored in the Rust tests.
+        golden = [
+            (0x08, 0.015625),   # 2^-6
+            (0x0F, 0.029296875),  # 1.875 * 2^-6
+            (0x30, 0.5),
+            (0x3C, 1.5),
+            (0x40, 2.0),
+            (0x7F, 480.0),
+        ]
+        for idx, val in golden:
+            assert t[idx] == pytest.approx(val), hex(idx)
+
+
+class TestBoundaries:
+    def test_count(self):
+        assert e4m3.decision_boundaries(e4m3.EXMY).shape == (127,)
+        assert e4m3.decision_boundaries(e4m3.OCP).shape == (126,)
+
+    def test_interleaving(self):
+        t = e4m3.magnitude_table()
+        b = e4m3.decision_boundaries()
+        assert ((t[:-1] < b) & (b < t[1:])).all()
+
+    def test_first_boundary(self):
+        # midpoint of 0 and 2^-9
+        assert e4m3.decision_boundaries()[0] == pytest.approx(2.0**-10)
+
+
+class TestValueTable:
+    def test_length(self):
+        assert e4m3.value_table().shape == (256,)
+
+    def test_negative_mirror(self):
+        v = e4m3.value_table()
+        assert (v[128:] == -v[:128]).all()
+
+    def test_negative_zero(self):
+        v = e4m3.value_table()
+        assert v[128] == 0.0 and np.signbit(v[128])
+
+    def test_ocp_nans(self):
+        v = e4m3.value_table(e4m3.OCP)
+        assert np.isnan(v[127]) and np.isnan(v[255])
+        assert np.isfinite(np.delete(v, [127, 255])).all()
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            e4m3.magnitude_table("e5m2")

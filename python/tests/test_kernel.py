@@ -1,0 +1,142 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+The kernel must be *bit-identical* to ``ref.py`` (symbols and scales):
+the Rust formats::BlockQuantizer mirrors the same rule, and any drift
+between the three implementations silently corrupts every compression
+measurement downstream.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import e4m3, quantize, ref
+
+
+def _assert_match(x, variant=e4m3.EXMY):
+    s_ref, sc_ref = ref.quantize_blocks_ref(x, variant)
+    s_ker, sc_ker = quantize.quantize_blocks(x, variant)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_ker))
+    np.testing.assert_array_equal(np.asarray(sc_ref), np.asarray(sc_ker))
+    return np.asarray(s_ref), np.asarray(sc_ref)
+
+
+class TestKernelMatchesRef:
+    @pytest.mark.parametrize("dist", ["normal", "laplace", "uniform"])
+    @pytest.mark.parametrize("blocks", [1, 7, 64, 256])
+    def test_distributions(self, dist, blocks):
+        rng = np.random.default_rng(hash((dist, blocks)) % 2**31)
+        x = jnp.asarray(getattr(rng, dist)(size=(blocks, 32)).astype(np.float32))
+        _assert_match(x)
+
+    def test_ocp_variant(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+        s_ref, _ = ref.quantize_blocks_ref(x, e4m3.OCP)
+        s_ker, _ = quantize.quantize_blocks(x, e4m3.OCP)
+        np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_ker))
+        # OCP NaN codes (0x7F / 0xFF) must never be emitted.
+        assert not np.isin(np.asarray(s_ref) & 0x7F, [0x7F]).any()
+
+    def test_all_zero_block(self):
+        x = jnp.zeros((4, 32), jnp.float32)
+        s, sc = _assert_match(x)
+        assert (s == 0).all()
+        assert (sc == 1.0).all()
+
+    def test_single_nonzero(self):
+        x = jnp.zeros((1, 32), jnp.float32).at[0, 5].set(-3.25)
+        s, sc = _assert_match(x)
+        assert s[0, 5] == 0x80 | 0x7F  # absmax element → top code, negative
+        assert sc[0] == np.float32(3.25) * np.float32(1.0 / 480.0)
+
+    def test_extreme_magnitudes(self):
+        # Huge dynamic range within a block: small values must flush to 0.
+        x = jnp.asarray(
+            np.array([[1e30] + [1e20] * 3 + [1e-10] * 28], np.float32))
+        s, _ = _assert_match(x)
+        assert s[0, 0] == 0x7F
+        assert (s[0, 4:] == 0).all()
+
+    def test_tiny_values(self):
+        x = jnp.asarray(
+            np.full((2, 32), 1e-38, np.float32))  # near f32 subnormal
+        _assert_match(x)
+
+    def test_row_block_variants(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+        base, _ = ref.quantize_blocks_ref(x)
+        for rb in (1, 2, 32, 64, 128):
+            s, _ = quantize.quantize_blocks(x, row_block=rb)
+            np.testing.assert_array_equal(np.asarray(base), np.asarray(s))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        blocks=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+        scale_exp=st.integers(-30, 30),
+        dist=st.sampled_from(["normal", "laplace", "uniform", "lognormal"]),
+    )
+    def test_hypothesis_sweep(self, blocks, seed, scale_exp, dist):
+        rng = np.random.default_rng(seed)
+        x = getattr(rng, dist)(size=(blocks, 32)).astype(np.float32)
+        x *= np.float32(2.0**scale_exp)
+        _assert_match(jnp.asarray(x))
+
+    @settings(max_examples=20, deadline=None)
+    @given(data=st.lists(
+        st.floats(-1e4, 1e4, allow_nan=False, width=32),
+        min_size=32, max_size=32))
+    def test_hypothesis_adversarial_floats(self, data):
+        x = jnp.asarray(np.array([data], np.float32))
+        _assert_match(x)
+
+    def test_exact_tie_goes_even(self):
+        # Construct a block whose scaled magnitude hits a boundary
+        # exactly: absmax element maps to 480; choose a second value v
+        # so that v/scale is exactly the first boundary 2^-10.
+        absmax = np.float32(480.0)  # scale becomes exactly 1.0*(1/480)*480
+        scale = absmax * np.float32(1.0 / 480.0)
+        v = np.float32(2.0**-10) * scale
+        x = np.zeros((1, 32), np.float32)
+        x[0, 0] = absmax
+        x[0, 1] = v
+        s, _ = _assert_match(jnp.asarray(x))
+        assert s[0, 1] == 0  # tie between idx 0 and 1 → even (0)
+
+
+class TestDequantize:
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+        s, sc = ref.quantize_blocks_ref(x)
+        xq = ref.dequantize_blocks_ref(s, sc)
+        # Relative step between consecutive e4m3 normals ≤ 2^-3; nearest
+        # rounding halves it.  Subnormal region: absolute step bound.
+        err = np.abs(np.asarray(xq - x))
+        tol = np.maximum(np.abs(np.asarray(x)) * 2.0**-4,
+                         np.asarray(sc)[:, None] * 2.0**-10 * 1.001)
+        assert (err <= tol).all()
+
+    def test_grid_fixpoint(self):
+        # Quantizing already-quantized data is the identity.
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+        s1, sc1 = ref.quantize_blocks_ref(x)
+        xq = ref.dequantize_blocks_ref(s1, sc1)
+        s2, sc2 = ref.quantize_blocks_ref(xq)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+class TestVmemEstimate:
+    def test_fits_vmem(self):
+        # DESIGN.md §Perf: the default tile must fit comfortably in a
+        # 16 MiB TPU VMEM (we budget < 1 MiB to leave room for
+        # double-buffering).
+        assert quantize.vmem_footprint_bytes(128) < 1 << 20
+
+    def test_monotone_in_row_block(self):
+        assert (quantize.vmem_footprint_bytes(256)
+                > quantize.vmem_footprint_bytes(64))

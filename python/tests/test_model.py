@@ -1,0 +1,132 @@
+"""L2 model tests: shapes, gradients, harvested-tensor statistics."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import e4m3
+
+
+def _make_inputs(seed=1, gate_gain=2.5):
+    """Realistic inputs (see DESIGN.md §2): heavy-tailed tokens and a
+    saturating gate projection, emulating trained-LLM statistics."""
+    rng = np.random.default_rng(seed)
+    tok = rng.lognormal(0.0, 0.5, size=(model.N_TOKENS, 1)).astype(np.float32)
+    x = rng.normal(size=(model.N_TOKENS, model.D_MODEL)).astype(np.float32) * tok
+    wg = (rng.normal(size=(model.D_MODEL, model.D_FF))
+          * gate_gain / math.sqrt(model.D_MODEL)).astype(np.float32)
+    wu = (rng.normal(size=(model.D_MODEL, model.D_FF))
+          / math.sqrt(model.D_MODEL)).astype(np.float32)
+    w2 = (rng.normal(size=(model.D_FF, model.D_MODEL))
+          / math.sqrt(model.D_FF)).astype(np.float32)
+    dy = rng.normal(size=(model.N_TOKENS, model.D_MODEL)).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (x, wg, wu, w2, dy))
+
+
+@pytest.fixture(scope="module")
+def step_outputs():
+    return model.ffn_step(*_make_inputs())
+
+
+class TestShapes:
+    def test_output_count(self, step_outputs):
+        assert len(step_outputs) == 2 * len(model.TENSOR_NAMES)
+
+    def test_manifest_matches_outputs(self, step_outputs):
+        man = model.output_manifest()
+        for i, entry in enumerate(man):
+            syms, scales = step_outputs[2 * i], step_outputs[2 * i + 1]
+            assert list(syms.shape) == entry["symbols_shape"], entry["name"]
+            assert list(scales.shape) == entry["scales_shape"], entry["name"]
+            assert syms.dtype == jnp.uint8
+            assert scales.dtype == jnp.float32
+
+    def test_input_specs_cover_ffn_step(self):
+        specs = model.input_specs()
+        assert len(specs) == 5
+        assert specs[0].shape == (model.N_TOKENS, model.D_MODEL)
+
+
+class TestBackwardCorrectness:
+    def test_manual_backward_matches_autodiff(self):
+        x, wg, wu, w2, dy = _make_inputs(seed=5)
+
+        def loss(wg, wu, w2):
+            y, _ = model.ffn_forward(x, wg, wu, w2)
+            return jnp.vdot(y, dy)
+
+        g_auto = jax.grad(loss, argnums=(0, 1, 2))(wg, wu, w2)
+        y, saved = model.ffn_forward(x, wg, wu, w2)
+        _, dwg, dwu, dw2, _, _ = model.ffn_backward(x, wg, wu, w2, dy, saved)
+        for a, b in zip(g_auto, (dwg, dwu, dw2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_dx_matches_autodiff(self):
+        x, wg, wu, w2, dy = _make_inputs(seed=6)
+
+        def loss(x):
+            y, _ = model.ffn_forward(x, wg, wu, w2)
+            return jnp.vdot(y, dy)
+
+        dx_auto = jax.grad(loss)(x)
+        _, saved = model.ffn_forward(x, wg, wu, w2)
+        dx, *_ = model.ffn_backward(x, wg, wu, w2, dy, saved)
+        np.testing.assert_allclose(np.asarray(dx_auto), np.asarray(dx),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestHarvestedStatistics:
+    """The paper's qualitative observations must hold on our substitute
+    data (DESIGN.md §2): FFN1 activations smooth, FFN2 activations
+    zero-spiked with lower-entropy-potential."""
+
+    @staticmethod
+    def _pmf(symbols):
+        s = np.asarray(symbols).ravel()
+        return np.bincount(s, minlength=256) / s.size
+
+    def test_ffn2_act_zero_spike(self, step_outputs):
+        i = model.TENSOR_NAMES.index("ffn2_act")
+        p = self._pmf(step_outputs[2 * i])
+        assert p[0] > 0.05, "bf16 GELU saturation must produce a 0 spike"
+        assert p[0] == p.max()
+
+    def test_ffn1_act_no_zero_spike(self, step_outputs):
+        i = model.TENSOR_NAMES.index("ffn1_act")
+        p = self._pmf(step_outputs[2 * i])
+        assert p[0] < 0.01
+
+    def test_entropy_ranges(self, step_outputs):
+        for i, name in enumerate(model.TENSOR_NAMES):
+            p = self._pmf(step_outputs[2 * i])
+            ent = -(p[p > 0] * np.log2(p[p > 0])).sum()
+            assert 4.0 < ent < 7.9, (name, ent)
+
+    def test_gelu_bf16_emits_exact_zeros(self):
+        t = jnp.linspace(-8.0, -4.0, 64)
+        out = np.asarray(model._gelu_bf16(t))
+        assert (out == 0.0).any()
+
+
+class TestQuantizeOp:
+    def test_shapes(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(model.QUANT_BLOCKS, 32))
+                        .astype(np.float32))
+        syms, scales = model.quantize_op(x)
+        assert syms.shape == (model.QUANT_BLOCKS, 32)
+        assert scales.shape == (model.QUANT_BLOCKS,)
+
+    def test_matches_ref(self):
+        from compile.kernels import ref
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(model.QUANT_BLOCKS, 32))
+                        .astype(np.float32))
+        s1, _ = model.quantize_op(x)
+        s2, _ = ref.quantize_blocks_ref(x)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))

@@ -1,0 +1,183 @@
+//! EXT-OPT: ablations over the QLC design space (the paper's §8 future
+//! work):
+//!   1. hand schemes (T1/T2) vs the DP-optimized scheme, per PMF;
+//!   2. prefix width P ∈ 1..=4;
+//!   3. sensitivity sweep: compressibility vs distribution entropy;
+//!   4. ranked universal codes (the "LUT + universal" hybrid) vs QLC —
+//!      quantifying how much of QLC's win is the LUT and how much is
+//!      the area structure.
+
+use qlc::codecs::adaptive::{self, AdaptiveConfig};
+use qlc::codecs::elias::{EliasCodec, EliasKind};
+use qlc::codecs::expgolomb::ExpGolombCodec;
+use qlc::codecs::huffman::HuffmanCodec;
+use qlc::codecs::qlc::{optimizer, AreaScheme};
+use qlc::codecs::Codec;
+use qlc::data::{TensorGen, TensorKind};
+use qlc::formats::Variant;
+use qlc::codecs::zstd_baseline;
+use qlc::formats::{ExmyFormat, ExmySpec};
+use qlc::report;
+use qlc::stats::Histogram;
+use qlc::util::rng::Rng;
+
+fn main() {
+    let pmfs = report::paper_pmfs(42, 6);
+
+    println!("=== ablation 1+2: scheme structure per PMF ===");
+    for (label, pmf) in [("ffn1", &pmfs.ffn1), ("ffn2", &pmfs.ffn2)] {
+        let sorted = pmf.sorted_desc();
+        println!(
+            "--- {label}: entropy {:.3}, ideal {:.1}% ---",
+            pmf.entropy(),
+            pmf.ideal_compressibility() * 100.0
+        );
+        println!(
+            "  table1        {:>6.2}%",
+            AreaScheme::table1().compressibility_sorted(&sorted) * 100.0
+        );
+        println!(
+            "  table2        {:>6.2}%",
+            AreaScheme::table2().compressibility_sorted(&sorted) * 100.0
+        );
+        for p in 1..=4u32 {
+            let s = optimizer::optimize_for_prefix(&sorted, p);
+            println!(
+                "  opt P={p}       {:>6.2}%  (lengths {:?}, slack {})",
+                s.compressibility_sorted(&sorted) * 100.0,
+                s.distinct_lengths(),
+                s.slack_code_points()
+            );
+        }
+    }
+
+    println!("\n=== ablation 3: compressibility vs entropy (FFN1 family) ===");
+    println!(
+        "{:>8} {:>9} {:>9} {:>9} {:>9}",
+        "entropy", "ideal%", "huffman%", "qlc-t1%", "qlc-opt%"
+    );
+    for knob in [0.05f64, 0.2, 0.4, 0.55, 0.8, 1.1, 1.5] {
+        let gen =
+            TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY).with_knob(knob);
+        let mut rng = Rng::new(11);
+        let symbols = gen.symbols(&mut rng, 1 << 20);
+        let hist = Histogram::from_symbols(&symbols);
+        let pmf = hist.pmf();
+        let sorted = pmf.sorted_desc();
+        let huff = HuffmanCodec::from_histogram(&hist);
+        let opt = optimizer::optimize_scheme(&sorted);
+        println!(
+            "{:>8.3} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            pmf.entropy(),
+            pmf.ideal_compressibility() * 100.0,
+            pmf.compressibility(&huff.code_lengths()) * 100.0,
+            AreaScheme::table1().compressibility_sorted(&sorted) * 100.0,
+            opt.compressibility_sorted(&sorted) * 100.0,
+        );
+    }
+
+    println!("\n=== ablation 4: ranked universal codes vs QLC (FFN1 pmf) ===");
+    let pmf = &pmfs.ffn1;
+    let rank = pmf.rank_order();
+    let sorted = pmf.sorted_desc();
+    let rows: Vec<(String, f64)> = vec![
+        (
+            "elias-gamma (unranked)".into(),
+            pmf.compressibility(&EliasCodec::new(EliasKind::Gamma).code_lengths()),
+        ),
+        (
+            "elias-gamma-ranked".into(),
+            pmf.compressibility(
+                &EliasCodec::with_ranking(EliasKind::Gamma, &rank).code_lengths(),
+            ),
+        ),
+        (
+            "elias-delta-ranked".into(),
+            pmf.compressibility(
+                &EliasCodec::with_ranking(EliasKind::Delta, &rank).code_lengths(),
+            ),
+        ),
+        (
+            "eg3-ranked".into(),
+            pmf.compressibility(
+                &ExpGolombCodec::with_ranking(3, &rank).code_lengths(),
+            ),
+        ),
+        (
+            "eg5-ranked".into(),
+            pmf.compressibility(
+                &ExpGolombCodec::with_ranking(5, &rank).code_lengths(),
+            ),
+        ),
+        (
+            "qlc-t1".into(),
+            AreaScheme::table1().compressibility_sorted(&sorted),
+        ),
+        (
+            "qlc-opt".into(),
+            optimizer::optimize_scheme(&sorted).compressibility_sorted(&sorted),
+        ),
+    ];
+    for (name, c) in rows {
+        println!("  {name:<26} {:>7.2}%", c * 100.0);
+    }
+
+
+    println!("\n=== ablation 5: cross-format sweep (Gaussian tensor, block-32) ===");
+    println!("{:>8} {:>9} {:>9} {:>9}", "format", "entropy", "ideal%", "qlc-opt%");
+    let mut rng = Rng::new(17);
+    let mut data = vec![0f32; (1 << 20) as usize];
+    rng.fill_normal_f32(&mut data, 0.0, 1.0);
+    for spec in [ExmySpec::E2M5, ExmySpec::E3M4, ExmySpec::E4M3,
+                 ExmySpec::E5M2] {
+        let f = ExmyFormat::new(spec);
+        let (symbols, _) = f.quantize_blocks(&data);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let sorted = pmf.sorted_desc();
+        let opt = optimizer::optimize_scheme(&sorted);
+        println!(
+            "{:>8} {:>9.3} {:>9.2} {:>9.2}",
+            spec.name(),
+            pmf.entropy(),
+            pmf.ideal_compressibility() * 100.0,
+            opt.compressibility_sorted(&sorted) * 100.0
+        );
+    }
+
+    println!("\n=== ablation 6: block compressors & streaming adaptation ===");
+    // Drifting stream: first half FFN1-like, second half FFN2-like.
+    let gen1 = TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY);
+    let gen2 = TensorGen::new(TensorKind::Ffn2Act, Variant::ExmY);
+    let mut rng = Rng::new(23);
+    let stream = [
+        gen1.symbols(&mut rng, 1 << 20),
+        gen2.symbols(&mut rng, 1 << 20),
+    ]
+    .concat();
+    let hist = Histogram::from_symbols(&stream);
+    let static_qlc = {
+        let pmf = hist.pmf();
+        let scheme = optimizer::optimize_scheme(&pmf.sorted_desc());
+        qlc::codecs::qlc::QlcCodec::from_pmf(scheme, &pmf)
+    };
+    let static_len = static_qlc.encode_to_vec(&stream).len();
+    let adaptive_len = adaptive::encode(
+        &AdaptiveConfig { reoptimize_scheme: true, ..Default::default() },
+        &stream,
+    )
+    .len();
+    let comp = |len: usize| (1.0 - len as f64 / stream.len() as f64) * 100.0;
+    println!("  qlc static (oracle full-stream LUT)  {:>6.2}%", comp(static_len));
+    println!("  qlc adaptive (streaming, no oracle)  {:>6.2}%", comp(adaptive_len));
+    for level in [1, 3, 9] {
+        println!(
+            "  zstd level {level}                         {:>6.2}%  (block compressor, context-aware)",
+            zstd_baseline::compressibility(&stream, level) * 100.0
+        );
+    }
+    let huff = HuffmanCodec::from_histogram(&hist);
+    println!(
+        "  huffman static                       {:>6.2}%",
+        comp(huff.encode_to_vec(&stream).len())
+    );
+}

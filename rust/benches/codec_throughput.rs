@@ -1,0 +1,73 @@
+//! Software encode/decode throughput for every codec on both paper
+//! PMFs — the HEAD experiment's software half ("significantly speeds up
+//! the decoding").  Also contrasts the two Huffman decoders (bit-serial
+//! tree vs multi-level table), which is the software analogue of the
+//! paper's hardware argument.
+
+use qlc::bitstream::BitReader;
+use qlc::codecs::frame::CodecSpec;
+use qlc::codecs::huffman::decode::{TableDecoder, TreeDecoder};
+use qlc::codecs::huffman::HuffmanCodec;
+use qlc::codecs::Codec;
+use qlc::report;
+use qlc::util::bench::Bencher;
+
+const N: usize = 4 << 20; // 4 Mi symbols per stream
+
+fn main() {
+    println!("=== codec_throughput: {N} symbols per stream ===");
+    let pmfs = report::paper_pmfs(42, 6);
+    for (label, pmf, hist) in [
+        ("ffn1", &pmfs.ffn1, &pmfs.ffn1_hist),
+        ("ffn2", &pmfs.ffn2, &pmfs.ffn2_hist),
+    ] {
+        println!("--- {label} PMF (entropy {:.2} bits) ---", pmf.entropy());
+        let symbols = report::sample_symbols(pmf, N, 7);
+        let mut b = Bencher::new();
+
+        for name in ["raw", "huffman", "qlc", "qlc-t1", "elias-gamma",
+                     "elias-delta", "eg3"] {
+            let spec = CodecSpec::by_name(name, hist).unwrap();
+            let codec = spec.codec();
+            let encoded = codec.encode_to_vec(&symbols);
+            println!(
+                "  {name}: {} -> {} bytes ({:.1}% compressibility)",
+                symbols.len(),
+                encoded.len(),
+                (1.0 - encoded.len() as f64 / symbols.len() as f64) * 100.0
+            );
+            b.bench_bytes(&format!("{label}/encode/{name}"), N as u64, || {
+                std::hint::black_box(codec.encode_to_vec(&symbols));
+            });
+            let mut out = Vec::with_capacity(N);
+            b.bench_bytes(&format!("{label}/decode/{name}"), N as u64, || {
+                out.clear();
+                let mut r = BitReader::new(&encoded);
+                codec.decode(&mut r, N, &mut out).unwrap();
+                std::hint::black_box(out.len());
+            });
+        }
+
+        // Huffman decoder micro-comparison: tree walk vs table.
+        let huff = HuffmanCodec::from_histogram(hist);
+        let encoded = huff.encode_to_vec(&symbols);
+        let tree = TreeDecoder::new(huff.book());
+        let table = TableDecoder::new(huff.book());
+        let mut out = Vec::with_capacity(N);
+        b.bench_bytes(&format!("{label}/decode/huffman-tree-serial"),
+                      N as u64, || {
+            out.clear();
+            let mut r = BitReader::new(&encoded);
+            tree.decode(&mut r, N, &mut out).unwrap();
+            std::hint::black_box(out.len());
+        });
+        b.bench_bytes(&format!("{label}/decode/huffman-table"),
+                      N as u64, || {
+            out.clear();
+            let mut r = BitReader::new(&encoded);
+            table.decode(&mut r, N, &mut out).unwrap();
+            std::hint::black_box(out.len());
+        });
+        println!();
+    }
+}

@@ -1,0 +1,141 @@
+//! EXT-COLL: the paper's motivating claim — "lossless compression is an
+//! effective way to reduce the network traffic and improve collective
+//! performance".  Sweeps link bandwidth and codec over a ring
+//! all-reduce and an all-gather on the simulated fabric, reporting the
+//! modelled total time (network + measured codec) and the crossover
+//! where codec cost outweighs wire savings.
+
+use qlc::collective::{ring_allgather, ring_allreduce, Fabric, Transport};
+use qlc::data::{TensorGen, TensorKind};
+use qlc::formats::Variant;
+use qlc::stats::Histogram;
+use qlc::util::rng::Rng;
+
+const WORKERS: usize = 8;
+const ELEMS: usize = 1 << 20; // 1 Mi f32 per worker
+
+fn main() {
+    println!(
+        "=== collective_bench: ring ops, {WORKERS} workers, {ELEMS} \
+         elements/worker ==="
+    );
+    let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+    let mut rng = Rng::new(1);
+    let data: Vec<Vec<f32>> =
+        (0..WORKERS).map(|_| gen.generate(&mut rng, ELEMS)).collect();
+    let cal = Histogram::from_symbols(&gen.symbols(&mut rng, 1 << 16));
+
+    let transports = |codec: &str| -> Transport {
+        if codec == "raw" {
+            Transport::Raw
+        } else {
+            Transport::Compressed {
+                codec: codec.into(),
+                calibration: Box::new(cal.clone()),
+            }
+        }
+    };
+
+    // Network-only time is the hardware-codec scenario (the paper's
+    // target: a wire-speed decoder); "sw total" adds our measured
+    // software codec+quantize wall time — the honest crossover for a
+    // software implementation.
+    println!("\n-- allreduce: network time (ms) vs link bandwidth --");
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>9} {:>12}",
+        "GB/s", "raw-net", "qlc-net", "huff-net", "speedup", "qlc-sw-total"
+    );
+    for gbps in [1.0, 5.0, 10.0, 25.0, 50.0, 100.0, 400.0] {
+        let fabric = Fabric {
+            workers: WORKERS,
+            link_bandwidth: gbps * 1e9,
+            link_latency: 2e-6,
+        };
+        let (_, raw) =
+            ring_allreduce(&fabric, &data, &transports("raw")).unwrap();
+        let (_, qlc) =
+            ring_allreduce(&fabric, &data, &transports("qlc")).unwrap();
+        let (_, huff) =
+            ring_allreduce(&fabric, &data, &transports("huffman")).unwrap();
+        println!(
+            "{:>8.0} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x {:>12.3}",
+            gbps,
+            raw.network_time_s * 1e3,
+            qlc.network_time_s * 1e3,
+            huff.network_time_s * 1e3,
+            raw.network_time_s / qlc.network_time_s,
+            qlc.total_time_s() * 1e3
+        );
+    }
+
+    println!("\n-- allreduce: bytes on wire --");
+    let fabric = Fabric::pod(WORKERS);
+    for codec in ["raw", "qlc", "qlc-t1", "huffman", "elias-delta", "eg3"] {
+        let (_, report) =
+            ring_allreduce(&fabric, &data, &transports(codec)).unwrap();
+        println!(
+            "  {:<12} wire {:>12} B  ratio {:.3}  codec {:>8.3} ms",
+            codec,
+            report.wire_bytes,
+            report.compression_ratio(),
+            report.codec_time_s * 1e3
+        );
+    }
+
+    println!("\n-- allgather (weight shards) --");
+    let shards: Vec<Vec<u8>> = (0..WORKERS)
+        .map(|_| {
+            TensorGen::new(TensorKind::Weight, Variant::ExmY)
+                .symbols(&mut rng, ELEMS / WORKERS)
+        })
+        .collect();
+    let scales: Vec<Vec<f32>> = (0..WORKERS)
+        .map(|_| vec![1.0; ELEMS / WORKERS / 32])
+        .collect();
+    let cal_w = Histogram::from_symbols(&shards.concat());
+    for codec in ["raw", "qlc", "huffman"] {
+        let transport = if codec == "raw" {
+            Transport::Raw
+        } else {
+            Transport::Compressed {
+                codec: codec.into(),
+                calibration: Box::new(cal_w.clone()),
+            }
+        };
+        let (_, report) =
+            ring_allgather(&fabric, &shards, &scales, &transport).unwrap();
+        println!(
+            "  {:<12} wire {:>12} B  ratio {:.3}  total {:>8.3} ms",
+            codec,
+            report.wire_bytes,
+            report.compression_ratio(),
+            report.total_time_s() * 1e3
+        );
+    }
+
+    println!("\n-- coordinator pipeline scaling (qlc, 16 Mi symbols) --");
+    use qlc::coordinator::{Pipeline, PipelineConfig};
+    let stream = gen.symbols(&mut rng, 16 << 20);
+    let cal2 = Histogram::from_symbols(&stream[..1 << 16]);
+    for workers in [1usize, 2, 4, 8] {
+        let pipe = Pipeline::new(
+            PipelineConfig {
+                workers,
+                chunk_size: 256 * 1024,
+                queue_depth: workers * 2,
+            },
+            "qlc",
+            &cal2,
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let frames = pipe.compress_stream(&stream);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  workers={workers}: {:>7.1} MB/s end-to-end ({} frames, {:.1}% compressibility)",
+            stream.len() as f64 / wall / 1e6,
+            frames.len(),
+            pipe.metrics().compressibility() * 100.0
+        );
+    }
+}

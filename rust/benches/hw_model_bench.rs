@@ -1,0 +1,80 @@
+//! HEAD (hardware half): the decoder hardware cost model on real
+//! encoded streams of both paper PMFs — cycles/symbol, storage bits,
+//! and critical-path stages for the bit-serial Huffman FSM, the
+//! multi-level-table Huffman decoder, and the 2-stage QLC decoder.
+
+use qlc::codecs::huffman::HuffmanCodec;
+use qlc::codecs::qlc::{AreaScheme, QlcCodec};
+use qlc::hw;
+use qlc::report;
+use qlc::util::bench::Bencher;
+
+const N: usize = 1 << 20;
+
+fn main() {
+    println!("=== hw_model_bench: {N} symbols per stream ===");
+    let pmfs = report::paper_pmfs(42, 6);
+    let mut b = Bencher::new();
+    for (label, pmf, hist, scheme) in [
+        ("ffn1", &pmfs.ffn1, &pmfs.ffn1_hist, AreaScheme::table1()),
+        ("ffn2", &pmfs.ffn2, &pmfs.ffn2_hist, AreaScheme::table2()),
+    ] {
+        let symbols = report::sample_symbols(pmf, N, 3);
+        let huff = HuffmanCodec::from_histogram(hist);
+        let qlc_codec = QlcCodec::from_pmf(scheme, pmf);
+        let reports = hw::compare_on_stream(huff.book(), &qlc_codec, &symbols);
+        println!(
+            "--- {label}: huffman lengths {}–{} bits ---",
+            huff.min_length(),
+            huff.max_length()
+        );
+        for r in &reports {
+            println!(
+                "  {:<16} {:>7.3} cycles/sym  {:>9} storage bits  {:>2} \
+                 worst stages",
+                r.model,
+                r.cycles_per_symbol(),
+                r.storage_bits,
+                r.worst_stages
+            );
+        }
+        println!(
+            "  QLC decode speedup vs bit-serial Huffman: {:.2}x",
+            hw::qlc_speedup_vs_serial(&reports)
+        );
+        // Multi-lane QLC decoders (the paper's "not bit sequential"
+        // advantage, scaled out).
+        for lanes in [2u32, 4, 8] {
+            let r = hw::ParallelQlcModel::new(&qlc_codec, lanes)
+                .simulate(&symbols);
+            println!(
+                "  {:<16} {:>7.3} cycles/sym  {:>9} storage bits  {:>2} \
+                 worst stages",
+                r.model,
+                r.cycles_per_symbol(),
+                r.storage_bits,
+                r.worst_stages
+            );
+        }
+        // Encoder side (paper ref [12] context): both single-stage,
+        // differing in LUT width / shifter width.
+        for enc in [
+            hw::EncoderModel::huffman(huff.book()),
+            hw::EncoderModel::qlc(&qlc_codec),
+        ] {
+            println!(
+                "  {:<16} 1 stage, LUT {:>6} bits, {}-bit shifter",
+                enc.name,
+                enc.storage_bits(),
+                enc.shifter_width_bits()
+            );
+        }
+        // Model-evaluation cost itself (for completeness).
+        b.bench(&format!("{label}/simulate-serial-model"), || {
+            std::hint::black_box(
+                hw::HuffmanSerialModel::new(huff.book()).simulate(&symbols),
+            );
+        });
+        println!();
+    }
+}

@@ -1,0 +1,50 @@
+//! Regenerates **every table and figure** of the paper's evaluation
+//! (DESIGN.md §5: FIG1–FIG7, TAB1–TAB4, plus the codec-comparison
+//! summaries) at the full 18×64 shard grid, and times the regeneration
+//! stages.  Output is recorded in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use qlc::report;
+use qlc::util::bench::Bencher;
+
+fn main() {
+    println!("=== paper_tables: full-grid regeneration (18 layers × 64 shards scale) ===");
+    let t0 = Instant::now();
+    // scale=2 → 9 layers × 32 shards = 288 shards/tensor-type at 32 Ki
+    // symbols each (~9.4 M symbols per PMF): full-fidelity statistics
+    // in bounded time.
+    let pmfs = report::paper_pmfs(42, 2);
+    println!(
+        "pmf construction (2×288 shards, calibrated): {:.2?}\n",
+        t0.elapsed()
+    );
+
+    for artifact in report::all_artifacts(&pmfs) {
+        println!("{}", artifact.text);
+    }
+
+    // Timing of the table-construction stages themselves.
+    let mut b = Bencher::new();
+    let sorted1 = pmfs.ffn1.sorted_desc();
+    b.bench("build: huffman codebook (FFN1 pmf)", || {
+        let mut h = qlc::stats::Histogram::new();
+        for i in 0..256 {
+            h.counts[i] = (pmfs.ffn1.p[i] * 1.15e9) as u64 + 1;
+        }
+        std::hint::black_box(
+            qlc::codecs::huffman::HuffmanCodec::from_histogram(&h),
+        );
+    });
+    b.bench("build: qlc-t1 codec (FFN1 pmf)", || {
+        std::hint::black_box(qlc::codecs::qlc::QlcCodec::from_pmf(
+            qlc::codecs::qlc::AreaScheme::table1(),
+            &pmfs.ffn1,
+        ));
+    });
+    b.bench("build: scheme optimizer (FFN1 pmf, P=1..4)", || {
+        std::hint::black_box(qlc::codecs::qlc::optimizer::optimize_scheme(
+            &sorted1,
+        ));
+    });
+}

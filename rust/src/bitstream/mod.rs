@@ -1,0 +1,445 @@
+//! MSB-first bit-level I/O — the substrate of every codec in this crate.
+//!
+//! The writer packs bits big-endian-within-byte (the first bit written
+//! becomes the MSB of byte 0), matching the paper's code layout where
+//! the 3-bit area prefix leads the code.  The reader keeps a 64-bit
+//! staging buffer refilled 32 bits at a time so that `read_bits`/`peek`
+//! on the decode hot path are branch-light (see EXPERIMENTS.md §Perf).
+
+/// Bit-granular writer over a growable byte buffer.
+///
+/// Hot path (EXPERIMENTS.md §Perf): a 64-bit accumulator holding up to
+/// 7 residual bits between calls; `write_bits` is one shift-or plus a
+/// whole-byte drain — no per-bit loop.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Accumulator; the low `nbits` bits are pending output (bits above
+    /// `nbits` are stale and ignored).
+    acc: u64,
+    nbits: u32,
+    total_bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), ..Self::default() }
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n` ≤ 57 (enough
+    /// for any code in this crate; Huffman caps at 48, QLC at 11).
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || value < (1u64 << n));
+        // nbits < 8 between calls, so nbits + n ≤ 64 always holds.
+        self.total_bits += n as u64;
+        self.acc = (self.acc << n) | value;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.buf.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Write `n` zero bits (unary padding, Elias prefixes).
+    #[inline]
+    pub fn write_zeros(&mut self, mut n: u32) {
+        while n > 32 {
+            self.write_bits(0, 32);
+            n -= 32;
+        }
+        if n > 0 {
+            self.write_bits(0, n);
+        }
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Flush (zero-pad the final partial byte) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc << (8 - self.nbits)) as u8);
+        }
+        self.buf
+    }
+}
+
+/// Bit-granular reader with a 64-bit staging buffer.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next byte to load into the staging word.
+    byte_pos: usize,
+    /// Staging word: next bit to deliver is the MSB.
+    word: u64,
+    /// Valid bits in `word`.
+    avail: u32,
+    /// Total bits consumed.
+    consumed: u64,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct BitstreamEof;
+
+impl std::fmt::Display for BitstreamEof {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bitstream exhausted")
+    }
+}
+impl std::error::Error for BitstreamEof {}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader { data, byte_pos: 0, word: 0, avail: 0, consumed: 0 }
+    }
+
+    /// Refill the staging word to ≥ 57 valid bits (if input remains).
+    /// Fast path: one unaligned 8-byte load, masked to the bytes that
+    /// fit (EXPERIMENTS.md §Perf — the byte loop was the decode
+    /// bottleneck).
+    #[inline]
+    fn refill(&mut self) {
+        if self.avail > 56 {
+            return;
+        }
+        let rem = self.data.len() - self.byte_pos;
+        if rem >= 8 {
+            let w = u64::from_be_bytes(
+                self.data[self.byte_pos..self.byte_pos + 8]
+                    .try_into()
+                    .unwrap(),
+            );
+            let take_bytes = ((64 - self.avail) / 8) as usize; // 1..=8
+            // Keep only the bytes we account for; the rest reloads next
+            // time at the right offset.
+            let keep = w & (!0u64).wrapping_shl(64 - take_bytes as u32 * 8);
+            self.word |= keep >> self.avail;
+            self.byte_pos += take_bytes;
+            self.avail += take_bytes as u32 * 8;
+        } else {
+            while self.avail <= 56 && self.byte_pos < self.data.len() {
+                let b = self.data[self.byte_pos] as u64;
+                self.byte_pos += 1;
+                self.word |= b << (56 - self.avail);
+                self.avail += 8;
+            }
+        }
+    }
+
+    /// Peek up to 32 bits without consuming (zero-padded past EOF).
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        self.refill();
+        if n == 0 {
+            return 0;
+        }
+        (self.word >> (64 - n)) as u32
+    }
+
+    /// Refill and report how many valid bits are buffered (≤ 64).
+    /// Bulk decoders use this to run a checked-once inner loop
+    /// (EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn buffered_bits(&mut self) -> u32 {
+        self.refill();
+        self.avail
+    }
+
+    /// Peek from the buffer without refilling.  The caller must have
+    /// ensured `buffered_bits() ≥ n` on this position.
+    #[inline]
+    pub fn peek_buffered(&self, n: u32) -> u32 {
+        debug_assert!(n <= 32 && (n <= self.avail || n == 0));
+        if n == 0 {
+            return 0;
+        }
+        (self.word >> (64 - n)) as u32
+    }
+
+    /// The raw staging word (valid in its top `buffered_bits()` bits).
+    /// Bulk decoders combine this with precomputed shifts to avoid
+    /// re-normalizing per symbol.
+    #[inline]
+    pub fn word_buffered(&self) -> u64 {
+        self.word
+    }
+
+    /// Consume `n` bits previously peeked. Safe to over-consume into the
+    /// zero padding only if the caller tracks its own end (the framed
+    /// codecs all carry an element count).
+    #[inline]
+    pub fn skip(&mut self, n: u32) {
+        debug_assert!(n <= self.avail.max(32));
+        self.word <<= n;
+        self.avail = self.avail.saturating_sub(n);
+        self.consumed += n as u64;
+    }
+
+    /// Read `n` ≤ 32 bits MSB-first, checking for EOF.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u32, BitstreamEof> {
+        if self.remaining_bits() < n as u64 {
+            return Err(BitstreamEof);
+        }
+        let v = self.peek(n);
+        self.skip(n);
+        Ok(v)
+    }
+
+    /// Read a single bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool, BitstreamEof> {
+        Ok(self.read_bits(1)? != 0)
+    }
+
+    /// Count and consume leading zero bits up to the next 1 bit, then
+    /// consume the 1 bit. Returns the zero count (Elias/EG prefixes).
+    pub fn read_unary(&mut self) -> Result<u32, BitstreamEof> {
+        let mut zeros = 0u32;
+        loop {
+            self.refill();
+            if self.avail == 0 {
+                return Err(BitstreamEof);
+            }
+            let chunk = (self.word >> 32) as u32;
+            let lz = chunk.leading_zeros().min(self.avail);
+            if lz < 32 && lz < self.avail {
+                // Found a 1 within the valid window.
+                zeros += lz;
+                self.skip(lz + 1);
+                return Ok(zeros);
+            }
+            zeros += lz;
+            self.skip(lz);
+        }
+    }
+
+    pub fn bits_consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    pub fn remaining_bits(&self) -> u64 {
+        (self.data.len() as u64) * 8 - self.consumed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_byte_msb_first() {
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        w.write_bit(false);
+        w.write_bit(true);
+        let buf = w.finish();
+        assert_eq!(buf, vec![0b1010_0000]);
+    }
+
+    #[test]
+    fn cross_byte_write() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1_1111_0000_1, 10); // 10 bits
+        w.write_bits(0b01_1011, 6);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf, vec![0b1111_1000, 0b0101_1011]);
+    }
+
+    #[test]
+    fn bit_len_tracks() {
+        let mut w = BitWriter::new();
+        w.write_bits(0, 7);
+        w.write_bits(1, 11);
+        assert_eq!(w.bit_len(), 18);
+    }
+
+    #[test]
+    fn reader_roundtrip_fixed() {
+        let mut w = BitWriter::new();
+        let fields = [(0b101u64, 3u32), (0xFFFF, 16), (0, 1), (0x1ABCD, 17)];
+        for &(v, n) in &fields {
+            w.write_bits(v, n);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &(v, n) in &fields {
+            assert_eq!(r.read_bits(n).unwrap() as u64, v);
+        }
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let buf = [0b1100_0000u8];
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.peek(2), 0b11);
+        assert_eq!(r.peek(2), 0b11);
+        r.skip(1);
+        assert_eq!(r.peek(1), 1);
+    }
+
+    #[test]
+    fn eof_detection() {
+        let buf = [0xFFu8];
+        let mut r = BitReader::new(&buf);
+        assert!(r.read_bits(8).is_ok());
+        assert_eq!(r.read_bits(1), Err(BitstreamEof));
+    }
+
+    #[test]
+    fn peek_past_eof_zero_padded() {
+        let buf = [0xFFu8];
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.peek(16), 0xFF00);
+    }
+
+    #[test]
+    fn unary_basic() {
+        let mut w = BitWriter::new();
+        w.write_zeros(5);
+        w.write_bit(true);
+        w.write_zeros(0);
+        w.write_bit(true);
+        w.write_zeros(12);
+        w.write_bit(true);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_unary().unwrap(), 5);
+        assert_eq!(r.read_unary().unwrap(), 0);
+        assert_eq!(r.read_unary().unwrap(), 12);
+    }
+
+    #[test]
+    fn unary_eof() {
+        let buf = [0x00u8]; // all zeros, no terminating 1
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_unary(), Err(BitstreamEof));
+    }
+
+    #[test]
+    fn unary_long_runs() {
+        for zeros in [31u32, 32, 33, 63, 64, 65, 100] {
+            let mut w = BitWriter::new();
+            w.write_zeros(zeros);
+            w.write_bit(true);
+            let buf = w.finish();
+            let mut r = BitReader::new(&buf);
+            assert_eq!(r.read_unary().unwrap(), zeros, "zeros={zeros}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random_fields() {
+        prop::check("bitstream roundtrip", Default::default(), |rng, size| {
+            let nfields = rng.below(size as u64 + 1) as usize;
+            let fields: Vec<(u64, u32)> = (0..nfields)
+                .map(|_| {
+                    let n = 1 + rng.below(32) as u32;
+                    let v = rng.next_u64() & ((1u64 << n) - 1);
+                    (v, n)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, n) in &fields {
+                w.write_bits(v, n);
+            }
+            let expect_bits: u64 = fields.iter().map(|&(_, n)| n as u64).sum();
+            if w.bit_len() != expect_bits {
+                return Err(format!("bit_len {} != {expect_bits}", w.bit_len()));
+            }
+            let buf = w.finish();
+            if buf.len() as u64 != (expect_bits + 7) / 8 {
+                return Err("buffer length mismatch".into());
+            }
+            let mut r = BitReader::new(&buf);
+            for (i, &(v, n)) in fields.iter().enumerate() {
+                let got = r.read_bits(n).map_err(|e| e.to_string())? as u64;
+                if got != v {
+                    return Err(format!("field {i}: got {got}, want {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_interleaved_unary_and_fixed() {
+        prop::check("unary+fixed roundtrip", Default::default(), |rng, size| {
+            #[derive(Debug)]
+            enum F {
+                Fixed(u64, u32),
+                Unary(u32),
+            }
+            let n = rng.below(size as u64 / 8 + 2) as usize;
+            let fields: Vec<F> = (0..n)
+                .map(|_| {
+                    if rng.uniform() < 0.5 {
+                        let bits = 1 + rng.below(24) as u32;
+                        F::Fixed(rng.next_u64() & ((1 << bits) - 1), bits)
+                    } else {
+                        F::Unary(rng.below(70) as u32)
+                    }
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for f in &fields {
+                match f {
+                    F::Fixed(v, n) => w.write_bits(*v, *n),
+                    F::Unary(z) => {
+                        w.write_zeros(*z);
+                        w.write_bit(true);
+                    }
+                }
+            }
+            let buf = w.finish();
+            let mut r = BitReader::new(&buf);
+            for f in &fields {
+                match f {
+                    F::Fixed(v, n) => {
+                        let got = r.read_bits(*n).map_err(|e| e.to_string())?;
+                        if got as u64 != *v {
+                            return Err(format!("fixed: {got} != {v}"));
+                        }
+                    }
+                    F::Unary(z) => {
+                        let got = r.read_unary().map_err(|e| e.to_string())?;
+                        if got != *z {
+                            return Err(format!("unary: {got} != {z}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rng_stream_bytes_roundtrip() {
+        let mut rng = Rng::new(99);
+        let mut data = vec![0u8; 1000];
+        rng.fill_bytes(&mut data);
+        let mut w = BitWriter::new();
+        for &b in &data {
+            w.write_bits(b as u64, 8);
+        }
+        assert_eq!(w.finish(), data);
+    }
+}

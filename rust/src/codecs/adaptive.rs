@@ -1,0 +1,214 @@
+//! Streaming adaptive QLC — an extension the paper's §7 sets up
+//! ("multiple LUTs … obtained apriori"): instead of a fixed apriori
+//! LUT, the encoder re-fits the rank order (and optionally the area
+//! scheme) per chunk from the *previous* chunk's histogram, so encoder
+//! and decoder stay in lockstep with zero table bytes on the wire
+//! after the first chunk.
+//!
+//! Chunk 0 uses the neutral identity ranking (or a caller-provided
+//! prior); every subsequent chunk uses the ranking measured on the
+//! chunk before it.  Distribution drift (e.g. across layers or
+//! training steps) is absorbed within one chunk.
+
+use super::qlc::{AreaScheme, QlcCodec};
+use super::{Codec, CodecError};
+use crate::bitstream::{BitReader, BitWriter};
+use crate::stats::Histogram;
+
+/// Streaming encoder/decoder pair configuration.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    pub chunk_symbols: usize,
+    pub scheme: AreaScheme,
+    /// Re-run the area-scheme optimizer each chunk (cost: one DP per
+    /// chunk) instead of keeping `scheme` fixed.
+    pub reoptimize_scheme: bool,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            chunk_symbols: 64 * 1024,
+            scheme: AreaScheme::table1(),
+            reoptimize_scheme: false,
+        }
+    }
+}
+
+fn identity_rank() -> [u8; 256] {
+    let mut r = [0u8; 256];
+    for (i, v) in r.iter_mut().enumerate() {
+        *v = i as u8;
+    }
+    r
+}
+
+fn codec_for(
+    cfg: &AdaptiveConfig,
+    hist: Option<&Histogram>,
+) -> QlcCodec {
+    match hist {
+        None => QlcCodec::from_rank_order(
+            cfg.scheme.clone(),
+            &identity_rank(),
+            "qlc-adaptive",
+        ),
+        Some(h) => {
+            let pmf = h.pmf();
+            let scheme = if cfg.reoptimize_scheme {
+                super::qlc::optimizer::optimize_for_prefix(
+                    &pmf.sorted_desc(),
+                    cfg.scheme.prefix_bits,
+                )
+            } else {
+                cfg.scheme.clone()
+            };
+            QlcCodec::from_pmf(scheme, &pmf)
+        }
+    }
+}
+
+/// Encode a stream with per-chunk adaptation.  The output is pure
+/// payload: the decoder reconstructs every table from the decoded
+/// history.
+pub fn encode(cfg: &AdaptiveConfig, symbols: &[u8]) -> Vec<u8> {
+    let mut out = BitWriter::with_capacity(symbols.len());
+    let mut prev_hist: Option<Histogram> = None;
+    for chunk in symbols.chunks(cfg.chunk_symbols) {
+        let codec = codec_for(cfg, prev_hist.as_ref());
+        codec.encode(chunk, &mut out);
+        prev_hist = Some(Histogram::from_symbols(chunk));
+    }
+    out.finish()
+}
+
+/// Decode `n` symbols produced by [`encode`] with the same config.
+pub fn decode(
+    cfg: &AdaptiveConfig,
+    data: &[u8],
+    n: usize,
+) -> Result<Vec<u8>, CodecError> {
+    let mut reader = BitReader::new(data);
+    let mut out = Vec::with_capacity(n);
+    let mut prev_hist: Option<Histogram> = None;
+    let mut done = 0usize;
+    while done < n {
+        let take = cfg.chunk_symbols.min(n - done);
+        let codec = codec_for(cfg, prev_hist.as_ref());
+        let start = out.len();
+        codec.decode(&mut reader, take, &mut out)?;
+        prev_hist = Some(Histogram::from_symbols(&out[start..]));
+        done += take;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{TensorGen, TensorKind};
+    use crate::formats::Variant;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn drifting_stream(n: usize, seed: u64) -> Vec<u8> {
+        // Distribution drifts mid-stream: FFN1-like → FFN2-like.
+        let mut rng = Rng::new(seed);
+        let a = TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY)
+            .symbols(&mut rng, n / 2);
+        let b = TensorGen::new(TensorKind::Ffn2Act, Variant::ExmY)
+            .symbols(&mut rng, n - n / 2);
+        [a, b].concat()
+    }
+
+    #[test]
+    fn roundtrip_drifting_stream() {
+        let symbols = drifting_stream(512 * 1024, 1);
+        let cfg = AdaptiveConfig::default();
+        let enc = encode(&cfg, &symbols);
+        assert_eq!(decode(&cfg, &enc, symbols.len()).unwrap(), symbols);
+        assert!(enc.len() < symbols.len());
+    }
+
+    #[test]
+    fn roundtrip_with_reoptimized_scheme() {
+        let symbols = drifting_stream(256 * 1024, 2);
+        let cfg = AdaptiveConfig {
+            reoptimize_scheme: true,
+            ..Default::default()
+        };
+        let enc = encode(&cfg, &symbols);
+        assert_eq!(decode(&cfg, &enc, symbols.len()).unwrap(), symbols);
+    }
+
+    #[test]
+    fn adaptation_beats_static_mismatched_lut() {
+        // Static codec fitted on the FIRST half only vs adaptive: after
+        // the drift, adaptation must win.
+        let symbols = drifting_stream(1 << 20, 3);
+        let first_half_hist =
+            Histogram::from_symbols(&symbols[..symbols.len() / 2]);
+        let static_codec = QlcCodec::from_pmf(
+            AreaScheme::table1(),
+            &first_half_hist.pmf(),
+        );
+        let static_len = static_codec.encode_to_vec(&symbols).len();
+        let cfg = AdaptiveConfig {
+            reoptimize_scheme: true,
+            ..Default::default()
+        };
+        let adaptive_len = encode(&cfg, &symbols).len();
+        assert!(
+            adaptive_len < static_len,
+            "adaptive {adaptive_len} !< static {static_len}"
+        );
+    }
+
+    #[test]
+    fn chunk_smaller_than_stream_tail() {
+        let symbols = drifting_stream(10_048, 4);
+        let cfg = AdaptiveConfig { chunk_symbols: 3000, ..Default::default() };
+        let enc = encode(&cfg, &symbols);
+        assert_eq!(decode(&cfg, &enc, symbols.len()).unwrap(), symbols);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let cfg = AdaptiveConfig::default();
+        assert!(encode(&cfg, &[]).is_empty());
+        assert_eq!(decode(&cfg, &[], 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let symbols = drifting_stream(100_032, 5);
+        let cfg = AdaptiveConfig::default();
+        let enc = encode(&cfg, &symbols);
+        assert!(decode(&cfg, &enc[..enc.len() / 2], symbols.len()).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_configs() {
+        prop::check("adaptive roundtrip", prop::Config {
+            cases: 24, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size);
+            let cfg = AdaptiveConfig {
+                chunk_symbols: 1 + rng.below(5000) as usize,
+                scheme: if rng.uniform() < 0.5 {
+                    AreaScheme::table1()
+                } else {
+                    AreaScheme::table2()
+                },
+                reoptimize_scheme: rng.uniform() < 0.5,
+            };
+            let enc = encode(&cfg, &symbols);
+            let dec = decode(&cfg, &enc, symbols.len())
+                .map_err(|e| e.to_string())?;
+            if dec != symbols {
+                return Err("adaptive roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,366 @@
+//! Elias gamma / delta / omega universal codes (paper §1 baselines).
+//!
+//! Universal codes embed the code length in the code itself (leading
+//! zeros), so decode is not a deep tree walk — but they ignore the
+//! symbol distribution.  By default symbols map to `value + 1`
+//! (Elias codes start at 1); [`EliasCodec::with_ranking`] instead maps
+//! through a frequency-rank LUT, the "universal code + LUT" hybrid
+//! ablation used in `benches/ablation_scheme.rs`.
+
+use super::{Codec, CodecError};
+use crate::bitstream::{BitReader, BitWriter};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EliasKind {
+    Gamma,
+    Delta,
+    Omega,
+}
+
+impl EliasKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EliasKind::Gamma => "elias-gamma",
+            EliasKind::Delta => "elias-delta",
+            EliasKind::Omega => "elias-omega",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EliasCodec {
+    kind: EliasKind,
+    /// symbol → encoded value-1 (i.e. the integer fed to the code is
+    /// `map[s] + 1`). Identity by default; frequency rank if ranked.
+    map: [u8; 256],
+    /// Inverse of `map`.
+    unmap: [u8; 256],
+    ranked: bool,
+}
+
+impl EliasCodec {
+    pub fn new(kind: EliasKind) -> Self {
+        let mut map = [0u8; 256];
+        for (i, m) in map.iter_mut().enumerate() {
+            *m = i as u8;
+        }
+        EliasCodec { kind, map, unmap: map, ranked: false }
+    }
+
+    /// Map symbols through `rank_order` (rank r ← symbol
+    /// `rank_order[r]`) so frequent symbols get short codes.
+    pub fn with_ranking(kind: EliasKind, rank_order: &[u8; 256]) -> Self {
+        let mut map = [0u8; 256];
+        let mut unmap = [0u8; 256];
+        for (rank, &sym) in rank_order.iter().enumerate() {
+            map[sym as usize] = rank as u8;
+            unmap[rank] = sym;
+        }
+        EliasCodec { kind, map, unmap, ranked: true }
+    }
+
+    fn encode_value(&self, n: u32, out: &mut BitWriter) {
+        debug_assert!((1..=256).contains(&n));
+        match self.kind {
+            EliasKind::Gamma => encode_gamma(n, out),
+            EliasKind::Delta => encode_delta(n, out),
+            EliasKind::Omega => encode_omega(n, out),
+        }
+    }
+
+    fn decode_value(&self, r: &mut BitReader) -> Result<u32, CodecError> {
+        let v = match self.kind {
+            EliasKind::Gamma => decode_gamma(r)?,
+            EliasKind::Delta => decode_delta(r)?,
+            EliasKind::Omega => decode_omega(r)?,
+        };
+        if !(1..=256).contains(&v) {
+            return Err(CodecError::InvalidCode {
+                bit_offset: r.bits_consumed(),
+            });
+        }
+        Ok(v)
+    }
+
+    /// Code length in bits of integer `n ≥ 1`.
+    pub fn value_length(kind: EliasKind, n: u32) -> u32 {
+        debug_assert!(n >= 1);
+        let nbits = 32 - n.leading_zeros(); // floor(log2 n) + 1
+        match kind {
+            EliasKind::Gamma => 2 * nbits - 1,
+            EliasKind::Delta => {
+                let lbits = 32 - nbits.leading_zeros();
+                (nbits - 1) + (2 * lbits - 1)
+            }
+            EliasKind::Omega => {
+                // Sum of group lengths + terminating 0.
+                let mut len = 1;
+                let mut m = n;
+                while m > 1 {
+                    let g = 32 - m.leading_zeros();
+                    len += g;
+                    m = g - 1;
+                }
+                len
+            }
+        }
+    }
+}
+
+fn encode_gamma(n: u32, out: &mut BitWriter) {
+    let nbits = 32 - n.leading_zeros();
+    out.write_zeros(nbits - 1);
+    out.write_bits(n as u64, nbits);
+}
+
+fn decode_gamma(r: &mut BitReader) -> Result<u32, CodecError> {
+    let zeros = r.read_unary().map_err(|_| CodecError::UnexpectedEof)?;
+    if zeros > 31 {
+        return Err(CodecError::InvalidCode { bit_offset: r.bits_consumed() });
+    }
+    let rest = r
+        .read_bits(zeros)
+        .map_err(|_| CodecError::UnexpectedEof)?;
+    Ok((1 << zeros) | rest)
+}
+
+fn encode_delta(n: u32, out: &mut BitWriter) {
+    let nbits = 32 - n.leading_zeros();
+    encode_gamma(nbits, out);
+    if nbits > 1 {
+        out.write_bits((n & ((1 << (nbits - 1)) - 1)) as u64, nbits - 1);
+    }
+}
+
+fn decode_delta(r: &mut BitReader) -> Result<u32, CodecError> {
+    let nbits = decode_gamma(r)?;
+    if nbits == 0 || nbits > 32 {
+        return Err(CodecError::InvalidCode { bit_offset: r.bits_consumed() });
+    }
+    if nbits == 1 {
+        return Ok(1);
+    }
+    let rest = r
+        .read_bits(nbits - 1)
+        .map_err(|_| CodecError::UnexpectedEof)?;
+    Ok((1 << (nbits - 1)) | rest)
+}
+
+fn encode_omega(n: u32, out: &mut BitWriter) {
+    // Build groups back-to-front.
+    let mut groups: Vec<(u32, u32)> = Vec::new(); // (value, bits)
+    let mut m = n;
+    while m > 1 {
+        let bits = 32 - m.leading_zeros();
+        groups.push((m, bits));
+        m = bits - 1;
+    }
+    for &(v, bits) in groups.iter().rev() {
+        out.write_bits(v as u64, bits);
+    }
+    out.write_bits(0, 1);
+}
+
+fn decode_omega(r: &mut BitReader) -> Result<u32, CodecError> {
+    let mut n: u32 = 1;
+    loop {
+        let b = r.read_bit().map_err(|_| CodecError::UnexpectedEof)?;
+        if !b {
+            return Ok(n);
+        }
+        if n >= 31 {
+            return Err(CodecError::InvalidCode {
+                bit_offset: r.bits_consumed(),
+            });
+        }
+        let rest = r
+            .read_bits(n)
+            .map_err(|_| CodecError::UnexpectedEof)?;
+        n = (1 << n) | rest;
+    }
+}
+
+impl Codec for EliasCodec {
+    fn name(&self) -> String {
+        if self.ranked {
+            format!("{}-ranked", self.kind.name())
+        } else {
+            self.kind.name().to_string()
+        }
+    }
+
+    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+        for &s in symbols {
+            self.encode_value(self.map[s as usize] as u32 + 1, out);
+        }
+    }
+
+    fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        out.reserve(n);
+        for _ in 0..n {
+            let v = self.decode_value(reader)?;
+            out.push(self.unmap[(v - 1) as usize]);
+        }
+        Ok(())
+    }
+
+    fn code_lengths(&self) -> [u32; 256] {
+        let mut lengths = [0u32; 256];
+        for s in 0..256 {
+            lengths[s] = Self::value_length(
+                self.kind,
+                self.map[s] as u32 + 1,
+            );
+        }
+        lengths
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil;
+
+    #[test]
+    fn gamma_known_codes() {
+        // Classic table: 1→"1", 2→"010", 3→"011", 4→"00100".
+        let mut w = BitWriter::new();
+        for n in [1u32, 2, 3, 4] {
+            encode_gamma(n, &mut w);
+        }
+        assert_eq!(w.bit_len(), 1 + 3 + 3 + 5);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for n in [1u32, 2, 3, 4] {
+            assert_eq!(decode_gamma(&mut r).unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn delta_known_lengths() {
+        // δ(1)=1, δ(2)=4, δ(3)=4, δ(4)=5, δ(8)=8 bits? δ(8): nbits=4,
+        // gamma(4)=5 bits + 3 rest = 8.
+        for (n, len) in [(1u32, 1u32), (2, 4), (3, 4), (4, 5), (8, 8)] {
+            assert_eq!(
+                EliasCodec::value_length(EliasKind::Delta, n),
+                len,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn omega_known_codes() {
+        // ω(1)="0", ω(2)="100", ω(3)="110", ω(4)="101000".
+        for (n, len) in [(1u32, 1u32), (2, 3), (3, 3), (4, 6), (16, 11)] {
+            assert_eq!(
+                EliasCodec::value_length(EliasKind::Omega, n),
+                len,
+                "n={n}"
+            );
+        }
+        let mut w = BitWriter::new();
+        for n in 1..=300u32 {
+            if n <= 256 {
+                encode_omega(n, &mut w);
+            }
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for n in 1..=256u32 {
+            assert_eq!(decode_omega(&mut r).unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn value_lengths_match_encoder_all_kinds() {
+        for kind in [EliasKind::Gamma, EliasKind::Delta, EliasKind::Omega] {
+            for n in 1..=256u32 {
+                let mut w = BitWriter::new();
+                match kind {
+                    EliasKind::Gamma => encode_gamma(n, &mut w),
+                    EliasKind::Delta => encode_delta(n, &mut w),
+                    EliasKind::Omega => encode_omega(n, &mut w),
+                }
+                assert_eq!(
+                    w.bit_len(),
+                    EliasCodec::value_length(kind, n) as u64,
+                    "{kind:?} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_values_roundtrip_all_kinds() {
+        for kind in [EliasKind::Gamma, EliasKind::Delta, EliasKind::Omega] {
+            let codec = EliasCodec::new(kind);
+            let symbols: Vec<u8> = (0..=255).collect();
+            let enc = codec.encode_to_vec(&symbols);
+            assert_eq!(
+                codec.decode_from_slice(&enc, 256).unwrap(),
+                symbols,
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn ranked_mapping_bijective() {
+        let mut rank = [0u8; 256];
+        for i in 0..256 {
+            rank[i] = (255 - i) as u8; // reverse order
+        }
+        let codec = EliasCodec::with_ranking(EliasKind::Gamma, &rank);
+        let symbols: Vec<u8> = (0..=255).collect();
+        let enc = codec.encode_to_vec(&symbols);
+        assert_eq!(codec.decode_from_slice(&enc, 256).unwrap(), symbols);
+        // Symbol 255 has rank 0 → shortest code (1 bit).
+        assert_eq!(codec.code_lengths()[255], 1);
+    }
+
+    #[test]
+    fn ranked_shrinks_skewed_data() {
+        let mut symbols = vec![200u8; 10_000];
+        symbols.extend(std::iter::repeat(17u8).take(100));
+        let mut rank = [0u8; 256];
+        let mut order: Vec<u8> = (0..=255).collect();
+        order.sort_by_key(|&s| if s == 200 { 0 } else if s == 17 { 1 } else { 2 + s as u16 });
+        rank.copy_from_slice(&order);
+        let plain = EliasCodec::new(EliasKind::Gamma);
+        let ranked = EliasCodec::with_ranking(EliasKind::Gamma, &rank);
+        assert!(
+            ranked.encoded_bits(&symbols) < plain.encoded_bits(&symbols) / 4
+        );
+    }
+
+    #[test]
+    fn truncated_errors() {
+        for kind in [EliasKind::Gamma, EliasKind::Delta, EliasKind::Omega] {
+            let codec = EliasCodec::new(kind);
+            let enc = codec.encode_to_vec(&[255u8; 4]);
+            let cut = &enc[..enc.len() - 1];
+            assert!(codec.decode_from_slice(cut, 4).is_err(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_gamma() {
+        testutil::roundtrip_property(&EliasCodec::new(EliasKind::Gamma));
+    }
+
+    #[test]
+    fn prop_roundtrip_delta() {
+        testutil::roundtrip_property(&EliasCodec::new(EliasKind::Delta));
+    }
+
+    #[test]
+    fn prop_roundtrip_omega() {
+        testutil::roundtrip_property(&EliasCodec::new(EliasKind::Omega));
+    }
+}

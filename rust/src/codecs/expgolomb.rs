@@ -1,0 +1,217 @@
+//! Order-k Exponential-Golomb codes (paper §1 baseline; k=0 is the
+//! H.264 ue(v) code).  Like the Elias codecs, supports an optional
+//! frequency-rank mapping for the hybrid ablation.
+
+use super::{Codec, CodecError};
+use crate::bitstream::{BitReader, BitWriter};
+
+#[derive(Clone, Debug)]
+pub struct ExpGolombCodec {
+    k: u32,
+    map: [u8; 256],
+    unmap: [u8; 256],
+    ranked: bool,
+}
+
+impl ExpGolombCodec {
+    pub fn new(k: u32) -> Self {
+        assert!(k <= 8, "order-{k} EG is pointless for a 256-symbol alphabet");
+        let mut map = [0u8; 256];
+        for (i, m) in map.iter_mut().enumerate() {
+            *m = i as u8;
+        }
+        ExpGolombCodec { k, map, unmap: map, ranked: false }
+    }
+
+    pub fn with_ranking(k: u32, rank_order: &[u8; 256]) -> Self {
+        let mut c = Self::new(k);
+        let mut unmap = [0u8; 256];
+        for (rank, &sym) in rank_order.iter().enumerate() {
+            c.map[sym as usize] = rank as u8;
+            unmap[rank] = sym;
+        }
+        c.unmap = unmap;
+        c.ranked = true;
+        c
+    }
+
+    pub fn order(&self) -> u32 {
+        self.k
+    }
+
+    /// Length in bits of the order-k EG code of `n ≥ 0`.
+    pub fn value_length(k: u32, n: u32) -> u32 {
+        let q = (n >> k) + 1;
+        let qbits = 32 - q.leading_zeros();
+        (2 * qbits - 1) + k
+    }
+
+    fn encode_value(&self, n: u32, out: &mut BitWriter) {
+        let q = (n >> self.k) + 1;
+        let qbits = 32 - q.leading_zeros();
+        out.write_zeros(qbits - 1);
+        out.write_bits(q as u64, qbits);
+        if self.k > 0 {
+            out.write_bits((n & ((1 << self.k) - 1)) as u64, self.k);
+        }
+    }
+
+    fn decode_value(&self, r: &mut BitReader) -> Result<u32, CodecError> {
+        let zeros = r.read_unary().map_err(|_| CodecError::UnexpectedEof)?;
+        if zeros > 16 {
+            return Err(CodecError::InvalidCode {
+                bit_offset: r.bits_consumed(),
+            });
+        }
+        let rest = r
+            .read_bits(zeros)
+            .map_err(|_| CodecError::UnexpectedEof)?;
+        let q = (1u32 << zeros) | rest;
+        let low = if self.k > 0 {
+            r.read_bits(self.k).map_err(|_| CodecError::UnexpectedEof)?
+        } else {
+            0
+        };
+        Ok(((q - 1) << self.k) | low)
+    }
+}
+
+impl Codec for ExpGolombCodec {
+    fn name(&self) -> String {
+        if self.ranked {
+            format!("expgolomb-k{}-ranked", self.k)
+        } else {
+            format!("expgolomb-k{}", self.k)
+        }
+    }
+
+    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+        for &s in symbols {
+            self.encode_value(self.map[s as usize] as u32, out);
+        }
+    }
+
+    fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        out.reserve(n);
+        for _ in 0..n {
+            let v = self.decode_value(reader)?;
+            if v > 255 {
+                return Err(CodecError::InvalidCode {
+                    bit_offset: reader.bits_consumed(),
+                });
+            }
+            out.push(self.unmap[v as usize]);
+        }
+        Ok(())
+    }
+
+    fn code_lengths(&self) -> [u32; 256] {
+        let mut lengths = [0u32; 256];
+        for s in 0..256 {
+            lengths[s] = Self::value_length(self.k, self.map[s] as u32);
+        }
+        lengths
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil;
+
+    #[test]
+    fn k0_known_codes() {
+        // ue(v): 0→"1" (1b), 1→"010", 2→"011", 3→"00100".
+        for (n, len) in [(0u32, 1u32), (1, 3), (2, 3), (3, 5), (6, 5), (7, 7)] {
+            assert_eq!(ExpGolombCodec::value_length(0, n), len, "n={n}");
+        }
+    }
+
+    #[test]
+    fn k3_lengths() {
+        // k=3: values 0..7 → 1+3=4 bits; 8..23 → 3+3=6 bits.
+        for n in 0..8u32 {
+            assert_eq!(ExpGolombCodec::value_length(3, n), 4);
+        }
+        for n in 8..24u32 {
+            assert_eq!(ExpGolombCodec::value_length(3, n), 6);
+        }
+    }
+
+    #[test]
+    fn value_lengths_match_encoder() {
+        for k in 0..=8u32 {
+            let codec = ExpGolombCodec::new(k);
+            for n in 0..=255u32 {
+                let mut w = BitWriter::new();
+                codec.encode_value(n, &mut w);
+                assert_eq!(
+                    w.bit_len(),
+                    ExpGolombCodec::value_length(k, n) as u64,
+                    "k={k} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_symbols_roundtrip_all_orders() {
+        for k in [0u32, 1, 3, 5, 8] {
+            let codec = ExpGolombCodec::new(k);
+            let symbols: Vec<u8> = (0..=255).collect();
+            let enc = codec.encode_to_vec(&symbols);
+            assert_eq!(
+                codec.decode_from_slice(&enc, 256).unwrap(),
+                symbols,
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn ranked_roundtrip() {
+        let mut rank = [0u8; 256];
+        for i in 0..256 {
+            rank[i] = i.wrapping_mul(37) as u8; // a permutation of 0..=255
+        }
+        let codec = ExpGolombCodec::with_ranking(2, &rank);
+        let symbols: Vec<u8> = (0..=255).rev().collect();
+        let enc = codec.encode_to_vec(&symbols);
+        assert_eq!(codec.decode_from_slice(&enc, 256).unwrap(), symbols);
+    }
+
+    #[test]
+    fn truncated_errors() {
+        let codec = ExpGolombCodec::new(0);
+        let enc = codec.encode_to_vec(&[255u8; 3]);
+        assert!(codec
+            .decode_from_slice(&enc[..enc.len() - 2], 3)
+            .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "pointless")]
+    fn rejects_excessive_order() {
+        ExpGolombCodec::new(9);
+    }
+
+    #[test]
+    fn prop_roundtrip_k0() {
+        testutil::roundtrip_property(&ExpGolombCodec::new(0));
+    }
+
+    #[test]
+    fn prop_roundtrip_k3() {
+        testutil::roundtrip_property(&ExpGolombCodec::new(3));
+    }
+
+    #[test]
+    fn prop_roundtrip_k8() {
+        testutil::roundtrip_property(&ExpGolombCodec::new(8));
+    }
+}

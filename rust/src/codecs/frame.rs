@@ -1,0 +1,345 @@
+//! Self-describing compressed frame container.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "QLF1" | codec_tag u8 | reserved u8 | n_symbols u64 |
+//! header_len u32 | header bytes… | payload bits…
+//! ```
+//! The header carries whatever tables the codec needs (Huffman code
+//! lengths, QLC scheme + rank LUT, EG order…), so a frame decodes
+//! without out-of-band state.  Used by the CLI (`qlc compress` /
+//! `decompress`) and as the wire format of the collective transport.
+
+use super::elias::{EliasCodec, EliasKind};
+use super::expgolomb::ExpGolombCodec;
+use super::huffman::HuffmanCodec;
+use super::qlc::{self, QlcCodec};
+use super::raw::RawCodec;
+use super::{Codec, CodecError};
+use crate::stats::Histogram;
+
+pub const MAGIC: [u8; 4] = *b"QLF1";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Tag {
+    Raw = 0,
+    Huffman = 1,
+    Qlc = 2,
+    Gamma = 3,
+    Delta = 4,
+    Omega = 5,
+    ExpGolomb = 6,
+}
+
+impl Tag {
+    fn from_u8(v: u8) -> Option<Tag> {
+        Some(match v {
+            0 => Tag::Raw,
+            1 => Tag::Huffman,
+            2 => Tag::Qlc,
+            3 => Tag::Gamma,
+            4 => Tag::Delta,
+            5 => Tag::Omega,
+            6 => Tag::ExpGolomb,
+            _ => return None,
+        })
+    }
+}
+
+/// A fully-specified codec instance that knows how to serialize its
+/// tables into a frame header.
+pub enum CodecSpec {
+    Raw,
+    Huffman(HuffmanCodec),
+    Qlc(QlcCodec),
+    Elias(EliasCodec, EliasKind),
+    ExpGolomb(ExpGolombCodec, u32),
+}
+
+impl CodecSpec {
+    /// Factory by codec name, fitting tables to `hist` where needed.
+    /// Names: raw, huffman, qlc (optimized), qlc-t1, qlc-t2,
+    /// elias-gamma, elias-delta, elias-omega, eg0…eg8.
+    pub fn by_name(name: &str, hist: &Histogram) -> Result<CodecSpec, String> {
+        Ok(match name {
+            "raw" => CodecSpec::Raw,
+            "huffman" => CodecSpec::Huffman(HuffmanCodec::from_histogram(hist)),
+            "qlc" => {
+                let pmf = hist.pmf();
+                let scheme = qlc::optimize_scheme(&pmf.sorted_desc());
+                CodecSpec::Qlc(QlcCodec::from_pmf(scheme, &pmf))
+            }
+            "qlc-t1" => CodecSpec::Qlc(QlcCodec::from_pmf(
+                qlc::AreaScheme::table1(),
+                &hist.pmf(),
+            )),
+            "qlc-t2" => CodecSpec::Qlc(QlcCodec::from_pmf(
+                qlc::AreaScheme::table2(),
+                &hist.pmf(),
+            )),
+            "elias-gamma" => {
+                CodecSpec::Elias(EliasCodec::new(EliasKind::Gamma), EliasKind::Gamma)
+            }
+            "elias-delta" => {
+                CodecSpec::Elias(EliasCodec::new(EliasKind::Delta), EliasKind::Delta)
+            }
+            "elias-omega" => {
+                CodecSpec::Elias(EliasCodec::new(EliasKind::Omega), EliasKind::Omega)
+            }
+            _ => {
+                if let Some(kstr) = name.strip_prefix("eg") {
+                    let k: u32 = kstr
+                        .parse()
+                        .map_err(|_| format!("bad EG order in '{name}'"))?;
+                    if k > 8 {
+                        return Err(format!("EG order {k} > 8"));
+                    }
+                    CodecSpec::ExpGolomb(ExpGolombCodec::new(k), k)
+                } else {
+                    return Err(format!("unknown codec '{name}'"));
+                }
+            }
+        })
+    }
+
+    /// All codec names usable with [`CodecSpec::by_name`].
+    pub fn known_names() -> Vec<&'static str> {
+        vec![
+            "raw", "huffman", "qlc", "qlc-t1", "qlc-t2", "elias-gamma",
+            "elias-delta", "elias-omega", "eg0", "eg3",
+        ]
+    }
+
+    pub fn codec(&self) -> &dyn Codec {
+        match self {
+            CodecSpec::Raw => &RawCodec,
+            CodecSpec::Huffman(c) => c,
+            CodecSpec::Qlc(c) => c,
+            CodecSpec::Elias(c, _) => c,
+            CodecSpec::ExpGolomb(c, _) => c,
+        }
+    }
+
+    fn tag(&self) -> Tag {
+        match self {
+            CodecSpec::Raw => Tag::Raw,
+            CodecSpec::Huffman(_) => Tag::Huffman,
+            CodecSpec::Qlc(_) => Tag::Qlc,
+            CodecSpec::Elias(_, EliasKind::Gamma) => Tag::Gamma,
+            CodecSpec::Elias(_, EliasKind::Delta) => Tag::Delta,
+            CodecSpec::Elias(_, EliasKind::Omega) => Tag::Omega,
+            CodecSpec::ExpGolomb(..) => Tag::ExpGolomb,
+        }
+    }
+
+    fn header(&self) -> Vec<u8> {
+        match self {
+            CodecSpec::Raw | CodecSpec::Elias(..) => Vec::new(),
+            CodecSpec::Huffman(c) => {
+                c.code_lengths().iter().map(|&l| l as u8).collect()
+            }
+            CodecSpec::Qlc(c) => qlc::serde::to_bytes(c),
+            CodecSpec::ExpGolomb(_, k) => vec![*k as u8],
+        }
+    }
+
+    fn from_header(tag: Tag, header: &[u8]) -> Result<CodecSpec, CodecError> {
+        let bad = |msg: String| CodecError::BadHeader(msg);
+        Ok(match tag {
+            Tag::Raw => CodecSpec::Raw,
+            Tag::Gamma => {
+                CodecSpec::Elias(EliasCodec::new(EliasKind::Gamma), EliasKind::Gamma)
+            }
+            Tag::Delta => {
+                CodecSpec::Elias(EliasCodec::new(EliasKind::Delta), EliasKind::Delta)
+            }
+            Tag::Omega => {
+                CodecSpec::Elias(EliasCodec::new(EliasKind::Omega), EliasKind::Omega)
+            }
+            Tag::Huffman => {
+                if header.len() != 256 {
+                    return Err(bad(format!(
+                        "huffman header {} bytes",
+                        header.len()
+                    )));
+                }
+                let mut lengths = [0u32; 256];
+                for (l, &b) in lengths.iter_mut().zip(header) {
+                    *l = b as u32;
+                }
+                CodecSpec::Huffman(HuffmanCodec::from_lengths(&lengths)?)
+            }
+            Tag::Qlc => CodecSpec::Qlc(
+                qlc::serde::from_bytes(header, "qlc").map_err(bad)?,
+            ),
+            Tag::ExpGolomb => {
+                if header.len() != 1 || header[0] > 8 {
+                    return Err(bad("bad EG header".into()));
+                }
+                CodecSpec::ExpGolomb(
+                    ExpGolombCodec::new(header[0] as u32),
+                    header[0] as u32,
+                )
+            }
+        })
+    }
+}
+
+/// Compress `symbols` into a self-describing frame.
+pub fn compress(spec: &CodecSpec, symbols: &[u8]) -> Vec<u8> {
+    let header = spec.header();
+    let payload = spec.codec().encode_to_vec(symbols);
+    let mut out =
+        Vec::with_capacity(4 + 2 + 8 + 4 + header.len() + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(spec.tag() as u8);
+    out.push(0); // reserved
+    out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(&header);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decompress a frame produced by [`compress`].
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>, CodecError> {
+    let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
+    if data.len() < 18 {
+        return Err(bad("frame too short"));
+    }
+    if data[0..4] != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    let tag = Tag::from_u8(data[4]).ok_or_else(|| bad("unknown codec tag"))?;
+    let n = u64::from_le_bytes(data[6..14].try_into().unwrap()) as usize;
+    let hlen = u32::from_le_bytes(data[14..18].try_into().unwrap()) as usize;
+    if data.len() < 18 + hlen {
+        return Err(bad("truncated header"));
+    }
+    let header = &data[18..18 + hlen];
+    let payload = &data[18 + hlen..];
+    // Every code is ≥ 1 bit, so a frame that declares more symbols than
+    // payload bits is corrupt.  (Without this bound a hostile header
+    // could force a huge allocation before the first decode error.)
+    if n > payload.len().saturating_mul(8) {
+        return Err(bad("declared symbol count exceeds payload bits"));
+    }
+    let spec = CodecSpec::from_header(tag, header)?;
+    spec.codec().decode_from_slice(payload, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn skewed_symbols(n: usize, seed: u64) -> Vec<u8> {
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-0.025 * i as f64).exp();
+        }
+        let alias = AliasTable::new(&p);
+        let mut rng = Rng::new(seed);
+        alias.sample_many(&mut rng, n)
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_through_frames() {
+        let symbols = skewed_symbols(20_000, 1);
+        let hist = Histogram::from_symbols(&symbols);
+        for name in CodecSpec::known_names() {
+            let spec = CodecSpec::by_name(name, &hist).unwrap();
+            let frame = compress(&spec, &symbols);
+            let back = decompress(&frame).unwrap();
+            assert_eq!(back, symbols, "codec {name}");
+        }
+    }
+
+    #[test]
+    fn frames_are_self_describing() {
+        // Decode must not need the original histogram.
+        let symbols = skewed_symbols(5_000, 2);
+        let hist = Histogram::from_symbols(&symbols);
+        let spec = CodecSpec::by_name("qlc", &hist).unwrap();
+        let frame = compress(&spec, &symbols);
+        drop(spec);
+        drop(hist);
+        assert_eq!(decompress(&frame).unwrap(), symbols);
+    }
+
+    #[test]
+    fn compressed_smaller_than_raw_for_skewed_data() {
+        let symbols = skewed_symbols(50_000, 3);
+        let hist = Histogram::from_symbols(&symbols);
+        let raw = compress(&CodecSpec::Raw, &symbols).len();
+        for name in ["huffman", "qlc", "qlc-t1"] {
+            let spec = CodecSpec::by_name(name, &hist).unwrap();
+            let framed = compress(&spec, &symbols).len();
+            assert!(framed < raw, "{name}: {framed} !< {raw}");
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let symbols = skewed_symbols(1000, 4);
+        let hist = Histogram::from_symbols(&symbols);
+        let spec = CodecSpec::by_name("huffman", &hist).unwrap();
+        let frame = compress(&spec, &symbols);
+
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        assert!(matches!(decompress(&bad), Err(CodecError::BadHeader(_))));
+
+        let mut bad = frame.clone();
+        bad[4] = 200; // unknown tag
+        assert!(decompress(&bad).is_err());
+
+        let bad = &frame[..10];
+        assert!(decompress(bad).is_err());
+
+        // Truncated payload.
+        let bad = &frame[..frame.len() - 10];
+        assert!(decompress(bad).is_err());
+    }
+
+    #[test]
+    fn unknown_codec_name_errors() {
+        let hist = Histogram::from_symbols(&[1, 2, 3]);
+        assert!(CodecSpec::by_name("zstd", &hist).is_err());
+        assert!(CodecSpec::by_name("eg99", &hist).is_err());
+    }
+
+    #[test]
+    fn empty_input_roundtrips() {
+        let hist = Histogram::from_symbols(&[0]);
+        for name in ["raw", "huffman", "qlc-t1", "elias-gamma", "eg0"] {
+            let spec = CodecSpec::by_name(name, &hist).unwrap();
+            let frame = compress(&spec, &[]);
+            assert_eq!(decompress(&frame).unwrap(), Vec::<u8>::new(), "{name}");
+        }
+    }
+
+    #[test]
+    fn prop_frame_roundtrip_random_data() {
+        prop::check("frame roundtrip", prop::Config {
+            cases: 48, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size);
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = ["raw", "huffman", "qlc", "elias-delta", "eg2"];
+            let name = names[rng.below(names.len() as u64) as usize];
+            let spec = CodecSpec::by_name(name, &hist)
+                .map_err(|e| e.to_string())?;
+            let frame = compress(&spec, &symbols);
+            let back = decompress(&frame).map_err(|e| e.to_string())?;
+            if back != symbols {
+                return Err(format!("{name} roundtrip"));
+            }
+            Ok(())
+        });
+    }
+}

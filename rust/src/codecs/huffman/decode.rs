@@ -1,0 +1,400 @@
+//! Huffman decoders: the bit-serial tree walk (the hardware baseline
+//! the paper criticizes) and a multi-level table decoder (fast software
+//! path).
+
+use super::build::CodeBook;
+use crate::bitstream::BitReader;
+use crate::codecs::CodecError;
+
+// ---------------------------------------------------------------------------
+// Bit-serial tree decoder
+
+/// Explicit binary decode tree.  `nodes[i] = [left, right]`; values
+/// ≥ 0x100 encode `symbol + 0x100` leaves, `u32::MAX` is an invalid
+/// branch.  Decoding walks one bit at a time — this is the behaviour
+/// (and the latency model) of a serial hardware Huffman decoder.
+#[derive(Clone, Debug)]
+pub struct TreeDecoder {
+    nodes: Vec<[u32; 2]>,
+}
+
+const INVALID: u32 = u32::MAX;
+const LEAF_BASE: u32 = 0x100;
+
+impl TreeDecoder {
+    pub fn new(book: &CodeBook) -> Self {
+        let mut nodes: Vec<[u32; 2]> = vec![[INVALID, INVALID]];
+        for s in 0..256usize {
+            let (code, len) = book.code(s as u8);
+            let mut node = 0usize;
+            for i in (0..len).rev() {
+                let bit = ((code >> i) & 1) as usize;
+                if i == 0 {
+                    nodes[node][bit] = LEAF_BASE + s as u32;
+                } else {
+                    let next = nodes[node][bit];
+                    let next = if next == INVALID {
+                        nodes.push([INVALID, INVALID]);
+                        let id = (nodes.len() - 1) as u32;
+                        nodes[node][bit] = id;
+                        id
+                    } else {
+                        next
+                    };
+                    debug_assert!(next < LEAF_BASE || next == INVALID);
+                    node = next as usize;
+                }
+            }
+        }
+        TreeDecoder { nodes }
+    }
+
+    /// Number of internal nodes (hardware storage proxy; see crate::hw).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Decode one symbol, one bit at a time.
+    #[inline]
+    pub fn decode_one(
+        &self,
+        reader: &mut BitReader,
+    ) -> Result<u8, CodecError> {
+        let mut node = 0u32;
+        loop {
+            let bit = reader
+                .read_bit()
+                .map_err(|_| CodecError::UnexpectedEof)?;
+            let next = self.nodes[node as usize][bit as usize];
+            if next == INVALID {
+                return Err(CodecError::InvalidCode {
+                    bit_offset: reader.bits_consumed(),
+                });
+            }
+            if next >= LEAF_BASE {
+                return Ok((next - LEAF_BASE) as u8);
+            }
+            node = next;
+        }
+    }
+
+    pub fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.decode_one(reader)?);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-level table decoder
+
+/// Root-table width in bits.  11 covers most realistic codes in one
+/// lookup (paper FFN1 codes span 6–18 bits) while keeping the root
+/// table at 2 KiB entries.
+pub const ROOT_BITS: u32 = 11;
+
+/// Entry: packed `(symbol, length)` for short codes, or a subtable
+/// pointer for codes longer than the level width.
+#[derive(Clone, Copy, Debug)]
+enum Entry {
+    /// Code fully resolved: symbol + total code length (for this level
+    /// chain).
+    Leaf { symbol: u8, len: u8 },
+    /// Index of a subtable covering the next level's bits.
+    Sub { table: u32 },
+    Invalid,
+}
+
+/// Multi-level LUT decoder: peek ROOT_BITS, one lookup resolves any
+/// code ≤ ROOT_BITS; longer codes chain through subtables.
+#[derive(Clone, Debug)]
+pub struct TableDecoder {
+    /// Table 0 is the root (2^ROOT_BITS entries); subtables follow.
+    entries: Vec<Entry>,
+    /// (offset, width_bits) of each table in `entries`.
+    tables: Vec<(usize, u32)>,
+    /// Longest code in the book (bulk-decode budget guard).
+    max_len: u32,
+}
+
+impl TableDecoder {
+    pub fn new(book: &CodeBook) -> Self {
+        let mut dec = TableDecoder {
+            entries: Vec::new(),
+            tables: Vec::new(),
+            max_len: book.max_length(),
+        };
+        dec.alloc_table(ROOT_BITS);
+        for s in 0..256usize {
+            let (code, len) = book.code(s as u8);
+            dec.insert(0, code, len, len, s as u8);
+        }
+        dec
+    }
+
+    fn alloc_table(&mut self, bits: u32) -> usize {
+        let offset = self.entries.len();
+        self.entries
+            .extend(std::iter::repeat(Entry::Invalid).take(1usize << bits));
+        self.tables.push((offset, bits));
+        self.tables.len() - 1
+    }
+
+    /// Insert `code` (remaining `len` bits of a `total`-bit code) into
+    /// `table`.
+    fn insert(&mut self, table: usize, code: u64, len: u32, total: u32, symbol: u8) {
+        let (offset, width) = self.tables[table];
+        if len <= width {
+            // Fill all entries whose top `len` bits match the code.
+            let base = (code << (width - len)) as usize;
+            for fill in 0..(1usize << (width - len)) {
+                self.entries[offset + base + fill] =
+                    Entry::Leaf { symbol, len: len as u8 };
+            }
+        } else {
+            // Descend into (or create) a subtable for this prefix.
+            let prefix = (code >> (len - width)) as usize;
+            let sub = match self.entries[offset + prefix] {
+                Entry::Sub { table } => table as usize,
+                Entry::Invalid => {
+                    let bits = (len - width).min(ROOT_BITS);
+                    let sub = self.alloc_table(bits);
+                    let _ = bits;
+                    self.entries[offset + prefix] =
+                        Entry::Sub { table: sub as u32 };
+                    sub
+                }
+                Entry::Leaf { .. } => {
+                    unreachable!("prefix code collision: book not prefix-free")
+                }
+            };
+            // Subtable width may need to grow: rebuild is complex, so we
+            // size subtables at min(remaining, ROOT_BITS) on first touch
+            // and keep descending — codes sharing a prefix descend the
+            // same chain.
+            let rest = code & ((1u64 << (len - width)) - 1);
+            self.insert(sub, rest, len - width, total, symbol);
+        }
+    }
+
+    /// Total entries across all tables (hardware storage proxy).
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[inline]
+    pub fn decode_one(
+        &self,
+        reader: &mut BitReader,
+    ) -> Result<u8, CodecError> {
+        let mut table = 0usize;
+        loop {
+            let (offset, width) = self.tables[table];
+            let idx = reader.peek(width) as usize;
+            match self.entries[offset + idx] {
+                Entry::Leaf { symbol, len } => {
+                    if reader.remaining_bits() < len as u64 {
+                        return Err(CodecError::UnexpectedEof);
+                    }
+                    reader.skip(len as u32);
+                    return Ok(symbol);
+                }
+                Entry::Sub { table: sub } => {
+                    if reader.remaining_bits() < width as u64 {
+                        return Err(CodecError::UnexpectedEof);
+                    }
+                    reader.skip(width);
+                    table = sub as usize;
+                }
+                Entry::Invalid => {
+                    return Err(CodecError::InvalidCode {
+                        bit_offset: reader.bits_consumed(),
+                    });
+                }
+            }
+        }
+    }
+
+    pub fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        out.reserve(n);
+        let (root_off, root_width) = self.tables[0];
+        let root_shift = 64 - root_width;
+        let mut i = 0usize;
+        while i < n {
+            // Bulk path: while the staging buffer still holds at least
+            // one whole worst-case code, root-level leaves resolve with
+            // no refill/EOF checks.  (`word_buffered`'s sub-`avail`
+            // bits are zero by construction, so short buffers index the
+            // leaf-filled root slots correctly.)
+            let mut budget = reader.buffered_bits();
+            if budget < self.max_len {
+                out.push(self.decode_one(reader)?);
+                i += 1;
+                continue;
+            }
+            while i < n && budget >= self.max_len {
+                let idx = (reader.word_buffered() >> root_shift) as usize;
+                match self.entries[root_off + idx] {
+                    Entry::Leaf { symbol, len } => {
+                        reader.skip(len as u32);
+                        budget -= len as u32;
+                        out.push(symbol);
+                        i += 1;
+                    }
+                    Entry::Sub { .. } => {
+                        out.push(self.decode_one(reader)?);
+                        i += 1;
+                        budget = 0; // force re-refill
+                    }
+                    Entry::Invalid => {
+                        return Err(CodecError::InvalidCode {
+                            bit_offset: reader.bits_consumed(),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::BitWriter;
+    use crate::stats::Histogram;
+    use crate::util::prop;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn encode(book: &CodeBook, symbols: &[u8]) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        for &s in symbols {
+            let (c, l) = book.code(s);
+            w.write_bits(c, l);
+        }
+        w.finish()
+    }
+
+    fn skewed_book(alpha: f64) -> CodeBook {
+        let mut freqs = [0u64; 256];
+        for (i, f) in freqs.iter_mut().enumerate() {
+            *f = ((1e9 / (1.0 + i as f64).powf(alpha)) as u64).max(1);
+        }
+        CodeBook::build(&freqs, 48)
+    }
+
+    #[test]
+    fn tree_and_table_agree() {
+        let book = skewed_book(1.3);
+        let tree = TreeDecoder::new(&book);
+        let table = TableDecoder::new(&book);
+        let mut rng = Rng::new(5);
+        let symbols: Vec<u8> =
+            (0..10_000).map(|_| rng.below(256) as u8).collect();
+        let data = encode(&book, &symbols);
+        let mut out_tree = Vec::new();
+        tree.decode(&mut BitReader::new(&data), symbols.len(), &mut out_tree)
+            .unwrap();
+        let mut out_table = Vec::new();
+        table
+            .decode(&mut BitReader::new(&data), symbols.len(), &mut out_table)
+            .unwrap();
+        assert_eq!(out_tree, symbols);
+        assert_eq!(out_table, symbols);
+    }
+
+    #[test]
+    fn deep_codes_chain_subtables() {
+        // Fibonacci weights: depth ≫ ROOT_BITS forces subtable chains.
+        let mut freqs = [0u64; 256];
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a.saturating_add(b);
+            a = b;
+            b = c;
+        }
+        let book = CodeBook::build(&freqs, 48);
+        assert!(book.max_length() > ROOT_BITS);
+        let table = TableDecoder::new(&book);
+        assert!(table.tables.len() > 1, "must have subtables");
+        // Roundtrip every symbol including the deepest.
+        let symbols: Vec<u8> = (0..=255).collect();
+        let data = encode(&book, &symbols);
+        let mut out = Vec::new();
+        table
+            .decode(&mut BitReader::new(&data), 256, &mut out)
+            .unwrap();
+        assert_eq!(out, symbols);
+    }
+
+    #[test]
+    fn tree_node_count_reasonable() {
+        let book = skewed_book(1.0);
+        let tree = TreeDecoder::new(&book);
+        // A full binary tree with 256 leaves has 255 internal nodes; the
+        // canonical tree may be larger only if incomplete (it is not).
+        assert_eq!(tree.node_count(), 255);
+    }
+
+    #[test]
+    fn truncated_errors_both() {
+        let book = skewed_book(1.1);
+        let symbols = vec![255u8; 100];
+        let data = encode(&book, &symbols);
+        let cut = &data[..data.len() - 8];
+        let tree = TreeDecoder::new(&book);
+        let table = TableDecoder::new(&book);
+        let mut out = Vec::new();
+        assert!(tree
+            .decode(&mut BitReader::new(cut), 100, &mut out)
+            .is_err());
+        out.clear();
+        assert!(table
+            .decode(&mut BitReader::new(cut), 100, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn prop_decoders_agree() {
+        prop::check("tree==table", prop::Config { cases: 48, ..Default::default() },
+                    |rng, size| {
+            let mut freqs = [0u64; 256];
+            for f in freqs.iter_mut() {
+                *f = 1 + rng.below(10_000);
+            }
+            let book = CodeBook::build(&freqs, 48);
+            let hist = Histogram { counts: freqs };
+            let table_pmf: Vec<f64> =
+                hist.pmf().p.to_vec();
+            let alias = AliasTable::new(&table_pmf);
+            let symbols = alias.sample_many(rng, size.min(2000));
+            let data = encode(&book, &symbols);
+            let tree = TreeDecoder::new(&book);
+            let tbl = TableDecoder::new(&book);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            tree.decode(&mut BitReader::new(&data), symbols.len(), &mut a)
+                .map_err(|e| e.to_string())?;
+            tbl.decode(&mut BitReader::new(&data), symbols.len(), &mut b)
+                .map_err(|e| e.to_string())?;
+            if a != symbols || b != symbols {
+                return Err("decoder mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,257 @@
+//! Canonical Huffman coding — the paper's optimal-baseline codec.
+//!
+//! * [`build`] — optimal length-limited code construction
+//!   (package-merge).  Unlimited-depth Huffman is the special case of a
+//!   generous limit; the default limit of 48 bits never binds on
+//!   realistic tensor statistics (the paper's deepest observed code is
+//!   39 bits) and keeps codes in one `u64`.
+//! * [`decode`] — two decoders:
+//!   [`decode::TreeDecoder`], the bit-serial tree walk the paper calls
+//!   "slow and bit sequential" (it is also the reference model for the
+//!   hardware FSM in `crate::hw`), and [`decode::TableDecoder`], a
+//!   multi-level LUT decoder (the fast software path).
+
+pub mod build;
+pub mod decode;
+
+use super::{Codec, CodecError};
+use crate::bitstream::{BitReader, BitWriter};
+use crate::stats::Histogram;
+use build::CodeBook;
+use decode::TableDecoder;
+
+/// Default depth limit: never binds in practice, keeps codes in u64.
+pub const DEFAULT_LIMIT: u32 = 48;
+
+/// Canonical Huffman codec for a fixed histogram.
+#[derive(Clone, Debug)]
+pub struct HuffmanCodec {
+    book: CodeBook,
+    decoder: TableDecoder,
+}
+
+impl HuffmanCodec {
+    /// Build from symbol counts.  Symbols with zero count are smoothed
+    /// to count 1 so the codebook covers the whole alphabet (the paper's
+    /// encoder LUT has all 256 entries).
+    pub fn from_histogram(hist: &Histogram) -> Self {
+        Self::from_histogram_limited(hist, DEFAULT_LIMIT)
+    }
+
+    pub fn from_histogram_limited(hist: &Histogram, limit: u32) -> Self {
+        let mut freqs = [0u64; 256];
+        for i in 0..256 {
+            freqs[i] = hist.counts[i].max(1);
+        }
+        let book = CodeBook::build(&freqs, limit);
+        let decoder = TableDecoder::new(&book);
+        HuffmanCodec { book, decoder }
+    }
+
+    /// Build directly from known code lengths (frame decode path).
+    pub fn from_lengths(lengths: &[u32; 256]) -> Result<Self, CodecError> {
+        let book = CodeBook::from_lengths(lengths)
+            .map_err(CodecError::BadHeader)?;
+        let decoder = TableDecoder::new(&book);
+        Ok(HuffmanCodec { book, decoder })
+    }
+
+    pub fn book(&self) -> &CodeBook {
+        &self.book
+    }
+
+    pub fn max_length(&self) -> u32 {
+        self.book.max_length()
+    }
+
+    pub fn min_length(&self) -> u32 {
+        self.book.min_length()
+    }
+}
+
+impl Codec for HuffmanCodec {
+    fn name(&self) -> String {
+        "huffman".to_string()
+    }
+
+    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+        for &s in symbols {
+            let (code, len) = self.book.code(s);
+            out.write_bits(code, len);
+        }
+    }
+
+    fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        self.decoder.decode(reader, n, out)
+    }
+
+    fn code_lengths(&self) -> [u32; 256] {
+        *self.book.lengths()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil;
+    use crate::stats::Pmf;
+    use crate::util::prop;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn skewed_hist(seed: u64, n: usize) -> (Histogram, Vec<u8>) {
+        // Zipf-ish PMF over 256 symbols.
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = 1.0 / (1.0 + i as f64).powf(1.2);
+        }
+        let table = AliasTable::new(&p);
+        let mut rng = Rng::new(seed);
+        let symbols = table.sample_many(&mut rng, n);
+        (Histogram::from_symbols(&symbols), symbols)
+    }
+
+    #[test]
+    fn roundtrip_skewed() {
+        let (hist, symbols) = skewed_hist(1, 50_000);
+        let codec = HuffmanCodec::from_histogram(&hist);
+        let enc = codec.encode_to_vec(&symbols);
+        assert!(enc.len() < symbols.len()); // actually compresses
+        assert_eq!(
+            codec.decode_from_slice(&enc, symbols.len()).unwrap(),
+            symbols
+        );
+    }
+
+    #[test]
+    fn beats_entropy_bound_within_one_bit() {
+        let (hist, _) = skewed_hist(2, 100_000);
+        let codec = HuffmanCodec::from_histogram(&hist);
+        let pmf = hist.pmf();
+        let h = pmf.entropy();
+        let el = pmf.expected_length(&codec.code_lengths());
+        assert!(el >= h - 1e-9, "expected length below entropy: {el} < {h}");
+        assert!(el < h + 1.0, "Huffman within 1 bit of entropy: {el} vs {h}");
+    }
+
+    #[test]
+    fn uniform_gives_8bit_codes() {
+        let mut hist = Histogram::new();
+        hist.counts = [100; 256];
+        let codec = HuffmanCodec::from_histogram(&hist);
+        assert!(codec.code_lengths().iter().all(|&l| l == 8));
+    }
+
+    #[test]
+    fn covers_unseen_symbols() {
+        // Data contains only symbol 3, but any symbol must roundtrip
+        // (smoothing gives everyone a code).
+        let hist = Histogram::from_symbols(&[3u8; 1000]);
+        let codec = HuffmanCodec::from_histogram(&hist);
+        let all: Vec<u8> = (0..=255).collect();
+        let enc = codec.encode_to_vec(&all);
+        assert_eq!(codec.decode_from_slice(&enc, 256).unwrap(), all);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        // Fibonacci-ish counts force deep trees without a limit.
+        let mut hist = Histogram::new();
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for i in 0..256 {
+            hist.counts[i] = a;
+            let c = a.saturating_add(b);
+            a = b;
+            b = c;
+        }
+        for limit in [12u32, 16, 20] {
+            let codec = HuffmanCodec::from_histogram_limited(&hist, limit);
+            assert!(codec.max_length() <= limit, "limit {limit}");
+            // Still lossless.
+            let data: Vec<u8> = (0..=255).collect();
+            let enc = codec.encode_to_vec(&data);
+            assert_eq!(codec.decode_from_slice(&enc, 256).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn from_lengths_roundtrips_codebook() {
+        let (hist, symbols) = skewed_hist(3, 20_000);
+        let codec = HuffmanCodec::from_histogram(&hist);
+        let codec2 = HuffmanCodec::from_lengths(&codec.code_lengths()).unwrap();
+        let enc = codec.encode_to_vec(&symbols);
+        assert_eq!(
+            codec2.decode_from_slice(&enc, symbols.len()).unwrap(),
+            symbols
+        );
+    }
+
+    #[test]
+    fn from_lengths_rejects_overfull_kraft() {
+        let lengths = [1u32; 256]; // grossly over-subscribed
+        assert!(HuffmanCodec::from_lengths(&lengths).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let (hist, symbols) = skewed_hist(4, 1000);
+        let codec = HuffmanCodec::from_histogram(&hist);
+        let enc = codec.encode_to_vec(&symbols);
+        assert!(codec
+            .decode_from_slice(&enc[..enc.len() / 2], symbols.len())
+            .is_err());
+    }
+
+    #[test]
+    fn expected_compressibility_on_paper_like_pmf() {
+        // A smooth exponential-rank PMF with entropy ≈ 6.7 bits: Huffman
+        // compressibility should land within a point of ideal, as in
+        // the paper (15.9% vs ideal 16.3%).
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-0.022 * i as f64).exp();
+        }
+        let pmf = Pmf::from_slice(&p);
+        let mut hist = Histogram::new();
+        for i in 0..256 {
+            hist.counts[i] = (pmf.p[i] * 1e9) as u64;
+        }
+        let codec = HuffmanCodec::from_histogram(&hist);
+        let ideal = pmf.ideal_compressibility();
+        let achieved = pmf.compressibility(&codec.code_lengths());
+        assert!(achieved <= ideal + 1e-9);
+        assert!(achieved > ideal - 0.01, "{achieved} vs ideal {ideal}");
+    }
+
+    #[test]
+    fn prop_roundtrip_random_histograms() {
+        prop::check("huffman random hist", Default::default(), |rng, size| {
+            let data = prop::arb_bytes(rng, size.max(4));
+            if data.is_empty() {
+                return Ok(());
+            }
+            let hist = Histogram::from_symbols(&data);
+            let codec = HuffmanCodec::from_histogram(&hist);
+            let enc = codec.encode_to_vec(&data);
+            let dec = codec
+                .decode_from_slice(&enc, data.len())
+                .map_err(|e| e.to_string())?;
+            if dec != data {
+                return Err("roundtrip".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_trait() {
+        let (hist, _) = skewed_hist(5, 10_000);
+        let codec = HuffmanCodec::from_histogram(&hist);
+        testutil::roundtrip_property(&codec);
+    }
+}

@@ -1,0 +1,134 @@
+//! Lossless entropy codecs over the 256-symbol e4m3 alphabet.
+//!
+//! * [`raw`] — identity baseline (8 bits/symbol).
+//! * [`elias`] — Elias gamma/delta/omega universal codes (paper §1).
+//! * [`expgolomb`] — order-k Exponential-Golomb (paper §1).
+//! * [`huffman`] — canonical Huffman, the paper's optimal baseline.
+//! * [`qlc`] — Quad Length Codes, the paper's contribution.
+//!
+//! Every codec implements [`Codec`]: payload-level encode/decode over a
+//! shared [`BitWriter`]/[`BitReader`], plus per-symbol code lengths for
+//! analytic compressibility (the paper's tables are expectations over
+//! PMFs, not file sizes).  [`frame`] adds a self-describing container
+//! (codec id + tables + symbol count) for the CLI and the collective
+//! transport.
+
+pub mod adaptive;
+pub mod elias;
+pub mod expgolomb;
+pub mod frame;
+pub mod huffman;
+pub mod qlc;
+pub mod raw;
+pub mod zstd_baseline;
+
+use crate::bitstream::{BitReader, BitWriter};
+
+/// Errors surfaced while decoding a (possibly corrupt) stream.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// Bit stream ended before `n` symbols were decoded.
+    UnexpectedEof,
+    /// A code pattern that no symbol maps to.
+    InvalidCode { bit_offset: u64 },
+    /// Malformed or unsupported frame/table header.
+    BadHeader(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::UnexpectedEof => write!(f, "unexpected end of stream"),
+            CodecError::InvalidCode { bit_offset } => {
+                write!(f, "invalid code at bit {bit_offset}")
+            }
+            CodecError::BadHeader(msg) => write!(f, "bad header: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// A lossless symbol codec. Implementations must satisfy, for all
+/// symbol slices `s`: `decode(encode(s), s.len()) == s` (the roundtrip
+/// property every codec's proptest asserts).
+pub trait Codec: Send + Sync {
+    /// Short identifier, e.g. "huffman", "qlc-t1".
+    fn name(&self) -> String;
+
+    /// Append the codes for `symbols` to `out`.
+    fn encode(&self, symbols: &[u8], out: &mut BitWriter);
+
+    /// Decode exactly `n` symbols from `reader` into `out`.
+    fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError>;
+
+    /// Code length in bits for each of the 256 symbols.
+    fn code_lengths(&self) -> [u32; 256];
+
+    /// Convenience: encode to a fresh byte buffer.
+    fn encode_to_vec(&self, symbols: &[u8]) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(symbols.len());
+        self.encode(symbols, &mut w);
+        w.finish()
+    }
+
+    /// Convenience: decode `n` symbols from a byte buffer.
+    fn decode_from_slice(
+        &self,
+        data: &[u8],
+        n: usize,
+    ) -> Result<Vec<u8>, CodecError> {
+        let mut r = BitReader::new(data);
+        let mut out = Vec::with_capacity(n);
+        self.decode(&mut r, n, &mut out)?;
+        Ok(out)
+    }
+
+    /// Exact encoded size in bits for `symbols` (from code lengths).
+    fn encoded_bits(&self, symbols: &[u8]) -> u64 {
+        let lengths = self.code_lengths();
+        symbols.iter().map(|&s| lengths[s as usize] as u64).sum()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared roundtrip property used by every codec's test module.
+    use super::*;
+    use crate::util::prop;
+
+    pub fn roundtrip_property(codec: &dyn Codec) {
+        prop::check(
+            &format!("{} roundtrip", codec.name()),
+            prop::Config { cases: 96, ..Default::default() },
+            |rng, size| {
+                let symbols = prop::arb_bytes(rng, size);
+                let encoded = codec.encode_to_vec(&symbols);
+                let decoded = codec
+                    .decode_from_slice(&encoded, symbols.len())
+                    .map_err(|e| e.to_string())?;
+                if decoded != symbols {
+                    return Err(format!(
+                        "roundtrip mismatch (len {})",
+                        symbols.len()
+                    ));
+                }
+                // encoded_bits must match the writer exactly.
+                let bits = codec.encoded_bits(&symbols);
+                if (bits + 7) / 8 != encoded.len() as u64 {
+                    return Err(format!(
+                        "encoded_bits {} inconsistent with buffer {}",
+                        bits,
+                        encoded.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

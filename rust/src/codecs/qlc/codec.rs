@@ -1,0 +1,403 @@
+//! The QLC encoder/decoder bound to a concrete PMF.
+//!
+//! Construction mirrors the paper §7: sort symbols by decreasing
+//! probability, map to ranks 0..=255, assign each rank the code of its
+//! area (Table 3).  Encoding is one 256-entry LUT lookup; decoding is a
+//! `2^P`-entry prefix table (suffix width + base rank) followed by one
+//! 256-entry LUT (Table 4) — no tree, no bit-serial scan.
+
+use super::scheme::AreaScheme;
+use crate::bitstream::{BitReader, BitWriter};
+use crate::codecs::{Codec, CodecError};
+use crate::stats::Pmf;
+
+#[derive(Clone, Copy, Debug)]
+struct FastEntry {
+    total_len: u32,
+    /// `64 - total_len`: right-shift that drops everything below this
+    /// code in the staging word.
+    word_shift: u32,
+    suffix_mask: u32,
+    base: u32,
+    size: u32,
+}
+
+/// Encoder/decoder LUTs for (scheme, rank order).
+#[derive(Clone, Debug)]
+pub struct QlcCodec {
+    scheme: AreaScheme,
+    /// Paper Table 3: symbol value → full code word.
+    enc_code: [u32; 256],
+    /// … and its length in bits.
+    enc_len: [u8; 256],
+    /// Decode fast path, indexed by prefix: total code length, suffix
+    /// mask and base rank — lets `decode_one` resolve a symbol from a
+    /// single 16-bit peek (EXPERIMENTS.md §Perf).
+    fast_table: Vec<FastEntry>,
+    max_code_bits: u32,
+    /// Paper Table 4: rank (encoded symbol) → output symbol.
+    rank_to_symbol: [u8; 256],
+    /// Inverse: symbol → rank.
+    symbol_to_rank: [u8; 256],
+    label: String,
+}
+
+impl QlcCodec {
+    /// Build from a scheme and a measured PMF (paper §7).
+    pub fn from_pmf(scheme: AreaScheme, pmf: &Pmf) -> Self {
+        Self::from_rank_order(scheme, &pmf.rank_order(), "qlc")
+    }
+
+    /// Build from an explicit rank order (frame decode path; also lets
+    /// tests pin the permutation).
+    pub fn from_rank_order(
+        scheme: AreaScheme,
+        rank_order: &[u8; 256],
+        label: &str,
+    ) -> Self {
+        let mut rank_to_symbol = [0u8; 256];
+        let mut symbol_to_rank = [0u8; 256];
+        let mut seen = [false; 256];
+        for (rank, &sym) in rank_order.iter().enumerate() {
+            assert!(!seen[sym as usize], "rank order is not a permutation");
+            seen[sym as usize] = true;
+            rank_to_symbol[rank] = sym;
+            symbol_to_rank[sym as usize] = rank as u8;
+        }
+
+        let mut enc_code = [0u32; 256];
+        let mut enc_len = [0u8; 256];
+        for rank in 0..256u32 {
+            let area = scheme.area_of_rank(rank);
+            let bits = scheme.areas[area].symbol_bits;
+            let offset = rank - scheme.base_rank(area);
+            let code = ((area as u32) << bits) | offset;
+            let len = scheme.code_length(area);
+            let sym = rank_to_symbol[rank as usize] as usize;
+            enc_code[sym] = code;
+            enc_len[sym] = len as u8;
+        }
+
+        let fast_table: Vec<FastEntry> = (0..scheme.num_areas())
+            .map(|a| FastEntry {
+                total_len: scheme.code_length(a),
+                word_shift: 64 - scheme.code_length(a),
+                suffix_mask: (1u32 << scheme.areas[a].symbol_bits) - 1,
+                base: scheme.base_rank(a),
+                size: scheme.areas[a].size as u32,
+            })
+            .collect();
+        let max_code_bits = (0..scheme.num_areas())
+            .map(|a| scheme.code_length(a))
+            .max()
+            .unwrap();
+
+        QlcCodec {
+            scheme,
+            enc_code,
+            enc_len,
+            fast_table,
+            max_code_bits,
+            rank_to_symbol,
+            symbol_to_rank,
+            label: label.to_string(),
+        }
+    }
+
+    pub fn scheme(&self) -> &AreaScheme {
+        &self.scheme
+    }
+
+    pub fn rank_order(&self) -> &[u8; 256] {
+        &self.rank_to_symbol
+    }
+
+    /// Paper Table 3 rows: (input symbol, mapped rank, code, length).
+    pub fn encoder_table(&self) -> Vec<(u8, u8, u32, u8)> {
+        (0..256usize)
+            .map(|s| {
+                (
+                    s as u8,
+                    self.symbol_to_rank[s],
+                    self.enc_code[s],
+                    self.enc_len[s],
+                )
+            })
+            .collect()
+    }
+
+    /// Paper Table 4 rows: (encoded symbol/rank, output symbol).
+    pub fn decoder_table(&self) -> Vec<(u8, u8)> {
+        (0..256usize)
+            .map(|r| (r as u8, self.rank_to_symbol[r]))
+            .collect()
+    }
+
+    /// Decode one symbol: a single peek covering prefix + longest
+    /// suffix, one table lookup, one skip.  Matches the 2-stage
+    /// hardware pipeline in `crate::hw::QlcModel`.
+    #[inline]
+    pub fn decode_one(&self, reader: &mut BitReader) -> Result<u8, CodecError> {
+        let p = self.scheme.prefix_bits;
+        let w = reader.peek(self.max_code_bits);
+        let area = (w >> (self.max_code_bits - p)) as usize;
+        let e = &self.fast_table[area];
+        let idx = (w >> (self.max_code_bits - e.total_len)) & e.suffix_mask;
+        if reader.remaining_bits() < e.total_len as u64 {
+            return Err(CodecError::UnexpectedEof);
+        }
+        if idx >= e.size {
+            return Err(CodecError::InvalidCode {
+                bit_offset: reader.bits_consumed(),
+            });
+        }
+        reader.skip(e.total_len);
+        Ok(self.rank_to_symbol[(e.base + idx) as usize])
+    }
+}
+
+impl Codec for QlcCodec {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+        for &s in symbols {
+            out.write_bits(
+                self.enc_code[s as usize] as u64,
+                self.enc_len[s as usize] as u32,
+            );
+        }
+    }
+
+    fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        out.reserve(n);
+        let max = self.max_code_bits;
+        let mut i = 0usize;
+        while i < n {
+            // Bulk path: one refill covers ⌊avail/max⌋ symbols with no
+            // further EOF checks (every code is ≤ max bits).
+            let avail = reader.buffered_bits();
+            if avail < max {
+                out.push(self.decode_one(reader)?);
+                i += 1;
+                continue;
+            }
+            let k = ((avail / max) as usize).min(n - i);
+            let prefix_shift = 64 - self.scheme.prefix_bits;
+            // SAFETY: `reserve(n)` above guarantees capacity for all n
+            // symbols; we write exactly `k` and set_len afterwards.
+            let base_len = out.len();
+            let spare = out.spare_capacity_mut();
+            for j in 0..k {
+                let w = reader.word_buffered();
+                let area = (w >> prefix_shift) as usize;
+                let e = &self.fast_table[area];
+                let idx = (w >> e.word_shift) as u32 & e.suffix_mask;
+                if idx >= e.size {
+                    return Err(CodecError::InvalidCode {
+                        bit_offset: reader.bits_consumed(),
+                    });
+                }
+                reader.skip(e.total_len);
+                spare[j].write(self.rank_to_symbol[(e.base + idx) as usize]);
+            }
+            unsafe { out.set_len(base_len + k) };
+            i += k;
+        }
+        Ok(())
+    }
+
+    fn code_lengths(&self) -> [u32; 256] {
+        let mut out = [0u32; 256];
+        for s in 0..256 {
+            out[s] = self.enc_len[s] as u32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil;
+    use crate::stats::Histogram;
+    use crate::util::prop;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn identity_rank() -> [u8; 256] {
+        let mut r = [0u8; 256];
+        for i in 0..256 {
+            r[i] = i as u8;
+        }
+        r
+    }
+
+    fn t1_identity() -> QlcCodec {
+        QlcCodec::from_rank_order(AreaScheme::table1(), &identity_rank(), "qlc-t1")
+    }
+
+    #[test]
+    fn paper_example_decode() {
+        // Paper §7: "if the area code is 100 and the next 3 bits are
+        // 010, then the encoded symbol is 32+2=34".
+        let codec = t1_identity();
+        let mut w = BitWriter::new();
+        w.write_bits(0b100, 3);
+        w.write_bits(0b010, 3);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(codec.decode_one(&mut r).unwrap(), 34);
+    }
+
+    #[test]
+    fn code_structure_matches_table1() {
+        let codec = t1_identity();
+        // Rank 0 → area 0, code 000_000 (6 bits).
+        assert_eq!(codec.enc_code[0], 0);
+        assert_eq!(codec.enc_len[0], 6);
+        // Rank 8 → area 1 code 001_000.
+        assert_eq!(codec.enc_code[8], 0b001_000);
+        // Rank 40 → area 5 (101), offset 0, 7 bits.
+        assert_eq!(codec.enc_code[40], 0b101_0000);
+        assert_eq!(codec.enc_len[40], 7);
+        // Rank 88 → area 7 (111), offset 0, 11 bits.
+        assert_eq!(codec.enc_code[88], 0b111_0000_0000);
+        assert_eq!(codec.enc_len[88], 11);
+        // Rank 255 → area 7 offset 167.
+        assert_eq!(codec.enc_code[255], (0b111 << 8) | 167);
+        assert_eq!(codec.enc_len[255], 11);
+    }
+
+    #[test]
+    fn roundtrip_all_symbols_both_tables() {
+        for scheme in [AreaScheme::table1(), AreaScheme::table2()] {
+            let codec =
+                QlcCodec::from_rank_order(scheme, &identity_rank(), "qlc");
+            let symbols: Vec<u8> = (0..=255).collect();
+            let enc = codec.encode_to_vec(&symbols);
+            assert_eq!(codec.decode_from_slice(&enc, 256).unwrap(), symbols);
+        }
+    }
+
+    #[test]
+    fn rank_mapping_from_pmf() {
+        // Symbol 200 most frequent → rank 0 → 6-bit code; encoder and
+        // decoder tables reflect the paper's Table 3/4 layout.
+        let mut symbols = vec![200u8; 5000];
+        symbols.extend((0..=255u8).cycle().take(2560));
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+        assert_eq!(codec.rank_order()[0], 200);
+        assert_eq!(codec.code_lengths()[200], 6);
+        let enc = codec.encode_to_vec(&symbols);
+        assert_eq!(
+            codec.decode_from_slice(&enc, symbols.len()).unwrap(),
+            symbols
+        );
+        // Tables are mutually inverse.
+        for (rank, sym) in codec.decoder_table() {
+            assert_eq!(codec.encoder_table()[sym as usize].1, rank);
+        }
+    }
+
+    #[test]
+    fn invalid_suffix_detected() {
+        // Area 7 of Table 1 holds 168 symbols; suffix 200 is invalid.
+        let codec = t1_identity();
+        let mut w = BitWriter::new();
+        w.write_bits(0b111, 3);
+        w.write_bits(200, 8);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert!(matches!(
+            codec.decode_one(&mut r),
+            Err(CodecError::InvalidCode { .. })
+        ));
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let codec = t1_identity();
+        let enc = codec.encode_to_vec(&[255u8; 10]);
+        assert!(codec
+            .decode_from_slice(&enc[..enc.len() - 2], 10)
+            .is_err());
+    }
+
+    #[test]
+    fn encoded_bits_exact() {
+        let codec = t1_identity();
+        // 5 rank-0 symbols (6b) + 3 rank-50 (7b) + 2 rank-100 (11b).
+        let symbols = [0u8, 0, 0, 0, 0, 50, 50, 50, 100, 100];
+        assert_eq!(codec.encoded_bits(&symbols), 5 * 6 + 3 * 7 + 2 * 11);
+    }
+
+    #[test]
+    fn compressibility_on_skewed_data_beats_raw() {
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-0.03 * i as f64).exp();
+        }
+        let alias = AliasTable::new(&p);
+        let mut rng = Rng::new(3);
+        let symbols = alias.sample_many(&mut rng, 100_000);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+        let enc = codec.encode_to_vec(&symbols);
+        assert!(
+            (enc.len() as f64) < 0.92 * symbols.len() as f64,
+            "compressed {} of {}",
+            enc.len(),
+            symbols.len()
+        );
+        let dec = codec.decode_from_slice(&enc, symbols.len()).unwrap();
+        assert_eq!(dec, symbols);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn rejects_non_permutation_rank() {
+        let mut rank = identity_rank();
+        rank[1] = 0;
+        QlcCodec::from_rank_order(AreaScheme::table1(), &rank, "bad");
+    }
+
+    #[test]
+    fn prop_roundtrip_t1() {
+        testutil::roundtrip_property(&t1_identity());
+    }
+
+    #[test]
+    fn prop_roundtrip_t2_random_rank() {
+        prop::check("qlc t2 random rank", prop::Config {
+            cases: 32, ..Default::default()
+        }, |rng, size| {
+            // Random permutation via Fisher-Yates.
+            let mut rank = identity_rank();
+            for i in (1..256usize).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                rank.swap(i, j);
+            }
+            let codec = QlcCodec::from_rank_order(
+                AreaScheme::table2(),
+                &rank,
+                "qlc-t2",
+            );
+            let symbols = prop::arb_bytes(rng, size);
+            let enc = codec.encode_to_vec(&symbols);
+            let dec = codec
+                .decode_from_slice(&enc, symbols.len())
+                .map_err(|e| e.to_string())?;
+            if dec != symbols {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

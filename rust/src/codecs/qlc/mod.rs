@@ -1,0 +1,26 @@
+//! Quad Length Codes (the paper's contribution, §5–§7).
+//!
+//! A QLC code word is `area-prefix (P bits) | symbol-index (b_a bits)`:
+//! the P-bit prefix selects one of `2^P` *areas*; each area `a` holds
+//! `n_a` rank-ordered symbols indexed by a fixed-width `b_a`-bit
+//! suffix.  The prefix alone determines the total code length
+//! (`P + b_a`), so a decoder needs no tree walk: one P-bit lookup, one
+//! fixed-width read, one 256-entry LUT (paper Tables 3–4).
+//!
+//! * [`scheme`] — [`scheme::AreaScheme`]: the area structure; paper
+//!   Table 1 and Table 2 as constructors; validation.
+//! * [`codec`] — [`codec::QlcCodec`]: encoder/decoder LUTs bound to a
+//!   PMF's rank order.
+//! * [`optimizer`] — DP that picks the optimal area structure for a
+//!   PMF (the paper's "future work" §8 formulation).
+//! * [`serde`] — scheme + LUT (de)serialization (JSON and the binary
+//!   frame header).
+
+pub mod codec;
+pub mod optimizer;
+pub mod scheme;
+pub mod serde;
+
+pub use codec::QlcCodec;
+pub use optimizer::optimize_scheme;
+pub use scheme::{Area, AreaScheme};

@@ -1,0 +1,253 @@
+//! Optimal area-scheme construction — the mathematical formulation the
+//! paper defers to future work (§8: "tweak the number of areas, the
+//! number of symbols in each area, and the number of unique code
+//! lengths").
+//!
+//! Model: fix the prefix width `P` (so `K = 2^P` areas).  Choose per-
+//! area suffix widths `b_1..b_K ∈ 0..=8` and sizes `n_a ≤ 2^{b_a}`
+//! with `Σ n_a = 256`, assigning areas to consecutive runs of the
+//! descending-sorted PMF.  Minimize `Σ_a (P + b_a) · Pr[area a]`.
+//!
+//! For a fixed left-to-right assignment it is never beneficial to
+//! under-fill a non-final area (moving a symbol rightward can only
+//! lengthen its code), so the DP only considers full areas (clipped at
+//! the tail), which makes it exact in O(K · 256 · 9).
+
+use super::scheme::{Area, AreaScheme};
+
+/// Exact DP for a fixed prefix width. `sorted_pmf[r]` = probability of
+/// rank `r` (descending).
+pub fn optimize_for_prefix(
+    sorted_pmf: &[f64; 256],
+    prefix_bits: u32,
+) -> AreaScheme {
+    assert!((1..=8).contains(&prefix_bits));
+    let k = 1usize << prefix_bits;
+    // Suffix of cumulative probability: cum[i] = Σ_{r ≥ i} p_r.
+    let mut cum = [0f64; 257];
+    for i in (0..256).rev() {
+        cum[i] = cum[i + 1] + sorted_pmf[i];
+    }
+
+    const INF: f64 = f64::INFINITY;
+    // dp[a][pos] = min expected bits for ranks pos.. using areas a..K-1.
+    let mut dp = vec![[INF; 257]; k + 1];
+    let mut choice = vec![[usize::MAX; 257]; k];
+    dp[k][256] = 0.0;
+    for a in (0..k).rev() {
+        dp[a][256] = 0.0; // all symbols covered; remaining prefixes unused
+        for pos in (0..256usize).rev() {
+            let areas_left = k - a;
+            let remaining = 256 - pos;
+            // Even at 8 bits each, the areas left must be able to cover
+            // the remainder.
+            if areas_left * 256 < remaining {
+                continue;
+            }
+            for b in 0..=8u32 {
+                let n = (1usize << b).min(remaining);
+                let cost = (prefix_bits + b) as f64 * (cum[pos] - cum[pos + n]);
+                let rest = dp[a + 1][pos + n];
+                if rest.is_finite() && cost + rest < dp[a][pos] {
+                    dp[a][pos] = cost + rest;
+                    choice[a][pos] = b as usize;
+                }
+            }
+        }
+    }
+    assert!(dp[0][0].is_finite(), "DP failed to cover the alphabet");
+
+    // Reconstruct. Unused trailing areas (pos hit 256 early) are padded
+    // as 1-symbol areas stolen from the last real area so the scheme
+    // stays structurally valid (the prefix space must be fully mapped).
+    let mut areas: Vec<Area> = Vec::with_capacity(k);
+    let mut pos = 0usize;
+    let mut a = 0usize;
+    while a < k && pos < 256 {
+        let b = choice[a][pos];
+        debug_assert!(b != usize::MAX);
+        let n = (1usize << b).min(256 - pos);
+        areas.push(Area { size: n as u16, symbol_bits: b as u32 });
+        pos += n;
+        a += 1;
+    }
+    while areas.len() < k {
+        // Donate one symbol per missing area from the largest area.
+        let donor = areas
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, ar)| ar.size)
+            .map(|(i, _)| i)
+            .unwrap();
+        assert!(areas[donor].size > 1, "cannot pad scheme to {k} areas");
+        areas[donor].size -= 1;
+        areas.push(Area { size: 1, symbol_bits: 0 });
+    }
+    AreaScheme::new(prefix_bits, areas).expect("DP produced a valid scheme")
+}
+
+/// Search prefix widths 1..=4 and return the best scheme overall.
+pub fn optimize_scheme(sorted_pmf: &[f64; 256]) -> AreaScheme {
+    (1..=4u32)
+        .map(|p| optimize_for_prefix(sorted_pmf, p))
+        .min_by(|a, b| {
+            a.expected_length_sorted(sorted_pmf)
+                .partial_cmp(&b.expected_length_sorted(sorted_pmf))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn exp_pmf(rate: f64) -> [f64; 256] {
+        let mut p = [0f64; 256];
+        let mut sum = 0.0;
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-rate * i as f64).exp();
+            sum += *v;
+        }
+        for v in p.iter_mut() {
+            *v /= sum;
+        }
+        p
+    }
+
+    fn spiked_pmf(spike: f64, rate: f64) -> [f64; 256] {
+        let mut p = exp_pmf(rate);
+        let rest: f64 = 1.0 - spike;
+        let tail_sum: f64 = p[1..].iter().sum();
+        p[0] = spike;
+        for v in p[1..].iter_mut() {
+            *v *= rest / tail_sum;
+        }
+        p
+    }
+
+    #[test]
+    fn uniform_pmf_gets_flat_8bit_scheme() {
+        let pmf = [1.0 / 256.0; 256];
+        for p in 1..=4u32 {
+            let s = optimize_for_prefix(&pmf, p);
+            let el = s.expected_length_sorted(&pmf);
+            // Cannot beat 8 bits on uniform, but the prefix forces
+            // p + b ≥ 8 only if it uses one big area; the optimum is
+            // areas of 2^(8-p) → length exactly 8.
+            assert!((el - 8.0).abs() < 1e-9, "p={p} el={el}");
+        }
+    }
+
+    #[test]
+    fn optimized_beats_or_ties_table1_on_smooth_pmf() {
+        let pmf = exp_pmf(0.022); // entropy ≈ paper's FFN1-like shape
+        let t1 = AreaScheme::table1().expected_length_sorted(&pmf);
+        let opt = optimize_for_prefix(&pmf, 3).expected_length_sorted(&pmf);
+        assert!(opt <= t1 + 1e-12, "opt {opt} vs t1 {t1}");
+    }
+
+    #[test]
+    fn optimized_beats_or_ties_table2_on_spiked_pmf() {
+        let pmf = spiked_pmf(0.25, 0.02);
+        let t2 = AreaScheme::table2().expected_length_sorted(&pmf);
+        let opt = optimize_for_prefix(&pmf, 3).expected_length_sorted(&pmf);
+        assert!(opt <= t2 + 1e-12, "opt {opt} vs t2 {t2}");
+    }
+
+    #[test]
+    fn never_below_entropy() {
+        prop::check("optimizer ≥ entropy", prop::Config {
+            cases: 32, ..Default::default()
+        }, |rng, _| {
+            let mut p = [0f64; 256];
+            let mut sum = 0.0;
+            for v in p.iter_mut() {
+                *v = rng.uniform().powi(3) + 1e-9;
+                sum += *v;
+            }
+            for v in p.iter_mut() {
+                *v /= sum;
+            }
+            // Sort descending (optimizer contract).
+            p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let h: f64 = -p.iter().map(|&x| x * x.log2()).sum::<f64>();
+            let s = optimize_scheme(&p);
+            let el = s.expected_length_sorted(&p);
+            if el < h - 1e-9 {
+                return Err(format!("expected length {el} < entropy {h}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spike_earns_short_top_area() {
+        // With a dominant rank-0 symbol the optimizer must give it a
+        // short code (area of 1–2 symbols), like the paper's Table 2.
+        let pmf = spiked_pmf(0.4, 0.02);
+        let s = optimize_for_prefix(&pmf, 3);
+        assert!(
+            s.areas[0].size <= 2,
+            "first area holds {} symbols",
+            s.areas[0].size
+        );
+        assert!(s.code_length(0) <= 4);
+    }
+
+    #[test]
+    fn prefix_search_picks_reasonable_width() {
+        // Extremely peaked: almost everything is rank 0 → small prefix
+        // wins (1-bit prefix + empty suffix = 1-bit top code beats a
+        // 3-bit prefix).
+        let pmf = spiked_pmf(0.95, 0.05);
+        let best = optimize_scheme(&pmf);
+        let el_best = best.expected_length_sorted(&pmf);
+        let el_p3 = optimize_for_prefix(&pmf, 3).expected_length_sorted(&pmf);
+        assert!(el_best <= el_p3 + 1e-12);
+        assert!(best.prefix_bits <= 2, "prefix {}", best.prefix_bits);
+    }
+
+    #[test]
+    fn schemes_are_always_valid() {
+        prop::check("optimizer validity", prop::Config {
+            cases: 48, ..Default::default()
+        }, |rng, _| {
+            let mut p = [0f64; 256];
+            let mut sum = 0.0;
+            for v in p.iter_mut() {
+                *v = rng.uniform().powi(rng.below(5) as i32 + 1) + 1e-12;
+                sum += *v;
+            }
+            for v in p.iter_mut() {
+                *v /= sum;
+            }
+            p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for prefix in 1..=4u32 {
+                let s = optimize_for_prefix(&p, prefix);
+                // AreaScheme::new re-validates; also check coverage.
+                let total: u32 = s.areas.iter().map(|a| a.size as u32).sum();
+                if total != 256 {
+                    return Err(format!("coverage {total}"));
+                }
+                if s.areas.len() != 1 << prefix {
+                    return Err("area count".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_widths_along_ranks() {
+        // On a strictly decreasing PMF the chosen suffix widths must be
+        // nondecreasing (shorter codes for more probable ranks).
+        let pmf = exp_pmf(0.03);
+        let s = optimize_for_prefix(&pmf, 3);
+        let widths: Vec<u32> = s.areas.iter().map(|a| a.symbol_bits).collect();
+        let mut sorted = widths.clone();
+        sorted.sort_unstable();
+        assert_eq!(widths, sorted, "{widths:?}");
+    }
+}

@@ -1,0 +1,286 @@
+//! Area schemes: the structural half of a Quad Length Code.
+
+/// One area: `size` rank-consecutive symbols addressed by a
+/// `symbol_bits`-wide suffix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Area {
+    pub size: u16,
+    pub symbol_bits: u32,
+}
+
+/// An area scheme: `2^prefix_bits` areas covering the 256 rank-ordered
+/// symbols (paper Table 1 / Table 2).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AreaScheme {
+    pub prefix_bits: u32,
+    pub areas: Vec<Area>,
+}
+
+impl AreaScheme {
+    /// Validated constructor.
+    pub fn new(prefix_bits: u32, areas: Vec<Area>) -> Result<Self, String> {
+        if !(1..=8).contains(&prefix_bits) {
+            return Err(format!("prefix_bits {prefix_bits} out of range 1..=8"));
+        }
+        if areas.len() != 1usize << prefix_bits {
+            return Err(format!(
+                "{} areas but prefix of {prefix_bits} bits addresses {}",
+                areas.len(),
+                1 << prefix_bits
+            ));
+        }
+        let mut covered = 0u32;
+        for (i, a) in areas.iter().enumerate() {
+            if a.symbol_bits > 8 {
+                return Err(format!("area {i}: symbol_bits {} > 8", a.symbol_bits));
+            }
+            if a.size == 0 {
+                return Err(format!("area {i}: empty area"));
+            }
+            if a.size as u32 > 1 << a.symbol_bits {
+                return Err(format!(
+                    "area {i}: {} symbols need more than {} bits",
+                    a.size, a.symbol_bits
+                ));
+            }
+            covered += a.size as u32;
+        }
+        if covered != 256 {
+            return Err(format!("areas cover {covered} symbols, need 256"));
+        }
+        Ok(AreaScheme { prefix_bits, areas })
+    }
+
+    /// Paper Table 1: tuned for FFN1-activation-like PMFs.
+    /// Lengths {6,7,8,11}; areas 5×8, 16, 32, 168.
+    pub fn table1() -> Self {
+        AreaScheme::new(
+            3,
+            vec![
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 16, symbol_bits: 4 },
+                Area { size: 32, symbol_bits: 5 },
+                Area { size: 168, symbol_bits: 8 },
+            ],
+        )
+        .expect("Table 1 is valid")
+    }
+
+    /// Paper Table 2: adapted for FFN2-activation-like PMFs with a
+    /// dominant zero symbol. Lengths {4,6,8,11}; areas 2, 4×8, 2×32, 158.
+    pub fn table2() -> Self {
+        AreaScheme::new(
+            3,
+            vec![
+                Area { size: 2, symbol_bits: 1 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 8, symbol_bits: 3 },
+                Area { size: 32, symbol_bits: 5 },
+                Area { size: 32, symbol_bits: 5 },
+                Area { size: 158, symbol_bits: 8 },
+            ],
+        )
+        .expect("Table 2 is valid")
+    }
+
+    pub fn num_areas(&self) -> usize {
+        self.areas.len()
+    }
+
+    /// Total code length of area `a`.
+    #[inline]
+    pub fn code_length(&self, area: usize) -> u32 {
+        self.prefix_bits + self.areas[area].symbol_bits
+    }
+
+    /// First rank covered by area `a`.
+    pub fn base_rank(&self, area: usize) -> u32 {
+        self.areas[..area].iter().map(|a| a.size as u32).sum()
+    }
+
+    /// Area index containing `rank`.
+    pub fn area_of_rank(&self, rank: u32) -> usize {
+        debug_assert!(rank < 256);
+        let mut base = 0u32;
+        for (i, a) in self.areas.iter().enumerate() {
+            base += a.size as u32;
+            if rank < base {
+                return i;
+            }
+        }
+        unreachable!("rank {rank} beyond 256")
+    }
+
+    /// Code length by *rank* (not symbol value).
+    pub fn rank_lengths(&self) -> [u32; 256] {
+        let mut out = [0u32; 256];
+        let mut rank = 0usize;
+        for (i, a) in self.areas.iter().enumerate() {
+            for _ in 0..a.size {
+                out[rank] = self.code_length(i);
+                rank += 1;
+            }
+        }
+        out
+    }
+
+    /// Distinct code lengths, ascending (the "quad" in quad length
+    /// codes: paper schemes have exactly 4).
+    pub fn distinct_lengths(&self) -> Vec<u32> {
+        let mut lens: Vec<u32> =
+            (0..self.num_areas()).map(|a| self.code_length(a)).collect();
+        lens.sort_unstable();
+        lens.dedup();
+        lens
+    }
+
+    /// Expected code length (bits/symbol) against a descending-sorted
+    /// PMF (probability of rank r at index r).
+    pub fn expected_length_sorted(&self, sorted_pmf: &[f64; 256]) -> f64 {
+        let lengths = self.rank_lengths();
+        sorted_pmf
+            .iter()
+            .zip(lengths.iter())
+            .map(|(&p, &l)| p * l as f64)
+            .sum()
+    }
+
+    /// The paper's compressibility metric against a sorted PMF.
+    pub fn compressibility_sorted(&self, sorted_pmf: &[f64; 256]) -> f64 {
+        (8.0 - self.expected_length_sorted(sorted_pmf)) / 8.0
+    }
+
+    /// Wasted code space: Σ (2^bits − size) over areas, in code points.
+    /// Table 1 wastes 88 points in area 8; the optimizer minimizes
+    /// expected length, not waste, but the bench reports both.
+    pub fn slack_code_points(&self) -> u32 {
+        self.areas
+            .iter()
+            .map(|a| (1u32 << a.symbol_bits) - a.size as u32)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let s = AreaScheme::table1();
+        assert_eq!(s.prefix_bits, 3);
+        assert_eq!(s.num_areas(), 8);
+        let sizes: Vec<u16> = s.areas.iter().map(|a| a.size).collect();
+        assert_eq!(sizes, vec![8, 8, 8, 8, 8, 16, 32, 168]);
+        let lens: Vec<u32> = (0..8).map(|a| s.code_length(a)).collect();
+        assert_eq!(lens, vec![6, 6, 6, 6, 6, 7, 8, 11]);
+        assert_eq!(s.distinct_lengths(), vec![6, 7, 8, 11]); // "quad"
+    }
+
+    #[test]
+    fn table1_symbol_ranges_match_paper() {
+        // Paper Table 1 symbol ranges: 0-7, 8-15, …, 56-87, 88-255.
+        let s = AreaScheme::table1();
+        let bases: Vec<u32> = (0..8).map(|a| s.base_rank(a)).collect();
+        assert_eq!(bases, vec![0, 8, 16, 24, 32, 40, 56, 88]);
+    }
+
+    #[test]
+    fn table2_matches_paper() {
+        let s = AreaScheme::table2();
+        let sizes: Vec<u16> = s.areas.iter().map(|a| a.size).collect();
+        assert_eq!(sizes, vec![2, 8, 8, 8, 8, 32, 32, 158]);
+        let lens: Vec<u32> = (0..8).map(|a| s.code_length(a)).collect();
+        assert_eq!(lens, vec![4, 6, 6, 6, 6, 8, 8, 11]);
+        assert_eq!(s.distinct_lengths(), vec![4, 6, 8, 11]);
+        let bases: Vec<u32> = (0..8).map(|a| s.base_rank(a)).collect();
+        assert_eq!(bases, vec![0, 2, 10, 18, 26, 34, 66, 98]);
+    }
+
+    #[test]
+    fn area_of_rank_inverts_base_rank() {
+        for s in [AreaScheme::table1(), AreaScheme::table2()] {
+            for rank in 0..256u32 {
+                let a = s.area_of_rank(rank);
+                assert!(s.base_rank(a) <= rank);
+                assert!(rank < s.base_rank(a) + s.areas[a].size as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_lengths_totals() {
+        let s = AreaScheme::table1();
+        let l = s.rank_lengths();
+        assert_eq!(l[0], 6);
+        assert_eq!(l[39], 6);
+        assert_eq!(l[40], 7);
+        assert_eq!(l[55], 7);
+        assert_eq!(l[56], 8);
+        assert_eq!(l[87], 8);
+        assert_eq!(l[88], 11);
+        assert_eq!(l[255], 11);
+    }
+
+    #[test]
+    fn validation_rejects_bad_schemes() {
+        // Wrong area count for prefix.
+        assert!(AreaScheme::new(3, vec![Area { size: 256, symbol_bits: 8 }])
+            .is_err());
+        // Coverage != 256.
+        let mut areas = vec![Area { size: 8, symbol_bits: 3 }; 8];
+        assert!(AreaScheme::new(3, areas.clone()).is_err());
+        // size > 2^bits.
+        areas = vec![Area { size: 32, symbol_bits: 3 }; 8];
+        assert!(AreaScheme::new(3, areas).is_err());
+        // Empty area.
+        let mut areas = vec![Area { size: 36, symbol_bits: 6 }; 7];
+        areas.push(Area { size: 0, symbol_bits: 3 });
+        assert!(AreaScheme::new(3, areas).is_err());
+        // symbol_bits > 8.
+        let areas = vec![
+            Area { size: 249, symbol_bits: 9 },
+            Area { size: 1, symbol_bits: 0 },
+        ];
+        assert!(AreaScheme::new(1, areas).is_err());
+    }
+
+    #[test]
+    fn uniform_pmf_expected_lengths() {
+        // Under uniform ranks, E[len] = Σ n_a (P + b_a) / 256.
+        let s = AreaScheme::table1();
+        let pmf = [1.0 / 256.0; 256];
+        let expect = (5.0 * 8.0 * 6.0 + 16.0 * 7.0 + 32.0 * 8.0 + 168.0 * 11.0)
+            / 256.0;
+        assert!((s.expected_length_sorted(&pmf) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slack_code_points() {
+        // Table 1: area 8 wastes 256-168 = 88.
+        assert_eq!(AreaScheme::table1().slack_code_points(), 88);
+        // Table 2: area 8 wastes 256-158 = 98.
+        assert_eq!(AreaScheme::table2().slack_code_points(), 98);
+    }
+
+    #[test]
+    fn skewed_pmf_prefers_table2() {
+        // A zero-spiked sorted PMF: rank 0 dominates → Table 2's 4-bit
+        // top code wins (the paper's §6 observation).
+        let mut pmf = [0.0f64; 256];
+        pmf[0] = 0.30;
+        let rest = 0.70 / 255.0;
+        for p in pmf[1..].iter_mut() {
+            *p = rest;
+        }
+        let t1 = AreaScheme::table1().expected_length_sorted(&pmf);
+        let t2 = AreaScheme::table2().expected_length_sorted(&pmf);
+        assert!(t2 < t1, "t2 {t2} should beat t1 {t1}");
+    }
+}

@@ -1,0 +1,241 @@
+//! Scheme + LUT (de)serialization.
+//!
+//! Two encodings:
+//! * binary — compact header for the frame container and the collective
+//!   transport: `prefix_bits u8 | K × (size u16-le, bits u8) | 256-byte
+//!   rank order`;
+//! * JSON — human-readable (`qlc tables --table 3 --json`, shipping
+//!   per-tensor-type LUT files as paper §7 / ref \[12\] suggests).
+
+use super::codec::QlcCodec;
+use super::scheme::{Area, AreaScheme};
+use crate::util::json::Json;
+
+/// Serialize scheme + rank order to the binary header format.
+pub fn to_bytes(codec: &QlcCodec) -> Vec<u8> {
+    let scheme = codec.scheme();
+    let mut out = Vec::with_capacity(2 + scheme.num_areas() * 3 + 256);
+    out.push(scheme.prefix_bits as u8);
+    for a in &scheme.areas {
+        out.extend_from_slice(&a.size.to_le_bytes());
+        out.push(a.symbol_bits as u8);
+    }
+    out.extend_from_slice(codec.rank_order());
+    out
+}
+
+/// Parse the binary header back into a codec.
+pub fn from_bytes(data: &[u8], label: &str) -> Result<QlcCodec, String> {
+    if data.is_empty() {
+        return Err("empty qlc header".into());
+    }
+    let prefix_bits = data[0] as u32;
+    if !(1..=8).contains(&prefix_bits) {
+        return Err(format!("bad prefix_bits {prefix_bits}"));
+    }
+    let k = 1usize << prefix_bits;
+    let need = 1 + k * 3 + 256;
+    if data.len() != need {
+        return Err(format!("qlc header is {} bytes, want {need}", data.len()));
+    }
+    let mut areas = Vec::with_capacity(k);
+    for i in 0..k {
+        let off = 1 + i * 3;
+        let size = u16::from_le_bytes([data[off], data[off + 1]]);
+        let bits = data[off + 2] as u32;
+        areas.push(Area { size, symbol_bits: bits });
+    }
+    let scheme = AreaScheme::new(prefix_bits, areas)?;
+    let mut rank = [0u8; 256];
+    rank.copy_from_slice(&data[1 + k * 3..]);
+    // Permutation check (from_rank_order panics; validate first).
+    let mut seen = [false; 256];
+    for &s in rank.iter() {
+        if seen[s as usize] {
+            return Err(format!("rank order repeats symbol {s}"));
+        }
+        seen[s as usize] = true;
+    }
+    Ok(QlcCodec::from_rank_order(scheme, &rank, label))
+}
+
+/// JSON form: scheme structure + encoder/decoder tables.
+pub fn to_json(codec: &QlcCodec) -> Json {
+    let scheme = codec.scheme();
+    let areas: Vec<Json> = scheme
+        .areas
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            Json::obj()
+                .set("area", i + 1)
+                .set(
+                    "area_code",
+                    format!(
+                        "{:0width$b}",
+                        i,
+                        width = scheme.prefix_bits as usize
+                    ),
+                )
+                .set("symbols", a.size as usize)
+                .set("symbol_bits", a.symbol_bits as usize)
+                .set("code_length", scheme.code_length(i) as usize)
+                .set(
+                    "symbol_range",
+                    format!(
+                        "{}-{}",
+                        scheme.base_rank(i),
+                        scheme.base_rank(i) + a.size as u32 - 1
+                    ),
+                )
+        })
+        .collect();
+    let rank: Vec<Json> = codec
+        .rank_order()
+        .iter()
+        .map(|&s| Json::from(s as usize))
+        .collect();
+    Json::obj()
+        .set("prefix_bits", scheme.prefix_bits as usize)
+        .set("areas", Json::Arr(areas))
+        .set("decoder_lut", Json::Arr(rank))
+}
+
+/// Parse the JSON form.
+pub fn from_json(v: &Json, label: &str) -> Result<QlcCodec, String> {
+    let prefix_bits = v
+        .get("prefix_bits")
+        .and_then(Json::as_usize)
+        .ok_or("missing prefix_bits")? as u32;
+    let areas_json = v
+        .get("areas")
+        .and_then(Json::as_arr)
+        .ok_or("missing areas")?;
+    let mut areas = Vec::with_capacity(areas_json.len());
+    for a in areas_json {
+        areas.push(Area {
+            size: a
+                .get("symbols")
+                .and_then(Json::as_usize)
+                .ok_or("area missing symbols")? as u16,
+            symbol_bits: a
+                .get("symbol_bits")
+                .and_then(Json::as_usize)
+                .ok_or("area missing symbol_bits")? as u32,
+        });
+    }
+    let scheme = AreaScheme::new(prefix_bits, areas)?;
+    let lut = v
+        .get("decoder_lut")
+        .and_then(Json::as_arr)
+        .ok_or("missing decoder_lut")?;
+    if lut.len() != 256 {
+        return Err(format!("decoder_lut has {} entries", lut.len()));
+    }
+    let mut rank = [0u8; 256];
+    let mut seen = [false; 256];
+    for (i, e) in lut.iter().enumerate() {
+        let s = e.as_usize().ok_or("non-numeric lut entry")?;
+        if s > 255 || seen[s] {
+            return Err(format!("bad lut entry {s}"));
+        }
+        seen[s] = true;
+        rank[i] = s as u8;
+    }
+    Ok(QlcCodec::from_rank_order(scheme, &rank, label))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::Codec;
+    use crate::stats::Histogram;
+    use crate::util::rng::Rng;
+
+    fn sample_codec() -> QlcCodec {
+        let mut rng = Rng::new(77);
+        let symbols: Vec<u8> =
+            (0..50_000).map(|_| (rng.normal().abs() * 40.0) as u8).collect();
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        QlcCodec::from_pmf(AreaScheme::table1(), &pmf)
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let codec = sample_codec();
+        let bytes = to_bytes(&codec);
+        assert_eq!(bytes.len(), 1 + 8 * 3 + 256);
+        let back = from_bytes(&bytes, "qlc").unwrap();
+        assert_eq!(back.scheme(), codec.scheme());
+        assert_eq!(back.rank_order(), codec.rank_order());
+        // Streams decode identically.
+        let data: Vec<u8> = (0..=255).collect();
+        let enc = codec.encode_to_vec(&data);
+        assert_eq!(back.decode_from_slice(&enc, 256).unwrap(), data);
+    }
+
+    #[test]
+    fn binary_rejects_corruption() {
+        let codec = sample_codec();
+        let bytes = to_bytes(&codec);
+        // Truncated.
+        assert!(from_bytes(&bytes[..bytes.len() - 1], "x").is_err());
+        // Bad prefix.
+        let mut bad = bytes.clone();
+        bad[0] = 9;
+        assert!(from_bytes(&bad, "x").is_err());
+        // Duplicate rank entry.
+        let mut bad = bytes.clone();
+        let base = 1 + 8 * 3;
+        bad[base] = bad[base + 1];
+        assert!(from_bytes(&bad, "x").is_err());
+        // Broken coverage (area size).
+        let mut bad = bytes;
+        bad[1] = 0xFF;
+        bad[2] = 0xFF;
+        assert!(from_bytes(&bad, "x").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let codec = sample_codec();
+        let j = to_json(&codec);
+        let text = j.to_string_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let back = from_json(&parsed, "qlc").unwrap();
+        assert_eq!(back.scheme(), codec.scheme());
+        assert_eq!(back.rank_order(), codec.rank_order());
+    }
+
+    #[test]
+    fn json_matches_paper_table1_layout() {
+        let codec = QlcCodec::from_rank_order(
+            AreaScheme::table1(),
+            codec_identity_rank(),
+            "qlc-t1",
+        );
+        let j = to_json(&codec);
+        let areas = j.get("areas").unwrap().as_arr().unwrap();
+        assert_eq!(areas.len(), 8);
+        // Paper Table 1 row 6: area code 101, 16 symbols, 4 bits, len 7,
+        // range 40-55.
+        let a6 = &areas[5];
+        assert_eq!(a6.get("area_code").unwrap().as_str(), Some("101"));
+        assert_eq!(a6.get("symbols").unwrap().as_usize(), Some(16));
+        assert_eq!(a6.get("code_length").unwrap().as_usize(), Some(7));
+        assert_eq!(a6.get("symbol_range").unwrap().as_str(), Some("40-55"));
+    }
+
+    fn codec_identity_rank() -> &'static [u8; 256] {
+        static RANK: [u8; 256] = {
+            let mut r = [0u8; 256];
+            let mut i = 0;
+            while i < 256 {
+                r[i] = i as u8;
+                i += 1;
+            }
+            r
+        };
+        &RANK
+    }
+}

@@ -1,0 +1,76 @@
+//! Identity codec: 8 bits/symbol. The uncompressed baseline every
+//! paper table normalizes against.
+
+use super::{Codec, CodecError};
+use crate::bitstream::{BitReader, BitWriter};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RawCodec;
+
+impl Codec for RawCodec {
+    fn name(&self) -> String {
+        "raw".to_string()
+    }
+
+    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+        for &s in symbols {
+            out.write_bits(s as u64, 8);
+        }
+    }
+
+    fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        out.reserve(n);
+        for _ in 0..n {
+            let v = reader
+                .read_bits(8)
+                .map_err(|_| CodecError::UnexpectedEof)?;
+            out.push(v as u8);
+        }
+        Ok(())
+    }
+
+    fn code_lengths(&self) -> [u32; 256] {
+        [8; 256]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil;
+
+    #[test]
+    fn roundtrip_basic() {
+        let c = RawCodec;
+        let data = vec![0u8, 1, 127, 128, 255];
+        let enc = c.encode_to_vec(&data);
+        assert_eq!(enc, data); // byte-aligned identity
+        assert_eq!(c.decode_from_slice(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = RawCodec;
+        assert!(c.encode_to_vec(&[]).is_empty());
+        assert_eq!(c.decode_from_slice(&[], 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let c = RawCodec;
+        assert_eq!(
+            c.decode_from_slice(&[1, 2], 3),
+            Err(CodecError::UnexpectedEof)
+        );
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        testutil::roundtrip_property(&RawCodec);
+    }
+}

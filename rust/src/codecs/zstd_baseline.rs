@@ -1,0 +1,84 @@
+//! Zstandard baseline (paper §1 cites Zstandard as a production
+//! Huffman/FSE-based compressor).  This is *block* compression, not a
+//! symbol code — it exploits context (repeats, match structure) that
+//! symbol codes cannot, at the cost of block-granular decode (no
+//! random access, deep hardware).  Included to position QLC against a
+//! production general-purpose compressor in the benches.
+//!
+//! Not a [`super::Codec`]: it has no per-symbol code lengths.  It
+//! implements its own tiny API used by the benches and the CLI
+//! comparison table.
+
+use std::io::{Error, ErrorKind};
+
+/// Compress a symbol block at the given zstd level (1..=19).
+pub fn compress(symbols: &[u8], level: i32) -> std::io::Result<Vec<u8>> {
+    zstd::bulk::compress(symbols, level)
+}
+
+/// Decompress; `n_symbols` is the exact decoded size.
+pub fn decompress(data: &[u8], n_symbols: usize) -> std::io::Result<Vec<u8>> {
+    let out = zstd::bulk::decompress(data, n_symbols)?;
+    if out.len() != n_symbols {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!("zstd decoded {} of {n_symbols} symbols", out.len()),
+        ));
+    }
+    Ok(out)
+}
+
+/// Compressibility (paper metric) of zstd on a symbol stream.
+pub fn compressibility(symbols: &[u8], level: i32) -> f64 {
+    let out = compress(symbols, level).expect("zstd compress");
+    1.0 - out.len() as f64 / symbols.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{TensorGen, TensorKind};
+    use crate::formats::Variant;
+    use crate::util::rng::Rng;
+
+    fn symbols(n: usize, seed: u64) -> Vec<u8> {
+        let gen = TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY);
+        let mut rng = Rng::new(seed);
+        gen.symbols(&mut rng, n)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let data = symbols(64 * 1024, 1);
+        let comp = compress(&data, 3).unwrap();
+        assert_eq!(decompress(&comp, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn compresses_skewed_streams() {
+        let data = symbols(256 * 1024, 2);
+        let c = compressibility(&data, 3);
+        assert!(c > 0.05, "zstd should compress e4m3 symbols: {c}");
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let data = symbols(1024, 3);
+        let comp = compress(&data, 1).unwrap();
+        assert!(decompress(&comp, data.len() + 1).is_err());
+    }
+
+    #[test]
+    fn corrupt_data_rejected() {
+        let data = symbols(4096, 4);
+        let mut comp = compress(&data, 3).unwrap();
+        comp[0] ^= 0xFF; // clobber the frame magic — always detected
+        assert!(decompress(&comp, data.len()).is_err());
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let comp = compress(&[], 3).unwrap();
+        assert_eq!(decompress(&comp, 0).unwrap(), Vec::<u8>::new());
+    }
+}

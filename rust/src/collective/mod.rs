@@ -1,0 +1,664 @@
+//! Bandwidth-bound collective operations with lossless compression on
+//! the transport — the paper's motivating application (§1: "collective
+//! operations are typically bounded by network bandwidth; lossless
+//! compression is an effective way to reduce the network traffic").
+//!
+//! [`Fabric`] models a homogeneous ring of `W` workers with per-link
+//! bandwidth and latency.  The ops move *real* data (symbols are
+//! actually encoded, shipped, decoded, reduced) so byte counts are
+//! exact; time is `latency + bytes/bandwidth` per hop plus measured
+//! codec wall-time, with all links in a step running in parallel.
+//!
+//! Transport framing: codec tables are fitted **apriori** and shared by
+//! both endpoints (paper §7: per-tensor-type LUTs "obtained apriori"),
+//! so hops carry payload bits only — no per-hop table headers.
+//!
+//! All-reduce semantics: the reduce-scatter phase necessarily
+//! re-quantizes partial sums each hop (the wire format is e4m3);
+//! after it, each worker quantizes its owned reduced chunk **once**,
+//! and the all-gather phase circulates those (symbols, scales)
+//! losslessly.  All workers therefore finish with bit-identical
+//! results.
+//!
+//! [`engine`] runs the same ring on real threads and channels.
+
+pub mod engine;
+
+use std::time::Instant;
+
+use crate::codecs::frame::CodecSpec;
+use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
+use crate::stats::Histogram;
+
+/// Network model.
+#[derive(Clone, Copy, Debug)]
+pub struct Fabric {
+    pub workers: usize,
+    /// Per-link bandwidth, bytes/second.
+    pub link_bandwidth: f64,
+    /// Per-hop latency, seconds.
+    pub link_latency: f64,
+}
+
+impl Fabric {
+    /// A pod-like default: 8 workers, 50 GB/s links, 2 µs hops.
+    pub fn pod(workers: usize) -> Self {
+        Fabric { workers, link_bandwidth: 50e9, link_latency: 2e-6 }
+    }
+
+    fn wire_time(&self, bytes: usize) -> f64 {
+        self.link_latency + bytes as f64 / self.link_bandwidth
+    }
+}
+
+/// What travels on each hop.
+#[derive(Clone, Debug)]
+pub enum Transport {
+    /// Raw e4m3 symbols + scales.
+    Raw,
+    /// Symbols compressed with the named codec (tables fitted on a
+    /// calibration histogram, shared apriori by all endpoints).
+    Compressed { codec: String, calibration: Box<Histogram> },
+}
+
+impl Transport {
+    pub fn name(&self) -> String {
+        match self {
+            Transport::Raw => "raw".into(),
+            Transport::Compressed { codec, .. } => codec.clone(),
+        }
+    }
+
+    pub(crate) fn spec(&self) -> Result<Option<CodecSpec>, String> {
+        match self {
+            Transport::Raw => Ok(None),
+            Transport::Compressed { codec, calibration } => {
+                Ok(Some(CodecSpec::by_name(codec, calibration)?))
+            }
+        }
+    }
+}
+
+/// Measured outcome of one collective.
+#[derive(Clone, Debug, Default)]
+pub struct CollectiveReport {
+    pub op: String,
+    pub transport: String,
+    pub steps: usize,
+    /// Total payload bytes shipped (all links, all steps).
+    pub wire_bytes: u64,
+    /// Bytes the same op would ship uncompressed.
+    pub raw_bytes: u64,
+    /// Modelled network time (latency + busiest-link bytes / bw).
+    pub network_time_s: f64,
+    /// Measured encode+decode wall time on the critical path.
+    pub codec_time_s: f64,
+}
+
+impl CollectiveReport {
+    pub fn total_time_s(&self) -> f64 {
+        self.network_time_s + self.codec_time_s
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.wire_bytes.max(1) as f64
+    }
+}
+
+/// Payload-only encode (tables pre-shared; see module docs).
+pub(crate) fn encode_payload(
+    spec: &Option<CodecSpec>,
+    symbols: &[u8],
+) -> Vec<u8> {
+    match spec {
+        None => symbols.to_vec(),
+        Some(s) => s.codec().encode_to_vec(symbols),
+    }
+}
+
+pub(crate) fn decode_payload(
+    spec: &Option<CodecSpec>,
+    payload: &[u8],
+    n_symbols: usize,
+) -> Vec<u8> {
+    match spec {
+        None => payload.to_vec(),
+        Some(s) => s
+            .codec()
+            .decode_from_slice(payload, n_symbols)
+            .expect("transport payload"),
+    }
+}
+
+/// Bytes on the wire for a hop: payload + one byte per 32-symbol block
+/// (E8M0-style shared scale, as in the OCP MX formats).
+pub(crate) fn hop_bytes(payload_len: usize, n_blocks: usize) -> usize {
+    payload_len + n_blocks
+}
+
+/// Ring all-reduce over per-worker f32 tensors. Returns the reduced
+/// tensor per worker (bit-identical across workers) plus the report.
+pub fn ring_allreduce(
+    fabric: &Fabric,
+    worker_data: &[Vec<f32>],
+    transport: &Transport,
+) -> Result<(Vec<Vec<f32>>, CollectiveReport), String> {
+    let w = fabric.workers;
+    assert_eq!(worker_data.len(), w, "one tensor per worker");
+    let n = worker_data[0].len();
+    assert!(worker_data.iter().all(|d| d.len() == n));
+    assert!(
+        n % (w * BLOCK) == 0,
+        "tensor must split into w block-aligned chunks"
+    );
+    let chunk = n / w;
+    let quant = BlockQuantizer::new(Variant::ExmY);
+    let spec = transport.spec()?;
+
+    let mut report = CollectiveReport {
+        op: "allreduce".into(),
+        transport: transport.name(),
+        ..Default::default()
+    };
+
+    // Working f32 chunks per worker.
+    let mut chunks: Vec<Vec<Vec<f32>>> = worker_data
+        .iter()
+        .map(|d| d.chunks(chunk).map(|c| c.to_vec()).collect())
+        .collect();
+
+    // --- Reduce-scatter: quantize per hop, dequantize + add. ---------
+    for s in 0..w - 1 {
+        let mut max_bytes = 0usize;
+        let mut max_codec = 0f64;
+        let mut deliveries: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        for i in 0..w {
+            let ci = (i + w - s) % w;
+            let t0 = Instant::now();
+            let q = quant.quantize(&chunks[i][ci]);
+            let payload = encode_payload(&spec, &q.symbols);
+            let symbols = decode_payload(&spec, &payload, q.symbols.len());
+            let received = quant.dequantize(&QuantizedBlocks {
+                symbols,
+                scales: q.scales.clone(),
+                variant: Variant::ExmY,
+            });
+            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
+            let bytes = hop_bytes(payload.len(), q.scales.len());
+            report.wire_bytes += bytes as u64;
+            report.raw_bytes += (q.symbols.len() + q.scales.len()) as u64;
+            max_bytes = max_bytes.max(bytes);
+            deliveries.push(((i + 1) % w, ci, received));
+        }
+        for (dst, ci, data) in deliveries {
+            for (acc, v) in chunks[dst][ci].iter_mut().zip(&data) {
+                *acc += v;
+            }
+        }
+        report.steps += 1;
+        report.network_time_s += fabric.wire_time(max_bytes);
+        report.codec_time_s += max_codec;
+    }
+
+    // --- Final quantization of each worker's owned chunk. ------------
+    // Worker i owns chunk (i + 1) mod w after reduce-scatter.
+    let mut owned: Vec<(usize, QuantizedBlocks)> = (0..w)
+        .map(|i| {
+            let ci = (i + 1) % w;
+            (ci, quant.quantize(&chunks[i][ci]))
+        })
+        .collect();
+
+    // --- All-gather: circulate (symbols, scales) losslessly. ---------
+    // have[i][ci] = Some(quantized chunk) once worker i holds it.
+    let mut have: Vec<Vec<Option<QuantizedBlocks>>> =
+        vec![vec![None; w]; w];
+    for (i, (ci, q)) in owned.drain(..).enumerate() {
+        have[i][ci] = Some(q);
+    }
+    for s in 0..w - 1 {
+        let mut max_bytes = 0usize;
+        let mut max_codec = 0f64;
+        let mut deliveries: Vec<(usize, usize, QuantizedBlocks)> = Vec::new();
+        for i in 0..w {
+            let ci = (i + 1 + w - s) % w;
+            let q = have[i][ci].as_ref().expect("ring invariant");
+            let t0 = Instant::now();
+            let payload = encode_payload(&spec, &q.symbols);
+            let symbols = decode_payload(&spec, &payload, q.symbols.len());
+            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
+            let bytes = hop_bytes(payload.len(), q.scales.len());
+            report.wire_bytes += bytes as u64;
+            report.raw_bytes += (q.symbols.len() + q.scales.len()) as u64;
+            max_bytes = max_bytes.max(bytes);
+            deliveries.push((
+                (i + 1) % w,
+                ci,
+                QuantizedBlocks {
+                    symbols,
+                    scales: q.scales.clone(),
+                    variant: Variant::ExmY,
+                },
+            ));
+        }
+        for (dst, ci, q) in deliveries {
+            have[dst][ci] = Some(q);
+        }
+        report.steps += 1;
+        report.network_time_s += fabric.wire_time(max_bytes);
+        report.codec_time_s += max_codec;
+    }
+
+    // Materialize: every worker dequantizes the same symbol streams.
+    let results: Vec<Vec<f32>> = (0..w)
+        .map(|i| {
+            (0..w)
+                .flat_map(|ci| {
+                    quant.dequantize(have[i][ci].as_ref().expect("complete"))
+                })
+                .collect()
+        })
+        .collect();
+    Ok((results, report))
+}
+
+/// Ring all-gather of per-worker e4m3 symbol streams (already
+/// quantized — e.g. sharded weights).  Returns the gathered stream
+/// (identical across workers, asserted) and the report.
+pub fn ring_allgather(
+    fabric: &Fabric,
+    worker_symbols: &[Vec<u8>],
+    worker_scales: &[Vec<f32>],
+    transport: &Transport,
+) -> Result<(Vec<u8>, CollectiveReport), String> {
+    let w = fabric.workers;
+    assert_eq!(worker_symbols.len(), w);
+    let spec = transport.spec()?;
+    let mut report = CollectiveReport {
+        op: "allgather".into(),
+        transport: transport.name(),
+        ..Default::default()
+    };
+
+    let mut have: Vec<Vec<Option<Vec<u8>>>> = (0..w)
+        .map(|i| {
+            (0..w)
+                .map(|j| (i == j).then(|| worker_symbols[j].clone()))
+                .collect()
+        })
+        .collect();
+
+    for s in 0..w - 1 {
+        let mut max_bytes = 0usize;
+        let mut max_codec = 0f64;
+        let mut deliveries: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+        for i in 0..w {
+            let shard = (i + w - s) % w;
+            let symbols =
+                have[i][shard].as_ref().expect("ring invariant").clone();
+            let t0 = Instant::now();
+            let payload = encode_payload(&spec, &symbols);
+            let decoded = decode_payload(&spec, &payload, symbols.len());
+            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
+            let bytes =
+                hop_bytes(payload.len(), worker_scales[shard].len());
+            report.wire_bytes += bytes as u64;
+            report.raw_bytes +=
+                (symbols.len() + worker_scales[shard].len()) as u64;
+            max_bytes = max_bytes.max(bytes);
+            deliveries.push(((i + 1) % w, shard, decoded));
+        }
+        for (dst, shard, data) in deliveries {
+            have[dst][shard] = Some(data);
+        }
+        report.steps += 1;
+        report.network_time_s += fabric.wire_time(max_bytes);
+        report.codec_time_s += max_codec;
+    }
+
+    let gathered: Vec<u8> = (0..w)
+        .flat_map(|j| have[0][j].clone().expect("complete"))
+        .collect();
+    for i in 1..w {
+        let other: Vec<u8> = (0..w)
+            .flat_map(|j| have[i][j].clone().expect("complete"))
+            .collect();
+        assert_eq!(other, gathered, "allgather divergence at worker {i}");
+    }
+    Ok((gathered, report))
+}
+
+/// All-to-all of symbol shards: worker i sends shard j to worker j.
+pub fn alltoall(
+    fabric: &Fabric,
+    shards: &[Vec<Vec<u8>>],
+    transport: &Transport,
+) -> Result<(Vec<Vec<Vec<u8>>>, CollectiveReport), String> {
+    let w = fabric.workers;
+    assert_eq!(shards.len(), w);
+    assert!(shards.iter().all(|s| s.len() == w));
+    let spec = transport.spec()?;
+    let mut report = CollectiveReport {
+        op: "alltoall".into(),
+        transport: transport.name(),
+        ..Default::default()
+    };
+    let mut out: Vec<Vec<Vec<u8>>> = vec![vec![Vec::new(); w]; w];
+    for i in 0..w {
+        out[i][i] = shards[i][i].clone();
+    }
+    for s in 1..w {
+        let mut max_bytes = 0usize;
+        let mut max_codec = 0f64;
+        for i in 0..w {
+            let dst = (i + s) % w;
+            let data = &shards[i][dst];
+            let t0 = Instant::now();
+            let payload = encode_payload(&spec, data);
+            let decoded = decode_payload(&spec, &payload, data.len());
+            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
+            report.wire_bytes += payload.len() as u64;
+            report.raw_bytes += data.len() as u64;
+            max_bytes = max_bytes.max(payload.len());
+            out[dst][i] = decoded;
+        }
+        report.steps += 1;
+        // s ring hops to reach distance s.
+        report.network_time_s += fabric.wire_time(max_bytes) * s as f64;
+        report.codec_time_s += max_codec;
+    }
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{TensorGen, TensorKind};
+    use crate::util::rng::Rng;
+
+    fn random_data(w: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..w)
+            .map(|_| {
+                let mut v = vec![0f32; n];
+                rng.fill_normal_f32(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn exact_sum(data: &[Vec<f32>]) -> Vec<f32> {
+        let n = data[0].len();
+        let mut out = vec![0f32; n];
+        for d in data {
+            for (o, v) in out.iter_mut().zip(d) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    fn calib(seed: u64) -> Box<Histogram> {
+        let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+        let mut rng = Rng::new(seed);
+        Box::new(Histogram::from_symbols(&gen.symbols(&mut rng, 256 * BLOCK)))
+    }
+
+    #[test]
+    fn allreduce_workers_bit_identical() {
+        let fabric = Fabric::pod(4);
+        let data = random_data(4, 4 * BLOCK * 4, 1);
+        for transport in [
+            Transport::Raw,
+            Transport::Compressed { codec: "huffman".into(), calibration: calib(1) },
+        ] {
+            let (results, report) =
+                ring_allreduce(&fabric, &data, &transport).unwrap();
+            for (wkr, r) in results.iter().enumerate() {
+                assert_eq!(
+                    r, &results[0],
+                    "worker {wkr} diverged via {}",
+                    transport.name()
+                );
+            }
+            assert_eq!(report.steps, 2 * (4 - 1));
+        }
+    }
+
+    #[test]
+    fn allreduce_approximates_exact_sum() {
+        let fabric = Fabric::pod(4);
+        let data = random_data(4, 4 * BLOCK * 8, 3);
+        let want = exact_sum(&data);
+        let (results, _) =
+            ring_allreduce(&fabric, &data, &Transport::Raw).unwrap();
+        let scale: f32 = want.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        for (a, b) in results[0].iter().zip(&want) {
+            // Each of the ≤ w quantizations adds ≤ 2^-4 relative noise.
+            assert!((a - b).abs() <= scale * 0.25 + 0.2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn allreduce_lossless_transport_invariant() {
+        // Raw vs Huffman transport must give *identical* results — the
+        // codec is lossless, so only bytes differ, never values.
+        let fabric = Fabric::pod(4);
+        let data = random_data(4, 4 * BLOCK * 8, 4);
+        let (raw, _) =
+            ring_allreduce(&fabric, &data, &Transport::Raw).unwrap();
+        let (comp, _) = ring_allreduce(
+            &fabric,
+            &data,
+            &Transport::Compressed {
+                codec: "qlc".into(),
+                calibration: calib(4),
+            },
+        )
+        .unwrap();
+        assert_eq!(raw, comp);
+    }
+
+    #[test]
+    fn allreduce_compression_reduces_wire_bytes() {
+        let fabric = Fabric::pod(4);
+        let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+        let mut rng = Rng::new(2);
+        let data: Vec<Vec<f32>> =
+            (0..4).map(|_| gen.generate(&mut rng, 4 * BLOCK * 32)).collect();
+        let (_, raw) =
+            ring_allreduce(&fabric, &data, &Transport::Raw).unwrap();
+        let (_, comp) = ring_allreduce(
+            &fabric,
+            &data,
+            &Transport::Compressed {
+                codec: "qlc".into(),
+                calibration: calib(2),
+            },
+        )
+        .unwrap();
+        assert!(
+            comp.wire_bytes < raw.wire_bytes,
+            "{} !< {}",
+            comp.wire_bytes,
+            raw.wire_bytes
+        );
+        assert!(comp.compression_ratio() > 1.0);
+        assert_eq!(comp.raw_bytes, raw.raw_bytes);
+    }
+
+    #[test]
+    fn allgather_collects_identical_streams() {
+        let fabric = Fabric::pod(4);
+        let gen = TensorGen::new(TensorKind::Weight, Variant::ExmY);
+        let mut rng = Rng::new(4);
+        let shards: Vec<Vec<u8>> =
+            (0..4).map(|_| gen.symbols(&mut rng, 8 * BLOCK)).collect();
+        let scales: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; 8]).collect();
+        let cal = Histogram::from_symbols(&shards.concat());
+        let (gathered, report) = ring_allgather(
+            &fabric,
+            &shards,
+            &scales,
+            &Transport::Compressed {
+                codec: "huffman".into(),
+                calibration: Box::new(cal),
+            },
+        )
+        .unwrap();
+        assert_eq!(gathered, shards.concat());
+        assert_eq!(report.steps, 3);
+        assert!(report.wire_bytes > 0);
+    }
+
+    #[test]
+    fn alltoall_permutes_shards() {
+        let fabric = Fabric::pod(3);
+        let shards: Vec<Vec<Vec<u8>>> = (0..3)
+            .map(|i| (0..3).map(|j| vec![(i * 3 + j) as u8; 64]).collect())
+            .collect();
+        let (out, report) =
+            alltoall(&fabric, &shards, &Transport::Raw).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(out[j][i], shards[i][j], "shard {i}->{j}");
+            }
+        }
+        assert_eq!(report.steps, 2);
+    }
+
+    #[test]
+    fn network_time_decreases_with_bandwidth() {
+        let data = random_data(4, 4 * BLOCK * 16, 5);
+        let slow =
+            Fabric { workers: 4, link_bandwidth: 1e9, link_latency: 1e-6 };
+        let fast =
+            Fabric { workers: 4, link_bandwidth: 100e9, link_latency: 1e-6 };
+        let (_, r_slow) =
+            ring_allreduce(&slow, &data, &Transport::Raw).unwrap();
+        let (_, r_fast) =
+            ring_allreduce(&fast, &data, &Transport::Raw).unwrap();
+        assert!(r_slow.network_time_s > r_fast.network_time_s);
+        assert_eq!(r_slow.wire_bytes, r_fast.wire_bytes);
+    }
+}
+
+/// Ring reduce-scatter: each worker ends with the fully-reduced shard
+/// it owns (`(i + 1) mod w`), quantized.  The first phase of
+/// [`ring_allreduce`], exposed standalone (ZeRO-style sharded
+/// optimizers consume exactly this).
+pub fn ring_reduce_scatter(
+    fabric: &Fabric,
+    worker_data: &[Vec<f32>],
+    transport: &Transport,
+) -> Result<(Vec<(usize, QuantizedBlocks)>, CollectiveReport), String> {
+    let w = fabric.workers;
+    assert_eq!(worker_data.len(), w);
+    let n = worker_data[0].len();
+    assert!(n % (w * BLOCK) == 0);
+    let chunk = n / w;
+    let quant = BlockQuantizer::new(Variant::ExmY);
+    let spec = transport.spec()?;
+    let mut report = CollectiveReport {
+        op: "reduce_scatter".into(),
+        transport: transport.name(),
+        ..Default::default()
+    };
+    let mut chunks: Vec<Vec<Vec<f32>>> = worker_data
+        .iter()
+        .map(|d| d.chunks(chunk).map(|c| c.to_vec()).collect())
+        .collect();
+    for s in 0..w - 1 {
+        let mut max_bytes = 0usize;
+        let mut max_codec = 0f64;
+        let mut deliveries: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        for i in 0..w {
+            let ci = (i + w - s) % w;
+            let t0 = Instant::now();
+            let q = quant.quantize(&chunks[i][ci]);
+            let payload = encode_payload(&spec, &q.symbols);
+            let symbols = decode_payload(&spec, &payload, q.symbols.len());
+            let received = quant.dequantize(&QuantizedBlocks {
+                symbols,
+                scales: q.scales.clone(),
+                variant: Variant::ExmY,
+            });
+            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
+            let bytes = hop_bytes(payload.len(), q.scales.len());
+            report.wire_bytes += bytes as u64;
+            report.raw_bytes += (q.symbols.len() + q.scales.len()) as u64;
+            max_bytes = max_bytes.max(bytes);
+            deliveries.push(((i + 1) % w, ci, received));
+        }
+        for (dst, ci, data) in deliveries {
+            for (acc, v) in chunks[dst][ci].iter_mut().zip(&data) {
+                *acc += v;
+            }
+        }
+        report.steps += 1;
+        report.network_time_s += fabric.wire_time(max_bytes);
+        report.codec_time_s += max_codec;
+    }
+    let owned = (0..w)
+        .map(|i| {
+            let ci = (i + 1) % w;
+            (ci, quant.quantize(&chunks[i][ci]))
+        })
+        .collect();
+    Ok((owned, report))
+}
+
+#[cfg(test)]
+mod reduce_scatter_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shards_partition_and_match_allreduce() {
+        let w = 4;
+        let mut rng = Rng::new(8);
+        let data: Vec<Vec<f32>> = (0..w)
+            .map(|_| {
+                let mut v = vec![0f32; w * BLOCK * 4];
+                rng.fill_normal_f32(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let fabric = Fabric::pod(w);
+        let (shards, report) =
+            ring_reduce_scatter(&fabric, &data, &Transport::Raw).unwrap();
+        let (full, _) =
+            ring_allreduce(&fabric, &data, &Transport::Raw).unwrap();
+        let quant = BlockQuantizer::new(Variant::ExmY);
+        let chunk = data[0].len() / w;
+        // Every owned shard dequantizes to the matching slice of the
+        // all-reduce result (all-reduce gathers exactly these shards).
+        let mut covered = vec![false; w];
+        for (ci, q) in &shards {
+            let deq = quant.dequantize(q);
+            assert_eq!(&full[0][ci * chunk..(ci + 1) * chunk], &deq[..]);
+            covered[*ci] = true;
+        }
+        assert!(covered.iter().all(|&c| c), "shards must partition");
+        assert_eq!(report.steps, w - 1);
+    }
+
+    #[test]
+    fn half_the_allreduce_traffic() {
+        let w = 4;
+        let mut rng = Rng::new(9);
+        let data: Vec<Vec<f32>> = (0..w)
+            .map(|_| {
+                let mut v = vec![0f32; w * BLOCK * 8];
+                rng.fill_normal_f32(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let fabric = Fabric::pod(w);
+        let (_, rs) =
+            ring_reduce_scatter(&fabric, &data, &Transport::Raw).unwrap();
+        let (_, ar) =
+            ring_allreduce(&fabric, &data, &Transport::Raw).unwrap();
+        assert_eq!(rs.wire_bytes * 2, ar.wire_bytes);
+    }
+}

@@ -1,0 +1,78 @@
+//! Pipeline metrics: compression ratio and throughput accounting for
+//! the coordinator (and its JSON report for the CLI).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PipelineMetrics {
+    pub jobs: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    /// Total codec wall time across workers (not wall-clock elapsed).
+    pub codec_seconds: f64,
+}
+
+impl PipelineMetrics {
+    /// Fraction of bytes removed (the paper's metric).
+    pub fn compressibility(&self) -> f64 {
+        if self.input_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.output_bytes as f64 / self.input_bytes as f64
+    }
+
+    /// Aggregate codec throughput, MB/s (1e6 bytes).
+    pub fn throughput_mbps(&self) -> f64 {
+        if self.codec_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.input_bytes as f64 / self.codec_seconds / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("jobs", self.jobs as usize)
+            .set("input_bytes", self.input_bytes as usize)
+            .set("output_bytes", self.output_bytes as usize)
+            .set("codec_seconds", self.codec_seconds)
+            .set("compressibility", self.compressibility())
+            .set("throughput_mbps", self.throughput_mbps())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.compressibility(), 0.0);
+        assert_eq!(m.throughput_mbps(), 0.0);
+    }
+
+    #[test]
+    fn compressibility_math() {
+        let m = PipelineMetrics {
+            jobs: 1,
+            input_bytes: 100,
+            output_bytes: 85,
+            codec_seconds: 0.5,
+        };
+        assert!((m.compressibility() - 0.15).abs() < 1e-12);
+        assert!((m.throughput_mbps() - 100.0 / 0.5 / 1e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_fields() {
+        let m = PipelineMetrics {
+            jobs: 3,
+            input_bytes: 1000,
+            output_bytes: 900,
+            codec_seconds: 1.0,
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("jobs").unwrap().as_usize(), Some(3));
+        assert!(j.get("compressibility").unwrap().as_f64().unwrap() > 0.09);
+    }
+}

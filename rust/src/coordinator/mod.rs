@@ -1,0 +1,284 @@
+//! Threaded leader/worker compression pipeline — the L3 service that
+//! puts the codec on a request path: tensors arrive as symbol streams,
+//! are chunked, compressed in parallel by a worker pool with bounded
+//! queues (backpressure), and re-assembled in order by the leader.
+//!
+//! The paper's contribution is the codec itself, so this coordinator is
+//! deliberately thin but real: ordered delivery, worker-count scaling,
+//! per-job metrics, and failure containment are all exercised by the
+//! tests and the `pipeline` benches.
+
+pub mod metrics;
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use crate::codecs::frame::{self, CodecSpec};
+use crate::stats::Histogram;
+use metrics::PipelineMetrics;
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub workers: usize,
+    /// Symbols per compression job.
+    pub chunk_size: usize,
+    /// Bounded queue depth (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { workers: 4, chunk_size: 64 * 1024, queue_depth: 8 }
+    }
+}
+
+struct Job {
+    seq: usize,
+    symbols: Vec<u8>,
+}
+
+struct Done {
+    seq: usize,
+    frame: Vec<u8>,
+    n_symbols: usize,
+    codec_seconds: f64,
+}
+
+/// A running compression pipeline bound to one codec spec.
+pub struct Pipeline {
+    tx: Option<SyncSender<Job>>,
+    rx_done: Receiver<Done>,
+    handles: Vec<JoinHandle<()>>,
+    metrics: Arc<Mutex<PipelineMetrics>>,
+    chunk_size: usize,
+}
+
+impl Pipeline {
+    /// Spawn the worker pool. `codec` and `calibration` follow
+    /// [`CodecSpec::by_name`].
+    pub fn new(
+        config: PipelineConfig,
+        codec: &str,
+        calibration: &Histogram,
+    ) -> Result<Pipeline, String> {
+        assert!(config.workers >= 1);
+        assert!(config.chunk_size >= 1);
+        let (tx, rx) = sync_channel::<Job>(config.queue_depth);
+        let (tx_done, rx_done) = sync_channel::<Done>(config.queue_depth * 2);
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Mutex::new(PipelineMetrics::default()));
+
+        let mut handles = Vec::with_capacity(config.workers);
+        for _ in 0..config.workers {
+            // Each worker owns its own codec tables (no sharing/locking
+            // on the hot path).
+            let spec = CodecSpec::by_name(codec, calibration)?;
+            let rx = rx.clone();
+            let tx_done = tx_done.clone();
+            let metrics = metrics.clone();
+            handles.push(thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().expect("job queue");
+                    guard.recv()
+                };
+                let Ok(job) = job else { break };
+                let t0 = Instant::now();
+                let frame = frame::compress(&spec, &job.symbols);
+                let dt = t0.elapsed().as_secs_f64();
+                {
+                    let mut m = metrics.lock().expect("metrics");
+                    m.jobs += 1;
+                    m.input_bytes += job.symbols.len() as u64;
+                    m.output_bytes += frame.len() as u64;
+                    m.codec_seconds += dt;
+                }
+                if tx_done
+                    .send(Done {
+                        seq: job.seq,
+                        frame,
+                        n_symbols: job.symbols.len(),
+                        codec_seconds: dt,
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }));
+        }
+        Ok(Pipeline {
+            tx: Some(tx),
+            rx_done,
+            handles,
+            metrics,
+            chunk_size: config.chunk_size,
+        })
+    }
+
+    /// Compress a full stream: chunk, fan out, re-assemble in order.
+    /// Returns the ordered frames.
+    pub fn compress_stream(&self, symbols: &[u8]) -> Vec<Vec<u8>> {
+        let tx = self.tx.as_ref().expect("pipeline already shut down");
+        let chunks: Vec<&[u8]> = symbols.chunks(self.chunk_size).collect();
+        let total = chunks.len();
+        let mut results: Vec<Option<Vec<u8>>> = vec![None; total];
+        let mut submitted = 0usize;
+        let mut received = 0usize;
+        // Interleave submit/drain so bounded queues never deadlock.
+        while received < total {
+            while submitted < total {
+                let job = Job {
+                    seq: submitted,
+                    symbols: chunks[submitted].to_vec(),
+                };
+                match tx.try_send(job) {
+                    Ok(()) => submitted += 1,
+                    Err(std::sync::mpsc::TrySendError::Full(_)) => break,
+                    Err(e) => panic!("pipeline send: {e}"),
+                }
+            }
+            let done = self.rx_done.recv().expect("pipeline drain");
+            results[done.seq] = Some(done.frame);
+            let _ = (done.n_symbols, done.codec_seconds);
+            received += 1;
+        }
+        results.into_iter().map(|r| r.expect("all chunks done")).collect()
+    }
+
+    /// Convenience: compress and decompress back, returning the
+    /// reconstructed stream (used by integration tests).
+    pub fn roundtrip(&self, symbols: &[u8]) -> Vec<u8> {
+        self.compress_stream(symbols)
+            .iter()
+            .flat_map(|f| frame::decompress(f).expect("pipeline frame"))
+            .collect()
+    }
+
+    pub fn metrics(&self) -> PipelineMetrics {
+        self.metrics.lock().expect("metrics").clone()
+    }
+
+    /// Graceful shutdown (also runs on drop).
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // closes the job queue
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{TensorGen, TensorKind};
+    use crate::formats::Variant;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> (Vec<u8>, Histogram) {
+        let gen = TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY);
+        let mut rng = Rng::new(seed);
+        let symbols = gen.symbols(&mut rng, n);
+        let hist = Histogram::from_symbols(&symbols);
+        (symbols, hist)
+    }
+
+    #[test]
+    fn ordered_roundtrip() {
+        let (symbols, hist) = sample(512 * 1024, 1);
+        let cfg = PipelineConfig { workers: 4, chunk_size: 10_000, queue_depth: 4 };
+        let pipe = Pipeline::new(cfg, "qlc", &hist).unwrap();
+        assert_eq!(pipe.roundtrip(&symbols), symbols);
+    }
+
+    #[test]
+    fn single_worker_matches_multi() {
+        let (symbols, hist) = sample(128 * 1024, 2);
+        let one = Pipeline::new(
+            PipelineConfig { workers: 1, chunk_size: 8192, queue_depth: 2 },
+            "huffman",
+            &hist,
+        )
+        .unwrap();
+        let many = Pipeline::new(
+            PipelineConfig { workers: 8, chunk_size: 8192, queue_depth: 8 },
+            "huffman",
+            &hist,
+        )
+        .unwrap();
+        assert_eq!(
+            one.compress_stream(&symbols),
+            many.compress_stream(&symbols),
+            "frame content must not depend on worker count"
+        );
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let (symbols, hist) = sample(64 * 1024, 3);
+        let pipe = Pipeline::new(
+            PipelineConfig { workers: 2, chunk_size: 4096, queue_depth: 4 },
+            "qlc-t1",
+            &hist,
+        )
+        .unwrap();
+        let frames = pipe.compress_stream(&symbols);
+        let m = pipe.metrics();
+        assert_eq!(m.jobs as usize, frames.len());
+        assert_eq!(m.input_bytes as usize, symbols.len());
+        assert!(m.output_bytes > 0);
+        assert!(m.codec_seconds > 0.0);
+        assert!(m.compressibility() > 0.0, "skewed data must compress");
+    }
+
+    #[test]
+    fn tiny_chunks_and_empty_stream() {
+        let (_, hist) = sample(1024, 4);
+        let pipe = Pipeline::new(
+            PipelineConfig { workers: 3, chunk_size: 1, queue_depth: 2 },
+            "raw",
+            &hist,
+        )
+        .unwrap();
+        assert_eq!(pipe.roundtrip(&[]), Vec::<u8>::new());
+        let data = vec![7u8, 8, 9];
+        assert_eq!(pipe.roundtrip(&data), data);
+    }
+
+    #[test]
+    fn more_jobs_than_queue_depth() {
+        let (symbols, hist) = sample(256 * 1024, 5);
+        let pipe = Pipeline::new(
+            PipelineConfig { workers: 2, chunk_size: 1024, queue_depth: 2 },
+            "qlc",
+            &hist,
+        )
+        .unwrap();
+        // 256 jobs through a depth-2 queue: backpressure must not
+        // deadlock or reorder.
+        assert_eq!(pipe.roundtrip(&symbols), symbols);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let (_, hist) = sample(1024, 6);
+        let mut pipe =
+            Pipeline::new(PipelineConfig::default(), "raw", &hist).unwrap();
+        pipe.shutdown();
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn unknown_codec_fails_fast() {
+        let (_, hist) = sample(1024, 7);
+        assert!(Pipeline::new(PipelineConfig::default(), "lzma", &hist)
+            .is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! bfloat16-precision GELU — the source of the paper's FFN2 zero
+//! spike.
+//!
+//! In mixed-precision training the GELU's tanh saturates to exactly
+//! −1 in bf16 for sufficiently negative pre-activations, so the
+//! activation output is exactly zero.  A pure-f32 GELU never reaches
+//! zero and would miss Fig. 4's dominant symbol entirely.  Mirrors
+//! `python/compile/model.py::_gelu_bf16`.
+
+/// Round an f32 to bfloat16 precision (round-to-nearest-even).
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let round = 0x7FFFu32 + ((bits >> 16) & 1);
+    f32::from_bits((bits.wrapping_add(round)) & 0xFFFF_0000)
+}
+
+/// tanh-approximation GELU evaluated at bf16 precision.
+pub fn gelu_bf16(x: f32) -> f32 {
+    let x = round_bf16(x);
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    let inner = round_bf16(c * (x + 0.044715 * x * x * x));
+    let t = round_bf16(inner.tanh());
+    round_bf16(0.5 * x * round_bf16(1.0 + t))
+}
+
+/// d/dx of the tanh-approximation GELU, also at bf16 precision
+/// (zero wherever the forward saturated — gradients share the spike).
+pub fn gelu_prime_bf16(x: f32) -> f32 {
+    let x = round_bf16(x);
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    let inner = round_bf16(c * (x + 0.044715 * x * x * x));
+    let t = round_bf16(inner.tanh());
+    let sech2 = round_bf16(1.0 - t * t);
+    let dinner = round_bf16(c * (1.0 + 3.0 * 0.044715 * x * x));
+    round_bf16(0.5 * round_bf16(1.0 + t) + 0.5 * x * sech2 * dinner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_bf16_exact_values() {
+        assert_eq!(round_bf16(1.0), 1.0);
+        assert_eq!(round_bf16(0.0), 0.0);
+        assert_eq!(round_bf16(-2.0), -2.0);
+    }
+
+    #[test]
+    fn round_bf16_drops_mantissa() {
+        // 1 + 2^-10 rounds to 1.0 in bf16 (7 mantissa bits).
+        assert_eq!(round_bf16(1.0 + 2.0f32.powi(-10)), 1.0);
+        // 1 + 2^-7 is representable.
+        assert_eq!(round_bf16(1.0 + 2.0f32.powi(-7)), 1.0 + 2.0f32.powi(-7));
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // Midpoint between 1.0 and 1+2^-7: 1+2^-8 → even (1.0).
+        assert_eq!(round_bf16(1.0 + 2.0f32.powi(-8)), 1.0);
+        // Midpoint between 1+2^-7 and 1+2^-6 → even (1+2^-6).
+        assert_eq!(
+            round_bf16(1.0 + 3.0 * 2.0f32.powi(-8)),
+            1.0 + 2.0f32.powi(-6)
+        );
+    }
+
+    #[test]
+    fn gelu_saturates_to_exact_zero() {
+        let mut saw_zero = false;
+        for i in 0..64 {
+            let x = -8.0 + 0.0625 * i as f32; // [-8, -4)
+            if gelu_bf16(x) == 0.0 {
+                saw_zero = true;
+            }
+        }
+        assert!(saw_zero, "bf16 GELU must emit exact zeros in the tail");
+    }
+
+    #[test]
+    fn bf16_saturates_earlier_than_f32() {
+        // The bf16 zero-threshold (the onset of the paper's spike) must
+        // sit well above the f32 one: more of the input distribution
+        // maps to exact zero.
+        let f32_gelu = |x: f32| {
+            let c = (2.0f32 / std::f32::consts::PI).sqrt();
+            0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+        };
+        let first_zero = |f: &dyn Fn(f32) -> f32| {
+            let mut t = -12.0f32;
+            while t < 0.0 && f(t) == 0.0 {
+                t += 0.01;
+            }
+            t // first x (from below) where f(x) != 0
+        };
+        let bf16_onset = first_zero(&|x| gelu_bf16(x));
+        let f32_onset = first_zero(&f32_gelu);
+        assert!(
+            bf16_onset > f32_onset + 0.5,
+            "bf16 onset {bf16_onset} vs f32 onset {f32_onset}"
+        );
+    }
+
+    #[test]
+    fn gelu_identity_like_for_positive() {
+        for x in [1.0f32, 2.0, 4.0, 8.0] {
+            let g = gelu_bf16(x);
+            assert!((g - x).abs() / x < 0.2, "gelu({x}) = {g}");
+            assert!(g <= x);
+        }
+    }
+
+    #[test]
+    fn gelu_shape() {
+        // GELU is not globally monotone: it dips to ≈ −0.17 near
+        // x ≈ −0.75 and is monotone for x ≥ 0.
+        let mut min = f32::INFINITY;
+        for i in 0..200 {
+            let x = -5.0 + 0.05 * i as f32;
+            let g = gelu_bf16(x);
+            if x < 0.0 {
+                assert!((-0.2..=0.0).contains(&g), "gelu({x}) = {g}");
+            }
+            min = min.min(g);
+        }
+        assert!(min < -0.15, "dip missing: min {min}");
+        let mut prev = f32::NEG_INFINITY;
+        for i in 0..100 {
+            let x = 0.05 * i as f32;
+            let g = gelu_bf16(x);
+            assert!(g >= prev - 1e-6, "non-monotone at {x} (positive side)");
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn gelu_prime_zero_where_saturated() {
+        assert_eq!(gelu_prime_bf16(-8.0), 0.0);
+        assert!(gelu_prime_bf16(0.0) > 0.4);
+        assert!((gelu_prime_bf16(8.0) - 1.0).abs() < 0.05);
+    }
+}

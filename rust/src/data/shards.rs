@@ -1,0 +1,139 @@
+//! The paper's shard model: each tensor type exists as
+//! `layers × shards-per-layer` shards (18 × 64 = 1152 for Gemma 2B on
+//! 64 TPUs); PMFs are averaged over all shards (paper §4: "averaged
+//! over all shards").
+
+use super::{TensorGen, TensorKind};
+use crate::formats::Variant;
+use crate::stats::{average_pmfs, Histogram, Pmf};
+use crate::util::rng::Rng;
+
+/// Shard topology.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    pub layers: usize,
+    pub shards_per_layer: usize,
+    /// Symbols sampled per shard.
+    pub symbols_per_shard: usize,
+}
+
+impl ShardConfig {
+    /// The paper's topology, scaled down by `scale` (1 = full 18×64).
+    pub fn paper_scaled(scale: usize) -> Self {
+        ShardConfig {
+            layers: (18 / scale).max(1),
+            shards_per_layer: (64 / scale).max(1),
+            symbols_per_shard: 32 * 1024,
+        }
+    }
+
+    pub fn total_shards(&self) -> usize {
+        self.layers * self.shards_per_layer
+    }
+}
+
+/// All shards of one tensor type, with per-shard histograms.
+#[derive(Clone, Debug)]
+pub struct ShardSet {
+    pub kind: TensorKind,
+    pub config: ShardConfig,
+    pub histograms: Vec<Histogram>,
+}
+
+impl ShardSet {
+    /// Generate every shard (deterministic per `seed`; each shard gets
+    /// an independent RNG stream, and a mild per-layer scale drift so
+    /// shards are similar-but-not-identical, as across a real model).
+    pub fn generate(
+        kind: TensorKind,
+        config: ShardConfig,
+        knob: f64,
+        seed: u64,
+    ) -> Self {
+        let mut root = Rng::new(seed);
+        let mut histograms = Vec::with_capacity(config.total_shards());
+        for layer in 0..config.layers {
+            // Per-layer drift of the statistics knob (±15%).
+            let drift = 1.0 + 0.15 * (root.uniform() * 2.0 - 1.0);
+            for shard in 0..config.shards_per_layer {
+                let mut rng =
+                    root.fork((layer * config.shards_per_layer + shard) as u64);
+                let gen = TensorGen::new(kind, Variant::ExmY)
+                    .with_knob(knob * drift);
+                let symbols = gen.symbols(&mut rng, config.symbols_per_shard);
+                histograms.push(Histogram::from_symbols(&symbols));
+            }
+        }
+        ShardSet { kind, config, histograms }
+    }
+
+    /// The paper's averaged PMF.
+    pub fn average_pmf(&self) -> Pmf {
+        let pmfs: Vec<Pmf> = self.histograms.iter().map(|h| h.pmf()).collect();
+        average_pmfs(&pmfs)
+    }
+
+    /// Pooled histogram (total counts across shards).
+    pub fn pooled(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for shard in &self.histograms {
+            h.merge(shard);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ShardConfig {
+        ShardConfig { layers: 3, shards_per_layer: 4, symbols_per_shard: 8192 }
+    }
+
+    #[test]
+    fn shard_count() {
+        let set = ShardSet::generate(TensorKind::Ffn1Act, small(), 0.55, 1);
+        assert_eq!(set.histograms.len(), 12);
+        assert_eq!(set.config.total_shards(), 12);
+    }
+
+    #[test]
+    fn paper_scaled_topology() {
+        let full = ShardConfig::paper_scaled(1);
+        assert_eq!(full.layers, 18);
+        assert_eq!(full.shards_per_layer, 64);
+        let sixth = ShardConfig::paper_scaled(6);
+        assert_eq!(sixth.layers, 3);
+        assert_eq!(sixth.total_shards(), 30);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ShardSet::generate(TensorKind::Weight, small(), 0.3, 9);
+        let b = ShardSet::generate(TensorKind::Weight, small(), 0.3, 9);
+        assert_eq!(a.histograms[5], b.histograms[5]);
+    }
+
+    #[test]
+    fn shards_differ_from_each_other() {
+        let set = ShardSet::generate(TensorKind::Ffn1Act, small(), 0.55, 2);
+        assert_ne!(set.histograms[0], set.histograms[1]);
+    }
+
+    #[test]
+    fn average_pmf_close_to_pooled_pmf() {
+        // Equal-sized shards ⇒ the two aggregations agree.
+        let set = ShardSet::generate(TensorKind::Ffn1Act, small(), 0.55, 3);
+        let avg = set.average_pmf();
+        let pooled = set.pooled().pmf();
+        assert!(avg.tv_distance(&pooled) < 1e-9);
+    }
+
+    #[test]
+    fn averaged_entropy_in_expected_band() {
+        let set = ShardSet::generate(TensorKind::Ffn2Act, small(), 2.5, 4);
+        let h = set.average_pmf().entropy();
+        assert!((4.5..7.6).contains(&h), "h={h}");
+    }
+}

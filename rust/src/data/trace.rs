@@ -1,0 +1,162 @@
+//! Symbol-trace persistence: raw symbol bytes + a JSON sidecar with
+//! provenance (kind, seed, entropy).  Lets the benches and the CLI
+//! re-use harvested tensors without re-running the PJRT runtime.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::stats::Histogram;
+use crate::util::json::Json;
+
+/// A stored symbol trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub symbols: Vec<u8>,
+    /// Free-form provenance fields.
+    pub meta: Json,
+}
+
+impl Trace {
+    pub fn new(name: &str, symbols: Vec<u8>) -> Self {
+        Trace { name: name.to_string(), symbols, meta: Json::obj() }
+    }
+
+    pub fn with_meta(mut self, key: &str, value: impl Into<Json>) -> Self {
+        self.meta = self.meta.set(key, value);
+        self
+    }
+
+    fn paths(dir: &Path, name: &str) -> (PathBuf, PathBuf) {
+        (
+            dir.join(format!("{name}.syms")),
+            dir.join(format!("{name}.json")),
+        )
+    }
+
+    /// Write `<dir>/<name>.syms` + `<dir>/<name>.json`.
+    pub fn save(&self, dir: &Path) -> io::Result<()> {
+        fs::create_dir_all(dir)?;
+        let (sym_path, meta_path) = Self::paths(dir, &self.name);
+        fs::write(&sym_path, &self.symbols)?;
+        let hist = if self.symbols.is_empty() {
+            None
+        } else {
+            Some(Histogram::from_symbols(&self.symbols))
+        };
+        let mut meta = self
+            .meta
+            .clone()
+            .set("name", self.name.as_str())
+            .set("num_symbols", self.symbols.len());
+        if let Some(h) = hist {
+            meta = meta.set("entropy_bits", h.pmf().entropy());
+        }
+        fs::write(&meta_path, meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load a trace saved by [`Trace::save`].
+    pub fn load(dir: &Path, name: &str) -> io::Result<Trace> {
+        let (sym_path, meta_path) = Self::paths(dir, name);
+        let symbols = fs::read(&sym_path)?;
+        let meta_text = fs::read_to_string(&meta_path)?;
+        let meta = Json::parse(&meta_text).map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidData, e.to_string())
+        })?;
+        let declared = meta.get("num_symbols").and_then(Json::as_usize);
+        if declared != Some(symbols.len()) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "sidecar declares {declared:?} symbols, file has {}",
+                    symbols.len()
+                ),
+            ));
+        }
+        Ok(Trace { name: name.to_string(), symbols, meta })
+    }
+
+    /// All trace names present in `dir`.
+    pub fn list(dir: &Path) -> io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().map(|e| e == "syms").unwrap_or(false) {
+                if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "qlc-trace-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let mut rng = Rng::new(1);
+        let mut symbols = vec![0u8; 4096];
+        rng.fill_bytes(&mut symbols);
+        let trace = Trace::new("ffn1_act", symbols.clone())
+            .with_meta("kind", "ffn1_act")
+            .with_meta("seed", 1usize);
+        trace.save(&dir).unwrap();
+        let back = Trace::load(&dir, "ffn1_act").unwrap();
+        assert_eq!(back.symbols, symbols);
+        assert_eq!(back.meta.get("kind").unwrap().as_str(), Some("ffn1_act"));
+        assert!(back.meta.get("entropy_bits").unwrap().as_f64().unwrap() > 0.0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn list_traces() {
+        let dir = tmp_dir("list");
+        Trace::new("b", vec![1, 2]).save(&dir).unwrap();
+        Trace::new("a", vec![3]).save(&dir).unwrap();
+        assert_eq!(Trace::list(&dir).unwrap(), vec!["a", "b"]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn detects_size_mismatch() {
+        let dir = tmp_dir("mismatch");
+        Trace::new("t", vec![1, 2, 3]).save(&dir).unwrap();
+        fs::write(dir.join("t.syms"), [1u8, 2]).unwrap();
+        assert!(Trace::load(&dir, "t").is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_trace_errors() {
+        let dir = tmp_dir("missing");
+        fs::create_dir_all(&dir).unwrap();
+        assert!(Trace::load(&dir, "nope").is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_trace_roundtrips() {
+        let dir = tmp_dir("empty");
+        Trace::new("e", vec![]).save(&dir).unwrap();
+        let back = Trace::load(&dir, "e").unwrap();
+        assert!(back.symbols.is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,307 @@
+//! The e4m3 8-bit floating-point format.
+//!
+//! Symbol byte layout: `sign(1) | exponent(4) | mantissa(3)`, bias 7.
+//! `exp == 0` encodes subnormals `m * 2^-9`; otherwise
+//! `(1 + m/8) * 2^(exp-7)`.
+//!
+//! Two variants (paper §3):
+//! * [`Variant::ExmY`] — the eXmY e4m3 the paper uses: **all 256
+//!   encodings are finite**, max magnitude `1.875 * 2^8 = 480`.
+//! * [`Variant::Ocp`] — OCP MX e4m3: `S.1111.111` is NaN, max 448.
+//!
+//! These tables are mirrored bit-for-bit by
+//! `python/compile/kernels/e4m3.py`; the golden tests below match
+//! `python/tests/test_e4m3.py`.
+
+pub const SIGN_BIT: u8 = 0x80;
+pub const MAN_BITS: u32 = 3;
+pub const BIAS: i32 = 7;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// eXmY: all 256 encodings finite (paper default).
+    ExmY,
+    /// OCP MX: 0x7F / 0xFF are NaN.
+    Ocp,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::ExmY => "exmy",
+            Variant::Ocp => "ocp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "exmy" => Some(Variant::ExmY),
+            "ocp" => Some(Variant::Ocp),
+            _ => None,
+        }
+    }
+}
+
+/// Precomputed tables for one e4m3 variant.
+#[derive(Clone, Debug)]
+pub struct E4m3 {
+    pub variant: Variant,
+    /// 128 non-negative magnitudes by low-7-bit code; NaN slot = +inf
+    /// (never selected by the quantizer).
+    magnitudes: [f32; 128],
+    /// Decision midpoints between consecutive finite magnitudes.
+    boundaries: Vec<f32>,
+    /// All 256 symbol values (0x80 = -0.0); OCP NaNs are f32::NAN.
+    values: [f32; 256],
+    max_finite: f32,
+}
+
+impl E4m3 {
+    pub fn new(variant: Variant) -> Self {
+        let mut magnitudes = [0f32; 128];
+        for (i, m) in magnitudes.iter_mut().enumerate() {
+            let e = (i as u32) >> MAN_BITS;
+            let man = (i as u32) & ((1 << MAN_BITS) - 1);
+            *m = if e == 0 {
+                // Subnormal: m * 2^(1 - bias - man_bits) = m * 2^-9
+                man as f32 * (2.0f32).powi(1 - BIAS - MAN_BITS as i32)
+            } else {
+                (1.0 + man as f32 / 8.0) * (2.0f32).powi(e as i32 - BIAS)
+            };
+        }
+        if variant == Variant::Ocp {
+            magnitudes[127] = f32::INFINITY;
+        }
+        let finite: Vec<f32> = magnitudes
+            .iter()
+            .copied()
+            .filter(|m| m.is_finite())
+            .collect();
+        let boundaries: Vec<f32> = finite
+            .windows(2)
+            .map(|w| ((w[0] as f64 + w[1] as f64) / 2.0) as f32)
+            .collect();
+        let max_finite = *finite.last().unwrap();
+        let mut values = [0f32; 256];
+        for i in 0..128 {
+            let v = if magnitudes[i].is_infinite() {
+                f32::NAN
+            } else {
+                magnitudes[i]
+            };
+            values[i] = v;
+            values[i + 128] = -v;
+        }
+        E4m3 { variant, magnitudes, boundaries, values, max_finite }
+    }
+
+    /// Largest finite magnitude (480 eXmY, 448 OCP).
+    #[inline]
+    pub fn max_finite(&self) -> f32 {
+        self.max_finite
+    }
+
+    /// Value of a symbol byte (NaN for OCP NaN codes).
+    #[inline]
+    pub fn decode(&self, symbol: u8) -> f32 {
+        self.values[symbol as usize]
+    }
+
+    /// All 256 symbol values.
+    pub fn values(&self) -> &[f32; 256] {
+        &self.values
+    }
+
+    /// Non-negative magnitude table (index = low 7 bits).
+    pub fn magnitudes(&self) -> &[f32; 128] {
+        &self.magnitudes
+    }
+
+    pub fn boundaries(&self) -> &[f32] {
+        &self.boundaries
+    }
+
+    /// Quantize a non-negative magnitude (already scaled into the e4m3
+    /// range) to the nearest magnitude index.  Exact midpoints resolve
+    /// to the even index — the same rule as the Pallas kernel and the
+    /// jnp oracle, so all three implementations are bit-identical.
+    ///
+    /// This is the scalar fallback; the hot path lives in
+    /// [`crate::formats::quantizer`].
+    #[inline]
+    pub fn magnitude_index(&self, mag: f32) -> u8 {
+        debug_assert!(mag >= 0.0);
+        // Binary search: count of boundaries strictly below `mag`.
+        let b = &self.boundaries;
+        let mut lo = 0usize;
+        let mut hi = b.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if b[mid] < mag {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        // lo = #{b_i < mag}.  If mag equals boundary b_lo exactly the
+        // "greater than" count is lo; tie → even index.
+        let gt = lo;
+        let tie = b.get(lo).map(|&x| x == mag).unwrap_or(false);
+        let idx = if tie && gt % 2 == 1 { gt + 1 } else { gt };
+        idx as u8
+    }
+
+    /// Encode one value given a block scale. Symbol = sign | mag index.
+    #[inline]
+    pub fn encode_scaled(&self, x: f32, inv_scale: f32) -> u8 {
+        let mag = (x.abs() * inv_scale).min(self.max_finite);
+        let idx = self.magnitude_index(mag);
+        let sign = if x < 0.0 { SIGN_BIT } else { 0 };
+        sign | idx
+    }
+
+    /// True if `symbol` is a NaN encoding in this variant.
+    #[inline]
+    pub fn is_nan_code(&self, symbol: u8) -> bool {
+        self.variant == Variant::Ocp && (symbol & 0x7F) == 0x7F
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exmy() -> E4m3 {
+        E4m3::new(Variant::ExmY)
+    }
+
+    // Golden values mirrored in python/tests/test_e4m3.py.
+    #[test]
+    fn golden_magnitudes() {
+        let t = exmy();
+        let m = t.magnitudes();
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m[1], 0.001953125); // 2^-9
+        assert_eq!(m[7], 7.0 * 2.0f32.powi(-9));
+        assert_eq!(m[8], 2.0f32.powi(-6)); // min normal
+        assert_eq!(m[0x38], 1.0);
+        assert_eq!(m[0x08], 0.015625);
+        assert_eq!(m[0x0F], 0.029296875);
+        assert_eq!(m[0x30], 0.5);
+        assert_eq!(m[0x3C], 1.5);
+        assert_eq!(m[0x40], 2.0);
+        assert_eq!(m[0x7F], 480.0);
+    }
+
+    #[test]
+    fn max_finite_per_variant() {
+        assert_eq!(exmy().max_finite(), 480.0);
+        assert_eq!(E4m3::new(Variant::Ocp).max_finite(), 448.0);
+    }
+
+    #[test]
+    fn strictly_increasing() {
+        let t = exmy();
+        for w in t.magnitudes().windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn boundary_counts() {
+        assert_eq!(exmy().boundaries().len(), 127);
+        assert_eq!(E4m3::new(Variant::Ocp).boundaries().len(), 126);
+    }
+
+    #[test]
+    fn first_boundary() {
+        assert_eq!(exmy().boundaries()[0], 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn decode_signs() {
+        let t = exmy();
+        assert_eq!(t.decode(0x38), 1.0);
+        assert_eq!(t.decode(0xB8), -1.0);
+        assert_eq!(t.decode(0), 0.0);
+        assert_eq!(t.decode(0x80), 0.0);
+        assert!(t.decode(0x80).is_sign_negative());
+        assert_eq!(t.decode(0x7F), 480.0);
+        assert_eq!(t.decode(0xFF), -480.0);
+    }
+
+    #[test]
+    fn ocp_nan_codes() {
+        let t = E4m3::new(Variant::Ocp);
+        assert!(t.decode(0x7F).is_nan());
+        assert!(t.decode(0xFF).is_nan());
+        assert!(t.is_nan_code(0x7F));
+        assert!(t.is_nan_code(0xFF));
+        assert!(!t.is_nan_code(0x7E));
+        assert!(!exmy().is_nan_code(0x7F));
+    }
+
+    #[test]
+    fn magnitude_index_nearest() {
+        let t = exmy();
+        // Exactly representable values map to themselves.
+        for i in 0..128u8 {
+            let m = t.magnitudes()[i as usize];
+            assert_eq!(t.magnitude_index(m), i, "idx {i}");
+        }
+    }
+
+    #[test]
+    fn magnitude_index_rounds_to_nearest() {
+        let t = exmy();
+        let m = t.magnitudes();
+        // Slightly above v[10] stays at 10; nearer v[11] goes to 11.
+        let v10 = m[10];
+        let v11 = m[11];
+        assert_eq!(t.magnitude_index(v10 + (v11 - v10) * 0.25), 10);
+        assert_eq!(t.magnitude_index(v10 + (v11 - v10) * 0.75), 11);
+    }
+
+    #[test]
+    fn tie_goes_to_even() {
+        let t = exmy();
+        // boundary between idx 0 and 1 is 2^-10 → even idx 0.
+        assert_eq!(t.magnitude_index(2.0f32.powi(-10)), 0);
+        // boundary between idx 1 and 2 (0.001953125, 0.00390625) midpoint
+        // = 0.0029296875 → even idx 2.
+        let b = t.boundaries()[1];
+        assert_eq!(t.magnitude_index(b), 2);
+    }
+
+    #[test]
+    fn encode_scaled_clamps() {
+        let t = exmy();
+        assert_eq!(t.encode_scaled(1e30, 1.0), 0x7F);
+        assert_eq!(t.encode_scaled(-1e30, 1.0), 0xFF);
+    }
+
+    #[test]
+    fn encode_scaled_signs() {
+        let t = exmy();
+        assert_eq!(t.encode_scaled(1.0, 1.0), 0x38);
+        assert_eq!(t.encode_scaled(-1.0, 1.0), 0xB8);
+        assert_eq!(t.encode_scaled(0.0, 1.0), 0x00);
+        // Negative zero / tiny negatives keep the sign bit.
+        assert_eq!(t.encode_scaled(-1e-12, 1.0), 0x80);
+    }
+
+    #[test]
+    fn ocp_never_emits_nan_code() {
+        let t = E4m3::new(Variant::Ocp);
+        assert_eq!(t.encode_scaled(1e30, 1.0), 0x7E); // clamps to 448
+        assert_eq!(t.decode(0x7E), 448.0);
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(Variant::parse("exmy"), Some(Variant::ExmY));
+        assert_eq!(Variant::parse("ocp"), Some(Variant::Ocp));
+        assert_eq!(Variant::parse("e5m2"), None);
+        assert_eq!(Variant::ExmY.name(), "exmy");
+    }
+}

@@ -1,0 +1,282 @@
+//! Generic eXmY floating-point formats (paper ref \[11\]: "eXmY: A Data
+//! Type and Technique for Arbitrary Bit Precision Quantization").
+//!
+//! The paper evaluates e4m3, but its method — rank the symbol PMF,
+//! partition into areas — applies to any 8-bit-or-smaller float
+//! layout.  [`ExmyFormat`] builds the magnitude/boundary tables for any
+//! `(exp_bits, man_bits)` split with `exp_bits + man_bits == 7` (one
+//! sign bit, 256 symbols) or fewer total bits, enabling the
+//! cross-format sweep in `benches/ablation_scheme.rs` and the e5m2 /
+//! e3m4 comparisons.
+//!
+//! The e4m3 fast path in [`super::e4m3`] remains the default; this
+//! module generalizes it (and its tests pin both to agree).
+
+/// A sign + exponent + mantissa layout, all-finite (eXmY convention).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ExmySpec {
+    pub exp_bits: u32,
+    pub man_bits: u32,
+}
+
+impl ExmySpec {
+    pub const E4M3: ExmySpec = ExmySpec { exp_bits: 4, man_bits: 3 };
+    pub const E5M2: ExmySpec = ExmySpec { exp_bits: 5, man_bits: 2 };
+    pub const E3M4: ExmySpec = ExmySpec { exp_bits: 3, man_bits: 4 };
+    pub const E2M5: ExmySpec = ExmySpec { exp_bits: 2, man_bits: 5 };
+
+    pub fn parse(s: &str) -> Option<ExmySpec> {
+        let s = s.strip_prefix('e')?;
+        let (e, m) = s.split_once('m')?;
+        let spec = ExmySpec {
+            exp_bits: e.parse().ok()?,
+            man_bits: m.parse().ok()?,
+        };
+        (spec.total_bits() <= 8 && spec.exp_bits >= 1).then_some(spec)
+    }
+
+    pub fn name(&self) -> String {
+        format!("e{}m{}", self.exp_bits, self.man_bits)
+    }
+
+    /// Sign + exponent + mantissa.
+    pub fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Symbol alphabet size (≤ 256).
+    pub fn num_symbols(&self) -> usize {
+        1usize << self.total_bits()
+    }
+
+    /// IEEE-style bias: 2^(e-1) - 1.
+    pub fn bias(&self) -> i32 {
+        (1i32 << (self.exp_bits - 1)) - 1
+    }
+}
+
+/// Precomputed tables for one eXmY format (all encodings finite).
+#[derive(Clone, Debug)]
+pub struct ExmyFormat {
+    pub spec: ExmySpec,
+    magnitudes: Vec<f32>,
+    boundaries: Vec<f32>,
+    max_finite: f32,
+}
+
+impl ExmyFormat {
+    pub fn new(spec: ExmySpec) -> Self {
+        assert!(spec.total_bits() <= 8, "symbols must fit one byte");
+        assert!(spec.exp_bits >= 1);
+        let half = spec.num_symbols() / 2;
+        let man = spec.man_bits;
+        let bias = spec.bias();
+        let mut magnitudes = Vec::with_capacity(half);
+        for i in 0..half {
+            let e = (i as u32) >> man;
+            let m = (i as u32) & ((1 << man) - 1);
+            let v = if e == 0 {
+                m as f64 * 2f64.powi(1 - bias - man as i32)
+            } else {
+                (1.0 + m as f64 / (1u64 << man) as f64)
+                    * 2f64.powi(e as i32 - bias)
+            };
+            magnitudes.push(v as f32);
+        }
+        let boundaries: Vec<f32> = magnitudes
+            .windows(2)
+            .map(|w| ((w[0] as f64 + w[1] as f64) / 2.0) as f32)
+            .collect();
+        let max_finite = *magnitudes.last().unwrap();
+        ExmyFormat { spec, magnitudes, boundaries, max_finite }
+    }
+
+    pub fn max_finite(&self) -> f32 {
+        self.max_finite
+    }
+
+    pub fn magnitudes(&self) -> &[f32] {
+        &self.magnitudes
+    }
+
+    /// Nearest-magnitude index with ties-to-even (the shared rule).
+    pub fn magnitude_index(&self, mag: f32) -> u8 {
+        let b = &self.boundaries;
+        let mut lo = 0usize;
+        let mut hi = b.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if b[mid] < mag {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let tie = b.get(lo).map(|&x| x == mag).unwrap_or(false);
+        let idx = if tie && lo % 2 == 1 { lo + 1 } else { lo };
+        idx as u8
+    }
+
+    /// Quantize one value under a block scale.
+    pub fn encode_scaled(&self, x: f32, inv_scale: f32) -> u8 {
+        let mag = (x.abs() * inv_scale).min(self.max_finite);
+        let idx = self.magnitude_index(mag);
+        let sign = if x < 0.0 {
+            (self.spec.num_symbols() / 2) as u8
+        } else {
+            0
+        };
+        sign | idx
+    }
+
+    /// Decode a symbol to its value (unscaled).
+    pub fn decode(&self, symbol: u8) -> f32 {
+        let half = self.spec.num_symbols() / 2;
+        let idx = (symbol as usize) % half;
+        let v = self.magnitudes[idx];
+        if (symbol as usize) >= half {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Quantize a whole tensor with block-32 absmax scaling; returns
+    /// (symbols, scales).  Mirrors `BlockQuantizer` for e4m3.
+    pub fn quantize_blocks(&self, data: &[f32]) -> (Vec<u8>, Vec<f32>) {
+        assert!(data.len() % 32 == 0);
+        let inv_max = 1.0 / self.max_finite;
+        let mut symbols = vec![0u8; data.len()];
+        let mut scales = vec![0f32; data.len() / 32];
+        for (b, chunk) in data.chunks_exact(32).enumerate() {
+            let absmax = chunk.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            let scale = if absmax > 0.0 { absmax * inv_max } else { 1.0 };
+            scales[b] = scale;
+            let inv_scale = 1.0 / scale;
+            for (o, &x) in symbols[b * 32..].iter_mut().zip(chunk) {
+                *o = self.encode_scaled(x, inv_scale);
+            }
+        }
+        (symbols, scales)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::e4m3::{E4m3, Variant};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn e4m3_matches_dedicated_implementation() {
+        let gen = ExmyFormat::new(ExmySpec::E4M3);
+        let dedicated = E4m3::new(Variant::ExmY);
+        assert_eq!(gen.max_finite(), dedicated.max_finite());
+        for i in 0..128usize {
+            assert_eq!(
+                gen.magnitudes()[i],
+                dedicated.magnitudes()[i],
+                "magnitude {i}"
+            );
+        }
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = (rng.normal() * 100.0) as f32;
+            assert_eq!(
+                gen.encode_scaled(x, 1.0),
+                dedicated.encode_scaled(x, 1.0),
+                "x={x}"
+            );
+        }
+    }
+
+    #[test]
+    fn e5m2_properties() {
+        let f = ExmyFormat::new(ExmySpec::E5M2);
+        // max = 1.75 * 2^(31-15) = 114688? bias 15, top exp 31:
+        // (1 + 3/4) * 2^16 = 114688.
+        assert_eq!(f.max_finite(), 114_688.0);
+        assert_eq!(f.spec.num_symbols(), 256);
+        // min subnormal = 2^(1-15-2) = 2^-16.
+        assert_eq!(f.magnitudes()[1], 2.0f32.powi(-16));
+    }
+
+    #[test]
+    fn e3m4_properties() {
+        let f = ExmyFormat::new(ExmySpec::E3M4);
+        // bias 3, top exp 7, max = (1 + 15/16) * 2^4 = 31.
+        assert_eq!(f.max_finite(), 31.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ExmySpec::parse("e4m3"), Some(ExmySpec::E4M3));
+        assert_eq!(ExmySpec::parse("e5m2"), Some(ExmySpec::E5M2));
+        assert_eq!(ExmySpec::parse("e9m9"), None);
+        assert_eq!(ExmySpec::parse("m3e4"), None);
+        assert_eq!(ExmySpec::E2M5.name(), "e2m5");
+    }
+
+    #[test]
+    fn decode_inverts_exact_codes() {
+        for spec in [ExmySpec::E4M3, ExmySpec::E5M2, ExmySpec::E3M4] {
+            let f = ExmyFormat::new(spec);
+            for s in 0..spec.num_symbols() as u16 {
+                let v = f.decode(s as u8);
+                let re = f.encode_scaled(v, 1.0);
+                // -0 encodes as +0's negative twin; allow sign-of-zero.
+                if v == 0.0 {
+                    assert_eq!(re & 0x7F, 0, "{}", spec.name());
+                } else {
+                    assert_eq!(re, s as u8, "{} symbol {s}", spec.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_quantize_all_formats() {
+        let mut rng = Rng::new(5);
+        let mut data = vec![0f32; 64 * 32];
+        rng.fill_normal_f32(&mut data, 0.0, 2.0);
+        for spec in [ExmySpec::E4M3, ExmySpec::E5M2, ExmySpec::E3M4,
+                     ExmySpec::E2M5] {
+            let f = ExmyFormat::new(spec);
+            let (symbols, scales) = f.quantize_blocks(&data);
+            assert_eq!(symbols.len(), data.len());
+            assert_eq!(scales.len(), data.len() / 32);
+            // Dequantized error bounded by one mantissa step.
+            let step = 2.0f32.powi(-(spec.man_bits as i32));
+            for (b, chunk) in data.chunks_exact(32).enumerate() {
+                for (i, &x) in chunk.iter().enumerate() {
+                    let y = f.decode(symbols[b * 32 + i]) * scales[b];
+                    let tol = (x.abs() * step)
+                        .max(scales[b] * f.magnitudes()[1] * 1.001);
+                    assert!((x - y).abs() <= tol, "{}: {x} vs {y}",
+                            spec.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mantissa_rich_formats_have_higher_entropy() {
+        // More mantissa bits spread symbols more evenly → higher
+        // entropy → less to gain from entropy coding (context for the
+        // paper's e4m3 focus).
+        use crate::stats::Histogram;
+        let mut rng = Rng::new(9);
+        let mut data = vec![0f32; 2048 * 32];
+        rng.fill_normal_f32(&mut data, 0.0, 1.0);
+        let entropy = |spec: ExmySpec| {
+            let f = ExmyFormat::new(spec);
+            let (symbols, _) = f.quantize_blocks(&data);
+            Histogram::from_symbols(&symbols).pmf().entropy()
+        };
+        let e5m2 = entropy(ExmySpec::E5M2);
+        let e4m3 = entropy(ExmySpec::E4M3);
+        let e3m4 = entropy(ExmySpec::E3M4);
+        assert!(e5m2 < e4m3, "{e5m2} vs {e4m3}");
+        assert!(e4m3 < e3m4, "{e4m3} vs {e3m4}");
+    }
+}

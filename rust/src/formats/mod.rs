@@ -1,0 +1,11 @@
+//! Numeric formats: the e4m3 data type (eXmY and OCP variants) and the
+//! block-scaled quantizer that turns f32 tensors into the byte-symbol
+//! streams the paper compresses.
+
+pub mod e4m3;
+pub mod exmy;
+pub mod quantizer;
+
+pub use e4m3::{E4m3, Variant};
+pub use exmy::{ExmyFormat, ExmySpec};
+pub use quantizer::{BlockQuantizer, QuantizedBlocks, BLOCK};

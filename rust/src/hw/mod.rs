@@ -1,0 +1,527 @@
+//! Hardware decoder cost model — quantifying the paper's central
+//! claim: QLC "significantly speeds up the decoding and simplifies the
+//! hardware complexity" relative to Huffman.
+//!
+//! Three decoder micro-architectures are modelled on real encoded
+//! streams:
+//!
+//! * [`HuffmanSerialModel`] — the bit-serial tree FSM the paper calls
+//!   "slow": one bit per cycle, so a symbol costs its code length in
+//!   cycles, and the *next* symbol cannot start until the walk ends.
+//! * [`HuffmanTableModel`] — a hardware multi-level LUT decoder: one
+//!   cycle per table level touched; storage is the full table array.
+//! * [`QlcModel`] — the paper's decoder: a fixed 2-stage pipeline
+//!   (stage 1: P-bit area lookup → length; stage 2: offset add +
+//!   256-entry LUT).  Length is known after the prefix, so the
+//!   pipeline sustains 1 symbol/cycle regardless of code length.
+//!
+//! Storage is reported in bits; "critical-path stages" is the
+//! worst-case sequential lookups per symbol (a proxy for achievable
+//! clock / pipelining depth).
+
+use crate::bitstream::BitReader;
+use crate::codecs::huffman::build::CodeBook;
+use crate::codecs::huffman::decode::{TableDecoder, TreeDecoder, ROOT_BITS};
+use crate::codecs::qlc::QlcCodec;
+
+/// Outcome of simulating one decoder model over a stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CycleReport {
+    pub model: String,
+    pub symbols: u64,
+    pub cycles: u64,
+    pub storage_bits: u64,
+    /// Worst-case sequential lookups for one symbol.
+    pub worst_stages: u32,
+}
+
+impl CycleReport {
+    pub fn cycles_per_symbol(&self) -> f64 {
+        self.cycles as f64 / self.symbols.max(1) as f64
+    }
+
+    /// Symbols per cycle (pipeline throughput).
+    pub fn throughput(&self) -> f64 {
+        self.symbols as f64 / self.cycles.max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Bit-serial Huffman FSM.
+pub struct HuffmanSerialModel {
+    book: CodeBook,
+    tree: TreeDecoder,
+}
+
+impl HuffmanSerialModel {
+    pub fn new(book: &CodeBook) -> Self {
+        HuffmanSerialModel { book: book.clone(), tree: TreeDecoder::new(book) }
+    }
+
+    /// Node storage: each internal node holds two 9-bit child pointers
+    /// (8-bit symbol + leaf flag).
+    pub fn storage_bits(&self) -> u64 {
+        self.tree.node_count() as u64 * 2 * 9
+    }
+
+    /// Simulate: one cycle per bit consumed.
+    pub fn simulate(&self, symbols: &[u8]) -> CycleReport {
+        let lengths = self.book.lengths();
+        let cycles: u64 =
+            symbols.iter().map(|&s| lengths[s as usize] as u64).sum();
+        CycleReport {
+            model: "huffman-serial".into(),
+            symbols: symbols.len() as u64,
+            cycles,
+            storage_bits: self.storage_bits(),
+            worst_stages: self.book.max_length(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Hardware multi-level LUT Huffman decoder.
+pub struct HuffmanTableModel {
+    book: CodeBook,
+    table: TableDecoder,
+}
+
+impl HuffmanTableModel {
+    pub fn new(book: &CodeBook) -> Self {
+        HuffmanTableModel { book: book.clone(), table: TableDecoder::new(book) }
+    }
+
+    /// Entry storage: each entry holds symbol(8) + length(6) + tag(2).
+    pub fn storage_bits(&self) -> u64 {
+        self.table.entry_count() as u64 * 16
+    }
+
+    /// Levels touched for a code of `len` bits.
+    fn levels(len: u32) -> u64 {
+        (len as u64).div_ceil(ROOT_BITS as u64).max(1)
+    }
+
+    pub fn simulate(&self, symbols: &[u8]) -> CycleReport {
+        let lengths = self.book.lengths();
+        let cycles: u64 = symbols
+            .iter()
+            .map(|&s| Self::levels(lengths[s as usize]))
+            .sum();
+        CycleReport {
+            model: "huffman-table".into(),
+            symbols: symbols.len() as u64,
+            cycles,
+            storage_bits: self.storage_bits(),
+            worst_stages: Self::levels(self.book.max_length()) as u32,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The paper's QLC decoder: 2-stage pipeline, 1 symbol/cycle.
+pub struct QlcModel {
+    prefix_bits: u32,
+    num_areas: usize,
+}
+
+impl QlcModel {
+    pub fn new(codec: &QlcCodec) -> Self {
+        QlcModel {
+            prefix_bits: codec.scheme().prefix_bits,
+            num_areas: codec.scheme().num_areas(),
+        }
+    }
+
+    /// Prefix table: 2^P × (4-bit suffix width + 8-bit base rank) plus
+    /// the 256×8-bit output LUT (paper Table 4).
+    pub fn storage_bits(&self) -> u64 {
+        (self.num_areas as u64) * (4 + 8) + 256 * 8
+    }
+
+    pub fn simulate(&self, symbols: &[u8]) -> CycleReport {
+        // Fully pipelined: n symbols in n + (stages-1) cycles.
+        let n = symbols.len() as u64;
+        CycleReport {
+            model: format!("qlc-p{}", self.prefix_bits),
+            symbols: n,
+            cycles: n + 1,
+            storage_bits: self.storage_bits(),
+            worst_stages: 2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Verify the serial model against the real decoder: decoding the
+/// stream bit-by-bit must consume exactly `report.cycles` bits.
+pub fn verify_serial_model(
+    book: &CodeBook,
+    symbols: &[u8],
+    encoded: &[u8],
+) -> bool {
+    let model = HuffmanSerialModel::new(book);
+    let report = model.simulate(symbols);
+    let mut reader = BitReader::new(encoded);
+    let mut out = Vec::with_capacity(symbols.len());
+    if model.tree.decode(&mut reader, symbols.len(), &mut out).is_err() {
+        return false;
+    }
+    out == symbols && reader.bits_consumed() == report.cycles
+}
+
+/// Side-by-side comparison for one PMF (the HEAD experiment).
+pub fn compare_on_stream(
+    book: &CodeBook,
+    qlc: &QlcCodec,
+    symbols: &[u8],
+) -> Vec<CycleReport> {
+    vec![
+        HuffmanSerialModel::new(book).simulate(symbols),
+        HuffmanTableModel::new(book).simulate(symbols),
+        QlcModel::new(qlc).simulate(symbols),
+    ]
+}
+
+/// Decode-speedup headline: serial-Huffman cycles / QLC cycles.
+pub fn qlc_speedup_vs_serial(reports: &[CycleReport]) -> f64 {
+    let serial = reports
+        .iter()
+        .find(|r| r.model == "huffman-serial")
+        .expect("serial report");
+    let qlc = reports
+        .iter()
+        .find(|r| r.model.starts_with("qlc"))
+        .expect("qlc report");
+    serial.cycles as f64 / qlc.cycles as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::qlc::AreaScheme;
+    use crate::stats::Histogram;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn setup(alpha: f64, n: usize) -> (CodeBook, QlcCodec, Vec<u8>) {
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = 1.0 / (1.0 + i as f64).powf(alpha);
+        }
+        let alias = AliasTable::new(&p);
+        let mut rng = Rng::new(3);
+        let symbols = alias.sample_many(&mut rng, n);
+        let hist = Histogram::from_symbols(&symbols);
+        let mut freqs = [0u64; 256];
+        for i in 0..256 {
+            freqs[i] = hist.counts[i].max(1);
+        }
+        let book = CodeBook::build(&freqs, 48);
+        let qlc = QlcCodec::from_pmf(AreaScheme::table1(), &hist.pmf());
+        (book, qlc, symbols)
+    }
+
+    #[test]
+    fn serial_cycles_equal_encoded_bits() {
+        let (book, _, symbols) = setup(1.2, 20_000);
+        let model = HuffmanSerialModel::new(&book);
+        let report = model.simulate(&symbols);
+        let total_bits: u64 = symbols
+            .iter()
+            .map(|&s| book.lengths()[s as usize] as u64)
+            .sum();
+        assert_eq!(report.cycles, total_bits);
+        assert!(report.cycles_per_symbol() >= 1.0);
+    }
+
+    #[test]
+    fn serial_model_verified_against_real_decoder() {
+        let (book, _, symbols) = setup(1.1, 5_000);
+        let mut w = crate::bitstream::BitWriter::new();
+        for &s in &symbols {
+            let (c, l) = book.code(s);
+            w.write_bits(c, l);
+        }
+        let encoded = w.finish();
+        assert!(verify_serial_model(&book, &symbols, &encoded));
+    }
+
+    #[test]
+    fn qlc_sustains_one_symbol_per_cycle() {
+        let (_, qlc, symbols) = setup(1.2, 50_000);
+        let report = QlcModel::new(&qlc).simulate(&symbols);
+        assert!((report.cycles_per_symbol() - 1.0).abs() < 1e-3);
+        assert_eq!(report.worst_stages, 2);
+    }
+
+    #[test]
+    fn qlc_storage_far_below_huffman_table() {
+        let (book, qlc, _) = setup(1.2, 10_000);
+        let h = HuffmanTableModel::new(&book).storage_bits();
+        let q = QlcModel::new(&qlc).storage_bits();
+        assert!(
+            q * 4 < h,
+            "qlc {q} bits should be ≪ huffman table {h} bits"
+        );
+        // The paper's LUT: 256 entries × 8 bits dominate QLC storage.
+        assert!(q < 4 * 1024);
+    }
+
+    #[test]
+    fn speedup_scales_with_expected_code_length() {
+        let (book, qlc, symbols) = setup(1.3, 30_000);
+        let reports = compare_on_stream(&book, &qlc, &symbols);
+        let speedup = qlc_speedup_vs_serial(&reports);
+        let hist = Histogram::from_symbols(&symbols);
+        let el = hist.pmf().expected_length(book.lengths());
+        assert!(
+            (speedup - el).abs() / el < 0.02,
+            "speedup {speedup} ≈ E[len] {el}"
+        );
+        assert!(speedup > 3.0, "meaningful speedup expected, got {speedup}");
+    }
+
+    #[test]
+    fn table_model_levels() {
+        assert_eq!(HuffmanTableModel::levels(1), 1);
+        assert_eq!(HuffmanTableModel::levels(11), 1);
+        assert_eq!(HuffmanTableModel::levels(12), 2);
+        assert_eq!(HuffmanTableModel::levels(22), 2);
+        assert_eq!(HuffmanTableModel::levels(23), 3);
+    }
+
+    #[test]
+    fn table_model_cycles_bounded_by_serial() {
+        let (book, _, symbols) = setup(1.2, 10_000);
+        let serial = HuffmanSerialModel::new(&book).simulate(&symbols);
+        let table = HuffmanTableModel::new(&book).simulate(&symbols);
+        assert!(table.cycles <= serial.cycles);
+        assert!(table.cycles >= symbols.len() as u64);
+    }
+
+    #[test]
+    fn deep_tree_inflates_huffman_stages() {
+        // Fibonacci counts → very deep codes → many table levels and a
+        // long serial walk; QLC stays at 2 stages.
+        let mut freqs = [0u64; 256];
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a.saturating_add(b);
+            a = b;
+            b = c;
+        }
+        let book = CodeBook::build(&freqs, 48);
+        let serial = HuffmanSerialModel::new(&book);
+        let symbols: Vec<u8> = (0..32).collect(); // the rare/deep end
+        let report = serial.simulate(&symbols);
+        assert!(report.worst_stages > 30);
+        let table = HuffmanTableModel::new(&book).simulate(&symbols);
+        assert!(table.worst_stages >= 4);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// N-lane parallel QLC decoder
+
+/// Multi-lane QLC decoder model — the extension the paper's "not
+/// completely bit sequential" observation enables: because the code
+/// length is known from the P-bit prefix alone, a wide front-end can
+/// chain N prefix inspections combinationally (a length-prefix-sum)
+/// and emit N symbols per cycle.  A serial Huffman decoder cannot do
+/// this: symbol N's start position depends on fully decoding symbol
+/// N-1.
+///
+/// Model: `lanes` symbols/cycle, a front-end adder chain of `lanes`
+/// prefix decoders (storage scales linearly), plus the shared 256-entry
+/// output LUT replicated per lane for single-cycle access.
+pub struct ParallelQlcModel {
+    prefix_bits: u32,
+    num_areas: usize,
+    pub lanes: u32,
+}
+
+impl ParallelQlcModel {
+    pub fn new(codec: &QlcCodec, lanes: u32) -> Self {
+        assert!(lanes >= 1);
+        ParallelQlcModel {
+            prefix_bits: codec.scheme().prefix_bits,
+            num_areas: codec.scheme().num_areas(),
+            lanes,
+        }
+    }
+
+    /// Per-lane prefix table + per-lane output LUT copy.
+    pub fn storage_bits(&self) -> u64 {
+        self.lanes as u64 * ((self.num_areas as u64) * (4 + 8) + 256 * 8)
+    }
+
+    pub fn simulate(&self, symbols: &[u8]) -> CycleReport {
+        let n = symbols.len() as u64;
+        // lanes symbols per cycle; +1 pipeline fill, +1 for the
+        // length-prefix-sum stage once lanes > 1.
+        let fill = if self.lanes > 1 { 2 } else { 1 };
+        CycleReport {
+            model: format!("qlc-p{}x{}", self.prefix_bits, self.lanes),
+            symbols: n,
+            cycles: n.div_ceil(self.lanes as u64) + fill,
+            storage_bits: self.storage_bits(),
+            worst_stages: 2 + (self.lanes > 1) as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod parallel_tests {
+    use super::*;
+    use crate::codecs::qlc::{AreaScheme, QlcCodec};
+    use crate::stats::Histogram;
+    use crate::util::rng::Rng;
+
+    fn codec() -> QlcCodec {
+        let mut rng = Rng::new(1);
+        let symbols: Vec<u8> =
+            (0..10_000).map(|_| (rng.normal().abs() * 50.0) as u8).collect();
+        QlcCodec::from_pmf(
+            AreaScheme::table1(),
+            &Histogram::from_symbols(&symbols).pmf(),
+        )
+    }
+
+    #[test]
+    fn throughput_scales_with_lanes() {
+        let c = codec();
+        let symbols = vec![0u8; 100_000];
+        let r1 = ParallelQlcModel::new(&c, 1).simulate(&symbols);
+        let r4 = ParallelQlcModel::new(&c, 4).simulate(&symbols);
+        let r8 = ParallelQlcModel::new(&c, 8).simulate(&symbols);
+        assert!((r4.throughput() / r1.throughput() - 4.0).abs() < 0.01);
+        assert!((r8.throughput() / r1.throughput() - 8.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn storage_scales_linearly() {
+        let c = codec();
+        let s1 = ParallelQlcModel::new(&c, 1).storage_bits();
+        let s8 = ParallelQlcModel::new(&c, 8).storage_bits();
+        assert_eq!(s8, 8 * s1);
+    }
+
+    #[test]
+    fn single_lane_matches_base_model() {
+        let c = codec();
+        let symbols = vec![0u8; 50_000];
+        let base = QlcModel::new(&c).simulate(&symbols);
+        let one = ParallelQlcModel::new(&c, 1).simulate(&symbols);
+        assert_eq!(base.cycles, one.cycles);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoder-side models (paper ref [12]: "Single-Stage Huffman Encoder")
+
+/// Encoder hardware comparison: both QLC and Huffman encode through a
+/// single 256-entry LUT lookup per symbol (one stage, 1 symbol/cycle) —
+/// the encoder is not where they differ.  What differs is the *entry
+/// width*: a Huffman entry must hold up to `max_len` code bits plus a
+/// 6-bit length; a QLC entry holds ≤ 11+4 bits.  The packer barrel
+/// shifter also scales with the max code length.
+pub struct EncoderModel {
+    pub name: String,
+    pub max_code_bits: u32,
+    pub lut_entries: u32,
+}
+
+impl EncoderModel {
+    pub fn huffman(book: &CodeBook) -> Self {
+        EncoderModel {
+            name: "huffman-enc".into(),
+            max_code_bits: book.max_length(),
+            lut_entries: 256,
+        }
+    }
+
+    pub fn qlc(codec: &QlcCodec) -> Self {
+        let max = (0..codec.scheme().num_areas())
+            .map(|a| codec.scheme().code_length(a))
+            .max()
+            .unwrap();
+        EncoderModel {
+            name: "qlc-enc".into(),
+            max_code_bits: max,
+            lut_entries: 256,
+        }
+    }
+
+    /// LUT bits: entries × (code bits + 6-bit length field).
+    pub fn storage_bits(&self) -> u64 {
+        self.lut_entries as u64 * (self.max_code_bits as u64 + 6)
+    }
+
+    /// Barrel-shifter width of the bit packer (merging variable-length
+    /// codes into the output word) — a critical-path proxy.
+    pub fn shifter_width_bits(&self) -> u32 {
+        self.max_code_bits.next_power_of_two().max(8)
+    }
+
+    pub fn simulate(&self, symbols: &[u8]) -> CycleReport {
+        // Single stage, fully pipelined: 1 symbol/cycle for both.
+        let n = symbols.len() as u64;
+        CycleReport {
+            model: self.name.clone(),
+            symbols: n,
+            cycles: n + 1,
+            storage_bits: self.storage_bits(),
+            worst_stages: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod encoder_tests {
+    use super::*;
+    use crate::codecs::qlc::{AreaScheme, QlcCodec};
+    use crate::stats::Histogram;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (CodeBook, QlcCodec) {
+        let mut rng = Rng::new(2);
+        let symbols: Vec<u8> =
+            (0..20_000).map(|_| (rng.normal().abs() * 45.0) as u8).collect();
+        let hist = Histogram::from_symbols(&symbols);
+        let mut freqs = [0u64; 256];
+        for i in 0..256 {
+            freqs[i] = hist.counts[i].max(1);
+        }
+        (
+            CodeBook::build(&freqs, 48),
+            QlcCodec::from_pmf(AreaScheme::table1(), &hist.pmf()),
+        )
+    }
+
+    #[test]
+    fn both_encoders_single_stage() {
+        let (book, qlc) = setup();
+        let symbols = vec![1u8; 1000];
+        let h = EncoderModel::huffman(&book).simulate(&symbols);
+        let q = EncoderModel::qlc(&qlc).simulate(&symbols);
+        assert_eq!(h.worst_stages, 1);
+        assert_eq!(q.worst_stages, 1);
+        assert_eq!(h.cycles, q.cycles);
+    }
+
+    #[test]
+    fn qlc_encoder_lut_narrower() {
+        let (book, qlc) = setup();
+        let h = EncoderModel::huffman(&book);
+        let q = EncoderModel::qlc(&qlc);
+        assert_eq!(q.max_code_bits, 11);
+        assert!(h.max_code_bits > q.max_code_bits);
+        assert!(h.storage_bits() > q.storage_bits());
+        assert!(h.shifter_width_bits() >= q.shifter_width_bits());
+    }
+}

@@ -1,0 +1,31 @@
+//! # qlc — Quad Length Codes for lossless compression of e4m3
+//!
+//! A full reproduction stack for the paper *"Quad Length Codes for
+//! Lossless Compression of e4m3"*: the QLC codec and every baseline and
+//! substrate it is evaluated against.
+//!
+//! Layer map (DESIGN.md):
+//! * [`formats`] — the e4m3 data type and block-32 quantizer;
+//! * [`codecs`] — QLC, canonical Huffman, Elias γ/δ/ω, Exp-Golomb, raw;
+//! * [`stats`] — PMFs, entropy, compressibility;
+//! * [`data`] — tensor/symbol generators calibrated to the paper's
+//!   distributions;
+//! * [`hw`] — cycle-level decoder hardware model (LUT vs tree);
+//! * [`collective`] — bandwidth-bound collective ops with compression
+//!   on the transport;
+//! * [`coordinator`] — threaded leader/worker compression pipeline;
+//! * [`runtime`] — PJRT executor for the AOT JAX/Pallas artifacts;
+//! * [`util`] — offline-environment substrates (RNG, JSON, CLI, bench,
+//!   property testing).
+
+pub mod bitstream;
+pub mod codecs;
+pub mod collective;
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod hw;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,501 @@
+//! `qlc` — command-line entry point for the Quad Length Codes stack.
+//!
+//! Subcommands:
+//!   tables      regenerate the paper's figures/tables (DESIGN.md §5)
+//!   analyze     PMF/entropy/codec comparison for generated or trace data
+//!   compress    compress a raw symbol file into a self-describing frame
+//!   decompress  invert `compress`
+//!   datagen     write calibrated symbol traces to a directory
+//!   optimize    run the area-scheme optimizer on a tensor kind
+//!   collective  compressed ring collectives on the simulated fabric
+//!   hw          decoder hardware-model comparison
+//!   harvest     execute the AOT FFN artifact via PJRT and save traces
+//!   serve       run the leader/worker compression pipeline demo
+//!
+//! Run `qlc help` for options.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use qlc::codecs::frame::{self, CodecSpec};
+use qlc::codecs::huffman::HuffmanCodec;
+use qlc::codecs::qlc::{optimizer, QlcCodec};
+use qlc::collective::{self, Fabric, Transport};
+use qlc::coordinator::{Pipeline, PipelineConfig};
+use qlc::data::trace::Trace;
+use qlc::data::{calibrate_generator, TensorGen, TensorKind};
+use qlc::formats::Variant;
+use qlc::hw;
+use qlc::report;
+use qlc::runtime::{inputs::InputStats, Runtime};
+use qlc::stats::Histogram;
+use qlc::util::cli::{self, Args};
+use qlc::util::json::Json;
+use qlc::util::rng::Rng;
+
+const VALUE_OPTS: &[&str] = &[
+    "fig", "table", "codec", "kind", "n", "seed", "scale", "workers", "op",
+    "size", "bandwidth-gbps", "latency-us", "out", "artifacts", "steps",
+    "chunk", "queue", "target-entropy", "knob", "dir", "name", "prefix",
+];
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(&argv, VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("tables") => cmd_tables(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("decompress") => cmd_decompress(&args),
+        Some("datagen") => cmd_datagen(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("collective") => cmd_collective(&args),
+        Some("hw") => cmd_hw(&args),
+        Some("formats") => cmd_formats(&args),
+        Some("harvest") => cmd_harvest(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand '{other}'; try help")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "qlc — Quad Length Codes for lossless e4m3 compression
+
+USAGE: qlc <subcommand> [options]
+
+  tables     [--fig N | --table N | --all] [--seed S] [--scale K] [--json]
+  analyze    [--kind ffn1_act|ffn2_act|weight|wgrad|agrad] [--n SYMBOLS]
+             [--dir TRACES --name NAME] [--json]
+  compress   <in> <out> --codec raw|huffman|qlc|qlc-t1|qlc-t2|elias-*|egK
+  decompress <in> <out>
+  datagen    --kind K --n SYMBOLS --out DIR [--seed S]
+             [--target-entropy H | --knob X]
+  optimize   [--kind K | --dir TRACES --name NAME] [--prefix P] [--json]
+  collective --op allreduce|allgather --workers W --size N --codec C
+             [--bandwidth-gbps G] [--latency-us L] [--json]
+  hw         [--seed S] [--n SYMBOLS] [--json]
+  formats    [--n SYMBOLS] [--seed S]      cross-eXmY-format QLC sweep
+  harvest    [--artifacts DIR] --out DIR [--steps N] [--seed S]
+  serve      [--codec C] [--workers W] [--chunk BYTES] [--n SYMBOLS]
+";
+
+// ---------------------------------------------------------------------------
+
+fn cmd_tables(args: &Args) -> Result<(), String> {
+    let seed = args.opt_u64("seed", 42).map_err(|e| e.to_string())?;
+    let scale = args.opt_usize("scale", 6).map_err(|e| e.to_string())?;
+    let pmfs = report::paper_pmfs(seed, scale);
+    let artifacts = report::all_artifacts(&pmfs);
+    let want_fig = args.opt("fig");
+    let want_table = args.opt("table");
+    let all =
+        args.has_flag("all") || (want_fig.is_none() && want_table.is_none());
+    for a in &artifacts {
+        let keep = all
+            || want_fig.map(|f| a.id == format!("FIG{f}")).unwrap_or(false)
+            || want_table
+                .map(|t| a.id.contains(&format!("TAB{t}")))
+                .unwrap_or(false);
+        if keep {
+            if args.has_flag("json") {
+                println!("{}", a.json.to_string_pretty());
+            } else {
+                println!("{}", a.text);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn load_symbols(args: &Args) -> Result<(String, Vec<u8>), String> {
+    if let (Some(dir), Some(name)) = (args.opt("dir"), args.opt("name")) {
+        let trace =
+            Trace::load(Path::new(dir), name).map_err(|e| e.to_string())?;
+        return Ok((name.to_string(), trace.symbols));
+    }
+    let kind_s = args.opt_or("kind", "ffn1_act");
+    let kind =
+        TensorKind::parse(&kind_s).ok_or(format!("bad kind {kind_s}"))?;
+    let n = args.opt_usize("n", 1 << 20).map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 1).map_err(|e| e.to_string())?;
+    let gen = TensorGen::new(kind, Variant::ExmY);
+    let mut rng = Rng::new(seed);
+    Ok((kind_s, gen.symbols(&mut rng, n - n % 32)))
+}
+
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    let (label, symbols) = load_symbols(args)?;
+    let pmf = Histogram::from_symbols(&symbols).pmf();
+    let art = report::codec_comparison("ANALYZE", &label, &pmf);
+    if args.has_flag("json") {
+        println!("{}", art.json.to_string_pretty());
+    } else {
+        println!(
+            "{} symbols, entropy {:.3} bits\n{}",
+            symbols.len(),
+            pmf.entropy(),
+            art.text
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<(), String> {
+    let [input, output] = two_paths(args)?;
+    let symbols = std::fs::read(&input).map_err(|e| e.to_string())?;
+    let hist = if symbols.is_empty() {
+        Histogram::from_symbols(&[0])
+    } else {
+        Histogram::from_symbols(&symbols)
+    };
+    let codec = args.opt_or("codec", "qlc");
+    let spec = CodecSpec::by_name(&codec, &hist)?;
+    let framed = frame::compress(&spec, &symbols);
+    std::fs::write(&output, &framed).map_err(|e| e.to_string())?;
+    println!(
+        "{} -> {}: {} -> {} bytes ({:.1}% compressibility, codec {})",
+        input.display(),
+        output.display(),
+        symbols.len(),
+        framed.len(),
+        (1.0 - framed.len() as f64 / symbols.len().max(1) as f64) * 100.0,
+        codec
+    );
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<(), String> {
+    let [input, output] = two_paths(args)?;
+    let framed = std::fs::read(&input).map_err(|e| e.to_string())?;
+    let symbols = frame::decompress(&framed).map_err(|e| e.to_string())?;
+    std::fs::write(&output, &symbols).map_err(|e| e.to_string())?;
+    println!(
+        "{} -> {}: {} -> {} bytes",
+        input.display(),
+        output.display(),
+        framed.len(),
+        symbols.len()
+    );
+    Ok(())
+}
+
+fn two_paths(args: &Args) -> Result<[PathBuf; 2], String> {
+    if args.positional.len() != 2 {
+        return Err("expected <input> <output>".into());
+    }
+    Ok([
+        PathBuf::from(&args.positional[0]),
+        PathBuf::from(&args.positional[1]),
+    ])
+}
+
+fn cmd_datagen(args: &Args) -> Result<(), String> {
+    let kind_s = args.opt_or("kind", "ffn1_act");
+    let kind =
+        TensorKind::parse(&kind_s).ok_or(format!("bad kind {kind_s}"))?;
+    let n = args.opt_usize("n", 1 << 20).map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 1).map_err(|e| e.to_string())?;
+    let out =
+        PathBuf::from(args.opt("out").ok_or("datagen requires --out DIR")?);
+    let gen = if let Some(h) = args.opt("target-entropy") {
+        let target: f64 = h.parse().map_err(|_| "bad --target-entropy")?;
+        let (gen, achieved) = calibrate_generator(kind, target, seed, 0.02);
+        println!("calibrated knob {:.4} → entropy {achieved:.3}", gen.knob);
+        gen
+    } else {
+        let default = TensorGen::new(kind, Variant::ExmY);
+        let knob = args
+            .opt_f64("knob", default.knob)
+            .map_err(|e| e.to_string())?;
+        default.with_knob(knob)
+    };
+    let mut rng = Rng::new(seed);
+    let symbols = gen.symbols(&mut rng, n - n % 32);
+    let trace = Trace::new(&kind_s, symbols)
+        .with_meta("kind", kind_s.as_str())
+        .with_meta("seed", seed as usize)
+        .with_meta("knob", gen.knob);
+    trace.save(&out).map_err(|e| e.to_string())?;
+    println!("wrote {}/{}.syms", out.display(), kind_s);
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<(), String> {
+    let (label, symbols) = load_symbols(args)?;
+    let pmf = Histogram::from_symbols(&symbols).pmf();
+    let sorted = pmf.sorted_desc();
+    let scheme = if let Some(p) = args.opt("prefix") {
+        let p: u32 = p.parse().map_err(|_| "bad --prefix")?;
+        optimizer::optimize_for_prefix(&sorted, p)
+    } else {
+        optimizer::optimize_scheme(&sorted)
+    };
+    let art = report::table_scheme("OPTIMIZED", &label, &scheme, &pmf);
+    if args.has_flag("json") {
+        println!("{}", art.json.to_string_pretty());
+    } else {
+        println!("{}", art.text);
+    }
+    Ok(())
+}
+
+fn cmd_collective(args: &Args) -> Result<(), String> {
+    let op = args.opt_or("op", "allreduce");
+    let workers = args.opt_usize("workers", 8).map_err(|e| e.to_string())?;
+    let size = args.opt_usize("size", 1 << 20).map_err(|e| e.to_string())?;
+    let codec = args.opt_or("codec", "qlc");
+    let bw = args
+        .opt_f64("bandwidth-gbps", 50.0)
+        .map_err(|e| e.to_string())?;
+    let lat = args.opt_f64("latency-us", 2.0).map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 1).map_err(|e| e.to_string())?;
+    let fabric = Fabric {
+        workers,
+        link_bandwidth: bw * 1e9,
+        link_latency: lat * 1e-6,
+    };
+    let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+    let mut rng = Rng::new(seed);
+    let n = size - size % (workers * 32);
+    let cal = Histogram::from_symbols(&gen.symbols(&mut rng, 256 * 32));
+    let transport = if codec == "raw" {
+        Transport::Raw
+    } else {
+        Transport::Compressed {
+            codec: codec.clone(),
+            calibration: Box::new(cal),
+        }
+    };
+    let report = match op.as_str() {
+        "allreduce" => {
+            let data: Vec<Vec<f32>> =
+                (0..workers).map(|_| gen.generate(&mut rng, n)).collect();
+            collective::ring_allreduce(&fabric, &data, &transport)?.1
+        }
+        "allgather" => {
+            let shards: Vec<Vec<u8>> = (0..workers)
+                .map(|_| gen.symbols(&mut rng, n / workers))
+                .collect();
+            let scales: Vec<Vec<f32>> = (0..workers)
+                .map(|_| vec![1.0; n / workers / 32])
+                .collect();
+            collective::ring_allgather(&fabric, &shards, &scales, &transport)?
+                .1
+        }
+        other => return Err(format!("unknown op {other}")),
+    };
+    let j = Json::obj()
+        .set("op", report.op.as_str())
+        .set("transport", report.transport.as_str())
+        .set("workers", workers)
+        .set("steps", report.steps)
+        .set("wire_bytes", report.wire_bytes as usize)
+        .set("raw_bytes", report.raw_bytes as usize)
+        .set("compression_ratio", report.compression_ratio())
+        .set("network_time_s", report.network_time_s)
+        .set("codec_time_s", report.codec_time_s)
+        .set("total_time_s", report.total_time_s());
+    if args.has_flag("json") {
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "{} x{} via {}: {} steps, wire {} B (ratio {:.3}), network \
+             {:.3} ms, codec {:.3} ms, total {:.3} ms",
+            report.op,
+            workers,
+            report.transport,
+            report.steps,
+            report.wire_bytes,
+            report.compression_ratio(),
+            report.network_time_s * 1e3,
+            report.codec_time_s * 1e3,
+            report.total_time_s() * 1e3,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<(), String> {
+    let seed = args.opt_u64("seed", 42).map_err(|e| e.to_string())?;
+    let n = args.opt_usize("n", 1 << 20).map_err(|e| e.to_string())?;
+    let pmfs = report::paper_pmfs(seed, 6);
+    let mut out = Vec::new();
+    for (label, pmf, hist, scheme) in [
+        (
+            "ffn1",
+            &pmfs.ffn1,
+            &pmfs.ffn1_hist,
+            qlc::codecs::qlc::AreaScheme::table1(),
+        ),
+        (
+            "ffn2",
+            &pmfs.ffn2,
+            &pmfs.ffn2_hist,
+            qlc::codecs::qlc::AreaScheme::table2(),
+        ),
+    ] {
+        let symbols = report::sample_symbols(pmf, n, seed ^ 7);
+        let huff = HuffmanCodec::from_histogram(hist);
+        let qlc_codec = QlcCodec::from_pmf(scheme, pmf);
+        let reports = hw::compare_on_stream(huff.book(), &qlc_codec, &symbols);
+        let speedup = hw::qlc_speedup_vs_serial(&reports);
+        println!("--- {label} ({} symbols) ---", symbols.len());
+        for r in &reports {
+            println!(
+                "  {:<16} {:>8.3} cycles/sym  storage {:>8} bits  stages {}",
+                r.model,
+                r.cycles_per_symbol(),
+                r.storage_bits,
+                r.worst_stages
+            );
+        }
+        println!("  QLC speedup vs bit-serial Huffman: {speedup:.2}x");
+        out.push(
+            Json::obj().set("label", label).set("speedup", speedup).set(
+                "reports",
+                Json::Arr(
+                    reports
+                        .iter()
+                        .map(|r| {
+                            Json::obj()
+                                .set("model", r.model.as_str())
+                                .set(
+                                    "cycles_per_symbol",
+                                    r.cycles_per_symbol(),
+                                )
+                                .set("storage_bits", r.storage_bits as usize)
+                                .set("stages", r.worst_stages as usize)
+                        })
+                        .collect(),
+                ),
+            ),
+        );
+    }
+    if args.has_flag("json") {
+        println!("{}", Json::Arr(out).to_string_pretty());
+    }
+    Ok(())
+}
+
+fn cmd_formats(args: &Args) -> Result<(), String> {
+    use qlc::codecs::qlc::optimizer;
+    use qlc::formats::{ExmyFormat, ExmySpec};
+    let n = args.opt_usize("n", 1 << 20).map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 17).map_err(|e| e.to_string())?;
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0f32; n - n % 32];
+    rng.fill_normal_f32(&mut data, 0.0, 1.0);
+    println!(
+        "{:>8} {:>9} {:>9} {:>9}",
+        "format", "entropy", "ideal%", "qlc-opt%"
+    );
+    for spec in [ExmySpec::E2M5, ExmySpec::E3M4, ExmySpec::E4M3,
+                 ExmySpec::E5M2] {
+        let f = ExmyFormat::new(spec);
+        let (symbols, _) = f.quantize_blocks(&data);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let sorted = pmf.sorted_desc();
+        let opt = optimizer::optimize_scheme(&sorted);
+        println!(
+            "{:>8} {:>9.3} {:>9.2} {:>9.2}",
+            spec.name(),
+            pmf.entropy(),
+            pmf.ideal_compressibility() * 100.0,
+            opt.compressibility_sorted(&sorted) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_harvest(args: &Args) -> Result<(), String> {
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let out = PathBuf::from(args.opt("out").ok_or("harvest requires --out")?);
+    let steps = args.opt_usize("steps", 4).map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 1).map_err(|e| e.to_string())?;
+    let rt = Runtime::load(&artifacts).map_err(|e| e.to_string())?;
+    let mut rng = Rng::new(seed);
+    let mut streams: std::collections::BTreeMap<String, Vec<u8>> =
+        Default::default();
+    for step in 0..steps {
+        let ins = qlc::runtime::inputs::make_step_inputs(
+            rt.input_shapes(),
+            InputStats::default(),
+            &mut rng,
+        );
+        let tensors = rt.harvest_step(&ins).map_err(|e| e.to_string())?;
+        for t in tensors {
+            streams.entry(t.name).or_default().extend(t.symbols);
+        }
+        println!("step {step} done");
+    }
+    for (name, symbols) in streams {
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        println!(
+            "{name}: {} symbols, entropy {:.3} bits, p(zero) {:.3}",
+            symbols.len(),
+            pmf.entropy(),
+            pmf.p[0]
+        );
+        Trace::new(&name, symbols)
+            .with_meta("source", "pjrt-harvest")
+            .with_meta("seed", seed as usize)
+            .save(&out)
+            .map_err(|e| e.to_string())?;
+    }
+    println!("traces written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let codec = args.opt_or("codec", "qlc");
+    let workers = args.opt_usize("workers", 4).map_err(|e| e.to_string())?;
+    let chunk =
+        args.opt_usize("chunk", 64 * 1024).map_err(|e| e.to_string())?;
+    let n = args.opt_usize("n", 16 << 20).map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 1).map_err(|e| e.to_string())?;
+    let gen = TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY);
+    let mut rng = Rng::new(seed);
+    let symbols = gen.symbols(&mut rng, n - n % 32);
+    let hist = Histogram::from_symbols(&symbols);
+    let pipe = Pipeline::new(
+        PipelineConfig {
+            workers,
+            chunk_size: chunk,
+            queue_depth: workers * 2,
+        },
+        &codec,
+        &hist,
+    )?;
+    let t0 = std::time::Instant::now();
+    let frames = pipe.compress_stream(&symbols);
+    let wall = t0.elapsed().as_secs_f64();
+    let m = pipe.metrics();
+    println!(
+        "pipeline: {} jobs, {} -> {} bytes ({:.1}% compressibility)\n\
+         wall {:.3}s  ({:.1} MB/s end-to-end, {:.1} MB/s aggregate codec)",
+        frames.len(),
+        m.input_bytes,
+        m.output_bytes,
+        m.compressibility() * 100.0,
+        wall,
+        m.input_bytes as f64 / wall / 1e6,
+        m.throughput_mbps()
+    );
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Input synthesis for the `ffn_step` artifact: realistic trained-LLM
+//! statistics matching `python/tests/test_model.py::_make_inputs`
+//! (heavy-tailed tokens, gate-projection gain ≈ 2.5 so the bf16 GELU
+//! saturates and FFN2 activations show the paper's zero spike).
+
+use crate::util::rng::Rng;
+
+/// Statistics knobs for one step's inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct InputStats {
+    /// Lognormal σ of the per-token scale of `x`.
+    pub token_sigma: f64,
+    /// Gain of the gate projection `wg`.
+    pub gate_gain: f64,
+}
+
+impl Default for InputStats {
+    fn default() -> Self {
+        InputStats { token_sigma: 0.5, gate_gain: 2.5 }
+    }
+}
+
+/// Build the five `ffn_step` inputs (x, wg, wu, w2, dy), flattened in
+/// manifest order, given the shapes reported by the runtime.
+pub fn make_step_inputs(
+    shapes: &[(String, Vec<usize>)],
+    stats: InputStats,
+    rng: &mut Rng,
+) -> Vec<Vec<f32>> {
+    shapes
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let mut out = vec![0f32; n];
+            match name.as_str() {
+                "x" => {
+                    // Heavy-tailed tokens: per-row lognormal scale.
+                    let cols = *shape.last().unwrap();
+                    for row in out.chunks_mut(cols) {
+                        let s = rng.lognormal(0.0, stats.token_sigma);
+                        for v in row.iter_mut() {
+                            *v = (rng.normal() * s) as f32;
+                        }
+                    }
+                }
+                "wg" => {
+                    let fan_in = shape[0] as f64;
+                    let std = stats.gate_gain / fan_in.sqrt();
+                    rng.fill_normal_f32(&mut out, 0.0, std as f32);
+                }
+                "wu" | "w2" => {
+                    let fan_in = shape[0] as f64;
+                    let std = 1.0 / fan_in.sqrt();
+                    rng.fill_normal_f32(&mut out, 0.0, std as f32);
+                }
+                "dy" => {
+                    rng.fill_normal_f32(&mut out, 0.0, 1.0);
+                }
+                other => panic!("unknown ffn_step input '{other}'"),
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("x".into(), vec![64, 32]),
+            ("wg".into(), vec![32, 128]),
+            ("wu".into(), vec![32, 128]),
+            ("w2".into(), vec![128, 32]),
+            ("dy".into(), vec![64, 32]),
+        ]
+    }
+
+    #[test]
+    fn shapes_respected() {
+        let mut rng = Rng::new(1);
+        let inputs =
+            make_step_inputs(&shapes(), InputStats::default(), &mut rng);
+        assert_eq!(inputs.len(), 5);
+        assert_eq!(inputs[0].len(), 64 * 32);
+        assert_eq!(inputs[1].len(), 32 * 128);
+    }
+
+    #[test]
+    fn gate_gain_scales_wg() {
+        let mut rng = Rng::new(2);
+        let hi = make_step_inputs(
+            &shapes(),
+            InputStats { gate_gain: 5.0, ..Default::default() },
+            &mut rng,
+        );
+        let mut rng = Rng::new(2);
+        let lo = make_step_inputs(
+            &shapes(),
+            InputStats { gate_gain: 1.0, ..Default::default() },
+            &mut rng,
+        );
+        let var = |v: &[f32]| {
+            v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64
+        };
+        assert!(var(&hi[1]) > 10.0 * var(&lo[1]));
+        // wu unaffected by gate gain.
+        assert!((var(&hi[2]) / var(&lo[2]) - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = make_step_inputs(
+            &shapes(),
+            InputStats::default(),
+            &mut Rng::new(7),
+        );
+        let b = make_step_inputs(
+            &shapes(),
+            InputStats::default(),
+            &mut Rng::new(7),
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn token_rows_have_varying_scale() {
+        let mut rng = Rng::new(3);
+        let inputs = make_step_inputs(
+            &shapes(),
+            InputStats { token_sigma: 1.0, ..Default::default() },
+            &mut rng,
+        );
+        let x = &inputs[0];
+        let row_norm = |r: usize| {
+            x[r * 32..(r + 1) * 32]
+                .iter()
+                .map(|&v| (v as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let norms: Vec<f64> = (0..64).map(row_norm).collect();
+        let max = norms.iter().cloned().fold(0.0, f64::max);
+        let min = norms.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 2.0, "token scales should vary: {min}..{max}");
+    }
+}

@@ -1,0 +1,272 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from Rust.  Python is never on this path.
+//!
+//! Two executables:
+//! * `ffn_step` — one fwd+bwd step of the L2 GeGLU FFN; returns the
+//!   eight harvested tensor types as (e4m3 symbols, block scales),
+//!   quantized on-device by the L1 Pallas kernel;
+//! * `quantize` — the standalone block quantizer for arbitrary
+//!   `(8192, 32)` f32 data.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → compile on the CPU PJRT client →
+//! execute (`return_tuple=True` on the JAX side, so outputs unpack with
+//! `to_tuple`).
+
+pub mod inputs;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One harvested tensor: e4m3 symbols + per-block scales.
+#[derive(Clone, Debug)]
+pub struct HarvestedTensor {
+    pub name: String,
+    pub symbols: Vec<u8>,
+    pub scales: Vec<f32>,
+}
+
+struct TensorSpec {
+    name: String,
+    symbols_len: usize,
+    scales_len: usize,
+}
+
+/// Loaded artifacts bound to a PJRT CPU client.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    ffn: xla::PjRtLoadedExecutable,
+    quantize: xla::PjRtLoadedExecutable,
+    input_shapes: Vec<(String, Vec<usize>)>,
+    outputs: Vec<TensorSpec>,
+    quant_blocks: usize,
+}
+
+impl Runtime {
+    /// Load `manifest.json` + both HLO artifacts from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let manifest_text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&manifest_text)
+            .map_err(|e| anyhow!("manifest.json: {e}"))?;
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+
+        let ffn_json = manifest
+            .get("ffn_step")
+            .ok_or_else(|| anyhow!("manifest missing ffn_step"))?;
+        let ffn = compile(
+            &client,
+            &artifacts_dir.join(get_str(ffn_json, "hlo")?),
+        )?;
+        let quant_json = manifest
+            .get("quantize")
+            .ok_or_else(|| anyhow!("manifest missing quantize"))?;
+        let quantize = compile(
+            &client,
+            &artifacts_dir.join(get_str(quant_json, "hlo")?),
+        )?;
+
+        let mut input_shapes = Vec::new();
+        for inp in ffn_json
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("ffn_step.inputs"))?
+        {
+            let name = get_str(inp, "name")?.to_string();
+            let shape: Vec<usize> = inp
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("input shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            input_shapes.push((name, shape));
+        }
+
+        let mut outputs = Vec::new();
+        for out in ffn_json
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("ffn_step.outputs"))?
+        {
+            let sym_shape: Vec<usize> = out
+                .get("symbols_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("symbols_shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let scale_shape: Vec<usize> = out
+                .get("scales_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("scales_shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            outputs.push(TensorSpec {
+                name: get_str(out, "name")?.to_string(),
+                symbols_len: sym_shape.iter().product(),
+                scales_len: scale_shape.iter().product(),
+            });
+        }
+
+        let quant_blocks = quant_json
+            .get("inputs")
+            .and_then(|i| i.idx(0))
+            .and_then(|i| i.get("shape"))
+            .and_then(|s| s.idx(0))
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("quantize input shape"))?;
+
+        Ok(Runtime {
+            client,
+            ffn,
+            quantize,
+            input_shapes,
+            outputs,
+            quant_blocks,
+        })
+    }
+
+    /// Default artifacts directory (repo-root `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    /// Shapes of the five `ffn_step` inputs, in order.
+    pub fn input_shapes(&self) -> &[(String, Vec<usize>)] {
+        &self.input_shapes
+    }
+
+    pub fn tensor_names(&self) -> Vec<&str> {
+        self.outputs.iter().map(|o| o.name.as_str()).collect()
+    }
+
+    pub fn quant_blocks(&self) -> usize {
+        self.quant_blocks
+    }
+
+    /// Execute one FFN step on the given f32 inputs (flattened,
+    /// matching [`Runtime::input_shapes`]).
+    pub fn harvest_step(
+        &self,
+        inputs: &[Vec<f32>],
+    ) -> Result<Vec<HarvestedTensor>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "expected {} inputs, got {}",
+                self.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, (name, shape)) in inputs.iter().zip(&self.input_shapes) {
+            let n: usize = shape.iter().product();
+            if data.len() != n {
+                bail!("input {name}: {} values for shape {shape:?}", data.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {name}: {e:?}"))?,
+            );
+        }
+        let result = self
+            .ffn
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("ffn_step execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.outputs.len() * 2 {
+            bail!(
+                "ffn_step returned {} outputs, manifest says {}",
+                parts.len(),
+                self.outputs.len() * 2
+            );
+        }
+        let mut harvested = Vec::with_capacity(self.outputs.len());
+        for (i, spec) in self.outputs.iter().enumerate() {
+            let symbols: Vec<u8> = parts[2 * i]
+                .to_vec()
+                .map_err(|e| anyhow!("{} symbols: {e:?}", spec.name))?;
+            let scales: Vec<f32> = parts[2 * i + 1]
+                .to_vec()
+                .map_err(|e| anyhow!("{} scales: {e:?}", spec.name))?;
+            if symbols.len() != spec.symbols_len
+                || scales.len() != spec.scales_len
+            {
+                bail!(
+                    "{}: got {}/{} values, manifest says {}/{}",
+                    spec.name,
+                    symbols.len(),
+                    scales.len(),
+                    spec.symbols_len,
+                    spec.scales_len
+                );
+            }
+            harvested.push(HarvestedTensor {
+                name: spec.name.clone(),
+                symbols,
+                scales,
+            });
+        }
+        Ok(harvested)
+    }
+
+    /// Quantize `(quant_blocks × 32)` f32 values through the AOT Pallas
+    /// kernel. Returns (symbols, scales).
+    pub fn quantize_blocks(&self, data: &[f32]) -> Result<(Vec<u8>, Vec<f32>)> {
+        let n = self.quant_blocks * 32;
+        if data.len() != n {
+            bail!("quantize expects {n} values, got {}", data.len());
+        }
+        let lit = xla::Literal::vec1(data)
+            .reshape(&[self.quant_blocks as i64, 32])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .quantize
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("quantize execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (syms, scales) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        Ok((
+            syms.to_vec().map_err(|e| anyhow!("symbols: {e:?}"))?,
+            scales.to_vec().map_err(|e| anyhow!("scales: {e:?}"))?,
+        ))
+    }
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest missing string field '{key}'"))
+}

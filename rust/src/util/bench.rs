@@ -1,0 +1,195 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, multi-sample timing, mean/stddev/median, and
+//! throughput reporting.  The `rust/benches/*.rs` binaries (declared
+//! `harness = false`) use this to print criterion-style lines; output is
+//! parsed by nothing — it is for EXPERIMENTS.md and humans.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            min_samples: 10,
+            max_samples: 200,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    /// Bytes processed per iteration (0 = don't report throughput).
+    pub bytes_per_iter: u64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn stddev(&self) -> Duration {
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean).powi(2))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        Duration::from_secs_f64(var.sqrt())
+    }
+
+    /// MB/s (1e6 bytes) at the median sample.
+    pub fn throughput_mbps(&self) -> f64 {
+        if self.bytes_per_iter == 0 {
+            return 0.0;
+        }
+        self.bytes_per_iter as f64 / self.median().as_secs_f64() / 1e6
+    }
+
+    pub fn report(&self) -> String {
+        let tp = if self.bytes_per_iter > 0 {
+            format!("  {:>9.1} MB/s", self.throughput_mbps())
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} median {:>11.3?}  mean {:>11.3?} ± {:>9.3?}  (n={}){}",
+            self.name,
+            self.median(),
+            self.mean(),
+            self.stddev(),
+            self.samples.len(),
+            tp
+        )
+    }
+}
+
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher::with_config(BenchConfig::default())
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    /// Time `f` (which must consume its own inputs internally).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_bytes(name, 0, f)
+    }
+
+    /// Time `f`, reporting throughput over `bytes` per iteration.
+    pub fn bench_bytes<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.cfg.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.cfg.measure
+            || samples.len() < self.cfg.min_samples)
+            && samples.len() < self.cfg.max_samples
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples,
+            bytes_per_iter: bytes,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new()
+    }
+}
+
+/// Quick-and-dirty config for use inside `cargo test` (milliseconds).
+pub fn fast_config() -> BenchConfig {
+    BenchConfig {
+        warmup: Duration::from_millis(5),
+        measure: Duration::from_millis(20),
+        min_samples: 3,
+        max_samples: 20,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let mut b = Bencher::with_config(fast_config());
+        let r = b.bench("noop", || {});
+        assert!(r.samples.len() >= 3);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let mut b = Bencher::with_config(fast_config());
+        let data = vec![1u8; 64 * 1024];
+        let r = b.bench_bytes("sum", data.len() as u64, || {
+            std::hint::black_box(data.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        assert!(r.throughput_mbps() > 1.0);
+    }
+
+    #[test]
+    fn stats_sane() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![
+                Duration::from_micros(10),
+                Duration::from_micros(20),
+                Duration::from_micros(30),
+            ],
+            bytes_per_iter: 0,
+        };
+        assert_eq!(r.mean(), Duration::from_micros(20));
+        assert_eq!(r.median(), Duration::from_micros(20));
+        assert!(r.stddev() > Duration::ZERO);
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Model: `qlc <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Option names that take a value; everything else starting with `--`
+/// is treated as a boolean flag.
+pub fn parse(
+    argv: &[String],
+    value_opts: &[&str],
+) -> Result<Args, CliError> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            // --key=value form
+            if let Some((k, v)) = name.split_once('=') {
+                if !value_opts.contains(&k) {
+                    return Err(CliError(format!("unknown option --{k}")));
+                }
+                args.options.insert(k.to_string(), v.to_string());
+            } else if value_opts.contains(&name) {
+                let v = it.next().ok_or_else(|| {
+                    CliError(format!("--{name} requires a value"))
+                })?;
+                args.options.insert(name.to_string(), v.clone());
+            } else {
+                args.flags.push(name.to_string());
+            }
+        } else if args.subcommand.is_none() && args.positional.is_empty() {
+            args.subcommand = Some(a.clone());
+        } else {
+            args.positional.push(a.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                CliError(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                CliError(format!("--{key} expects a number, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                CliError(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&v(&["tables", "--fig", "1", "--json"]), &["fig"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("tables"));
+        assert_eq!(a.opt("fig"), Some("1"));
+        assert!(a.has_flag("json"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&v(&["x", "--n=32"]), &["n"]).unwrap();
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&v(&["compress", "in.bin", "out.bin"]), &[]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("compress"));
+        assert_eq!(a.positional, v(&["in.bin", "out.bin"]));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&v(&["x", "--n"]), &["n"]).is_err());
+    }
+
+    #[test]
+    fn unknown_eq_option_errors() {
+        assert!(parse(&v(&["x", "--wat=1"]), &["n"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&v(&["x"]), &["n"]).unwrap();
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.opt_f64("r", 0.5).unwrap(), 0.5);
+        assert_eq!(a.opt_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&v(&["x", "--n", "abc"]), &["n"]).unwrap();
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+}

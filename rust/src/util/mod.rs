@@ -1,0 +1,9 @@
+//! Infrastructure substrates implemented in-crate (the environment is
+//! offline, so no `rand`/`serde`/`clap`/`criterion`): deterministic RNG,
+//! minimal JSON, a micro-bench harness and a property-test runner.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

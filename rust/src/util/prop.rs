@@ -1,0 +1,110 @@
+//! Property-test runner (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it retries
+//! with progressively smaller size hints (a lightweight stand-in for
+//! shrinking) and reports the failing seed so the case is reproducible.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+    /// Maximum "size" hint passed to the generator (e.g. max vec length).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, base_seed: 0x9D5C_B0DE, max_size: 4096 }
+    }
+}
+
+/// Run `prop(rng, size)`; panics with the failing seed on the first
+/// counterexample, after trying to re-fail at smaller sizes.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed ^ (case as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+        // Ramp sizes: small cases first to catch edge conditions early.
+        let size = 1 + (cfg.max_size.saturating_sub(1)) * case / cfg.cases.max(1);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // "Shrink": re-run the same seed at smaller sizes and report
+            // the smallest size that still fails.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(seed);
+                match prop(&mut rng, s) {
+                    Err(m) => smallest = (s, m),
+                    Ok(()) => {}
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, case={case}, \
+                 size={}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Convenience: random byte vector of length ≤ size (biased toward a few
+/// distinct symbols half the time — compression codecs care about skew).
+pub fn arb_bytes(rng: &mut Rng, size: usize) -> Vec<u8> {
+    let len = rng.below(size as u64 + 1) as usize;
+    let skewed = rng.uniform() < 0.5;
+    let alphabet = if skewed { 1 + rng.below(8) as usize } else { 256 };
+    (0..len).map(|_| rng.below(alphabet as u64) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", Config { cases: 16, ..Config::default() },
+              |_, _| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", Config { cases: 4, ..Config::default() }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn arb_bytes_respects_size() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert!(arb_bytes(&mut rng, 10).len() <= 10);
+        }
+    }
+
+    #[test]
+    fn arb_bytes_sometimes_skewed() {
+        let mut rng = Rng::new(2);
+        let mut saw_skew = false;
+        for _ in 0..50 {
+            let v = arb_bytes(&mut rng, 512);
+            if v.len() > 100 {
+                let distinct = v.iter().collect::<std::collections::HashSet<_>>();
+                if distinct.len() <= 8 {
+                    saw_skew = true;
+                }
+            }
+        }
+        assert!(saw_skew);
+    }
+}

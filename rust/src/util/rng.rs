@@ -1,0 +1,371 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! xoshiro256++ seeded via SplitMix64 — fast, well-distributed, and
+//! reproducible across runs/platforms (all experiment seeds in
+//! EXPERIMENTS.md assume this generator).  Includes the distribution
+//! samplers the data generators need (normal, lognormal, laplace,
+//! student-t-ish heavy tails).
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the Box-Muller transform.
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (for per-shard / per-worker RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid u == 0 (log of zero).
+        let u = loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (sin, cos) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.spare_normal = Some(r * sin);
+        r * cos
+    }
+
+    pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Laplace(0, b): heavier tails than normal.
+    pub fn laplace(&mut self, b: f64) -> f64 {
+        let u = self.uniform() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    /// Student-t with `nu` degrees of freedom (ratio-of-normals for the
+    /// chi-square via sum of squares; fine for nu ≤ ~30).
+    pub fn student_t(&mut self, nu: usize) -> f64 {
+        let z = self.normal();
+        let chi2: f64 = (0..nu).map(|_| self.normal().powi(2)).sum();
+        z / (chi2 / nu as f64).sqrt()
+    }
+
+    /// Fill a slice with standard normals (f32).
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_scaled(mean as f64, std as f64) as f32;
+        }
+    }
+
+    /// Random bytes.
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut chunks = out.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+
+    /// Sample an index from a discrete PMF (linear scan; use
+    /// [`AliasTable`] for bulk sampling).
+    pub fn categorical(&mut self, pmf: &[f64]) -> usize {
+        let mut u = self.uniform();
+        for (i, &p) in pmf.iter().enumerate() {
+            u -= p;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        pmf.len() - 1
+    }
+}
+
+/// Walker alias method for O(1) categorical sampling — used by the
+/// calibrated PMF generators to synthesize multi-MB symbol streams.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    pub fn new(pmf: &[f64]) -> Self {
+        let n = pmf.len();
+        assert!(n > 0);
+        let total: f64 = pmf.iter().sum();
+        assert!(total > 0.0, "pmf must have positive mass");
+        let mut scaled: Vec<f64> =
+            pmf.iter().map(|&p| p * n as f64 / total).collect();
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &i in large.iter().chain(small.iter()) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n as u64) as usize;
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn sample_many(&self, rng: &mut Rng, count: usize) -> Vec<u8> {
+        assert!(self.prob.len() <= 256);
+        (0..count).map(|_| self.sample(rng) as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn laplace_variance() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let b = 1.5;
+        let var = (0..n)
+            .map(|_| r.laplace(b).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((var - 2.0 * b * b).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Rng::new(17);
+        for _ in 0..1000 {
+            assert!(r.lognormal(0.0, 0.5) > 0.0);
+        }
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(5);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fill_bytes_lengths() {
+        let mut r = Rng::new(19);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            let mut buf = vec![0u8; len];
+            r.fill_bytes(&mut buf);
+            if len >= 8 {
+                assert!(buf.iter().any(|&b| b != 0));
+            }
+        }
+    }
+
+    #[test]
+    fn alias_table_matches_pmf() {
+        let pmf = [0.5, 0.25, 0.125, 0.125];
+        let table = AliasTable::new(&pmf);
+        let mut r = Rng::new(23);
+        let n = 400_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[table.sample(&mut r)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / n as f64;
+            assert!((p - pmf[i]).abs() < 0.01, "sym {i}: {p} vs {}", pmf[i]);
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate() {
+        let pmf = [0.0, 1.0, 0.0];
+        let table = AliasTable::new(&pmf);
+        let mut r = Rng::new(29);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut r), 1);
+        }
+    }
+
+    #[test]
+    fn categorical_covers_support() {
+        let mut r = Rng::new(31);
+        let pmf = [0.3, 0.7];
+        let mut saw = [false; 2];
+        for _ in 0..200 {
+            saw[r.categorical(&pmf)] = true;
+        }
+        assert!(saw[0] && saw[1]);
+    }
+
+    #[test]
+    fn student_t_heavier_than_normal() {
+        let mut r = Rng::new(37);
+        let n = 50_000;
+        let extreme_t = (0..n).filter(|_| r.student_t(3).abs() > 3.0).count();
+        let extreme_n = (0..n).filter(|_| r.normal().abs() > 3.0).count();
+        assert!(extreme_t > 2 * extreme_n, "{extreme_t} vs {extreme_n}");
+    }
+}

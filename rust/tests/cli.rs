@@ -1,0 +1,192 @@
+//! CLI smoke tests: drive the `qlc` binary end-to-end through its
+//! subcommands (compress/decompress file roundtrip, tables, analyze,
+//! optimize, collective, datagen).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn qlc() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_qlc"))
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("qlc-cli-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = qlc().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["tables", "compress", "collective", "hw", "serve"] {
+        assert!(text.contains(cmd), "{cmd} missing from help");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = qlc().arg("wat").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn compress_decompress_file_roundtrip() {
+    let dir = tmp("roundtrip");
+    let input = dir.join("in.bin");
+    // Skewed but not degenerate content.
+    let data: Vec<u8> = (0..100_000u64)
+        .map(|i| (i.wrapping_mul(i) % 97 % 64) as u8)
+        .collect();
+    std::fs::write(&input, &data).unwrap();
+    for codec in ["qlc", "huffman", "elias-gamma", "raw"] {
+        let framed = dir.join(format!("{codec}.qlf"));
+        let restored = dir.join(format!("{codec}.out"));
+        let out = qlc()
+            .args([
+                "compress",
+                input.to_str().unwrap(),
+                framed.to_str().unwrap(),
+                "--codec",
+                codec,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{codec}: {:?}", out);
+        let out = qlc()
+            .args([
+                "decompress",
+                framed.to_str().unwrap(),
+                restored.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{codec}");
+        assert_eq!(std::fs::read(&restored).unwrap(), data, "{codec}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn tables_emit_paper_schemes() {
+    let out = qlc()
+        .args(["tables", "--table", "1", "--scale", "18", "--seed", "1"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("TAB1"));
+    assert!(text.contains("168")); // area 8 size from the paper
+    assert!(text.contains("compressibility"));
+}
+
+#[test]
+fn tables_json_is_parseable() {
+    let out = qlc()
+        .args(["tables", "--fig", "1", "--scale", "18", "--json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    qlc::util::json::Json::parse(text.trim()).unwrap();
+}
+
+#[test]
+fn analyze_reports_entropy() {
+    let out = qlc()
+        .args(["analyze", "--kind", "ffn2_act", "--n", "65536"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("entropy"));
+    assert!(text.contains("huffman"));
+    assert!(text.contains("qlc"));
+}
+
+#[test]
+fn datagen_then_analyze_trace() {
+    let dir = tmp("datagen");
+    let out = qlc()
+        .args([
+            "datagen",
+            "--kind",
+            "ffn1_act",
+            "--n",
+            "65536",
+            "--out",
+            dir.to_str().unwrap(),
+            "--seed",
+            "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    assert!(dir.join("ffn1_act.syms").exists());
+    let out = qlc()
+        .args([
+            "analyze",
+            "--dir",
+            dir.to_str().unwrap(),
+            "--name",
+            "ffn1_act",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn optimize_prints_scheme() {
+    let out = qlc()
+        .args(["optimize", "--kind", "ffn2_act", "--n", "65536"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("OPTIMIZED"));
+    assert!(text.contains("Area"));
+}
+
+#[test]
+fn collective_reports_ratio() {
+    let out = qlc()
+        .args([
+            "collective",
+            "--op",
+            "allreduce",
+            "--workers",
+            "4",
+            "--size",
+            "16384",
+            "--codec",
+            "qlc",
+            "--json",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    let text = String::from_utf8_lossy(&out.stdout);
+    let json = qlc::util::json::Json::parse(text.trim()).unwrap();
+    assert!(
+        json.get("compression_ratio").unwrap().as_f64().unwrap() > 1.0
+    );
+}
+
+#[test]
+fn serve_runs_pipeline() {
+    let out = qlc()
+        .args([
+            "serve", "--codec", "qlc", "--workers", "2", "--n", "1048576",
+            "--chunk", "65536",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("compressibility"));
+}

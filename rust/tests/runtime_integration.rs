@@ -1,0 +1,123 @@
+//! PJRT runtime integration: the AOT JAX/Pallas artifacts loaded and
+//! executed from Rust, checked for bit-parity with the Rust quantizer.
+//!
+//! These tests need `artifacts/` (built by `make artifacts`); they are
+//! skipped — loudly — if it is missing, so plain `cargo test` works in
+//! a fresh checkout.
+
+use std::path::Path;
+
+use qlc::formats::{BlockQuantizer, Variant};
+use qlc::runtime::inputs::{make_step_inputs, InputStats};
+use qlc::runtime::Runtime;
+use qlc::stats::Histogram;
+use qlc::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn pallas_kernel_bit_parity_with_rust_quantizer() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.quant_blocks() * 32;
+    let quant = BlockQuantizer::new(Variant::ExmY);
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0f32; n];
+        // Mix of scales to stress the boundary table.
+        for (i, v) in data.iter_mut().enumerate() {
+            let scale = 2.0f64.powi((i % 61) as i32 - 30);
+            *v = (rng.normal() * scale) as f32;
+        }
+        let (syms, scales) = rt.quantize_blocks(&data).unwrap();
+        let q = quant.quantize(&data);
+        assert_eq!(syms, q.symbols, "seed {seed}: symbol mismatch");
+        assert_eq!(scales, q.scales, "seed {seed}: scale mismatch");
+    }
+}
+
+#[test]
+fn harvest_step_produces_paper_tensor_families() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    let inputs =
+        make_step_inputs(rt.input_shapes(), InputStats::default(), &mut rng);
+    let tensors = rt.harvest_step(&inputs).unwrap();
+    assert_eq!(tensors.len(), 8);
+    let names: Vec<&str> = tensors.iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "ffn1_act",
+            "ffn2_act",
+            "ffn1_weight",
+            "ffn2_weight",
+            "ffn1_wgrad",
+            "ffn2_wgrad",
+            "ffn1_agrad",
+            "ffn2_agrad"
+        ]
+    );
+    for t in &tensors {
+        assert_eq!(t.symbols.len(), t.scales.len() * 32, "{}", t.name);
+        let pmf = Histogram::from_symbols(&t.symbols).pmf();
+        let h = pmf.entropy();
+        assert!((4.0..8.0).contains(&h), "{}: entropy {h}", t.name);
+        match t.name.as_str() {
+            // Paper Fig. 4: the post-GeGLU tensors carry a zero spike.
+            "ffn2_act" | "ffn1_agrad" => {
+                assert!(pmf.p[0] > 0.03, "{}: p0 {}", t.name, pmf.p[0])
+            }
+            // Paper Fig. 1: pre-nonlinearity tensors do not.
+            "ffn1_act" | "ffn1_weight" => {
+                assert!(pmf.p[0] < 0.01, "{}: p0 {}", t.name, pmf.p[0])
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn harvest_deterministic_for_seed() {
+    let Some(rt) = runtime() else { return };
+    let run = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        let inputs = make_step_inputs(
+            rt.input_shapes(),
+            InputStats::default(),
+            &mut rng,
+        );
+        rt.harvest_step(&inputs).unwrap()
+    };
+    let a = run(7);
+    let b = run(7);
+    let c = run(8);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.symbols, y.symbols, "{}", x.name);
+    }
+    assert!(
+        a.iter().zip(&c).any(|(x, y)| x.symbols != y.symbols),
+        "different seeds must differ"
+    );
+}
+
+#[test]
+fn harvest_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    // Wrong arity.
+    assert!(rt.harvest_step(&[vec![0f32; 16]]).is_err());
+    // Wrong length for x.
+    let mut rng = Rng::new(1);
+    let mut inputs =
+        make_step_inputs(rt.input_shapes(), InputStats::default(), &mut rng);
+    inputs[0].pop();
+    assert!(rt.harvest_step(&inputs).is_err());
+    // Wrong length for quantize.
+    assert!(rt.quantize_blocks(&[0f32; 31]).is_err());
+}
