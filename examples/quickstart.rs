@@ -3,8 +3,9 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use qlc::codecs::frame::{self, CodecSpec};
+use qlc::codecs::frame;
 use qlc::codecs::qlc::{AreaScheme, QlcCodec};
+use qlc::codecs::CodecRegistry;
 use qlc::codecs::Codec;
 use qlc::data::{TensorGen, TensorKind};
 use qlc::formats::{BlockQuantizer, Variant};
@@ -44,9 +45,10 @@ fn main() {
     assert_eq!(decoded, q.symbols);
     println!("roundtrip OK (bit-exact)");
 
-    // 6. Or use the self-describing frame container (tables embedded).
-    let spec = CodecSpec::by_name("qlc", &hist).unwrap();
-    let framed = frame::compress(&spec, &q.symbols);
+    // 6. Or use the self-describing frame container (tables embedded,
+    //    chunked QLF2 — independent chunks decode in parallel).
+    let handle = CodecRegistry::global().resolve("qlc", &hist).unwrap();
+    let framed = frame::compress(&handle, &q.symbols);
     let back = frame::decompress(&framed).unwrap();
     assert_eq!(back, q.symbols);
     println!(

@@ -15,6 +15,7 @@ use qlc::codecs::qlc::{optimizer, AreaScheme};
 use qlc::codecs::Codec;
 use qlc::data::{TensorGen, TensorKind};
 use qlc::formats::Variant;
+#[cfg(feature = "zstd")]
 use qlc::codecs::zstd_baseline;
 use qlc::formats::{ExmyFormat, ExmySpec};
 use qlc::report;
@@ -169,12 +170,15 @@ fn main() {
     let comp = |len: usize| (1.0 - len as f64 / stream.len() as f64) * 100.0;
     println!("  qlc static (oracle full-stream LUT)  {:>6.2}%", comp(static_len));
     println!("  qlc adaptive (streaming, no oracle)  {:>6.2}%", comp(adaptive_len));
+    #[cfg(feature = "zstd")]
     for level in [1, 3, 9] {
         println!(
             "  zstd level {level}                         {:>6.2}%  (block compressor, context-aware)",
             zstd_baseline::compressibility(&stream, level) * 100.0
         );
     }
+    #[cfg(not(feature = "zstd"))]
+    println!("  zstd baseline skipped (build with --features zstd)");
     let huff = HuffmanCodec::from_histogram(&hist);
     println!(
         "  huffman static                       {:>6.2}%",

@@ -1,14 +1,16 @@
 //! Software encode/decode throughput for every codec on both paper
 //! PMFs — the HEAD experiment's software half ("significantly speeds up
 //! the decoding").  Also contrasts the two Huffman decoders (bit-serial
-//! tree vs multi-level table), which is the software analogue of the
-//! paper's hardware argument.
+//! tree vs multi-level table), the software analogue of the paper's
+//! hardware argument, and — new with QLF2 — single-shot vs
+//! chunked-parallel frame decode, the software analogue of the
+//! multi-decoder hardware the chunked format enables.
 
 use qlc::bitstream::BitReader;
-use qlc::codecs::frame::CodecSpec;
+use qlc::codecs::frame::{self, FrameOptions};
 use qlc::codecs::huffman::decode::{TableDecoder, TreeDecoder};
 use qlc::codecs::huffman::HuffmanCodec;
-use qlc::codecs::Codec;
+use qlc::codecs::{Codec, CodecRegistry};
 use qlc::report;
 use qlc::util::bench::Bencher;
 
@@ -16,6 +18,7 @@ const N: usize = 4 << 20; // 4 Mi symbols per stream
 
 fn main() {
     println!("=== codec_throughput: {N} symbols per stream ===");
+    let registry = CodecRegistry::global();
     let pmfs = report::paper_pmfs(42, 6);
     for (label, pmf, hist) in [
         ("ffn1", &pmfs.ffn1, &pmfs.ffn1_hist),
@@ -27,8 +30,8 @@ fn main() {
 
         for name in ["raw", "huffman", "qlc", "qlc-t1", "elias-gamma",
                      "elias-delta", "eg3"] {
-            let spec = CodecSpec::by_name(name, hist).unwrap();
-            let codec = spec.codec();
+            let handle = registry.resolve(name, hist).unwrap();
+            let codec = handle.codec();
             let encoded = codec.encode_to_vec(&symbols);
             println!(
                 "  {name}: {} -> {} bytes ({:.1}% compressibility)",
@@ -39,11 +42,10 @@ fn main() {
             b.bench_bytes(&format!("{label}/encode/{name}"), N as u64, || {
                 std::hint::black_box(codec.encode_to_vec(&symbols));
             });
-            let mut out = Vec::with_capacity(N);
+            let mut out = vec![0u8; N];
             b.bench_bytes(&format!("{label}/decode/{name}"), N as u64, || {
-                out.clear();
                 let mut r = BitReader::new(&encoded);
-                codec.decode(&mut r, N, &mut out).unwrap();
+                codec.decode_into(&mut r, &mut out).unwrap();
                 std::hint::black_box(out.len());
             });
         }
@@ -53,21 +55,67 @@ fn main() {
         let encoded = huff.encode_to_vec(&symbols);
         let tree = TreeDecoder::new(huff.book());
         let table = TableDecoder::new(huff.book());
-        let mut out = Vec::with_capacity(N);
+        let mut out = vec![0u8; N];
         b.bench_bytes(&format!("{label}/decode/huffman-tree-serial"),
                       N as u64, || {
-            out.clear();
             let mut r = BitReader::new(&encoded);
-            tree.decode(&mut r, N, &mut out).unwrap();
+            tree.decode_into(&mut r, &mut out).unwrap();
             std::hint::black_box(out.len());
         });
         b.bench_bytes(&format!("{label}/decode/huffman-table"),
                       N as u64, || {
-            out.clear();
             let mut r = BitReader::new(&encoded);
-            table.decode(&mut r, N, &mut out).unwrap();
+            table.decode_into(&mut r, &mut out).unwrap();
             std::hint::black_box(out.len());
         });
+
+        // QLF2 frame path: single-shot (one chunk, serial) vs
+        // chunked-parallel (64 Ki-symbol chunks, one worker per core).
+        // Same tables, same payload bits — the delta is the chunked
+        // format's parallel decode.
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        println!("  [chunked-parallel uses {cores} worker threads]");
+        for name in ["qlc", "huffman"] {
+            let handle = registry.resolve(name, hist).unwrap();
+            let single = frame::compress_with(
+                &handle,
+                &symbols,
+                &FrameOptions { chunk_symbols: usize::MAX, threads: 1 },
+            );
+            let chunked =
+                frame::compress_with(&handle, &symbols, &FrameOptions::default());
+            b.bench_bytes(
+                &format!("{label}/frame-decode/{name}/single-shot"),
+                N as u64,
+                || {
+                    let out = frame::decompress_with(
+                        &single,
+                        &FrameOptions::serial(),
+                    )
+                    .unwrap();
+                    std::hint::black_box(out.len());
+                },
+            );
+            b.bench_bytes(
+                &format!("{label}/frame-decode/{name}/chunked-parallel"),
+                N as u64,
+                || {
+                    let out = frame::decompress(&chunked).unwrap();
+                    std::hint::black_box(out.len());
+                },
+            );
+            b.bench_bytes(
+                &format!("{label}/frame-encode/{name}/chunked-parallel"),
+                N as u64,
+                || {
+                    std::hint::black_box(
+                        frame::compress(&handle, &symbols).len(),
+                    );
+                },
+            );
+        }
         println!();
     }
 }

@@ -76,6 +76,27 @@ impl BitWriter {
         }
         self.buf
     }
+
+    /// Flush (zero-pad the final partial byte), append the encoded
+    /// bytes to `out`, and reset for the next chunk — the writer's
+    /// internal allocation is retained, which is what lets an
+    /// [`crate::codecs::EncoderSession`] encode an unbounded stream of
+    /// chunks with a single scratch buffer.
+    pub fn drain_into(&mut self, out: &mut Vec<u8>) {
+        if self.nbits > 0 {
+            self.buf.push((self.acc << (8 - self.nbits)) as u8);
+        }
+        out.extend_from_slice(&self.buf);
+        self.reset();
+    }
+
+    /// Discard all pending output, keeping the allocation.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.acc = 0;
+        self.nbits = 0;
+        self.total_bits = 0;
+    }
 }
 
 /// Bit-granular reader with a 64-bit staging buffer.
@@ -429,6 +450,40 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn drain_into_matches_finish_per_chunk() {
+        // A reused writer drained chunk-by-chunk must produce exactly
+        // the bytes of fresh writers finished per chunk.
+        let chunks: [&[(u64, u32)]; 3] = [
+            &[(0b101, 3), (0xFFFF, 16)],
+            &[(0, 1)],
+            &[(0x1ABCD, 17), (1, 1), (0, 7)],
+        ];
+        let mut reused = BitWriter::new();
+        let mut drained = Vec::new();
+        let mut finished = Vec::new();
+        for fields in chunks {
+            let mut fresh = BitWriter::new();
+            for &(v, n) in fields {
+                reused.write_bits(v, n);
+                fresh.write_bits(v, n);
+            }
+            reused.drain_into(&mut drained);
+            finished.extend_from_slice(&fresh.finish());
+        }
+        assert_eq!(drained, finished);
+        assert_eq!(reused.bit_len(), 0, "drain must reset the bit count");
+    }
+
+    #[test]
+    fn reset_clears_partial_byte() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1, 1);
+        w.reset();
+        w.write_bits(0b1010_1010, 8);
+        assert_eq!(w.finish(), vec![0b1010_1010]);
     }
 
     #[test]

@@ -83,21 +83,27 @@ pub fn encode(cfg: &AdaptiveConfig, symbols: &[u8]) -> Vec<u8> {
 }
 
 /// Decode `n` symbols produced by [`encode`] with the same config.
+///
+/// Unlike the QLF2 frame format, adaptive chunks are *not* byte
+/// aligned (the stream is one continuous bitstream with zero table
+/// bytes after chunk 0), so decode is inherently sequential — each
+/// chunk's tables derive from the previous chunk's decoded symbols.
+/// The output is still produced via [`Codec::decode_into`] straight
+/// into the result buffer, one slice per chunk.
 pub fn decode(
     cfg: &AdaptiveConfig,
     data: &[u8],
     n: usize,
 ) -> Result<Vec<u8>, CodecError> {
     let mut reader = BitReader::new(data);
-    let mut out = Vec::with_capacity(n);
+    let mut out = vec![0u8; n];
     let mut prev_hist: Option<Histogram> = None;
     let mut done = 0usize;
     while done < n {
         let take = cfg.chunk_symbols.min(n - done);
         let codec = codec_for(cfg, prev_hist.as_ref());
-        let start = out.len();
-        codec.decode(&mut reader, take, &mut out)?;
-        prev_hist = Some(Histogram::from_symbols(&out[start..]));
+        codec.decode_into(&mut reader, &mut out[done..done + take])?;
+        prev_hist = Some(Histogram::from_symbols(&out[done..done + take]));
         done += take;
     }
     Ok(out)

@@ -195,16 +195,14 @@ impl Codec for EliasCodec {
         }
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         reader: &mut BitReader,
-        n: usize,
-        out: &mut Vec<u8>,
+        out: &mut [u8],
     ) -> Result<(), CodecError> {
-        out.reserve(n);
-        for _ in 0..n {
+        for slot in out.iter_mut() {
             let v = self.decode_value(reader)?;
-            out.push(self.unmap[(v - 1) as usize]);
+            *slot = self.unmap[(v - 1) as usize];
         }
         Ok(())
     }

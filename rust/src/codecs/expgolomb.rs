@@ -91,21 +91,19 @@ impl Codec for ExpGolombCodec {
         }
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         reader: &mut BitReader,
-        n: usize,
-        out: &mut Vec<u8>,
+        out: &mut [u8],
     ) -> Result<(), CodecError> {
-        out.reserve(n);
-        for _ in 0..n {
+        for slot in out.iter_mut() {
             let v = self.decode_value(reader)?;
             if v > 255 {
                 return Err(CodecError::InvalidCode {
                     bit_offset: reader.bits_consumed(),
                 });
             }
-            out.push(self.unmap[v as usize]);
+            *slot = self.unmap[v as usize];
         }
         Ok(())
     }

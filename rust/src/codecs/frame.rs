@@ -1,238 +1,331 @@
-//! Self-describing compressed frame container.
+//! Self-describing compressed frame container (formats QLF1 + QLF2).
 //!
-//! Layout (little-endian):
+//! # QLF2 — chunked (current, read + write)
+//!
+//! ```text
+//! magic "QLF2" | codec_tag u8 | flags u8 (0) | n_symbols u64 |
+//! header_len u32 | header bytes… |
+//! n_chunks u32 | n_chunks × { chunk_n_symbols u32 | payload_len u32 } |
+//! chunk payloads… (each byte-aligned, independently decodable)
+//! ```
+//!
+//! The codec table header is written **once**; the payload is split
+//! into fixed-size symbol chunks (default 64 Ki symbols), each encoded
+//! to its own byte-aligned payload.  Chunks share the codec tables but
+//! no bitstream state, so encode and decode parallelize across cores —
+//! `compress_with`/`decompress` fan chunks out over `std::thread`
+//! scoped workers (one [`EncoderSession`]/[`DecoderSession`] per
+//! worker; the crate has no rayon in its offline dependency set).
+//! Chunk boundaries depend only on [`FrameOptions::chunk_symbols`],
+//! never on the worker count, so frame bytes are deterministic.
+//!
+//! # QLF1 — single payload (legacy, read + [`compress_qlf1`])
+//!
 //! ```text
 //! magic "QLF1" | codec_tag u8 | reserved u8 | n_symbols u64 |
 //! header_len u32 | header bytes… | payload bits…
 //! ```
-//! The header carries whatever tables the codec needs (Huffman code
-//! lengths, QLC scheme + rank LUT, EG order…), so a frame decodes
-//! without out-of-band state.  Used by the CLI (`qlc compress` /
-//! `decompress`) and as the wire format of the collective transport.
+//!
+//! [`decompress`] dispatches on the magic, so pre-QLF2 archives keep
+//! decoding.  Both formats share wire tags and table-header layouts
+//! via [`CodecRegistry`] — this module contains no per-codec dispatch
+//! of its own.
 
-use super::elias::{EliasCodec, EliasKind};
-use super::expgolomb::ExpGolombCodec;
-use super::huffman::HuffmanCodec;
-use super::qlc::{self, QlcCodec};
-use super::raw::RawCodec;
-use super::{Codec, CodecError};
-use crate::stats::Histogram;
+use super::registry::{CodecHandle, CodecRegistry};
+use super::session::DEFAULT_CHUNK_SYMBOLS;
+use super::CodecError;
 
-pub const MAGIC: [u8; 4] = *b"QLF1";
+pub const MAGIC_QLF1: [u8; 4] = *b"QLF1";
+pub const MAGIC_QLF2: [u8; 4] = *b"QLF2";
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Tag {
-    Raw = 0,
-    Huffman = 1,
-    Qlc = 2,
-    Gamma = 3,
-    Delta = 4,
-    Omega = 5,
-    ExpGolomb = 6,
+/// Fixed prefix shared by both formats: magic, tag, flags, n, hlen.
+const FIXED_HEADER: usize = 4 + 1 + 1 + 8 + 4;
+
+/// Knobs for chunked frame I/O.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameOptions {
+    /// Symbols per chunk (QLF2).  Smaller chunks → more parallelism
+    /// and more per-chunk overhead (8 table bytes + final-byte pad).
+    pub chunk_symbols: usize,
+    /// Worker threads; 0 = one per available core, 1 = serial.
+    pub threads: usize,
 }
 
-impl Tag {
-    fn from_u8(v: u8) -> Option<Tag> {
-        Some(match v {
-            0 => Tag::Raw,
-            1 => Tag::Huffman,
-            2 => Tag::Qlc,
-            3 => Tag::Gamma,
-            4 => Tag::Delta,
-            5 => Tag::Omega,
-            6 => Tag::ExpGolomb,
-            _ => return None,
-        })
+impl Default for FrameOptions {
+    fn default() -> Self {
+        FrameOptions { chunk_symbols: DEFAULT_CHUNK_SYMBOLS, threads: 0 }
     }
 }
 
-/// A fully-specified codec instance that knows how to serialize its
-/// tables into a frame header.
-pub enum CodecSpec {
-    Raw,
-    Huffman(HuffmanCodec),
-    Qlc(QlcCodec),
-    Elias(EliasCodec, EliasKind),
-    ExpGolomb(ExpGolombCodec, u32),
+impl FrameOptions {
+    /// Serial processing (inside worker pools that already own their
+    /// parallelism, e.g. the coordinator pipeline).
+    pub fn serial() -> Self {
+        FrameOptions { threads: 1, ..Default::default() }
+    }
 }
 
-impl CodecSpec {
-    /// Factory by codec name, fitting tables to `hist` where needed.
-    /// Names: raw, huffman, qlc (optimized), qlc-t1, qlc-t2,
-    /// elias-gamma, elias-delta, elias-omega, eg0…eg8.
-    pub fn by_name(name: &str, hist: &Histogram) -> Result<CodecSpec, String> {
-        Ok(match name {
-            "raw" => CodecSpec::Raw,
-            "huffman" => CodecSpec::Huffman(HuffmanCodec::from_histogram(hist)),
-            "qlc" => {
-                let pmf = hist.pmf();
-                let scheme = qlc::optimize_scheme(&pmf.sorted_desc());
-                CodecSpec::Qlc(QlcCodec::from_pmf(scheme, &pmf))
-            }
-            "qlc-t1" => CodecSpec::Qlc(QlcCodec::from_pmf(
-                qlc::AreaScheme::table1(),
-                &hist.pmf(),
-            )),
-            "qlc-t2" => CodecSpec::Qlc(QlcCodec::from_pmf(
-                qlc::AreaScheme::table2(),
-                &hist.pmf(),
-            )),
-            "elias-gamma" => {
-                CodecSpec::Elias(EliasCodec::new(EliasKind::Gamma), EliasKind::Gamma)
-            }
-            "elias-delta" => {
-                CodecSpec::Elias(EliasCodec::new(EliasKind::Delta), EliasKind::Delta)
-            }
-            "elias-omega" => {
-                CodecSpec::Elias(EliasCodec::new(EliasKind::Omega), EliasKind::Omega)
-            }
-            _ => {
-                if let Some(kstr) = name.strip_prefix("eg") {
-                    let k: u32 = kstr
-                        .parse()
-                        .map_err(|_| format!("bad EG order in '{name}'"))?;
-                    if k > 8 {
-                        return Err(format!("EG order {k} > 8"));
-                    }
-                    CodecSpec::ExpGolomb(ExpGolombCodec::new(k), k)
-                } else {
-                    return Err(format!("unknown codec '{name}'"));
-                }
-            }
-        })
-    }
+fn effective_threads(requested: usize, jobs: usize) -> usize {
+    let hw = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    hw.min(jobs).max(1)
+}
 
-    /// All codec names usable with [`CodecSpec::by_name`].
-    pub fn known_names() -> Vec<&'static str> {
-        vec![
-            "raw", "huffman", "qlc", "qlc-t1", "qlc-t2", "elias-gamma",
-            "elias-delta", "elias-omega", "eg0", "eg3",
-        ]
+/// Run `work` over contiguous bands of `jobs` on up to `threads`
+/// scoped workers (serial when `threads <= 1`).  Each invocation of
+/// `work` gets one band and typically amortizes one codec session
+/// across it.  Band assignment never affects results: every job
+/// carries its own destination.  Returns the first error.
+fn run_banded<J, E, F>(jobs: Vec<J>, threads: usize, work: F) -> Result<(), E>
+where
+    J: Send,
+    E: Send,
+    F: Fn(Vec<J>) -> Result<(), E> + Sync,
+{
+    if threads <= 1 {
+        return work(jobs);
     }
-
-    pub fn codec(&self) -> &dyn Codec {
-        match self {
-            CodecSpec::Raw => &RawCodec,
-            CodecSpec::Huffman(c) => c,
-            CodecSpec::Qlc(c) => c,
-            CodecSpec::Elias(c, _) => c,
-            CodecSpec::ExpGolomb(c, _) => c,
+    let per_band = (jobs.len() + threads - 1) / threads;
+    let results = std::thread::scope(|s| {
+        let work = &work;
+        let mut workers = Vec::with_capacity(threads);
+        let mut jobs = jobs;
+        while !jobs.is_empty() {
+            let band = jobs.split_off(jobs.len().saturating_sub(per_band));
+            workers.push(s.spawn(move || work(band)));
         }
-    }
-
-    fn tag(&self) -> Tag {
-        match self {
-            CodecSpec::Raw => Tag::Raw,
-            CodecSpec::Huffman(_) => Tag::Huffman,
-            CodecSpec::Qlc(_) => Tag::Qlc,
-            CodecSpec::Elias(_, EliasKind::Gamma) => Tag::Gamma,
-            CodecSpec::Elias(_, EliasKind::Delta) => Tag::Delta,
-            CodecSpec::Elias(_, EliasKind::Omega) => Tag::Omega,
-            CodecSpec::ExpGolomb(..) => Tag::ExpGolomb,
-        }
-    }
-
-    fn header(&self) -> Vec<u8> {
-        match self {
-            CodecSpec::Raw | CodecSpec::Elias(..) => Vec::new(),
-            CodecSpec::Huffman(c) => {
-                c.code_lengths().iter().map(|&l| l as u8).collect()
-            }
-            CodecSpec::Qlc(c) => qlc::serde::to_bytes(c),
-            CodecSpec::ExpGolomb(_, k) => vec![*k as u8],
-        }
-    }
-
-    fn from_header(tag: Tag, header: &[u8]) -> Result<CodecSpec, CodecError> {
-        let bad = |msg: String| CodecError::BadHeader(msg);
-        Ok(match tag {
-            Tag::Raw => CodecSpec::Raw,
-            Tag::Gamma => {
-                CodecSpec::Elias(EliasCodec::new(EliasKind::Gamma), EliasKind::Gamma)
-            }
-            Tag::Delta => {
-                CodecSpec::Elias(EliasCodec::new(EliasKind::Delta), EliasKind::Delta)
-            }
-            Tag::Omega => {
-                CodecSpec::Elias(EliasCodec::new(EliasKind::Omega), EliasKind::Omega)
-            }
-            Tag::Huffman => {
-                if header.len() != 256 {
-                    return Err(bad(format!(
-                        "huffman header {} bytes",
-                        header.len()
-                    )));
-                }
-                let mut lengths = [0u32; 256];
-                for (l, &b) in lengths.iter_mut().zip(header) {
-                    *l = b as u32;
-                }
-                CodecSpec::Huffman(HuffmanCodec::from_lengths(&lengths)?)
-            }
-            Tag::Qlc => CodecSpec::Qlc(
-                qlc::serde::from_bytes(header, "qlc").map_err(bad)?,
-            ),
-            Tag::ExpGolomb => {
-                if header.len() != 1 || header[0] > 8 {
-                    return Err(bad("bad EG header".into()));
-                }
-                CodecSpec::ExpGolomb(
-                    ExpGolombCodec::new(header[0] as u32),
-                    header[0] as u32,
-                )
-            }
-        })
-    }
+        workers
+            .into_iter()
+            .map(|w| w.join().expect("frame worker panicked"))
+            .collect::<Vec<_>>()
+    });
+    results.into_iter().collect()
 }
 
-/// Compress `symbols` into a self-describing frame.
-pub fn compress(spec: &CodecSpec, symbols: &[u8]) -> Vec<u8> {
-    let header = spec.header();
-    let payload = spec.codec().encode_to_vec(symbols);
+// ---------------------------------------------------------------------------
+// Encode
+
+/// Compress `symbols` into a chunked QLF2 frame with default options.
+pub fn compress(handle: &CodecHandle, symbols: &[u8]) -> Vec<u8> {
+    compress_with(handle, symbols, &FrameOptions::default())
+}
+
+/// Compress `symbols` into a chunked QLF2 frame.
+pub fn compress_with(
+    handle: &CodecHandle,
+    symbols: &[u8],
+    opts: &FrameOptions,
+) -> Vec<u8> {
+    // Chunk-table fields are u32; the deepest code in the crate is
+    // < 64 bits/symbol, so capping chunks at u32::MAX/8 symbols keeps
+    // both the symbol count and the worst-case payload length in
+    // range.  The lower bound keeps the chunk *count* in its u32 field
+    // too (only binds past 4 Gi symbols of 1-symbol chunks).
+    let min_chunk = symbols.len() / u32::MAX as usize + 1;
+    let chunk_symbols = opts
+        .chunk_symbols
+        .clamp(min_chunk.min((u32::MAX / 8) as usize), (u32::MAX / 8) as usize)
+        .max(1);
+    let chunks: Vec<&[u8]> = symbols.chunks(chunk_symbols).collect();
+    assert!(chunks.len() <= u32::MAX as usize, "chunk count overflows u32");
+    let threads = effective_threads(opts.threads, chunks.len());
+
+    let mut payloads: Vec<Vec<u8>> = vec![Vec::new(); chunks.len()];
+    let jobs: Vec<(&[u8], &mut Vec<u8>)> =
+        chunks.iter().copied().zip(payloads.iter_mut()).collect();
+    let encode_ok: Result<(), std::convert::Infallible> =
+        run_banded(jobs, threads, |band| {
+            let mut enc = handle.encoder();
+            for (chunk, slot) in band {
+                *slot = enc.encode_chunk_to_vec(chunk);
+            }
+            Ok(())
+        });
+    encode_ok.unwrap(); // Infallible: encoding cannot fail
+
+    let header = handle.wire_header();
+    let payload_bytes: usize = payloads.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(
+        FIXED_HEADER + header.len() + 4 + payloads.len() * 8 + payload_bytes,
+    );
+    out.extend_from_slice(&MAGIC_QLF2);
+    out.push(handle.wire_tag());
+    out.push(0); // flags
+    out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header);
+    out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+    for (chunk, payload) in chunks.iter().zip(&payloads) {
+        out.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    }
+    for payload in &payloads {
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Compress `symbols` into a legacy single-payload QLF1 frame.
+/// Kept for interoperability with pre-chunking consumers (and to
+/// exercise the QLF1 read path); new code should use [`compress`].
+pub fn compress_qlf1(handle: &CodecHandle, symbols: &[u8]) -> Vec<u8> {
+    let header = handle.wire_header();
+    let payload = handle.codec().encode_to_vec(symbols);
     let mut out =
-        Vec::with_capacity(4 + 2 + 8 + 4 + header.len() + payload.len());
-    out.extend_from_slice(&MAGIC);
-    out.push(spec.tag() as u8);
+        Vec::with_capacity(FIXED_HEADER + header.len() + payload.len());
+    out.extend_from_slice(&MAGIC_QLF1);
+    out.push(handle.wire_tag());
     out.push(0); // reserved
     out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
     out.extend_from_slice(&(header.len() as u32).to_le_bytes());
-    out.extend_from_slice(&header);
+    out.extend_from_slice(header);
     out.extend_from_slice(&payload);
     out
 }
 
-/// Decompress a frame produced by [`compress`].
+// ---------------------------------------------------------------------------
+// Decode
+
+/// Decompress a QLF1 or QLF2 frame (dispatch on magic).
 pub fn decompress(data: &[u8]) -> Result<Vec<u8>, CodecError> {
+    decompress_with(data, &FrameOptions::default())
+}
+
+/// Decompress with explicit threading options.
+pub fn decompress_with(
+    data: &[u8],
+    opts: &FrameOptions,
+) -> Result<Vec<u8>, CodecError> {
     let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
-    if data.len() < 18 {
+    if data.len() < FIXED_HEADER {
         return Err(bad("frame too short"));
     }
-    if data[0..4] != MAGIC {
-        return Err(bad("bad magic"));
+    let magic: [u8; 4] = data[0..4].try_into().unwrap();
+    let tag = data[4];
+    let n = u64::from_le_bytes(data[6..14].try_into().unwrap());
+    if n > usize::MAX as u64 {
+        return Err(bad("declared symbol count exceeds address space"));
     }
-    let tag = Tag::from_u8(data[4]).ok_or_else(|| bad("unknown codec tag"))?;
-    let n = u64::from_le_bytes(data[6..14].try_into().unwrap()) as usize;
+    let n = n as usize;
     let hlen = u32::from_le_bytes(data[14..18].try_into().unwrap()) as usize;
-    if data.len() < 18 + hlen {
+    if data.len() - FIXED_HEADER < hlen {
         return Err(bad("truncated header"));
     }
-    let header = &data[18..18 + hlen];
-    let payload = &data[18 + hlen..];
+    let header = &data[FIXED_HEADER..FIXED_HEADER + hlen];
+    let body = &data[FIXED_HEADER + hlen..];
+    match magic {
+        MAGIC_QLF1 => decompress_qlf1_body(tag, n, header, body),
+        MAGIC_QLF2 => {
+            if data[5] != 0 {
+                return Err(bad("unsupported QLF2 flags"));
+            }
+            decompress_qlf2_body(tag, n, header, body, opts)
+        }
+        _ => Err(bad("bad magic")),
+    }
+}
+
+fn decompress_qlf1_body(
+    tag: u8,
+    n: usize,
+    header: &[u8],
+    payload: &[u8],
+) -> Result<Vec<u8>, CodecError> {
     // Every code is ≥ 1 bit, so a frame that declares more symbols than
     // payload bits is corrupt.  (Without this bound a hostile header
     // could force a huge allocation before the first decode error.)
-    if n > payload.len().saturating_mul(8) {
-        return Err(bad("declared symbol count exceeds payload bits"));
+    if n as u64 > payload.len() as u64 * 8 {
+        return Err(CodecError::BadHeader(
+            "declared symbol count exceeds payload bits".into(),
+        ));
     }
-    let spec = CodecSpec::from_header(tag, header)?;
-    spec.codec().decode_from_slice(payload, n)
+    let handle = CodecRegistry::global().resolve_wire(tag, header)?;
+    handle.decoder().decode_chunk_to_vec(payload, n)
+}
+
+fn decompress_qlf2_body(
+    tag: u8,
+    n: usize,
+    header: &[u8],
+    body: &[u8],
+    opts: &FrameOptions,
+) -> Result<Vec<u8>, CodecError> {
+    let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
+    if body.len() < 4 {
+        return Err(bad("truncated chunk count"));
+    }
+    let n_chunks =
+        u32::from_le_bytes(body[0..4].try_into().unwrap()) as usize;
+    let table = &body[4..];
+    // The chunk table must fit in the frame before anything is
+    // allocated in proportion to it.
+    if table.len() / 8 < n_chunks {
+        return Err(bad("truncated chunk table"));
+    }
+    let (table, payload_area) = table.split_at(n_chunks * 8);
+
+    let mut total_symbols = 0u64;
+    let mut total_payload = 0u64;
+    let mut entries = Vec::with_capacity(n_chunks);
+    for e in table.chunks_exact(8) {
+        let chunk_n =
+            u32::from_le_bytes(e[0..4].try_into().unwrap()) as usize;
+        let plen = u32::from_le_bytes(e[4..8].try_into().unwrap()) as usize;
+        // Per-chunk sanity: ≥ 1 bit per symbol.
+        if chunk_n as u64 > plen as u64 * 8 {
+            return Err(bad("chunk symbol count exceeds chunk payload bits"));
+        }
+        total_symbols += chunk_n as u64;
+        total_payload += plen as u64;
+        entries.push((chunk_n, plen));
+    }
+    if total_symbols != n as u64 {
+        return Err(bad("chunk table does not sum to frame symbol count"));
+    }
+    if total_payload != payload_area.len() as u64 {
+        return Err(bad("chunk table does not sum to payload length"));
+    }
+
+    let handle = CodecRegistry::global().resolve_wire(tag, header)?;
+    let mut out = vec![0u8; n];
+
+    // Carve (payload, destination) pairs for each chunk.
+    let mut jobs: Vec<(&[u8], &mut [u8])> = Vec::with_capacity(n_chunks);
+    let mut payload_rest = payload_area;
+    let mut out_rest: &mut [u8] = &mut out;
+    for &(chunk_n, plen) in &entries {
+        let (payload, ptail) = payload_rest.split_at(plen);
+        payload_rest = ptail;
+        let (dst, otail) =
+            std::mem::take(&mut out_rest).split_at_mut(chunk_n);
+        out_rest = otail;
+        jobs.push((payload, dst));
+    }
+
+    let threads = effective_threads(opts.threads, jobs.len());
+    run_banded(jobs, threads, |band| {
+        let mut dec = handle.decoder();
+        for (payload, dst) in band {
+            dec.decode_chunk(payload, dst)?;
+        }
+        Ok(())
+    })?;
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stats::Histogram;
     use crate::util::prop;
     use crate::util::rng::{AliasTable, Rng};
+
+    fn registry() -> &'static CodecRegistry {
+        CodecRegistry::global()
+    }
 
     fn skewed_symbols(n: usize, seed: u64) -> Vec<u8> {
         let mut p = [0f64; 256];
@@ -245,15 +338,71 @@ mod tests {
     }
 
     #[test]
-    fn all_codecs_roundtrip_through_frames() {
+    fn all_codecs_roundtrip_through_qlf2_frames() {
         let symbols = skewed_symbols(20_000, 1);
         let hist = Histogram::from_symbols(&symbols);
-        for name in CodecSpec::known_names() {
-            let spec = CodecSpec::by_name(name, &hist).unwrap();
-            let frame = compress(&spec, &symbols);
+        for name in registry().known_names() {
+            let handle = registry().resolve(name, &hist).unwrap();
+            let frame = compress(&handle, &symbols);
+            assert_eq!(&frame[0..4], &MAGIC_QLF2, "{name}");
             let back = decompress(&frame).unwrap();
             assert_eq!(back, symbols, "codec {name}");
         }
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_through_qlf1_frames() {
+        // Legacy single-payload frames must keep decoding.
+        let symbols = skewed_symbols(9_000, 7);
+        let hist = Histogram::from_symbols(&symbols);
+        for name in registry().known_names() {
+            let handle = registry().resolve(name, &hist).unwrap();
+            let frame = compress_qlf1(&handle, &symbols);
+            assert_eq!(&frame[0..4], &MAGIC_QLF1, "{name}");
+            assert_eq!(decompress(&frame).unwrap(), symbols, "codec {name}");
+        }
+    }
+
+    #[test]
+    fn multi_chunk_frames_roundtrip() {
+        let symbols = skewed_symbols(100_000, 2);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        for chunk_symbols in [1usize, 37, 4096, 64 * 1024, 1 << 30] {
+            let opts = FrameOptions { chunk_symbols, threads: 0 };
+            let frame = compress_with(&handle, &symbols, &opts);
+            assert_eq!(
+                decompress(&frame).unwrap(),
+                symbols,
+                "chunk_symbols={chunk_symbols}"
+            );
+        }
+    }
+
+    #[test]
+    fn frame_bytes_independent_of_thread_count() {
+        let symbols = skewed_symbols(200_000, 3);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("huffman", &hist).unwrap();
+        let opts = |threads| FrameOptions { chunk_symbols: 8192, threads };
+        let serial = compress_with(&handle, &symbols, &opts(1));
+        for threads in [2usize, 4, 8] {
+            assert_eq!(
+                compress_with(&handle, &symbols, &opts(threads)),
+                serial,
+                "threads={threads}"
+            );
+        }
+        // Serial and parallel decode agree too.
+        let serial_out =
+            decompress_with(&serial, &FrameOptions::serial()).unwrap();
+        let parallel_out = decompress_with(
+            &serial,
+            &FrameOptions { chunk_symbols: 8192, threads: 4 },
+        )
+        .unwrap();
+        assert_eq!(serial_out, symbols);
+        assert_eq!(parallel_out, symbols);
     }
 
     #[test]
@@ -261,21 +410,49 @@ mod tests {
         // Decode must not need the original histogram.
         let symbols = skewed_symbols(5_000, 2);
         let hist = Histogram::from_symbols(&symbols);
-        let spec = CodecSpec::by_name("qlc", &hist).unwrap();
-        let frame = compress(&spec, &symbols);
-        drop(spec);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let frame = compress(&handle, &symbols);
+        drop(handle);
         drop(hist);
         assert_eq!(decompress(&frame).unwrap(), symbols);
+    }
+
+    #[test]
+    fn table_header_written_once_across_chunks() {
+        // A many-chunk QLC frame must carry exactly one table header:
+        // its size overhead vs a single-chunk frame is only the chunk
+        // table (8 bytes/chunk) plus per-chunk padding.
+        let symbols = skewed_symbols(256 * 1024, 4);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let one = compress_with(
+            &handle,
+            &symbols,
+            &FrameOptions { chunk_symbols: usize::MAX, threads: 1 },
+        );
+        let chunks = 256; // 1 Ki symbols per chunk
+        let many = compress_with(
+            &handle,
+            &symbols,
+            &FrameOptions { chunk_symbols: 1024, threads: 1 },
+        );
+        assert!(
+            many.len() <= one.len() + chunks * 9,
+            "chunk overhead too large: {} vs {}",
+            many.len(),
+            one.len()
+        );
     }
 
     #[test]
     fn compressed_smaller_than_raw_for_skewed_data() {
         let symbols = skewed_symbols(50_000, 3);
         let hist = Histogram::from_symbols(&symbols);
-        let raw = compress(&CodecSpec::Raw, &symbols).len();
+        let raw_handle = registry().resolve("raw", &hist).unwrap();
+        let raw = compress(&raw_handle, &symbols).len();
         for name in ["huffman", "qlc", "qlc-t1"] {
-            let spec = CodecSpec::by_name(name, &hist).unwrap();
-            let framed = compress(&spec, &symbols).len();
+            let handle = registry().resolve(name, &hist).unwrap();
+            let framed = compress(&handle, &symbols).len();
             assert!(framed < raw, "{name}: {framed} !< {raw}");
         }
     }
@@ -284,8 +461,8 @@ mod tests {
     fn corrupt_frames_rejected() {
         let symbols = skewed_symbols(1000, 4);
         let hist = Histogram::from_symbols(&symbols);
-        let spec = CodecSpec::by_name("huffman", &hist).unwrap();
-        let frame = compress(&spec, &symbols);
+        let handle = registry().resolve("huffman", &hist).unwrap();
+        let frame = compress(&handle, &symbols);
 
         let mut bad = frame.clone();
         bad[0] = b'X';
@@ -293,6 +470,10 @@ mod tests {
 
         let mut bad = frame.clone();
         bad[4] = 200; // unknown tag
+        assert!(decompress(&bad).is_err());
+
+        let mut bad = frame.clone();
+        bad[5] = 1; // unsupported flags
         assert!(decompress(&bad).is_err());
 
         let bad = &frame[..10];
@@ -304,19 +485,75 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_chunk_table_rejected() {
+        let symbols = skewed_symbols(64 * 1024, 5);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let frame = compress_with(
+            &handle,
+            &symbols,
+            &FrameOptions { chunk_symbols: 4096, threads: 1 },
+        );
+        let hlen =
+            u32::from_le_bytes(frame[14..18].try_into().unwrap()) as usize;
+        let table_off = FIXED_HEADER + hlen + 4;
+
+        // Inflate the first chunk's symbol count: sums no longer match.
+        let mut bad = frame.clone();
+        let n0 =
+            u32::from_le_bytes(bad[table_off..table_off + 4].try_into().unwrap());
+        bad[table_off..table_off + 4]
+            .copy_from_slice(&(n0 + 1).to_le_bytes());
+        assert!(decompress(&bad).is_err());
+
+        // Claim absurd chunk count.
+        let count_off = FIXED_HEADER + hlen;
+        let mut bad = frame.clone();
+        bad[count_off..count_off + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decompress(&bad).is_err());
+
+        // Shrink a payload length: payload sum mismatch.
+        let mut bad = frame.clone();
+        let p0 = u32::from_le_bytes(
+            bad[table_off + 4..table_off + 8].try_into().unwrap(),
+        );
+        bad[table_off + 4..table_off + 8]
+            .copy_from_slice(&(p0 - 1).to_le_bytes());
+        assert!(decompress(&bad).is_err());
+    }
+
+    #[test]
+    fn hostile_symbol_counts_fail_before_allocating() {
+        // A tiny frame claiming 2^50 symbols must be rejected by the
+        // bits bound, not by attempting the allocation.
+        let symbols = skewed_symbols(100, 6);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("huffman", &hist).unwrap();
+        type Compressor = fn(&CodecHandle, &[u8]) -> Vec<u8>;
+        for make in [compress as Compressor, compress_qlf1 as Compressor] {
+            let mut frame = make(&handle, &symbols);
+            frame[6..14].copy_from_slice(&(1u64 << 50).to_le_bytes());
+            assert!(decompress(&frame).is_err());
+        }
+    }
+
+    #[test]
     fn unknown_codec_name_errors() {
         let hist = Histogram::from_symbols(&[1, 2, 3]);
-        assert!(CodecSpec::by_name("zstd", &hist).is_err());
-        assert!(CodecSpec::by_name("eg99", &hist).is_err());
+        assert!(registry().resolve("zstd", &hist).is_err());
+        assert!(registry().resolve("eg99", &hist).is_err());
     }
 
     #[test]
     fn empty_input_roundtrips() {
         let hist = Histogram::from_symbols(&[0]);
         for name in ["raw", "huffman", "qlc-t1", "elias-gamma", "eg0"] {
-            let spec = CodecSpec::by_name(name, &hist).unwrap();
-            let frame = compress(&spec, &[]);
+            let handle = registry().resolve(name, &hist).unwrap();
+            let frame = compress(&handle, &[]);
             assert_eq!(decompress(&frame).unwrap(), Vec::<u8>::new(), "{name}");
+            let v1 = compress_qlf1(&handle, &[]);
+            assert_eq!(decompress(&v1).unwrap(), Vec::<u8>::new(), "{name}");
         }
     }
 
@@ -332,12 +569,78 @@ mod tests {
             }
             let names = ["raw", "huffman", "qlc", "elias-delta", "eg2"];
             let name = names[rng.below(names.len() as u64) as usize];
-            let spec = CodecSpec::by_name(name, &hist)
+            let handle = registry()
+                .resolve(name, &hist)
                 .map_err(|e| e.to_string())?;
-            let frame = compress(&spec, &symbols);
+            // Random chunking exercises 1..many chunks per frame.
+            let opts = FrameOptions {
+                chunk_symbols: 1 + rng.below(2048) as usize,
+                threads: 1 + rng.below(4) as usize,
+            };
+            let frame = compress_with(&handle, &symbols, &opts);
             let back = decompress(&frame).map_err(|e| e.to_string())?;
             if back != symbols {
                 return Err(format!("{name} roundtrip"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_corrupt_qlf2_never_panics() {
+        // Fuzz the QLF2 parser: truncations, bit flips and garbage
+        // splices anywhere in the frame (chunk table included) must
+        // produce Err or a wrong-but-bounded Ok — never a panic.
+        prop::check("qlf2 fuzz", prop::Config {
+            cases: 96, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size.max(16));
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = ["raw", "huffman", "qlc", "elias-gamma", "eg3"];
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle = registry()
+                .resolve(name, &hist)
+                .map_err(|e| e.to_string())?;
+            let frame = compress_with(&handle, &symbols, &FrameOptions {
+                chunk_symbols: 1 + rng.below(512) as usize,
+                threads: 1,
+            });
+            for _ in 0..20 {
+                let mut corrupt = frame.clone();
+                match rng.below(3) {
+                    0 => {
+                        let i = rng.below(corrupt.len() as u64) as usize;
+                        corrupt[i] ^= 1 << rng.below(8);
+                    }
+                    1 => {
+                        let keep = rng.below(corrupt.len() as u64) as usize;
+                        corrupt.truncate(keep);
+                    }
+                    _ => {
+                        let i = rng.below(corrupt.len() as u64) as usize;
+                        let mut junk = vec![0u8; 16.min(corrupt.len() - i)];
+                        rng.fill_bytes(&mut junk);
+                        corrupt[i..i + junk.len()].copy_from_slice(&junk);
+                    }
+                }
+                match decompress(&corrupt) {
+                    // A payload-internal flip the codec cannot detect
+                    // may decode to wrong symbols — but the count is
+                    // pinned by the (validated) chunk table.
+                    Ok(out) => {
+                        if out.len() > symbols.len() + corrupt.len() * 8 {
+                            return Err(format!(
+                                "decoded {} symbols from a {}-byte frame",
+                                out.len(),
+                                corrupt.len()
+                            ));
+                        }
+                    }
+                    Err(_) => {}
+                }
             }
             Ok(())
         });

@@ -78,17 +78,32 @@ impl TreeDecoder {
         }
     }
 
+    /// Decode exactly `out.len()` symbols into a caller-provided slice.
+    pub fn decode_into(
+        &self,
+        reader: &mut BitReader,
+        out: &mut [u8],
+    ) -> Result<(), CodecError> {
+        for slot in out.iter_mut() {
+            *slot = self.decode_one(reader)?;
+        }
+        Ok(())
+    }
+
+    /// Convenience wrapper appending to a `Vec` (benches, tests).
     pub fn decode(
         &self,
         reader: &mut BitReader,
         n: usize,
         out: &mut Vec<u8>,
     ) -> Result<(), CodecError> {
-        out.reserve(n);
-        for _ in 0..n {
-            out.push(self.decode_one(reader)?);
+        let start = out.len();
+        out.resize(start + n, 0);
+        let r = self.decode_into(reader, &mut out[start..]);
+        if r.is_err() {
+            out.truncate(start);
         }
-        Ok(())
+        r
     }
 }
 
@@ -222,13 +237,13 @@ impl TableDecoder {
         }
     }
 
-    pub fn decode(
+    /// Decode exactly `out.len()` symbols into a caller-provided slice.
+    pub fn decode_into(
         &self,
         reader: &mut BitReader,
-        n: usize,
-        out: &mut Vec<u8>,
+        out: &mut [u8],
     ) -> Result<(), CodecError> {
-        out.reserve(n);
+        let n = out.len();
         let (root_off, root_width) = self.tables[0];
         let root_shift = 64 - root_width;
         let mut i = 0usize;
@@ -240,7 +255,7 @@ impl TableDecoder {
             // leaf-filled root slots correctly.)
             let mut budget = reader.buffered_bits();
             if budget < self.max_len {
-                out.push(self.decode_one(reader)?);
+                out[i] = self.decode_one(reader)?;
                 i += 1;
                 continue;
             }
@@ -250,11 +265,11 @@ impl TableDecoder {
                     Entry::Leaf { symbol, len } => {
                         reader.skip(len as u32);
                         budget -= len as u32;
-                        out.push(symbol);
+                        out[i] = symbol;
                         i += 1;
                     }
                     Entry::Sub { .. } => {
-                        out.push(self.decode_one(reader)?);
+                        out[i] = self.decode_one(reader)?;
                         i += 1;
                         budget = 0; // force re-refill
                     }
@@ -267,6 +282,22 @@ impl TableDecoder {
             }
         }
         Ok(())
+    }
+
+    /// Convenience wrapper appending to a `Vec` (benches, tests).
+    pub fn decode(
+        &self,
+        reader: &mut BitReader,
+        n: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<(), CodecError> {
+        let start = out.len();
+        out.resize(start + n, 0);
+        let r = self.decode_into(reader, &mut out[start..]);
+        if r.is_err() {
+            out.truncate(start);
+        }
+        r
     }
 }
 

@@ -81,13 +81,12 @@ impl Codec for HuffmanCodec {
         }
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         reader: &mut BitReader,
-        n: usize,
-        out: &mut Vec<u8>,
+        out: &mut [u8],
     ) -> Result<(), CodecError> {
-        self.decoder.decode(reader, n, out)
+        self.decoder.decode_into(reader, out)
     }
 
     fn code_lengths(&self) -> [u32; 256] {

@@ -6,12 +6,28 @@
 //! * [`huffman`] — canonical Huffman, the paper's optimal baseline.
 //! * [`qlc`] — Quad Length Codes, the paper's contribution.
 //!
-//! Every codec implements [`Codec`]: payload-level encode/decode over a
-//! shared [`BitWriter`]/[`BitReader`], plus per-symbol code lengths for
-//! analytic compressibility (the paper's tables are expectations over
-//! PMFs, not file sizes).  [`frame`] adds a self-describing container
-//! (codec id + tables + symbol count) for the CLI and the collective
-//! transport.
+//! # The codec API
+//!
+//! Every codec implements [`Codec`].  The decode primitive is
+//! [`Codec::decode_into`]: it fills a caller-provided `&mut [u8]`
+//! slice, so bulk decoders write straight into their destination (a
+//! frame chunk, a transport buffer, a tensor shard) with no per-symbol
+//! `Vec` pushes and no intermediate copies.  `decode`/`decode_from_slice`
+//! remain as thin convenience wrappers.
+//!
+//! Block-oriented streaming goes through *sessions*:
+//! [`EncoderSession`] / [`DecoderSession`] (constructed via
+//! [`Codec::encoder`] / [`Codec::decoder`] or from any `&dyn Codec`)
+//! hold reusable scratch state and encode/decode one byte-aligned chunk
+//! at a time.  Independent chunks are what let the frame layer
+//! ([`frame`], format QLF2) and the collective transport decode in
+//! parallel — the paper's whole pitch is decode *speed*, and chunking
+//! is how the software path gets it.
+//!
+//! Codec lookup is centralized in [`registry::CodecRegistry`]
+//! (name ↔ wire tag ↔ constructor-from-header); [`frame`] adds the
+//! self-describing container (QLF1 read, QLF2 read/write) used by the
+//! CLI, the coordinator and the collective transport.
 
 pub mod adaptive;
 pub mod elias;
@@ -20,7 +36,13 @@ pub mod frame;
 pub mod huffman;
 pub mod qlc;
 pub mod raw;
+pub mod registry;
+mod session;
+#[cfg(feature = "zstd")]
 pub mod zstd_baseline;
+
+pub use registry::{CodecHandle, CodecRegistry};
+pub use session::{DecoderSession, EncoderSession, DEFAULT_CHUNK_SYMBOLS};
 
 use crate::bitstream::{BitReader, BitWriter};
 
@@ -59,16 +81,38 @@ pub trait Codec: Send + Sync {
     /// Append the codes for `symbols` to `out`.
     fn encode(&self, symbols: &[u8], out: &mut BitWriter);
 
-    /// Decode exactly `n` symbols from `reader` into `out`.
+    /// Decode exactly `out.len()` symbols from `reader` into `out`.
+    ///
+    /// This is the decode primitive: bulk decoders fill the slice
+    /// directly (no `Vec` growth on the hot path).  On error the
+    /// contents of `out` are unspecified.
+    fn decode_into(
+        &self,
+        reader: &mut BitReader,
+        out: &mut [u8],
+    ) -> Result<(), CodecError>;
+
+    /// Code length in bits for each of the 256 symbols.
+    fn code_lengths(&self) -> [u32; 256];
+
+    /// Convenience: decode `n` symbols from `reader`, appending to a
+    /// `Vec`.  On error the vector is restored to its original length.
     fn decode(
         &self,
         reader: &mut BitReader,
         n: usize,
         out: &mut Vec<u8>,
-    ) -> Result<(), CodecError>;
-
-    /// Code length in bits for each of the 256 symbols.
-    fn code_lengths(&self) -> [u32; 256];
+    ) -> Result<(), CodecError> {
+        let start = out.len();
+        out.resize(start + n, 0);
+        match self.decode_into(reader, &mut out[start..]) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                out.truncate(start);
+                Err(e)
+            }
+        }
+    }
 
     /// Convenience: encode to a fresh byte buffer.
     fn encode_to_vec(&self, symbols: &[u8]) -> Vec<u8> {
@@ -84,8 +128,8 @@ pub trait Codec: Send + Sync {
         n: usize,
     ) -> Result<Vec<u8>, CodecError> {
         let mut r = BitReader::new(data);
-        let mut out = Vec::with_capacity(n);
-        self.decode(&mut r, n, &mut out)?;
+        let mut out = vec![0u8; n];
+        self.decode_into(&mut r, &mut out)?;
         Ok(out)
     }
 
@@ -93,6 +137,22 @@ pub trait Codec: Send + Sync {
     fn encoded_bits(&self, symbols: &[u8]) -> u64 {
         let lengths = self.code_lengths();
         symbols.iter().map(|&s| lengths[s as usize] as u64).sum()
+    }
+
+    /// Start a streaming encode session with reusable scratch state.
+    fn encoder(&self) -> EncoderSession<'_>
+    where
+        Self: Sized,
+    {
+        EncoderSession::new(self)
+    }
+
+    /// Start a streaming decode session.
+    fn decoder(&self) -> DecoderSession<'_>
+    where
+        Self: Sized,
+    {
+        DecoderSession::new(self)
     }
 }
 
@@ -126,6 +186,30 @@ pub(crate) mod testutil {
                         bits,
                         encoded.len()
                     ));
+                }
+                // Session chunking must agree with single-shot output.
+                let mut enc = EncoderSession::new(codec);
+                let mut chunked = Vec::new();
+                let mut boundaries = Vec::new();
+                for chunk in symbols.chunks(97.max(symbols.len() / 3).max(1)) {
+                    enc.encode_chunk(chunk, &mut chunked);
+                    boundaries.push((chunk.len(), chunked.len()));
+                }
+                let mut dec = DecoderSession::new(codec);
+                let mut restored = vec![0u8; symbols.len()];
+                let mut sym_off = 0usize;
+                let mut byte_off = 0usize;
+                for (n_sym, byte_end) in boundaries {
+                    dec.decode_chunk(
+                        &chunked[byte_off..byte_end],
+                        &mut restored[sym_off..sym_off + n_sym],
+                    )
+                    .map_err(|e| e.to_string())?;
+                    sym_off += n_sym;
+                    byte_off = byte_end;
+                }
+                if restored != symbols {
+                    return Err("session chunk roundtrip mismatch".into());
                 }
                 Ok(())
             },

@@ -170,31 +170,29 @@ impl Codec for QlcCodec {
         }
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         reader: &mut BitReader,
-        n: usize,
-        out: &mut Vec<u8>,
+        out: &mut [u8],
     ) -> Result<(), CodecError> {
-        out.reserve(n);
+        let n = out.len();
         let max = self.max_code_bits;
         let mut i = 0usize;
         while i < n {
             // Bulk path: one refill covers ⌊avail/max⌋ symbols with no
-            // further EOF checks (every code is ≤ max bits).
+            // further EOF checks (every code is ≤ max bits).  Writing
+            // straight into the destination slice keeps the loop free
+            // of capacity bookkeeping (and of the `set_len` unsafe the
+            // Vec-based decoder needed).
             let avail = reader.buffered_bits();
             if avail < max {
-                out.push(self.decode_one(reader)?);
+                out[i] = self.decode_one(reader)?;
                 i += 1;
                 continue;
             }
             let k = ((avail / max) as usize).min(n - i);
             let prefix_shift = 64 - self.scheme.prefix_bits;
-            // SAFETY: `reserve(n)` above guarantees capacity for all n
-            // symbols; we write exactly `k` and set_len afterwards.
-            let base_len = out.len();
-            let spare = out.spare_capacity_mut();
-            for j in 0..k {
+            for slot in &mut out[i..i + k] {
                 let w = reader.word_buffered();
                 let area = (w >> prefix_shift) as usize;
                 let e = &self.fast_table[area];
@@ -205,9 +203,8 @@ impl Codec for QlcCodec {
                     });
                 }
                 reader.skip(e.total_len);
-                spare[j].write(self.rank_to_symbol[(e.base + idx) as usize]);
+                *slot = self.rank_to_symbol[(e.base + idx) as usize];
             }
-            unsafe { out.set_len(base_len + k) };
             i += k;
         }
         Ok(())

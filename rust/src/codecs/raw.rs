@@ -18,18 +18,16 @@ impl Codec for RawCodec {
         }
     }
 
-    fn decode(
+    fn decode_into(
         &self,
         reader: &mut BitReader,
-        n: usize,
-        out: &mut Vec<u8>,
+        out: &mut [u8],
     ) -> Result<(), CodecError> {
-        out.reserve(n);
-        for _ in 0..n {
+        for slot in out.iter_mut() {
             let v = reader
                 .read_bits(8)
                 .map_err(|_| CodecError::UnexpectedEof)?;
-            out.push(v as u8);
+            *slot = v as u8;
         }
         Ok(())
     }

@@ -1,0 +1,476 @@
+//! Unified codec registry: the one place that knows every codec's
+//! name(s), wire tag, table-header layout, and constructors.
+//!
+//! Historically the frame container, the collective transport, the
+//! coordinator and the CLI each re-derived parts of this mapping from
+//! a `Tag`/`CodecSpec` enum pair; every new codec meant touching all
+//! of them.  Now they all resolve through [`CodecRegistry`]:
+//!
+//! * `resolve(name, hist)` — fit a codec by name ("qlc", "huffman",
+//!   "eg3", …) to a calibration histogram, producing a [`CodecHandle`];
+//! * `resolve_wire(tag, header)` — reconstruct a codec from the wire
+//!   tag + table header of a QLF1/QLF2 frame;
+//! * `known_names()` — the CLI's `--codec` vocabulary.
+//!
+//! A [`CodecHandle`] owns the boxed codec plus its wire identity
+//! (tag + serialized table header, fixed at construction), and hands
+//! out streaming [`EncoderSession`]/[`DecoderSession`]s.
+//!
+//! Wire tags are append-only and shared by QLF1 and QLF2 frames:
+//! `0=raw 1=huffman 2=qlc 3=elias-gamma 4=elias-delta 5=elias-omega
+//! 6=expgolomb`.
+
+use std::sync::OnceLock;
+
+use super::elias::{EliasCodec, EliasKind};
+use super::expgolomb::ExpGolombCodec;
+use super::huffman::HuffmanCodec;
+use super::qlc::{self, QlcCodec};
+use super::raw::RawCodec;
+use super::session::{DecoderSession, EncoderSession};
+use super::{Codec, CodecError};
+use crate::stats::Histogram;
+
+/// Wire tags (QLF1-compatible; append-only).
+pub const TAG_RAW: u8 = 0;
+pub const TAG_HUFFMAN: u8 = 1;
+pub const TAG_QLC: u8 = 2;
+pub const TAG_ELIAS_GAMMA: u8 = 3;
+pub const TAG_ELIAS_DELTA: u8 = 4;
+pub const TAG_ELIAS_OMEGA: u8 = 5;
+pub const TAG_EXPGOLOMB: u8 = 6;
+
+/// A fully-constructed codec plus its wire identity.  This is what
+/// every layer above `codecs/` passes around: the frame writer asks it
+/// for `wire_tag()`/`wire_header()`, the transport and coordinator ask
+/// it for sessions, nobody matches on codec kinds anymore.
+pub struct CodecHandle {
+    codec: Box<dyn Codec>,
+    name: String,
+    tag: u8,
+    header: Vec<u8>,
+}
+
+impl CodecHandle {
+    fn new(codec: Box<dyn Codec>, name: String, tag: u8, header: Vec<u8>) -> Self {
+        CodecHandle { codec, name, tag, header }
+    }
+
+    /// The resolved codec name (e.g. "qlc-t1", "eg3").
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The codec itself.
+    pub fn codec(&self) -> &dyn Codec {
+        self.codec.as_ref()
+    }
+
+    /// Wire tag written into frame byte 4.
+    pub fn wire_tag(&self) -> u8 {
+        self.tag
+    }
+
+    /// Serialized table header (Huffman lengths, QLC scheme + rank
+    /// order, EG order; empty for raw/elias).  Written once per frame,
+    /// regardless of chunk count.
+    pub fn wire_header(&self) -> &[u8] {
+        &self.header
+    }
+
+    /// Start a streaming encode session.
+    pub fn encoder(&self) -> EncoderSession<'_> {
+        EncoderSession::new(self.codec())
+    }
+
+    /// Start a streaming decode session.
+    pub fn decoder(&self) -> DecoderSession<'_> {
+        DecoderSession::new(self.codec())
+    }
+}
+
+impl std::fmt::Debug for CodecHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CodecHandle")
+            .field("name", &self.name)
+            .field("tag", &self.tag)
+            .field("header_len", &self.header.len())
+            .finish()
+    }
+}
+
+/// One codec family: how names map to constructors and how wire
+/// headers map back to codecs.
+struct Family {
+    /// Canonical family label (diagnostics only).
+    family: &'static str,
+    tag: u8,
+    /// Names advertised to the CLI / docs.  `matches` may accept more
+    /// (e.g. every "egK" for the expgolomb family).
+    names: &'static [&'static str],
+    matches: fn(&str) -> bool,
+    build: fn(&str, &Histogram) -> Result<CodecHandle, String>,
+    from_header: fn(&[u8]) -> Result<CodecHandle, CodecError>,
+}
+
+/// The process-wide codec registry.
+pub struct CodecRegistry {
+    families: Vec<Family>,
+}
+
+impl CodecRegistry {
+    /// The global registry (built once, immutable).
+    pub fn global() -> &'static CodecRegistry {
+        static REGISTRY: OnceLock<CodecRegistry> = OnceLock::new();
+        REGISTRY.get_or_init(CodecRegistry::builtin)
+    }
+
+    fn builtin() -> CodecRegistry {
+        CodecRegistry {
+            families: vec![
+                Family {
+                    family: "raw",
+                    tag: TAG_RAW,
+                    names: &["raw"],
+                    matches: |n| n == "raw",
+                    build: |_, _| Ok(handle_raw()),
+                    from_header: |header| {
+                        if !header.is_empty() {
+                            return Err(CodecError::BadHeader(
+                                "raw codec takes no header".into(),
+                            ));
+                        }
+                        Ok(handle_raw())
+                    },
+                },
+                Family {
+                    family: "huffman",
+                    tag: TAG_HUFFMAN,
+                    names: &["huffman"],
+                    matches: |n| n == "huffman",
+                    build: |_, hist| {
+                        Ok(handle_huffman(HuffmanCodec::from_histogram(hist)))
+                    },
+                    from_header: |header| {
+                        if header.len() != 256 {
+                            return Err(CodecError::BadHeader(format!(
+                                "huffman header {} bytes",
+                                header.len()
+                            )));
+                        }
+                        let mut lengths = [0u32; 256];
+                        for (l, &b) in lengths.iter_mut().zip(header) {
+                            *l = b as u32;
+                        }
+                        Ok(handle_huffman(HuffmanCodec::from_lengths(
+                            &lengths,
+                        )?))
+                    },
+                },
+                Family {
+                    family: "qlc",
+                    tag: TAG_QLC,
+                    names: &["qlc", "qlc-t1", "qlc-t2"],
+                    matches: |n| matches!(n, "qlc" | "qlc-t1" | "qlc-t2"),
+                    build: |name, hist| {
+                        let pmf = hist.pmf();
+                        let codec = match name {
+                            "qlc" => {
+                                let scheme =
+                                    qlc::optimize_scheme(&pmf.sorted_desc());
+                                QlcCodec::from_pmf(scheme, &pmf)
+                            }
+                            "qlc-t1" => QlcCodec::from_pmf(
+                                qlc::AreaScheme::table1(),
+                                &pmf,
+                            ),
+                            "qlc-t2" => QlcCodec::from_pmf(
+                                qlc::AreaScheme::table2(),
+                                &pmf,
+                            ),
+                            other => {
+                                return Err(format!("unknown qlc variant '{other}'"))
+                            }
+                        };
+                        Ok(handle_qlc(codec))
+                    },
+                    from_header: |header| {
+                        let codec = qlc::serde::from_bytes(header, "qlc")
+                            .map_err(CodecError::BadHeader)?;
+                        Ok(handle_qlc(codec))
+                    },
+                },
+                elias_family("elias-gamma", TAG_ELIAS_GAMMA, EliasKind::Gamma),
+                elias_family("elias-delta", TAG_ELIAS_DELTA, EliasKind::Delta),
+                elias_family("elias-omega", TAG_ELIAS_OMEGA, EliasKind::Omega),
+                Family {
+                    family: "expgolomb",
+                    tag: TAG_EXPGOLOMB,
+                    names: &["eg0", "eg3"],
+                    matches: |n| parse_eg_order(n).is_some(),
+                    build: |name, _| {
+                        let k = parse_eg_order(name)
+                            .ok_or_else(|| format!("bad EG order in '{name}'"))?;
+                        Ok(handle_eg(k))
+                    },
+                    from_header: |header| {
+                        if header.len() != 1 || header[0] > 8 {
+                            return Err(CodecError::BadHeader(
+                                "bad EG header".into(),
+                            ));
+                        }
+                        Ok(handle_eg(header[0] as u32))
+                    },
+                },
+            ],
+        }
+    }
+
+    /// Fit a codec by name to a calibration histogram.  Names: raw,
+    /// huffman, qlc (optimized), qlc-t1, qlc-t2, elias-gamma,
+    /// elias-delta, elias-omega, eg0…eg8.
+    pub fn resolve(
+        &self,
+        name: &str,
+        hist: &Histogram,
+    ) -> Result<CodecHandle, String> {
+        for f in &self.families {
+            if (f.matches)(name) {
+                return (f.build)(name, hist);
+            }
+        }
+        Err(format!("unknown codec '{name}'"))
+    }
+
+    /// Reconstruct a codec from a frame's wire tag + table header.
+    pub fn resolve_wire(
+        &self,
+        tag: u8,
+        header: &[u8],
+    ) -> Result<CodecHandle, CodecError> {
+        for f in &self.families {
+            if f.tag == tag {
+                return (f.from_header)(header);
+            }
+        }
+        Err(CodecError::BadHeader(format!("unknown codec tag {tag}")))
+    }
+
+    /// All codec names usable with [`CodecRegistry::resolve`] (the
+    /// advertised subset; `matches` may accept more, e.g. any `egK`).
+    pub fn known_names(&self) -> Vec<&'static str> {
+        self.families.iter().flat_map(|f| f.names.iter().copied()).collect()
+    }
+
+    /// Family labels and wire tags (diagnostics, `--help` output).
+    pub fn families(&self) -> Vec<(&'static str, u8)> {
+        self.families.iter().map(|f| (f.family, f.tag)).collect()
+    }
+}
+
+fn parse_eg_order(name: &str) -> Option<u32> {
+    let k: u32 = name.strip_prefix("eg")?.parse().ok()?;
+    (k <= 8).then_some(k)
+}
+
+fn handle_raw() -> CodecHandle {
+    CodecHandle::new(Box::new(RawCodec), "raw".into(), TAG_RAW, Vec::new())
+}
+
+fn handle_huffman(codec: HuffmanCodec) -> CodecHandle {
+    let header = codec.code_lengths().iter().map(|&l| l as u8).collect();
+    CodecHandle::new(Box::new(codec), "huffman".into(), TAG_HUFFMAN, header)
+}
+
+fn handle_qlc(codec: QlcCodec) -> CodecHandle {
+    let header = qlc::serde::to_bytes(&codec);
+    let name = codec.name();
+    CodecHandle::new(Box::new(codec), name, TAG_QLC, header)
+}
+
+fn handle_elias(kind: EliasKind, tag: u8) -> CodecHandle {
+    CodecHandle::new(
+        Box::new(EliasCodec::new(kind)),
+        kind.name().into(),
+        tag,
+        Vec::new(),
+    )
+}
+
+fn handle_eg(k: u32) -> CodecHandle {
+    CodecHandle::new(
+        Box::new(ExpGolombCodec::new(k)),
+        format!("eg{k}"),
+        TAG_EXPGOLOMB,
+        vec![k as u8],
+    )
+}
+
+fn elias_family(name: &'static str, tag: u8, kind: EliasKind) -> Family {
+    // One family per kind so each keeps its QLF1 wire tag.
+    let (matches, build, from_header): (
+        fn(&str) -> bool,
+        fn(&str, &Histogram) -> Result<CodecHandle, String>,
+        fn(&[u8]) -> Result<CodecHandle, CodecError>,
+    ) = match kind {
+        EliasKind::Gamma => (
+            |n| n == "elias-gamma",
+            |_, _| Ok(handle_elias(EliasKind::Gamma, TAG_ELIAS_GAMMA)),
+            |h| elias_from_header(EliasKind::Gamma, TAG_ELIAS_GAMMA, h),
+        ),
+        EliasKind::Delta => (
+            |n| n == "elias-delta",
+            |_, _| Ok(handle_elias(EliasKind::Delta, TAG_ELIAS_DELTA)),
+            |h| elias_from_header(EliasKind::Delta, TAG_ELIAS_DELTA, h),
+        ),
+        EliasKind::Omega => (
+            |n| n == "elias-omega",
+            |_, _| Ok(handle_elias(EliasKind::Omega, TAG_ELIAS_OMEGA)),
+            |h| elias_from_header(EliasKind::Omega, TAG_ELIAS_OMEGA, h),
+        ),
+    };
+    Family {
+        family: name,
+        tag,
+        names: match kind {
+            EliasKind::Gamma => &["elias-gamma"],
+            EliasKind::Delta => &["elias-delta"],
+            EliasKind::Omega => &["elias-omega"],
+        },
+        matches,
+        build,
+        from_header,
+    }
+}
+
+fn elias_from_header(
+    kind: EliasKind,
+    tag: u8,
+    header: &[u8],
+) -> Result<CodecHandle, CodecError> {
+    if !header.is_empty() {
+        return Err(CodecError::BadHeader(format!(
+            "{} codec takes no header",
+            kind.name()
+        )));
+    }
+    Ok(handle_elias(kind, tag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn skewed_hist(seed: u64) -> Histogram {
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-0.025 * i as f64).exp();
+        }
+        let symbols =
+            AliasTable::new(&p).sample_many(&mut Rng::new(seed), 20_000);
+        Histogram::from_symbols(&symbols)
+    }
+
+    #[test]
+    fn every_known_name_resolves_and_roundtrips() {
+        let hist = skewed_hist(1);
+        let reg = CodecRegistry::global();
+        let symbols: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        for name in reg.known_names() {
+            let handle = reg.resolve(name, &hist).unwrap();
+            let enc = handle.codec().encode_to_vec(&symbols);
+            let dec =
+                handle.codec().decode_from_slice(&enc, symbols.len()).unwrap();
+            assert_eq!(dec, symbols, "{name}");
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_reconstructs_equivalent_codec() {
+        // resolve → serialize wire identity → resolve_wire must yield a
+        // codec that decodes the original's output, for every family.
+        let hist = skewed_hist(2);
+        let reg = CodecRegistry::global();
+        let symbols: Vec<u8> =
+            AliasTable::new(&hist.pmf().p).sample_many(&mut Rng::new(3), 8192);
+        for name in reg.known_names() {
+            let handle = reg.resolve(name, &hist).unwrap();
+            let rebuilt = reg
+                .resolve_wire(handle.wire_tag(), handle.wire_header())
+                .unwrap();
+            let enc = handle.codec().encode_to_vec(&symbols);
+            assert_eq!(
+                rebuilt.codec().decode_from_slice(&enc, symbols.len()).unwrap(),
+                symbols,
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_tags_are_stable_qlf1_values() {
+        let hist = skewed_hist(4);
+        let reg = CodecRegistry::global();
+        for (name, tag) in [
+            ("raw", TAG_RAW),
+            ("huffman", TAG_HUFFMAN),
+            ("qlc", TAG_QLC),
+            ("qlc-t1", TAG_QLC),
+            ("elias-gamma", TAG_ELIAS_GAMMA),
+            ("elias-delta", TAG_ELIAS_DELTA),
+            ("elias-omega", TAG_ELIAS_OMEGA),
+            ("eg0", TAG_EXPGOLOMB),
+            ("eg8", TAG_EXPGOLOMB),
+        ] {
+            assert_eq!(
+                reg.resolve(name, &hist).unwrap().wire_tag(),
+                tag,
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_names_and_tags_rejected() {
+        let hist = skewed_hist(5);
+        let reg = CodecRegistry::global();
+        assert!(reg.resolve("zstd", &hist).is_err());
+        assert!(reg.resolve("eg99", &hist).is_err());
+        assert!(reg.resolve("", &hist).is_err());
+        assert!(matches!(
+            reg.resolve_wire(200, &[]),
+            Err(CodecError::BadHeader(_))
+        ));
+    }
+
+    #[test]
+    fn corrupt_headers_rejected_per_family() {
+        let reg = CodecRegistry::global();
+        // Huffman: wrong size and Kraft-violating lengths.
+        assert!(reg.resolve_wire(TAG_HUFFMAN, &[8u8; 17]).is_err());
+        assert!(reg.resolve_wire(TAG_HUFFMAN, &[1u8; 256]).is_err());
+        // QLC: truncated header.
+        assert!(reg.resolve_wire(TAG_QLC, &[4u8, 1]).is_err());
+        // EG: out-of-range order, wrong length.
+        assert!(reg.resolve_wire(TAG_EXPGOLOMB, &[9]).is_err());
+        assert!(reg.resolve_wire(TAG_EXPGOLOMB, &[]).is_err());
+        // Raw/elias: unexpected header bytes.
+        assert!(reg.resolve_wire(TAG_RAW, &[0]).is_err());
+        assert!(reg.resolve_wire(TAG_ELIAS_GAMMA, &[0]).is_err());
+    }
+
+    #[test]
+    fn handles_vend_sessions() {
+        let hist = skewed_hist(6);
+        let handle =
+            CodecRegistry::global().resolve("huffman", &hist).unwrap();
+        let symbols: Vec<u8> = (0..200u8).collect();
+        let payload = handle.encoder().encode_chunk_to_vec(&symbols);
+        let out = handle
+            .decoder()
+            .decode_chunk_to_vec(&payload, symbols.len())
+            .unwrap();
+        assert_eq!(out, symbols);
+    }
+}

@@ -1,0 +1,239 @@
+//! Streaming codec sessions: block-oriented encode/decode with
+//! reusable scratch state.
+//!
+//! A session wraps a `&dyn Codec` and processes one *chunk* at a time.
+//! Chunks are byte-aligned and independent — a decoder needs only the
+//! chunk's payload bytes and its symbol count, which is exactly what
+//! makes chunked payloads (frame format QLF2, the collective
+//! transport) decodable in parallel and at line rate in hardware.
+//!
+//! The encoder session keeps one [`BitWriter`] alive across chunks so
+//! a long stream is encoded with a single scratch allocation; the
+//! decoder session decodes into caller-provided `&mut [u8]` buffers,
+//! so the destination (tensor shard, frame slice) is written exactly
+//! once.  Both track totals for throughput accounting.
+
+use super::{Codec, CodecError};
+use crate::bitstream::{BitReader, BitWriter};
+
+/// Default chunk granularity in symbols (64 KiB of e4m3 symbols).
+/// Large enough that per-chunk overhead (8 bytes of QLF2 chunk table,
+/// one flush) is noise; small enough that a multi-core decode of a
+/// multi-megabyte payload has real parallelism.
+pub const DEFAULT_CHUNK_SYMBOLS: usize = 64 * 1024;
+
+/// Streaming encoder bound to one codec.
+///
+/// ```
+/// use qlc::codecs::{Codec, EncoderSession};
+/// use qlc::codecs::raw::RawCodec;
+/// let codec = RawCodec;
+/// let mut session = codec.encoder();
+/// let mut payload = Vec::new();
+/// let a = session.encode_chunk(&[1, 2, 3], &mut payload);
+/// let b = session.encode_chunk(&[4, 5], &mut payload);
+/// assert_eq!((a, b), (3, 2));
+/// assert_eq!(payload, [1, 2, 3, 4, 5]);
+/// ```
+pub struct EncoderSession<'c> {
+    codec: &'c dyn Codec,
+    /// Reused scratch writer; drained after every chunk.
+    writer: BitWriter,
+    symbols_in: u64,
+    bytes_out: u64,
+    chunks: u64,
+}
+
+impl<'c> EncoderSession<'c> {
+    pub fn new(codec: &'c dyn Codec) -> Self {
+        EncoderSession {
+            codec,
+            writer: BitWriter::new(),
+            symbols_in: 0,
+            bytes_out: 0,
+            chunks: 0,
+        }
+    }
+
+    pub fn codec(&self) -> &'c dyn Codec {
+        self.codec
+    }
+
+    /// Encode one chunk, appending its byte-aligned payload to `out`.
+    /// Returns the payload length in bytes.
+    pub fn encode_chunk(&mut self, symbols: &[u8], out: &mut Vec<u8>) -> usize {
+        let before = out.len();
+        self.codec.encode(symbols, &mut self.writer);
+        self.writer.drain_into(out);
+        let written = out.len() - before;
+        self.symbols_in += symbols.len() as u64;
+        self.bytes_out += written as u64;
+        self.chunks += 1;
+        written
+    }
+
+    /// Encode one chunk into a fresh buffer.
+    pub fn encode_chunk_to_vec(&mut self, symbols: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(symbols.len());
+        self.encode_chunk(symbols, &mut out);
+        out
+    }
+
+    /// Total symbols consumed across all chunks.
+    pub fn symbols_in(&self) -> u64 {
+        self.symbols_in
+    }
+
+    /// Total payload bytes produced across all chunks.
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    /// Number of chunks encoded.
+    pub fn chunks(&self) -> u64 {
+        self.chunks
+    }
+}
+
+/// Streaming decoder bound to one codec.  Decodes byte-aligned chunk
+/// payloads into caller-provided slices.
+pub struct DecoderSession<'c> {
+    codec: &'c dyn Codec,
+    symbols_out: u64,
+    bytes_in: u64,
+    chunks: u64,
+}
+
+impl<'c> DecoderSession<'c> {
+    pub fn new(codec: &'c dyn Codec) -> Self {
+        DecoderSession { codec, symbols_out: 0, bytes_in: 0, chunks: 0 }
+    }
+
+    pub fn codec(&self) -> &'c dyn Codec {
+        self.codec
+    }
+
+    /// Decode exactly `out.len()` symbols from `payload` into `out`.
+    ///
+    /// Rejects payloads that cannot possibly hold `out.len()` symbols
+    /// (every code is ≥ 1 bit) before touching the bitstream, so a
+    /// hostile chunk header fails fast instead of grinding through the
+    /// decoder.
+    pub fn decode_chunk(
+        &mut self,
+        payload: &[u8],
+        out: &mut [u8],
+    ) -> Result<(), CodecError> {
+        if out.len() as u64 > payload.len() as u64 * 8 {
+            return Err(CodecError::UnexpectedEof);
+        }
+        let mut reader = BitReader::new(payload);
+        self.codec.decode_into(&mut reader, out)?;
+        self.symbols_out += out.len() as u64;
+        self.bytes_in += payload.len() as u64;
+        self.chunks += 1;
+        Ok(())
+    }
+
+    /// Decode `n` symbols from `payload` into a fresh buffer.
+    pub fn decode_chunk_to_vec(
+        &mut self,
+        payload: &[u8],
+        n: usize,
+    ) -> Result<Vec<u8>, CodecError> {
+        let mut out = vec![0u8; n];
+        self.decode_chunk(payload, &mut out)?;
+        Ok(out)
+    }
+
+    /// Total symbols produced across all chunks.
+    pub fn symbols_out(&self) -> u64 {
+        self.symbols_out
+    }
+
+    /// Total payload bytes consumed across all chunks.
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    /// Number of chunks decoded.
+    pub fn chunks(&self) -> u64 {
+        self.chunks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::huffman::HuffmanCodec;
+    use crate::codecs::qlc::{AreaScheme, QlcCodec};
+    use crate::codecs::raw::RawCodec;
+    use crate::stats::Histogram;
+    use crate::util::rng::{AliasTable, Rng};
+
+    fn skewed(n: usize, seed: u64) -> Vec<u8> {
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-0.03 * i as f64).exp();
+        }
+        AliasTable::new(&p).sample_many(&mut Rng::new(seed), n)
+    }
+
+    #[test]
+    fn session_chunks_equal_single_shot() {
+        let symbols = skewed(100_000, 1);
+        let hist = Histogram::from_symbols(&symbols);
+        let codec = HuffmanCodec::from_histogram(&hist);
+        // Single-shot payload of each chunk must equal the session's
+        // (chunks are independent: no state leaks across the flush).
+        let mut enc = codec.encoder();
+        let mut streamed = Vec::new();
+        let mut reference = Vec::new();
+        for chunk in symbols.chunks(7_919) {
+            enc.encode_chunk(chunk, &mut streamed);
+            reference.extend_from_slice(&codec.encode_to_vec(chunk));
+        }
+        assert_eq!(streamed, reference);
+        assert_eq!(enc.symbols_in(), symbols.len() as u64);
+        assert_eq!(enc.bytes_out(), streamed.len() as u64);
+    }
+
+    #[test]
+    fn decode_session_fills_caller_buffer() {
+        let symbols = skewed(50_000, 2);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+        let mut enc = codec.encoder();
+        let payload = enc.encode_chunk_to_vec(&symbols);
+        let mut dec = codec.decoder();
+        let mut out = vec![0u8; symbols.len()];
+        dec.decode_chunk(&payload, &mut out).unwrap();
+        assert_eq!(out, symbols);
+        assert_eq!(dec.symbols_out(), symbols.len() as u64);
+        assert_eq!(dec.chunks(), 1);
+    }
+
+    #[test]
+    fn decode_chunk_rejects_impossible_counts() {
+        let codec = RawCodec;
+        let mut dec = codec.decoder();
+        // 2 payload bytes cannot hold 17 one-bit codes, let alone raw.
+        let mut out = vec![0u8; 17];
+        assert_eq!(
+            dec.decode_chunk(&[0xAB, 0xCD], &mut out),
+            Err(CodecError::UnexpectedEof)
+        );
+        assert_eq!(dec.chunks(), 0, "failed chunks must not count");
+    }
+
+    #[test]
+    fn empty_chunks_are_noops() {
+        let codec = RawCodec;
+        let mut enc = codec.encoder();
+        let mut out = Vec::new();
+        assert_eq!(enc.encode_chunk(&[], &mut out), 0);
+        let mut dec = codec.decoder();
+        dec.decode_chunk(&[], &mut []).unwrap();
+        assert_eq!(dec.symbols_out(), 0);
+    }
+}

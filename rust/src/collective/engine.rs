@@ -11,7 +11,7 @@ use std::thread;
 use std::time::Instant;
 
 use super::{decode_payload, encode_payload, Transport};
-use crate::codecs::frame::CodecSpec;
+use crate::codecs::CodecHandle;
 use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
 
 /// One hop's message: compressed symbols + block scales.
@@ -42,10 +42,11 @@ pub fn threaded_allreduce(
     assert!(n % (workers * BLOCK) == 0);
     let chunk = n / workers;
 
-    // Per-worker codec spec (tables are read-only; build once each).
-    let specs: Vec<Arc<Option<CodecSpec>>> = (0..workers)
-        .map(|_| transport.spec().map(Arc::new))
-        .collect::<Result<_, _>>()?;
+    // Resolve the codec once (fitting qlc tables is expensive); the
+    // read-only handle is shared by every worker, each of which keeps
+    // its own mutable sessions.
+    let shared_codec: Arc<Option<CodecHandle>> =
+        Arc::new(transport.resolve()?);
 
     // Ring links: worker i sends to i+1.
     let mut senders: Vec<Option<SyncSender<Msg>>> = Vec::new();
@@ -62,8 +63,11 @@ pub fn threaded_allreduce(
     for (i, data) in worker_data.into_iter().enumerate() {
         let tx = senders[i].take().unwrap();
         let rx = receivers[i].take().unwrap();
-        let spec = specs[i].clone();
+        let codec = shared_codec.clone();
         handles.push(thread::spawn(move || -> (usize, Vec<f32>, u64, u64) {
+            // One session pair per worker, reused for every hop.
+            let mut enc = (*codec).as_ref().map(|h| h.encoder());
+            let mut dec = (*codec).as_ref().map(|h| h.decoder());
             let quant = BlockQuantizer::new(Variant::ExmY);
             let mut chunks: Vec<Vec<f32>> =
                 data.chunks(chunk).map(|c| c.to_vec()).collect();
@@ -75,7 +79,7 @@ pub fn threaded_allreduce(
             for s in 0..w - 1 {
                 let send_ci = (i + w - s) % w;
                 let q = quant.quantize(&chunks[send_ci]);
-                let payload = encode_payload(spec.as_ref(), &q.symbols);
+                let payload = encode_payload(&mut enc, &q.symbols);
                 wire += (payload.len() + q.scales.len()) as u64;
                 raw += (q.symbols.len() + q.scales.len()) as u64;
                 tx.send(Msg {
@@ -87,7 +91,7 @@ pub fn threaded_allreduce(
 
                 let msg = rx.recv().expect("ring recv");
                 let symbols =
-                    decode_payload(spec.as_ref(), &msg.payload, msg.n_symbols);
+                    decode_payload(&mut dec, &msg.payload, msg.n_symbols);
                 let incoming = quant.dequantize(&QuantizedBlocks {
                     symbols,
                     scales: msg.scales,
@@ -109,7 +113,7 @@ pub fn threaded_allreduce(
             for s in 0..w - 1 {
                 let send_ci = (i + 1 + w - s) % w;
                 let q = quantized[send_ci].as_ref().expect("ring invariant");
-                let payload = encode_payload(spec.as_ref(), &q.symbols);
+                let payload = encode_payload(&mut enc, &q.symbols);
                 wire += (payload.len() + q.scales.len()) as u64;
                 raw += (q.symbols.len() + q.scales.len()) as u64;
                 tx.send(Msg {
@@ -121,7 +125,7 @@ pub fn threaded_allreduce(
 
                 let msg = rx.recv().expect("ring recv");
                 let symbols =
-                    decode_payload(spec.as_ref(), &msg.payload, msg.n_symbols);
+                    decode_payload(&mut dec, &msg.payload, msg.n_symbols);
                 let recv_ci = (i + w - s) % w;
                 quantized[recv_ci] = Some(QuantizedBlocks {
                     symbols,

@@ -11,7 +11,11 @@
 //!
 //! Transport framing: codec tables are fitted **apriori** and shared by
 //! both endpoints (paper §7: per-tensor-type LUTs "obtained apriori"),
-//! so hops carry payload bits only — no per-hop table headers.
+//! so hops carry payload bits only — no per-hop table headers.  Codecs
+//! are resolved once per collective through the
+//! [`crate::codecs::CodecRegistry`], and every hop reuses one
+//! [`EncoderSession`]/[`DecoderSession`] pair per endpoint, so the
+//! hot path allocates no codec state.
 //!
 //! All-reduce semantics: the reduce-scatter phase necessarily
 //! re-quantizes partial sums each hop (the wire format is e4m3);
@@ -26,7 +30,9 @@ pub mod engine;
 
 use std::time::Instant;
 
-use crate::codecs::frame::CodecSpec;
+use crate::codecs::{
+    CodecHandle, CodecRegistry, DecoderSession, EncoderSession,
+};
 use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
 use crate::stats::Histogram;
 
@@ -69,12 +75,14 @@ impl Transport {
         }
     }
 
-    pub(crate) fn spec(&self) -> Result<Option<CodecSpec>, String> {
+    /// Resolve the transport codec through the global registry.
+    /// `None` means raw (no codec on the wire).
+    pub fn resolve(&self) -> Result<Option<CodecHandle>, String> {
         match self {
             Transport::Raw => Ok(None),
-            Transport::Compressed { codec, calibration } => {
-                Ok(Some(CodecSpec::by_name(codec, calibration)?))
-            }
+            Transport::Compressed { codec, calibration } => Ok(Some(
+                CodecRegistry::global().resolve(codec, calibration)?,
+            )),
         }
     }
 }
@@ -105,27 +113,27 @@ impl CollectiveReport {
     }
 }
 
-/// Payload-only encode (tables pre-shared; see module docs).
+/// Payload-only encode (tables pre-shared; see module docs).  The
+/// session is `None` for raw transport.
 pub(crate) fn encode_payload(
-    spec: &Option<CodecSpec>,
+    enc: &mut Option<EncoderSession<'_>>,
     symbols: &[u8],
 ) -> Vec<u8> {
-    match spec {
+    match enc {
         None => symbols.to_vec(),
-        Some(s) => s.codec().encode_to_vec(symbols),
+        Some(s) => s.encode_chunk_to_vec(symbols),
     }
 }
 
 pub(crate) fn decode_payload(
-    spec: &Option<CodecSpec>,
+    dec: &mut Option<DecoderSession<'_>>,
     payload: &[u8],
     n_symbols: usize,
 ) -> Vec<u8> {
-    match spec {
+    match dec {
         None => payload.to_vec(),
         Some(s) => s
-            .codec()
-            .decode_from_slice(payload, n_symbols)
+            .decode_chunk_to_vec(payload, n_symbols)
             .expect("transport payload"),
     }
 }
@@ -153,7 +161,9 @@ pub fn ring_allreduce(
     );
     let chunk = n / w;
     let quant = BlockQuantizer::new(Variant::ExmY);
-    let spec = transport.spec()?;
+    let handle = transport.resolve()?;
+    let mut enc = handle.as_ref().map(|h| h.encoder());
+    let mut dec = handle.as_ref().map(|h| h.decoder());
 
     let mut report = CollectiveReport {
         op: "allreduce".into(),
@@ -176,8 +186,8 @@ pub fn ring_allreduce(
             let ci = (i + w - s) % w;
             let t0 = Instant::now();
             let q = quant.quantize(&chunks[i][ci]);
-            let payload = encode_payload(&spec, &q.symbols);
-            let symbols = decode_payload(&spec, &payload, q.symbols.len());
+            let payload = encode_payload(&mut enc, &q.symbols);
+            let symbols = decode_payload(&mut dec, &payload, q.symbols.len());
             let received = quant.dequantize(&QuantizedBlocks {
                 symbols,
                 scales: q.scales.clone(),
@@ -224,8 +234,8 @@ pub fn ring_allreduce(
             let ci = (i + 1 + w - s) % w;
             let q = have[i][ci].as_ref().expect("ring invariant");
             let t0 = Instant::now();
-            let payload = encode_payload(&spec, &q.symbols);
-            let symbols = decode_payload(&spec, &payload, q.symbols.len());
+            let payload = encode_payload(&mut enc, &q.symbols);
+            let symbols = decode_payload(&mut dec, &payload, q.symbols.len());
             max_codec = max_codec.max(t0.elapsed().as_secs_f64());
             let bytes = hop_bytes(payload.len(), q.scales.len());
             report.wire_bytes += bytes as u64;
@@ -273,7 +283,9 @@ pub fn ring_allgather(
 ) -> Result<(Vec<u8>, CollectiveReport), String> {
     let w = fabric.workers;
     assert_eq!(worker_symbols.len(), w);
-    let spec = transport.spec()?;
+    let handle = transport.resolve()?;
+    let mut enc = handle.as_ref().map(|h| h.encoder());
+    let mut dec = handle.as_ref().map(|h| h.decoder());
     let mut report = CollectiveReport {
         op: "allgather".into(),
         transport: transport.name(),
@@ -297,8 +309,8 @@ pub fn ring_allgather(
             let symbols =
                 have[i][shard].as_ref().expect("ring invariant").clone();
             let t0 = Instant::now();
-            let payload = encode_payload(&spec, &symbols);
-            let decoded = decode_payload(&spec, &payload, symbols.len());
+            let payload = encode_payload(&mut enc, &symbols);
+            let decoded = decode_payload(&mut dec, &payload, symbols.len());
             max_codec = max_codec.max(t0.elapsed().as_secs_f64());
             let bytes =
                 hop_bytes(payload.len(), worker_scales[shard].len());
@@ -337,7 +349,9 @@ pub fn alltoall(
     let w = fabric.workers;
     assert_eq!(shards.len(), w);
     assert!(shards.iter().all(|s| s.len() == w));
-    let spec = transport.spec()?;
+    let handle = transport.resolve()?;
+    let mut enc = handle.as_ref().map(|h| h.encoder());
+    let mut dec = handle.as_ref().map(|h| h.decoder());
     let mut report = CollectiveReport {
         op: "alltoall".into(),
         transport: transport.name(),
@@ -354,8 +368,8 @@ pub fn alltoall(
             let dst = (i + s) % w;
             let data = &shards[i][dst];
             let t0 = Instant::now();
-            let payload = encode_payload(&spec, data);
-            let decoded = decode_payload(&spec, &payload, data.len());
+            let payload = encode_payload(&mut enc, data);
+            let decoded = decode_payload(&mut dec, &payload, data.len());
             max_codec = max_codec.max(t0.elapsed().as_secs_f64());
             report.wire_bytes += payload.len() as u64;
             report.raw_bytes += data.len() as u64;
@@ -558,7 +572,9 @@ pub fn ring_reduce_scatter(
     assert!(n % (w * BLOCK) == 0);
     let chunk = n / w;
     let quant = BlockQuantizer::new(Variant::ExmY);
-    let spec = transport.spec()?;
+    let handle = transport.resolve()?;
+    let mut enc = handle.as_ref().map(|h| h.encoder());
+    let mut dec = handle.as_ref().map(|h| h.decoder());
     let mut report = CollectiveReport {
         op: "reduce_scatter".into(),
         transport: transport.name(),
@@ -576,8 +592,8 @@ pub fn ring_reduce_scatter(
             let ci = (i + w - s) % w;
             let t0 = Instant::now();
             let q = quant.quantize(&chunks[i][ci]);
-            let payload = encode_payload(&spec, &q.symbols);
-            let symbols = decode_payload(&spec, &payload, q.symbols.len());
+            let payload = encode_payload(&mut enc, &q.symbols);
+            let symbols = decode_payload(&mut dec, &payload, q.symbols.len());
             let received = quant.dequantize(&QuantizedBlocks {
                 symbols,
                 scales: q.scales.clone(),

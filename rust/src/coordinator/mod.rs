@@ -15,7 +15,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Instant;
 
-use crate::codecs::frame::{self, CodecSpec};
+use crate::codecs::frame::{self, FrameOptions};
+use crate::codecs::CodecRegistry;
 use crate::stats::Histogram;
 use metrics::PipelineMetrics;
 
@@ -58,7 +59,7 @@ pub struct Pipeline {
 
 impl Pipeline {
     /// Spawn the worker pool. `codec` and `calibration` follow
-    /// [`CodecSpec::by_name`].
+    /// [`CodecRegistry::resolve`].
     pub fn new(
         config: PipelineConfig,
         codec: &str,
@@ -74,8 +75,9 @@ impl Pipeline {
         let mut handles = Vec::with_capacity(config.workers);
         for _ in 0..config.workers {
             // Each worker owns its own codec tables (no sharing/locking
-            // on the hot path).
-            let spec = CodecSpec::by_name(codec, calibration)?;
+            // on the hot path) and emits serial single-frame output —
+            // the pool, not the frame layer, is the parallelism here.
+            let handle = CodecRegistry::global().resolve(codec, calibration)?;
             let rx = rx.clone();
             let tx_done = tx_done.clone();
             let metrics = metrics.clone();
@@ -86,7 +88,11 @@ impl Pipeline {
                 };
                 let Ok(job) = job else { break };
                 let t0 = Instant::now();
-                let frame = frame::compress(&spec, &job.symbols);
+                let frame = frame::compress_with(
+                    &handle,
+                    &job.symbols,
+                    &FrameOptions::serial(),
+                );
                 let dt = t0.elapsed().as_secs_f64();
                 {
                     let mut m = metrics.lock().expect("metrics");

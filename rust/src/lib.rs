@@ -7,6 +7,8 @@
 //! Layer map (DESIGN.md):
 //! * [`formats`] — the e4m3 data type and block-32 quantizer;
 //! * [`codecs`] — QLC, canonical Huffman, Elias γ/δ/ω, Exp-Golomb, raw;
+//!   streaming sessions, the unified codec registry, and the chunked
+//!   QLF2 frame container (parallel encode/decode);
 //! * [`stats`] — PMFs, entropy, compressibility;
 //! * [`data`] — tensor/symbol generators calibrated to the paper's
 //!   distributions;

@@ -17,8 +17,9 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use qlc::codecs::frame::{self, CodecSpec};
+use qlc::codecs::frame;
 use qlc::codecs::huffman::HuffmanCodec;
+use qlc::codecs::CodecRegistry;
 use qlc::codecs::qlc::{optimizer, QlcCodec};
 use qlc::collective::{self, Fabric, Transport};
 use qlc::coordinator::{Pipeline, PipelineConfig};
@@ -83,7 +84,9 @@ USAGE: qlc <subcommand> [options]
   analyze    [--kind ffn1_act|ffn2_act|weight|wgrad|agrad] [--n SYMBOLS]
              [--dir TRACES --name NAME] [--json]
   compress   <in> <out> --codec raw|huffman|qlc|qlc-t1|qlc-t2|elias-*|egK
-  decompress <in> <out>
+             [--qlf1]   (legacy single-payload frame; default is
+                         chunked QLF2, decoded in parallel)
+  decompress <in> <out>   (reads QLF1 and QLF2)
   datagen    --kind K --n SYMBOLS --out DIR [--seed S]
              [--target-entropy H | --knob X]
   optimize   [--kind K | --dir TRACES --name NAME] [--prefix P] [--json]
@@ -165,8 +168,14 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
         Histogram::from_symbols(&symbols)
     };
     let codec = args.opt_or("codec", "qlc");
-    let spec = CodecSpec::by_name(&codec, &hist)?;
-    let framed = frame::compress(&spec, &symbols);
+    let handle = CodecRegistry::global().resolve(&codec, &hist)?;
+    // QLF2 chunked frames by default (parallel encode/decode);
+    // `--qlf1` writes the legacy single-payload format.
+    let framed = if args.has_flag("qlf1") {
+        frame::compress_qlf1(&handle, &symbols)
+    } else {
+        frame::compress(&handle, &symbols)
+    };
     std::fs::write(&output, &framed).map_err(|e| e.to_string())?;
     println!(
         "{} -> {}: {} -> {} bytes ({:.1}% compressibility, codec {})",

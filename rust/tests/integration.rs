@@ -1,7 +1,8 @@
 //! Cross-module integration tests: generators → quantizer → codecs →
 //! frames → pipeline → collectives, plus trace persistence.
 
-use qlc::codecs::frame::{self, CodecSpec};
+use qlc::codecs::frame::{self, FrameOptions};
+use qlc::codecs::CodecRegistry;
 use qlc::codecs::qlc::{optimizer, AreaScheme, QlcCodec};
 use qlc::codecs::Codec;
 use qlc::collective::{self, engine, Fabric, Transport};
@@ -28,11 +29,20 @@ fn full_tensor_compression_roundtrip() {
     let quant = BlockQuantizer::new(Variant::ExmY);
     let q = quant.quantize(&data);
     let hist = Histogram::from_symbols(&q.symbols);
-    for name in CodecSpec::known_names() {
-        let spec = CodecSpec::by_name(name, &hist).unwrap();
-        let framed = frame::compress(&spec, &q.symbols);
-        let symbols = frame::decompress(&framed).unwrap();
-        assert_eq!(symbols, q.symbols, "{name}");
+    let registry = CodecRegistry::global();
+    for name in registry.known_names() {
+        let handle = registry.resolve(name, &hist).unwrap();
+        // Chunked QLF2 (default), small-chunk QLF2, and legacy QLF1.
+        let framed = frame::compress(&handle, &q.symbols);
+        assert_eq!(frame::decompress(&framed).unwrap(), q.symbols, "{name}");
+        let small = frame::compress_with(
+            &handle,
+            &q.symbols,
+            &FrameOptions { chunk_symbols: 1000, threads: 0 },
+        );
+        assert_eq!(frame::decompress(&small).unwrap(), q.symbols, "{name}");
+        let v1 = frame::compress_qlf1(&handle, &q.symbols);
+        assert_eq!(frame::decompress(&v1).unwrap(), q.symbols, "{name}");
     }
     let deq = quant.dequantize(&q);
     for (x, y) in data.iter().zip(&deq) {
@@ -151,8 +161,8 @@ fn trace_roundtrip_preserves_compressibility() {
     let back = Trace::load(&dir, "t").unwrap();
     assert_eq!(back.symbols, symbols);
     let hist = Histogram::from_symbols(&back.symbols);
-    let spec = CodecSpec::by_name("qlc", &hist).unwrap();
-    let framed = frame::compress(&spec, &back.symbols);
+    let handle = CodecRegistry::global().resolve("qlc", &hist).unwrap();
+    let framed = frame::compress(&handle, &back.symbols);
     assert!(framed.len() < symbols.len());
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -186,8 +196,8 @@ fn compressibility_ranking_headline() {
     let symbols = gen_symbols(TensorKind::Ffn1Act, 2048 * BLOCK, 19);
     let hist = Histogram::from_symbols(&symbols);
     let len = |name: &str| {
-        let spec = CodecSpec::by_name(name, &hist).unwrap();
-        spec.codec().encode_to_vec(&symbols).len()
+        let handle = CodecRegistry::global().resolve(name, &hist).unwrap();
+        handle.codec().encode_to_vec(&symbols).len()
     };
     let raw = symbols.len();
     let huff = len("huffman");
@@ -207,8 +217,8 @@ fn corrupted_frames_never_panic() {
     let hist = Histogram::from_symbols(&symbols);
     let mut rng = Rng::new(99);
     for name in ["huffman", "qlc", "elias-gamma", "eg2", "raw"] {
-        let spec = CodecSpec::by_name(name, &hist).unwrap();
-        let frame_bytes = frame::compress(&spec, &symbols);
+        let handle = CodecRegistry::global().resolve(name, &hist).unwrap();
+        let frame_bytes = frame::compress(&handle, &symbols);
         for _ in 0..200 {
             let mut corrupt = frame_bytes.clone();
             match rng.below(3) {
@@ -249,8 +259,8 @@ fn ocp_variant_end_to_end() {
     let q = quant.quantize(&data);
     assert!(q.symbols.iter().all(|&s| (s & 0x7F) != 0x7F));
     let hist = Histogram::from_symbols(&q.symbols);
-    let spec = CodecSpec::by_name("qlc", &hist).unwrap();
-    let framed = frame::compress(&spec, &q.symbols);
+    let handle = CodecRegistry::global().resolve("qlc", &hist).unwrap();
+    let framed = frame::compress(&handle, &q.symbols);
     assert_eq!(frame::decompress(&framed).unwrap(), q.symbols);
     let deq = quant.dequantize(&q);
     assert!(deq.iter().all(|v| v.is_finite()));
@@ -267,8 +277,9 @@ fn huffman_qlc_agree_on_degenerate_streams() {
     }] {
         let hist = Histogram::from_symbols(&stream);
         for name in ["huffman", "qlc", "qlc-t1"] {
-            let spec = CodecSpec::by_name(name, &hist).unwrap();
-            let framed = frame::compress(&spec, &stream);
+            let handle =
+                CodecRegistry::global().resolve(name, &hist).unwrap();
+            let framed = frame::compress(&handle, &stream);
             assert_eq!(frame::decompress(&framed).unwrap(), stream, "{name}");
         }
     }
