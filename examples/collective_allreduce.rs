@@ -48,13 +48,16 @@ fn main() {
         }
         println!(
             "  {:<8} wire {:>12} B  ratio {:>5.3}  network {:>7.3} ms  \
-             codec {:>8.3} ms  total {:>8.3} ms",
+             codec {:>8.3} ms  total {:>8.3} ms  pipelined {:>8.3} ms \
+             ({:.0}% hidden)",
             codec,
             report.wire_bytes,
             report.compression_ratio(),
             report.network_time_s * 1e3,
             report.codec_time_s * 1e3,
-            report.total_time_s() * 1e3
+            report.total_time_s() * 1e3,
+            report.pipelined_time_s * 1e3,
+            report.overlap_savings() * 100.0
         );
     }
 

@@ -23,6 +23,8 @@ use qlc::stats::Histogram;
 use qlc::util::rng::Rng;
 
 fn main() {
+    // QLC_BENCH_SMOKE=1 shrinks the sampled streams (CI smoke).
+    let n = qlc::util::bench::smoke_scaled(1 << 20, 1 << 15);
     let pmfs = report::paper_pmfs(42, 6);
 
     println!("=== ablation 1+2: scheme structure per PMF ===");
@@ -61,7 +63,7 @@ fn main() {
         let gen =
             TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY).with_knob(knob);
         let mut rng = Rng::new(11);
-        let symbols = gen.symbols(&mut rng, 1 << 20);
+        let symbols = gen.symbols(&mut rng, n);
         let hist = Histogram::from_symbols(&symbols);
         let pmf = hist.pmf();
         let sorted = pmf.sorted_desc();
@@ -127,7 +129,7 @@ fn main() {
     println!("\n=== ablation 5: cross-format sweep (Gaussian tensor, block-32) ===");
     println!("{:>8} {:>9} {:>9} {:>9}", "format", "entropy", "ideal%", "qlc-opt%");
     let mut rng = Rng::new(17);
-    let mut data = vec![0f32; (1 << 20) as usize];
+    let mut data = vec![0f32; n];
     rng.fill_normal_f32(&mut data, 0.0, 1.0);
     for spec in [ExmySpec::E2M5, ExmySpec::E3M4, ExmySpec::E4M3,
                  ExmySpec::E5M2] {
@@ -151,8 +153,8 @@ fn main() {
     let gen2 = TensorGen::new(TensorKind::Ffn2Act, Variant::ExmY);
     let mut rng = Rng::new(23);
     let stream = [
-        gen1.symbols(&mut rng, 1 << 20),
-        gen2.symbols(&mut rng, 1 << 20),
+        gen1.symbols(&mut rng, n),
+        gen2.symbols(&mut rng, n),
     ]
     .concat();
     let hist = Histogram::from_symbols(&stream);

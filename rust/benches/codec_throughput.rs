@@ -12,12 +12,11 @@ use qlc::codecs::huffman::decode::{TableDecoder, TreeDecoder};
 use qlc::codecs::huffman::HuffmanCodec;
 use qlc::codecs::{Codec, CodecRegistry};
 use qlc::report;
-use qlc::util::bench::Bencher;
-
-const N: usize = 4 << 20; // 4 Mi symbols per stream
+use qlc::util::bench::{smoke_config, smoke_scaled, Bencher};
 
 fn main() {
-    println!("=== codec_throughput: {N} symbols per stream ===");
+    let n = smoke_scaled(4 << 20, 1 << 16); // symbols per stream
+    println!("=== codec_throughput: {n} symbols per stream ===");
     let registry = CodecRegistry::global();
     let pmfs = report::paper_pmfs(42, 6);
     for (label, pmf, hist) in [
@@ -25,8 +24,8 @@ fn main() {
         ("ffn2", &pmfs.ffn2, &pmfs.ffn2_hist),
     ] {
         println!("--- {label} PMF (entropy {:.2} bits) ---", pmf.entropy());
-        let symbols = report::sample_symbols(pmf, N, 7);
-        let mut b = Bencher::new();
+        let symbols = report::sample_symbols(pmf, n, 7);
+        let mut b = Bencher::with_config(smoke_config());
 
         for name in ["raw", "huffman", "qlc", "qlc-t1", "elias-gamma",
                      "elias-delta", "eg3"] {
@@ -39,11 +38,11 @@ fn main() {
                 encoded.len(),
                 (1.0 - encoded.len() as f64 / symbols.len() as f64) * 100.0
             );
-            b.bench_bytes(&format!("{label}/encode/{name}"), N as u64, || {
+            b.bench_bytes(&format!("{label}/encode/{name}"), n as u64, || {
                 std::hint::black_box(codec.encode_to_vec(&symbols));
             });
-            let mut out = vec![0u8; N];
-            b.bench_bytes(&format!("{label}/decode/{name}"), N as u64, || {
+            let mut out = vec![0u8; n];
+            b.bench_bytes(&format!("{label}/decode/{name}"), n as u64, || {
                 let mut r = BitReader::new(&encoded);
                 codec.decode_into(&mut r, &mut out).unwrap();
                 std::hint::black_box(out.len());
@@ -55,15 +54,15 @@ fn main() {
         let encoded = huff.encode_to_vec(&symbols);
         let tree = TreeDecoder::new(huff.book());
         let table = TableDecoder::new(huff.book());
-        let mut out = vec![0u8; N];
+        let mut out = vec![0u8; n];
         b.bench_bytes(&format!("{label}/decode/huffman-tree-serial"),
-                      N as u64, || {
+                      n as u64, || {
             let mut r = BitReader::new(&encoded);
             tree.decode_into(&mut r, &mut out).unwrap();
             std::hint::black_box(out.len());
         });
         b.bench_bytes(&format!("{label}/decode/huffman-table"),
-                      N as u64, || {
+                      n as u64, || {
             let mut r = BitReader::new(&encoded);
             table.decode_into(&mut r, &mut out).unwrap();
             std::hint::black_box(out.len());
@@ -88,7 +87,7 @@ fn main() {
                 frame::compress_with(&handle, &symbols, &FrameOptions::default());
             b.bench_bytes(
                 &format!("{label}/frame-decode/{name}/single-shot"),
-                N as u64,
+                n as u64,
                 || {
                     let out = frame::decompress_with(
                         &single,
@@ -100,7 +99,7 @@ fn main() {
             );
             b.bench_bytes(
                 &format!("{label}/frame-decode/{name}/chunked-parallel"),
-                N as u64,
+                n as u64,
                 || {
                     let out = frame::decompress(&chunked).unwrap();
                     std::hint::black_box(out.len());
@@ -108,7 +107,7 @@ fn main() {
             );
             b.bench_bytes(
                 &format!("{label}/frame-encode/{name}/chunked-parallel"),
-                N as u64,
+                n as u64,
                 || {
                     std::hint::black_box(
                         frame::compress(&handle, &symbols).len(),
@@ -116,6 +115,53 @@ fn main() {
                 },
             );
         }
+
+        // Sharded manifests: N QLS1 shards sharing one table header
+        // via QLM1 — the placement-unit analogue of the chunked frame.
+        // Same tables, same payload bits; the delta vs single-frame is
+        // per-shard framing only, and decode fans out across shards.
+        let n_shards = 8;
+        let handle = registry.resolve("qlc", hist).unwrap();
+        let (manifest, shards) = frame::compress_sharded(
+            &handle,
+            &symbols,
+            n_shards,
+            &FrameOptions::default(),
+        );
+        let sharded_bytes: usize =
+            manifest.to_bytes().len() + shards.iter().map(Vec::len).sum::<usize>();
+        println!(
+            "  qlc sharded x{n_shards}: {} bytes (one {}-byte header via \
+             manifest)",
+            sharded_bytes,
+            manifest.wire_header().len()
+        );
+        b.bench_bytes(
+            &format!("{label}/sharded-encode/qlc/x{n_shards}"),
+            n as u64,
+            || {
+                let (m, s) = frame::compress_sharded(
+                    &handle,
+                    &symbols,
+                    n_shards,
+                    &FrameOptions::default(),
+                );
+                std::hint::black_box((m.n_shards(), s.len()));
+            },
+        );
+        b.bench_bytes(
+            &format!("{label}/sharded-decode/qlc/x{n_shards}"),
+            n as u64,
+            || {
+                let out = frame::decompress_sharded(
+                    &manifest,
+                    &shards,
+                    &FrameOptions::default(),
+                )
+                .unwrap();
+                std::hint::black_box(out.len());
+            },
+        );
         println!();
     }
 }

@@ -2,27 +2,39 @@
 //! effective way to reduce the network traffic and improve collective
 //! performance".  Sweeps link bandwidth and codec over a ring
 //! all-reduce and an all-gather on the simulated fabric, reporting the
-//! modelled total time (network + measured codec) and the crossover
-//! where codec cost outweighs wire savings.
+//! modelled total time (network + measured codec), the chunk-pipelined
+//! wall time (decode of chunk k overlaps transfer of chunk k+1), and
+//! the overlap savings — how much of the codec cost the transport
+//! layer hides behind the wire.
+//!
+//! Reading the overlap columns: `serial` is wire + codec back-to-back,
+//! `pipelined` is the transport recurrence, `hidden%` is
+//! `1 - pipelined/serial`.  `pipelined ≤ serial` always holds (the
+//! run asserts it); `hidden% → codec share` as links get slower.
+//!
+//! Set `QLC_BENCH_SMOKE=1` to run a reduced version (CI smoke).
 
-use qlc::collective::{ring_allgather, ring_allreduce, Fabric, Transport};
+use qlc::collective::{
+    ring_allgather, ring_allreduce, ring_allreduce_with, Fabric, Transport,
+};
 use qlc::data::{TensorGen, TensorKind};
 use qlc::formats::Variant;
 use qlc::stats::Histogram;
+use qlc::util::bench::smoke_scaled;
 use qlc::util::rng::Rng;
 
 const WORKERS: usize = 8;
-const ELEMS: usize = 1 << 20; // 1 Mi f32 per worker
 
 fn main() {
+    let elems = smoke_scaled(1 << 20, 1 << 14); // f32 per worker
     println!(
-        "=== collective_bench: ring ops, {WORKERS} workers, {ELEMS} \
+        "=== collective_bench: ring ops, {WORKERS} workers, {elems} \
          elements/worker ==="
     );
     let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
     let mut rng = Rng::new(1);
     let data: Vec<Vec<f32>> =
-        (0..WORKERS).map(|_| gen.generate(&mut rng, ELEMS)).collect();
+        (0..WORKERS).map(|_| gen.generate(&mut rng, elems)).collect();
     let cal = Histogram::from_symbols(&gen.symbols(&mut rng, 1 << 16));
 
     let transports = |codec: &str| -> Transport {
@@ -39,13 +51,20 @@ fn main() {
     // Network-only time is the hardware-codec scenario (the paper's
     // target: a wire-speed decoder); "sw total" adds our measured
     // software codec+quantize wall time — the honest crossover for a
-    // software implementation.
-    println!("\n-- allreduce: network time (ms) vs link bandwidth --");
+    // software implementation.  The pipelined column is the software
+    // codec with chunk-granular overlap: what a streaming NIC path
+    // actually pays.
+    println!("\n-- allreduce: time (ms) vs link bandwidth, qlc transport --");
     println!(
-        "{:>8} {:>10} {:>10} {:>10} {:>9} {:>12}",
-        "GB/s", "raw-net", "qlc-net", "huff-net", "speedup", "qlc-sw-total"
+        "{:>8} {:>10} {:>10} {:>12} {:>12} {:>8}",
+        "GB/s", "raw-net", "qlc-net", "qlc-serial", "qlc-pipe", "hidden%"
     );
-    for gbps in [1.0, 5.0, 10.0, 25.0, 50.0, 100.0, 400.0] {
+    let sweep: &[f64] = if qlc::util::bench::smoke() {
+        &[5.0, 50.0]
+    } else {
+        &[1.0, 5.0, 10.0, 25.0, 50.0, 100.0, 400.0]
+    };
+    for &gbps in sweep {
         let fabric = Fabric {
             workers: WORKERS,
             link_bandwidth: gbps * 1e9,
@@ -55,16 +74,42 @@ fn main() {
             ring_allreduce(&fabric, &data, &transports("raw")).unwrap();
         let (_, qlc) =
             ring_allreduce(&fabric, &data, &transports("qlc")).unwrap();
-        let (_, huff) =
-            ring_allreduce(&fabric, &data, &transports("huffman")).unwrap();
+        assert!(
+            qlc.pipelined_time_s <= qlc.total_time_s() * (1.0 + 1e-9),
+            "pipelined wall time must not exceed serial wall time"
+        );
         println!(
-            "{:>8.0} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x {:>12.3}",
+            "{:>8.0} {:>10.3} {:>10.3} {:>12.3} {:>12.3} {:>7.1}%",
             gbps,
             raw.network_time_s * 1e3,
             qlc.network_time_s * 1e3,
-            huff.network_time_s * 1e3,
-            raw.network_time_s / qlc.network_time_s,
-            qlc.total_time_s() * 1e3
+            qlc.total_time_s() * 1e3,
+            qlc.pipelined_time_s * 1e3,
+            qlc.overlap_savings() * 100.0
+        );
+    }
+
+    println!("\n-- allreduce: pipelined time vs transport chunk size --");
+    println!(
+        "{:>14} {:>12} {:>12} {:>8}",
+        "chunk-symbols", "serial-ms", "pipe-ms", "hidden%"
+    );
+    let fabric = Fabric::ethernet(WORKERS); // slow links: codec visible
+    for chunk in [usize::MAX, 64 * 1024, 16 * 1024, 4 * 1024] {
+        let (_, rep) =
+            ring_allreduce_with(&fabric, &data, &transports("qlc"), chunk)
+                .unwrap();
+        assert!(rep.pipelined_time_s <= rep.total_time_s() * (1.0 + 1e-9));
+        let label = if chunk == usize::MAX {
+            "whole".to_string()
+        } else {
+            format!("{chunk}")
+        };
+        println!(
+            "{label:>14} {:>12.3} {:>12.3} {:>7.1}%",
+            rep.total_time_s() * 1e3,
+            rep.pipelined_time_s * 1e3,
+            rep.overlap_savings() * 100.0
         );
     }
 
@@ -74,11 +119,13 @@ fn main() {
         let (_, report) =
             ring_allreduce(&fabric, &data, &transports(codec)).unwrap();
         println!(
-            "  {:<12} wire {:>12} B  ratio {:.3}  codec {:>8.3} ms",
+            "  {:<12} wire {:>12} B  ratio {:.3}  codec {:>8.3} ms  \
+             hidden {:>5.1}%",
             codec,
             report.wire_bytes,
             report.compression_ratio(),
-            report.codec_time_s * 1e3
+            report.codec_time_s * 1e3,
+            report.overlap_savings() * 100.0
         );
     }
 
@@ -86,11 +133,11 @@ fn main() {
     let shards: Vec<Vec<u8>> = (0..WORKERS)
         .map(|_| {
             TensorGen::new(TensorKind::Weight, Variant::ExmY)
-                .symbols(&mut rng, ELEMS / WORKERS)
+                .symbols(&mut rng, elems / WORKERS)
         })
         .collect();
     let scales: Vec<Vec<f32>> = (0..WORKERS)
-        .map(|_| vec![1.0; ELEMS / WORKERS / 32])
+        .map(|_| vec![1.0; elems / WORKERS / 32])
         .collect();
     let cal_w = Histogram::from_symbols(&shards.concat());
     for codec in ["raw", "qlc", "huffman"] {
@@ -105,17 +152,44 @@ fn main() {
         let (_, report) =
             ring_allgather(&fabric, &shards, &scales, &transport).unwrap();
         println!(
-            "  {:<12} wire {:>12} B  ratio {:.3}  total {:>8.3} ms",
+            "  {:<12} wire {:>12} B  ratio {:.3}  total {:>8.3} ms  \
+             pipelined {:>8.3} ms",
             codec,
             report.wire_bytes,
             report.compression_ratio(),
-            report.total_time_s() * 1e3
+            report.total_time_s() * 1e3,
+            report.pipelined_time_s * 1e3
         );
     }
 
-    println!("\n-- coordinator pipeline scaling (qlc, 16 Mi symbols) --");
+    println!("\n-- threaded engine: measured wall time vs chunking --");
+    use qlc::collective::engine::threaded_allreduce_with;
+    for (label, chunk) in
+        [("whole-payload", usize::MAX), ("16Ki-chunks", 16 * 1024)]
+    {
+        let (_, rep) = threaded_allreduce_with(
+            WORKERS,
+            data.clone(),
+            &transports("qlc"),
+            chunk,
+            2,
+        )
+        .unwrap();
+        println!(
+            "  {:<14} wall {:>7.1} ms  wire {:>12} B (of {} raw)",
+            label,
+            rep.wall_time_s * 1e3,
+            rep.wire_bytes,
+            rep.raw_bytes
+        );
+    }
+
+    let stream_n = smoke_scaled(16 << 20, 1 << 18);
+    println!(
+        "\n-- coordinator pipeline scaling (qlc, {stream_n} symbols) --"
+    );
     use qlc::coordinator::{Pipeline, PipelineConfig};
-    let stream = gen.symbols(&mut rng, 16 << 20);
+    let stream = gen.symbols(&mut rng, stream_n);
     let cal2 = Histogram::from_symbols(&stream[..1 << 16]);
     for workers in [1usize, 2, 4, 8] {
         let pipe = Pipeline::new(
@@ -138,4 +212,26 @@ fn main() {
             pipe.metrics().compressibility() * 100.0
         );
     }
+
+    println!("\n-- coordinator sharded manifests (qlc, 8 shards) --");
+    let pipe = Pipeline::new(
+        PipelineConfig { workers: 4, chunk_size: 256 * 1024, queue_depth: 8 },
+        "qlc",
+        &cal2,
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let (manifest, bodies) = pipe.compress_sharded(&stream, 8);
+    let wall = t0.elapsed().as_secs_f64();
+    let total: usize = bodies.iter().map(|b| b.len()).sum();
+    println!(
+        "  {} shards, one {}-byte table header: {} -> {} bytes in {:.3}s \
+         ({:.1} MB/s)",
+        manifest.n_shards(),
+        manifest.wire_header().len(),
+        stream.len(),
+        total,
+        wall,
+        stream.len() as f64 / wall / 1e6
+    );
 }

@@ -7,19 +7,19 @@ use qlc::codecs::huffman::HuffmanCodec;
 use qlc::codecs::qlc::{AreaScheme, QlcCodec};
 use qlc::hw;
 use qlc::report;
-use qlc::util::bench::Bencher;
-
-const N: usize = 1 << 20;
+use qlc::util::bench::{smoke_config, smoke_scaled, Bencher};
 
 fn main() {
-    println!("=== hw_model_bench: {N} symbols per stream ===");
+    // QLC_BENCH_SMOKE=1 shrinks the streams (CI smoke).
+    let n = smoke_scaled(1 << 20, 1 << 15);
+    println!("=== hw_model_bench: {n} symbols per stream ===");
     let pmfs = report::paper_pmfs(42, 6);
-    let mut b = Bencher::new();
+    let mut b = Bencher::with_config(smoke_config());
     for (label, pmf, hist, scheme) in [
         ("ffn1", &pmfs.ffn1, &pmfs.ffn1_hist, AreaScheme::table1()),
         ("ffn2", &pmfs.ffn2, &pmfs.ffn2_hist, AreaScheme::table2()),
     ] {
-        let symbols = report::sample_symbols(pmf, N, 3);
+        let symbols = report::sample_symbols(pmf, n, 3);
         let huff = HuffmanCodec::from_histogram(hist);
         let qlc_codec = QlcCodec::from_pmf(scheme, pmf);
         let reports = hw::compare_on_stream(huff.book(), &qlc_codec, &symbols);

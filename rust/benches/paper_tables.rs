@@ -6,17 +6,21 @@
 use std::time::Instant;
 
 use qlc::report;
-use qlc::util::bench::Bencher;
+use qlc::util::bench::{smoke_config, Bencher};
 
 fn main() {
     println!("=== paper_tables: full-grid regeneration (18 layers × 64 shards scale) ===");
     let t0 = Instant::now();
     // scale=2 → 9 layers × 32 shards = 288 shards/tensor-type at 32 Ki
     // symbols each (~9.4 M symbols per PMF): full-fidelity statistics
-    // in bounded time.
-    let pmfs = report::paper_pmfs(42, 2);
+    // in bounded time.  QLC_BENCH_SMOKE=1 drops to scale=16 (CI smoke).
+    let scale = qlc::util::bench::smoke_scaled(2, 16);
+    let pmfs = report::paper_pmfs(42, scale);
+    let shards = qlc::data::shards::ShardConfig::paper_scaled(scale);
     println!(
-        "pmf construction (2×288 shards, calibrated): {:.2?}\n",
+        "pmf construction (scale={scale}: {}×{} shards, calibrated): {:.2?}\n",
+        shards.layers,
+        shards.shards_per_layer,
         t0.elapsed()
     );
 
@@ -25,7 +29,7 @@ fn main() {
     }
 
     // Timing of the table-construction stages themselves.
-    let mut b = Bencher::new();
+    let mut b = Bencher::with_config(smoke_config());
     let sorted1 = pmfs.ffn1.sorted_desc();
     b.bench("build: huffman codebook (FFN1 pmf)", || {
         let mut h = qlc::stats::Histogram::new();

@@ -30,13 +30,37 @@
 //! decoding.  Both formats share wire tags and table-header layouts
 //! via [`CodecRegistry`] — this module contains no per-codec dispatch
 //! of its own.
+//!
+//! # Sharded tensors — QLM1 manifest + QLS1 shards
+//!
+//! One tensor can span N independently-placed shards that share a
+//! single codec table via a [`ShardManifest`]:
+//!
+//! ```text
+//! manifest: magic "QLM1" | codec_tag u8 | flags u8 (0) |
+//!           total_symbols u64 | header_len u32 | header bytes… |
+//!           n_shards u32 | n_shards × { shard_n_symbols u64 }
+//! shard:    magic "QLS1" | shard_index u32 | n_symbols u64 |
+//!           n_chunks u32 | chunk table (as QLF2) | chunk payloads…
+//! ```
+//!
+//! Shards carry their own index, so [`decompress_sharded`] accepts
+//! them in **any arrival order** — a coordinator can place one shard
+//! per worker/NUMA node and reassemble whatever order they land in.
+//! The table header is written exactly once (in the manifest), so N
+//! shards cost N×16 bytes of framing instead of N table copies.
 
 use super::registry::{CodecHandle, CodecRegistry};
-use super::session::DEFAULT_CHUNK_SYMBOLS;
+use super::session::{chunk_spans, DEFAULT_CHUNK_SYMBOLS};
 use super::CodecError;
 
 pub const MAGIC_QLF1: [u8; 4] = *b"QLF1";
 pub const MAGIC_QLF2: [u8; 4] = *b"QLF2";
+/// Shard-set manifest: one codec table header shared by N shards.
+pub const MAGIC_MANIFEST: [u8; 4] = *b"QLM1";
+/// One shard of a sharded tensor: chunk table + payloads, no codec
+/// header (that lives in the manifest).
+pub const MAGIC_SHARD: [u8; 4] = *b"QLS1";
 
 /// Fixed prefix shared by both formats: magic, tag, flags, n, hlen.
 const FIXED_HEADER: usize = 4 + 1 + 1 + 8 + 4;
@@ -113,12 +137,16 @@ pub fn compress(handle: &CodecHandle, symbols: &[u8]) -> Vec<u8> {
     compress_with(handle, symbols, &FrameOptions::default())
 }
 
-/// Compress `symbols` into a chunked QLF2 frame.
-pub fn compress_with(
+/// Encode `symbols` into per-chunk byte-aligned payloads, fanning the
+/// chunks out over scoped workers.  Shared by the QLF2 writer and the
+/// shard writer; chunk boundaries come from
+/// [`chunk_spans`](super::chunk_spans), so frame chunks, shard chunks
+/// and transport chunks all agree.
+fn encode_payload_chunks<'a>(
     handle: &CodecHandle,
-    symbols: &[u8],
+    symbols: &'a [u8],
     opts: &FrameOptions,
-) -> Vec<u8> {
+) -> (Vec<&'a [u8]>, Vec<Vec<u8>>) {
     // Chunk-table fields are u32; the deepest code in the crate is
     // < 64 bits/symbol, so capping chunks at u32::MAX/8 symbols keeps
     // both the symbol count and the worst-case payload length in
@@ -129,7 +157,10 @@ pub fn compress_with(
         .chunk_symbols
         .clamp(min_chunk.min((u32::MAX / 8) as usize), (u32::MAX / 8) as usize)
         .max(1);
-    let chunks: Vec<&[u8]> = symbols.chunks(chunk_symbols).collect();
+    let chunks: Vec<&[u8]> = chunk_spans(symbols.len(), chunk_symbols)
+        .into_iter()
+        .map(|(a, b)| &symbols[a..b])
+        .collect();
     assert!(chunks.len() <= u32::MAX as usize, "chunk count overflows u32");
     let threads = effective_threads(opts.threads, chunks.len());
 
@@ -145,7 +176,29 @@ pub fn compress_with(
             Ok(())
         });
     encode_ok.unwrap(); // Infallible: encoding cannot fail
+    (chunks, payloads)
+}
 
+/// Append `n_chunks | chunk table | payloads` (the shared QLF2/QLS1
+/// body layout) to `out`.
+fn write_chunk_table(out: &mut Vec<u8>, chunks: &[&[u8]], payloads: &[Vec<u8>]) {
+    out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+    for (chunk, payload) in chunks.iter().zip(payloads) {
+        out.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    }
+    for payload in payloads {
+        out.extend_from_slice(payload);
+    }
+}
+
+/// Compress `symbols` into a chunked QLF2 frame.
+pub fn compress_with(
+    handle: &CodecHandle,
+    symbols: &[u8],
+    opts: &FrameOptions,
+) -> Vec<u8> {
+    let (chunks, payloads) = encode_payload_chunks(handle, symbols, opts);
     let header = handle.wire_header();
     let payload_bytes: usize = payloads.iter().map(|p| p.len()).sum();
     let mut out = Vec::with_capacity(
@@ -157,14 +210,7 @@ pub fn compress_with(
     out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
     out.extend_from_slice(&(header.len() as u32).to_le_bytes());
     out.extend_from_slice(header);
-    out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
-    for (chunk, payload) in chunks.iter().zip(&payloads) {
-        out.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
-        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    }
-    for payload in &payloads {
-        out.extend_from_slice(payload);
-    }
+    write_chunk_table(&mut out, &chunks, &payloads);
     out
 }
 
@@ -246,13 +292,14 @@ fn decompress_qlf1_body(
     handle.decoder().decode_chunk_to_vec(payload, n)
 }
 
-fn decompress_qlf2_body(
-    tag: u8,
+/// Parse and validate a `n_chunks | chunk table | payloads` body
+/// against `n` expected symbols.  Returns per-chunk
+/// `(n_symbols, payload_len)` entries and the payload area; the sums
+/// are checked **before** anything is allocated in proportion to them.
+fn parse_chunk_table(
     n: usize,
-    header: &[u8],
     body: &[u8],
-    opts: &FrameOptions,
-) -> Result<Vec<u8>, CodecError> {
+) -> Result<(Vec<(usize, usize)>, &[u8]), CodecError> {
     let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
     if body.len() < 4 {
         return Err(bad("truncated chunk count"));
@@ -288,31 +335,361 @@ fn decompress_qlf2_body(
     if total_payload != payload_area.len() as u64 {
         return Err(bad("chunk table does not sum to payload length"));
     }
+    Ok((entries, payload_area))
+}
 
-    let handle = CodecRegistry::global().resolve_wire(tag, header)?;
-    let mut out = vec![0u8; n];
-
-    // Carve (payload, destination) pairs for each chunk.
-    let mut jobs: Vec<(&[u8], &mut [u8])> = Vec::with_capacity(n_chunks);
+/// Carve validated `(payload, destination)` pairs and append them to
+/// `jobs`, consuming `out_rest` one chunk at a time.  Requires the
+/// invariants [`parse_chunk_table`] established.
+fn carve_chunk_jobs<'a>(
+    entries: &[(usize, usize)],
+    payload_area: &'a [u8],
+    out_rest: &mut &'a mut [u8],
+    jobs: &mut Vec<(&'a [u8], &'a mut [u8])>,
+) {
     let mut payload_rest = payload_area;
-    let mut out_rest: &mut [u8] = &mut out;
-    for &(chunk_n, plen) in &entries {
+    for &(chunk_n, plen) in entries {
         let (payload, ptail) = payload_rest.split_at(plen);
         payload_rest = ptail;
-        let (dst, otail) =
-            std::mem::take(&mut out_rest).split_at_mut(chunk_n);
-        out_rest = otail;
+        let (dst, otail) = std::mem::take(out_rest).split_at_mut(chunk_n);
+        *out_rest = otail;
         jobs.push((payload, dst));
     }
+}
 
-    let threads = effective_threads(opts.threads, jobs.len());
+/// Decode carved chunk jobs on up to `threads_req` scoped workers.
+fn decode_chunk_jobs(
+    handle: &CodecHandle,
+    jobs: Vec<(&[u8], &mut [u8])>,
+    threads_req: usize,
+) -> Result<(), CodecError> {
+    let threads = effective_threads(threads_req, jobs.len());
     run_banded(jobs, threads, |band| {
         let mut dec = handle.decoder();
         for (payload, dst) in band {
             dec.decode_chunk(payload, dst)?;
         }
         Ok(())
-    })?;
+    })
+}
+
+fn decompress_qlf2_body(
+    tag: u8,
+    n: usize,
+    header: &[u8],
+    body: &[u8],
+    opts: &FrameOptions,
+) -> Result<Vec<u8>, CodecError> {
+    let (entries, payload_area) = parse_chunk_table(n, body)?;
+    let handle = CodecRegistry::global().resolve_wire(tag, header)?;
+    let mut out = vec![0u8; n];
+    let mut jobs: Vec<(&[u8], &mut [u8])> =
+        Vec::with_capacity(entries.len());
+    let mut out_rest: &mut [u8] = &mut out;
+    carve_chunk_jobs(&entries, payload_area, &mut out_rest, &mut jobs);
+    decode_chunk_jobs(&handle, jobs, opts.threads)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Sharded tensors: QLM1 manifest + QLS1 shards
+
+/// Fixed prefix of a shard: magic, shard_index u32, n_symbols u64.
+const SHARD_FIXED: usize = 4 + 4 + 8;
+/// Fixed prefix of a manifest: magic, tag, flags, total u64, hlen u32.
+const MANIFEST_FIXED: usize = 4 + 1 + 1 + 8 + 4;
+
+/// Where one shard's symbols live in the reassembled tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardDesc {
+    pub index: usize,
+    /// First symbol of the shard in the whole tensor.
+    pub start: usize,
+    pub n_symbols: usize,
+}
+
+/// The shared half of a sharded tensor: codec identity (tag + table
+/// header, written once for all shards) plus the per-shard symbol
+/// counts.  Coordinators ship this to every consumer and place the
+/// [`ShardDesc`]s on workers; shards then travel independently and
+/// reassemble in any arrival order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardManifest {
+    tag: u8,
+    header: Vec<u8>,
+    shard_symbols: Vec<u64>,
+}
+
+impl ShardManifest {
+    /// Build a manifest from a codec's wire identity (tag + serialized
+    /// table header) — for callers that hold the identity without a
+    /// live [`CodecHandle`], e.g. a coordinator leader.
+    pub fn new(
+        tag: u8,
+        header: Vec<u8>,
+        shard_symbols: Vec<u64>,
+    ) -> ShardManifest {
+        ShardManifest { tag, header, shard_symbols }
+    }
+
+    /// Build a manifest for `shard_symbols.len()` shards encoded with
+    /// `handle`'s codec.
+    pub fn from_handle(
+        handle: &CodecHandle,
+        shard_symbols: Vec<u64>,
+    ) -> ShardManifest {
+        ShardManifest::new(
+            handle.wire_tag(),
+            handle.wire_header().to_vec(),
+            shard_symbols,
+        )
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shard_symbols.len()
+    }
+
+    pub fn total_symbols(&self) -> u64 {
+        self.shard_symbols.iter().sum()
+    }
+
+    pub fn shard_symbols(&self) -> &[u64] {
+        &self.shard_symbols
+    }
+
+    pub fn codec_tag(&self) -> u8 {
+        self.tag
+    }
+
+    pub fn wire_header(&self) -> &[u8] {
+        &self.header
+    }
+
+    /// Reconstruct the shared codec from the manifest's wire identity.
+    pub fn resolve(&self) -> Result<CodecHandle, CodecError> {
+        CodecRegistry::global().resolve_wire(self.tag, &self.header)
+    }
+
+    /// Placement descriptors, in shard-index order.
+    pub fn descriptors(&self) -> Vec<ShardDesc> {
+        let mut start = 0usize;
+        self.shard_symbols
+            .iter()
+            .enumerate()
+            .map(|(index, &n)| {
+                let d = ShardDesc { index, start, n_symbols: n as usize };
+                start += n as usize;
+                d
+            })
+            .collect()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            MANIFEST_FIXED + self.header.len() + 4 + self.shard_symbols.len() * 8,
+        );
+        out.extend_from_slice(&MAGIC_MANIFEST);
+        out.push(self.tag);
+        out.push(0); // flags
+        out.extend_from_slice(&self.total_symbols().to_le_bytes());
+        out.extend_from_slice(&(self.header.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.header);
+        out.extend_from_slice(&(self.shard_symbols.len() as u32).to_le_bytes());
+        for &n in &self.shard_symbols {
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse and validate a serialized manifest.  All counts are
+    /// bounds-checked against the buffer before any allocation sized
+    /// by them.
+    pub fn parse(data: &[u8]) -> Result<ShardManifest, CodecError> {
+        let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
+        if data.len() < MANIFEST_FIXED {
+            return Err(bad("manifest too short"));
+        }
+        if data[0..4] != MAGIC_MANIFEST {
+            return Err(bad("bad manifest magic"));
+        }
+        let tag = data[4];
+        if data[5] != 0 {
+            return Err(bad("unsupported manifest flags"));
+        }
+        let total = u64::from_le_bytes(data[6..14].try_into().unwrap());
+        if total > usize::MAX as u64 {
+            return Err(bad("declared symbol count exceeds address space"));
+        }
+        let hlen =
+            u32::from_le_bytes(data[14..18].try_into().unwrap()) as usize;
+        let rest = &data[MANIFEST_FIXED..];
+        if rest.len() < hlen {
+            return Err(bad("truncated manifest header"));
+        }
+        let (header, rest) = rest.split_at(hlen);
+        if rest.len() < 4 {
+            return Err(bad("truncated shard count"));
+        }
+        let n_shards =
+            u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+        let table = &rest[4..];
+        // Exact length: a truncated table and trailing garbage are both
+        // corruption (same strictness as the QLF2 chunk table).
+        if table.len() / 8 < n_shards {
+            return Err(bad("truncated shard table"));
+        }
+        if table.len() != n_shards * 8 {
+            return Err(bad("trailing bytes after shard table"));
+        }
+        let mut shard_symbols = Vec::with_capacity(n_shards);
+        let mut sum = 0u64;
+        for e in table[..n_shards * 8].chunks_exact(8) {
+            let n = u64::from_le_bytes(e.try_into().unwrap());
+            sum = sum
+                .checked_add(n)
+                .ok_or_else(|| bad("shard symbol counts overflow"))?;
+            shard_symbols.push(n);
+        }
+        if sum != total {
+            return Err(bad("shard table does not sum to total symbols"));
+        }
+        Ok(ShardManifest { tag, header: header.to_vec(), shard_symbols })
+    }
+}
+
+/// Split `total` symbols into up to `n_shards` contiguous near-equal
+/// shards.  Tiny inputs may yield fewer (never empty) shards; an empty
+/// input yields one empty shard so a manifest always describes at
+/// least one placement unit.
+pub fn shard_plan(total: usize, n_shards: usize) -> Vec<ShardDesc> {
+    let k = n_shards.max(1);
+    if total == 0 {
+        return vec![ShardDesc { index: 0, start: 0, n_symbols: 0 }];
+    }
+    let per = (total + k - 1) / k;
+    chunk_spans(total, per)
+        .into_iter()
+        .enumerate()
+        .map(|(index, (a, b))| ShardDesc {
+            index,
+            start: a,
+            n_symbols: b - a,
+        })
+        .collect()
+}
+
+/// Compress one shard body (QLS1): chunk table + payloads, no codec
+/// header.  `symbols` must be exactly the shard's slice.
+pub fn compress_shard(
+    handle: &CodecHandle,
+    shard_index: u32,
+    symbols: &[u8],
+    opts: &FrameOptions,
+) -> Vec<u8> {
+    let (chunks, payloads) = encode_payload_chunks(handle, symbols, opts);
+    let payload_bytes: usize = payloads.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(
+        SHARD_FIXED + 4 + payloads.len() * 8 + payload_bytes,
+    );
+    out.extend_from_slice(&MAGIC_SHARD);
+    out.extend_from_slice(&shard_index.to_le_bytes());
+    out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
+    write_chunk_table(&mut out, &chunks, &payloads);
+    out
+}
+
+/// Compress `symbols` into `n_shards` independently-decodable shards
+/// plus the manifest that ties them together.  Shards are encoded in
+/// parallel over scoped workers; bytes are deterministic (boundaries
+/// depend only on the plan and `opts.chunk_symbols`).
+pub fn compress_sharded(
+    handle: &CodecHandle,
+    symbols: &[u8],
+    n_shards: usize,
+    opts: &FrameOptions,
+) -> (ShardManifest, Vec<Vec<u8>>) {
+    let plan = shard_plan(symbols.len(), n_shards);
+    let mut bodies: Vec<Vec<u8>> = vec![Vec::new(); plan.len()];
+    let jobs: Vec<(ShardDesc, &mut Vec<u8>)> =
+        plan.iter().copied().zip(bodies.iter_mut()).collect();
+    let threads = effective_threads(opts.threads, jobs.len());
+    let serial = FrameOptions { threads: 1, ..*opts };
+    let encode_ok: Result<(), std::convert::Infallible> =
+        run_banded(jobs, threads, |band| {
+            for (desc, slot) in band {
+                *slot = compress_shard(
+                    handle,
+                    desc.index as u32,
+                    &symbols[desc.start..desc.start + desc.n_symbols],
+                    &serial,
+                );
+            }
+            Ok(())
+        });
+    encode_ok.unwrap(); // Infallible: encoding cannot fail
+    let manifest = ShardManifest::from_handle(
+        handle,
+        plan.iter().map(|d| d.n_symbols as u64).collect(),
+    );
+    (manifest, bodies)
+}
+
+/// Reassemble a sharded tensor.  `shards` may arrive in **any order**
+/// (each carries its index); every shard must be present exactly once
+/// and agree with the manifest.  Chunks across all shards decode in
+/// one parallel fan-out.
+pub fn decompress_sharded(
+    manifest: &ShardManifest,
+    shards: &[Vec<u8>],
+    opts: &FrameOptions,
+) -> Result<Vec<u8>, CodecError> {
+    let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
+    let k = manifest.n_shards();
+    if shards.len() != k {
+        return Err(bad("shard count does not match manifest"));
+    }
+    let total = manifest.total_symbols();
+    if total > usize::MAX as u64 {
+        return Err(bad("declared symbol count exceeds address space"));
+    }
+
+    // Parse every shard header; placement comes from the embedded
+    // index, so arrival order is free.
+    let mut parsed: Vec<Option<(Vec<(usize, usize)>, &[u8])>> =
+        (0..k).map(|_| None).collect();
+    for s in shards {
+        if s.len() < SHARD_FIXED {
+            return Err(bad("shard too short"));
+        }
+        if s[0..4] != MAGIC_SHARD {
+            return Err(bad("bad shard magic"));
+        }
+        let index =
+            u32::from_le_bytes(s[4..8].try_into().unwrap()) as usize;
+        let n = u64::from_le_bytes(s[8..16].try_into().unwrap());
+        if index >= k {
+            return Err(bad("shard index out of range"));
+        }
+        if n != manifest.shard_symbols[index] {
+            return Err(bad("shard symbol count disagrees with manifest"));
+        }
+        if parsed[index].is_some() {
+            return Err(bad("duplicate shard"));
+        }
+        parsed[index] = Some(parse_chunk_table(n as usize, &s[SHARD_FIXED..])?);
+    }
+
+    let handle = manifest.resolve()?;
+    let mut out = vec![0u8; total as usize];
+    let mut jobs: Vec<(&[u8], &mut [u8])> = Vec::new();
+    let mut out_rest: &mut [u8] = &mut out;
+    for p in &parsed {
+        let Some((entries, payload_area)) = p else {
+            return Err(bad("missing shard"));
+        };
+        carve_chunk_jobs(entries, payload_area, &mut out_rest, &mut jobs);
+    }
+    decode_chunk_jobs(&handle, jobs, opts.threads)?;
     Ok(out)
 }
 
@@ -584,6 +961,265 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    fn shuffle<T>(v: &mut [T], rng: &mut Rng) {
+        for i in (1..v.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+    }
+
+    #[test]
+    fn shard_plan_partitions_contiguously() {
+        for (total, k) in
+            [(0usize, 4usize), (1, 4), (4, 4), (100, 7), (100_000, 13), (5, 0)]
+        {
+            let plan = shard_plan(total, k);
+            assert!(!plan.is_empty(), "total={total} k={k}");
+            assert!(plan.len() <= k.max(1));
+            assert_eq!(plan[0].start, 0);
+            let mut expect_start = 0usize;
+            for (i, d) in plan.iter().enumerate() {
+                assert_eq!(d.index, i);
+                assert_eq!(d.start, expect_start);
+                expect_start += d.n_symbols;
+            }
+            assert_eq!(expect_start, total);
+            if total > 0 {
+                assert!(plan.iter().all(|d| d.n_symbols > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_roundtrip_any_arrival_order() {
+        let symbols = skewed_symbols(120_000, 11);
+        let hist = Histogram::from_symbols(&symbols);
+        for name in ["qlc", "huffman", "raw"] {
+            let handle = registry().resolve(name, &hist).unwrap();
+            for n_shards in [1usize, 2, 7] {
+                let (manifest, mut shards) = compress_sharded(
+                    &handle,
+                    &symbols,
+                    n_shards,
+                    &FrameOptions { chunk_symbols: 4096, threads: 0 },
+                );
+                assert_eq!(manifest.n_shards(), shards.len());
+                assert_eq!(
+                    manifest.total_symbols(),
+                    symbols.len() as u64
+                );
+                // Shards reassemble regardless of arrival order.
+                let mut rng = Rng::new(n_shards as u64);
+                shuffle(&mut shards, &mut rng);
+                let back = decompress_sharded(
+                    &manifest,
+                    &shards,
+                    &FrameOptions::default(),
+                )
+                .unwrap();
+                assert_eq!(back, symbols, "{name} x{n_shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_serialization_roundtrips() {
+        let symbols = skewed_symbols(10_000, 12);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let (manifest, shards) = compress_sharded(
+            &handle,
+            &symbols,
+            4,
+            &FrameOptions::default(),
+        );
+        let bytes = manifest.to_bytes();
+        assert_eq!(&bytes[0..4], &MAGIC_MANIFEST);
+        let parsed = ShardManifest::parse(&bytes).unwrap();
+        assert_eq!(parsed, manifest);
+        // Truncation and trailing garbage are both rejected.
+        assert!(ShardManifest::parse(&bytes[..bytes.len() - 1]).is_err());
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(ShardManifest::parse(&padded).is_err());
+        // Descriptors tile the tensor in index order.
+        let descs = parsed.descriptors();
+        assert_eq!(descs.len(), 4);
+        assert_eq!(
+            descs.iter().map(|d| d.n_symbols).sum::<usize>(),
+            symbols.len()
+        );
+        // A parsed manifest decodes shards just like the original.
+        let back = decompress_sharded(
+            &parsed,
+            &shards,
+            &FrameOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(back, symbols);
+    }
+
+    #[test]
+    fn sharded_header_written_once() {
+        // N shards share one table header via the manifest: total
+        // sharded bytes stay close to the single-frame size (framing
+        // is 16 bytes + chunk table per shard, never a table copy).
+        let symbols = skewed_symbols(256 * 1024, 13);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let single = compress(&handle, &symbols);
+        let (manifest, shards) =
+            compress_sharded(&handle, &symbols, 8, &FrameOptions::default());
+        let sharded: usize = manifest.to_bytes().len()
+            + shards.iter().map(|s| s.len()).sum::<usize>();
+        let slack = 8 * (SHARD_FIXED + 4 + 9 * 8) + 64;
+        assert!(
+            sharded <= single.len() + slack,
+            "{sharded} vs {} (+{slack})",
+            single.len()
+        );
+    }
+
+    #[test]
+    fn bad_shard_sets_rejected() {
+        let symbols = skewed_symbols(20_000, 14);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("huffman", &hist).unwrap();
+        let (manifest, shards) =
+            compress_sharded(&handle, &symbols, 3, &FrameOptions::default());
+        let opts = FrameOptions::default();
+
+        // Wrong shard count.
+        assert!(decompress_sharded(&manifest, &shards[..2], &opts).is_err());
+        // Duplicate shard (same index twice).
+        let mut dup = shards.clone();
+        dup[1] = shards[0].clone();
+        assert!(decompress_sharded(&manifest, &dup, &opts).is_err());
+        // Out-of-range index.
+        let mut oor = shards.clone();
+        oor[2][4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(decompress_sharded(&manifest, &oor, &opts).is_err());
+        // Symbol count disagrees with manifest.
+        let mut wrong_n = shards.clone();
+        let n = u64::from_le_bytes(wrong_n[0][8..16].try_into().unwrap());
+        wrong_n[0][8..16].copy_from_slice(&(n + 1).to_le_bytes());
+        assert!(decompress_sharded(&manifest, &wrong_n, &opts).is_err());
+        // Bad shard magic.
+        let mut magic = shards.clone();
+        magic[0][0] = b'X';
+        assert!(decompress_sharded(&manifest, &magic, &opts).is_err());
+        // Truncated shard.
+        let mut trunc = shards.clone();
+        trunc[1].truncate(6);
+        assert!(decompress_sharded(&manifest, &trunc, &opts).is_err());
+        // The pristine set still decodes after all that.
+        assert_eq!(
+            decompress_sharded(&manifest, &shards, &opts).unwrap(),
+            symbols
+        );
+    }
+
+    #[test]
+    fn prop_corrupt_manifest_never_panics() {
+        // Fuzz the manifest parser and the sharded reassembly: bit
+        // flips, truncations and garbage splices in the manifest or
+        // any shard must produce Err or a wrong-but-bounded Ok —
+        // never a panic.
+        prop::check("manifest fuzz", prop::Config {
+            cases: 64, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size.max(32));
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = ["raw", "huffman", "qlc", "eg1"];
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle = registry()
+                .resolve(name, &hist)
+                .map_err(|e| e.to_string())?;
+            let n_shards = 1 + rng.below(5) as usize;
+            let (manifest, mut shards) = compress_sharded(
+                &handle,
+                &symbols,
+                n_shards,
+                &FrameOptions {
+                    chunk_symbols: 1 + rng.below(512) as usize,
+                    threads: 1,
+                },
+            );
+            let mut manifest_bytes = manifest.to_bytes();
+            for _ in 0..16 {
+                // Corrupt the manifest or one shard, alternating.
+                let target_shard = rng.below(2) == 0 && !shards.is_empty();
+                let buf: &mut Vec<u8> = if target_shard {
+                    let k = rng.below(shards.len() as u64) as usize;
+                    &mut shards[k]
+                } else {
+                    &mut manifest_bytes
+                };
+                if buf.is_empty() {
+                    continue;
+                }
+                match rng.below(3) {
+                    0 => {
+                        let i = rng.below(buf.len() as u64) as usize;
+                        buf[i] ^= 1 << rng.below(8);
+                    }
+                    1 => {
+                        let keep = rng.below(buf.len() as u64) as usize;
+                        buf.truncate(keep);
+                    }
+                    _ => {
+                        let i = rng.below(buf.len() as u64) as usize;
+                        let mut junk = vec![0u8; 8.min(buf.len() - i)];
+                        rng.fill_bytes(&mut junk);
+                        buf[i..i + junk.len()].copy_from_slice(&junk);
+                    }
+                }
+                match ShardManifest::parse(&manifest_bytes) {
+                    Err(_) => {}
+                    Ok(m) => match decompress_sharded(
+                        &m,
+                        &shards,
+                        &FrameOptions::serial(),
+                    ) {
+                        // Payload-internal flips may decode wrong
+                        // symbols, but the validated tables pin the
+                        // output size.
+                        Ok(out) => {
+                            if out.len() as u64 != m.total_symbols() {
+                                return Err(format!(
+                                    "decoded {} of {} declared symbols",
+                                    out.len(),
+                                    m.total_symbols()
+                                ));
+                            }
+                        }
+                        Err(_) => {}
+                    },
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_input_sharded_roundtrip() {
+        let hist = Histogram::from_symbols(&[0]);
+        let handle = registry().resolve("huffman", &hist).unwrap();
+        let (manifest, shards) =
+            compress_sharded(&handle, &[], 4, &FrameOptions::default());
+        assert_eq!(manifest.n_shards(), 1, "empty input → one empty shard");
+        let back = decompress_sharded(
+            &manifest,
+            &shards,
+            &FrameOptions::default(),
+        )
+        .unwrap();
+        assert!(back.is_empty());
     }
 
     #[test]

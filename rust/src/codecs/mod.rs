@@ -42,7 +42,9 @@ mod session;
 pub mod zstd_baseline;
 
 pub use registry::{CodecHandle, CodecRegistry};
-pub use session::{DecoderSession, EncoderSession, DEFAULT_CHUNK_SYMBOLS};
+pub use session::{
+    chunk_spans, DecoderSession, EncoderSession, DEFAULT_CHUNK_SYMBOLS,
+};
 
 use crate::bitstream::{BitReader, BitWriter};
 

@@ -22,6 +22,24 @@ use crate::bitstream::{BitReader, BitWriter};
 /// multi-megabyte payload has real parallelism.
 pub const DEFAULT_CHUNK_SYMBOLS: usize = 64 * 1024;
 
+/// `[start, end)` symbol spans of successive chunks covering `total`
+/// symbols at `chunk_symbols` granularity (the last span may be
+/// short; `total == 0` yields no spans, matching `slice::chunks`).
+/// The one chunking rule shared by the QLF2 frame writer, the shard
+/// encoder and the chunk-granular transport — all three must agree on
+/// boundaries for their payloads to be interchangeable.
+pub fn chunk_spans(total: usize, chunk_symbols: usize) -> Vec<(usize, usize)> {
+    let step = chunk_symbols.max(1);
+    let mut spans = Vec::with_capacity(total / step + 1);
+    let mut start = 0usize;
+    while start < total {
+        let end = (start + step).min(total);
+        spans.push((start, end));
+        start = end;
+    }
+    spans
+}
+
 /// Streaming encoder bound to one codec.
 ///
 /// ```
@@ -224,6 +242,26 @@ mod tests {
             Err(CodecError::UnexpectedEof)
         );
         assert_eq!(dec.chunks(), 0, "failed chunks must not count");
+    }
+
+    #[test]
+    fn chunk_spans_cover_exactly() {
+        for (total, chunk) in
+            [(0usize, 8usize), (1, 8), (8, 8), (9, 8), (1000, 1), (5, 0)]
+        {
+            let spans = chunk_spans(total, chunk);
+            if total == 0 {
+                assert!(spans.is_empty());
+                continue;
+            }
+            assert_eq!(spans[0].0, 0);
+            assert_eq!(spans.last().unwrap().1, total);
+            for w in spans.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "spans must be contiguous");
+            }
+            let step = chunk.max(1);
+            assert!(spans.iter().all(|&(a, b)| b - a <= step && b > a));
+        }
     }
 
     #[test]

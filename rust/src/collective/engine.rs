@@ -1,25 +1,21 @@
-//! Threaded collective engine: the ring all-reduce of
+//! Threaded collective engine: the chunk-pipelined ring all-reduce of
 //! [`super::ring_allreduce`] executed by real worker threads exchanging
-//! compressed payloads over channels.  Validates that the simulated
-//! ring and a concurrent implementation agree bit-for-bit, and measures
-//! real end-to-end wall time (the codec is on the critical path here,
-//! as it would be on a NIC offload engine).
+//! compressed chunks over the transport layer's bounded channels
+//! ([`crate::transport::threaded`]).  Validates that the simulated
+//! ring and a concurrent implementation agree bit-for-bit, and
+//! measures real end-to-end wall time — here the overlap of decode(k)
+//! with transfer(k+1) is physical, not modelled: while one worker
+//! decodes a chunk, its upstream neighbour is already encoding and
+//! sending the next.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use super::{decode_payload, encode_payload, Transport};
+use super::Transport;
 use crate::codecs::CodecHandle;
-use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
-
-/// One hop's message: compressed symbols + block scales.
-struct Msg {
-    payload: Vec<u8>,
-    scales: Vec<f32>,
-    n_symbols: usize,
-}
+use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant};
+use crate::transport::{exchange_hop, threaded, DEFAULT_TRANSPORT_CHUNK};
 
 /// Wall-clock result of a threaded all-reduce.
 #[derive(Clone, Debug)]
@@ -27,20 +23,41 @@ pub struct EngineReport {
     pub wall_time_s: f64,
     pub wire_bytes: u64,
     pub raw_bytes: u64,
+    /// Transport chunk granularity the run used (symbols).
+    pub chunk_symbols: usize,
 }
 
-/// Threaded ring all-reduce. Semantically identical to
-/// [`super::ring_allreduce`]: lossy quantize-per-hop reduce-scatter,
-/// then lossless circulation of the final (symbols, scales).
+/// Threaded ring all-reduce with default chunking. Semantically
+/// identical to [`super::ring_allreduce`]: lossy quantize-per-hop
+/// reduce-scatter, then lossless circulation of (symbols, scales).
 pub fn threaded_allreduce(
     workers: usize,
     worker_data: Vec<Vec<f32>>,
     transport: &Transport,
 ) -> Result<(Vec<Vec<f32>>, EngineReport), String> {
-    assert_eq!(worker_data.len(), workers);
-    let n = worker_data[0].len();
-    assert!(n % (workers * BLOCK) == 0);
-    let chunk = n / workers;
+    threaded_allreduce_with(
+        workers,
+        worker_data,
+        transport,
+        DEFAULT_TRANSPORT_CHUNK,
+        2,
+    )
+}
+
+/// [`threaded_allreduce`] with explicit transport chunk size and
+/// per-link channel depth (chunks buffered in flight).  Chunking and
+/// depth change scheduling, never results.
+pub fn threaded_allreduce_with(
+    workers: usize,
+    worker_data: Vec<Vec<f32>>,
+    transport: &Transport,
+    chunk_symbols: usize,
+    channel_depth: usize,
+) -> Result<(Vec<Vec<f32>>, EngineReport), String> {
+    // Same input contract as the simulated ring (one set of rules for
+    // both backends — their bit-for-bit agreement depends on it).
+    super::validate_workers(workers, worker_data.len())?;
+    let chunk = super::validate_tensors(&worker_data, workers)?;
 
     // Resolve the codec once (fitting qlc tables is expensive); the
     // read-only handle is shared by every worker, each of which keeps
@@ -48,106 +65,102 @@ pub fn threaded_allreduce(
     let shared_codec: Arc<Option<CodecHandle>> =
         Arc::new(transport.resolve()?);
 
-    // Ring links: worker i sends to i+1.
-    let mut senders: Vec<Option<SyncSender<Msg>>> = Vec::new();
-    let mut receivers: Vec<Option<Receiver<Msg>>> =
-        (0..workers).map(|_| None).collect();
-    for i in 0..workers {
-        let (tx, rx) = sync_channel::<Msg>(2);
-        senders.push(Some(tx));
-        receivers[(i + 1) % workers] = Some(rx);
-    }
+    // Ring links: endpoint i sends to i+1, receives from i-1.
+    let endpoints = threaded::ring(workers, channel_depth);
 
     let start = Instant::now();
     let mut handles = Vec::new();
-    for (i, data) in worker_data.into_iter().enumerate() {
-        let tx = senders[i].take().unwrap();
-        let rx = receivers[i].take().unwrap();
+    for ((i, data), mut link) in
+        worker_data.into_iter().enumerate().zip(endpoints)
+    {
         let codec = shared_codec.clone();
-        handles.push(thread::spawn(move || -> (usize, Vec<f32>, u64, u64) {
-            // One session pair per worker, reused for every hop.
-            let mut enc = (*codec).as_ref().map(|h| h.encoder());
-            let mut dec = (*codec).as_ref().map(|h| h.decoder());
-            let quant = BlockQuantizer::new(Variant::ExmY);
-            let mut chunks: Vec<Vec<f32>> =
-                data.chunks(chunk).map(|c| c.to_vec()).collect();
-            let w = chunks.len();
-            let mut wire = 0u64;
-            let mut raw = 0u64;
+        handles.push(thread::spawn(
+            move || -> Result<(usize, Vec<f32>, u64, u64), String> {
+                // One session pair per worker, reused for every hop.
+                let mut enc = (*codec).as_ref().map(|h| h.encoder());
+                let mut dec = (*codec).as_ref().map(|h| h.decoder());
+                let quant = BlockQuantizer::new(Variant::ExmY);
+                let mut chunks: Vec<Vec<f32>> =
+                    data.chunks(chunk).map(|c| c.to_vec()).collect();
+                let w = chunks.len();
+                let mut wire = 0u64;
+                let mut raw = 0u64;
 
-            // --- Reduce-scatter (quantize per hop). ------------------
-            for s in 0..w - 1 {
-                let send_ci = (i + w - s) % w;
-                let q = quant.quantize(&chunks[send_ci]);
-                let payload = encode_payload(&mut enc, &q.symbols);
-                wire += (payload.len() + q.scales.len()) as u64;
-                raw += (q.symbols.len() + q.scales.len()) as u64;
-                tx.send(Msg {
-                    payload,
-                    scales: q.scales,
-                    n_symbols: q.symbols.len(),
-                })
-                .expect("ring send");
-
-                let msg = rx.recv().expect("ring recv");
-                let symbols =
-                    decode_payload(&mut dec, &msg.payload, msg.n_symbols);
-                let incoming = quant.dequantize(&QuantizedBlocks {
-                    symbols,
-                    scales: msg.scales,
-                    variant: Variant::ExmY,
-                });
-                let recv_ci = (i + w - s - 1) % w;
-                for (acc, v) in chunks[recv_ci].iter_mut().zip(&incoming) {
-                    *acc += v;
+                // --- Reduce-scatter (quantize per hop). --------------
+                for s in 0..w - 1 {
+                    let send_ci = (i + w - s) % w;
+                    let q = quant.quantize(&chunks[send_ci]);
+                    let ex = exchange_hop(
+                        &mut link,
+                        &mut enc,
+                        &mut dec,
+                        &q.symbols,
+                        &q.scales,
+                        chunk_symbols,
+                    )?;
+                    wire += ex.wire_bytes;
+                    raw += ex.raw_bytes;
+                    let incoming = quant.dequantize(&QuantizedBlocks {
+                        symbols: ex.symbols,
+                        scales: ex.scales,
+                        variant: Variant::ExmY,
+                    });
+                    let recv_ci = (i + w - s - 1) % w;
+                    for (acc, v) in chunks[recv_ci].iter_mut().zip(&incoming)
+                    {
+                        *acc += v;
+                    }
                 }
-            }
 
-            // --- Final quantization of the owned chunk. ---------------
-            let owned_ci = (i + 1) % w;
-            let mut quantized: Vec<Option<QuantizedBlocks>> =
-                (0..w).map(|_| None).collect();
-            quantized[owned_ci] = Some(quant.quantize(&chunks[owned_ci]));
+                // --- Final quantization of the owned chunk. ----------
+                let owned_ci = (i + 1) % w;
+                let mut quantized: Vec<Option<QuantizedBlocks>> =
+                    (0..w).map(|_| None).collect();
+                quantized[owned_ci] =
+                    Some(quant.quantize(&chunks[owned_ci]));
 
-            // --- All-gather (lossless circulation). -------------------
-            for s in 0..w - 1 {
-                let send_ci = (i + 1 + w - s) % w;
-                let q = quantized[send_ci].as_ref().expect("ring invariant");
-                let payload = encode_payload(&mut enc, &q.symbols);
-                wire += (payload.len() + q.scales.len()) as u64;
-                raw += (q.symbols.len() + q.scales.len()) as u64;
-                tx.send(Msg {
-                    payload,
-                    scales: q.scales.clone(),
-                    n_symbols: q.symbols.len(),
-                })
-                .expect("ring send");
+                // --- All-gather (lossless circulation). --------------
+                for s in 0..w - 1 {
+                    let send_ci = (i + 1 + w - s) % w;
+                    let q = quantized[send_ci]
+                        .as_ref()
+                        .ok_or("ring invariant broken")?;
+                    let ex = exchange_hop(
+                        &mut link,
+                        &mut enc,
+                        &mut dec,
+                        &q.symbols,
+                        &q.scales,
+                        chunk_symbols,
+                    )?;
+                    wire += ex.wire_bytes;
+                    raw += ex.raw_bytes;
+                    let recv_ci = (i + w - s) % w;
+                    quantized[recv_ci] = Some(QuantizedBlocks {
+                        symbols: ex.symbols,
+                        scales: ex.scales,
+                        variant: Variant::ExmY,
+                    });
+                }
 
-                let msg = rx.recv().expect("ring recv");
-                let symbols =
-                    decode_payload(&mut dec, &msg.payload, msg.n_symbols);
-                let recv_ci = (i + w - s) % w;
-                quantized[recv_ci] = Some(QuantizedBlocks {
-                    symbols,
-                    scales: msg.scales,
-                    variant: Variant::ExmY,
-                });
-            }
-
-            let result: Vec<f32> = (0..w)
-                .flat_map(|ci| {
-                    quant.dequantize(quantized[ci].as_ref().expect("complete"))
-                })
-                .collect();
-            (i, result, wire, raw)
-        }));
+                let result: Vec<f32> = (0..w)
+                    .flat_map(|ci| {
+                        quant.dequantize(
+                            quantized[ci].as_ref().expect("complete"),
+                        )
+                    })
+                    .collect();
+                Ok((i, result, wire, raw))
+            },
+        ));
     }
 
     let mut results: Vec<Vec<f32>> = vec![Vec::new(); workers];
     let mut wire_bytes = 0u64;
     let mut raw_bytes = 0u64;
     for h in handles {
-        let (i, data, wire, raw) = h.join().map_err(|_| "worker panicked")?;
+        let (i, data, wire, raw) =
+            h.join().map_err(|_| "worker panicked")??;
         results[i] = data;
         wire_bytes += wire;
         raw_bytes += raw;
@@ -156,6 +169,7 @@ pub fn threaded_allreduce(
         wall_time_s: start.elapsed().as_secs_f64(),
         wire_bytes,
         raw_bytes,
+        chunk_symbols,
     };
     Ok((results, report))
 }
@@ -165,6 +179,7 @@ mod tests {
     use super::*;
     use crate::collective::{ring_allreduce, Fabric};
     use crate::data::{TensorGen, TensorKind};
+    use crate::formats::BLOCK;
     use crate::stats::Histogram;
     use crate::util::rng::Rng;
 
@@ -212,6 +227,44 @@ mod tests {
     }
 
     #[test]
+    fn chunked_pipeline_agrees_with_whole_payload() {
+        // Many small chunks through shallow channels vs one chunk per
+        // hop: identical results, identical raw byte accounting.
+        let w = 4;
+        let data = make_data(w, w * BLOCK * 16, 5);
+        let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+        let mut rng = Rng::new(6);
+        let cal = Histogram::from_symbols(&gen.symbols(&mut rng, 128 * BLOCK));
+        let transport = Transport::Compressed {
+            codec: "huffman".into(),
+            calibration: Box::new(cal),
+        };
+        let (whole, whole_rep) = threaded_allreduce_with(
+            w,
+            data.clone(),
+            &transport,
+            usize::MAX,
+            2,
+        )
+        .unwrap();
+        for (chunk_symbols, depth) in [(BLOCK, 1), (3 * BLOCK, 2), (256, 4)] {
+            let (chunked, rep) = threaded_allreduce_with(
+                w,
+                data.clone(),
+                &transport,
+                chunk_symbols,
+                depth,
+            )
+            .unwrap();
+            assert_eq!(
+                chunked, whole,
+                "chunk_symbols={chunk_symbols} depth={depth}"
+            );
+            assert_eq!(rep.raw_bytes, whole_rep.raw_bytes);
+        }
+    }
+
+    #[test]
     fn scales_with_worker_count() {
         for w in [2usize, 3, 8] {
             let data = make_data(w, w * BLOCK * 2, w as u64);
@@ -222,5 +275,26 @@ mod tests {
                 assert_eq!(r, &results[0], "w={w}: workers must agree");
             }
         }
+    }
+
+    #[test]
+    fn malformed_inputs_are_errors_not_panics() {
+        // Wrong worker count.
+        let data = make_data(3, 3 * BLOCK * 2, 11);
+        assert!(threaded_allreduce(4, data, &Transport::Raw).is_err());
+        // Non-divisible tensor size.
+        let ragged = vec![vec![0f32; 4 * BLOCK * 2 + 3]; 4];
+        assert!(threaded_allreduce(4, ragged, &Transport::Raw).is_err());
+        // Empty tensors.
+        let empty = vec![Vec::new(); 4];
+        assert!(threaded_allreduce(4, empty, &Transport::Raw).is_err());
+        // Mismatched lengths.
+        let mut uneven = make_data(4, 4 * BLOCK * 2, 12);
+        uneven[1].truncate(4 * BLOCK);
+        assert!(threaded_allreduce(4, uneven, &Transport::Raw).is_err());
+        // Zero workers.
+        assert!(
+            threaded_allreduce(0, Vec::new(), &Transport::Raw).is_err()
+        );
     }
 }

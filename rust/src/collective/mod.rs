@@ -3,19 +3,23 @@
 //! operations are typically bounded by network bandwidth; lossless
 //! compression is an effective way to reduce the network traffic").
 //!
-//! [`Fabric`] models a homogeneous ring of `W` workers with per-link
-//! bandwidth and latency.  The ops move *real* data (symbols are
-//! actually encoded, shipped, decoded, reduced) so byte counts are
-//! exact; time is `latency + bytes/bandwidth` per hop plus measured
-//! codec wall-time, with all links in a step running in parallel.
+//! The ops move *real* data (symbols are actually encoded, shipped,
+//! decoded, reduced) so byte counts are exact.  Since PR 2 every hop
+//! goes through the chunk-granular [`crate::transport`] layer: a hop's
+//! message streams as independent byte-aligned chunks, so decode of
+//! chunk `k` overlaps the transfer of chunk `k+1`.  Each step reports
+//! both the serial time (`latency + bytes/bandwidth` plus measured
+//! codec wall-time, as before) and the pipelined time under the
+//! transport's hop recurrence — the gap between them is the codec cost
+//! the pipeline hides behind the wire.
 //!
 //! Transport framing: codec tables are fitted **apriori** and shared by
 //! both endpoints (paper §7: per-tensor-type LUTs "obtained apriori"),
 //! so hops carry payload bits only — no per-hop table headers.  Codecs
 //! are resolved once per collective through the
 //! [`crate::codecs::CodecRegistry`], and every hop reuses one
-//! [`EncoderSession`]/[`DecoderSession`] pair per endpoint, so the
-//! hot path allocates no codec state.
+//! [`crate::codecs::EncoderSession`]/[`crate::codecs::DecoderSession`]
+//! pair per endpoint, so the hot path allocates no codec state.
 //!
 //! All-reduce semantics: the reduce-scatter phase necessarily
 //! re-quantizes partial sums each hop (the wire format is e4m3);
@@ -24,38 +28,21 @@
 //! losslessly.  All workers therefore finish with bit-identical
 //! results.
 //!
-//! [`engine`] runs the same ring on real threads and channels.
+//! [`engine`] runs the same chunk-granular ring on real threads and
+//! bounded channels (the transport's threaded backend).
 
 pub mod engine;
 
 use std::time::Instant;
 
-use crate::codecs::{
-    CodecHandle, CodecRegistry, DecoderSession, EncoderSession,
-};
+use crate::codecs::{CodecHandle, CodecRegistry};
 use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
 use crate::stats::Histogram;
+use crate::transport::{
+    exchange_hop, HopTrace, SimLink, DEFAULT_TRANSPORT_CHUNK,
+};
 
-/// Network model.
-#[derive(Clone, Copy, Debug)]
-pub struct Fabric {
-    pub workers: usize,
-    /// Per-link bandwidth, bytes/second.
-    pub link_bandwidth: f64,
-    /// Per-hop latency, seconds.
-    pub link_latency: f64,
-}
-
-impl Fabric {
-    /// A pod-like default: 8 workers, 50 GB/s links, 2 µs hops.
-    pub fn pod(workers: usize) -> Self {
-        Fabric { workers, link_bandwidth: 50e9, link_latency: 2e-6 }
-    }
-
-    fn wire_time(&self, bytes: usize) -> f64 {
-        self.link_latency + bytes as f64 / self.link_bandwidth
-    }
-}
+pub use crate::transport::Fabric;
 
 /// What travels on each hop.
 #[derive(Clone, Debug)]
@@ -101,11 +88,26 @@ pub struct CollectiveReport {
     pub network_time_s: f64,
     /// Measured encode+decode wall time on the critical path.
     pub codec_time_s: f64,
+    /// Modelled wall time with chunk-granular pipelining: decode of
+    /// chunk `k` overlaps transfer of chunk `k+1`, so codec time hides
+    /// behind the wire.  Always ≤ [`Self::total_time_s`].
+    pub pipelined_time_s: f64,
 }
 
 impl CollectiveReport {
+    /// Non-pipelined total: wire time plus codec time back-to-back.
     pub fn total_time_s(&self) -> f64 {
         self.network_time_s + self.codec_time_s
+    }
+
+    /// Fraction of the serial total hidden by chunk pipelining,
+    /// in `[0, 1)`.
+    pub fn overlap_savings(&self) -> f64 {
+        let total = self.total_time_s();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.pipelined_time_s / total).max(0.0)
     }
 
     pub fn compression_ratio(&self) -> f64 {
@@ -113,57 +115,115 @@ impl CollectiveReport {
     }
 }
 
-/// Payload-only encode (tables pre-shared; see module docs).  The
-/// session is `None` for raw transport.
-pub(crate) fn encode_payload(
-    enc: &mut Option<EncoderSession<'_>>,
-    symbols: &[u8],
-) -> Vec<u8> {
-    match enc {
-        None => symbols.to_vec(),
-        Some(s) => s.encode_chunk_to_vec(symbols),
+// ---------------------------------------------------------------------------
+// Validation (malformed inputs are errors, not panics)
+
+fn validate_workers(fabric_w: usize, provided: usize) -> Result<(), String> {
+    if fabric_w == 0 {
+        return Err("collective requires at least one worker".into());
+    }
+    if provided != fabric_w {
+        return Err(format!(
+            "expected one entry per worker ({fabric_w}), got {provided}"
+        ));
+    }
+    Ok(())
+}
+
+/// Check the per-worker tensors are non-empty, equal-length and split
+/// into `w` block-aligned chunks; returns the chunk length.
+fn validate_tensors(
+    worker_data: &[Vec<f32>],
+    w: usize,
+) -> Result<usize, String> {
+    let n = worker_data[0].len();
+    if worker_data.iter().any(|d| d.len() != n) {
+        return Err("worker tensors must all have the same length".into());
+    }
+    if n == 0 || n % (w * BLOCK) != 0 {
+        return Err(format!(
+            "tensor length {n} must be a non-zero multiple of \
+             workers × block = {}",
+            w * BLOCK
+        ));
+    }
+    Ok(n / w)
+}
+
+// ---------------------------------------------------------------------------
+// Per-step time aggregation
+
+/// Accumulates the busiest-link times of one ring step (all links run
+/// in parallel, so the step costs the max over links).
+#[derive(Default)]
+struct StepAgg {
+    max_bytes: usize,
+    max_codec: f64,
+    max_pipelined: f64,
+}
+
+impl StepAgg {
+    /// Fold one link's hop into the step.  `extra_codec_s` is serial
+    /// per-link codec work outside the chunk pipeline (quantize /
+    /// dequantize), charged to both the serial and pipelined models.
+    fn add_link(
+        &mut self,
+        fabric: &Fabric,
+        trace: &HopTrace,
+        wire_bytes: usize,
+        extra_codec_s: f64,
+    ) {
+        self.max_bytes = self.max_bytes.max(wire_bytes);
+        self.max_codec = self.max_codec.max(trace.codec_s() + extra_codec_s);
+        self.max_pipelined = self
+            .max_pipelined
+            .max(trace.pipelined_s(fabric) + extra_codec_s);
+    }
+
+    /// Commit the step into the report; `hops` scales the wire terms
+    /// for multi-hop deliveries (the all-to-all's distance-`s` sends).
+    fn commit(self, fabric: &Fabric, hops: usize, report: &mut CollectiveReport) {
+        let wire = fabric.wire_time(self.max_bytes) * hops as f64;
+        report.steps += 1;
+        report.network_time_s += wire;
+        report.codec_time_s += self.max_codec;
+        // The recurrence can exceed the serial sum only by float
+        // rounding; clamp so the ≤ invariant is exact.
+        let serial = wire + self.max_codec;
+        let pipelined = (self.max_pipelined
+            + fabric.wire_time(self.max_bytes) * (hops - 1) as f64)
+            .min(serial);
+        report.pipelined_time_s += pipelined;
     }
 }
 
-pub(crate) fn decode_payload(
-    dec: &mut Option<DecoderSession<'_>>,
-    payload: &[u8],
-    n_symbols: usize,
-) -> Vec<u8> {
-    match dec {
-        None => payload.to_vec(),
-        Some(s) => s
-            .decode_chunk_to_vec(payload, n_symbols)
-            .expect("transport payload"),
-    }
-}
-
-/// Bytes on the wire for a hop: payload + one byte per 32-symbol block
-/// (E8M0-style shared scale, as in the OCP MX formats).
-pub(crate) fn hop_bytes(payload_len: usize, n_blocks: usize) -> usize {
-    payload_len + n_blocks
-}
-
-/// Ring all-reduce over per-worker f32 tensors. Returns the reduced
-/// tensor per worker (bit-identical across workers) plus the report.
+/// Ring all-reduce over per-worker f32 tensors with the default
+/// transport chunk granularity.  Returns the reduced tensor per worker
+/// (bit-identical across workers) plus the report.
 pub fn ring_allreduce(
     fabric: &Fabric,
     worker_data: &[Vec<f32>],
     transport: &Transport,
 ) -> Result<(Vec<Vec<f32>>, CollectiveReport), String> {
+    ring_allreduce_with(fabric, worker_data, transport, DEFAULT_TRANSPORT_CHUNK)
+}
+
+/// [`ring_allreduce`] with an explicit transport chunk size (symbols
+/// per pipelined chunk).  Chunking changes timing, never results.
+pub fn ring_allreduce_with(
+    fabric: &Fabric,
+    worker_data: &[Vec<f32>],
+    transport: &Transport,
+    chunk_symbols: usize,
+) -> Result<(Vec<Vec<f32>>, CollectiveReport), String> {
     let w = fabric.workers;
-    assert_eq!(worker_data.len(), w, "one tensor per worker");
-    let n = worker_data[0].len();
-    assert!(worker_data.iter().all(|d| d.len() == n));
-    assert!(
-        n % (w * BLOCK) == 0,
-        "tensor must split into w block-aligned chunks"
-    );
-    let chunk = n / w;
+    validate_workers(w, worker_data.len())?;
+    let chunk = validate_tensors(worker_data, w)?;
     let quant = BlockQuantizer::new(Variant::ExmY);
     let handle = transport.resolve()?;
     let mut enc = handle.as_ref().map(|h| h.encoder());
     let mut dec = handle.as_ref().map(|h| h.decoder());
+    let mut link = SimLink::new();
 
     let mut report = CollectiveReport {
         op: "allreduce".into(),
@@ -179,25 +239,33 @@ pub fn ring_allreduce(
 
     // --- Reduce-scatter: quantize per hop, dequantize + add. ---------
     for s in 0..w - 1 {
-        let mut max_bytes = 0usize;
-        let mut max_codec = 0f64;
+        let mut agg = StepAgg::default();
         let mut deliveries: Vec<(usize, usize, Vec<f32>)> = Vec::new();
         for i in 0..w {
             let ci = (i + w - s) % w;
             let t0 = Instant::now();
             let q = quant.quantize(&chunks[i][ci]);
-            let payload = encode_payload(&mut enc, &q.symbols);
-            let symbols = decode_payload(&mut dec, &payload, q.symbols.len());
+            let quant_s = t0.elapsed().as_secs_f64();
+            let ex = exchange_hop(
+                &mut link,
+                &mut enc,
+                &mut dec,
+                &q.symbols,
+                &q.scales,
+                chunk_symbols,
+            )?;
+            report.wire_bytes += ex.wire_bytes;
+            report.raw_bytes += ex.raw_bytes;
+            let wire = ex.wire_bytes as usize;
+            let trace = ex.trace;
+            let t1 = Instant::now();
             let received = quant.dequantize(&QuantizedBlocks {
-                symbols,
-                scales: q.scales.clone(),
+                symbols: ex.symbols,
+                scales: ex.scales,
                 variant: Variant::ExmY,
             });
-            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
-            let bytes = hop_bytes(payload.len(), q.scales.len());
-            report.wire_bytes += bytes as u64;
-            report.raw_bytes += (q.symbols.len() + q.scales.len()) as u64;
-            max_bytes = max_bytes.max(bytes);
+            let dequant_s = t1.elapsed().as_secs_f64();
+            agg.add_link(fabric, &trace, wire, quant_s + dequant_s);
             deliveries.push(((i + 1) % w, ci, received));
         }
         for (dst, ci, data) in deliveries {
@@ -205,9 +273,7 @@ pub fn ring_allreduce(
                 *acc += v;
             }
         }
-        report.steps += 1;
-        report.network_time_s += fabric.wire_time(max_bytes);
-        report.codec_time_s += max_codec;
+        agg.commit(fabric, 1, &mut report);
     }
 
     // --- Final quantization of each worker's owned chunk. ------------
@@ -227,26 +293,28 @@ pub fn ring_allreduce(
         have[i][ci] = Some(q);
     }
     for s in 0..w - 1 {
-        let mut max_bytes = 0usize;
-        let mut max_codec = 0f64;
+        let mut agg = StepAgg::default();
         let mut deliveries: Vec<(usize, usize, QuantizedBlocks)> = Vec::new();
         for i in 0..w {
             let ci = (i + 1 + w - s) % w;
-            let q = have[i][ci].as_ref().expect("ring invariant");
-            let t0 = Instant::now();
-            let payload = encode_payload(&mut enc, &q.symbols);
-            let symbols = decode_payload(&mut dec, &payload, q.symbols.len());
-            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
-            let bytes = hop_bytes(payload.len(), q.scales.len());
-            report.wire_bytes += bytes as u64;
-            report.raw_bytes += (q.symbols.len() + q.scales.len()) as u64;
-            max_bytes = max_bytes.max(bytes);
+            let q = have[i][ci].as_ref().ok_or("ring invariant broken")?;
+            let ex = exchange_hop(
+                &mut link,
+                &mut enc,
+                &mut dec,
+                &q.symbols,
+                &q.scales,
+                chunk_symbols,
+            )?;
+            report.wire_bytes += ex.wire_bytes;
+            report.raw_bytes += ex.raw_bytes;
+            agg.add_link(fabric, &ex.trace, ex.wire_bytes as usize, 0.0);
             deliveries.push((
                 (i + 1) % w,
                 ci,
                 QuantizedBlocks {
-                    symbols,
-                    scales: q.scales.clone(),
+                    symbols: ex.symbols,
+                    scales: ex.scales,
                     variant: Variant::ExmY,
                 },
             ));
@@ -254,9 +322,7 @@ pub fn ring_allreduce(
         for (dst, ci, q) in deliveries {
             have[dst][ci] = Some(q);
         }
-        report.steps += 1;
-        report.network_time_s += fabric.wire_time(max_bytes);
-        report.codec_time_s += max_codec;
+        agg.commit(fabric, 1, &mut report);
     }
 
     // Materialize: every worker dequantizes the same symbol streams.
@@ -282,10 +348,17 @@ pub fn ring_allgather(
     transport: &Transport,
 ) -> Result<(Vec<u8>, CollectiveReport), String> {
     let w = fabric.workers;
-    assert_eq!(worker_symbols.len(), w);
+    validate_workers(w, worker_symbols.len())?;
+    if worker_scales.len() != w {
+        return Err(format!(
+            "expected one scale vector per worker ({w}), got {}",
+            worker_scales.len()
+        ));
+    }
     let handle = transport.resolve()?;
     let mut enc = handle.as_ref().map(|h| h.encoder());
     let mut dec = handle.as_ref().map(|h| h.decoder());
+    let mut link = SimLink::new();
     let mut report = CollectiveReport {
         op: "allgather".into(),
         transport: transport.name(),
@@ -301,31 +374,31 @@ pub fn ring_allgather(
         .collect();
 
     for s in 0..w - 1 {
-        let mut max_bytes = 0usize;
-        let mut max_codec = 0f64;
+        let mut agg = StepAgg::default();
         let mut deliveries: Vec<(usize, usize, Vec<u8>)> = Vec::new();
         for i in 0..w {
             let shard = (i + w - s) % w;
-            let symbols =
-                have[i][shard].as_ref().expect("ring invariant").clone();
-            let t0 = Instant::now();
-            let payload = encode_payload(&mut enc, &symbols);
-            let decoded = decode_payload(&mut dec, &payload, symbols.len());
-            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
-            let bytes =
-                hop_bytes(payload.len(), worker_scales[shard].len());
-            report.wire_bytes += bytes as u64;
-            report.raw_bytes +=
-                (symbols.len() + worker_scales[shard].len()) as u64;
-            max_bytes = max_bytes.max(bytes);
-            deliveries.push(((i + 1) % w, shard, decoded));
+            let symbols = have[i][shard]
+                .as_ref()
+                .ok_or("ring invariant broken")?
+                .clone();
+            let ex = exchange_hop(
+                &mut link,
+                &mut enc,
+                &mut dec,
+                &symbols,
+                &worker_scales[shard],
+                DEFAULT_TRANSPORT_CHUNK,
+            )?;
+            report.wire_bytes += ex.wire_bytes;
+            report.raw_bytes += ex.raw_bytes;
+            agg.add_link(fabric, &ex.trace, ex.wire_bytes as usize, 0.0);
+            deliveries.push(((i + 1) % w, shard, ex.symbols));
         }
         for (dst, shard, data) in deliveries {
             have[dst][shard] = Some(data);
         }
-        report.steps += 1;
-        report.network_time_s += fabric.wire_time(max_bytes);
-        report.codec_time_s += max_codec;
+        agg.commit(fabric, 1, &mut report);
     }
 
     let gathered: Vec<u8> = (0..w)
@@ -347,11 +420,14 @@ pub fn alltoall(
     transport: &Transport,
 ) -> Result<(Vec<Vec<Vec<u8>>>, CollectiveReport), String> {
     let w = fabric.workers;
-    assert_eq!(shards.len(), w);
-    assert!(shards.iter().all(|s| s.len() == w));
+    validate_workers(w, shards.len())?;
+    if shards.iter().any(|s| s.len() != w) {
+        return Err(format!("each worker must hold {w} shards"));
+    }
     let handle = transport.resolve()?;
     let mut enc = handle.as_ref().map(|h| h.encoder());
     let mut dec = handle.as_ref().map(|h| h.decoder());
+    let mut link = SimLink::new();
     let mut report = CollectiveReport {
         op: "alltoall".into(),
         transport: transport.name(),
@@ -362,26 +438,99 @@ pub fn alltoall(
         out[i][i] = shards[i][i].clone();
     }
     for s in 1..w {
-        let mut max_bytes = 0usize;
-        let mut max_codec = 0f64;
+        let mut agg = StepAgg::default();
         for i in 0..w {
             let dst = (i + s) % w;
             let data = &shards[i][dst];
-            let t0 = Instant::now();
-            let payload = encode_payload(&mut enc, data);
-            let decoded = decode_payload(&mut dec, &payload, data.len());
-            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
-            report.wire_bytes += payload.len() as u64;
-            report.raw_bytes += data.len() as u64;
-            max_bytes = max_bytes.max(payload.len());
-            out[dst][i] = decoded;
+            let ex = exchange_hop(
+                &mut link,
+                &mut enc,
+                &mut dec,
+                data,
+                &[],
+                DEFAULT_TRANSPORT_CHUNK,
+            )?;
+            report.wire_bytes += ex.wire_bytes;
+            report.raw_bytes += ex.raw_bytes;
+            agg.add_link(fabric, &ex.trace, ex.wire_bytes as usize, 0.0);
+            out[dst][i] = ex.symbols;
         }
-        report.steps += 1;
         // s ring hops to reach distance s.
-        report.network_time_s += fabric.wire_time(max_bytes) * s as f64;
-        report.codec_time_s += max_codec;
+        agg.commit(fabric, s, &mut report);
     }
     Ok((out, report))
+}
+
+/// Ring reduce-scatter: each worker ends with the fully-reduced shard
+/// it owns (`(i + 1) mod w`), quantized.  The first phase of
+/// [`ring_allreduce`], exposed standalone (ZeRO-style sharded
+/// optimizers consume exactly this).
+pub fn ring_reduce_scatter(
+    fabric: &Fabric,
+    worker_data: &[Vec<f32>],
+    transport: &Transport,
+) -> Result<(Vec<(usize, QuantizedBlocks)>, CollectiveReport), String> {
+    let w = fabric.workers;
+    validate_workers(w, worker_data.len())?;
+    let chunk = validate_tensors(worker_data, w)?;
+    let quant = BlockQuantizer::new(Variant::ExmY);
+    let handle = transport.resolve()?;
+    let mut enc = handle.as_ref().map(|h| h.encoder());
+    let mut dec = handle.as_ref().map(|h| h.decoder());
+    let mut link = SimLink::new();
+    let mut report = CollectiveReport {
+        op: "reduce_scatter".into(),
+        transport: transport.name(),
+        ..Default::default()
+    };
+    let mut chunks: Vec<Vec<Vec<f32>>> = worker_data
+        .iter()
+        .map(|d| d.chunks(chunk).map(|c| c.to_vec()).collect())
+        .collect();
+    for s in 0..w - 1 {
+        let mut agg = StepAgg::default();
+        let mut deliveries: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        for i in 0..w {
+            let ci = (i + w - s) % w;
+            let t0 = Instant::now();
+            let q = quant.quantize(&chunks[i][ci]);
+            let quant_s = t0.elapsed().as_secs_f64();
+            let ex = exchange_hop(
+                &mut link,
+                &mut enc,
+                &mut dec,
+                &q.symbols,
+                &q.scales,
+                DEFAULT_TRANSPORT_CHUNK,
+            )?;
+            report.wire_bytes += ex.wire_bytes;
+            report.raw_bytes += ex.raw_bytes;
+            let wire = ex.wire_bytes as usize;
+            let trace = ex.trace;
+            let t1 = Instant::now();
+            let received = quant.dequantize(&QuantizedBlocks {
+                symbols: ex.symbols,
+                scales: ex.scales,
+                variant: Variant::ExmY,
+            });
+            let dequant_s = t1.elapsed().as_secs_f64();
+            agg.add_link(fabric, &trace, wire, quant_s + dequant_s);
+            deliveries.push(((i + 1) % w, ci, received));
+        }
+        for (dst, ci, data) in deliveries {
+            for (acc, v) in chunks[dst][ci].iter_mut().zip(&data) {
+                *acc += v;
+            }
+        }
+        agg.commit(fabric, 1, &mut report);
+    }
+    let owned = (0..w)
+        .map(|i| {
+            let ci = (i + 1) % w;
+            (ci, quant.quantize(&chunks[i][ci]))
+        })
+        .collect();
+    Ok((owned, report))
 }
 
 #[cfg(test)]
@@ -474,6 +623,90 @@ mod tests {
     }
 
     #[test]
+    fn chunk_granularity_never_changes_results() {
+        // Whole-payload (usize::MAX), default and tiny transport
+        // chunks must produce bit-identical reductions and identical
+        // raw byte accounting.
+        let fabric = Fabric::pod(4);
+        let data = random_data(4, 4 * BLOCK * 8, 6);
+        let transport = Transport::Compressed {
+            codec: "huffman".into(),
+            calibration: calib(6),
+        };
+        let (whole, whole_rep) =
+            ring_allreduce_with(&fabric, &data, &transport, usize::MAX)
+                .unwrap();
+        for chunk_symbols in [BLOCK, 100, DEFAULT_TRANSPORT_CHUNK] {
+            let (chunked, rep) = ring_allreduce_with(
+                &fabric, &data, &transport, chunk_symbols,
+            )
+            .unwrap();
+            assert_eq!(chunked, whole, "chunk_symbols={chunk_symbols}");
+            assert_eq!(rep.raw_bytes, whole_rep.raw_bytes);
+        }
+    }
+
+    #[test]
+    fn pipelined_time_within_serial_budget() {
+        let fabric = Fabric::ethernet(4);
+        let data = random_data(4, 4 * BLOCK * 64, 7);
+        for transport in [
+            Transport::Raw,
+            Transport::Compressed {
+                codec: "qlc".into(),
+                calibration: calib(7),
+            },
+        ] {
+            let (_, rep) = ring_allreduce_with(
+                &fabric, &data, &transport, 4 * BLOCK,
+            )
+            .unwrap();
+            assert!(rep.pipelined_time_s > 0.0);
+            assert!(
+                rep.pipelined_time_s <= rep.total_time_s(),
+                "{} > {} via {}",
+                rep.pipelined_time_s,
+                rep.total_time_s(),
+                transport.name()
+            );
+            let savings = rep.overlap_savings();
+            assert!((0.0..1.0).contains(&savings), "{savings}");
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_are_errors_not_panics() {
+        let fabric = Fabric::pod(4);
+        // Wrong worker count.
+        let three = random_data(3, 4 * BLOCK * 4, 8);
+        assert!(ring_allreduce(&fabric, &three, &Transport::Raw).is_err());
+        assert!(
+            ring_reduce_scatter(&fabric, &three, &Transport::Raw).is_err()
+        );
+        // Non-divisible tensor size.
+        let ragged = random_data(4, 4 * BLOCK * 4 + 1, 9);
+        assert!(ring_allreduce(&fabric, &ragged, &Transport::Raw).is_err());
+        // Empty tensors.
+        let empty = vec![Vec::new(); 4];
+        assert!(ring_allreduce(&fabric, &empty, &Transport::Raw).is_err());
+        // Mismatched lengths between workers.
+        let mut uneven = random_data(4, 4 * BLOCK * 4, 10);
+        uneven[2].truncate(4 * BLOCK * 2);
+        assert!(ring_allreduce(&fabric, &uneven, &Transport::Raw).is_err());
+        // Zero workers.
+        let none = Fabric { workers: 0, ..Fabric::pod(1) };
+        assert!(ring_allreduce(&none, &[], &Transport::Raw).is_err());
+        // Allgather / alltoall shape errors.
+        let syms = vec![vec![1u8; 64]; 3];
+        let scales = vec![vec![1.0f32; 2]; 3];
+        assert!(
+            ring_allgather(&fabric, &syms, &scales, &Transport::Raw).is_err()
+        );
+        let shards = vec![vec![vec![0u8; 8]; 3]; 4];
+        assert!(alltoall(&fabric, &shards, &Transport::Raw).is_err());
+    }
+
+    #[test]
     fn allreduce_compression_reduces_wire_bytes() {
         let fabric = Fabric::pod(4);
         let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
@@ -539,6 +772,7 @@ mod tests {
             }
         }
         assert_eq!(report.steps, 2);
+        assert!(report.pipelined_time_s <= report.total_time_s());
     }
 
     #[test]
@@ -555,73 +789,6 @@ mod tests {
         assert!(r_slow.network_time_s > r_fast.network_time_s);
         assert_eq!(r_slow.wire_bytes, r_fast.wire_bytes);
     }
-}
-
-/// Ring reduce-scatter: each worker ends with the fully-reduced shard
-/// it owns (`(i + 1) mod w`), quantized.  The first phase of
-/// [`ring_allreduce`], exposed standalone (ZeRO-style sharded
-/// optimizers consume exactly this).
-pub fn ring_reduce_scatter(
-    fabric: &Fabric,
-    worker_data: &[Vec<f32>],
-    transport: &Transport,
-) -> Result<(Vec<(usize, QuantizedBlocks)>, CollectiveReport), String> {
-    let w = fabric.workers;
-    assert_eq!(worker_data.len(), w);
-    let n = worker_data[0].len();
-    assert!(n % (w * BLOCK) == 0);
-    let chunk = n / w;
-    let quant = BlockQuantizer::new(Variant::ExmY);
-    let handle = transport.resolve()?;
-    let mut enc = handle.as_ref().map(|h| h.encoder());
-    let mut dec = handle.as_ref().map(|h| h.decoder());
-    let mut report = CollectiveReport {
-        op: "reduce_scatter".into(),
-        transport: transport.name(),
-        ..Default::default()
-    };
-    let mut chunks: Vec<Vec<Vec<f32>>> = worker_data
-        .iter()
-        .map(|d| d.chunks(chunk).map(|c| c.to_vec()).collect())
-        .collect();
-    for s in 0..w - 1 {
-        let mut max_bytes = 0usize;
-        let mut max_codec = 0f64;
-        let mut deliveries: Vec<(usize, usize, Vec<f32>)> = Vec::new();
-        for i in 0..w {
-            let ci = (i + w - s) % w;
-            let t0 = Instant::now();
-            let q = quant.quantize(&chunks[i][ci]);
-            let payload = encode_payload(&mut enc, &q.symbols);
-            let symbols = decode_payload(&mut dec, &payload, q.symbols.len());
-            let received = quant.dequantize(&QuantizedBlocks {
-                symbols,
-                scales: q.scales.clone(),
-                variant: Variant::ExmY,
-            });
-            max_codec = max_codec.max(t0.elapsed().as_secs_f64());
-            let bytes = hop_bytes(payload.len(), q.scales.len());
-            report.wire_bytes += bytes as u64;
-            report.raw_bytes += (q.symbols.len() + q.scales.len()) as u64;
-            max_bytes = max_bytes.max(bytes);
-            deliveries.push(((i + 1) % w, ci, received));
-        }
-        for (dst, ci, data) in deliveries {
-            for (acc, v) in chunks[dst][ci].iter_mut().zip(&data) {
-                *acc += v;
-            }
-        }
-        report.steps += 1;
-        report.network_time_s += fabric.wire_time(max_bytes);
-        report.codec_time_s += max_codec;
-    }
-    let owned = (0..w)
-        .map(|i| {
-            let ci = (i + 1) % w;
-            (ci, quant.quantize(&chunks[i][ci]))
-        })
-        .collect();
-    Ok((owned, report))
 }
 
 #[cfg(test)]

@@ -6,6 +6,8 @@ use crate::util::json::Json;
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct PipelineMetrics {
     pub jobs: u64,
+    /// Jobs that emitted QLS1 shard bodies (subset of `jobs`).
+    pub shards: u64,
     pub input_bytes: u64,
     pub output_bytes: u64,
     /// Total codec wall time across workers (not wall-clock elapsed).
@@ -32,6 +34,7 @@ impl PipelineMetrics {
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("jobs", self.jobs as usize)
+            .set("shards", self.shards as usize)
             .set("input_bytes", self.input_bytes as usize)
             .set("output_bytes", self.output_bytes as usize)
             .set("codec_seconds", self.codec_seconds)
@@ -55,6 +58,7 @@ mod tests {
     fn compressibility_math() {
         let m = PipelineMetrics {
             jobs: 1,
+            shards: 0,
             input_bytes: 100,
             output_bytes: 85,
             codec_seconds: 0.5,
@@ -67,12 +71,14 @@ mod tests {
     fn json_report_fields() {
         let m = PipelineMetrics {
             jobs: 3,
+            shards: 2,
             input_bytes: 1000,
             output_bytes: 900,
             codec_seconds: 1.0,
         };
         let j = m.to_json();
         assert_eq!(j.get("jobs").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
         assert!(j.get("compressibility").unwrap().as_f64().unwrap() > 0.09);
     }
 }

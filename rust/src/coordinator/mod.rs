@@ -1,12 +1,22 @@
 //! Threaded leader/worker compression pipeline — the L3 service that
 //! puts the codec on a request path: tensors arrive as symbol streams,
-//! are chunked, compressed in parallel by a worker pool with bounded
-//! queues (backpressure), and re-assembled in order by the leader.
+//! the leader places *descriptors* (byte ranges into a shared stream,
+//! or shard slots of a [`frame::ShardManifest`]) on a worker pool with
+//! bounded queues (backpressure), and re-assembles the results in
+//! order.
 //!
-//! The paper's contribution is the codec itself, so this coordinator is
-//! deliberately thin but real: ordered delivery, worker-count scaling,
-//! per-job metrics, and failure containment are all exercised by the
-//! tests and the `pipeline` benches.
+//! Workers never receive copied payload bytes: a job is `(seq, range)`
+//! into an `Arc`-shared stream, so the only per-job allocation is the
+//! compressed output.  In shard mode each worker emits one QLS1 shard
+//! body and the leader assembles the manifest — the sharded analogue
+//! of the frame path, feeding placement-aware consumers (one shard per
+//! worker/NUMA node) without re-serializing the codec tables per
+//! shard.
+//!
+//! The paper's contribution is the codec itself, so this coordinator
+//! is deliberately thin but real: ordered delivery, worker-count
+//! scaling, per-job metrics, and failure containment are all exercised
+//! by the tests and the `pipeline` benches.
 
 pub mod metrics;
 
@@ -15,8 +25,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Instant;
 
-use crate::codecs::frame::{self, FrameOptions};
-use crate::codecs::CodecRegistry;
+use crate::codecs::frame::{self, FrameOptions, ShardManifest};
+use crate::codecs::{chunk_spans, CodecRegistry};
 use crate::stats::Histogram;
 use metrics::PipelineMetrics;
 
@@ -36,14 +46,20 @@ impl Default for PipelineConfig {
     }
 }
 
+/// A placement descriptor: which slice of the shared stream to
+/// compress, and into which container.
 struct Job {
     seq: usize,
-    symbols: Vec<u8>,
+    stream: Arc<Vec<u8>>,
+    start: usize,
+    len: usize,
+    /// `Some(index)` → emit a QLS1 shard body; `None` → a QLF2 frame.
+    shard: Option<u32>,
 }
 
 struct Done {
     seq: usize,
-    frame: Vec<u8>,
+    bytes: Vec<u8>,
     n_symbols: usize,
     codec_seconds: f64,
 }
@@ -55,6 +71,11 @@ pub struct Pipeline {
     handles: Vec<JoinHandle<()>>,
     metrics: Arc<Mutex<PipelineMetrics>>,
     chunk_size: usize,
+    /// The codec's wire identity (tag + table header), captured from
+    /// the first worker's resolve — all the leader needs to assemble a
+    /// [`ShardManifest`] without fitting its own tables.
+    wire_tag: u8,
+    wire_header: Vec<u8>,
 }
 
 impl Pipeline {
@@ -65,12 +86,20 @@ impl Pipeline {
         codec: &str,
         calibration: &Histogram,
     ) -> Result<Pipeline, String> {
-        assert!(config.workers >= 1);
-        assert!(config.chunk_size >= 1);
+        if config.workers == 0 {
+            return Err("pipeline requires at least one worker".into());
+        }
+        if config.chunk_size == 0 {
+            return Err("pipeline chunk size must be non-zero".into());
+        }
+        if config.queue_depth == 0 {
+            return Err("pipeline queue depth must be non-zero".into());
+        }
         let (tx, rx) = sync_channel::<Job>(config.queue_depth);
         let (tx_done, rx_done) = sync_channel::<Done>(config.queue_depth * 2);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Mutex::new(PipelineMetrics::default()));
+        let mut wire_identity: Option<(u8, Vec<u8>)> = None;
 
         let mut handles = Vec::with_capacity(config.workers);
         for _ in 0..config.workers {
@@ -78,6 +107,12 @@ impl Pipeline {
             // on the hot path) and emits serial single-frame output —
             // the pool, not the frame layer, is the parallelism here.
             let handle = CodecRegistry::global().resolve(codec, calibration)?;
+            if wire_identity.is_none() {
+                wire_identity = Some((
+                    handle.wire_tag(),
+                    handle.wire_header().to_vec(),
+                ));
+            }
             let rx = rx.clone();
             let tx_done = tx_done.clone();
             let metrics = metrics.clone();
@@ -87,25 +122,37 @@ impl Pipeline {
                     guard.recv()
                 };
                 let Ok(job) = job else { break };
+                let slice = &job.stream[job.start..job.start + job.len];
                 let t0 = Instant::now();
-                let frame = frame::compress_with(
-                    &handle,
-                    &job.symbols,
-                    &FrameOptions::serial(),
-                );
+                let bytes = match job.shard {
+                    None => frame::compress_with(
+                        &handle,
+                        slice,
+                        &FrameOptions::serial(),
+                    ),
+                    Some(index) => frame::compress_shard(
+                        &handle,
+                        index,
+                        slice,
+                        &FrameOptions::serial(),
+                    ),
+                };
                 let dt = t0.elapsed().as_secs_f64();
                 {
                     let mut m = metrics.lock().expect("metrics");
                     m.jobs += 1;
-                    m.input_bytes += job.symbols.len() as u64;
-                    m.output_bytes += frame.len() as u64;
+                    if job.shard.is_some() {
+                        m.shards += 1;
+                    }
+                    m.input_bytes += job.len as u64;
+                    m.output_bytes += bytes.len() as u64;
                     m.codec_seconds += dt;
                 }
                 if tx_done
                     .send(Done {
                         seq: job.seq,
-                        frame,
-                        n_symbols: job.symbols.len(),
+                        bytes,
+                        n_symbols: job.len,
                         codec_seconds: dt,
                     })
                     .is_err()
@@ -114,30 +161,42 @@ impl Pipeline {
                 }
             }));
         }
+        let (wire_tag, wire_header) =
+            wire_identity.expect("at least one worker resolved");
         Ok(Pipeline {
             tx: Some(tx),
             rx_done,
             handles,
             metrics,
             chunk_size: config.chunk_size,
+            wire_tag,
+            wire_header,
         })
     }
 
-    /// Compress a full stream: chunk, fan out, re-assemble in order.
-    /// Returns the ordered frames.
-    pub fn compress_stream(&self, symbols: &[u8]) -> Vec<Vec<u8>> {
+    /// Fan descriptors out to the pool and re-assemble results in
+    /// sequence order.  `descs` are `(start, len, shard)` ranges into
+    /// `stream`.
+    fn run_jobs(
+        &self,
+        stream: Arc<Vec<u8>>,
+        descs: Vec<(usize, usize, Option<u32>)>,
+    ) -> Vec<Vec<u8>> {
         let tx = self.tx.as_ref().expect("pipeline already shut down");
-        let chunks: Vec<&[u8]> = symbols.chunks(self.chunk_size).collect();
-        let total = chunks.len();
+        let total = descs.len();
         let mut results: Vec<Option<Vec<u8>>> = vec![None; total];
         let mut submitted = 0usize;
         let mut received = 0usize;
         // Interleave submit/drain so bounded queues never deadlock.
         while received < total {
             while submitted < total {
+                let (start, len, shard) = descs[submitted];
                 let job = Job {
                     seq: submitted,
-                    symbols: chunks[submitted].to_vec(),
+                    stream: stream.clone(),
+                    start,
+                    len,
+                    shard,
                 };
                 match tx.try_send(job) {
                     Ok(()) => submitted += 1,
@@ -146,11 +205,47 @@ impl Pipeline {
                 }
             }
             let done = self.rx_done.recv().expect("pipeline drain");
-            results[done.seq] = Some(done.frame);
+            results[done.seq] = Some(done.bytes);
             let _ = (done.n_symbols, done.codec_seconds);
             received += 1;
         }
         results.into_iter().map(|r| r.expect("all chunks done")).collect()
+    }
+
+    /// Compress a full stream: chunk, fan out, re-assemble in order.
+    /// Returns the ordered frames.
+    pub fn compress_stream(&self, symbols: &[u8]) -> Vec<Vec<u8>> {
+        let stream = Arc::new(symbols.to_vec());
+        let descs = chunk_spans(symbols.len(), self.chunk_size)
+            .into_iter()
+            .map(|(a, b)| (a, b - a, None))
+            .collect();
+        self.run_jobs(stream, descs)
+    }
+
+    /// Compress a stream into `n_shards` placement units: each worker
+    /// job is one shard descriptor, the leader assembles the shared
+    /// [`ShardManifest`].  Output is identical to
+    /// [`frame::compress_sharded`] with the same codec — worker count
+    /// never changes bytes.
+    pub fn compress_sharded(
+        &self,
+        symbols: &[u8],
+        n_shards: usize,
+    ) -> (ShardManifest, Vec<Vec<u8>>) {
+        let plan = frame::shard_plan(symbols.len(), n_shards);
+        let stream = Arc::new(symbols.to_vec());
+        let descs = plan
+            .iter()
+            .map(|d| (d.start, d.n_symbols, Some(d.index as u32)))
+            .collect();
+        let bodies = self.run_jobs(stream, descs);
+        let manifest = ShardManifest::new(
+            self.wire_tag,
+            self.wire_header.clone(),
+            plan.iter().map(|d| d.n_symbols as u64).collect(),
+        );
+        (manifest, bodies)
     }
 
     /// Convenience: compress and decompress back, returning the
@@ -227,6 +322,41 @@ mod tests {
     }
 
     #[test]
+    fn sharded_pipeline_matches_direct_encode() {
+        let (symbols, hist) = sample(256 * 1024, 7);
+        let pipe = Pipeline::new(
+            PipelineConfig { workers: 3, chunk_size: 4096, queue_depth: 4 },
+            "qlc",
+            &hist,
+        )
+        .unwrap();
+        let (manifest, shards) = pipe.compress_sharded(&symbols, 5);
+        // Worker pool and direct scoped-thread encode agree byte for
+        // byte (and so does the manifest).
+        let handle =
+            CodecRegistry::global().resolve("qlc", &hist).unwrap();
+        let (direct_manifest, direct_shards) = frame::compress_sharded(
+            &handle,
+            &symbols,
+            5,
+            &FrameOptions::serial(),
+        );
+        assert_eq!(manifest, direct_manifest);
+        assert_eq!(shards, direct_shards);
+        // And the sharded set reassembles.
+        let back = frame::decompress_sharded(
+            &manifest,
+            &shards,
+            &FrameOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(back, symbols);
+        let m = pipe.metrics();
+        assert_eq!(m.shards, 5);
+        assert_eq!(m.jobs, 5);
+    }
+
+    #[test]
     fn metrics_accumulate() {
         let (symbols, hist) = sample(64 * 1024, 3);
         let pipe = Pipeline::new(
@@ -239,6 +369,7 @@ mod tests {
         let m = pipe.metrics();
         assert_eq!(m.jobs as usize, frames.len());
         assert_eq!(m.input_bytes as usize, symbols.len());
+        assert_eq!(m.shards, 0, "frame jobs are not shard jobs");
         assert!(m.output_bytes > 0);
         assert!(m.codec_seconds > 0.0);
         assert!(m.compressibility() > 0.0, "skewed data must compress");
@@ -286,5 +417,17 @@ mod tests {
         let (_, hist) = sample(1024, 7);
         assert!(Pipeline::new(PipelineConfig::default(), "lzma", &hist)
             .is_err());
+    }
+
+    #[test]
+    fn malformed_config_is_an_error_not_a_panic() {
+        let (_, hist) = sample(1024, 8);
+        for cfg in [
+            PipelineConfig { workers: 0, ..Default::default() },
+            PipelineConfig { chunk_size: 0, ..Default::default() },
+            PipelineConfig { queue_depth: 0, ..Default::default() },
+        ] {
+            assert!(Pipeline::new(cfg, "raw", &hist).is_err());
+        }
     }
 }

@@ -13,10 +13,15 @@
 //! * [`data`] — tensor/symbol generators calibrated to the paper's
 //!   distributions;
 //! * [`hw`] — cycle-level decoder hardware model (LUT vs tree);
+//! * [`transport`] — chunk-granular transport layer: the pipelined-hop
+//!   fabric simulator and the threaded bounded-channel backend;
 //! * [`collective`] — bandwidth-bound collective ops with compression
 //!   on the transport;
-//! * [`coordinator`] — threaded leader/worker compression pipeline;
-//! * [`runtime`] — PJRT executor for the AOT JAX/Pallas artifacts;
+//! * [`coordinator`] — threaded leader/worker compression pipeline
+//!   placing frame/shard descriptors on a worker pool;
+//! * `runtime` — PJRT executor for the AOT JAX/Pallas artifacts
+//!   (feature `pjrt`; needs the `xla` + `anyhow` crates, see
+//!   `Cargo.toml`);
 //! * [`util`] — offline-environment substrates (RNG, JSON, CLI, bench,
 //!   property testing).
 
@@ -28,6 +33,8 @@ pub mod data;
 pub mod formats;
 pub mod hw;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod stats;
+pub mod transport;
 pub mod util;

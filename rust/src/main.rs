@@ -17,7 +17,7 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use qlc::codecs::frame;
+use qlc::codecs::frame::{self, FrameOptions, ShardManifest};
 use qlc::codecs::huffman::HuffmanCodec;
 use qlc::codecs::CodecRegistry;
 use qlc::codecs::qlc::{optimizer, QlcCodec};
@@ -28,6 +28,7 @@ use qlc::data::{calibrate_generator, TensorGen, TensorKind};
 use qlc::formats::Variant;
 use qlc::hw;
 use qlc::report;
+#[cfg(feature = "pjrt")]
 use qlc::runtime::{inputs::InputStats, Runtime};
 use qlc::stats::Histogram;
 use qlc::util::cli::{self, Args};
@@ -36,8 +37,9 @@ use qlc::util::rng::Rng;
 
 const VALUE_OPTS: &[&str] = &[
     "fig", "table", "codec", "kind", "n", "seed", "scale", "workers", "op",
-    "size", "bandwidth-gbps", "latency-us", "out", "artifacts", "steps",
-    "chunk", "queue", "target-entropy", "knob", "dir", "name", "prefix",
+    "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
+    "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
+    "name", "prefix",
 ];
 
 fn main() -> ExitCode {
@@ -86,16 +88,23 @@ USAGE: qlc <subcommand> [options]
   compress   <in> <out> --codec raw|huffman|qlc|qlc-t1|qlc-t2|elias-*|egK
              [--qlf1]   (legacy single-payload frame; default is
                          chunked QLF2, decoded in parallel)
-  decompress <in> <out>   (reads QLF1 and QLF2)
+             [--shards N]  (QLM1 manifest at <out> + <out>.shardK files,
+                            one table header shared by all shards)
+  decompress <in> <out>   (reads QLF1, QLF2 and QLM1 manifests —
+                           shard files are found next to the manifest)
   datagen    --kind K --n SYMBOLS --out DIR [--seed S]
              [--target-entropy H | --knob X]
   optimize   [--kind K | --dir TRACES --name NAME] [--prefix P] [--json]
   collective --op allreduce|allgather --workers W --size N --codec C
+             [--fabric pod|superpod|ethernet]
              [--bandwidth-gbps G] [--latency-us L] [--json]
+             (reports serial + chunk-pipelined time and overlap savings)
   hw         [--seed S] [--n SYMBOLS] [--json]
   formats    [--n SYMBOLS] [--seed S]      cross-eXmY-format QLC sweep
   harvest    [--artifacts DIR] --out DIR [--steps N] [--seed S]
+             (needs a build with --features pjrt)
   serve      [--codec C] [--workers W] [--chunk BYTES] [--n SYMBOLS]
+             [--shards N]  (emit a sharded manifest instead of frames)
 ";
 
 // ---------------------------------------------------------------------------
@@ -169,6 +178,43 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
     };
     let codec = args.opt_or("codec", "qlc");
     let handle = CodecRegistry::global().resolve(&codec, &hist)?;
+    let n_shards = args.opt_usize("shards", 0).map_err(|e| e.to_string())?;
+    if n_shards > 0 {
+        if args.has_flag("qlf1") {
+            return Err(
+                "--qlf1 and --shards are mutually exclusive (shards use \
+                 the QLM1/QLS1 formats)"
+                    .into(),
+            );
+        }
+        // Sharded: QLM1 manifest at <out>, shard bodies alongside.
+        let (manifest, shards) = frame::compress_sharded(
+            &handle,
+            &symbols,
+            n_shards,
+            &FrameOptions::default(),
+        );
+        std::fs::write(&output, manifest.to_bytes())
+            .map_err(|e| e.to_string())?;
+        let mut total = 0usize;
+        for (i, body) in shards.iter().enumerate() {
+            total += body.len();
+            std::fs::write(shard_path(&output, i), body)
+                .map_err(|e| e.to_string())?;
+        }
+        println!(
+            "{} -> {} + {} shards: {} -> {} bytes ({:.1}% compressibility, \
+             codec {})",
+            input.display(),
+            output.display(),
+            shards.len(),
+            symbols.len(),
+            total,
+            (1.0 - total as f64 / symbols.len().max(1) as f64) * 100.0,
+            codec
+        );
+        return Ok(());
+    }
     // QLF2 chunked frames by default (parallel encode/decode);
     // `--qlf1` writes the legacy single-payload format.
     let framed = if args.has_flag("qlf1") {
@@ -192,7 +238,27 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
 fn cmd_decompress(args: &Args) -> Result<(), String> {
     let [input, output] = two_paths(args)?;
     let framed = std::fs::read(&input).map_err(|e| e.to_string())?;
-    let symbols = frame::decompress(&framed).map_err(|e| e.to_string())?;
+    let symbols = if framed.len() >= 4 && framed[0..4] == frame::MAGIC_MANIFEST
+    {
+        // Sharded: the input is a manifest; shard files sit beside it.
+        let manifest =
+            ShardManifest::parse(&framed).map_err(|e| e.to_string())?;
+        let mut shards = Vec::with_capacity(manifest.n_shards());
+        for i in 0..manifest.n_shards() {
+            let path = shard_path(&input, i);
+            shards.push(std::fs::read(&path).map_err(|e| {
+                format!("{}: {e}", path.display())
+            })?);
+        }
+        frame::decompress_sharded(
+            &manifest,
+            &shards,
+            &FrameOptions::default(),
+        )
+        .map_err(|e| e.to_string())?
+    } else {
+        frame::decompress(&framed).map_err(|e| e.to_string())?
+    };
     std::fs::write(&output, &symbols).map_err(|e| e.to_string())?;
     println!(
         "{} -> {}: {} -> {} bytes",
@@ -202,6 +268,13 @@ fn cmd_decompress(args: &Args) -> Result<(), String> {
         symbols.len()
     );
     Ok(())
+}
+
+/// `<base>.shardK` sibling path for shard `k` of a manifest at `base`.
+fn shard_path(base: &Path, k: usize) -> PathBuf {
+    let mut name = base.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".shard{k}"));
+    base.with_file_name(name)
 }
 
 fn two_paths(args: &Args) -> Result<[PathBuf; 2], String> {
@@ -267,18 +340,27 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
 fn cmd_collective(args: &Args) -> Result<(), String> {
     let op = args.opt_or("op", "allreduce");
     let workers = args.opt_usize("workers", 8).map_err(|e| e.to_string())?;
+    if workers == 0 {
+        return Err("--workers must be at least 1".into());
+    }
     let size = args.opt_usize("size", 1 << 20).map_err(|e| e.to_string())?;
     let codec = args.opt_or("codec", "qlc");
-    let bw = args
-        .opt_f64("bandwidth-gbps", 50.0)
-        .map_err(|e| e.to_string())?;
-    let lat = args.opt_f64("latency-us", 2.0).map_err(|e| e.to_string())?;
     let seed = args.opt_u64("seed", 1).map_err(|e| e.to_string())?;
-    let fabric = Fabric {
-        workers,
-        link_bandwidth: bw * 1e9,
-        link_latency: lat * 1e-6,
-    };
+    // Start from a preset (default "pod": 50 GB/s, 2 µs — the old CLI
+    // defaults), then let explicit flags override its numbers.
+    let fabric_name = args.opt_or("fabric", "pod");
+    let mut fabric = Fabric::preset(&fabric_name, workers)?;
+    if args.opt("bandwidth-gbps").is_some() {
+        let bw = args
+            .opt_f64("bandwidth-gbps", 50.0)
+            .map_err(|e| e.to_string())?;
+        fabric.link_bandwidth = bw * 1e9;
+    }
+    if args.opt("latency-us").is_some() {
+        let lat =
+            args.opt_f64("latency-us", 2.0).map_err(|e| e.to_string())?;
+        fabric.link_latency = lat * 1e-6;
+    }
     let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
     let mut rng = Rng::new(seed);
     let n = size - size % (workers * 32);
@@ -312,6 +394,10 @@ fn cmd_collective(args: &Args) -> Result<(), String> {
     let j = Json::obj()
         .set("op", report.op.as_str())
         .set("transport", report.transport.as_str())
+        .set("fabric", fabric_name.as_str())
+        // Effective link numbers (presets can be overridden by flags).
+        .set("link_bandwidth_gbps", fabric.link_bandwidth / 1e9)
+        .set("link_latency_us", fabric.link_latency * 1e6)
         .set("workers", workers)
         .set("steps", report.steps)
         .set("wire_bytes", report.wire_bytes as usize)
@@ -319,22 +405,28 @@ fn cmd_collective(args: &Args) -> Result<(), String> {
         .set("compression_ratio", report.compression_ratio())
         .set("network_time_s", report.network_time_s)
         .set("codec_time_s", report.codec_time_s)
-        .set("total_time_s", report.total_time_s());
+        .set("total_time_s", report.total_time_s())
+        .set("pipelined_time_s", report.pipelined_time_s)
+        .set("overlap_savings", report.overlap_savings());
     if args.has_flag("json") {
         println!("{}", j.to_string_pretty());
     } else {
         println!(
-            "{} x{} via {}: {} steps, wire {} B (ratio {:.3}), network \
-             {:.3} ms, codec {:.3} ms, total {:.3} ms",
+            "{} x{} via {} on {}: {} steps, wire {} B (ratio {:.3}), \
+             network {:.3} ms, codec {:.3} ms, total {:.3} ms, pipelined \
+             {:.3} ms ({:.0}% overlap savings)",
             report.op,
             workers,
             report.transport,
+            fabric_name,
             report.steps,
             report.wire_bytes,
             report.compression_ratio(),
             report.network_time_s * 1e3,
             report.codec_time_s * 1e3,
             report.total_time_s() * 1e3,
+            report.pipelined_time_s * 1e3,
+            report.overlap_savings() * 100.0,
         );
     }
     Ok(())
@@ -432,6 +524,14 @@ fn cmd_formats(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_harvest(_args: &Args) -> Result<(), String> {
+    Err("harvest needs the PJRT runtime: rebuild with --features pjrt \
+         (and the xla/anyhow dependencies; see rust/Cargo.toml)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_harvest(args: &Args) -> Result<(), String> {
     let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
     let out = PathBuf::from(args.opt("out").ok_or("harvest requires --out")?);
@@ -491,14 +591,25 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         &codec,
         &hist,
     )?;
+    let n_shards = args.opt_usize("shards", 0).map_err(|e| e.to_string())?;
     let t0 = std::time::Instant::now();
-    let frames = pipe.compress_stream(&symbols);
+    let (label, units) = if n_shards > 0 {
+        let (manifest, shards) = pipe.compress_sharded(&symbols, n_shards);
+        println!(
+            "manifest: {} shards, {} header bytes shared once",
+            manifest.n_shards(),
+            manifest.wire_header().len()
+        );
+        ("shards", shards.len())
+    } else {
+        ("jobs", pipe.compress_stream(&symbols).len())
+    };
     let wall = t0.elapsed().as_secs_f64();
     let m = pipe.metrics();
     println!(
-        "pipeline: {} jobs, {} -> {} bytes ({:.1}% compressibility)\n\
+        "pipeline: {} {label}, {} -> {} bytes ({:.1}% compressibility)\n\
          wall {:.3}s  ({:.1} MB/s end-to-end, {:.1} MB/s aggregate codec)",
-        frames.len(),
+        units,
         m.input_bytes,
         m.output_bytes,
         m.compressibility() * 100.0,

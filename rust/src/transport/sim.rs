@@ -1,0 +1,167 @@
+//! Token-stepped fabric simulator: an in-memory FIFO [`SimLink`] plus
+//! the [`HopTrace`] that replays measured per-chunk codec times against
+//! a [`Fabric`] under the pipelined-hop recurrence (module docs of
+//! [`crate::transport`]).
+
+use std::collections::VecDeque;
+
+use super::{ChunkMsg, Fabric, Link};
+
+/// Measured stage times of one transport chunk.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChunkTiming {
+    /// Encode wall time, seconds.
+    pub encode_s: f64,
+    /// Bytes this chunk puts on the wire (payload + any scale bytes).
+    pub wire_bytes: usize,
+    /// Decode wall time, seconds.
+    pub decode_s: f64,
+}
+
+/// Per-chunk stage times of one hop, in chunk order.
+#[derive(Clone, Debug, Default)]
+pub struct HopTrace {
+    pub chunks: Vec<ChunkTiming>,
+}
+
+impl HopTrace {
+    pub fn push(&mut self, t: ChunkTiming) {
+        self.chunks.push(t);
+    }
+
+    /// Attach the decode time for chunk `idx` (recorded when the chunk
+    /// comes back off the link, which may lag its send).
+    pub fn set_decode(&mut self, idx: usize, decode_s: f64) {
+        match self.chunks.get_mut(idx) {
+            Some(c) => c.decode_s += decode_s,
+            // Peer sent more chunks than we did: account the decode
+            // as its own stage entry so no time is dropped.
+            None => self.chunks.push(ChunkTiming {
+                encode_s: 0.0,
+                wire_bytes: 0,
+                decode_s,
+            }),
+        }
+    }
+
+    /// Total bytes on the wire across all chunks.
+    pub fn wire_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.wire_bytes as u64).sum()
+    }
+
+    /// Total codec (encode + decode) wall time, no overlap.
+    pub fn codec_s(&self) -> f64 {
+        self.chunks.iter().map(|c| c.encode_s + c.decode_s).sum()
+    }
+
+    /// Non-pipelined hop time: whole-payload encode, then one
+    /// transfer, then whole-payload decode.
+    pub fn serial_s(&self, fabric: &Fabric) -> f64 {
+        fabric.wire_time(self.wire_bytes() as usize) + self.codec_s()
+    }
+
+    /// Pipelined hop time under the three-stage recurrence: encoder,
+    /// link and decoder each process chunks in order; transfer of
+    /// chunk `k+1` overlaps decode of chunk `k`.  Latency is charged
+    /// once, on the first transfer.  Never exceeds [`Self::serial_s`]
+    /// (up to float rounding).
+    pub fn pipelined_s(&self, fabric: &Fabric) -> f64 {
+        let mut enc_done = 0.0f64;
+        let mut xfer_done = 0.0f64;
+        let mut dec_done = 0.0f64;
+        for (k, c) in self.chunks.iter().enumerate() {
+            enc_done += c.encode_s;
+            let latency = if k == 0 { fabric.link_latency } else { 0.0 };
+            xfer_done = enc_done.max(xfer_done)
+                + latency
+                + c.wire_bytes as f64 / fabric.link_bandwidth;
+            dec_done = xfer_done.max(dec_done) + c.decode_s;
+        }
+        dec_done
+    }
+}
+
+/// In-memory FIFO link for the fabric simulator: `send` enqueues,
+/// `recv` dequeues.  The simulator plays both endpoints of a hop, so
+/// what comes back is this hop's own message after the encode/decode
+/// round-trip; the caller delivers it to the downstream worker.
+#[derive(Debug, Default)]
+pub struct SimLink {
+    queue: VecDeque<ChunkMsg>,
+}
+
+impl SimLink {
+    pub fn new() -> Self {
+        SimLink { queue: VecDeque::new() }
+    }
+}
+
+impl Link for SimLink {
+    fn send(&mut self, msg: ChunkMsg) -> Result<(), String> {
+        self.queue.push_back(msg);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<ChunkMsg, String> {
+        self.queue
+            .pop_front()
+            .ok_or_else(|| "sim link: receive from empty queue".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_link_is_fifo() {
+        let mut link = SimLink::new();
+        for seq in 0..3u32 {
+            link.send(ChunkMsg {
+                seq,
+                last: seq == 2,
+                n_symbols: 1,
+                payload: vec![seq as u8],
+                scales: Vec::new(),
+            })
+            .unwrap();
+        }
+        for seq in 0..3u32 {
+            assert_eq!(link.recv().unwrap().seq, seq);
+        }
+        assert!(link.recv().is_err());
+    }
+
+    #[test]
+    fn wire_bound_hop_hides_codec_time() {
+        // Chunk wire time 10 µs dominates 1 µs codec stages: the
+        // pipelined hop approaches pure wire time while the serial hop
+        // pays wire + codec in full.
+        let fabric =
+            Fabric { workers: 2, link_bandwidth: 1e9, link_latency: 0.0 };
+        let mut trace = HopTrace::default();
+        let n = 32;
+        for _ in 0..n {
+            trace.push(ChunkTiming {
+                encode_s: 1e-6,
+                wire_bytes: 10_000, // 10 µs at 1 GB/s
+                decode_s: 1e-6,
+            });
+        }
+        let wire = fabric.wire_time(trace.wire_bytes() as usize);
+        let pipelined = trace.pipelined_s(&fabric);
+        let serial = trace.serial_s(&fabric);
+        // Serial pays all 64 µs of codec; pipelined hides all but the
+        // first encode and last decode behind the wire.
+        assert!(serial >= wire + 63e-6, "{serial} vs {wire}");
+        assert!(pipelined <= wire + 3e-6, "{pipelined} vs {wire}");
+    }
+
+    #[test]
+    fn decode_for_unknown_chunk_still_counted() {
+        let mut trace = HopTrace::default();
+        trace.set_decode(5, 1e-3);
+        assert_eq!(trace.chunks.len(), 1);
+        assert!((trace.codec_s() - 1e-3).abs() < 1e-12);
+    }
+}

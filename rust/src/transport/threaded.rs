@@ -1,0 +1,128 @@
+//! Threaded transport backend: bounded per-chunk channels between real
+//! worker threads.  [`ring`] wires `W` endpoints so that endpoint `i`
+//! sends to `i+1` and receives from `i-1`; each endpoint moves into
+//! its worker thread and speaks [`super::exchange_hop`].
+//!
+//! Channels are bounded (`depth` chunks) so a fast encoder cannot run
+//! unboundedly ahead of a slow decoder — backpressure, not buffering,
+//! paces the pipeline, exactly like a NIC send queue.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use super::{ChunkMsg, Link};
+
+/// One worker's view of the ring: a bounded sender to the downstream
+/// neighbour and a receiver from the upstream neighbour.
+pub struct ThreadedEndpoint {
+    tx: SyncSender<ChunkMsg>,
+    rx: Receiver<ChunkMsg>,
+}
+
+impl Link for ThreadedEndpoint {
+    fn send(&mut self, msg: ChunkMsg) -> Result<(), String> {
+        self.tx
+            .send(msg)
+            .map_err(|_| "ring send: downstream peer hung up".to_string())
+    }
+
+    fn recv(&mut self) -> Result<ChunkMsg, String> {
+        self.rx
+            .recv()
+            .map_err(|_| "ring recv: upstream peer hung up".to_string())
+    }
+}
+
+/// Build the ring topology: endpoint `i` sends to `(i+1) % workers`.
+/// `depth` is the per-link chunk buffer (must be ≥ 1 for the lockstep
+/// exchange to make progress).
+pub fn ring(workers: usize, depth: usize) -> Vec<ThreadedEndpoint> {
+    let depth = depth.max(1);
+    let mut senders: Vec<Option<SyncSender<ChunkMsg>>> =
+        (0..workers).map(|_| None).collect();
+    let mut receivers: Vec<Option<Receiver<ChunkMsg>>> =
+        (0..workers).map(|_| None).collect();
+    for i in 0..workers {
+        let (tx, rx) = sync_channel::<ChunkMsg>(depth);
+        senders[i] = Some(tx);
+        receivers[(i + 1) % workers] = Some(rx);
+    }
+    senders
+        .into_iter()
+        .zip(receivers)
+        .map(|(tx, rx)| ThreadedEndpoint {
+            tx: tx.expect("ring wiring"),
+            rx: rx.expect("ring wiring"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::exchange_hop;
+
+    #[test]
+    fn ring_routes_to_downstream_neighbour() {
+        let endpoints = ring(3, 2);
+        let mut joined = Vec::new();
+        for (i, mut ep) in endpoints.into_iter().enumerate() {
+            joined.push(std::thread::spawn(move || {
+                let symbols = vec![i as u8; 64];
+                let mut enc = None;
+                let mut dec = None;
+                let ex = exchange_hop(
+                    &mut ep, &mut enc, &mut dec, &symbols, &[], 16,
+                )
+                .unwrap();
+                // Worker i receives from worker (i + 2) % 3 upstream.
+                let upstream = ((i + 3 - 1) % 3) as u8;
+                assert_eq!(ex.symbols, vec![upstream; 64]);
+            }));
+        }
+        for j in joined {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn many_chunks_through_shallow_buffers_do_not_deadlock() {
+        // 64 chunks per hop through depth-1 channels: the lockstep
+        // alternation must stream them without deadlock.
+        let w = 4;
+        let endpoints = ring(w, 1);
+        let mut joined = Vec::new();
+        for (i, mut ep) in endpoints.into_iter().enumerate() {
+            joined.push(std::thread::spawn(move || {
+                let symbols: Vec<u8> =
+                    (0..4096).map(|k| (k % 251) as u8 ^ i as u8).collect();
+                let mut enc = None;
+                let mut dec = None;
+                let ex = exchange_hop(
+                    &mut ep, &mut enc, &mut dec, &symbols, &[], 64,
+                )
+                .unwrap();
+                assert_eq!(ex.symbols.len(), symbols.len());
+            }));
+        }
+        for j in joined {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn hung_up_peer_surfaces_as_error() {
+        let mut endpoints = ring(2, 1);
+        let b = endpoints.pop().unwrap();
+        let mut a = endpoints.pop().unwrap();
+        drop(b); // peer gone: its receiver and sender both drop
+        let msg = ChunkMsg {
+            seq: 0,
+            last: true,
+            n_symbols: 1,
+            payload: vec![1],
+            scales: Vec::new(),
+        };
+        assert!(a.send(msg).is_err());
+        assert!(a.recv().is_err());
+    }
+}

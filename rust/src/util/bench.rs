@@ -156,6 +156,31 @@ pub fn fast_config() -> BenchConfig {
     }
 }
 
+/// True when `QLC_BENCH_SMOKE` is set in the environment: benches
+/// shrink their inputs and measurement windows so CI can execute every
+/// bench binary once, cheaply, and bench code cannot rot.
+pub fn smoke() -> bool {
+    std::env::var_os("QLC_BENCH_SMOKE").is_some()
+}
+
+/// `full` normally, `reduced` under [`smoke`].
+pub fn smoke_scaled(full: usize, reduced: usize) -> usize {
+    if smoke() {
+        reduced
+    } else {
+        full
+    }
+}
+
+/// [`fast_config`] under [`smoke`], the default config otherwise.
+pub fn smoke_config() -> BenchConfig {
+    if smoke() {
+        fast_config()
+    } else {
+        BenchConfig::default()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

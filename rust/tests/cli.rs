@@ -71,6 +71,93 @@ fn compress_decompress_file_roundtrip() {
 }
 
 #[test]
+fn sharded_compress_decompress_roundtrip() {
+    let dir = tmp("sharded");
+    let input = dir.join("in.bin");
+    let data: Vec<u8> = (0..60_000u64)
+        .map(|i| (i.wrapping_mul(7 * i + 3) % 89 % 48) as u8)
+        .collect();
+    std::fs::write(&input, &data).unwrap();
+    let manifest = dir.join("out.qlm");
+    let restored = dir.join("out.bin");
+    let out = qlc()
+        .args([
+            "compress",
+            input.to_str().unwrap(),
+            manifest.to_str().unwrap(),
+            "--codec",
+            "qlc",
+            "--shards",
+            "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    assert!(manifest.exists());
+    for k in 0..3 {
+        assert!(dir.join(format!("out.qlm.shard{k}")).exists(), "shard {k}");
+    }
+    let out = qlc()
+        .args([
+            "decompress",
+            manifest.to_str().unwrap(),
+            restored.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    assert_eq!(std::fs::read(&restored).unwrap(), data);
+    // Legacy single-payload frames and shard sets are exclusive.
+    let out = qlc()
+        .args([
+            "compress",
+            input.to_str().unwrap(),
+            manifest.to_str().unwrap(),
+            "--qlf1",
+            "--shards",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--qlf1 --shards must conflict");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn collective_fabric_presets() {
+    for fabric in ["pod", "superpod", "ethernet"] {
+        let out = qlc()
+            .args([
+                "collective", "--op", "allreduce", "--workers", "4",
+                "--size", "16384", "--codec", "huffman", "--fabric", fabric,
+                "--json",
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{fabric}: {out:?}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        let json = qlc::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(
+            json.get("fabric").and_then(|j| j.as_str()),
+            Some(fabric)
+        );
+        let total = json.get("total_time_s").unwrap().as_f64().unwrap();
+        let pipelined =
+            json.get("pipelined_time_s").unwrap().as_f64().unwrap();
+        assert!(
+            pipelined <= total * (1.0 + 1e-9),
+            "{fabric}: {pipelined} > {total}"
+        );
+    }
+    // Unknown preset is a clean CLI error.
+    let out = qlc()
+        .args(["collective", "--fabric", "carrier-pigeon"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn tables_emit_paper_schemes() {
     let out = qlc()
         .args(["tables", "--table", "1", "--scale", "18", "--seed", "1"])

@@ -149,6 +149,80 @@ fn threaded_engine_consistent_with_sim_across_codecs() {
 }
 
 #[test]
+fn chunk_pipelined_backends_agree_with_whole_payload_path() {
+    // The acceptance bar for the transport refactor: simulated and
+    // threaded chunk-pipelined all-reduce agree bit-for-bit with the
+    // whole-payload path, and the simulator's pipelined wall time
+    // never exceeds the non-pipelined one.
+    let w = 4;
+    let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+    let mut rng = Rng::new(41);
+    let data: Vec<Vec<f32>> =
+        (0..w).map(|_| gen.generate(&mut rng, w * BLOCK * 32)).collect();
+    let cal = Histogram::from_symbols(&gen.symbols(&mut rng, 128 * BLOCK));
+    let transport = Transport::Compressed {
+        codec: "qlc".into(),
+        calibration: Box::new(cal),
+    };
+    let fabric = Fabric::ethernet(w);
+    let (whole, _) = collective::ring_allreduce_with(
+        &fabric,
+        &data,
+        &transport,
+        usize::MAX,
+    )
+    .unwrap();
+    let (sim_chunked, rep) = collective::ring_allreduce_with(
+        &fabric,
+        &data,
+        &transport,
+        2 * BLOCK,
+    )
+    .unwrap();
+    let (thr_chunked, _) = engine::threaded_allreduce_with(
+        w,
+        data.clone(),
+        &transport,
+        2 * BLOCK,
+        2,
+    )
+    .unwrap();
+    assert_eq!(sim_chunked, whole);
+    assert_eq!(thr_chunked, whole);
+    assert!(rep.pipelined_time_s > 0.0);
+    assert!(rep.pipelined_time_s <= rep.total_time_s());
+}
+
+#[test]
+fn sharded_coordinator_roundtrip_with_shuffled_arrival() {
+    // Coordinator places shard descriptors on workers; the resulting
+    // manifest + shard set reassembles bit-exactly even when shards
+    // arrive out of order (as they would off N placement nodes).
+    let symbols = gen_symbols(TensorKind::Ffn1Act, 700 * BLOCK, 29);
+    let hist = Histogram::from_symbols(&symbols);
+    let pipe = Pipeline::new(
+        PipelineConfig { workers: 3, chunk_size: 4096, queue_depth: 4 },
+        "qlc",
+        &hist,
+    )
+    .unwrap();
+    let (manifest, mut shards) = pipe.compress_sharded(&symbols, 6);
+    assert_eq!(manifest.n_shards(), shards.len());
+    // Manifest survives serialization (as it would ship to consumers).
+    let manifest =
+        frame::ShardManifest::parse(&manifest.to_bytes()).unwrap();
+    shards.reverse();
+    shards.rotate_left(1);
+    let back = frame::decompress_sharded(
+        &manifest,
+        &shards,
+        &FrameOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(back, symbols);
+}
+
+#[test]
 fn trace_roundtrip_preserves_compressibility() {
     let dir = std::env::temp_dir()
         .join(format!("qlc-int-{}", std::process::id()));

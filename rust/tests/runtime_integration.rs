@@ -3,7 +3,11 @@
 //!
 //! These tests need `artifacts/` (built by `make artifacts`); they are
 //! skipped — loudly — if it is missing, so plain `cargo test` works in
-//! a fresh checkout.
+//! a fresh checkout.  The whole file is gated on the `pjrt` feature
+//! (the runtime needs the external `xla` + `anyhow` crates; see
+//! Cargo.toml).
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
