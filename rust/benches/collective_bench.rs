@@ -184,6 +184,39 @@ fn main() {
         );
     }
 
+    println!("\n-- TCP loopback ring (real sockets, 4 workers) --");
+    use qlc::collective::dist::{
+        round_size, run_local_ring, DistOp, WorkerConfig,
+    };
+    let tcp_elems = smoke_scaled(1 << 18, 1 << 12);
+    for (label, op) in [
+        ("allreduce", DistOp::Allreduce),
+        ("allgather-shards", DistOp::AllgatherShards),
+    ] {
+        let mut cfg = WorkerConfig::new(0, 4, String::new());
+        cfg.op = op;
+        cfg.codec = "qlc".into();
+        cfg.elems = round_size(tcp_elems, 4).unwrap();
+        let outcomes = run_local_ring(&cfg).unwrap();
+        for o in &outcomes[1..] {
+            assert_eq!(o.checksum, outcomes[0].checksum, "{label}");
+        }
+        let r = &outcomes[0].report;
+        assert!(
+            r.pipelined_time_s <= r.total_time_s() * (1.0 + 1e-9),
+            "{label}: measured pipelined wall must not exceed serial"
+        );
+        println!(
+            "  {label:<18} wall {:>8.2} ms pipelined (serial est {:>8.2} \
+             ms, {:>4.1}% hidden)  wire {:>10} B of {:>10} raw",
+            r.pipelined_time_s * 1e3,
+            r.total_time_s() * 1e3,
+            r.overlap_savings() * 100.0,
+            r.wire_bytes,
+            r.raw_bytes
+        );
+    }
+
     let stream_n = smoke_scaled(16 << 20, 1 << 18);
     println!(
         "\n-- coordinator pipeline scaling (qlc, {stream_n} symbols) --"

@@ -1,0 +1,536 @@
+//! Distributed collective worker: one OS process per rank, ring-wired
+//! over TCP ([`crate::transport::net`]), running the exact lockstep
+//! chunk exchange the threaded engine runs on channels
+//! ([`super::engine::allreduce_worker`]).
+//!
+//! Workloads are deterministic from `(seed, rank)`, so N processes
+//! that never share memory still agree on calibration histograms,
+//! codec tables and input tensors — and a test harness can regenerate
+//! the same inputs to check the distributed result against the
+//! in-process engine bit-for-bit ([`rank_tensor`], [`calibration`],
+//! [`stream_symbols`]).
+//!
+//! # Timing semantics
+//!
+//! Over real sockets the chunk pipeline's overlap is *physical*: the
+//! measured wall time of the exchange IS the pipelined time, so the
+//! [`CollectiveReport`] is filled in from measurement rather than the
+//! simulator's recurrence:
+//!
+//! * `pipelined_time_s` — measured wall time of the collective (codec
+//!   work already overlapped with the wire);
+//! * `codec_time_s`     — measured per-chunk encode+decode wall time;
+//! * `network_time_s`   — the measured wall again: with the pipeline
+//!   hiding the codec, the wall is the wire's share.
+//!
+//! `total_time_s = network + codec = wall + codec` is the serial
+//! estimate: a whole-payload transport pays the same transfers plus
+//! the codec back-to-back instead of overlapped.  `overlap_savings`
+//! is therefore the *measured* codec share the sockets buried —
+//! `codec / (wall + codec)` — not a modelled quantity.  (The estimate
+//! is slightly generous to the pipeline when codec time leaks onto
+//! the critical path — that leak is already inside `wall`.)
+
+use std::time::{Duration, Instant};
+
+use super::engine::{self, WorkerStats};
+use super::{CollectiveReport, Transport};
+use crate::codecs::frame::{self, FrameOptions, ShardManifest};
+use crate::codecs::registry::TAG_RAW;
+use crate::codecs::CodecRegistry;
+use crate::data::{TensorGen, TensorKind};
+use crate::formats::{Variant, BLOCK};
+use crate::stats::Histogram;
+use crate::transport::net::{form_ring, NetConfig};
+use crate::transport::{SimLink, DEFAULT_TRANSPORT_CHUNK};
+use crate::util::rng::Rng;
+
+/// Which collective the worker runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistOp {
+    /// Ring all-reduce of per-rank f32 tensors (quantize-per-hop
+    /// reduce-scatter + lossless all-gather).
+    Allreduce,
+    /// Ring all-gather of QLS1 shard bodies placed by a
+    /// [`ShardManifest`] — the shard-granular weight-distribution
+    /// path.
+    AllgatherShards,
+}
+
+impl DistOp {
+    pub fn parse(name: &str) -> Result<DistOp, String> {
+        match name {
+            "allreduce" => Ok(DistOp::Allreduce),
+            "allgather" | "allgather-shards" => Ok(DistOp::AllgatherShards),
+            other => Err(format!(
+                "unknown distributed op '{other}' (expected \
+                 allreduce|allgather)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistOp::Allreduce => "allreduce",
+            DistOp::AllgatherShards => "allgather_shards",
+        }
+    }
+}
+
+/// Everything one `qlc worker` process needs to join a collective.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub rank: usize,
+    pub world: usize,
+    /// Rendezvous address: rank 0 listens here, other ranks connect.
+    /// Unused when `world == 1`.
+    pub addr: String,
+    pub op: DistOp,
+    /// Transport codec name ("raw" disables compression).
+    pub codec: String,
+    /// Workload size, already aligned via [`round_size`]: f32 elements
+    /// per rank (allreduce) or total symbols across shards
+    /// (allgather).
+    pub elems: usize,
+    /// Transport chunk granularity in symbols.
+    pub chunk_symbols: usize,
+    pub seed: u64,
+    /// Socket progress timeout (rendezvous and data plane).
+    pub timeout: Duration,
+}
+
+impl WorkerConfig {
+    pub fn new(rank: usize, world: usize, addr: String) -> WorkerConfig {
+        WorkerConfig {
+            rank,
+            world,
+            addr,
+            op: DistOp::Allreduce,
+            codec: "qlc".to_string(),
+            elems: 1 << 18,
+            chunk_symbols: DEFAULT_TRANSPORT_CHUNK,
+            seed: 1,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One finished worker: its report plus the raw result for
+/// cross-process comparison.
+#[derive(Clone, Debug)]
+pub struct DistOutcome {
+    pub rank: usize,
+    pub report: CollectiveReport,
+    /// FNV-1a over `result_bytes` — what `qlc launch` compares across
+    /// ranks to assert bit-identical results.
+    pub checksum: u64,
+    /// The collective's result: f32 little-endian bytes (allreduce) or
+    /// the reassembled symbol stream (allgather).
+    pub result_bytes: Vec<u8>,
+}
+
+/// Round a requested size down to the collective's alignment
+/// (`world × BLOCK`), which also guarantees the shard plan yields
+/// exactly one shard per rank.  Err when nothing is left.
+pub fn round_size(size: usize, world: usize) -> Result<usize, String> {
+    if world == 0 {
+        return Err("world must be at least 1".into());
+    }
+    let align = world * BLOCK;
+    let n = size - size % align;
+    if n == 0 {
+        return Err(format!(
+            "size {size} is smaller than one alignment unit \
+             (world × block = {align})"
+        ));
+    }
+    Ok(n)
+}
+
+/// The deterministic per-rank all-reduce input: every process (and
+/// every test harness) derives the same tensor from `(seed, rank)`.
+pub fn rank_tensor(seed: u64, rank: usize, elems: usize) -> Vec<f32> {
+    let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+    let mut base = Rng::new(seed);
+    let mut rng = base.fork(rank as u64 + 1);
+    gen.generate(&mut rng, elems)
+}
+
+/// The deterministic shared symbol stream the allgather workload
+/// shards (identical on every rank).
+pub fn stream_symbols(seed: u64, total: usize) -> Vec<u8> {
+    let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+    let mut rng = Rng::new(seed);
+    gen.symbols(&mut rng, total)
+}
+
+/// The deterministic calibration histogram all ranks fit their
+/// transport codec tables on (paper §7: tables shared apriori).
+pub fn calibration(seed: u64) -> Histogram {
+    let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+    let mut rng = Rng::new(seed);
+    Histogram::from_symbols(&gen.symbols(&mut rng, 256 * BLOCK))
+}
+
+/// FNV-1a 64-bit — tiny, dependency-free, good enough to compare
+/// results across processes.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Build the [`CollectiveReport`] from measured numbers (module docs:
+/// wall IS the pipelined time; serial = wall + codec back-to-back).
+fn measured_report(
+    op: DistOp,
+    transport: String,
+    steps: usize,
+    stats: &WorkerStats,
+    wall_s: f64,
+) -> CollectiveReport {
+    let wall = wall_s.max(0.0);
+    CollectiveReport {
+        op: op.name().into(),
+        transport,
+        steps,
+        wire_bytes: stats.wire_bytes,
+        raw_bytes: stats.raw_bytes,
+        network_time_s: wall,
+        codec_time_s: stats.codec_s.max(0.0),
+        pipelined_time_s: wall,
+    }
+}
+
+/// Run one rank of the collective end to end: rendezvous (unless
+/// `world == 1`), lockstep exchange, report.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<DistOutcome, String> {
+    if cfg.world == 0 {
+        return Err("world must be at least 1".into());
+    }
+    if cfg.rank >= cfg.world {
+        return Err(format!(
+            "rank {} out of range for world {}",
+            cfg.rank, cfg.world
+        ));
+    }
+    if cfg.elems == 0 || cfg.elems % (cfg.world * BLOCK) != 0 {
+        return Err(format!(
+            "size {} must be a non-zero multiple of world × block = {} \
+             (see round_size)",
+            cfg.elems,
+            cfg.world * BLOCK
+        ));
+    }
+    match cfg.op {
+        DistOp::Allreduce => run_allreduce(cfg),
+        DistOp::AllgatherShards => run_allgather(cfg),
+    }
+}
+
+fn run_allreduce(cfg: &WorkerConfig) -> Result<DistOutcome, String> {
+    let transport = if cfg.codec == "raw" {
+        Transport::Raw
+    } else {
+        Transport::Compressed {
+            codec: cfg.codec.clone(),
+            calibration: Box::new(calibration(cfg.seed)),
+        }
+    };
+    let handle = transport.resolve()?;
+    let tag = handle.as_ref().map(|h| h.wire_tag()).unwrap_or(TAG_RAW);
+    let data = rank_tensor(cfg.seed, cfg.rank, cfg.elems);
+
+    let (result, stats, wall_s) = if cfg.world == 1 {
+        let mut link = SimLink::new();
+        let t0 = Instant::now();
+        let (r, s) = engine::allreduce_worker(
+            &mut link,
+            0,
+            1,
+            data,
+            handle.as_ref(),
+            cfg.chunk_symbols,
+        )?;
+        (r, s, t0.elapsed().as_secs_f64())
+    } else {
+        let net = NetConfig::new(tag).with_timeout(cfg.timeout);
+        let mut link = form_ring(cfg.rank, cfg.world, &cfg.addr, &net)?;
+        let t0 = Instant::now();
+        let (r, s) = engine::allreduce_worker(
+            &mut link,
+            cfg.rank,
+            cfg.world,
+            data,
+            handle.as_ref(),
+            cfg.chunk_symbols,
+        )?;
+        (r, s, t0.elapsed().as_secs_f64())
+    };
+
+    let report = measured_report(
+        cfg.op,
+        transport.name(),
+        2 * (cfg.world - 1),
+        &stats,
+        wall_s,
+    );
+    let result_bytes: Vec<u8> =
+        result.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Ok(DistOutcome {
+        rank: cfg.rank,
+        checksum: fnv1a64(&result_bytes),
+        report,
+        result_bytes,
+    })
+}
+
+fn run_allgather(cfg: &WorkerConfig) -> Result<DistOutcome, String> {
+    // Every rank derives the same stream, shard plan and codec tables;
+    // it then *encodes only its own shard* and gathers the rest as
+    // opaque QLS1 bodies.
+    let symbols = stream_symbols(cfg.seed, cfg.elems);
+    let hist = Histogram::from_symbols(&symbols);
+    let handle = CodecRegistry::global().resolve(&cfg.codec, &hist)?;
+    let plan = frame::shard_plan(symbols.len(), cfg.world);
+    if plan.len() != cfg.world {
+        return Err(format!(
+            "size {} yields only {} shards for world {}",
+            cfg.elems,
+            plan.len(),
+            cfg.world
+        ));
+    }
+    let manifest = ShardManifest::from_handle(
+        &handle,
+        plan.iter().map(|d| d.n_symbols as u64).collect(),
+    );
+    let desc = plan[cfg.rank];
+    let body = frame::compress_shard(
+        &handle,
+        desc.index as u32,
+        &symbols[desc.start..desc.start + desc.n_symbols],
+        &FrameOptions::serial(),
+    );
+
+    let (bodies, stats, wall_s) = if cfg.world == 1 {
+        (vec![body], WorkerStats::default(), 0.0)
+    } else {
+        let net = NetConfig::new(TAG_RAW).with_timeout(cfg.timeout);
+        let mut link = form_ring(cfg.rank, cfg.world, &cfg.addr, &net)?;
+        let t0 = Instant::now();
+        let (b, s) = engine::allgather_shards_worker(
+            &mut link,
+            cfg.rank,
+            cfg.world,
+            body,
+            manifest.shard_symbols(),
+        )?;
+        (b, s, t0.elapsed().as_secs_f64())
+    };
+
+    let gathered =
+        frame::decompress_sharded(&manifest, &bodies, &FrameOptions::default())
+            .map_err(|e| e.to_string())?;
+    if gathered != symbols {
+        return Err(
+            "gathered shards do not reassemble the source tensor".into()
+        );
+    }
+    let report = measured_report(
+        cfg.op,
+        format!("qls1:{}", handle.name()),
+        cfg.world - 1,
+        &stats,
+        wall_s,
+    );
+    Ok(DistOutcome {
+        rank: cfg.rank,
+        checksum: fnv1a64(&gathered),
+        report,
+        result_bytes: gathered,
+    })
+}
+
+/// A free `127.0.0.1` address for a rendezvous listener.  The probe
+/// listener is dropped before the address is used, so there is a tiny
+/// reuse race — connect retries in the rendezvous absorb it.
+pub fn free_loopback_addr() -> Result<String, String> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| format!("bind 127.0.0.1:0: {e}"))?;
+    Ok(l.local_addr().map_err(|e| e.to_string())?.to_string())
+}
+
+/// Run a whole `world` on loopback TCP inside this process, one thread
+/// per rank — the same code path `qlc launch` runs as N processes,
+/// handy for benches and tests.  Outcomes come back in rank order.
+pub fn run_local_ring(
+    template: &WorkerConfig,
+) -> Result<Vec<DistOutcome>, String> {
+    if template.world == 0 {
+        return Err("world must be at least 1".into());
+    }
+    let addr = free_loopback_addr()?;
+    let mut handles = Vec::with_capacity(template.world);
+    for rank in 0..template.world {
+        let mut cfg = template.clone();
+        cfg.rank = rank;
+        cfg.addr = addr.clone();
+        handles.push(std::thread::spawn(move || run_worker(&cfg)));
+    }
+    let mut outcomes = Vec::with_capacity(template.world);
+    for h in handles {
+        outcomes.push(h.join().map_err(|_| "worker thread panicked")??);
+    }
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::engine::threaded_allreduce;
+
+    fn local_cfg(world: usize, op: DistOp, codec: &str) -> WorkerConfig {
+        let mut cfg = WorkerConfig::new(0, world, String::new());
+        cfg.op = op;
+        cfg.codec = codec.to_string();
+        cfg.elems = round_size(world * BLOCK * 32, world).unwrap();
+        cfg.seed = 11;
+        cfg.timeout = Duration::from_secs(20);
+        cfg
+    }
+
+    #[test]
+    fn round_size_aligns_or_errors() {
+        assert_eq!(round_size(4 * BLOCK, 4).unwrap(), 4 * BLOCK);
+        assert_eq!(
+            round_size(4 * BLOCK + 17, 4).unwrap(),
+            4 * BLOCK
+        );
+        assert!(round_size(BLOCK, 4).is_err(), "too small");
+        assert!(round_size(100, 0).is_err(), "zero world");
+    }
+
+    #[test]
+    fn fnv_distinguishes_streams() {
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn rank_tensors_are_deterministic_and_distinct() {
+        let a = rank_tensor(5, 0, 2 * BLOCK);
+        let b = rank_tensor(5, 0, 2 * BLOCK);
+        let c = rank_tensor(5, 1, 2 * BLOCK);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn dist_op_parses() {
+        assert_eq!(DistOp::parse("allreduce").unwrap(), DistOp::Allreduce);
+        assert_eq!(
+            DistOp::parse("allgather").unwrap(),
+            DistOp::AllgatherShards
+        );
+        assert!(DistOp::parse("broadcast").is_err());
+    }
+
+    #[test]
+    fn bad_configs_are_errors() {
+        let mut cfg = WorkerConfig::new(0, 0, String::new());
+        assert!(run_worker(&cfg).is_err(), "zero world");
+        cfg.world = 2;
+        cfg.rank = 2;
+        assert!(run_worker(&cfg).is_err(), "rank out of range");
+        cfg.rank = 0;
+        cfg.elems = BLOCK + 1;
+        assert!(run_worker(&cfg).is_err(), "unaligned size");
+    }
+
+    #[test]
+    fn world_one_runs_without_sockets() {
+        for op in [DistOp::Allreduce, DistOp::AllgatherShards] {
+            let cfg = local_cfg(1, op, "qlc");
+            let out = run_worker(&cfg).unwrap();
+            assert!(!out.result_bytes.is_empty(), "{op:?}");
+            let r = &out.report;
+            assert!(r.pipelined_time_s <= r.total_time_s() * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn local_tcp_ring_matches_threaded_engine_bit_for_bit() {
+        let world = 3;
+        let cfg = local_cfg(world, DistOp::Allreduce, "qlc");
+        let outcomes = run_local_ring(&cfg).unwrap();
+        assert_eq!(outcomes.len(), world);
+        for o in &outcomes[1..] {
+            assert_eq!(
+                o.checksum, outcomes[0].checksum,
+                "ranks must agree bit-for-bit"
+            );
+        }
+        // The in-process engine over identically generated tensors.
+        let data: Vec<Vec<f32>> = (0..world)
+            .map(|r| rank_tensor(cfg.seed, r, cfg.elems))
+            .collect();
+        let transport = Transport::Compressed {
+            codec: "qlc".into(),
+            calibration: Box::new(calibration(cfg.seed)),
+        };
+        let (expect, _) =
+            threaded_allreduce(world, data, &transport).unwrap();
+        for (rank, o) in outcomes.iter().enumerate() {
+            let want: Vec<u8> = expect[rank]
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect();
+            assert_eq!(
+                o.result_bytes, want,
+                "rank {rank} diverged from the threaded engine"
+            );
+            let r = &o.report;
+            assert!(r.wire_bytes > 0);
+            assert!(
+                r.wire_bytes < r.raw_bytes,
+                "qlc transport must compress: {} !< {}",
+                r.wire_bytes,
+                r.raw_bytes
+            );
+            assert!(
+                r.pipelined_time_s <= r.total_time_s() * (1.0 + 1e-9),
+                "pipelined {} > serial {}",
+                r.pipelined_time_s,
+                r.total_time_s()
+            );
+            // The overlap metric is measured, not tautological: a real
+            // codec spends real time, so the serial estimate strictly
+            // exceeds the pipelined wall.
+            assert!(r.codec_time_s > 0.0, "qlc must cost codec time");
+            assert!(
+                r.overlap_savings() > 0.0,
+                "pipeline must hide a non-zero codec share"
+            );
+        }
+    }
+
+    #[test]
+    fn local_tcp_ring_gathers_shards() {
+        let world = 3;
+        let cfg = local_cfg(world, DistOp::AllgatherShards, "qlc");
+        let outcomes = run_local_ring(&cfg).unwrap();
+        let stream = stream_symbols(cfg.seed, cfg.elems);
+        for o in &outcomes {
+            assert_eq!(o.result_bytes, stream, "rank {}", o.rank);
+            assert_eq!(o.checksum, fnv1a64(&stream));
+        }
+        let r = &outcomes[0].report;
+        assert_eq!(r.steps, world - 1);
+        assert!(r.wire_bytes > 0);
+        assert!(r.wire_bytes < r.raw_bytes, "shard bodies must compress");
+    }
+}

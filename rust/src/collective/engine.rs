@@ -1,12 +1,16 @@
-//! Threaded collective engine: the chunk-pipelined ring all-reduce of
-//! [`super::ring_allreduce`] executed by real worker threads exchanging
-//! compressed chunks over the transport layer's bounded channels
-//! ([`crate::transport::threaded`]).  Validates that the simulated
-//! ring and a concurrent implementation agree bit-for-bit, and
-//! measures real end-to-end wall time — here the overlap of decode(k)
-//! with transfer(k+1) is physical, not modelled: while one worker
-//! decodes a chunk, its upstream neighbour is already encoding and
-//! sending the next.
+//! Concurrent collective engine: the chunk-pipelined ring all-reduce
+//! of [`super::ring_allreduce`] executed by real workers exchanging
+//! compressed chunks over any transport [`Link`].  The per-worker hop
+//! loop ([`allreduce_worker`]) is generic over the link, so the same
+//! code runs on the threaded bounded-channel backend
+//! ([`crate::transport::threaded`]) and on TCP sockets across OS
+//! processes ([`crate::transport::net`], via
+//! [`crate::collective::dist`]).  Validates that the simulated ring
+//! and a concurrent implementation agree bit-for-bit, and measures
+//! real end-to-end wall time — here the overlap of decode(k) with
+//! transfer(k+1) is physical, not modelled: while one worker decodes a
+//! chunk, its upstream neighbour is already encoding and sending the
+//! next.
 
 use std::sync::Arc;
 use std::thread;
@@ -14,8 +18,8 @@ use std::time::Instant;
 
 use super::Transport;
 use crate::codecs::CodecHandle;
-use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant};
-use crate::transport::{exchange_hop, threaded, DEFAULT_TRANSPORT_CHUNK};
+use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
+use crate::transport::{exchange_hop, threaded, Link, DEFAULT_TRANSPORT_CHUNK};
 
 /// Wall-clock result of a threaded all-reduce.
 #[derive(Clone, Debug)]
@@ -25,6 +29,196 @@ pub struct EngineReport {
     pub raw_bytes: u64,
     /// Transport chunk granularity the run used (symbols).
     pub chunk_symbols: usize,
+}
+
+/// One worker's accumulated transfer accounting across a collective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerStats {
+    /// Bytes this worker put on the wire.
+    pub wire_bytes: u64,
+    /// Bytes the same hops would ship uncompressed.
+    pub raw_bytes: u64,
+    /// Measured encode + decode wall time across all hops.
+    pub codec_s: f64,
+}
+
+impl WorkerStats {
+    fn add_hop(&mut self, ex: &crate::transport::HopExchange) {
+        self.wire_bytes += ex.wire_bytes;
+        self.raw_bytes += ex.raw_bytes;
+        self.codec_s += ex.trace.codec_s();
+    }
+}
+
+/// One worker's side of the lockstep ring all-reduce: lossy
+/// quantize-per-hop reduce-scatter, then lossless circulation of
+/// (symbols, scales).  Semantically identical to the matching slice of
+/// [`super::ring_allreduce`]; every backend that runs it per worker
+/// (threads over channels, processes over TCP) produces bit-identical
+/// results.
+///
+/// `data` is this rank's tensor; its length must be a non-zero
+/// multiple of `world × BLOCK`.  The codec handle's tables must be
+/// identical on every rank (fitted apriori on a shared calibration).
+pub fn allreduce_worker<L: Link>(
+    link: &mut L,
+    rank: usize,
+    world: usize,
+    data: Vec<f32>,
+    codec: Option<&CodecHandle>,
+    chunk_symbols: usize,
+) -> Result<(Vec<f32>, WorkerStats), String> {
+    if world == 0 {
+        return Err("collective requires at least one worker".into());
+    }
+    if rank >= world {
+        return Err(format!("rank {rank} out of range for world {world}"));
+    }
+    let n = data.len();
+    if n == 0 || n % (world * BLOCK) != 0 {
+        return Err(format!(
+            "tensor length {n} must be a non-zero multiple of \
+             workers × block = {}",
+            world * BLOCK
+        ));
+    }
+    let chunk = n / world;
+
+    // One session pair per worker, reused for every hop.
+    let mut enc = codec.map(|h| h.encoder());
+    let mut dec = codec.map(|h| h.decoder());
+    let quant = BlockQuantizer::new(Variant::ExmY);
+    let mut chunks: Vec<Vec<f32>> =
+        data.chunks(chunk).map(|c| c.to_vec()).collect();
+    let w = world;
+    let i = rank;
+    let mut stats = WorkerStats::default();
+
+    // --- Reduce-scatter (quantize per hop). --------------------------
+    for s in 0..w - 1 {
+        let send_ci = (i + w - s) % w;
+        let q = quant.quantize(&chunks[send_ci]);
+        let ex = exchange_hop(
+            link,
+            &mut enc,
+            &mut dec,
+            &q.symbols,
+            &q.scales,
+            chunk_symbols,
+        )?;
+        stats.add_hop(&ex);
+        let incoming = quant.dequantize(&QuantizedBlocks {
+            symbols: ex.symbols,
+            scales: ex.scales,
+            variant: Variant::ExmY,
+        });
+        let recv_ci = (i + w - s - 1) % w;
+        for (acc, v) in chunks[recv_ci].iter_mut().zip(&incoming) {
+            *acc += v;
+        }
+    }
+
+    // --- Final quantization of the owned chunk. ----------------------
+    let owned_ci = (i + 1) % w;
+    let mut quantized: Vec<Option<QuantizedBlocks>> =
+        (0..w).map(|_| None).collect();
+    quantized[owned_ci] = Some(quant.quantize(&chunks[owned_ci]));
+
+    // --- All-gather (lossless circulation). --------------------------
+    for s in 0..w - 1 {
+        let send_ci = (i + 1 + w - s) % w;
+        let q = quantized[send_ci]
+            .as_ref()
+            .ok_or("ring invariant broken")?;
+        let ex = exchange_hop(
+            link,
+            &mut enc,
+            &mut dec,
+            &q.symbols,
+            &q.scales,
+            chunk_symbols,
+        )?;
+        stats.add_hop(&ex);
+        let recv_ci = (i + w - s) % w;
+        quantized[recv_ci] = Some(QuantizedBlocks {
+            symbols: ex.symbols,
+            scales: ex.scales,
+            variant: Variant::ExmY,
+        });
+    }
+
+    let mut result: Vec<f32> = Vec::with_capacity(n);
+    for slot in &quantized {
+        let q = slot.as_ref().ok_or("ring gather incomplete")?;
+        result.extend(quant.dequantize(q));
+    }
+    Ok((result, stats))
+}
+
+/// One worker's side of a ring all-gather of opaque, pre-compressed
+/// QLS1 shard bodies: rank `r` contributes shard `r`'s body; after
+/// `world - 1` lockstep hops every rank holds all bodies in
+/// shard-index order (ready for
+/// [`crate::codecs::frame::decompress_sharded`]).  Bodies travel raw —
+/// they are already compressed, so no transport codec is stacked on
+/// top.
+///
+/// `shard_symbols` is the manifest's per-shard symbol count (one
+/// entry per rank): bodies are opaque on the wire, so the raw-bytes
+/// accounting comes from the manifest, not from the hop — the
+/// returned stats' `compression_ratio` reflects the shard codec.
+pub fn allgather_shards_worker<L: Link>(
+    link: &mut L,
+    rank: usize,
+    world: usize,
+    body: Vec<u8>,
+    shard_symbols: &[u64],
+) -> Result<(Vec<Vec<u8>>, WorkerStats), String> {
+    if world == 0 {
+        return Err("collective requires at least one worker".into());
+    }
+    if rank >= world {
+        return Err(format!("rank {rank} out of range for world {world}"));
+    }
+    if shard_symbols.len() != world {
+        return Err(format!(
+            "manifest describes {} shards for world {world}",
+            shard_symbols.len()
+        ));
+    }
+    let mut have: Vec<Option<Vec<u8>>> = (0..world).map(|_| None).collect();
+    have[rank] = Some(body);
+    let mut stats = WorkerStats::default();
+    let mut enc = None;
+    let mut dec = None;
+    for s in 0..world - 1 {
+        let send_i = (rank + world - s) % world;
+        // Borrow the body for the hop only (no per-hop clone of a
+        // potentially large compressed shard).
+        let ex = {
+            let bytes = have[send_i]
+                .as_ref()
+                .ok_or("ring invariant broken")?;
+            exchange_hop(
+                link,
+                &mut enc,
+                &mut dec,
+                bytes,
+                &[],
+                DEFAULT_TRANSPORT_CHUNK,
+            )?
+        };
+        stats.wire_bytes += ex.wire_bytes;
+        stats.raw_bytes += shard_symbols[send_i];
+        stats.codec_s += ex.trace.codec_s();
+        let recv_i = (rank + world - s - 1) % world;
+        have[recv_i] = Some(ex.symbols);
+    }
+    let mut bodies = Vec::with_capacity(world);
+    for b in have {
+        bodies.push(b.ok_or("ring gather incomplete")?);
+    }
+    Ok((bodies, stats))
 }
 
 /// Threaded ring all-reduce with default chunking. Semantically
@@ -57,7 +251,7 @@ pub fn threaded_allreduce_with(
     // Same input contract as the simulated ring (one set of rules for
     // both backends — their bit-for-bit agreement depends on it).
     super::validate_workers(workers, worker_data.len())?;
-    let chunk = super::validate_tensors(&worker_data, workers)?;
+    super::validate_tensors(&worker_data, workers)?;
 
     // Resolve the codec once (fitting qlc tables is expensive); the
     // read-only handle is shared by every worker, each of which keeps
@@ -75,82 +269,16 @@ pub fn threaded_allreduce_with(
     {
         let codec = shared_codec.clone();
         handles.push(thread::spawn(
-            move || -> Result<(usize, Vec<f32>, u64, u64), String> {
-                // One session pair per worker, reused for every hop.
-                let mut enc = (*codec).as_ref().map(|h| h.encoder());
-                let mut dec = (*codec).as_ref().map(|h| h.decoder());
-                let quant = BlockQuantizer::new(Variant::ExmY);
-                let mut chunks: Vec<Vec<f32>> =
-                    data.chunks(chunk).map(|c| c.to_vec()).collect();
-                let w = chunks.len();
-                let mut wire = 0u64;
-                let mut raw = 0u64;
-
-                // --- Reduce-scatter (quantize per hop). --------------
-                for s in 0..w - 1 {
-                    let send_ci = (i + w - s) % w;
-                    let q = quant.quantize(&chunks[send_ci]);
-                    let ex = exchange_hop(
-                        &mut link,
-                        &mut enc,
-                        &mut dec,
-                        &q.symbols,
-                        &q.scales,
-                        chunk_symbols,
-                    )?;
-                    wire += ex.wire_bytes;
-                    raw += ex.raw_bytes;
-                    let incoming = quant.dequantize(&QuantizedBlocks {
-                        symbols: ex.symbols,
-                        scales: ex.scales,
-                        variant: Variant::ExmY,
-                    });
-                    let recv_ci = (i + w - s - 1) % w;
-                    for (acc, v) in chunks[recv_ci].iter_mut().zip(&incoming)
-                    {
-                        *acc += v;
-                    }
-                }
-
-                // --- Final quantization of the owned chunk. ----------
-                let owned_ci = (i + 1) % w;
-                let mut quantized: Vec<Option<QuantizedBlocks>> =
-                    (0..w).map(|_| None).collect();
-                quantized[owned_ci] =
-                    Some(quant.quantize(&chunks[owned_ci]));
-
-                // --- All-gather (lossless circulation). --------------
-                for s in 0..w - 1 {
-                    let send_ci = (i + 1 + w - s) % w;
-                    let q = quantized[send_ci]
-                        .as_ref()
-                        .ok_or("ring invariant broken")?;
-                    let ex = exchange_hop(
-                        &mut link,
-                        &mut enc,
-                        &mut dec,
-                        &q.symbols,
-                        &q.scales,
-                        chunk_symbols,
-                    )?;
-                    wire += ex.wire_bytes;
-                    raw += ex.raw_bytes;
-                    let recv_ci = (i + w - s) % w;
-                    quantized[recv_ci] = Some(QuantizedBlocks {
-                        symbols: ex.symbols,
-                        scales: ex.scales,
-                        variant: Variant::ExmY,
-                    });
-                }
-
-                let result: Vec<f32> = (0..w)
-                    .flat_map(|ci| {
-                        quant.dequantize(
-                            quantized[ci].as_ref().expect("complete"),
-                        )
-                    })
-                    .collect();
-                Ok((i, result, wire, raw))
+            move || -> Result<(usize, Vec<f32>, WorkerStats), String> {
+                let (result, stats) = allreduce_worker(
+                    &mut link,
+                    i,
+                    workers,
+                    data,
+                    (*codec).as_ref(),
+                    chunk_symbols,
+                )?;
+                Ok((i, result, stats))
             },
         ));
     }
@@ -159,11 +287,11 @@ pub fn threaded_allreduce_with(
     let mut wire_bytes = 0u64;
     let mut raw_bytes = 0u64;
     for h in handles {
-        let (i, data, wire, raw) =
+        let (i, data, stats) =
             h.join().map_err(|_| "worker panicked")??;
         results[i] = data;
-        wire_bytes += wire;
-        raw_bytes += raw;
+        wire_bytes += stats.wire_bytes;
+        raw_bytes += stats.raw_bytes;
     }
     let report = EngineReport {
         wall_time_s: start.elapsed().as_secs_f64(),
@@ -177,9 +305,12 @@ pub fn threaded_allreduce_with(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
+
+    use crate::codecs::frame::{self, FrameOptions};
+    use crate::codecs::CodecRegistry;
     use crate::collective::{ring_allreduce, Fabric};
     use crate::data::{TensorGen, TensorKind};
-    use crate::formats::BLOCK;
     use crate::stats::Histogram;
     use crate::util::rng::Rng;
 
@@ -296,5 +427,104 @@ mod tests {
         assert!(
             threaded_allreduce(0, Vec::new(), &Transport::Raw).is_err()
         );
+        // Worker-level shape errors surface from the generic body too.
+        let mut link = crate::transport::SimLink::new();
+        assert!(
+            allreduce_worker(&mut link, 2, 2, vec![0f32; 2 * BLOCK], None, 64)
+                .is_err(),
+            "rank out of range"
+        );
+        assert!(
+            allreduce_worker(&mut link, 0, 2, vec![0f32; BLOCK + 1], None, 64)
+                .is_err(),
+            "non-divisible tensor"
+        );
+        assert!(
+            allgather_shards_worker(&mut link, 3, 2, Vec::new(), &[1, 1])
+                .is_err(),
+            "rank out of range"
+        );
+        assert!(
+            allgather_shards_worker(&mut link, 0, 2, Vec::new(), &[1])
+                .is_err(),
+            "shard table / world mismatch"
+        );
+    }
+
+    #[test]
+    fn dropped_peer_fails_cleanly_instead_of_hanging() {
+        // Worker 2 vanishes before the exchange: the survivors must
+        // all surface `Err` (send to a hung-up channel, recv from a
+        // dropped sender, or recv timeout) — never panic or block
+        // forever.
+        let mut endpoints =
+            threaded::ring_with_timeout(3, 1, Duration::from_millis(200));
+        let dead = endpoints.pop().unwrap();
+        drop(dead);
+        let mut joined = Vec::new();
+        for (i, mut link) in endpoints.into_iter().enumerate() {
+            joined.push(thread::spawn(move || {
+                let data = vec![1f32; 3 * BLOCK];
+                allreduce_worker(&mut link, i, 3, data, None, 64)
+            }));
+        }
+        for j in joined {
+            let result = j.join().unwrap();
+            assert!(result.is_err(), "peer loss must surface as Err");
+        }
+    }
+
+    #[test]
+    fn shard_allgather_workers_reassemble_manifest() {
+        // Four workers each hold one QLS1 shard body; after the ring
+        // gather every worker reassembles the tensor from the shared
+        // manifest — the shard-granular placement path end to end.
+        let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+        let mut rng = Rng::new(9);
+        let symbols = gen.symbols(&mut rng, 256 * BLOCK);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = CodecRegistry::global().resolve("qlc", &hist).unwrap();
+        let (manifest, bodies) = frame::compress_sharded(
+            &handle,
+            &symbols,
+            4,
+            &FrameOptions::serial(),
+        );
+        assert_eq!(manifest.n_shards(), 4);
+        let endpoints = threaded::ring(4, 2);
+        let manifest = Arc::new(manifest);
+        let symbols = Arc::new(symbols);
+        let mut joined = Vec::new();
+        for ((rank, body), mut link) in
+            bodies.into_iter().enumerate().zip(endpoints)
+        {
+            let manifest = manifest.clone();
+            let symbols = symbols.clone();
+            joined.push(thread::spawn(move || {
+                let (bodies, stats) = allgather_shards_worker(
+                    &mut link,
+                    rank,
+                    4,
+                    body,
+                    manifest.shard_symbols(),
+                )
+                .unwrap();
+                let back = frame::decompress_sharded(
+                    &manifest,
+                    &bodies,
+                    &FrameOptions::serial(),
+                )
+                .unwrap();
+                assert_eq!(back, *symbols, "rank {rank}");
+                assert!(stats.wire_bytes > 0);
+                assert!(
+                    stats.wire_bytes < stats.raw_bytes,
+                    "stats must reflect the shard codec, not wire==raw"
+                );
+            }));
+        }
+        for j in joined {
+            j.join().unwrap();
+        }
     }
 }

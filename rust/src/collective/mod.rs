@@ -31,10 +31,12 @@
 //! [`engine`] runs the same chunk-granular ring on real threads and
 //! bounded channels (the transport's threaded backend).
 
+pub mod dist;
 pub mod engine;
 
 use std::time::Instant;
 
+use crate::codecs::frame::{self, FrameOptions, ShardManifest};
 use crate::codecs::{CodecHandle, CodecRegistry};
 use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
 use crate::stats::Histogram;
@@ -413,6 +415,108 @@ pub fn ring_allgather(
     Ok((gathered, report))
 }
 
+/// Ring all-gather of pre-compressed QLS1 shard bodies placed by a
+/// [`ShardManifest`]: worker `i` holds shard `i`'s body; the bodies
+/// circulate opaquely (they are already compressed — no transport
+/// codec is stacked on top) and every worker reassembles the full
+/// tensor via [`frame::decompress_sharded`].  This is the
+/// shard-granular placement path: what the coordinator shards once is
+/// what the collective moves, one table header for the whole set.
+///
+/// The report's `wire_bytes` are the shard-body bytes actually
+/// shipped; `raw_bytes` are the symbols an uncompressed gather would
+/// ship, so `compression_ratio` reflects the shard codec.  Returns
+/// the reassembled symbols (identical across workers, asserted) and
+/// the report.
+pub fn ring_allgather_shards(
+    fabric: &Fabric,
+    manifest: &ShardManifest,
+    bodies: &[Vec<u8>],
+) -> Result<(Vec<u8>, CollectiveReport), String> {
+    let w = fabric.workers;
+    validate_workers(w, bodies.len())?;
+    if manifest.n_shards() != w {
+        return Err(format!(
+            "manifest describes {} shards for {w} workers (one shard \
+             per worker required)",
+            manifest.n_shards()
+        ));
+    }
+    let mut enc = None;
+    let mut dec = None;
+    let mut link = SimLink::new();
+    let mut report = CollectiveReport {
+        op: "allgather_shards".into(),
+        transport: "qls1".into(),
+        ..Default::default()
+    };
+    let shard_syms = manifest.shard_symbols();
+
+    let mut have: Vec<Vec<Option<Vec<u8>>>> = (0..w)
+        .map(|i| {
+            (0..w)
+                .map(|j| (i == j).then(|| bodies[j].clone()))
+                .collect()
+        })
+        .collect();
+    for s in 0..w - 1 {
+        let mut agg = StepAgg::default();
+        let mut deliveries: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+        for i in 0..w {
+            let shard = (i + w - s) % w;
+            // Borrow the body for the hop only — no per-hop clone.
+            let ex = {
+                let body = have[i][shard]
+                    .as_ref()
+                    .ok_or("ring invariant broken")?;
+                exchange_hop(
+                    &mut link,
+                    &mut enc,
+                    &mut dec,
+                    body,
+                    &[],
+                    DEFAULT_TRANSPORT_CHUNK,
+                )?
+            };
+            report.wire_bytes += ex.wire_bytes;
+            report.raw_bytes += shard_syms[shard];
+            agg.add_link(fabric, &ex.trace, ex.wire_bytes as usize, 0.0);
+            deliveries.push(((i + 1) % w, shard, ex.symbols));
+        }
+        for (dst, shard, data) in deliveries {
+            have[dst][shard] = Some(data);
+        }
+        agg.commit(fabric, 1, &mut report);
+    }
+
+    // Every worker reassembles from its gathered bodies; all must
+    // agree with worker 0 bit-for-bit.
+    let mut first: Option<Vec<u8>> = None;
+    for (i, worker_bodies) in have.into_iter().enumerate() {
+        let mut gathered = Vec::with_capacity(w);
+        for b in worker_bodies {
+            gathered.push(b.ok_or("ring gather incomplete")?);
+        }
+        let tensor = frame::decompress_sharded(
+            manifest,
+            &gathered,
+            &FrameOptions::default(),
+        )
+        .map_err(|e| e.to_string())?;
+        match &first {
+            None => first = Some(tensor),
+            Some(f) => {
+                if &tensor != f {
+                    return Err(format!(
+                        "allgather_shards divergence at worker {i}"
+                    ));
+                }
+            }
+        }
+    }
+    Ok((first.ok_or("no workers")?, report))
+}
+
 /// All-to-all of symbol shards: worker i sends shard j to worker j.
 pub fn alltoall(
     fabric: &Fabric,
@@ -756,6 +860,54 @@ mod tests {
         assert_eq!(gathered, shards.concat());
         assert_eq!(report.steps, 3);
         assert!(report.wire_bytes > 0);
+    }
+
+    #[test]
+    fn allgather_shards_moves_manifest_placed_bodies() {
+        // Shard a stream with the coordinator-side sharder, hand one
+        // QLS1 body per worker, gather — every worker reassembles the
+        // source tensor, and compressed bodies beat raw symbols on
+        // the wire.
+        let w = 4;
+        let fabric = Fabric::pod(w);
+        let gen = TensorGen::new(TensorKind::WeightGrad, Variant::ExmY);
+        let mut rng = Rng::new(21);
+        let symbols = gen.symbols(&mut rng, 256 * BLOCK);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle =
+            CodecRegistry::global().resolve("qlc", &hist).unwrap();
+        let (manifest, bodies) = crate::codecs::frame::compress_sharded(
+            &handle,
+            &symbols,
+            w,
+            &crate::codecs::frame::FrameOptions::serial(),
+        );
+        let (gathered, report) =
+            ring_allgather_shards(&fabric, &manifest, &bodies).unwrap();
+        assert_eq!(gathered, symbols);
+        assert_eq!(report.steps, w - 1);
+        assert!(report.wire_bytes > 0);
+        assert!(
+            report.wire_bytes < report.raw_bytes,
+            "qlc shard bodies must beat raw symbols: {} !< {}",
+            report.wire_bytes,
+            report.raw_bytes
+        );
+        assert!(
+            report.pipelined_time_s
+                <= report.total_time_s() * (1.0 + 1e-9)
+        );
+        // Shape mismatches are errors, not panics.
+        assert!(ring_allgather_shards(
+            &Fabric::pod(3),
+            &manifest,
+            &bodies[..3]
+        )
+        .is_err());
+        assert!(
+            ring_allgather_shards(&fabric, &manifest, &bodies[..3])
+                .is_err()
+        );
     }
 
     #[test]

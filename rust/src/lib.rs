@@ -14,9 +14,11 @@
 //!   distributions;
 //! * [`hw`] — cycle-level decoder hardware model (LUT vs tree);
 //! * [`transport`] — chunk-granular transport layer: the pipelined-hop
-//!   fabric simulator and the threaded bounded-channel backend;
+//!   fabric simulator, the threaded bounded-channel backend, and the
+//!   multi-host TCP backend (QWC1 wire frames + ring rendezvous);
 //! * [`collective`] — bandwidth-bound collective ops with compression
-//!   on the transport;
+//!   on the transport; [`collective::dist`] runs them across OS
+//!   processes over sockets (`qlc worker` / `qlc launch`);
 //! * [`coordinator`] — threaded leader/worker compression pipeline
 //!   placing frame/shard descriptors on a worker pool;
 //! * `runtime` — PJRT executor for the AOT JAX/Pallas artifacts

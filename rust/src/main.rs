@@ -11,6 +11,8 @@
 //!   hw          decoder hardware-model comparison
 //!   harvest     execute the AOT FFN artifact via PJRT and save traces
 //!   serve       run the leader/worker compression pipeline demo
+//!   worker      one rank of a multi-process TCP ring collective
+//!   launch      spawn N local worker processes over 127.0.0.1
 //!
 //! Run `qlc help` for options.
 
@@ -39,7 +41,7 @@ const VALUE_OPTS: &[&str] = &[
     "fig", "table", "codec", "kind", "n", "seed", "scale", "workers", "op",
     "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
     "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
-    "name", "prefix",
+    "name", "prefix", "rank", "world", "listen", "connect", "timeout-s",
 ];
 
 fn main() -> ExitCode {
@@ -63,6 +65,8 @@ fn main() -> ExitCode {
         Some("formats") => cmd_formats(&args),
         Some("harvest") => cmd_harvest(&args),
         Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("launch") => cmd_launch(&args),
         Some("help") | None => {
             print!("{}", HELP);
             Ok(())
@@ -105,6 +109,16 @@ USAGE: qlc <subcommand> [options]
              (needs a build with --features pjrt)
   serve      [--codec C] [--workers W] [--chunk BYTES] [--n SYMBOLS]
              [--shards N]  (emit a sharded manifest instead of frames)
+  worker     --world N --rank R (--listen ADDR | --connect ADDR)
+             [--op allreduce|allgather] [--codec C] [--size N]
+             [--chunk SYMBOLS] [--seed S] [--timeout-s T]
+             [--out FILE] [--json]
+             (rank 0 listens for the rendezvous; other ranks connect;
+              the ring then runs over real TCP sockets)
+  launch     --world N [--op allreduce|allgather] [--codec C] [--size N]
+             [--chunk SYMBOLS] [--seed S] [--timeout-s T] [--json]
+             (spawns N local `qlc worker` processes on 127.0.0.1 and
+              checks all ranks finish with bit-identical results)
 ";
 
 // ---------------------------------------------------------------------------
@@ -617,5 +631,291 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         m.input_bytes as f64 / wall / 1e6,
         m.throughput_mbps()
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Distributed TCP collectives
+
+/// Parse the worker/launch options shared by both subcommands into a
+/// [`dist::WorkerConfig`] template (rank and rendezvous address are
+/// filled in by the caller).
+fn dist_template(
+    args: &Args,
+    world: usize,
+) -> Result<qlc::collective::dist::WorkerConfig, String> {
+    use qlc::collective::dist::{self, DistOp, WorkerConfig};
+    let op = DistOp::parse(&args.opt_or("op", "allreduce"))?;
+    let size = args.opt_usize("size", 1 << 18).map_err(|e| e.to_string())?;
+    let chunk = args
+        .opt_usize("chunk", qlc::transport::DEFAULT_TRANSPORT_CHUNK)
+        .map_err(|e| e.to_string())?;
+    let seed = args.opt_u64("seed", 1).map_err(|e| e.to_string())?;
+    let timeout_s =
+        args.opt_f64("timeout-s", 30.0).map_err(|e| e.to_string())?;
+    if !timeout_s.is_finite() || timeout_s <= 0.0 {
+        return Err("--timeout-s must be a positive number".into());
+    }
+    let mut cfg = WorkerConfig::new(0, world, String::new());
+    cfg.op = op;
+    cfg.codec = args.opt_or("codec", "qlc");
+    cfg.elems = dist::round_size(size, world)?;
+    cfg.chunk_symbols = chunk.max(1);
+    cfg.seed = seed;
+    cfg.timeout = std::time::Duration::from_secs_f64(timeout_s);
+    Ok(cfg)
+}
+
+fn worker_json(
+    outcome: &qlc::collective::dist::DistOutcome,
+    world: usize,
+) -> Json {
+    let r = &outcome.report;
+    Json::obj()
+        .set("rank", outcome.rank)
+        .set("world", world)
+        .set("op", r.op.as_str())
+        .set("transport", r.transport.as_str())
+        .set("steps", r.steps)
+        .set("wire_bytes", r.wire_bytes as usize)
+        .set("raw_bytes", r.raw_bytes as usize)
+        .set("compression_ratio", r.compression_ratio())
+        .set("codec_time_s", r.codec_time_s)
+        .set("network_time_s", r.network_time_s)
+        .set("total_time_s", r.total_time_s())
+        .set("pipelined_time_s", r.pipelined_time_s)
+        .set("overlap_savings", r.overlap_savings())
+        .set("checksum", format!("{:016x}", outcome.checksum))
+}
+
+fn cmd_worker(args: &Args) -> Result<(), String> {
+    use qlc::collective::dist;
+    let world: usize = args
+        .require("world")
+        .map_err(|e| e.to_string())?
+        .parse()
+        .map_err(|_| "--world expects an integer".to_string())?;
+    if world == 0 {
+        return Err("--world must be at least 1".into());
+    }
+    let rank = args.opt_usize("rank", 0).map_err(|e| e.to_string())?;
+    if rank >= world {
+        return Err(format!("--rank {rank} out of range for world {world}"));
+    }
+    let listen = args.opt("listen");
+    let connect = args.opt("connect");
+    let addr = if world == 1 {
+        String::new()
+    } else if rank == 0 {
+        match (listen, connect) {
+            (Some(a), None) => a.to_string(),
+            (None, None) => {
+                return Err("rank 0 requires --listen ADDR".into())
+            }
+            _ => {
+                return Err(
+                    "rank 0 listens for the rendezvous; --connect is for \
+                     ranks > 0"
+                        .into(),
+                )
+            }
+        }
+    } else {
+        match (listen, connect) {
+            (None, Some(a)) => a.to_string(),
+            (None, None) => {
+                return Err(format!("rank {rank} requires --connect ADDR"))
+            }
+            _ => return Err("only rank 0 may --listen".into()),
+        }
+    };
+    let mut cfg = dist_template(args, world)?;
+    cfg.rank = rank;
+    cfg.addr = addr;
+    let outcome = dist::run_worker(&cfg)?;
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, &outcome.result_bytes)
+            .map_err(|e| format!("{path}: {e}"))?;
+    }
+    let r = &outcome.report;
+    if args.has_flag("json") {
+        println!("{}", worker_json(&outcome, world).to_string_pretty());
+    } else {
+        println!(
+            "rank {rank}/{world} {} via {}: {} steps, wire {} B (ratio \
+             {:.3}), wall {:.3} ms pipelined vs {:.3} ms serial ({:.0}% \
+             hidden), checksum {:016x}",
+            r.op,
+            r.transport,
+            r.steps,
+            r.wire_bytes,
+            r.compression_ratio(),
+            r.pipelined_time_s * 1e3,
+            r.total_time_s() * 1e3,
+            r.overlap_savings() * 100.0,
+            outcome.checksum,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_launch(args: &Args) -> Result<(), String> {
+    use qlc::collective::dist;
+    let world = args.opt_usize("world", 4).map_err(|e| e.to_string())?;
+    if world == 0 {
+        return Err("--world must be at least 1".into());
+    }
+    // Validate the shared options up front so a bad flag fails here,
+    // not in N children.
+    let template = dist_template(args, world)?;
+    let addr = dist::free_loopback_addr()?;
+    let exe = std::env::current_exe()
+        .map_err(|e| format!("cannot locate the qlc binary: {e}"))?;
+    let timeout_s = template.timeout.as_secs_f64();
+    let mut children = Vec::with_capacity(world);
+    for rank in 0..world {
+        let mut argv: Vec<String> = vec![
+            "worker".to_string(),
+            "--world".to_string(),
+            world.to_string(),
+            "--rank".to_string(),
+            rank.to_string(),
+            "--op".to_string(),
+            args.opt_or("op", "allreduce"),
+            "--codec".to_string(),
+            template.codec.clone(),
+            "--size".to_string(),
+            template.elems.to_string(),
+            "--chunk".to_string(),
+            template.chunk_symbols.to_string(),
+            "--seed".to_string(),
+            template.seed.to_string(),
+            "--timeout-s".to_string(),
+            timeout_s.to_string(),
+            "--json".to_string(),
+        ];
+        if world > 1 {
+            let role = if rank == 0 { "--listen" } else { "--connect" };
+            argv.push(role.to_string());
+            argv.push(addr.clone());
+        }
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(argv);
+        cmd.stdout(std::process::Stdio::piped());
+        cmd.stderr(std::process::Stdio::piped());
+        children
+            .push(cmd.spawn().map_err(|e| format!("spawn rank {rank}: {e}"))?);
+    }
+    // Poll the whole fleet so one rank's failure surfaces immediately
+    // (and kills the rest) instead of stalling behind rank 0's full
+    // rendezvous timeout and leaking orphan workers.
+    let mut slots: Vec<Option<std::process::Child>> =
+        children.into_iter().map(Some).collect();
+    let mut outputs: Vec<Option<std::process::Output>> =
+        (0..world).map(|_| None).collect();
+    let mut failed: Option<(usize, String)> = None;
+    let mut remaining = world;
+    while remaining > 0 && failed.is_none() {
+        let mut progressed = false;
+        for rank in 0..world {
+            let status = match slots[rank].as_mut() {
+                None => continue,
+                Some(child) => child
+                    .try_wait()
+                    .map_err(|e| format!("wait for rank {rank}: {e}"))?,
+            };
+            let Some(status) = status else { continue };
+            let child = slots[rank].take().expect("child present");
+            let out = child
+                .wait_with_output()
+                .map_err(|e| format!("collect rank {rank}: {e}"))?;
+            remaining -= 1;
+            progressed = true;
+            if !status.success() {
+                failed = Some((
+                    rank,
+                    String::from_utf8_lossy(&out.stderr)
+                        .trim()
+                        .to_string(),
+                ));
+                break;
+            }
+            outputs[rank] = Some(out);
+        }
+        if failed.is_none() && remaining > 0 && !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+    }
+    if let Some((rank, stderr)) = failed {
+        for slot in &mut slots {
+            if let Some(child) = slot.as_mut() {
+                let _ = child.kill();
+            }
+        }
+        for slot in &mut slots {
+            if let Some(mut child) = slot.take() {
+                let _ = child.wait();
+            }
+        }
+        return Err(format!("worker rank {rank} failed: {stderr}"));
+    }
+    let mut reports: Vec<Json> = Vec::with_capacity(world);
+    for (rank, out) in outputs.into_iter().enumerate() {
+        let out = out.expect("all workers reaped");
+        let text = String::from_utf8_lossy(&out.stdout);
+        let json = Json::parse(text.trim()).map_err(|e| {
+            format!("rank {rank} emitted unparseable output: {e}")
+        })?;
+        reports.push(json);
+    }
+    // The acceptance bar: every rank finished with the same bits.
+    let checksum = reports[0]
+        .get("checksum")
+        .and_then(|j| j.as_str())
+        .ok_or("worker output missing checksum")?
+        .to_string();
+    for (rank, j) in reports.iter().enumerate() {
+        let c = j
+            .get("checksum")
+            .and_then(|x| x.as_str())
+            .ok_or("worker output missing checksum")?;
+        if c != checksum {
+            return Err(format!(
+                "rank {rank} checksum {c} != rank 0 checksum {checksum} \
+                 — distributed result diverged"
+            ));
+        }
+    }
+    let scalar = |k: &str| -> f64 {
+        reports[0].get(k).and_then(|j| j.as_f64()).unwrap_or(0.0)
+    };
+    let pipelined = scalar("pipelined_time_s");
+    let total = scalar("total_time_s");
+    let wire = scalar("wire_bytes");
+    let ratio = scalar("compression_ratio");
+    drop(scalar);
+    if args.has_flag("json") {
+        let j = Json::obj()
+            .set("world", world)
+            .set("agree", true)
+            .set("checksum", checksum.as_str())
+            .set("rank0", reports.remove(0));
+        println!("{}", j.to_string_pretty());
+    } else {
+        let hidden = if total > 0.0 {
+            (1.0 - pipelined / total).max(0.0)
+        } else {
+            0.0
+        };
+        println!(
+            "launch x{world} on 127.0.0.1: all ranks agree (checksum \
+             {checksum}); rank 0: wire {} B (ratio {ratio:.3}), wall \
+             {:.3} ms pipelined vs {:.3} ms serial ({:.0}% hidden)",
+            wire as u64,
+            pipelined * 1e3,
+            total * 1e3,
+            hidden * 100.0,
+        );
+    }
     Ok(())
 }

@@ -7,7 +7,7 @@
 //! overlap is what turns "codec on the critical path" into "codec
 //! hidden behind the wire" — the paper's motivating collective setting.
 //!
-//! Two backends implement the [`Link`] trait:
+//! Three backends implement the [`Link`] trait:
 //!
 //! * [`sim::SimLink`] — an in-memory FIFO driven by the token-stepped
 //!   fabric simulator.  Per-chunk encode/decode wall times are recorded
@@ -17,6 +17,10 @@
 //!   worker threads.  The same lockstep chunk exchange runs on real
 //!   cores, and the overlap shows up as measured wall time instead of
 //!   a model.
+//! * [`net::TcpLink`] — real sockets between OS processes: the QWC1
+//!   wire protocol over non-blocking TCP pairs, bootstrapped into a
+//!   ring by [`net::form_ring`].  The same exchange again, now
+//!   spanning hosts (`qlc worker` / `qlc launch`).
 //!
 //! Both backends speak the same hop protocol, [`exchange_hop`]: encode
 //! chunk `k`, send it, receive and decode the peer's chunk `k`, repeat.
@@ -45,9 +49,11 @@
 //! `e_k, d_k ≤ t_k`.  Benches report both numbers plus the overlap
 //! savings `1 - pipelined/serial`.
 
+pub mod net;
 pub mod sim;
 pub mod threaded;
 
+pub use net::{NetConfig, TcpLink};
 pub use sim::{ChunkTiming, HopTrace, SimLink};
 pub use threaded::ThreadedEndpoint;
 

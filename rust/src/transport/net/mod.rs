@@ -1,0 +1,29 @@
+//! Multi-host TCP transport: the third [`Link`](crate::transport::Link)
+//! backend, after the fabric simulator and the threaded channels.
+//!
+//! Three layers, bottom-up:
+//!
+//! * [`wire`] — the length-prefixed QWC1 frame protocol: one
+//!   [`ChunkMsg`](crate::transport::ChunkMsg) per frame, strict
+//!   `Err`-returning validation, hard caps on every untrusted length;
+//! * [`tcp`] — [`TcpLink`], the [`Link`](crate::transport::Link)
+//!   implementation over non-blocking [`std::net::TcpStream`] pairs
+//!   with read/write buffering, bidirectional pumping (no deadlock on
+//!   mutual whole-payload sends) and configurable progress timeouts;
+//! * [`rendezvous`] — [`form_ring`]: rank 0 listens, ranks connect and
+//!   exchange ring-listener addresses, every rank wires sockets to its
+//!   ring neighbours.
+//!
+//! The payoff: `N` OS processes run the exact lockstep chunk exchange
+//! the threaded engine runs on channels, so the overlap of decode(k)
+//! with transfer(k+1) is measured wall time over real sockets — see
+//! [`crate::collective::dist`] and the `qlc worker` / `qlc launch`
+//! subcommands.
+
+pub mod rendezvous;
+pub mod tcp;
+pub mod wire;
+
+pub use rendezvous::form_ring;
+pub use tcp::{NetConfig, TcpLink};
+pub use wire::WireFrame;

@@ -1,0 +1,479 @@
+//! Ring bootstrap over TCP (handshake format QRZ1).
+//!
+//! N OS processes form the same ring topology the threaded backend
+//! wires in-process:
+//!
+//! 1. every rank binds an ephemeral *ring listener*;
+//! 2. rank 0 listens on the rendezvous address; ranks 1..N connect to
+//!    it and send `HELLO {rank, world, ring_addr}`;
+//! 3. rank 0 validates the roster (every rank exactly once, matching
+//!    world) and answers each peer with `WELCOME {addr[0..N]}` — the
+//!    full ring-listener table;
+//! 4. every rank connects to `addr[(rank + 1) % world]` (downstream),
+//!    identifies itself with a `RING {rank}` record, and accepts the
+//!    matching connection from its upstream neighbour.
+//!
+//! Handshake records are length-prefixed and validated (`Err`, not
+//! panic) the same way the data-plane frames are:
+//!
+//! ```text
+//! magic "QRZ1" | kind u8 (1=HELLO, 2=WELCOME, 3=RING) |
+//! rank u32 | world u32 | body_len u32 | body bytes…
+//! ```
+//!
+//! HELLO's body is the sender's ring-listener address; WELCOME's body
+//! is the newline-joined address table; RING has no body.  The
+//! resulting [`TcpLink`] sends to downstream and receives from
+//! upstream — exactly [`threaded::ring`](crate::transport::threaded::ring)
+//! with sockets for channels.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::tcp::{NetConfig, TcpLink};
+
+const RDZV_MAGIC: [u8; 4] = *b"QRZ1";
+const KIND_HELLO: u8 = 1;
+const KIND_WELCOME: u8 = 2;
+const KIND_RING: u8 = 3;
+/// Handshake bodies are tiny (addresses); cap them hard.
+const MAX_BODY: usize = 1 << 16;
+
+fn write_msg(
+    stream: &mut TcpStream,
+    kind: u8,
+    rank: u32,
+    world: u32,
+    body: &[u8],
+) -> Result<(), String> {
+    if body.len() > MAX_BODY {
+        return Err(format!(
+            "rendezvous: handshake body {} exceeds {MAX_BODY} bytes",
+            body.len()
+        ));
+    }
+    let mut buf = Vec::with_capacity(17 + body.len());
+    buf.extend_from_slice(&RDZV_MAGIC);
+    buf.push(kind);
+    buf.extend_from_slice(&rank.to_le_bytes());
+    buf.extend_from_slice(&world.to_le_bytes());
+    buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    buf.extend_from_slice(body);
+    stream
+        .write_all(&buf)
+        .map_err(|e| format!("rendezvous send: {e}"))
+}
+
+fn read_msg(
+    stream: &mut TcpStream,
+) -> Result<(u8, u32, u32, Vec<u8>), String> {
+    let mut head = [0u8; 17];
+    stream
+        .read_exact(&mut head)
+        .map_err(|e| format!("rendezvous recv: {e}"))?;
+    if head[0..4] != RDZV_MAGIC {
+        return Err("rendezvous: bad handshake magic".to_string());
+    }
+    let kind = head[4];
+    let rank = u32::from_le_bytes(head[5..9].try_into().unwrap());
+    let world = u32::from_le_bytes(head[9..13].try_into().unwrap());
+    let len = u32::from_le_bytes(head[13..17].try_into().unwrap()) as usize;
+    if len > MAX_BODY {
+        return Err(format!(
+            "rendezvous: handshake body {len} exceeds {MAX_BODY} bytes"
+        ));
+    }
+    let mut body = vec![0u8; len];
+    stream
+        .read_exact(&mut body)
+        .map_err(|e| format!("rendezvous recv: {e}"))?;
+    Ok((kind, rank, world, body))
+}
+
+/// Connect with retries until `timeout` — the rendezvous listener may
+/// not be up yet when a launcher starts all ranks at once.
+fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "rendezvous: cannot reach {addr} within \
+                         {timeout:?}: {e}"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Accept one connection within `timeout` (std's `TcpListener` has no
+/// native accept timeout, so poll non-blocking).
+fn accept_timeout(
+    listener: &TcpListener,
+    timeout: Duration,
+) -> Result<TcpStream, String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("rendezvous accept: {e}"))?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                // Handshake I/O on the accepted socket is blocking
+                // with explicit timeouts.
+                s.set_nonblocking(false)
+                    .map_err(|e| format!("rendezvous accept: {e}"))?;
+                set_handshake_timeouts(&s, timeout)?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "rendezvous: no peer connected within {timeout:?}"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(format!("rendezvous accept: {e}")),
+        }
+    }
+}
+
+fn set_handshake_timeouts(
+    stream: &TcpStream,
+    timeout: Duration,
+) -> Result<(), String> {
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| format!("rendezvous: set_read_timeout: {e}"))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .map_err(|e| format!("rendezvous: set_write_timeout: {e}"))?;
+    Ok(())
+}
+
+/// `"host:port"` → `"host"` (IPv4 / hostname form).
+fn host_of(addr: &str) -> &str {
+    addr.rsplit_once(':').map(|(h, _)| h).unwrap_or(addr)
+}
+
+/// A listen host that names no concrete interface — advertising it to
+/// a remote peer would point the peer at *itself*.
+fn is_wildcard_host(host: &str) -> bool {
+    matches!(host, "" | "0.0.0.0" | "::" | "[::]")
+}
+
+/// Rank 0's side of the roster exchange: gather HELLOs, answer with
+/// the full address table.  `advertised` is rank 0's ring-listener
+/// address when the listen host names a concrete interface; `None`
+/// means rank 0 listened on a wildcard, in which case the address is
+/// derived from the first accepted connection (the interface the
+/// peers actually reached us on) plus `ring_port`.
+fn gather_roster(
+    rdzv: &TcpListener,
+    advertised: Option<String>,
+    ring_port: u16,
+    world: usize,
+    timeout: Duration,
+) -> Result<Vec<String>, String> {
+    let mut addrs: Vec<Option<String>> = vec![None; world];
+    addrs[0] = advertised;
+    let mut peers: Vec<TcpStream> = Vec::with_capacity(world - 1);
+    for _ in 1..world {
+        let mut s = accept_timeout(rdzv, timeout)?;
+        if addrs[0].is_none() {
+            let ip = s
+                .local_addr()
+                .map_err(|e| format!("rendezvous: local_addr: {e}"))?
+                .ip();
+            addrs[0] =
+                Some(std::net::SocketAddr::new(ip, ring_port).to_string());
+        }
+        let (kind, rank, w, body) = read_msg(&mut s)?;
+        if kind != KIND_HELLO {
+            return Err(format!(
+                "rendezvous: expected HELLO, got record kind {kind}"
+            ));
+        }
+        if w as usize != world {
+            return Err(format!(
+                "rendezvous: peer rank {rank} believes world is {w}, \
+                 not {world}"
+            ));
+        }
+        let rank = rank as usize;
+        if rank == 0 || rank >= world {
+            return Err(format!("rendezvous: peer sent bad rank {rank}"));
+        }
+        if addrs[rank].is_some() {
+            return Err(format!("rendezvous: duplicate rank {rank}"));
+        }
+        let addr = String::from_utf8(body)
+            .map_err(|_| "rendezvous: non-utf8 peer address".to_string())?;
+        addrs[rank] = Some(addr);
+        peers.push(s);
+    }
+    let table: Vec<String> = addrs
+        .into_iter()
+        .map(|a| a.expect("roster complete: every rank reported once"))
+        .collect();
+    let body = table.join("\n");
+    for s in &mut peers {
+        write_msg(s, KIND_WELCOME, 0, world as u32, body.as_bytes())?;
+    }
+    Ok(table)
+}
+
+/// Ranks 1..N: announce our ring listener on the already-connected
+/// rendezvous stream, receive the table.
+fn join_roster(
+    rdzv: &mut TcpStream,
+    my_ring_addr: &str,
+    rank: usize,
+    world: usize,
+) -> Result<Vec<String>, String> {
+    write_msg(
+        rdzv,
+        KIND_HELLO,
+        rank as u32,
+        world as u32,
+        my_ring_addr.as_bytes(),
+    )?;
+    let (kind, _, w, body) = read_msg(rdzv)?;
+    if kind != KIND_WELCOME {
+        return Err(format!(
+            "rendezvous: expected WELCOME, got record kind {kind}"
+        ));
+    }
+    if w as usize != world {
+        return Err(format!(
+            "rendezvous: leader believes world is {w}, not {world}"
+        ));
+    }
+    let text = String::from_utf8(body)
+        .map_err(|_| "rendezvous: non-utf8 address table".to_string())?;
+    let table: Vec<String> = text.split('\n').map(str::to_string).collect();
+    if table.len() != world {
+        return Err(format!(
+            "rendezvous: address table has {} entries for world {world}",
+            table.len()
+        ));
+    }
+    Ok(table)
+}
+
+/// Bootstrap this rank's ring endpoint: rank 0 listens on `addr`,
+/// ranks 1..world connect to it; everyone then wires the ring and
+/// returns a [`TcpLink`] that sends to `(rank + 1) % world` and
+/// receives from `(rank + world - 1) % world`.
+pub fn form_ring(
+    rank: usize,
+    world: usize,
+    addr: &str,
+    cfg: &NetConfig,
+) -> Result<TcpLink, String> {
+    if world < 2 {
+        return Err(
+            "form_ring requires world >= 2 (a ring needs two endpoints); \
+             run world 1 collectives in-process"
+                .to_string(),
+        );
+    }
+    if rank >= world {
+        return Err(format!("rank {rank} out of range for world {world}"));
+    }
+    let timeout = cfg.io_timeout;
+
+    // Roster exchange: everyone ends up with the same ring-listener
+    // address table.  The ring listener is bound *before* the roster
+    // is shared, so no downstream connect can beat it.
+    let (ring_listener, table) = if rank == 0 {
+        let rdzv = TcpListener::bind(addr)
+            .map_err(|e| format!("rendezvous: bind {addr}: {e}"))?;
+        let ring_listener = TcpListener::bind((host_of(addr), 0u16))
+            .map_err(|e| format!("rendezvous: bind ring listener: {e}"))?;
+        let ring_addr = ring_listener
+            .local_addr()
+            .map_err(|e| format!("rendezvous: local_addr: {e}"))?;
+        // A wildcard listen host cannot be advertised (a remote peer
+        // would connect to itself); the concrete interface is learned
+        // from the first accepted rendezvous connection instead.
+        let advertised = if is_wildcard_host(host_of(addr)) {
+            None
+        } else {
+            Some(ring_addr.to_string())
+        };
+        let table = gather_roster(
+            &rdzv,
+            advertised,
+            ring_addr.port(),
+            world,
+            timeout,
+        )?;
+        (ring_listener, table)
+    } else {
+        // The rendezvous stream tells us which local interface
+        // reaches the leader; the ring listener binds on it.
+        let mut rdzv = connect_retry(addr, timeout)?;
+        set_handshake_timeouts(&rdzv, timeout)?;
+        let ip = rdzv
+            .local_addr()
+            .map_err(|e| format!("rendezvous: local_addr: {e}"))?
+            .ip();
+        let ring_listener = TcpListener::bind((ip, 0u16))
+            .map_err(|e| format!("rendezvous: bind ring listener: {e}"))?;
+        let my_ring_addr = ring_listener
+            .local_addr()
+            .map_err(|e| format!("rendezvous: local_addr: {e}"))?
+            .to_string();
+        let table = join_roster(&mut rdzv, &my_ring_addr, rank, world)?;
+        (ring_listener, table)
+    };
+
+    // Wire the ring: connect downstream, identify, accept upstream.
+    let down = &table[(rank + 1) % world];
+    let mut tx = connect_retry(down, timeout)?;
+    set_handshake_timeouts(&tx, timeout)?;
+    write_msg(&mut tx, KIND_RING, rank as u32, world as u32, &[])?;
+
+    let mut rx = accept_timeout(&ring_listener, timeout)?;
+    let (kind, peer, w, _) = read_msg(&mut rx)?;
+    if kind != KIND_RING {
+        return Err(format!(
+            "rendezvous: expected RING identification, got kind {kind}"
+        ));
+    }
+    if w as usize != world {
+        return Err(format!(
+            "rendezvous: ring peer believes world is {w}, not {world}"
+        ));
+    }
+    let upstream = (rank + world - 1) % world;
+    if peer as usize != upstream {
+        return Err(format!(
+            "rendezvous: ring connection from rank {peer}, expected \
+             upstream rank {upstream}"
+        ));
+    }
+    TcpLink::new(tx, rx, *cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::registry::TAG_RAW;
+    use crate::transport::exchange_hop;
+
+    fn free_addr() -> String {
+        TcpListener::bind("127.0.0.1:0")
+            .unwrap()
+            .local_addr()
+            .unwrap()
+            .to_string()
+    }
+
+    #[test]
+    fn ring_routes_to_downstream_neighbour_over_tcp() {
+        let world = 3;
+        let addr = free_addr();
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_secs(20));
+        let mut joined = Vec::new();
+        for rank in 0..world {
+            let addr = addr.clone();
+            joined.push(std::thread::spawn(move || {
+                let mut link =
+                    form_ring(rank, world, &addr, &cfg).unwrap();
+                let symbols = vec![rank as u8; 512];
+                let mut enc = None;
+                let mut dec = None;
+                let ex = exchange_hop(
+                    &mut link, &mut enc, &mut dec, &symbols, &[], 128,
+                )
+                .unwrap();
+                let upstream = ((rank + world - 1) % world) as u8;
+                assert_eq!(ex.symbols, vec![upstream; 512], "rank {rank}");
+            }));
+        }
+        for j in joined {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn wildcard_listen_advertises_concrete_interface() {
+        // Rank 0 listens on 0.0.0.0; the WELCOME table must carry the
+        // interface peers actually reached (here loopback), never the
+        // wildcard — otherwise a remote rank would connect to itself.
+        let port = free_addr().rsplit_once(':').unwrap().1.to_string();
+        let listen = format!("0.0.0.0:{port}");
+        let connect = format!("127.0.0.1:{port}");
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_secs(20));
+        let t0 = std::thread::spawn({
+            let listen = listen.clone();
+            move || form_ring(0, 2, &listen, &cfg).unwrap()
+        });
+        let t1 = std::thread::spawn(move || {
+            form_ring(1, 2, &connect, &cfg).unwrap()
+        });
+        let mut a = t0.join().unwrap();
+        let mut b = t1.join().unwrap();
+        // One lockstep hop proves the ring is live both ways.
+        let ja = std::thread::spawn(move || {
+            let mut enc = None;
+            let mut dec = None;
+            exchange_hop(&mut a, &mut enc, &mut dec, &[1u8; 64], &[], 32)
+                .unwrap()
+                .symbols
+        });
+        let jb = std::thread::spawn(move || {
+            let mut enc = None;
+            let mut dec = None;
+            exchange_hop(&mut b, &mut enc, &mut dec, &[2u8; 64], &[], 32)
+                .unwrap()
+                .symbols
+        });
+        assert_eq!(ja.join().unwrap(), vec![2u8; 64]);
+        assert_eq!(jb.join().unwrap(), vec![1u8; 64]);
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        let cfg = NetConfig::new(TAG_RAW);
+        assert!(form_ring(0, 0, "127.0.0.1:1", &cfg).is_err());
+        assert!(form_ring(0, 1, "127.0.0.1:1", &cfg).is_err());
+        assert!(form_ring(5, 3, "127.0.0.1:1", &cfg).is_err());
+    }
+
+    #[test]
+    fn connect_to_nobody_times_out() {
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_millis(120));
+        // A bound-then-dropped port with nobody listening.
+        let addr = free_addr();
+        let err = form_ring(1, 2, &addr, &cfg).unwrap_err();
+        assert!(err.contains("cannot reach"), "{err}");
+    }
+
+    #[test]
+    fn handshake_records_validate() {
+        // A non-handshake byte stream is rejected, not mis-parsed.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET / HTTP/1.1\r\n\r\n but much longer junk")
+                .unwrap();
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let err = read_msg(&mut s).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+        writer.join().unwrap();
+    }
+}

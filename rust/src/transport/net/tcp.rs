@@ -1,0 +1,417 @@
+//! Socket-backed [`Link`]: one non-blocking [`TcpStream`] to the
+//! downstream neighbour and one from the upstream neighbour, speaking
+//! the [`super::wire`] frame protocol.
+//!
+//! Both streams are non-blocking and every `send`/`recv` *pumps* both
+//! directions: while a send is back-pressured by a full socket buffer
+//! it keeps draining inbound bytes (and vice versa), so the lockstep
+//! send-one/receive-one schedule of
+//! [`exchange_hop`](crate::transport::exchange_hop) can never deadlock
+//! on mutual writes — the in-flight window is bounded by the OS socket
+//! buffers exactly the way the threaded backend is bounded by its
+//! channel depth.  A configurable progress timeout turns a stalled or
+//! silent peer into an `Err`, mirroring the threaded backend's
+//! `recv_timeout` failure mode.
+//!
+//! Frame ordering is validated on both directions: the link stamps a
+//! per-direction hop ordinal (incremented after each `last` chunk) and
+//! checks that inbound frames arrive with the expected hop/seq and the
+//! agreed codec tag, so a desynchronized or foreign stream fails fast
+//! instead of decoding garbage.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::wire;
+use crate::transport::{ChunkMsg, Link};
+
+/// How long the I/O pump sleeps between polls when neither direction
+/// can make progress.
+const POLL_SLEEP: Duration = Duration::from_micros(100);
+/// Read granularity of the inbound pump.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Socket link configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Maximum time with zero forward progress (no byte written or
+    /// read) before `send`/`recv` gives up with an `Err`.
+    pub io_timeout: Duration,
+    /// Wire tag of the transport codec both endpoints agreed on
+    /// apriori (tables are never shipped per hop); stamped on outgoing
+    /// frames and enforced on inbound ones.
+    pub codec_tag: u8,
+}
+
+impl NetConfig {
+    pub fn new(codec_tag: u8) -> NetConfig {
+        NetConfig { io_timeout: Duration::from_secs(30), codec_tag }
+    }
+
+    pub fn with_timeout(mut self, io_timeout: Duration) -> NetConfig {
+        self.io_timeout = io_timeout;
+        self
+    }
+}
+
+/// One worker's socket endpoints in the ring: `tx` to the downstream
+/// neighbour, `rx` from the upstream one.
+pub struct TcpLink {
+    tx: TcpStream,
+    rx: TcpStream,
+    cfg: NetConfig,
+    /// Outbound bytes not yet accepted by the OS (`out[out_pos..]`).
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Inbound bytes not yet framed.
+    inbuf: Vec<u8>,
+    rx_eof: bool,
+    send_hop: u32,
+    recv_hop: u32,
+    recv_seq: u32,
+}
+
+impl TcpLink {
+    /// Wrap a connected stream pair.  Switches both streams to
+    /// non-blocking mode and disables Nagle on the send side (hops are
+    /// latency-sensitive lockstep exchanges).
+    pub fn new(
+        tx: TcpStream,
+        rx: TcpStream,
+        cfg: NetConfig,
+    ) -> Result<TcpLink, String> {
+        tx.set_nodelay(true)
+            .map_err(|e| format!("tcp link: set_nodelay: {e}"))?;
+        tx.set_nonblocking(true)
+            .map_err(|e| format!("tcp link: set_nonblocking(tx): {e}"))?;
+        rx.set_nonblocking(true)
+            .map_err(|e| format!("tcp link: set_nonblocking(rx): {e}"))?;
+        Ok(TcpLink {
+            tx,
+            rx,
+            cfg,
+            out: Vec::new(),
+            out_pos: 0,
+            inbuf: Vec::new(),
+            rx_eof: false,
+            send_hop: 0,
+            recv_hop: 0,
+            recv_seq: 0,
+        })
+    }
+
+    /// Bytes currently queued for the downstream peer.
+    pub fn pending_out(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    /// Push queued bytes into the socket; `Ok(true)` if any moved.
+    fn try_flush(&mut self) -> Result<bool, String> {
+        let mut progressed = false;
+        while self.out_pos < self.out.len() {
+            match self.tx.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    return Err(
+                        "tcp send: downstream peer closed the connection"
+                            .to_string(),
+                    )
+                }
+                Ok(n) => {
+                    self.out_pos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("tcp send: {e}")),
+            }
+        }
+        if self.out_pos == self.out.len() && self.out_pos > 0 {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+        Ok(progressed)
+    }
+
+    /// Drain available inbound bytes; `Ok(true)` if any arrived.
+    fn try_fill(&mut self) -> Result<bool, String> {
+        if self.rx_eof {
+            return Ok(false);
+        }
+        let mut progressed = false;
+        let mut buf = [0u8; READ_CHUNK];
+        loop {
+            match self.rx.read(&mut buf) {
+                Ok(0) => {
+                    self.rx_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&buf[..n]);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("tcp recv: {e}")),
+            }
+        }
+        Ok(progressed)
+    }
+}
+
+impl Link for TcpLink {
+    /// Frame `msg` and push it out, pumping the inbound direction
+    /// whenever the socket back-pressures so mutual sends cannot
+    /// deadlock.  Returns once every byte is in the OS send buffer.
+    fn send(&mut self, msg: ChunkMsg) -> Result<(), String> {
+        let last = msg.last;
+        wire::encode_frame(self.send_hop, self.cfg.codec_tag, &msg, &mut self.out)?;
+        if last {
+            self.send_hop = self.send_hop.wrapping_add(1);
+        }
+        let mut deadline = Instant::now() + self.cfg.io_timeout;
+        while self.out_pos < self.out.len() {
+            let wrote = self.try_flush()?;
+            let read = self.try_fill()?;
+            if wrote || read {
+                deadline = Instant::now() + self.cfg.io_timeout;
+            } else if Instant::now() >= deadline {
+                return Err(format!(
+                    "tcp send: no progress for {:?} ({} bytes still \
+                     queued; peer stalled?)",
+                    self.cfg.io_timeout,
+                    self.pending_out()
+                ));
+            } else {
+                std::thread::sleep(POLL_SLEEP);
+            }
+        }
+        Ok(())
+    }
+
+    /// Pump until one complete frame is buffered, validate its framing
+    /// (codec tag, hop/seq order) and hand back the [`ChunkMsg`].
+    fn recv(&mut self) -> Result<ChunkMsg, String> {
+        let mut deadline = Instant::now() + self.cfg.io_timeout;
+        loop {
+            if let Some((frame, used)) = wire::decode_frame(&self.inbuf)? {
+                self.inbuf.drain(..used);
+                if frame.codec_tag != self.cfg.codec_tag {
+                    return Err(format!(
+                        "tcp recv: frame codec tag {} does not match the \
+                         agreed transport codec tag {}",
+                        frame.codec_tag, self.cfg.codec_tag
+                    ));
+                }
+                if frame.hop != self.recv_hop
+                    || frame.msg.seq != self.recv_seq
+                {
+                    return Err(format!(
+                        "tcp recv: out-of-order frame hop {} seq {} \
+                         (expected hop {} seq {})",
+                        frame.hop,
+                        frame.msg.seq,
+                        self.recv_hop,
+                        self.recv_seq
+                    ));
+                }
+                if frame.msg.last {
+                    self.recv_hop = self.recv_hop.wrapping_add(1);
+                    self.recv_seq = 0;
+                } else {
+                    self.recv_seq += 1;
+                }
+                return Ok(frame.msg);
+            }
+            if self.rx_eof {
+                return Err(if self.inbuf.is_empty() {
+                    "tcp recv: upstream peer disconnected".to_string()
+                } else {
+                    "tcp recv: upstream peer disconnected mid-frame"
+                        .to_string()
+                });
+            }
+            let read = self.try_fill()?;
+            let wrote = self.try_flush()?;
+            if read || wrote {
+                deadline = Instant::now() + self.cfg.io_timeout;
+            } else if Instant::now() >= deadline {
+                return Err(format!(
+                    "tcp recv: no data for {:?} (peer stalled?)",
+                    self.cfg.io_timeout
+                ));
+            } else {
+                std::thread::sleep(POLL_SLEEP);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    use crate::codecs::registry::TAG_RAW;
+    use crate::transport::exchange_hop;
+
+    /// Two fully-wired 2-ring endpoints over loopback: `a.tx → b.rx`
+    /// and `b.tx → a.rx`, plus raw handles onto the b→a wire for fault
+    /// injection.
+    fn loopback_pair(cfg: NetConfig) -> (TcpLink, TcpLink, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a_tx = TcpStream::connect(addr).unwrap();
+        let (b_rx, _) = listener.accept().unwrap();
+        let b_tx = TcpStream::connect(addr).unwrap();
+        let (a_rx, _) = listener.accept().unwrap();
+        let raw_b_tx = b_tx.try_clone().unwrap();
+        let a = TcpLink::new(a_tx, a_rx, cfg).unwrap();
+        let b = TcpLink::new(b_tx, b_rx, cfg).unwrap();
+        (a, b, raw_b_tx)
+    }
+
+    fn msg(seq: u32, last: bool, payload: Vec<u8>) -> ChunkMsg {
+        ChunkMsg {
+            seq,
+            last,
+            n_symbols: payload.len(),
+            payload,
+            scales: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn chunks_roundtrip_over_loopback() {
+        let cfg = NetConfig::new(TAG_RAW);
+        let (mut a, mut b, _raw) = loopback_pair(cfg);
+        for hop in 0..3u8 {
+            a.send(msg(0, false, vec![hop; 10])).unwrap();
+            a.send(msg(1, true, vec![hop ^ 0xFF; 5])).unwrap();
+            let m0 = b.recv().unwrap();
+            assert_eq!(m0.seq, 0);
+            assert!(!m0.last);
+            assert_eq!(m0.payload, vec![hop; 10]);
+            let m1 = b.recv().unwrap();
+            assert!(m1.last);
+            assert_eq!(m1.payload, vec![hop ^ 0xFF; 5]);
+        }
+    }
+
+    #[test]
+    fn exchange_hop_runs_the_two_ring() {
+        let cfg = NetConfig::new(TAG_RAW);
+        let (mut a, mut b, _raw) = loopback_pair(cfg);
+        let data_a: Vec<u8> = (0..40_000).map(|i| (i % 251) as u8).collect();
+        let data_b: Vec<u8> = (0..40_000).map(|i| (i % 13) as u8).collect();
+        let expect_a = data_b.clone();
+        let expect_b = data_a.clone();
+        let ta = std::thread::spawn(move || {
+            let mut enc = None;
+            let mut dec = None;
+            let scales = vec![2.5f32; 4];
+            let ex = exchange_hop(
+                &mut a, &mut enc, &mut dec, &data_a, &scales, 1024,
+            )
+            .unwrap();
+            assert_eq!(ex.symbols, expect_a);
+            assert_eq!(ex.scales, vec![2.5f32; 4]);
+        });
+        let tb = std::thread::spawn(move || {
+            let mut enc = None;
+            let mut dec = None;
+            let scales = vec![2.5f32; 4];
+            let ex = exchange_hop(
+                &mut b, &mut enc, &mut dec, &data_b, &scales, 1024,
+            )
+            .unwrap();
+            assert_eq!(ex.symbols, expect_b);
+        });
+        ta.join().unwrap();
+        tb.join().unwrap();
+    }
+
+    #[test]
+    fn large_mutual_whole_payload_hop_does_not_deadlock() {
+        // Both sides send a multi-megabyte single chunk first (the
+        // chunk_symbols = usize::MAX configuration): without the
+        // read-while-write pump this would deadlock on full socket
+        // buffers.
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_secs(20));
+        let (mut a, mut b, _raw) = loopback_pair(cfg);
+        let big: Vec<u8> = (0..4 << 20).map(|i| (i % 255) as u8).collect();
+        let big2 = big.clone();
+        let expect = big.clone();
+        let ta = std::thread::spawn(move || {
+            let mut enc = None;
+            let mut dec = None;
+            exchange_hop(
+                &mut a, &mut enc, &mut dec, &big, &[], usize::MAX,
+            )
+            .unwrap()
+            .symbols
+        });
+        let tb = std::thread::spawn(move || {
+            let mut enc = None;
+            let mut dec = None;
+            exchange_hop(
+                &mut b, &mut enc, &mut dec, &big2, &[], usize::MAX,
+            )
+            .unwrap()
+            .symbols
+        });
+        assert_eq!(ta.join().unwrap(), expect);
+        assert_eq!(tb.join().unwrap(), expect);
+    }
+
+    #[test]
+    fn silent_peer_times_out() {
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_millis(50));
+        let (mut a, _b, _raw) = loopback_pair(cfg);
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("no data"), "{err}");
+    }
+
+    #[test]
+    fn disconnected_peer_is_an_error() {
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_secs(5));
+        let (mut a, b, raw) = loopback_pair(cfg);
+        drop(b);
+        drop(raw);
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("disconnected"), "{err}");
+    }
+
+    #[test]
+    fn garbage_on_the_wire_is_an_error_not_a_hang() {
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_secs(5));
+        let (mut a, _b, mut raw) = loopback_pair(cfg);
+        raw.write_all(b"definitely not a QWC1 frame").unwrap();
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn codec_tag_mismatch_rejected() {
+        let (mut a, b, _raw) =
+            loopback_pair(NetConfig::new(TAG_RAW));
+        // Rebuild b with a different agreed tag.
+        let mut b = TcpLink { cfg: NetConfig::new(3), ..b };
+        b.send(msg(0, true, vec![1, 2, 3])).unwrap();
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("codec tag"), "{err}");
+    }
+
+    #[test]
+    fn out_of_order_frames_rejected() {
+        let (mut a, mut b, _raw) =
+            loopback_pair(NetConfig::new(TAG_RAW));
+        b.send(msg(5, true, vec![9])).unwrap(); // expected seq 0
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("out-of-order"), "{err}");
+    }
+}

@@ -1,0 +1,399 @@
+//! Length-prefixed wire protocol for chunk hops (format QWC1).
+//!
+//! One [`ChunkMsg`] travels as one frame:
+//!
+//! ```text
+//! magic "QWC1" | flags u8 (bit0 = last chunk of this hop) |
+//! codec_tag u8 | hop u32 | seq u32 | n_symbols u32 | n_scales u32 |
+//! payload_len u32 | payload bytes… | scales (f32 LE × n_scales)
+//! ```
+//!
+//! All integers are little-endian.  The header is fixed-size
+//! ([`HEADER_LEN`] bytes) and fully self-delimiting: `payload_len` and
+//! `n_scales` bound the variable tail, so a receiver can frame a byte
+//! stream without peeking past the current record.
+//!
+//! Validation is strict and `Err`-returning, never panicking: bad
+//! magic, unknown flag bits, lengths over the hard caps, and symbol
+//! counts that cannot fit the payload (every codec in the registry
+//! emits ≥ 1 bit per symbol) are all rejected *before* any allocation
+//! sized by untrusted fields.  [`decode_frame`] distinguishes "frame
+//! incomplete, read more bytes" (`Ok(None)`) from corruption (`Err`).
+
+use crate::transport::ChunkMsg;
+
+pub const MAGIC: [u8; 4] = *b"QWC1";
+/// Fixed frame header: magic, flags, codec tag, hop, seq, n_symbols,
+/// n_scales, payload_len.
+pub const HEADER_LEN: usize = 4 + 1 + 1 + 4 + 4 + 4 + 4 + 4;
+/// Flag bit: this is the final chunk of its hop.
+pub const FLAG_LAST: u8 = 1;
+/// Hard cap on a single chunk payload (1 GiB).  A hostile header can
+/// therefore never force more than this in buffering.
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+/// Hard cap on per-chunk shared scales (2^26 blocks = 2 Gi symbols).
+pub const MAX_SCALES: usize = 1 << 26;
+
+/// A decoded wire frame: the transported [`ChunkMsg`] plus the framing
+/// identity the link layer validates (hop ordinal, codec tag).
+#[derive(Clone, Debug)]
+pub struct WireFrame {
+    /// Hop ordinal on this link (increments after each `last` chunk).
+    pub hop: u32,
+    /// Wire tag of the transport codec both endpoints agreed on.
+    pub codec_tag: u8,
+    pub msg: ChunkMsg,
+}
+
+/// Shared sanity rule: a chunk that declares `n_symbols` must carry at
+/// least one bit per symbol, and a zero-symbol chunk carries no
+/// payload at all.
+fn check_symbol_payload(n_symbols: usize, payload_len: usize) -> Result<(), String> {
+    if n_symbols == 0 && payload_len != 0 {
+        return Err(format!(
+            "frame declares 0 symbols but {payload_len} payload bytes"
+        ));
+    }
+    if n_symbols as u64 > payload_len as u64 * 8 {
+        return Err(format!(
+            "frame declares {n_symbols} symbols in {payload_len} payload \
+             bytes (< 1 bit/symbol)"
+        ));
+    }
+    Ok(())
+}
+
+/// Serialize `msg` as one wire frame appended to `out`.
+pub fn encode_frame(
+    hop: u32,
+    codec_tag: u8,
+    msg: &ChunkMsg,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    if msg.payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(format!(
+            "chunk payload {} exceeds the {MAX_PAYLOAD_BYTES}-byte frame cap",
+            msg.payload.len()
+        ));
+    }
+    if msg.scales.len() > MAX_SCALES {
+        return Err(format!(
+            "chunk carries {} scales (cap {MAX_SCALES})",
+            msg.scales.len()
+        ));
+    }
+    if msg.n_symbols > u32::MAX as usize {
+        return Err(format!(
+            "chunk symbol count {} overflows the u32 frame field",
+            msg.n_symbols
+        ));
+    }
+    check_symbol_payload(msg.n_symbols, msg.payload.len())?;
+    out.reserve(HEADER_LEN + msg.payload.len() + msg.scales.len() * 4);
+    out.extend_from_slice(&MAGIC);
+    out.push(if msg.last { FLAG_LAST } else { 0 });
+    out.push(codec_tag);
+    out.extend_from_slice(&hop.to_le_bytes());
+    out.extend_from_slice(&msg.seq.to_le_bytes());
+    out.extend_from_slice(&(msg.n_symbols as u32).to_le_bytes());
+    out.extend_from_slice(&(msg.scales.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(msg.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&msg.payload);
+    for s in &msg.scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    Ok(())
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete, valid frame;
+///   `consumed` bytes belong to it.
+/// * `Ok(None)` — the (so-far valid) frame is incomplete; read more.
+/// * `Err(_)` — the stream is corrupt and the link must be torn down.
+///
+/// Header fields are validated before the payload is complete, so a
+/// hostile length never buffers more than [`MAX_PAYLOAD_BYTES`].
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(WireFrame, usize)>, String> {
+    // Reject a wrong magic as soon as the first bytes disagree — a
+    // desynchronized stream fails fast instead of waiting on a bogus
+    // "length".
+    let probe = buf.len().min(4);
+    if buf[..probe] != MAGIC[..probe] {
+        return Err("bad frame magic (stream desynchronized?)".to_string());
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let flags = buf[4];
+    if flags & !FLAG_LAST != 0 {
+        return Err(format!("unknown frame flag bits {flags:#04x}"));
+    }
+    let codec_tag = buf[5];
+    let hop = u32::from_le_bytes(buf[6..10].try_into().unwrap());
+    let seq = u32::from_le_bytes(buf[10..14].try_into().unwrap());
+    let n_symbols = u32::from_le_bytes(buf[14..18].try_into().unwrap()) as usize;
+    let n_scales = u32::from_le_bytes(buf[18..22].try_into().unwrap()) as usize;
+    let payload_len =
+        u32::from_le_bytes(buf[22..26].try_into().unwrap()) as usize;
+    if payload_len > MAX_PAYLOAD_BYTES {
+        return Err(format!(
+            "frame payload length {payload_len} exceeds the \
+             {MAX_PAYLOAD_BYTES}-byte cap"
+        ));
+    }
+    if n_scales > MAX_SCALES {
+        return Err(format!("frame scale count {n_scales} exceeds cap"));
+    }
+    check_symbol_payload(n_symbols, payload_len)?;
+    let total = HEADER_LEN + payload_len + n_scales * 4;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = buf[HEADER_LEN..HEADER_LEN + payload_len].to_vec();
+    let mut scales = Vec::with_capacity(n_scales);
+    for c in buf[HEADER_LEN + payload_len..total].chunks_exact(4) {
+        scales.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    let frame = WireFrame {
+        hop,
+        codec_tag,
+        msg: ChunkMsg {
+            seq,
+            last: flags & FLAG_LAST != 0,
+            n_symbols,
+            payload,
+            scales,
+        },
+    };
+    Ok(Some((frame, total)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn arb_msg(rng: &mut Rng, size: usize) -> ChunkMsg {
+        let n_payload = rng.below(size as u64 + 1) as usize;
+        let mut payload = vec![0u8; n_payload];
+        rng.fill_bytes(&mut payload);
+        // Any count the ≥1-bit rule admits (0 symbols ⇒ 0 payload).
+        let n_symbols = if n_payload == 0 {
+            0
+        } else {
+            1 + rng.below((n_payload as u64 * 8).min(u32::MAX as u64)) as usize
+        };
+        let scales: Vec<f32> = (0..rng.below(9))
+            .map(|i| i as f32 * 0.5 - 1.0)
+            .collect();
+        ChunkMsg {
+            seq: rng.below(1 << 20) as u32,
+            last: rng.below(2) == 0,
+            n_symbols,
+            payload,
+            scales,
+        }
+    }
+
+    fn assert_msg_eq(a: &ChunkMsg, b: &ChunkMsg) {
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.last, b.last);
+        assert_eq!(a.n_symbols, b.n_symbols);
+        assert_eq!(a.payload, b.payload);
+        assert_eq!(a.scales, b.scales);
+    }
+
+    #[test]
+    fn frame_roundtrips() {
+        let mut rng = Rng::new(1);
+        for case in 0..64 {
+            let msg = arb_msg(&mut rng, 1 + case * 7);
+            let mut buf = Vec::new();
+            encode_frame(case as u32, 2, &msg, &mut buf).unwrap();
+            let (frame, used) = decode_frame(&buf).unwrap().unwrap();
+            assert_eq!(used, buf.len(), "case {case}");
+            assert_eq!(frame.hop, case as u32);
+            assert_eq!(frame.codec_tag, 2);
+            assert_msg_eq(&frame.msg, &msg);
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_consume_exactly() {
+        let mut rng = Rng::new(2);
+        let a = arb_msg(&mut rng, 100);
+        let b = arb_msg(&mut rng, 50);
+        let mut buf = Vec::new();
+        encode_frame(0, 1, &a, &mut buf).unwrap();
+        let first_len = buf.len();
+        encode_frame(0, 1, &b, &mut buf).unwrap();
+        let (fa, ua) = decode_frame(&buf).unwrap().unwrap();
+        assert_eq!(ua, first_len);
+        assert_msg_eq(&fa.msg, &a);
+        let (fb, ub) = decode_frame(&buf[ua..]).unwrap().unwrap();
+        assert_eq!(ua + ub, buf.len());
+        assert_msg_eq(&fb.msg, &b);
+    }
+
+    #[test]
+    fn truncated_frames_ask_for_more_bytes() {
+        let msg = ChunkMsg {
+            seq: 3,
+            last: true,
+            n_symbols: 8,
+            payload: vec![7u8; 8],
+            scales: vec![1.5],
+        };
+        let mut buf = Vec::new();
+        encode_frame(1, 2, &msg, &mut buf).unwrap();
+        // Every proper prefix is "incomplete", never Err, never panic.
+        for keep in 0..buf.len() {
+            assert!(
+                matches!(decode_frame(&buf[..keep]), Ok(None)),
+                "prefix {keep}"
+            );
+        }
+        assert!(decode_frame(&buf).unwrap().is_some());
+    }
+
+    #[test]
+    fn bad_magic_and_flags_rejected() {
+        let msg = ChunkMsg {
+            seq: 0,
+            last: false,
+            n_symbols: 1,
+            payload: vec![0xAA],
+            scales: Vec::new(),
+        };
+        let mut buf = Vec::new();
+        encode_frame(0, 0, &msg, &mut buf).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(decode_frame(&bad).is_err());
+        // A wrong magic fails even on a one-byte prefix.
+        assert!(decode_frame(&bad[..1]).is_err());
+
+        let mut bad = buf.clone();
+        bad[4] |= 0x80; // unknown flag bit
+        assert!(decode_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn hostile_lengths_rejected_before_buffering() {
+        let msg = ChunkMsg {
+            seq: 0,
+            last: true,
+            n_symbols: 4,
+            payload: vec![1, 2, 3, 4],
+            scales: Vec::new(),
+        };
+        let mut buf = Vec::new();
+        encode_frame(0, 1, &msg, &mut buf).unwrap();
+
+        // Payload length over the cap: Err even though the bytes for
+        // it are "missing" (no Ok(None) stall on a hostile length).
+        let mut bad = buf.clone();
+        bad[22..26]
+            .copy_from_slice(&((MAX_PAYLOAD_BYTES as u32) + 1).to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+
+        // Scale count over the cap.
+        let mut bad = buf.clone();
+        bad[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+
+        // More symbols than payload bits.
+        let mut bad = buf.clone();
+        bad[14..18].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+
+        // Symbols declared with an empty payload.
+        let mut bad = buf;
+        bad[14..18].copy_from_slice(&1u32.to_le_bytes());
+        bad[22..26].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn encode_rejects_overflowing_messages() {
+        let mut out = Vec::new();
+        // Symbol count that cannot fit the payload.
+        let msg = ChunkMsg {
+            seq: 0,
+            last: false,
+            n_symbols: 9,
+            payload: vec![0u8; 1],
+            scales: Vec::new(),
+        };
+        assert!(encode_frame(0, 0, &msg, &mut out).is_err());
+        // Zero symbols with a non-empty payload.
+        let msg = ChunkMsg {
+            seq: 0,
+            last: false,
+            n_symbols: 0,
+            payload: vec![0u8; 1],
+            scales: Vec::new(),
+        };
+        assert!(encode_frame(0, 0, &msg, &mut out).is_err());
+        assert!(out.is_empty(), "failed encodes must not emit bytes");
+    }
+
+    #[test]
+    fn prop_corrupt_frames_never_panic() {
+        // Fuzz the validator: bit flips, truncations and garbage
+        // splices must yield Ok(None), Ok(frame) or Err — never a
+        // panic, and never a frame larger than the buffer claims.
+        prop::check(
+            "wire frame fuzz",
+            prop::Config { cases: 96, ..Default::default() },
+            |rng, size| {
+                let msg = arb_msg(rng, size.max(4));
+                let mut buf = Vec::new();
+                encode_frame(
+                    rng.below(1 << 16) as u32,
+                    rng.below(7) as u8,
+                    &msg,
+                    &mut buf,
+                )
+                .map_err(|e| e.to_string())?;
+                for _ in 0..16 {
+                    let mut corrupt = buf.clone();
+                    match rng.below(3) {
+                        0 => {
+                            let i = rng.below(corrupt.len() as u64) as usize;
+                            corrupt[i] ^= 1 << rng.below(8);
+                        }
+                        1 => {
+                            let keep =
+                                rng.below(corrupt.len() as u64) as usize;
+                            corrupt.truncate(keep);
+                        }
+                        _ => {
+                            let i = rng.below(corrupt.len() as u64) as usize;
+                            let mut junk =
+                                vec![0u8; 8.min(corrupt.len() - i)];
+                            rng.fill_bytes(&mut junk);
+                            corrupt[i..i + junk.len()]
+                                .copy_from_slice(&junk);
+                        }
+                    }
+                    match decode_frame(&corrupt) {
+                        Ok(Some((_, used))) => {
+                            if used > corrupt.len() {
+                                return Err(format!(
+                                    "consumed {used} of {} bytes",
+                                    corrupt.len()
+                                ));
+                            }
+                        }
+                        Ok(None) | Err(_) => {}
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -6,8 +6,17 @@
 //! Channels are bounded (`depth` chunks) so a fast encoder cannot run
 //! unboundedly ahead of a slow decoder — backpressure, not buffering,
 //! paces the pipeline, exactly like a NIC send queue.
+//!
+//! Failure modes mirror the TCP backend's: a dropped peer surfaces as
+//! `Err` from `send`/`recv` (never a panic or a hang), and
+//! [`ring_with_timeout`] adds a receive timeout so a peer that is
+//! alive but silent fails the exchange the same way a stalled socket
+//! does.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender,
+};
+use std::time::Duration;
 
 use super::{ChunkMsg, Link};
 
@@ -16,6 +25,8 @@ use super::{ChunkMsg, Link};
 pub struct ThreadedEndpoint {
     tx: SyncSender<ChunkMsg>,
     rx: Receiver<ChunkMsg>,
+    /// `Some` ⇒ `recv` gives up after this long without a chunk.
+    timeout: Option<Duration>,
 }
 
 impl Link for ThreadedEndpoint {
@@ -26,16 +37,49 @@ impl Link for ThreadedEndpoint {
     }
 
     fn recv(&mut self) -> Result<ChunkMsg, String> {
-        self.rx
-            .recv()
-            .map_err(|_| "ring recv: upstream peer hung up".to_string())
+        match self.timeout {
+            None => self
+                .rx
+                .recv()
+                .map_err(|_| "ring recv: upstream peer hung up".to_string()),
+            Some(t) => match self.rx.recv_timeout(t) {
+                Ok(msg) => Ok(msg),
+                Err(RecvTimeoutError::Timeout) => Err(format!(
+                    "ring recv: no chunk from upstream within {t:?} \
+                     (peer stalled?)"
+                )),
+                Err(RecvTimeoutError::Disconnected) => {
+                    Err("ring recv: upstream peer hung up".to_string())
+                }
+            },
+        }
     }
 }
 
 /// Build the ring topology: endpoint `i` sends to `(i+1) % workers`.
 /// `depth` is the per-link chunk buffer (must be ≥ 1 for the lockstep
-/// exchange to make progress).
+/// exchange to make progress).  Receives block indefinitely; see
+/// [`ring_with_timeout`] for the bounded-wait variant.
 pub fn ring(workers: usize, depth: usize) -> Vec<ThreadedEndpoint> {
+    wire_ring(workers, depth, None)
+}
+
+/// [`ring`] with a receive timeout per endpoint — the in-process
+/// analogue of the TCP backend's progress timeout, so both transports
+/// turn a stalled peer into the same `Err` instead of hanging.
+pub fn ring_with_timeout(
+    workers: usize,
+    depth: usize,
+    timeout: Duration,
+) -> Vec<ThreadedEndpoint> {
+    wire_ring(workers, depth, Some(timeout))
+}
+
+fn wire_ring(
+    workers: usize,
+    depth: usize,
+    timeout: Option<Duration>,
+) -> Vec<ThreadedEndpoint> {
     let depth = depth.max(1);
     let mut senders: Vec<Option<SyncSender<ChunkMsg>>> =
         (0..workers).map(|_| None).collect();
@@ -52,6 +96,7 @@ pub fn ring(workers: usize, depth: usize) -> Vec<ThreadedEndpoint> {
         .map(|(tx, rx)| ThreadedEndpoint {
             tx: tx.expect("ring wiring"),
             rx: rx.expect("ring wiring"),
+            timeout,
         })
         .collect()
 }
@@ -124,5 +169,16 @@ mod tests {
         };
         assert!(a.send(msg).is_err());
         assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn silent_but_alive_peer_times_out() {
+        let mut endpoints =
+            ring_with_timeout(2, 1, Duration::from_millis(40));
+        // Endpoint b stays alive (channels open) but never sends.
+        let _quiet = endpoints.pop().unwrap();
+        let mut a = endpoints.pop().unwrap();
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("no chunk"), "{err}");
     }
 }

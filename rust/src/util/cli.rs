@@ -64,6 +64,14 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
+    /// The option's value, or an error naming it — for options a
+    /// subcommand requires even though the parser treats them as
+    /// optional.
+    pub fn require(&self, key: &str) -> Result<&str, CliError> {
+        self.opt(key)
+            .ok_or_else(|| CliError(format!("--{key} VALUE is required")))
+    }
+
     pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.opt(key) {
             None => Ok(default),
@@ -148,5 +156,13 @@ mod tests {
     fn bad_number_errors() {
         let a = parse(&v(&["x", "--n", "abc"]), &["n"]).unwrap();
         assert!(a.opt_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn require_names_the_missing_option() {
+        let a = parse(&v(&["x", "--n", "3"]), &["n", "world"]).unwrap();
+        assert_eq!(a.require("n").unwrap(), "3");
+        let err = a.require("world").unwrap_err();
+        assert!(err.to_string().contains("--world"), "{err}");
     }
 }

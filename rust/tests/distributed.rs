@@ -1,0 +1,219 @@
+//! Loopback multi-process distributed collective tests: spawn real
+//! `qlc worker` processes that rendezvous over 127.0.0.1 TCP, run the
+//! ring collective, and check the result against the in-process
+//! threaded engine bit-for-bit.  This is the acceptance path for the
+//! TCP transport: same inputs, same codec tables, different transport
+//! — identical bits.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use qlc::collective::dist;
+use qlc::collective::engine::threaded_allreduce;
+use qlc::collective::Transport;
+use qlc::formats::BLOCK;
+
+fn qlc_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_qlc"))
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("qlc-dist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn four_process_allreduce_matches_threaded_engine_bit_for_bit() {
+    let world = 4usize;
+    let elems = world * BLOCK * 8; // per-rank f32s, world×BLOCK aligned
+    let seed = 7u64;
+    let addr = dist::free_loopback_addr().unwrap();
+    let dir = tmp("allreduce");
+
+    let mut children = Vec::new();
+    for rank in 0..world {
+        let out = dir.join(format!("rank{rank}.f32"));
+        let mut argv: Vec<String> = vec![
+            "worker".to_string(),
+            "--world".to_string(),
+            "4".to_string(),
+            "--rank".to_string(),
+            rank.to_string(),
+            "--codec".to_string(),
+            "qlc".to_string(),
+            "--size".to_string(),
+            elems.to_string(),
+            "--seed".to_string(),
+            "7".to_string(),
+            "--timeout-s".to_string(),
+            "60".to_string(),
+            "--json".to_string(),
+            "--out".to_string(),
+            out.to_str().unwrap().to_string(),
+        ];
+        let role = if rank == 0 { "--listen" } else { "--connect" };
+        argv.push(role.to_string());
+        argv.push(addr.clone());
+        let mut cmd = qlc_bin();
+        cmd.args(argv);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        children.push(cmd.spawn().unwrap());
+    }
+    let mut checksums = Vec::new();
+    for (rank, child) in children.into_iter().enumerate() {
+        let out = child.wait_with_output().unwrap();
+        assert!(
+            out.status.success(),
+            "rank {rank} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        let json = qlc::util::json::Json::parse(text.trim()).unwrap();
+        checksums.push(
+            json.get("checksum").and_then(|j| j.as_str()).unwrap().to_string(),
+        );
+        // Measured wall time: pipelined never exceeds the serial
+        // estimate (wire share + codec back-to-back).
+        let total = json.get("total_time_s").unwrap().as_f64().unwrap();
+        let pipelined =
+            json.get("pipelined_time_s").unwrap().as_f64().unwrap();
+        assert!(
+            pipelined <= total * (1.0 + 1e-9),
+            "rank {rank}: {pipelined} > {total}"
+        );
+    }
+    for c in &checksums[1..] {
+        assert_eq!(c, &checksums[0], "ranks disagree");
+    }
+
+    // The in-process engine over identically generated tensors must
+    // produce the same bits the processes wrote.
+    let data: Vec<Vec<f32>> =
+        (0..world).map(|r| dist::rank_tensor(seed, r, elems)).collect();
+    let transport = Transport::Compressed {
+        codec: "qlc".into(),
+        calibration: Box::new(dist::calibration(seed)),
+    };
+    let (expect, _) = threaded_allreduce(world, data, &transport).unwrap();
+    for rank in 0..world {
+        let bytes =
+            std::fs::read(dir.join(format!("rank{rank}.f32"))).unwrap();
+        let want: Vec<u8> =
+            expect[rank].iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(
+            bytes, want,
+            "rank {rank} diverged from the threaded engine"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn launch_world_4_acceptance() {
+    // The headline acceptance criterion: `qlc launch --world 4`
+    // completes a ring allreduce over 127.0.0.1 TCP sockets with
+    // bit-identical results and pipelined ≤ serial from measured wall
+    // time.
+    let out = qlc_bin()
+        .args([
+            "launch", "--world", "4", "--op", "allreduce", "--codec",
+            "qlc", "--size", "16384", "--seed", "3", "--timeout-s", "60",
+            "--json",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "launch failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let json = qlc::util::json::Json::parse(
+        String::from_utf8_lossy(&out.stdout).trim(),
+    )
+    .unwrap();
+    assert_eq!(json.get("agree").and_then(|j| j.as_bool()), Some(true));
+    let rank0 = json.get("rank0").unwrap();
+    let total = rank0.get("total_time_s").unwrap().as_f64().unwrap();
+    let pipelined =
+        rank0.get("pipelined_time_s").unwrap().as_f64().unwrap();
+    assert!(pipelined > 0.0);
+    assert!(pipelined <= total * (1.0 + 1e-9), "{pipelined} > {total}");
+    let ratio =
+        rank0.get("compression_ratio").unwrap().as_f64().unwrap();
+    assert!(ratio > 1.0, "qlc transport must compress ({ratio})");
+}
+
+#[test]
+fn launch_allgather_shards_smoke() {
+    // Shard-granular gather across processes: 3 workers each encode
+    // one QLS1 shard, circulate bodies, reassemble identically.
+    let out = qlc_bin()
+        .args([
+            "launch", "--world", "3", "--op", "allgather", "--codec",
+            "qlc", "--size", "12288", "--timeout-s", "60", "--json",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "launch failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let json = qlc::util::json::Json::parse(
+        String::from_utf8_lossy(&out.stdout).trim(),
+    )
+    .unwrap();
+    assert_eq!(json.get("agree").and_then(|j| j.as_bool()), Some(true));
+    let rank0 = json.get("rank0").unwrap();
+    assert_eq!(
+        rank0.get("op").and_then(|j| j.as_str()),
+        Some("allgather_shards")
+    );
+}
+
+#[test]
+fn worker_flag_validation_fails_fast() {
+    // No sockets involved: these must all fail with clean CLI errors.
+    for bad in [
+        vec!["worker"],                                    // no --world
+        vec!["worker", "--world", "2"],                    // rank 0, no listen
+        vec!["worker", "--world", "2", "--rank", "1"],     // no connect
+        vec!["worker", "--world", "2", "--rank", "5", "--connect", "x"],
+        vec!["worker", "--world", "0"],
+        vec![
+            "worker", "--world", "2", "--listen", "a", "--connect", "b",
+        ],
+        vec![
+            "worker", "--world", "2", "--rank", "1", "--connect",
+            "127.0.0.1:1", "--op", "broadcast",
+        ],
+        vec![
+            "worker", "--world", "2", "--rank", "1", "--connect",
+            "127.0.0.1:1", "--size", "3",
+        ], // below one alignment unit
+    ] {
+        let out = qlc_bin().args(&bad).output().unwrap();
+        assert!(!out.status.success(), "expected failure for {bad:?}");
+    }
+}
+
+#[test]
+fn world_one_worker_needs_no_sockets() {
+    let out = qlc_bin()
+        .args(["worker", "--world", "1", "--size", "1024", "--json"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let json = qlc::util::json::Json::parse(
+        String::from_utf8_lossy(&out.stdout).trim(),
+    )
+    .unwrap();
+    assert_eq!(json.get("steps").and_then(|j| j.as_usize()), Some(0));
+}
