@@ -2,23 +2,31 @@
 //! PMFs — the HEAD experiment's software half ("significantly speeds up
 //! the decoding").  Also contrasts the two Huffman decoders (bit-serial
 //! tree vs multi-level table), the software analogue of the paper's
-//! hardware argument, and — new with QLF2 — single-shot vs
-//! chunked-parallel frame decode, the software analogue of the
-//! multi-decoder hardware the chunked format enables.
+//! hardware argument; single-shot vs chunked-parallel QLF2 frame
+//! decode; and — new with the decode kernel — the batched word-at-a-
+//! time path vs the scalar one-symbol-per-step reference path for
+//! every codec.
+//!
+//! Under `QLC_BENCH_SMOKE=1` (the CI bench-smoke job) the
+//! batched-vs-scalar section is also a *gate*: the process exits
+//! non-zero if the batched QLC kernel decodes fewer symbols/sec than
+//! the scalar path.
 
 use qlc::bitstream::BitReader;
 use qlc::codecs::frame::{self, FrameOptions};
 use qlc::codecs::huffman::decode::{TableDecoder, TreeDecoder};
 use qlc::codecs::huffman::HuffmanCodec;
-use qlc::codecs::{Codec, CodecRegistry};
+use qlc::codecs::{BitCursor, Codec, CodecRegistry};
 use qlc::report;
 use qlc::util::bench::{smoke_config, smoke_scaled, Bencher};
 
 fn main() {
     let n = smoke_scaled(4 << 20, 1 << 16); // symbols per stream
+    let smoke = std::env::var("QLC_BENCH_SMOKE").is_ok();
     println!("=== codec_throughput: {n} symbols per stream ===");
     let registry = CodecRegistry::global();
     let pmfs = report::paper_pmfs(42, 6);
+    let mut qlc_gate_failures = Vec::new();
     for (label, pmf, hist) in [
         ("ffn1", &pmfs.ffn1, &pmfs.ffn1_hist),
         ("ffn2", &pmfs.ffn2, &pmfs.ffn2_hist),
@@ -27,6 +35,12 @@ fn main() {
         let symbols = report::sample_symbols(pmf, n, 7);
         let mut b = Bencher::with_config(smoke_config());
 
+        // Encode throughput + decode in both kernel modes.  Batched
+        // kernel vs scalar reference: same tables, same bits; the
+        // delta is one refill + word-at-a-time resolution per run of
+        // codes vs per-symbol refill/EOF checks.  This is the software
+        // form of the paper's decode-speed claim.
+        println!("  [batched = DecodeKernel/BitCursor, scalar = decode_one per symbol]");
         for name in ["raw", "huffman", "qlc", "qlc-t1", "elias-gamma",
                      "elias-delta", "eg3"] {
             let handle = registry.resolve(name, hist).unwrap();
@@ -42,11 +56,40 @@ fn main() {
                 std::hint::black_box(codec.encode_to_vec(&symbols));
             });
             let mut out = vec![0u8; n];
-            b.bench_bytes(&format!("{label}/decode/{name}"), n as u64, || {
-                let mut r = BitReader::new(&encoded);
-                codec.decode_into(&mut r, &mut out).unwrap();
-                std::hint::black_box(out.len());
-            });
+            let scalar_tp = b
+                .bench_bytes(
+                    &format!("{label}/decode-scalar/{name}"),
+                    n as u64,
+                    || {
+                        let mut r = BitReader::new(&encoded);
+                        codec.decode_scalar_into(&mut r, &mut out).unwrap();
+                        std::hint::black_box(out.len());
+                    },
+                )
+                .throughput_mbps();
+            let batched_tp = b
+                .bench_bytes(
+                    &format!("{label}/decode-batched/{name}"),
+                    n as u64,
+                    || {
+                        let mut cur = BitCursor::new(&encoded);
+                        codec.decode_into(&mut cur, &mut out).unwrap();
+                        std::hint::black_box(out.len());
+                    },
+                )
+                .throughput_mbps();
+            println!(
+                "  {name}: batched/scalar = {:.2}x ({:.1} vs {:.1} MB/s)",
+                batched_tp / scalar_tp,
+                batched_tp,
+                scalar_tp
+            );
+            if name == "qlc" && batched_tp < scalar_tp {
+                qlc_gate_failures.push(format!(
+                    "{label}: batched {batched_tp:.1} MB/s < scalar \
+                     {scalar_tp:.1} MB/s"
+                ));
+            }
         }
 
         // Huffman decoder micro-comparison: tree walk vs table.
@@ -81,7 +124,11 @@ fn main() {
             let single = frame::compress_with(
                 &handle,
                 &symbols,
-                &FrameOptions { chunk_symbols: usize::MAX, threads: 1 },
+                &FrameOptions {
+                    chunk_symbols: usize::MAX,
+                    threads: 1,
+                    ..Default::default()
+                },
             );
             let chunked =
                 frame::compress_with(&handle, &symbols, &FrameOptions::default());
@@ -163,5 +210,15 @@ fn main() {
             },
         );
         println!();
+    }
+
+    if !qlc_gate_failures.is_empty() {
+        eprintln!(
+            "FAIL: batched QLC decode slower than scalar:\n  {}",
+            qlc_gate_failures.join("\n  ")
+        );
+        if smoke {
+            std::process::exit(1);
+        }
     }
 }

@@ -10,9 +10,10 @@
 //! chunk before it.  Distribution drift (e.g. across layers or
 //! training steps) is absorbed within one chunk.
 
+use super::kernel::BitCursor;
 use super::qlc::{AreaScheme, QlcCodec};
 use super::{Codec, CodecError};
-use crate::bitstream::{BitReader, BitWriter};
+use crate::bitstream::BitWriter;
 use crate::stats::Histogram;
 
 /// Streaming encoder/decoder pair configuration.
@@ -88,21 +89,22 @@ pub fn encode(cfg: &AdaptiveConfig, symbols: &[u8]) -> Vec<u8> {
 /// aligned (the stream is one continuous bitstream with zero table
 /// bytes after chunk 0), so decode is inherently sequential — each
 /// chunk's tables derive from the previous chunk's decoded symbols.
-/// The output is still produced via [`Codec::decode_into`] straight
-/// into the result buffer, one slice per chunk.
+/// The output is still produced via [`Codec::decode_into`] (the
+/// batched kernel, on one persistent [`BitCursor`]) straight into the
+/// result buffer, one slice per chunk.
 pub fn decode(
     cfg: &AdaptiveConfig,
     data: &[u8],
     n: usize,
 ) -> Result<Vec<u8>, CodecError> {
-    let mut reader = BitReader::new(data);
+    let mut cur = BitCursor::new(data);
     let mut out = vec![0u8; n];
     let mut prev_hist: Option<Histogram> = None;
     let mut done = 0usize;
     while done < n {
         let take = cfg.chunk_symbols.min(n - done);
         let codec = codec_for(cfg, prev_hist.as_ref());
-        codec.decode_into(&mut reader, &mut out[done..done + take])?;
+        codec.decode_into(&mut cur, &mut out[done..done + take])?;
         prev_hist = Some(Histogram::from_symbols(&out[done..done + take]));
         done += take;
     }

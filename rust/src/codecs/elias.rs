@@ -7,6 +7,7 @@
 //! through a frequency-rank LUT, the "universal code + LUT" hybrid
 //! ablation used in `benches/ablation_scheme.rs`.
 
+use super::kernel::{BitCursor, DecodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
@@ -180,6 +181,88 @@ fn decode_omega(r: &mut BitReader) -> Result<u32, CodecError> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Batched kernel path: leading-zero-count decode on the 64-bit cursor
+// word.  A gamma code is `lz` zeros, a 1, then `lz` payload bits — one
+// `u64::leading_zeros` yields the prefix length, the value *and* the
+// consume width, so a whole code resolves from one buffered word with
+// no per-bit steps.  Delta/omega chain through the same primitive.
+
+fn decode_gamma_cursor(cur: &mut BitCursor) -> Result<u32, CodecError> {
+    let avail = cur.refill_buffered();
+    let w = cur.word();
+    let lz = w.leading_zeros();
+    // Whole code inside the valid window (implies lz ≤ 31): resolve it
+    // from the word in one step.
+    if 2 * lz + 1 <= avail {
+        let v = (w >> (63 - 2 * lz)) as u32;
+        cur.consume(2 * lz + 1);
+        return Ok(v);
+    }
+    // Code straddles the window or the stream ends: checked path.
+    let zeros = cur.read_unary()?;
+    if zeros > 31 {
+        return Err(CodecError::InvalidCode {
+            bit_offset: cur.bits_consumed(),
+        });
+    }
+    let rest = cur.read_bits(zeros)?;
+    Ok((1 << zeros) | rest)
+}
+
+fn decode_delta_cursor(cur: &mut BitCursor) -> Result<u32, CodecError> {
+    let nbits = decode_gamma_cursor(cur)?;
+    if nbits == 0 || nbits > 32 {
+        return Err(CodecError::InvalidCode {
+            bit_offset: cur.bits_consumed(),
+        });
+    }
+    if nbits == 1 {
+        return Ok(1);
+    }
+    let rest = cur.read_bits(nbits - 1)?;
+    Ok((1 << (nbits - 1)) | rest)
+}
+
+fn decode_omega_cursor(cur: &mut BitCursor) -> Result<u32, CodecError> {
+    let mut n: u32 = 1;
+    loop {
+        if cur.read_bits(1)? == 0 {
+            return Ok(n);
+        }
+        if n >= 31 {
+            return Err(CodecError::InvalidCode {
+                bit_offset: cur.bits_consumed(),
+            });
+        }
+        let rest = cur.read_bits(n)?;
+        n = (1 << n) | rest;
+    }
+}
+
+impl DecodeKernel for EliasCodec {
+    fn decode_batch(
+        &self,
+        cur: &mut BitCursor,
+        out: &mut [u8],
+    ) -> Result<usize, CodecError> {
+        for slot in out.iter_mut() {
+            let v = match self.kind {
+                EliasKind::Gamma => decode_gamma_cursor(cur)?,
+                EliasKind::Delta => decode_delta_cursor(cur)?,
+                EliasKind::Omega => decode_omega_cursor(cur)?,
+            };
+            if !(1..=256).contains(&v) {
+                return Err(CodecError::InvalidCode {
+                    bit_offset: cur.bits_consumed(),
+                });
+            }
+            *slot = self.unmap[(v - 1) as usize];
+        }
+        Ok(out.len())
+    }
+}
+
 impl Codec for EliasCodec {
     fn name(&self) -> String {
         if self.ranked {
@@ -195,7 +278,7 @@ impl Codec for EliasCodec {
         }
     }
 
-    fn decode_into(
+    fn decode_scalar_into(
         &self,
         reader: &mut BitReader,
         out: &mut [u8],

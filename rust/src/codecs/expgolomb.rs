@@ -2,6 +2,7 @@
 //! H.264 ue(v) code).  Like the Elias codecs, supports an optional
 //! frequency-rank mapping for the hybrid ablation.
 
+use super::kernel::{BitCursor, DecodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
@@ -74,6 +75,62 @@ impl ExpGolombCodec {
         };
         Ok(((q - 1) << self.k) | low)
     }
+
+    /// Kernel path: one `u64::leading_zeros` on the buffered word
+    /// yields the quotient width; quotient, remainder and the consume
+    /// all come out of the same window — no separate unary walk.
+    fn decode_value_cursor(
+        &self,
+        cur: &mut BitCursor,
+    ) -> Result<u32, CodecError> {
+        let avail = cur.refill_buffered();
+        let w = cur.word();
+        let lz = w.leading_zeros();
+        let total = 2 * lz + 1 + self.k;
+        // Whole code inside the valid window and a sane prefix
+        // (`zeros ≤ 16` mirrors the scalar validity bound).
+        if lz <= 16 && total <= avail {
+            let q = (w >> (63 - 2 * lz)) as u32;
+            let low = if self.k > 0 {
+                (w >> (64 - total)) as u32 & ((1 << self.k) - 1)
+            } else {
+                0
+            };
+            cur.consume(total);
+            return Ok(((q - 1) << self.k) | low);
+        }
+        // Straddling / EOF / invalid-prefix path, checked step by step.
+        let zeros = cur.read_unary()?;
+        if zeros > 16 {
+            return Err(CodecError::InvalidCode {
+                bit_offset: cur.bits_consumed(),
+            });
+        }
+        let rest = cur.read_bits(zeros)?;
+        let q = (1u32 << zeros) | rest;
+        let low =
+            if self.k > 0 { cur.read_bits(self.k)? } else { 0 };
+        Ok(((q - 1) << self.k) | low)
+    }
+}
+
+impl DecodeKernel for ExpGolombCodec {
+    fn decode_batch(
+        &self,
+        cur: &mut BitCursor,
+        out: &mut [u8],
+    ) -> Result<usize, CodecError> {
+        for slot in out.iter_mut() {
+            let v = self.decode_value_cursor(cur)?;
+            if v > 255 {
+                return Err(CodecError::InvalidCode {
+                    bit_offset: cur.bits_consumed(),
+                });
+            }
+            *slot = self.unmap[v as usize];
+        }
+        Ok(out.len())
+    }
 }
 
 impl Codec for ExpGolombCodec {
@@ -91,7 +148,7 @@ impl Codec for ExpGolombCodec {
         }
     }
 
-    fn decode_into(
+    fn decode_scalar_into(
         &self,
         reader: &mut BitReader,
         out: &mut [u8],

@@ -19,6 +19,22 @@
 //! Chunk boundaries depend only on [`FrameOptions::chunk_symbols`],
 //! never on the worker count, so frame bytes are deterministic.
 //!
+//! ## Adaptive per-chunk tables (frame flag bit 0)
+//!
+//! With [`FrameOptions::adaptive_chunks`] and a codec family that
+//! supports per-chunk re-fit (QLC, via
+//! [`ChunkTables`](super::registry::ChunkTables)), the encoder
+//! measures each chunk's PMF and — when the drift past the frame's
+//! base tables is worth more payload bits than the delta costs —
+//! prefixes that chunk's payload with a serialized *table delta*
+//! (`delta_len u16-le | delta bytes`; for QLC a bare 256-byte rank
+//! order re-ranked under the frame's area scheme).  The chunk-table
+//! entry marks such chunks by setting the top bit of
+//! `chunk_n_symbols` (chunk sizes are capped far below it), and the
+//! frame's flags byte sets bit 0 whenever any chunk carries a delta.
+//! Chunks remain independently decodable — the delta travels *inside*
+//! the chunk payload — so parallel decode is unaffected.
+//!
 //! # QLF1 — single payload (legacy, read + [`compress_qlf1`])
 //!
 //! ```text
@@ -51,11 +67,22 @@
 //! shards cost N×16 bytes of framing instead of N table copies.
 
 use super::registry::{CodecHandle, CodecRegistry};
-use super::session::{chunk_spans, DEFAULT_CHUNK_SYMBOLS};
+use super::session::{
+    chunk_spans, DecodeMode, DecoderSession, EncoderSession,
+    DEFAULT_CHUNK_SYMBOLS,
+};
 use super::CodecError;
 
 pub const MAGIC_QLF1: [u8; 4] = *b"QLF1";
 pub const MAGIC_QLF2: [u8; 4] = *b"QLF2";
+
+/// QLF2 flags bit 0: at least one chunk carries a per-chunk table
+/// delta (see the module docs).
+pub const FLAG_ADAPTIVE_CHUNKS: u8 = 1;
+/// Top bit of a chunk-table `chunk_n_symbols` entry: this chunk's
+/// payload starts with `delta_len u16-le | delta bytes`.  Chunk sizes
+/// are clamped to `u32::MAX / 8`, so the bit can never be a count.
+const CHUNK_DELTA_BIT: u32 = 1 << 31;
 /// Shard-set manifest: one codec table header shared by N shards.
 pub const MAGIC_MANIFEST: [u8; 4] = *b"QLM1";
 /// One shard of a sharded tensor: chunk table + payloads, no codec
@@ -73,11 +100,24 @@ pub struct FrameOptions {
     pub chunk_symbols: usize,
     /// Worker threads; 0 = one per available core, 1 = serial.
     pub threads: usize,
+    /// Re-fit codec tables per chunk when the chunk's PMF drifts past
+    /// the break-even point (QLF2 write path; needs a codec family
+    /// with [`ChunkTables`](super::registry::ChunkTables) support —
+    /// silently ignored otherwise).
+    pub adaptive_chunks: bool,
+    /// Which decode path chunk decoding runs (batched kernel by
+    /// default; scalar for the reference comparison).
+    pub decode: DecodeMode,
 }
 
 impl Default for FrameOptions {
     fn default() -> Self {
-        FrameOptions { chunk_symbols: DEFAULT_CHUNK_SYMBOLS, threads: 0 }
+        FrameOptions {
+            chunk_symbols: DEFAULT_CHUNK_SYMBOLS,
+            threads: 0,
+            adaptive_chunks: false,
+            decode: DecodeMode::Batched,
+        }
     }
 }
 
@@ -142,16 +182,23 @@ pub fn compress(handle: &CodecHandle, symbols: &[u8]) -> Vec<u8> {
 /// shard writer; chunk boundaries come from
 /// [`chunk_spans`](super::chunk_spans), so frame chunks, shard chunks
 /// and transport chunks all agree.
+///
+/// With `adaptive`, chunks whose PMF drifts past the base tables'
+/// break-even point are re-encoded with a chunk-local re-fit and their
+/// payload prefixed by the serialized delta; the returned flags mark
+/// those chunks for the chunk table.
 fn encode_payload_chunks<'a>(
     handle: &CodecHandle,
     symbols: &'a [u8],
     opts: &FrameOptions,
-) -> (Vec<&'a [u8]>, Vec<Vec<u8>>) {
+    adaptive: bool,
+) -> (Vec<&'a [u8]>, Vec<Vec<u8>>, Vec<bool>) {
     // Chunk-table fields are u32; the deepest code in the crate is
     // < 64 bits/symbol, so capping chunks at u32::MAX/8 symbols keeps
     // both the symbol count and the worst-case payload length in
-    // range.  The lower bound keeps the chunk *count* in its u32 field
-    // too (only binds past 4 Gi symbols of 1-symbol chunks).
+    // range (and leaves the top bit free for [`CHUNK_DELTA_BIT`]).
+    // The lower bound keeps the chunk *count* in its u32 field too
+    // (only binds past 4 Gi symbols of 1-symbol chunks).
     let min_chunk = symbols.len() / u32::MAX as usize + 1;
     let chunk_symbols = opts
         .chunk_symbols
@@ -163,28 +210,63 @@ fn encode_payload_chunks<'a>(
         .collect();
     assert!(chunks.len() <= u32::MAX as usize, "chunk count overflows u32");
     let threads = effective_threads(opts.threads, chunks.len());
+    let tables = if adaptive { handle.chunk_tables() } else { None };
 
     let mut payloads: Vec<Vec<u8>> = vec![Vec::new(); chunks.len()];
-    let jobs: Vec<(&[u8], &mut Vec<u8>)> =
-        chunks.iter().copied().zip(payloads.iter_mut()).collect();
+    let mut deltas: Vec<bool> = vec![false; chunks.len()];
+    let jobs: Vec<(&[u8], &mut Vec<u8>, &mut bool)> = chunks
+        .iter()
+        .copied()
+        .zip(payloads.iter_mut())
+        .zip(deltas.iter_mut())
+        .map(|((c, p), d)| (c, p, d))
+        .collect();
     let encode_ok: Result<(), std::convert::Infallible> =
         run_banded(jobs, threads, |band| {
             let mut enc = handle.encoder();
-            for (chunk, slot) in band {
-                *slot = enc.encode_chunk_to_vec(chunk);
+            for (chunk, slot, delta_slot) in band {
+                if let Some((delta, codec)) =
+                    tables.and_then(|t| t.refit(chunk))
+                {
+                    debug_assert!(delta.len() <= u16::MAX as usize);
+                    let mut out =
+                        Vec::with_capacity(2 + delta.len() + chunk.len());
+                    out.extend_from_slice(
+                        &(delta.len() as u16).to_le_bytes(),
+                    );
+                    out.extend_from_slice(&delta);
+                    EncoderSession::new(codec.as_ref())
+                        .encode_chunk(chunk, &mut out);
+                    *slot = out;
+                    *delta_slot = true;
+                } else {
+                    *slot = enc.encode_chunk_to_vec(chunk);
+                }
             }
             Ok(())
         });
     encode_ok.unwrap(); // Infallible: encoding cannot fail
-    (chunks, payloads)
+    (chunks, payloads, deltas)
 }
 
 /// Append `n_chunks | chunk table | payloads` (the shared QLF2/QLS1
-/// body layout) to `out`.
-fn write_chunk_table(out: &mut Vec<u8>, chunks: &[&[u8]], payloads: &[Vec<u8>]) {
+/// body layout) to `out`.  `deltas[i]` sets [`CHUNK_DELTA_BIT`] on
+/// chunk `i`'s symbol count.
+fn write_chunk_table(
+    out: &mut Vec<u8>,
+    chunks: &[&[u8]],
+    payloads: &[Vec<u8>],
+    deltas: &[bool],
+) {
     out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
-    for (chunk, payload) in chunks.iter().zip(payloads) {
-        out.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
+    for ((chunk, payload), &delta) in
+        chunks.iter().zip(payloads).zip(deltas)
+    {
+        let mut n = chunk.len() as u32;
+        if delta {
+            n |= CHUNK_DELTA_BIT;
+        }
+        out.extend_from_slice(&n.to_le_bytes());
         out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     }
     for payload in payloads {
@@ -198,7 +280,8 @@ pub fn compress_with(
     symbols: &[u8],
     opts: &FrameOptions,
 ) -> Vec<u8> {
-    let (chunks, payloads) = encode_payload_chunks(handle, symbols, opts);
+    let (chunks, payloads, deltas) =
+        encode_payload_chunks(handle, symbols, opts, opts.adaptive_chunks);
     let header = handle.wire_header();
     let payload_bytes: usize = payloads.iter().map(|p| p.len()).sum();
     let mut out = Vec::with_capacity(
@@ -206,12 +289,31 @@ pub fn compress_with(
     );
     out.extend_from_slice(&MAGIC_QLF2);
     out.push(handle.wire_tag());
-    out.push(0); // flags
+    // The flag is set only when a delta is actually present, so
+    // non-drifting adaptive frames stay byte-identical to fixed-table
+    // frames (and older readers keep accepting them).
+    let flags = if deltas.iter().any(|&d| d) {
+        FLAG_ADAPTIVE_CHUNKS
+    } else {
+        0
+    };
+    out.push(flags);
     out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
     out.extend_from_slice(&(header.len() as u32).to_le_bytes());
     out.extend_from_slice(header);
-    write_chunk_table(&mut out, &chunks, &payloads);
+    write_chunk_table(&mut out, &chunks, &payloads, &deltas);
     out
+}
+
+/// Compress `symbols` into a chunked QLF2 frame with per-chunk
+/// adaptive tables enabled (the CLI's `--adaptive-chunks`).
+pub fn compress_adaptive(
+    handle: &CodecHandle,
+    symbols: &[u8],
+    opts: &FrameOptions,
+) -> Vec<u8> {
+    let opts = FrameOptions { adaptive_chunks: true, ..*opts };
+    compress_with(handle, symbols, &opts)
 }
 
 /// Compress `symbols` into a legacy single-payload QLF1 frame.
@@ -263,12 +365,13 @@ pub fn decompress_with(
     let header = &data[FIXED_HEADER..FIXED_HEADER + hlen];
     let body = &data[FIXED_HEADER + hlen..];
     match magic {
-        MAGIC_QLF1 => decompress_qlf1_body(tag, n, header, body),
+        MAGIC_QLF1 => decompress_qlf1_body(tag, n, header, body, opts),
         MAGIC_QLF2 => {
-            if data[5] != 0 {
+            if data[5] & !FLAG_ADAPTIVE_CHUNKS != 0 {
                 return Err(bad("unsupported QLF2 flags"));
             }
-            decompress_qlf2_body(tag, n, header, body, opts)
+            let adaptive = data[5] & FLAG_ADAPTIVE_CHUNKS != 0;
+            decompress_qlf2_body(tag, n, header, body, opts, adaptive)
         }
         _ => Err(bad("bad magic")),
     }
@@ -279,6 +382,7 @@ fn decompress_qlf1_body(
     n: usize,
     header: &[u8],
     payload: &[u8],
+    opts: &FrameOptions,
 ) -> Result<Vec<u8>, CodecError> {
     // Every code is ≥ 1 bit, so a frame that declares more symbols than
     // payload bits is corrupt.  (Without this bound a hostile header
@@ -289,17 +393,20 @@ fn decompress_qlf1_body(
         ));
     }
     let handle = CodecRegistry::global().resolve_wire(tag, header)?;
-    handle.decoder().decode_chunk_to_vec(payload, n)
+    handle.decoder_with(opts.decode).decode_chunk_to_vec(payload, n)
 }
 
 /// Parse and validate a `n_chunks | chunk table | payloads` body
 /// against `n` expected symbols.  Returns per-chunk
-/// `(n_symbols, payload_len)` entries and the payload area; the sums
-/// are checked **before** anything is allocated in proportion to them.
+/// `(n_symbols, payload_len, has_delta)` entries and the payload
+/// area; the sums are checked **before** anything is allocated in
+/// proportion to them.  [`CHUNK_DELTA_BIT`] entries are only accepted
+/// when `adaptive` (i.e. the frame's flags byte announced them).
 fn parse_chunk_table(
     n: usize,
     body: &[u8],
-) -> Result<(Vec<(usize, usize)>, &[u8]), CodecError> {
+    adaptive: bool,
+) -> Result<(Vec<(usize, usize, bool)>, &[u8]), CodecError> {
     let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
     if body.len() < 4 {
         return Err(bad("truncated chunk count"));
@@ -318,8 +425,12 @@ fn parse_chunk_table(
     let mut total_payload = 0u64;
     let mut entries = Vec::with_capacity(n_chunks);
     for e in table.chunks_exact(8) {
-        let chunk_n =
-            u32::from_le_bytes(e[0..4].try_into().unwrap()) as usize;
+        let raw_n = u32::from_le_bytes(e[0..4].try_into().unwrap());
+        let has_delta = raw_n & CHUNK_DELTA_BIT != 0;
+        if has_delta && !adaptive {
+            return Err(bad("chunk delta bit set in a non-adaptive frame"));
+        }
+        let chunk_n = (raw_n & !CHUNK_DELTA_BIT) as usize;
         let plen = u32::from_le_bytes(e[4..8].try_into().unwrap()) as usize;
         // Per-chunk sanity: ≥ 1 bit per symbol.
         if chunk_n as u64 > plen as u64 * 8 {
@@ -327,7 +438,7 @@ fn parse_chunk_table(
         }
         total_symbols += chunk_n as u64;
         total_payload += plen as u64;
-        entries.push((chunk_n, plen));
+        entries.push((chunk_n, plen, has_delta));
     }
     if total_symbols != n as u64 {
         return Err(bad("chunk table does not sum to frame symbol count"));
@@ -338,36 +449,67 @@ fn parse_chunk_table(
     Ok((entries, payload_area))
 }
 
-/// Carve validated `(payload, destination)` pairs and append them to
-/// `jobs`, consuming `out_rest` one chunk at a time.  Requires the
-/// invariants [`parse_chunk_table`] established.
+/// Carve validated `(payload, destination, has_delta)` triples and
+/// append them to `jobs`, consuming `out_rest` one chunk at a time.
+/// Requires the invariants [`parse_chunk_table`] established.
 fn carve_chunk_jobs<'a>(
-    entries: &[(usize, usize)],
+    entries: &[(usize, usize, bool)],
     payload_area: &'a [u8],
     out_rest: &mut &'a mut [u8],
-    jobs: &mut Vec<(&'a [u8], &'a mut [u8])>,
+    jobs: &mut Vec<(&'a [u8], &'a mut [u8], bool)>,
 ) {
     let mut payload_rest = payload_area;
-    for &(chunk_n, plen) in entries {
+    for &(chunk_n, plen, has_delta) in entries {
         let (payload, ptail) = payload_rest.split_at(plen);
         payload_rest = ptail;
         let (dst, otail) = std::mem::take(out_rest).split_at_mut(chunk_n);
         *out_rest = otail;
-        jobs.push((payload, dst));
+        jobs.push((payload, dst, has_delta));
     }
 }
 
+/// Split a delta-carrying chunk payload into
+/// `(delta bytes, encoded payload)`.
+fn split_chunk_delta(payload: &[u8]) -> Result<(&[u8], &[u8]), CodecError> {
+    let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
+    if payload.len() < 2 {
+        return Err(bad("chunk too short for its table delta length"));
+    }
+    let dlen = u16::from_le_bytes(payload[0..2].try_into().unwrap()) as usize;
+    if payload.len() - 2 < dlen {
+        return Err(bad("chunk too short for its table delta"));
+    }
+    Ok(payload[2..].split_at(dlen))
+}
+
 /// Decode carved chunk jobs on up to `threads_req` scoped workers.
+/// Delta-carrying chunks rebuild their chunk-local codec via the
+/// handle's [`ChunkTables`](super::registry::ChunkTables) hooks.
 fn decode_chunk_jobs(
     handle: &CodecHandle,
-    jobs: Vec<(&[u8], &mut [u8])>,
-    threads_req: usize,
+    jobs: Vec<(&[u8], &mut [u8], bool)>,
+    opts: &FrameOptions,
 ) -> Result<(), CodecError> {
-    let threads = effective_threads(threads_req, jobs.len());
+    let threads = effective_threads(opts.threads, jobs.len());
+    let mode = opts.decode;
     run_banded(jobs, threads, |band| {
-        let mut dec = handle.decoder();
-        for (payload, dst) in band {
-            dec.decode_chunk(payload, dst)?;
+        let mut dec = handle.decoder_with(mode);
+        for (payload, dst, has_delta) in band {
+            if has_delta {
+                let tables = handle.chunk_tables().ok_or_else(|| {
+                    CodecError::BadHeader(
+                        "chunk table delta for a codec without \
+                         per-chunk tables"
+                            .into(),
+                    )
+                })?;
+                let (delta, rest) = split_chunk_delta(payload)?;
+                let chunk_codec = tables.from_delta(delta)?;
+                DecoderSession::with_mode(chunk_codec.as_ref(), mode)
+                    .decode_chunk(rest, dst)?;
+            } else {
+                dec.decode_chunk(payload, dst)?;
+            }
         }
         Ok(())
     })
@@ -379,15 +521,16 @@ fn decompress_qlf2_body(
     header: &[u8],
     body: &[u8],
     opts: &FrameOptions,
+    adaptive: bool,
 ) -> Result<Vec<u8>, CodecError> {
-    let (entries, payload_area) = parse_chunk_table(n, body)?;
+    let (entries, payload_area) = parse_chunk_table(n, body, adaptive)?;
     let handle = CodecRegistry::global().resolve_wire(tag, header)?;
     let mut out = vec![0u8; n];
-    let mut jobs: Vec<(&[u8], &mut [u8])> =
+    let mut jobs: Vec<(&[u8], &mut [u8], bool)> =
         Vec::with_capacity(entries.len());
     let mut out_rest: &mut [u8] = &mut out;
     carve_chunk_jobs(&entries, payload_area, &mut out_rest, &mut jobs);
-    decode_chunk_jobs(&handle, jobs, opts.threads)?;
+    decode_chunk_jobs(&handle, jobs, opts)?;
     Ok(out)
 }
 
@@ -579,14 +722,17 @@ pub fn shard_plan(total: usize, n_shards: usize) -> Vec<ShardDesc> {
 }
 
 /// Compress one shard body (QLS1): chunk table + payloads, no codec
-/// header.  `symbols` must be exactly the shard's slice.
+/// header.  `symbols` must be exactly the shard's slice.  Shards have
+/// no flags byte to announce deltas, so the adaptive-chunk path is
+/// QLF2-only.
 pub fn compress_shard(
     handle: &CodecHandle,
     shard_index: u32,
     symbols: &[u8],
     opts: &FrameOptions,
 ) -> Vec<u8> {
-    let (chunks, payloads) = encode_payload_chunks(handle, symbols, opts);
+    let (chunks, payloads, deltas) =
+        encode_payload_chunks(handle, symbols, opts, false);
     let payload_bytes: usize = payloads.iter().map(|p| p.len()).sum();
     let mut out = Vec::with_capacity(
         SHARD_FIXED + 4 + payloads.len() * 8 + payload_bytes,
@@ -594,7 +740,7 @@ pub fn compress_shard(
     out.extend_from_slice(&MAGIC_SHARD);
     out.extend_from_slice(&shard_index.to_le_bytes());
     out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
-    write_chunk_table(&mut out, &chunks, &payloads);
+    write_chunk_table(&mut out, &chunks, &payloads, &deltas);
     out
 }
 
@@ -655,7 +801,7 @@ pub fn decompress_sharded(
 
     // Parse every shard header; placement comes from the embedded
     // index, so arrival order is free.
-    let mut parsed: Vec<Option<(Vec<(usize, usize)>, &[u8])>> =
+    let mut parsed: Vec<Option<(Vec<(usize, usize, bool)>, &[u8])>> =
         (0..k).map(|_| None).collect();
     for s in shards {
         if s.len() < SHARD_FIXED {
@@ -676,12 +822,13 @@ pub fn decompress_sharded(
         if parsed[index].is_some() {
             return Err(bad("duplicate shard"));
         }
-        parsed[index] = Some(parse_chunk_table(n as usize, &s[SHARD_FIXED..])?);
+        parsed[index] =
+            Some(parse_chunk_table(n as usize, &s[SHARD_FIXED..], false)?);
     }
 
     let handle = manifest.resolve()?;
     let mut out = vec![0u8; total as usize];
-    let mut jobs: Vec<(&[u8], &mut [u8])> = Vec::new();
+    let mut jobs: Vec<(&[u8], &mut [u8], bool)> = Vec::new();
     let mut out_rest: &mut [u8] = &mut out;
     for p in &parsed {
         let Some((entries, payload_area)) = p else {
@@ -689,7 +836,7 @@ pub fn decompress_sharded(
         };
         carve_chunk_jobs(entries, payload_area, &mut out_rest, &mut jobs);
     }
-    decode_chunk_jobs(&handle, jobs, opts.threads)?;
+    decode_chunk_jobs(&handle, jobs, opts)?;
     Ok(out)
 }
 
@@ -746,7 +893,7 @@ mod tests {
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("qlc", &hist).unwrap();
         for chunk_symbols in [1usize, 37, 4096, 64 * 1024, 1 << 30] {
-            let opts = FrameOptions { chunk_symbols, threads: 0 };
+            let opts = FrameOptions { chunk_symbols, ..Default::default() };
             let frame = compress_with(&handle, &symbols, &opts);
             assert_eq!(
                 decompress(&frame).unwrap(),
@@ -761,7 +908,7 @@ mod tests {
         let symbols = skewed_symbols(200_000, 3);
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("huffman", &hist).unwrap();
-        let opts = |threads| FrameOptions { chunk_symbols: 8192, threads };
+        let opts = |threads| FrameOptions { chunk_symbols: 8192, threads, ..Default::default() };
         let serial = compress_with(&handle, &symbols, &opts(1));
         for threads in [2usize, 4, 8] {
             assert_eq!(
@@ -775,7 +922,7 @@ mod tests {
             decompress_with(&serial, &FrameOptions::serial()).unwrap();
         let parallel_out = decompress_with(
             &serial,
-            &FrameOptions { chunk_symbols: 8192, threads: 4 },
+            &FrameOptions { chunk_symbols: 8192, threads: 4, ..Default::default() },
         )
         .unwrap();
         assert_eq!(serial_out, symbols);
@@ -805,13 +952,13 @@ mod tests {
         let one = compress_with(
             &handle,
             &symbols,
-            &FrameOptions { chunk_symbols: usize::MAX, threads: 1 },
+            &FrameOptions { chunk_symbols: usize::MAX, threads: 1, ..Default::default() },
         );
         let chunks = 256; // 1 Ki symbols per chunk
         let many = compress_with(
             &handle,
             &symbols,
-            &FrameOptions { chunk_symbols: 1024, threads: 1 },
+            &FrameOptions { chunk_symbols: 1024, threads: 1, ..Default::default() },
         );
         assert!(
             many.len() <= one.len() + chunks * 9,
@@ -869,7 +1016,7 @@ mod tests {
         let frame = compress_with(
             &handle,
             &symbols,
-            &FrameOptions { chunk_symbols: 4096, threads: 1 },
+            &FrameOptions { chunk_symbols: 4096, threads: 1, ..Default::default() },
         );
         let hlen =
             u32::from_le_bytes(frame[14..18].try_into().unwrap()) as usize;
@@ -953,6 +1100,7 @@ mod tests {
             let opts = FrameOptions {
                 chunk_symbols: 1 + rng.below(2048) as usize,
                 threads: 1 + rng.below(4) as usize,
+                ..Default::default()
             };
             let frame = compress_with(&handle, &symbols, &opts);
             let back = decompress(&frame).map_err(|e| e.to_string())?;
@@ -1003,7 +1151,7 @@ mod tests {
                     &handle,
                     &symbols,
                     n_shards,
-                    &FrameOptions { chunk_symbols: 4096, threads: 0 },
+                    &FrameOptions { chunk_symbols: 4096, threads: 0, ..Default::default() },
                 );
                 assert_eq!(manifest.n_shards(), shards.len());
                 assert_eq!(
@@ -1148,6 +1296,7 @@ mod tests {
                 &FrameOptions {
                     chunk_symbols: 1 + rng.below(512) as usize,
                     threads: 1,
+                    ..Default::default()
                 },
             );
             let mut manifest_bytes = manifest.to_bytes();
@@ -1243,6 +1392,7 @@ mod tests {
             let frame = compress_with(&handle, &symbols, &FrameOptions {
                 chunk_symbols: 1 + rng.below(512) as usize,
                 threads: 1,
+                ..Default::default()
             });
             for _ in 0..20 {
                 let mut corrupt = frame.clone();
@@ -1266,6 +1416,166 @@ mod tests {
                     // A payload-internal flip the codec cannot detect
                     // may decode to wrong symbols — but the count is
                     // pinned by the (validated) chunk table.
+                    Ok(out) => {
+                        if out.len() > symbols.len() + corrupt.len() * 8 {
+                            return Err(format!(
+                                "decoded {} symbols from a {}-byte frame",
+                                out.len(),
+                                corrupt.len()
+                            ));
+                        }
+                    }
+                    Err(_) => {}
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // -----------------------------------------------------------------
+    // Adaptive per-chunk tables
+
+    /// A stream whose PMF drifts hard at the midpoint: the first half
+    /// is rank-ordered for the calibration histogram, the second half
+    /// reverses the ranks, so a frame-global QLC table pays long codes
+    /// for every frequent symbol after the drift.
+    fn drifting_symbols(n: usize, seed: u64) -> Vec<u8> {
+        let mut a = skewed_symbols(n / 2, seed);
+        let b: Vec<u8> = skewed_symbols(n - n / 2, seed + 1)
+            .into_iter()
+            .map(|s| 255 - s)
+            .collect();
+        a.extend_from_slice(&b);
+        a
+    }
+
+    #[test]
+    fn adaptive_chunks_roundtrip_and_shrink_on_drift() {
+        let symbols = drifting_symbols(256 * 1024, 21);
+        // Calibrate on the full stream (what the CLI does).
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let opts = FrameOptions {
+            chunk_symbols: 16 * 1024,
+            threads: 0,
+            ..Default::default()
+        };
+        let fixed = compress_with(&handle, &symbols, &opts);
+        let adaptive = compress_adaptive(&handle, &symbols, &opts);
+        // The drifted half re-fits: flag byte set, frame no larger
+        // than the fixed-table frame (the refit criterion is
+        // break-even in bits).
+        assert_eq!(adaptive[5] & FLAG_ADAPTIVE_CHUNKS, FLAG_ADAPTIVE_CHUNKS);
+        assert!(
+            adaptive.len() <= fixed.len(),
+            "adaptive {} > fixed {}",
+            adaptive.len(),
+            fixed.len()
+        );
+        // Bit-exact roundtrip, parallel and serial, batched and scalar.
+        assert_eq!(decompress(&adaptive).unwrap(), symbols);
+        assert_eq!(
+            decompress_with(&adaptive, &FrameOptions::serial()).unwrap(),
+            symbols
+        );
+        let scalar = FrameOptions {
+            decode: DecodeMode::Scalar,
+            ..FrameOptions::serial()
+        };
+        assert_eq!(decompress_with(&adaptive, &scalar).unwrap(), symbols);
+    }
+
+    #[test]
+    fn adaptive_flag_unset_when_nothing_drifts() {
+        // A stationary stream never pays for a delta: the adaptive
+        // frame is byte-identical to the fixed-table frame.
+        let symbols = skewed_symbols(128 * 1024, 22);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let opts = FrameOptions {
+            chunk_symbols: 16 * 1024,
+            threads: 1,
+            ..Default::default()
+        };
+        let fixed = compress_with(&handle, &symbols, &opts);
+        let adaptive = compress_adaptive(&handle, &symbols, &opts);
+        assert_eq!(adaptive, fixed);
+    }
+
+    #[test]
+    fn adaptive_chunks_ignored_for_non_adaptive_codecs() {
+        // Families without ChunkTables silently keep fixed tables.
+        let symbols = drifting_symbols(64 * 1024, 23);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("huffman", &hist).unwrap();
+        let opts = FrameOptions::serial();
+        let fixed = compress_with(&handle, &symbols, &opts);
+        let adaptive = compress_adaptive(&handle, &symbols, &opts);
+        assert_eq!(adaptive, fixed);
+        assert_eq!(decompress(&adaptive).unwrap(), symbols);
+    }
+
+    #[test]
+    fn delta_bit_without_flag_rejected() {
+        let symbols = drifting_symbols(64 * 1024, 24);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let opts = FrameOptions {
+            chunk_symbols: 8 * 1024,
+            threads: 1,
+            ..Default::default()
+        };
+        let frame = compress_adaptive(&handle, &symbols, &opts);
+        assert_eq!(frame[5], FLAG_ADAPTIVE_CHUNKS);
+        // Clearing the flags byte leaves delta bits dangling in the
+        // chunk table — the parser must reject, not mis-read counts.
+        let mut bad = frame.clone();
+        bad[5] = 0;
+        assert!(matches!(
+            decompress(&bad),
+            Err(CodecError::BadHeader(_))
+        ));
+    }
+
+    #[test]
+    fn prop_corrupt_table_delta_never_panics() {
+        // Fuzz the delta path specifically: corruption anywhere in an
+        // adaptive frame (flags, chunk table, delta length, delta
+        // bytes, payload) must yield Err or a wrong-but-bounded Ok —
+        // never a panic, never an oversized allocation.
+        prop::check("adaptive delta fuzz", prop::Config {
+            cases: 48, ..Default::default()
+        }, |rng, size| {
+            let n = size.max(64);
+            let symbols = drifting_symbols(n, rng.below(1 << 20));
+            let hist = Histogram::from_symbols(&symbols);
+            let handle = registry()
+                .resolve("qlc", &hist)
+                .map_err(|e| e.to_string())?;
+            let frame = compress_adaptive(&handle, &symbols, &FrameOptions {
+                chunk_symbols: 1 + rng.below(n as u64 / 2 + 1) as usize,
+                threads: 1,
+                ..Default::default()
+            });
+            for _ in 0..20 {
+                let mut corrupt = frame.clone();
+                match rng.below(3) {
+                    0 => {
+                        let i = rng.below(corrupt.len() as u64) as usize;
+                        corrupt[i] ^= 1 << rng.below(8);
+                    }
+                    1 => {
+                        let keep = rng.below(corrupt.len() as u64) as usize;
+                        corrupt.truncate(keep);
+                    }
+                    _ => {
+                        let i = rng.below(corrupt.len() as u64) as usize;
+                        let mut junk = vec![0u8; 16.min(corrupt.len() - i)];
+                        rng.fill_bytes(&mut junk);
+                        corrupt[i..i + junk.len()].copy_from_slice(&junk);
+                    }
+                }
+                match decompress_with(&corrupt, &FrameOptions::serial()) {
                     Ok(out) => {
                         if out.len() > symbols.len() + corrupt.len() * 8 {
                             return Err(format!(

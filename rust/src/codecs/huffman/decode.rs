@@ -4,6 +4,7 @@
 
 use super::build::CodeBook;
 use crate::bitstream::BitReader;
+use crate::codecs::kernel::BitCursor;
 use crate::codecs::CodecError;
 
 // ---------------------------------------------------------------------------
@@ -298,6 +299,89 @@ impl TableDecoder {
             out.truncate(start);
         }
         r
+    }
+
+    /// Cursor analogue of [`decode_one`](Self::decode_one): the
+    /// kernel's checked path for codes near the end of the buffer or
+    /// chained through subtables.
+    #[inline]
+    fn decode_one_cursor(
+        &self,
+        cur: &mut BitCursor,
+    ) -> Result<u8, CodecError> {
+        let mut table = 0usize;
+        loop {
+            let (offset, width) = self.tables[table];
+            cur.refill();
+            let idx = (cur.word() >> (64 - width)) as usize;
+            match self.entries[offset + idx] {
+                Entry::Leaf { symbol, len } => {
+                    if cur.remaining_bits() < len as u64 {
+                        return Err(CodecError::UnexpectedEof);
+                    }
+                    cur.consume(len as u32);
+                    return Ok(symbol);
+                }
+                Entry::Sub { table: sub } => {
+                    if cur.remaining_bits() < width as u64 {
+                        return Err(CodecError::UnexpectedEof);
+                    }
+                    cur.consume(width);
+                    table = sub as usize;
+                }
+                Entry::Invalid => {
+                    return Err(CodecError::InvalidCode {
+                        bit_offset: cur.bits_consumed(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Batched kernel: one refill, then root-table leaves resolve with
+    /// no refill/EOF checks while the buffered budget still holds a
+    /// whole worst-case code.  This flattens the per-bit tree steps of
+    /// the serial decoder into one multi-bit lookup per symbol — and
+    /// several symbols per 64-bit window.
+    pub fn decode_batch(
+        &self,
+        cur: &mut BitCursor,
+        out: &mut [u8],
+    ) -> Result<usize, CodecError> {
+        let n = out.len();
+        let (root_off, root_width) = self.tables[0];
+        let root_shift = 64 - root_width;
+        let mut i = 0usize;
+        while i < n {
+            let mut budget = cur.refill_buffered();
+            if budget < self.max_len {
+                out[i] = self.decode_one_cursor(cur)?;
+                i += 1;
+                continue;
+            }
+            while i < n && budget >= self.max_len {
+                let idx = (cur.word() >> root_shift) as usize;
+                match self.entries[root_off + idx] {
+                    Entry::Leaf { symbol, len } => {
+                        cur.consume(len as u32);
+                        budget -= len as u32;
+                        out[i] = symbol;
+                        i += 1;
+                    }
+                    Entry::Sub { .. } => {
+                        out[i] = self.decode_one_cursor(cur)?;
+                        i += 1;
+                        budget = 0; // force re-refill
+                    }
+                    Entry::Invalid => {
+                        return Err(CodecError::InvalidCode {
+                            bit_offset: cur.bits_consumed(),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(n)
     }
 }
 

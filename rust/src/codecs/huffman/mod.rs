@@ -14,6 +14,7 @@
 pub mod build;
 pub mod decode;
 
+use super::kernel::{BitCursor, DecodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 use crate::stats::Histogram;
@@ -69,6 +70,16 @@ impl HuffmanCodec {
     }
 }
 
+impl DecodeKernel for HuffmanCodec {
+    fn decode_batch(
+        &self,
+        cur: &mut BitCursor,
+        out: &mut [u8],
+    ) -> Result<usize, CodecError> {
+        self.decoder.decode_batch(cur, out)
+    }
+}
+
 impl Codec for HuffmanCodec {
     fn name(&self) -> String {
         "huffman".to_string()
@@ -81,12 +92,17 @@ impl Codec for HuffmanCodec {
         }
     }
 
-    fn decode_into(
+    fn decode_scalar_into(
         &self,
         reader: &mut BitReader,
         out: &mut [u8],
     ) -> Result<(), CodecError> {
-        self.decoder.decode_into(reader, out)
+        // One table walk per symbol; the batched root-table loop lives
+        // in the [`DecodeKernel`] impl.
+        for slot in out.iter_mut() {
+            *slot = self.decoder.decode_one(reader)?;
+        }
+        Ok(())
     }
 
     fn code_lengths(&self) -> [u32; 256] {

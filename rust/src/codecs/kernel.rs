@@ -1,0 +1,357 @@
+//! The batched decode kernel: a 64-bit buffered [`BitCursor`]
+//! (refill once, peek many) and the [`DecodeKernel`] trait every codec
+//! implements.
+//!
+//! The paper's whole argument is that QLC's 3-prefix-bit + LUT
+//! structure decodes *fast*.  The scalar path
+//! ([`Codec::decode_scalar_into`](super::Codec::decode_scalar_into))
+//! resolves one symbol per call, paying a refill check, an EOF check
+//! and a table walk each time.  The kernel inverts that: one refill
+//! tops the staging word up to ≥ 57 valid bits, and the codec then
+//! resolves as many whole codes as the word holds with *no* further
+//! checks — up to 9 six-bit QLC codes or 8 Huffman root-table hits per
+//! refill.  Codes that embed their own length (Elias, Exp-Golomb)
+//! batch through `u64::leading_zeros` on the same word: the prefix
+//! length, the payload and the consume all come out of a single
+//! count-leading-zeros.
+//!
+//! Everything above `codecs/` decodes through this kernel:
+//! [`DecoderSession`](super::DecoderSession) builds a cursor per
+//! chunk, the QLF2 frame reader and the transport/collective chunk
+//! pipeline decode through sessions, and the registry's handles vend
+//! sessions.  The scalar path survives as a reference implementation
+//! (`decode_scalar_into`) used by the equivalence proptests, the
+//! hardware model and the batched-vs-scalar bench section.
+//!
+//! # The `DecodeKernel` contract
+//!
+//! `decode_batch(cur, out)` decodes **exactly `out.len()` symbols**
+//! from `cur` and returns that count.  On error (`UnexpectedEof`,
+//! `InvalidCode`) the contents of `out` and the cursor position are
+//! unspecified.  The cursor is *not* required to be byte-aligned on
+//! entry, and it is left exactly past the last consumed code on
+//! success — callers (the adaptive codec, multi-chunk QLF1 payloads)
+//! may keep decoding from the same cursor.
+
+use super::CodecError;
+
+/// A 64-bit buffered bit cursor over a byte slice, MSB-first (the
+/// first bit of byte 0 is bit 63 of the staging word).  The batch
+/// decode substrate: `refill` once, then `word`/`consume` many times
+/// with no bounds checks until the buffered budget runs out.
+#[derive(Clone, Debug)]
+pub struct BitCursor<'a> {
+    data: &'a [u8],
+    /// Next byte to load into the staging word.
+    byte_pos: usize,
+    /// Staging word: next bit to deliver is the MSB.  Bits below the
+    /// valid window are always zero (loads mask them), so indexing a
+    /// LUT with more bits than are buffered hits zero-padded slots.
+    word: u64,
+    /// Valid bits in `word`.
+    avail: u32,
+    /// Total bits consumed.
+    consumed: u64,
+}
+
+impl<'a> BitCursor<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitCursor { data, byte_pos: 0, word: 0, avail: 0, consumed: 0 }
+    }
+
+    /// Refill the staging word to ≥ 57 valid bits (while input
+    /// remains).  Fast path: one unaligned 8-byte load masked to the
+    /// bytes that fit.
+    #[inline]
+    pub fn refill(&mut self) {
+        if self.avail > 56 {
+            return;
+        }
+        let rem = self.data.len() - self.byte_pos;
+        if rem >= 8 {
+            let w = u64::from_be_bytes(
+                self.data[self.byte_pos..self.byte_pos + 8]
+                    .try_into()
+                    .unwrap(),
+            );
+            let take_bytes = ((64 - self.avail) / 8) as usize; // 1..=8
+            let keep = w & (!0u64).wrapping_shl(64 - take_bytes as u32 * 8);
+            self.word |= keep >> self.avail;
+            self.byte_pos += take_bytes;
+            self.avail += take_bytes as u32 * 8;
+        } else {
+            while self.avail <= 56 && self.byte_pos < self.data.len() {
+                let b = self.data[self.byte_pos] as u64;
+                self.byte_pos += 1;
+                self.word |= b << (56 - self.avail);
+                self.avail += 8;
+            }
+        }
+    }
+
+    /// Refill, then report how many valid bits are buffered (≤ 64).
+    /// Batch loops size their checked-once inner iteration from this.
+    #[inline]
+    pub fn refill_buffered(&mut self) -> u32 {
+        self.refill();
+        self.avail
+    }
+
+    /// Valid bits currently buffered, without refilling.
+    #[inline]
+    pub fn buffered(&self) -> u32 {
+        self.avail
+    }
+
+    /// The raw staging word; its top [`buffered`](Self::buffered) bits
+    /// are valid, the rest are zero.
+    #[inline]
+    pub fn word(&self) -> u64 {
+        self.word
+    }
+
+    /// Consume `n ≤ buffered()` bits previously examined via
+    /// [`word`](Self::word).
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        debug_assert!(n <= self.avail);
+        // `n` can be a full 64 bits (e.g. eight raw symbols at once);
+        // `<<` alone would overflow the shift.
+        self.word = if n >= 64 { 0 } else { self.word << n };
+        self.avail -= n;
+        self.consumed += n as u64;
+    }
+
+    /// Peek up to 32 bits without consuming (zero-padded past EOF).
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        self.refill();
+        if n == 0 {
+            return 0;
+        }
+        (self.word >> (64 - n)) as u32
+    }
+
+    /// Read `n` ≤ 32 bits MSB-first, checking for EOF.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u32, CodecError> {
+        if self.remaining_bits() < n as u64 {
+            return Err(CodecError::UnexpectedEof);
+        }
+        let v = self.peek(n);
+        // peek refilled, so avail ≥ n is guaranteed by the bound above.
+        self.consume(n);
+        Ok(v)
+    }
+
+    /// Count and consume leading zero bits up to the next 1 bit, then
+    /// consume the 1 bit; returns the zero count.  One
+    /// `u64::leading_zeros` resolves runs of up to 64 — the slow-path
+    /// complement of the kernels' inline LZC fast paths.
+    pub fn read_unary(&mut self) -> Result<u32, CodecError> {
+        let mut zeros = 0u32;
+        loop {
+            self.refill();
+            if self.avail == 0 {
+                return Err(CodecError::UnexpectedEof);
+            }
+            // Bits below `avail` are zero, so a 1 found by the LZC is
+            // always within the valid window iff lz < avail.
+            let lz = self.word.leading_zeros().min(self.avail);
+            if lz < self.avail {
+                zeros += lz;
+                self.consume(lz + 1);
+                return Ok(zeros);
+            }
+            zeros += lz;
+            self.consume(lz);
+        }
+    }
+
+    pub fn bits_consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    pub fn remaining_bits(&self) -> u64 {
+        (self.data.len() as u64) * 8 - self.consumed
+    }
+}
+
+/// The batched decode primitive.  See the module docs for the full
+/// contract: decode **exactly `out.len()`** symbols, return the count,
+/// leave the cursor just past the last code.
+pub trait DecodeKernel {
+    fn decode_batch(
+        &self,
+        cur: &mut BitCursor<'_>,
+        out: &mut [u8],
+    ) -> Result<usize, CodecError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitstream::{BitReader, BitWriter};
+    use crate::codecs::{Codec, CodecRegistry};
+    use crate::stats::Histogram;
+    use crate::util::prop;
+
+    #[test]
+    fn cursor_matches_bitreader_on_random_fields() {
+        prop::check("cursor==reader", Default::default(), |rng, size| {
+            let nfields = rng.below(size as u64 + 1) as usize;
+            let fields: Vec<(u64, u32)> = (0..nfields)
+                .map(|_| {
+                    let n = 1 + rng.below(32) as u32;
+                    (rng.next_u64() & ((1u64 << n) - 1), n)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, n) in &fields {
+                w.write_bits(v, n);
+            }
+            let buf = w.finish();
+            let mut cur = BitCursor::new(&buf);
+            let mut rdr = BitReader::new(&buf);
+            for (i, &(v, n)) in fields.iter().enumerate() {
+                let a = cur.read_bits(n).map_err(|e| e.to_string())? as u64;
+                let b = rdr.read_bits(n).map_err(|e| e.to_string())? as u64;
+                if a != v || b != v {
+                    return Err(format!("field {i}: cursor {a} reader {b} want {v}"));
+                }
+                if cur.bits_consumed() != rdr.bits_consumed() {
+                    return Err("consumed counts diverged".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cursor_unary_matches_bitreader() {
+        for zeros in [0u32, 1, 7, 31, 32, 33, 63, 64, 65, 130] {
+            let mut w = BitWriter::new();
+            w.write_zeros(zeros);
+            w.write_bit(true);
+            w.write_bits(0b101, 3);
+            let buf = w.finish();
+            let mut cur = BitCursor::new(&buf);
+            assert_eq!(cur.read_unary().unwrap(), zeros, "zeros={zeros}");
+            assert_eq!(cur.read_bits(3).unwrap(), 0b101);
+        }
+        // All-zero stream: no terminating 1 → EOF.
+        let mut cur = BitCursor::new(&[0u8; 4]);
+        assert_eq!(cur.read_unary(), Err(CodecError::UnexpectedEof));
+    }
+
+    #[test]
+    fn cursor_eof_detection() {
+        let mut cur = BitCursor::new(&[0xFF]);
+        assert_eq!(cur.read_bits(8).unwrap(), 0xFF);
+        assert_eq!(cur.read_bits(1), Err(CodecError::UnexpectedEof));
+        assert_eq!(cur.remaining_bits(), 0);
+    }
+
+    #[test]
+    fn word_is_zero_padded_past_eof() {
+        let mut cur = BitCursor::new(&[0xFF]);
+        cur.refill();
+        assert_eq!(cur.buffered(), 8);
+        assert_eq!(cur.word(), 0xFFu64 << 56);
+    }
+
+    /// The satellite equivalence property: `decode_batch` ≡ the scalar
+    /// reference path symbol-for-symbol, for every registered codec,
+    /// on random payloads — including the consumed-bit count, so a
+    /// kernel cannot "win" by skipping validation work.
+    #[test]
+    fn prop_batch_equals_scalar_all_registered_codecs() {
+        let reg = CodecRegistry::global();
+        prop::check("batch==scalar", prop::Config {
+            cases: 64, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size);
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = reg.known_names();
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle =
+                reg.resolve(name, &hist).map_err(|e| e.to_string())?;
+            let codec = handle.codec();
+            let encoded = codec.encode_to_vec(&symbols);
+
+            let mut batched = vec![0u8; symbols.len()];
+            let mut cur = BitCursor::new(&encoded);
+            codec
+                .decode_into(&mut cur, &mut batched)
+                .map_err(|e| format!("{name} batched: {e}"))?;
+
+            let mut scalar = vec![0u8; symbols.len()];
+            let mut rdr = BitReader::new(&encoded);
+            codec
+                .decode_scalar_into(&mut rdr, &mut scalar)
+                .map_err(|e| format!("{name} scalar: {e}"))?;
+
+            if batched != symbols {
+                return Err(format!("{name}: batched decode mismatch"));
+            }
+            if scalar != symbols {
+                return Err(format!("{name}: scalar decode mismatch"));
+            }
+            if cur.bits_consumed() != rdr.bits_consumed() {
+                return Err(format!(
+                    "{name}: batched consumed {} bits, scalar {}",
+                    cur.bits_consumed(),
+                    rdr.bits_consumed()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Truncations must error on both paths (never panic, never
+    /// diverge into one Ok / one Err on the *same* cut only when the
+    /// cut leaves a decodable prefix — then both must agree).
+    #[test]
+    fn prop_batch_and_scalar_agree_on_truncation() {
+        let reg = CodecRegistry::global();
+        prop::check("batch==scalar truncated", prop::Config {
+            cases: 48, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size.max(8));
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = reg.known_names();
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle =
+                reg.resolve(name, &hist).map_err(|e| e.to_string())?;
+            let codec = handle.codec();
+            let encoded = codec.encode_to_vec(&symbols);
+            let keep = rng.below(encoded.len() as u64 + 1) as usize;
+            let cut = &encoded[..keep];
+
+            let mut batched = vec![0u8; symbols.len()];
+            let mut cur = BitCursor::new(cut);
+            let b = codec.decode_into(&mut cur, &mut batched);
+
+            let mut scalar = vec![0u8; symbols.len()];
+            let mut rdr = BitReader::new(cut);
+            let s = codec.decode_scalar_into(&mut rdr, &mut scalar);
+
+            if b.is_ok() != s.is_ok() {
+                return Err(format!(
+                    "{name}: truncated at {keep}: batched {b:?}, scalar {s:?}"
+                ));
+            }
+            if b.is_ok() && batched != scalar {
+                return Err(format!("{name}: truncated decode diverged"));
+            }
+            Ok(())
+        });
+    }
+}

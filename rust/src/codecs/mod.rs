@@ -8,12 +8,19 @@
 //!
 //! # The codec API
 //!
-//! Every codec implements [`Codec`].  The decode primitive is
-//! [`Codec::decode_into`]: it fills a caller-provided `&mut [u8]`
-//! slice, so bulk decoders write straight into their destination (a
-//! frame chunk, a transport buffer, a tensor shard) with no per-symbol
-//! `Vec` pushes and no intermediate copies.  `decode`/`decode_from_slice`
-//! remain as thin convenience wrappers.
+//! Every codec implements [`Codec`].  The decode primitive is the
+//! batched kernel ([`kernel::DecodeKernel::decode_batch`]): a 64-bit
+//! buffered [`kernel::BitCursor`] is refilled once and the codec
+//! resolves as many whole codes as the staging word holds — table
+//! lookups for QLC/Huffman, leading-zero counts for Elias/Exp-Golomb.
+//! [`Codec::decode_into`] routes through it and fills a
+//! caller-provided `&mut [u8]` slice, so bulk decoders write straight
+//! into their destination (a frame chunk, a transport buffer, a tensor
+//! shard) with no per-symbol `Vec` pushes and no intermediate copies.
+//! `decode`/`decode_from_slice` remain as thin convenience wrappers,
+//! and [`Codec::decode_scalar_into`] keeps the one-symbol-per-step
+//! reference path alive for equivalence tests and the
+//! batched-vs-scalar bench.
 //!
 //! Block-oriented streaming goes through *sessions*:
 //! [`EncoderSession`] / [`DecoderSession`] (constructed via
@@ -34,6 +41,7 @@ pub mod elias;
 pub mod expgolomb;
 pub mod frame;
 pub mod huffman;
+pub mod kernel;
 pub mod qlc;
 pub mod raw;
 pub mod registry;
@@ -41,9 +49,11 @@ mod session;
 #[cfg(feature = "zstd")]
 pub mod zstd_baseline;
 
+pub use kernel::{BitCursor, DecodeKernel};
 pub use registry::{CodecHandle, CodecRegistry};
 pub use session::{
-    chunk_spans, DecoderSession, EncoderSession, DEFAULT_CHUNK_SYMBOLS,
+    chunk_spans, DecodeMode, DecoderSession, EncoderSession,
+    DEFAULT_CHUNK_SYMBOLS,
 };
 
 use crate::bitstream::{BitReader, BitWriter};
@@ -75,20 +85,21 @@ impl std::error::Error for CodecError {}
 
 /// A lossless symbol codec. Implementations must satisfy, for all
 /// symbol slices `s`: `decode(encode(s), s.len()) == s` (the roundtrip
-/// property every codec's proptest asserts).
-pub trait Codec: Send + Sync {
+/// property every codec's proptest asserts), and
+/// `decode_batch` ≡ `decode_scalar_into` symbol-for-symbol (asserted
+/// by the kernel equivalence proptests).
+pub trait Codec: Send + Sync + DecodeKernel {
     /// Short identifier, e.g. "huffman", "qlc-t1".
     fn name(&self) -> String;
 
     /// Append the codes for `symbols` to `out`.
     fn encode(&self, symbols: &[u8], out: &mut BitWriter);
 
-    /// Decode exactly `out.len()` symbols from `reader` into `out`.
-    ///
-    /// This is the decode primitive: bulk decoders fill the slice
-    /// directly (no `Vec` growth on the hot path).  On error the
-    /// contents of `out` are unspecified.
-    fn decode_into(
+    /// Scalar reference decode: exactly `out.len()` symbols, one
+    /// symbol per step through `reader`.  This is the pre-kernel
+    /// behaviour, kept as the ground truth the batched kernel is
+    /// checked against (and as the `--decode=scalar` CLI path).
+    fn decode_scalar_into(
         &self,
         reader: &mut BitReader,
         out: &mut [u8],
@@ -97,17 +108,33 @@ pub trait Codec: Send + Sync {
     /// Code length in bits for each of the 256 symbols.
     fn code_lengths(&self) -> [u32; 256];
 
-    /// Convenience: decode `n` symbols from `reader`, appending to a
+    /// Decode exactly `out.len()` symbols from `cur` into `out`.
+    ///
+    /// This is the decode primitive: it routes through the batched
+    /// [`DecodeKernel`], filling the slice directly (no `Vec` growth
+    /// on the hot path).  On error the contents of `out` are
+    /// unspecified.
+    fn decode_into(
+        &self,
+        cur: &mut BitCursor,
+        out: &mut [u8],
+    ) -> Result<(), CodecError> {
+        let n = self.decode_batch(cur, out)?;
+        debug_assert_eq!(n, out.len());
+        Ok(())
+    }
+
+    /// Convenience: decode `n` symbols from `cur`, appending to a
     /// `Vec`.  On error the vector is restored to its original length.
     fn decode(
         &self,
-        reader: &mut BitReader,
+        cur: &mut BitCursor,
         n: usize,
         out: &mut Vec<u8>,
     ) -> Result<(), CodecError> {
         let start = out.len();
         out.resize(start + n, 0);
-        match self.decode_into(reader, &mut out[start..]) {
+        match self.decode_into(cur, &mut out[start..]) {
             Ok(()) => Ok(()),
             Err(e) => {
                 out.truncate(start);
@@ -123,15 +150,16 @@ pub trait Codec: Send + Sync {
         w.finish()
     }
 
-    /// Convenience: decode `n` symbols from a byte buffer.
+    /// Convenience: decode `n` symbols from a byte buffer (batched
+    /// kernel path).
     fn decode_from_slice(
         &self,
         data: &[u8],
         n: usize,
     ) -> Result<Vec<u8>, CodecError> {
-        let mut r = BitReader::new(data);
+        let mut cur = BitCursor::new(data);
         let mut out = vec![0u8; n];
-        self.decode_into(&mut r, &mut out)?;
+        self.decode_into(&mut cur, &mut out)?;
         Ok(out)
     }
 
@@ -179,6 +207,15 @@ pub(crate) mod testutil {
                         "roundtrip mismatch (len {})",
                         symbols.len()
                     ));
+                }
+                // The scalar reference path must agree with the kernel.
+                let mut scalar = vec![0u8; symbols.len()];
+                let mut rdr = crate::bitstream::BitReader::new(&encoded);
+                codec
+                    .decode_scalar_into(&mut rdr, &mut scalar)
+                    .map_err(|e| format!("scalar: {e}"))?;
+                if scalar != symbols {
+                    return Err("scalar decode mismatch".into());
                 }
                 // encoded_bits must match the writer exactly.
                 let bits = codec.encoded_bits(&symbols);

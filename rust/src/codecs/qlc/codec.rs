@@ -8,6 +8,7 @@
 
 use super::scheme::AreaScheme;
 use crate::bitstream::{BitReader, BitWriter};
+use crate::codecs::kernel::{BitCursor, DecodeKernel};
 use crate::codecs::{Codec, CodecError};
 use crate::stats::Pmf;
 
@@ -154,6 +155,72 @@ impl QlcCodec {
         reader.skip(e.total_len);
         Ok(self.rank_to_symbol[(e.base + idx) as usize])
     }
+
+    /// Cursor analogue of [`decode_one`](Self::decode_one) — the
+    /// kernel's slow tail when fewer than `max_code_bits` are buffered.
+    #[inline]
+    fn decode_one_cursor(&self, cur: &mut BitCursor) -> Result<u8, CodecError> {
+        cur.refill();
+        let w = cur.word();
+        let area = (w >> (64 - self.scheme.prefix_bits)) as usize;
+        let e = &self.fast_table[area];
+        if cur.remaining_bits() < e.total_len as u64 {
+            return Err(CodecError::UnexpectedEof);
+        }
+        let idx = (w >> e.word_shift) as u32 & e.suffix_mask;
+        if idx >= e.size {
+            return Err(CodecError::InvalidCode {
+                bit_offset: cur.bits_consumed(),
+            });
+        }
+        cur.consume(e.total_len);
+        Ok(self.rank_to_symbol[(e.base + idx) as usize])
+    }
+}
+
+impl DecodeKernel for QlcCodec {
+    /// Word-at-a-time table decode: one refill covers ⌊avail/max⌋
+    /// symbols — up to 9 six-bit codes per 64-bit window — with no
+    /// refill or EOF checks inside the run (every code is ≤ max bits).
+    /// One `2^P`-entry prefix lookup yields the suffix width, mask and
+    /// base rank; a second 256-entry LUT maps rank → symbol (paper
+    /// Table 4).
+    fn decode_batch(
+        &self,
+        cur: &mut BitCursor,
+        out: &mut [u8],
+    ) -> Result<usize, CodecError> {
+        let n = out.len();
+        let max = self.max_code_bits;
+        let prefix_shift = 64 - self.scheme.prefix_bits;
+        let mut i = 0usize;
+        while i < n {
+            let avail = cur.refill_buffered();
+            if avail < max {
+                // Tail: the final codes may be shorter than max, so
+                // fall back to the checked single-symbol step.
+                out[i] = self.decode_one_cursor(cur)?;
+                i += 1;
+                continue;
+            }
+            let k = ((avail / max) as usize).min(n - i);
+            for slot in &mut out[i..i + k] {
+                let w = cur.word();
+                let area = (w >> prefix_shift) as usize;
+                let e = &self.fast_table[area];
+                let idx = (w >> e.word_shift) as u32 & e.suffix_mask;
+                if idx >= e.size {
+                    return Err(CodecError::InvalidCode {
+                        bit_offset: cur.bits_consumed(),
+                    });
+                }
+                cur.consume(e.total_len);
+                *slot = self.rank_to_symbol[(e.base + idx) as usize];
+            }
+            i += k;
+        }
+        Ok(n)
+    }
 }
 
 impl Codec for QlcCodec {
@@ -170,42 +237,16 @@ impl Codec for QlcCodec {
         }
     }
 
-    fn decode_into(
+    fn decode_scalar_into(
         &self,
         reader: &mut BitReader,
         out: &mut [u8],
     ) -> Result<(), CodecError> {
-        let n = out.len();
-        let max = self.max_code_bits;
-        let mut i = 0usize;
-        while i < n {
-            // Bulk path: one refill covers ⌊avail/max⌋ symbols with no
-            // further EOF checks (every code is ≤ max bits).  Writing
-            // straight into the destination slice keeps the loop free
-            // of capacity bookkeeping (and of the `set_len` unsafe the
-            // Vec-based decoder needed).
-            let avail = reader.buffered_bits();
-            if avail < max {
-                out[i] = self.decode_one(reader)?;
-                i += 1;
-                continue;
-            }
-            let k = ((avail / max) as usize).min(n - i);
-            let prefix_shift = 64 - self.scheme.prefix_bits;
-            for slot in &mut out[i..i + k] {
-                let w = reader.word_buffered();
-                let area = (w >> prefix_shift) as usize;
-                let e = &self.fast_table[area];
-                let idx = (w >> e.word_shift) as u32 & e.suffix_mask;
-                if idx >= e.size {
-                    return Err(CodecError::InvalidCode {
-                        bit_offset: reader.bits_consumed(),
-                    });
-                }
-                reader.skip(e.total_len);
-                *slot = self.rank_to_symbol[(e.base + idx) as usize];
-            }
-            i += k;
+        // Reference path: one symbol per [`Self::decode_one`] call,
+        // paying the refill/EOF checks every time.  The batched word
+        // loop lives in the [`DecodeKernel`] impl.
+        for slot in out.iter_mut() {
+            *slot = self.decode_one(reader)?;
         }
         Ok(())
     }

@@ -11,6 +11,30 @@ use super::codec::QlcCodec;
 use super::scheme::{Area, AreaScheme};
 use crate::util::json::Json;
 
+/// Serialize a bare rank order (the QLF2 per-chunk table *delta*: the
+/// chunk keeps the frame's area scheme but re-ranks the symbols).
+pub fn rank_to_bytes(rank_order: &[u8; 256]) -> Vec<u8> {
+    rank_order.to_vec()
+}
+
+/// Parse and validate a bare rank order — must be exactly 256 bytes
+/// and a permutation of 0..=255.
+pub fn rank_from_bytes(data: &[u8]) -> Result<[u8; 256], String> {
+    if data.len() != 256 {
+        return Err(format!("rank order is {} bytes, want 256", data.len()));
+    }
+    let mut rank = [0u8; 256];
+    rank.copy_from_slice(data);
+    let mut seen = [false; 256];
+    for &s in rank.iter() {
+        if seen[s as usize] {
+            return Err(format!("rank order repeats symbol {s}"));
+        }
+        seen[s as usize] = true;
+    }
+    Ok(rank)
+}
+
 /// Serialize scheme + rank order to the binary header format.
 pub fn to_bytes(codec: &QlcCodec) -> Vec<u8> {
     let scheme = codec.scheme();
@@ -46,16 +70,8 @@ pub fn from_bytes(data: &[u8], label: &str) -> Result<QlcCodec, String> {
         areas.push(Area { size, symbol_bits: bits });
     }
     let scheme = AreaScheme::new(prefix_bits, areas)?;
-    let mut rank = [0u8; 256];
-    rank.copy_from_slice(&data[1 + k * 3..]);
     // Permutation check (from_rank_order panics; validate first).
-    let mut seen = [false; 256];
-    for &s in rank.iter() {
-        if seen[s as usize] {
-            return Err(format!("rank order repeats symbol {s}"));
-        }
-        seen[s as usize] = true;
-    }
+    let rank = rank_from_bytes(&data[1 + k * 3..])?;
     Ok(QlcCodec::from_rank_order(scheme, &rank, label))
 }
 
@@ -194,6 +210,20 @@ mod tests {
         bad[1] = 0xFF;
         bad[2] = 0xFF;
         assert!(from_bytes(&bad, "x").is_err());
+    }
+
+    #[test]
+    fn rank_order_roundtrip_and_validation() {
+        let codec = sample_codec();
+        let bytes = rank_to_bytes(codec.rank_order());
+        assert_eq!(bytes.len(), 256);
+        assert_eq!(&rank_from_bytes(&bytes).unwrap(), codec.rank_order());
+        // Wrong length.
+        assert!(rank_from_bytes(&bytes[..255]).is_err());
+        // Duplicate entry.
+        let mut dup = bytes.clone();
+        dup[0] = dup[1];
+        assert!(rank_from_bytes(&dup).is_err());
     }
 
     #[test]

@@ -1,11 +1,41 @@
 //! Identity codec: 8 bits/symbol. The uncompressed baseline every
 //! paper table normalizes against.
 
+use super::kernel::{BitCursor, DecodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RawCodec;
+
+impl DecodeKernel for RawCodec {
+    fn decode_batch(
+        &self,
+        cur: &mut BitCursor,
+        out: &mut [u8],
+    ) -> Result<usize, CodecError> {
+        let n = out.len();
+        let mut i = 0usize;
+        while i < n {
+            // One refill yields up to 8 whole symbols; `avail` counts
+            // only real input bits, so the inner loop needs no EOF
+            // checks.
+            let avail = cur.refill_buffered();
+            let k = ((avail / 8) as usize).min(n - i);
+            if k == 0 {
+                return Err(CodecError::UnexpectedEof);
+            }
+            let mut w = cur.word();
+            for slot in &mut out[i..i + k] {
+                *slot = (w >> 56) as u8;
+                w <<= 8;
+            }
+            cur.consume(k as u32 * 8);
+            i += k;
+        }
+        Ok(n)
+    }
+}
 
 impl Codec for RawCodec {
     fn name(&self) -> String {
@@ -18,7 +48,7 @@ impl Codec for RawCodec {
         }
     }
 
-    fn decode_into(
+    fn decode_scalar_into(
         &self,
         reader: &mut BitReader,
         out: &mut [u8],
@@ -65,6 +95,16 @@ mod tests {
             c.decode_from_slice(&[1, 2], 3),
             Err(CodecError::UnexpectedEof)
         );
+    }
+
+    #[test]
+    fn batch_decode_is_identity_at_any_length() {
+        // Cross the 8-byte refill boundary repeatedly.
+        let c = RawCodec;
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 64, 1000] {
+            let data: Vec<u8> = (0..n).map(|i| (i * 37) as u8).collect();
+            assert_eq!(c.decode_from_slice(&data, n).unwrap(), data, "n={n}");
+        }
     }
 
     #[test]

@@ -25,9 +25,9 @@ use std::sync::OnceLock;
 use super::elias::{EliasCodec, EliasKind};
 use super::expgolomb::ExpGolombCodec;
 use super::huffman::HuffmanCodec;
-use super::qlc::{self, QlcCodec};
+use super::qlc::{self, AreaScheme, QlcCodec};
 use super::raw::RawCodec;
-use super::session::{DecoderSession, EncoderSession};
+use super::session::{DecodeMode, DecoderSession, EncoderSession};
 use super::{Codec, CodecError};
 use crate::stats::Histogram;
 
@@ -40,6 +40,77 @@ pub const TAG_ELIAS_DELTA: u8 = 4;
 pub const TAG_ELIAS_OMEGA: u8 = 5;
 pub const TAG_EXPGOLOMB: u8 = 6;
 
+/// Per-chunk table adaptation hooks.  A codec family that can trade a
+/// small serialized table *delta* for better per-chunk compressibility
+/// (today: QLC, via a rank-permutation re-fit under the frame's area
+/// scheme) installs one of these on its [`CodecHandle`]; the QLF2
+/// frame writer and reader drive it through the chunk-table flag bit.
+pub trait ChunkTables: Send + Sync {
+    /// Re-fit the tables to one chunk's measured PMF.  Returns the
+    /// serialized delta plus the chunk-local codec **only when** the
+    /// payload bits saved by the re-fit more than pay for the delta
+    /// bytes — i.e. when the chunk's distribution has drifted past the
+    /// break-even threshold; `None` keeps the frame's base tables.
+    fn refit(&self, chunk: &[u8]) -> Option<(Vec<u8>, Box<dyn Codec>)>;
+
+    /// Rebuild a chunk-local codec from a serialized delta (decode
+    /// side; strict validation, `Err` on any malformed delta).
+    fn from_delta(&self, delta: &[u8]) -> Result<Box<dyn Codec>, CodecError>;
+}
+
+/// [`ChunkTables`] for the QLC family: the delta is a bare 256-byte
+/// rank order (`qlc::serde::rank_to_bytes`); the area scheme is the
+/// frame's and never changes per chunk, so chunk codecs share the
+/// base codec's length structure.
+struct QlcChunkTables {
+    scheme: AreaScheme,
+    /// Base codec's per-symbol code lengths (drift cost baseline).
+    base_lengths: [u32; 256],
+}
+
+impl ChunkTables for QlcChunkTables {
+    fn refit(&self, chunk: &[u8]) -> Option<(Vec<u8>, Box<dyn Codec>)> {
+        if chunk.is_empty() {
+            return None;
+        }
+        let hist = Histogram::from_symbols(chunk);
+        let base_bits: u64 = (0..256)
+            .map(|s| hist.counts[s] * self.base_lengths[s] as u64)
+            .sum();
+        let rank_order = hist.pmf().rank_order();
+        let rank_lengths = self.scheme.rank_lengths();
+        let refit_bits: u64 = (0..256)
+            .map(|r| {
+                hist.counts[rank_order[r] as usize] * rank_lengths[r] as u64
+            })
+            .sum();
+        // Break-even: the delta ships as `len u16 | 256 rank bytes`.
+        // Emitting it only when the re-fit saves strictly more payload
+        // bits guarantees an adaptive frame is never larger than the
+        // fixed-table frame (modulo one byte of chunk padding).
+        let delta_cost_bits = 8 * (2 + 256) as u64;
+        if base_bits.saturating_sub(refit_bits) <= delta_cost_bits {
+            return None;
+        }
+        let codec: Box<dyn Codec> = Box::new(QlcCodec::from_rank_order(
+            self.scheme.clone(),
+            &rank_order,
+            "qlc-chunk",
+        ));
+        Some((qlc::serde::rank_to_bytes(&rank_order), codec))
+    }
+
+    fn from_delta(&self, delta: &[u8]) -> Result<Box<dyn Codec>, CodecError> {
+        let rank = qlc::serde::rank_from_bytes(delta)
+            .map_err(CodecError::BadHeader)?;
+        Ok(Box::new(QlcCodec::from_rank_order(
+            self.scheme.clone(),
+            &rank,
+            "qlc-chunk",
+        )))
+    }
+}
+
 /// A fully-constructed codec plus its wire identity.  This is what
 /// every layer above `codecs/` passes around: the frame writer asks it
 /// for `wire_tag()`/`wire_header()`, the transport and coordinator ask
@@ -49,11 +120,24 @@ pub struct CodecHandle {
     name: String,
     tag: u8,
     header: Vec<u8>,
+    /// Per-chunk adaptation hooks, when the family supports them.
+    chunk_tables: Option<Box<dyn ChunkTables>>,
 }
 
 impl CodecHandle {
     fn new(codec: Box<dyn Codec>, name: String, tag: u8, header: Vec<u8>) -> Self {
-        CodecHandle { codec, name, tag, header }
+        CodecHandle { codec, name, tag, header, chunk_tables: None }
+    }
+
+    fn with_chunk_tables(mut self, tables: Box<dyn ChunkTables>) -> Self {
+        self.chunk_tables = Some(tables);
+        self
+    }
+
+    /// Per-chunk table adaptation hooks (QLF2 `--adaptive-chunks`);
+    /// `None` for families whose tables cannot be re-fit per chunk.
+    pub fn chunk_tables(&self) -> Option<&dyn ChunkTables> {
+        self.chunk_tables.as_deref()
     }
 
     /// The resolved codec name (e.g. "qlc-t1", "eg3").
@@ -83,9 +167,15 @@ impl CodecHandle {
         EncoderSession::new(self.codec())
     }
 
-    /// Start a streaming decode session.
+    /// Start a streaming decode session (batched kernel path).
     pub fn decoder(&self) -> DecoderSession<'_> {
         DecoderSession::new(self.codec())
+    }
+
+    /// Start a streaming decode session on an explicit decode path
+    /// (the CLI's `--decode=batched|scalar`).
+    pub fn decoder_with(&self, mode: DecodeMode) -> DecoderSession<'_> {
+        DecoderSession::with_mode(self.codec(), mode)
     }
 }
 
@@ -285,7 +375,12 @@ fn handle_huffman(codec: HuffmanCodec) -> CodecHandle {
 fn handle_qlc(codec: QlcCodec) -> CodecHandle {
     let header = qlc::serde::to_bytes(&codec);
     let name = codec.name();
+    let tables = QlcChunkTables {
+        scheme: codec.scheme().clone(),
+        base_lengths: codec.code_lengths(),
+    };
     CodecHandle::new(Box::new(codec), name, TAG_QLC, header)
+        .with_chunk_tables(Box::new(tables))
 }
 
 fn handle_elias(kind: EliasKind, tag: u8) -> CodecHandle {
@@ -458,6 +553,47 @@ mod tests {
         // Raw/elias: unexpected header bytes.
         assert!(reg.resolve_wire(TAG_RAW, &[0]).is_err());
         assert!(reg.resolve_wire(TAG_ELIAS_GAMMA, &[0]).is_err());
+    }
+
+    #[test]
+    fn chunk_tables_only_on_qlc_and_roundtrip_via_delta() {
+        let hist = skewed_hist(7);
+        let reg = CodecRegistry::global();
+        for name in ["raw", "huffman", "elias-gamma", "eg3"] {
+            let h = reg.resolve(name, &hist).unwrap();
+            assert!(h.chunk_tables().is_none(), "{name}");
+        }
+        let h = reg.resolve("qlc", &hist).unwrap();
+        let tables = h.chunk_tables().expect("qlc supports per-chunk tables");
+
+        // A chunk drawn from a *reversed* distribution drifts hard:
+        // refit must fire, and the delta must rebuild a codec that
+        // decodes the chunk-local encoding.
+        let drifted: Vec<u8> = AliasTable::new(&hist.pmf().p)
+            .sample_many(&mut Rng::new(9), 32 * 1024)
+            .into_iter()
+            .map(|s| 255 - s)
+            .collect();
+        let (delta, codec) =
+            tables.refit(&drifted).expect("drifted chunk must refit");
+        let enc = codec.encode_to_vec(&drifted);
+        let rebuilt = tables.from_delta(&delta).unwrap();
+        assert_eq!(
+            rebuilt.decode_from_slice(&enc, drifted.len()).unwrap(),
+            drifted
+        );
+
+        // A chunk drawn from the calibration PMF itself saves nothing:
+        // no refit.
+        let stationary =
+            AliasTable::new(&hist.pmf().p).sample_many(&mut Rng::new(10), 32 * 1024);
+        assert!(tables.refit(&stationary).is_none());
+        // Empty chunks never refit; malformed deltas are rejected.
+        assert!(tables.refit(&[]).is_none());
+        assert!(tables.from_delta(&delta[..200]).is_err());
+        let mut dup = delta.clone();
+        dup[0] = dup[1];
+        assert!(tables.from_delta(&dup).is_err());
     }
 
     #[test]

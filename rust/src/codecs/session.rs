@@ -13,8 +13,42 @@
 //! so the destination (tensor shard, frame slice) is written exactly
 //! once.  Both track totals for throughput accounting.
 
+use super::kernel::BitCursor;
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
+
+/// Which decode path a [`DecoderSession`] (and everything above it —
+/// frame, transport, CLI) runs: the batched
+/// [`DecodeKernel`](super::DecodeKernel) word-at-a-time path, or the
+/// scalar one-symbol-per-step reference path.  Batched is the default
+/// everywhere; scalar exists for equivalence testing and the
+/// batched-vs-scalar bench/CLI comparison.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodeMode {
+    #[default]
+    Batched,
+    Scalar,
+}
+
+impl DecodeMode {
+    /// Parse the CLI's `--decode` vocabulary.
+    pub fn parse(name: &str) -> Result<DecodeMode, String> {
+        match name {
+            "batched" => Ok(DecodeMode::Batched),
+            "scalar" => Ok(DecodeMode::Scalar),
+            other => Err(format!(
+                "unknown decode mode '{other}' (expected batched|scalar)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecodeMode::Batched => "batched",
+            DecodeMode::Scalar => "scalar",
+        }
+    }
+}
 
 /// Default chunk granularity in symbols (64 KiB of e4m3 symbols).
 /// Large enough that per-chunk overhead (8 bytes of QLF2 chunk table,
@@ -114,9 +148,12 @@ impl<'c> EncoderSession<'c> {
 }
 
 /// Streaming decoder bound to one codec.  Decodes byte-aligned chunk
-/// payloads into caller-provided slices.
+/// payloads into caller-provided slices via the batched
+/// [`DecodeKernel`](super::DecodeKernel) (or the scalar reference path
+/// when constructed with [`DecodeMode::Scalar`]).
 pub struct DecoderSession<'c> {
     codec: &'c dyn Codec,
+    mode: DecodeMode,
     symbols_out: u64,
     bytes_in: u64,
     chunks: u64,
@@ -124,11 +161,20 @@ pub struct DecoderSession<'c> {
 
 impl<'c> DecoderSession<'c> {
     pub fn new(codec: &'c dyn Codec) -> Self {
-        DecoderSession { codec, symbols_out: 0, bytes_in: 0, chunks: 0 }
+        Self::with_mode(codec, DecodeMode::default())
+    }
+
+    pub fn with_mode(codec: &'c dyn Codec, mode: DecodeMode) -> Self {
+        DecoderSession { codec, mode, symbols_out: 0, bytes_in: 0, chunks: 0 }
     }
 
     pub fn codec(&self) -> &'c dyn Codec {
         self.codec
+    }
+
+    /// Which decode path this session runs.
+    pub fn mode(&self) -> DecodeMode {
+        self.mode
     }
 
     /// Decode exactly `out.len()` symbols from `payload` into `out`.
@@ -145,8 +191,16 @@ impl<'c> DecoderSession<'c> {
         if out.len() as u64 > payload.len() as u64 * 8 {
             return Err(CodecError::UnexpectedEof);
         }
-        let mut reader = BitReader::new(payload);
-        self.codec.decode_into(&mut reader, out)?;
+        match self.mode {
+            DecodeMode::Batched => {
+                let mut cur = BitCursor::new(payload);
+                self.codec.decode_into(&mut cur, out)?;
+            }
+            DecodeMode::Scalar => {
+                let mut reader = BitReader::new(payload);
+                self.codec.decode_scalar_into(&mut reader, out)?;
+            }
+        }
         self.symbols_out += out.len() as u64;
         self.bytes_in += payload.len() as u64;
         self.chunks += 1;
@@ -262,6 +316,24 @@ mod tests {
             let step = chunk.max(1);
             assert!(spans.iter().all(|&(a, b)| b - a <= step && b > a));
         }
+    }
+
+    #[test]
+    fn scalar_and_batched_sessions_agree() {
+        let symbols = skewed(30_000, 7);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+        let payload = codec.encoder().encode_chunk_to_vec(&symbols);
+        let mut batched = vec![0u8; symbols.len()];
+        DecoderSession::new(&codec)
+            .decode_chunk(&payload, &mut batched)
+            .unwrap();
+        let mut scalar = vec![0u8; symbols.len()];
+        let mut s = DecoderSession::with_mode(&codec, DecodeMode::Scalar);
+        assert_eq!(s.mode(), DecodeMode::Scalar);
+        s.decode_chunk(&payload, &mut scalar).unwrap();
+        assert_eq!(batched, symbols);
+        assert_eq!(scalar, symbols);
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //! Layer map (DESIGN.md):
 //! * [`formats`] — the e4m3 data type and block-32 quantizer;
 //! * [`codecs`] — QLC, canonical Huffman, Elias γ/δ/ω, Exp-Golomb, raw;
-//!   streaming sessions, the unified codec registry, and the chunked
-//!   QLF2 frame container (parallel encode/decode);
+//!   the batched decode kernel ([`codecs::kernel`]: `BitCursor` +
+//!   `DecodeKernel`, word-at-a-time table/LZC decode), streaming
+//!   sessions, the unified codec registry, and the chunked QLF2 frame
+//!   container (parallel decode, optional adaptive per-chunk tables);
 //! * [`stats`] — PMFs, entropy, compressibility;
 //! * [`data`] — tensor/symbol generators calibrated to the paper's
 //!   distributions;

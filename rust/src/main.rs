@@ -42,6 +42,7 @@ const VALUE_OPTS: &[&str] = &[
     "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
     "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
     "name", "prefix", "rank", "world", "listen", "connect", "timeout-s",
+    "decode",
 ];
 
 fn main() -> ExitCode {
@@ -92,10 +93,17 @@ USAGE: qlc <subcommand> [options]
   compress   <in> <out> --codec raw|huffman|qlc|qlc-t1|qlc-t2|elias-*|egK
              [--qlf1]   (legacy single-payload frame; default is
                          chunked QLF2, decoded in parallel)
+             [--adaptive-chunks]  (QLF2 + qlc only: re-fit the rank
+                         tables per chunk when the chunk's PMF drifts
+                         past break-even; drifting streams compress
+                         better, chunks stay independently decodable)
              [--shards N]  (QLM1 manifest at <out> + <out>.shardK files,
                             one table header shared by all shards)
-  decompress <in> <out>   (reads QLF1, QLF2 and QLM1 manifests —
-                           shard files are found next to the manifest)
+  decompress <in> <out> [--decode batched|scalar]
+                          (reads QLF1, QLF2 and QLM1 manifests —
+                           shard files are found next to the manifest;
+                           --decode picks the kernel or the scalar
+                           reference path, default batched)
   datagen    --kind K --n SYMBOLS --out DIR [--seed S]
              [--target-entropy H | --knob X]
   optimize   [--kind K | --dir TRACES --name NAME] [--prefix P] [--json]
@@ -192,12 +200,26 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
     };
     let codec = args.opt_or("codec", "qlc");
     let handle = CodecRegistry::global().resolve(&codec, &hist)?;
+    let adaptive = args.has_flag("adaptive-chunks");
+    if adaptive && handle.chunk_tables().is_none() {
+        return Err(format!(
+            "--adaptive-chunks needs a codec with per-chunk tables \
+             (qlc family), not '{codec}'"
+        ));
+    }
     let n_shards = args.opt_usize("shards", 0).map_err(|e| e.to_string())?;
     if n_shards > 0 {
         if args.has_flag("qlf1") {
             return Err(
                 "--qlf1 and --shards are mutually exclusive (shards use \
                  the QLM1/QLS1 formats)"
+                    .into(),
+            );
+        }
+        if adaptive {
+            return Err(
+                "--adaptive-chunks applies to QLF2 frames only (shards \
+                 share one manifest table)"
                     .into(),
             );
         }
@@ -232,7 +254,14 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
     // QLF2 chunked frames by default (parallel encode/decode);
     // `--qlf1` writes the legacy single-payload format.
     let framed = if args.has_flag("qlf1") {
+        if adaptive {
+            return Err(
+                "--adaptive-chunks applies to QLF2 frames only".into()
+            );
+        }
         frame::compress_qlf1(&handle, &symbols)
+    } else if adaptive {
+        frame::compress_adaptive(&handle, &symbols, &FrameOptions::default())
     } else {
         frame::compress(&handle, &symbols)
     };
@@ -251,6 +280,10 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
 
 fn cmd_decompress(args: &Args) -> Result<(), String> {
     let [input, output] = two_paths(args)?;
+    let decode = qlc::codecs::DecodeMode::parse(
+        &args.opt_or("decode", "batched"),
+    )?;
+    let opts = FrameOptions { decode, ..Default::default() };
     let framed = std::fs::read(&input).map_err(|e| e.to_string())?;
     let symbols = if framed.len() >= 4 && framed[0..4] == frame::MAGIC_MANIFEST
     {
@@ -264,14 +297,10 @@ fn cmd_decompress(args: &Args) -> Result<(), String> {
                 format!("{}: {e}", path.display())
             })?);
         }
-        frame::decompress_sharded(
-            &manifest,
-            &shards,
-            &FrameOptions::default(),
-        )
-        .map_err(|e| e.to_string())?
+        frame::decompress_sharded(&manifest, &shards, &opts)
+            .map_err(|e| e.to_string())?
     } else {
-        frame::decompress(&framed).map_err(|e| e.to_string())?
+        frame::decompress_with(&framed, &opts).map_err(|e| e.to_string())?
     };
     std::fs::write(&output, &symbols).map_err(|e| e.to_string())?;
     println!(

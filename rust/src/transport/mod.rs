@@ -155,7 +155,11 @@ pub fn encode_payload(
 
 /// Payload-only chunk decode appended to `out`; inverse of
 /// [`encode_payload`].  Decodes straight into the destination's tail —
-/// no intermediate buffer on the hot path.
+/// no intermediate buffer on the hot path.  Sessions route through the
+/// batched [`crate::codecs::DecodeKernel`], so every per-chunk decode
+/// time a [`HopTrace`] records — and therefore the `codec_time_s` the
+/// pipelined-hop model and the TCP workers report — measures the
+/// word-at-a-time kernel path, not the scalar reference decoder.
 pub fn decode_payload_into(
     dec: &mut Option<DecoderSession<'_>>,
     payload: &[u8],

@@ -157,15 +157,38 @@ fn set_handshake_timeouts(
     Ok(())
 }
 
-/// `"host:port"` → `"host"` (IPv4 / hostname form).
+/// The host part of an address, in a form `TcpListener::bind((host,
+/// port))` accepts.  Handles all three shapes a `--listen`/`--connect`
+/// flag can carry:
+///
+/// * `"host:port"` / bare `"host"` — IPv4 or hostname;
+/// * `"[v6]:port"` / `"[v6]"` — bracketed IPv6 (`"[::1]:9000"` →
+///   `"::1"`; the brackets are URI framing, not part of the address);
+/// * a bare unbracketed IPv6 like `"::1"` — returned whole (every
+///   colon is part of the address, not a port separator).
 fn host_of(addr: &str) -> &str {
-    addr.rsplit_once(':').map(|(h, _)| h).unwrap_or(addr)
+    if let Some(rest) = addr.strip_prefix('[') {
+        // Bracketed IPv6: the host ends at the matching bracket,
+        // whatever follows (`:port` or nothing).
+        if let Some(end) = rest.find(']') {
+            return &rest[..end];
+        }
+        // Unterminated bracket: fall through to the generic split so
+        // the subsequent bind reports the malformed address.
+    }
+    match addr.rsplit_once(':') {
+        // More than one colon and no brackets → bare IPv6, no port.
+        Some((h, _)) if h.contains(':') => addr,
+        Some((h, _)) => h,
+        None => addr,
+    }
 }
 
 /// A listen host that names no concrete interface — advertising it to
-/// a remote peer would point the peer at *itself*.
+/// a remote peer would point the peer at *itself*.  Accepts the host
+/// as produced by [`host_of`] (brackets already stripped).
 fn is_wildcard_host(host: &str) -> bool {
-    matches!(host, "" | "0.0.0.0" | "::" | "[::]")
+    matches!(host, "" | "0.0.0.0" | "::")
 }
 
 /// Rank 0's side of the roster exchange: gather HELLOs, answer with
@@ -441,6 +464,64 @@ mod tests {
         });
         assert_eq!(ja.join().unwrap(), vec![2u8; 64]);
         assert_eq!(jb.join().unwrap(), vec![1u8; 64]);
+    }
+
+    #[test]
+    fn host_parsing_handles_ipv4_ipv6_and_hostnames() {
+        // IPv4 / hostname with port.
+        assert_eq!(host_of("127.0.0.1:9000"), "127.0.0.1");
+        assert_eq!(host_of("node7:9000"), "node7");
+        assert_eq!(host_of("127.0.0.1"), "127.0.0.1");
+        // Bracketed IPv6, with and without port.
+        assert_eq!(host_of("[::1]:9000"), "::1");
+        assert_eq!(host_of("[::1]"), "::1");
+        assert_eq!(host_of("[fe80::1%eth0]:7001"), "fe80::1%eth0");
+        assert_eq!(host_of("[2001:db8::42]:80"), "2001:db8::42");
+        // Bare IPv6 (no port to strip — every colon is address).
+        assert_eq!(host_of("::1"), "::1");
+        assert_eq!(host_of("2001:db8::42"), "2001:db8::42");
+        // Wildcards, bracketed or not.
+        assert!(is_wildcard_host(host_of("0.0.0.0:9000")));
+        assert!(is_wildcard_host(host_of("[::]:9000")));
+        assert!(is_wildcard_host(host_of("")));
+        assert!(!is_wildcard_host(host_of("[::1]:9000")));
+        assert!(!is_wildcard_host(host_of("10.0.0.1:1")));
+    }
+
+    #[test]
+    fn ipv6_bracketed_rendezvous_forms_a_ring() {
+        // ROADMAP open item: `--listen [::1]:port` must work end to
+        // end.  Skip quietly on hosts without IPv6 loopback.
+        let Ok(probe) = TcpListener::bind(("::1", 0)) else {
+            eprintln!("skipping: no IPv6 loopback on this host");
+            return;
+        };
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let addr = format!("[::1]:{port}");
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_secs(20));
+        let world = 3;
+        let mut joined = Vec::new();
+        for rank in 0..world {
+            let addr = addr.clone();
+            joined.push(std::thread::spawn(move || {
+                let mut link =
+                    form_ring(rank, world, &addr, &cfg).unwrap();
+                let symbols = vec![rank as u8; 256];
+                let mut enc = None;
+                let mut dec = None;
+                let ex = exchange_hop(
+                    &mut link, &mut enc, &mut dec, &symbols, &[], 64,
+                )
+                .unwrap();
+                let upstream = ((rank + world - 1) % world) as u8;
+                assert_eq!(ex.symbols, vec![upstream; 256], "rank {rank}");
+            }));
+        }
+        for j in joined {
+            j.join().unwrap();
+        }
     }
 
     #[test]

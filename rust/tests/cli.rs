@@ -71,6 +71,89 @@ fn compress_decompress_file_roundtrip() {
 }
 
 #[test]
+fn adaptive_chunks_cli_roundtrip_and_validation() {
+    let dir = tmp("adaptive");
+    let input = dir.join("in.bin");
+    // A stream that drifts hard at the midpoint, so at least one chunk
+    // re-fits its tables.
+    let mut data: Vec<u8> = (0..80_000u64)
+        .map(|i| (i.wrapping_mul(i) % 97 % 64) as u8)
+        .collect();
+    let tail: Vec<u8> = data.iter().map(|&s| 255 - s).collect();
+    data.extend_from_slice(&tail);
+    std::fs::write(&input, &data).unwrap();
+    let framed = dir.join("out.qlf");
+    let out = qlc()
+        .args([
+            "compress",
+            input.to_str().unwrap(),
+            framed.to_str().unwrap(),
+            "--codec",
+            "qlc",
+            "--adaptive-chunks",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    // Bit-exact roundtrip on both decode paths.
+    for mode in ["batched", "scalar"] {
+        let restored = dir.join(format!("out.{mode}"));
+        let out = qlc()
+            .args([
+                "decompress",
+                framed.to_str().unwrap(),
+                restored.to_str().unwrap(),
+                "--decode",
+                mode,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{mode}: {out:?}");
+        assert_eq!(std::fs::read(&restored).unwrap(), data, "{mode}");
+    }
+    // Adaptive chunks need a per-chunk-table codec family…
+    let out = qlc()
+        .args([
+            "compress",
+            input.to_str().unwrap(),
+            framed.to_str().unwrap(),
+            "--codec",
+            "huffman",
+            "--adaptive-chunks",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--adaptive-chunks + huffman must fail");
+    // …and a chunked QLF2 frame.
+    let out = qlc()
+        .args([
+            "compress",
+            input.to_str().unwrap(),
+            framed.to_str().unwrap(),
+            "--codec",
+            "qlc",
+            "--qlf1",
+            "--adaptive-chunks",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "--adaptive-chunks + --qlf1 must fail");
+    // Unknown decode mode is a clean CLI error.
+    let out = qlc()
+        .args([
+            "decompress",
+            framed.to_str().unwrap(),
+            dir.join("x").to_str().unwrap(),
+            "--decode",
+            "quantum",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn sharded_compress_decompress_roundtrip() {
     let dir = tmp("sharded");
     let input = dir.join("in.bin");

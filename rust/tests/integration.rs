@@ -38,7 +38,7 @@ fn full_tensor_compression_roundtrip() {
         let small = frame::compress_with(
             &handle,
             &q.symbols,
-            &FrameOptions { chunk_symbols: 1000, threads: 0 },
+            &FrameOptions { chunk_symbols: 1000, ..Default::default() },
         );
         assert_eq!(frame::decompress(&small).unwrap(), q.symbols, "{name}");
         let v1 = frame::compress_qlf1(&handle, &q.symbols);
