@@ -48,7 +48,7 @@ fn main() {
     // 6. Or use the self-describing frame container (tables embedded,
     //    chunked QLF2 — independent chunks decode in parallel).
     let handle = CodecRegistry::global().resolve("qlc", &hist).unwrap();
-    let framed = frame::compress(&handle, &q.symbols);
+    let framed = frame::compress(&handle, &q.symbols).unwrap();
     let back = frame::decompress(&framed).unwrap();
     assert_eq!(back, q.symbols);
     println!(

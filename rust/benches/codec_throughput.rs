@@ -7,18 +7,30 @@
 //! time path vs the scalar one-symbol-per-step reference path for
 //! every codec.
 //!
+//! New with the lane engine: a batched-vs-lanes section decodes the
+//! same payload split into independent chunks, chunk-after-chunk vs
+//! lane-interleaved lockstep.
+//!
 //! Under `QLC_BENCH_SMOKE=1` (the CI bench-smoke job) the
-//! batched-vs-scalar section is also a *gate*: the process exits
-//! non-zero if the batched QLC kernel decodes fewer symbols/sec than
-//! the scalar path.
+//! batched-vs-scalar *and* lanes-vs-batched sections are also
+//! *gates*: the process exits non-zero if the batched QLC kernel
+//! decodes fewer symbols/sec than the scalar path, or lane decode
+//! drops below batched (with a 10% noise floor — the two fast paths
+//! sit much closer together than batched vs scalar).
+//!
+//! Every throughput number also lands in a machine-readable
+//! `BENCH_5.json` (path overridable via `QLC_BENCH_JSON`), so the perf
+//! trajectory is tracked run over run instead of living only in CI
+//! logs.
 
 use qlc::bitstream::BitReader;
 use qlc::codecs::frame::{self, FrameOptions};
 use qlc::codecs::huffman::decode::{TableDecoder, TreeDecoder};
 use qlc::codecs::huffman::HuffmanCodec;
-use qlc::codecs::{BitCursor, Codec, CodecRegistry};
+use qlc::codecs::{BitCursor, Codec, CodecRegistry, LaneDecoder, LaneJob};
 use qlc::report;
 use qlc::util::bench::{smoke_config, smoke_scaled, Bencher};
+use qlc::util::json::Json;
 
 fn main() {
     let n = smoke_scaled(4 << 20, 1 << 16); // symbols per stream
@@ -27,6 +39,10 @@ fn main() {
     let registry = CodecRegistry::global();
     let pmfs = report::paper_pmfs(42, 6);
     let mut qlc_gate_failures = Vec::new();
+    let mut records: Vec<Json> = Vec::new();
+    let mut record = |name: String, mbps: f64| {
+        records.push(Json::obj().set("name", name.as_str()).set("mbps", mbps));
+    };
     for (label, pmf, hist) in [
         ("ffn1", &pmfs.ffn1, &pmfs.ffn1_hist),
         ("ffn2", &pmfs.ffn2, &pmfs.ffn2_hist),
@@ -52,9 +68,12 @@ fn main() {
                 encoded.len(),
                 (1.0 - encoded.len() as f64 / symbols.len() as f64) * 100.0
             );
-            b.bench_bytes(&format!("{label}/encode/{name}"), n as u64, || {
-                std::hint::black_box(codec.encode_to_vec(&symbols));
-            });
+            let enc_tp = b
+                .bench_bytes(&format!("{label}/encode/{name}"), n as u64, || {
+                    std::hint::black_box(codec.encode_to_vec(&symbols));
+                })
+                .throughput_mbps();
+            record(format!("{label}/encode/{name}"), enc_tp);
             let mut out = vec![0u8; n];
             let scalar_tp = b
                 .bench_bytes(
@@ -84,10 +103,86 @@ fn main() {
                 batched_tp,
                 scalar_tp
             );
+            record(format!("{label}/decode-scalar/{name}"), scalar_tp);
+            record(format!("{label}/decode-batched/{name}"), batched_tp);
             if name == "qlc" && batched_tp < scalar_tp {
                 qlc_gate_failures.push(format!(
                     "{label}: batched {batched_tp:.1} MB/s < scalar \
                      {scalar_tp:.1} MB/s"
+                ));
+            }
+        }
+
+        // Batched vs lanes: the same payload split into independent
+        // chunks (the QLF2/transport unit), decoded chunk-after-chunk
+        // through one cursor vs lane-interleaved lockstep over 4/8
+        // cursors.  Same tables, same bits — the delta is purely the
+        // ILP of overlapping independent prefix-table chains.
+        let lane_engine = LaneDecoder::auto();
+        println!(
+            "  [lanes = LaneDecoder x{} lockstep over independent chunks]",
+            lane_engine.lanes()
+        );
+        let chunk_sym = (n / 64).max(1);
+        for name in ["qlc", "huffman", "elias-gamma"] {
+            let handle = registry.resolve(name, hist).unwrap();
+            let codec = handle.codec();
+            let payloads: Vec<Vec<u8>> = symbols
+                .chunks(chunk_sym)
+                .map(|c| codec.encode_to_vec(c))
+                .collect();
+            let mut out = vec![0u8; n];
+            let chunks_batched_tp = b
+                .bench_bytes(
+                    &format!("{label}/decode-chunks-batched/{name}"),
+                    n as u64,
+                    || {
+                        for (payload, dst) in
+                            payloads.iter().zip(out.chunks_mut(chunk_sym))
+                        {
+                            let mut cur = BitCursor::new(payload);
+                            codec.decode_into(&mut cur, dst).unwrap();
+                        }
+                        std::hint::black_box(out.len());
+                    },
+                )
+                .throughput_mbps();
+            let lanes_tp = b
+                .bench_bytes(
+                    &format!("{label}/decode-chunks-lanes/{name}"),
+                    n as u64,
+                    || {
+                        let mut jobs: Vec<LaneJob> = payloads
+                            .iter()
+                            .zip(out.chunks_mut(chunk_sym))
+                            .map(|(p, o)| LaneJob { payload: p, out: o })
+                            .collect();
+                        lane_engine.decode_jobs(codec, &mut jobs).unwrap();
+                        std::hint::black_box(out.len());
+                    },
+                )
+                .throughput_mbps();
+            println!(
+                "  {name}: lanes/batched = {:.2}x ({:.1} vs {:.1} MB/s)",
+                lanes_tp / chunks_batched_tp,
+                lanes_tp,
+                chunks_batched_tp
+            );
+            record(
+                format!("{label}/decode-chunks-batched/{name}"),
+                chunks_batched_tp,
+            );
+            record(format!("{label}/decode-chunks-lanes/{name}"), lanes_tp);
+            // Gate with a 10% noise floor: unlike batched-vs-scalar
+            // (a ~2x structural gap), lanes-vs-batched compares two
+            // close fast paths, and a shared CI runner can wobble a
+            // single measurement a few percent.  A genuine lane
+            // regression (losing the ILP win entirely) lands well
+            // below the floor.
+            if name == "qlc" && lanes_tp < 0.9 * chunks_batched_tp {
+                qlc_gate_failures.push(format!(
+                    "{label}: lanes {lanes_tp:.1} MB/s < batched \
+                     {chunks_batched_tp:.1} MB/s"
                 ));
             }
         }
@@ -98,18 +193,24 @@ fn main() {
         let tree = TreeDecoder::new(huff.book());
         let table = TableDecoder::new(huff.book());
         let mut out = vec![0u8; n];
-        b.bench_bytes(&format!("{label}/decode/huffman-tree-serial"),
-                      n as u64, || {
-            let mut r = BitReader::new(&encoded);
-            tree.decode_into(&mut r, &mut out).unwrap();
-            std::hint::black_box(out.len());
-        });
-        b.bench_bytes(&format!("{label}/decode/huffman-table"),
-                      n as u64, || {
-            let mut r = BitReader::new(&encoded);
-            table.decode_into(&mut r, &mut out).unwrap();
-            std::hint::black_box(out.len());
-        });
+        let tree_tp = b
+            .bench_bytes(&format!("{label}/decode/huffman-tree-serial"),
+                         n as u64, || {
+                let mut r = BitReader::new(&encoded);
+                tree.decode_into(&mut r, &mut out).unwrap();
+                std::hint::black_box(out.len());
+            })
+            .throughput_mbps();
+        record(format!("{label}/decode/huffman-tree-serial"), tree_tp);
+        let table_tp = b
+            .bench_bytes(&format!("{label}/decode/huffman-table"),
+                         n as u64, || {
+                let mut r = BitReader::new(&encoded);
+                table.decode_into(&mut r, &mut out).unwrap();
+                std::hint::black_box(out.len());
+            })
+            .throughput_mbps();
+        record(format!("{label}/decode/huffman-table"), table_tp);
 
         // QLF2 frame path: single-shot (one chunk, serial) vs
         // chunked-parallel (64 Ki-symbol chunks, one worker per core).
@@ -129,37 +230,54 @@ fn main() {
                     threads: 1,
                     ..Default::default()
                 },
-            );
+            )
+            .unwrap();
             let chunked =
-                frame::compress_with(&handle, &symbols, &FrameOptions::default());
-            b.bench_bytes(
-                &format!("{label}/frame-decode/{name}/single-shot"),
-                n as u64,
-                || {
-                    let out = frame::decompress_with(
-                        &single,
-                        &FrameOptions::serial(),
-                    )
+                frame::compress_with(&handle, &symbols, &FrameOptions::default())
                     .unwrap();
-                    std::hint::black_box(out.len());
-                },
+            let tp = b
+                .bench_bytes(
+                    &format!("{label}/frame-decode/{name}/single-shot"),
+                    n as u64,
+                    || {
+                        let out = frame::decompress_with(
+                            &single,
+                            &FrameOptions::serial(),
+                        )
+                        .unwrap();
+                        std::hint::black_box(out.len());
+                    },
+                )
+                .throughput_mbps();
+            record(format!("{label}/frame-decode/{name}/single-shot"), tp);
+            let tp = b
+                .bench_bytes(
+                    &format!("{label}/frame-decode/{name}/chunked-parallel"),
+                    n as u64,
+                    || {
+                        let out = frame::decompress(&chunked).unwrap();
+                        std::hint::black_box(out.len());
+                    },
+                )
+                .throughput_mbps();
+            record(
+                format!("{label}/frame-decode/{name}/chunked-parallel"),
+                tp,
             );
-            b.bench_bytes(
-                &format!("{label}/frame-decode/{name}/chunked-parallel"),
-                n as u64,
-                || {
-                    let out = frame::decompress(&chunked).unwrap();
-                    std::hint::black_box(out.len());
-                },
-            );
-            b.bench_bytes(
-                &format!("{label}/frame-encode/{name}/chunked-parallel"),
-                n as u64,
-                || {
-                    std::hint::black_box(
-                        frame::compress(&handle, &symbols).len(),
-                    );
-                },
+            let tp = b
+                .bench_bytes(
+                    &format!("{label}/frame-encode/{name}/chunked-parallel"),
+                    n as u64,
+                    || {
+                        std::hint::black_box(
+                            frame::compress(&handle, &symbols).unwrap().len(),
+                        );
+                    },
+                )
+                .throughput_mbps();
+            record(
+                format!("{label}/frame-encode/{name}/chunked-parallel"),
+                tp,
             );
         }
 
@@ -174,7 +292,8 @@ fn main() {
             &symbols,
             n_shards,
             &FrameOptions::default(),
-        );
+        )
+        .unwrap();
         let sharded_bytes: usize =
             manifest.to_bytes().len() + shards.iter().map(Vec::len).sum::<usize>();
         println!(
@@ -183,38 +302,70 @@ fn main() {
             sharded_bytes,
             manifest.wire_header().len()
         );
-        b.bench_bytes(
-            &format!("{label}/sharded-encode/qlc/x{n_shards}"),
-            n as u64,
-            || {
-                let (m, s) = frame::compress_sharded(
-                    &handle,
-                    &symbols,
-                    n_shards,
-                    &FrameOptions::default(),
-                );
-                std::hint::black_box((m.n_shards(), s.len()));
-            },
-        );
-        b.bench_bytes(
-            &format!("{label}/sharded-decode/qlc/x{n_shards}"),
-            n as u64,
-            || {
-                let out = frame::decompress_sharded(
-                    &manifest,
-                    &shards,
-                    &FrameOptions::default(),
-                )
-                .unwrap();
-                std::hint::black_box(out.len());
-            },
-        );
+        let tp = b
+            .bench_bytes(
+                &format!("{label}/sharded-encode/qlc/x{n_shards}"),
+                n as u64,
+                || {
+                    let (m, s) = frame::compress_sharded(
+                        &handle,
+                        &symbols,
+                        n_shards,
+                        &FrameOptions::default(),
+                    )
+                    .unwrap();
+                    std::hint::black_box((m.n_shards(), s.len()));
+                },
+            )
+            .throughput_mbps();
+        record(format!("{label}/sharded-encode/qlc/x{n_shards}"), tp);
+        let tp = b
+            .bench_bytes(
+                &format!("{label}/sharded-decode/qlc/x{n_shards}"),
+                n as u64,
+                || {
+                    let out = frame::decompress_sharded(
+                        &manifest,
+                        &shards,
+                        &FrameOptions::default(),
+                    )
+                    .unwrap();
+                    std::hint::black_box(out.len());
+                },
+            )
+            .throughput_mbps();
+        record(format!("{label}/sharded-decode/qlc/x{n_shards}"), tp);
         println!();
+    }
+
+    // Machine-readable perf record: every throughput number from this
+    // run, plus the gate verdicts, so the perf trajectory can be
+    // tracked across commits instead of re-read from CI logs.
+    let out_path = std::env::var("QLC_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_5.json".to_string());
+    let doc = Json::obj()
+        .set("bench", "codec_throughput")
+        .set("symbols_per_stream", n)
+        .set("smoke", smoke)
+        .set("lane_width", LaneDecoder::auto().lanes())
+        .set("results", Json::Arr(records))
+        .set(
+            "gate_failures",
+            Json::Arr(
+                qlc_gate_failures
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
+            ),
+        );
+    match std::fs::write(&out_path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("warning: cannot write {out_path}: {e}"),
     }
 
     if !qlc_gate_failures.is_empty() {
         eprintln!(
-            "FAIL: batched QLC decode slower than scalar:\n  {}",
+            "FAIL: QLC decode gates (batched ≥ scalar, lanes ≥ batched):\n  {}",
             qlc_gate_failures.join("\n  ")
         );
         if smoke {

@@ -30,7 +30,9 @@
 //! (`delta_len u16-le | delta bytes`; for QLC a bare 256-byte rank
 //! order re-ranked under the frame's area scheme).  The chunk-table
 //! entry marks such chunks by setting the top bit of
-//! `chunk_n_symbols` (chunk sizes are capped far below it), and the
+//! `chunk_n_symbols` (chunk sizes are capped at [`CHUNK_SYMBOL_CAP`],
+//! far below it — the writer `Err`s rather than emit a colliding
+//! count), and the
 //! frame's flags byte sets bit 0 whenever any chunk carries a delta.
 //! Chunks remain independently decodable — the delta travels *inside*
 //! the chunk payload — so parallel decode is unaffected.
@@ -66,6 +68,7 @@
 //! The table header is written exactly once (in the manifest), so N
 //! shards cost N×16 bytes of framing instead of N table copies.
 
+use super::kernel::LaneJob;
 use super::registry::{CodecHandle, CodecRegistry};
 use super::session::{
     chunk_spans, DecodeMode, DecoderSession, EncoderSession,
@@ -81,8 +84,16 @@ pub const MAGIC_QLF2: [u8; 4] = *b"QLF2";
 pub const FLAG_ADAPTIVE_CHUNKS: u8 = 1;
 /// Top bit of a chunk-table `chunk_n_symbols` entry: this chunk's
 /// payload starts with `delta_len u16-le | delta bytes`.  Chunk sizes
-/// are clamped to `u32::MAX / 8`, so the bit can never be a count.
+/// are capped at [`CHUNK_SYMBOL_CAP`], so the bit can never be a
+/// count.
 const CHUNK_DELTA_BIT: u32 = 1 << 31;
+/// Hard cap on a single chunk's symbol count, enforced on **both**
+/// sides of the wire: the decoder rejects larger counts, and the
+/// encoder both clamps its chunking to it and `Err`s if a chunk ever
+/// reaches [`write_chunk_table`] above it (a larger count's bits would
+/// collide with [`CHUNK_DELTA_BIT`], and a worst-case < 64-bit/symbol
+/// payload would overflow the u32 length field).
+pub const CHUNK_SYMBOL_CAP: usize = (u32::MAX / 8) as usize;
 /// Shard-set manifest: one codec table header shared by N shards.
 pub const MAGIC_MANIFEST: [u8; 4] = *b"QLM1";
 /// One shard of a sharded tensor: chunk table + payloads, no codec
@@ -105,8 +116,10 @@ pub struct FrameOptions {
     /// with [`ChunkTables`](super::registry::ChunkTables) support —
     /// silently ignored otherwise).
     pub adaptive_chunks: bool,
-    /// Which decode path chunk decoding runs (batched kernel by
-    /// default; scalar for the reference comparison).
+    /// Which decode path chunk decoding runs: the batched kernel by
+    /// default, lane-interleaved multi-cursor lockstep
+    /// ([`DecodeMode::Lanes`] — independent chunks within a worker
+    /// band decode together), or scalar for the reference comparison.
     pub decode: DecodeMode,
 }
 
@@ -173,7 +186,10 @@ where
 // Encode
 
 /// Compress `symbols` into a chunked QLF2 frame with default options.
-pub fn compress(handle: &CodecHandle, symbols: &[u8]) -> Vec<u8> {
+pub fn compress(
+    handle: &CodecHandle,
+    symbols: &[u8],
+) -> Result<Vec<u8>, CodecError> {
     compress_with(handle, symbols, &FrameOptions::default())
 }
 
@@ -194,15 +210,17 @@ fn encode_payload_chunks<'a>(
     adaptive: bool,
 ) -> (Vec<&'a [u8]>, Vec<Vec<u8>>, Vec<bool>) {
     // Chunk-table fields are u32; the deepest code in the crate is
-    // < 64 bits/symbol, so capping chunks at u32::MAX/8 symbols keeps
-    // both the symbol count and the worst-case payload length in
-    // range (and leaves the top bit free for [`CHUNK_DELTA_BIT`]).
-    // The lower bound keeps the chunk *count* in its u32 field too
-    // (only binds past 4 Gi symbols of 1-symbol chunks).
+    // < 64 bits/symbol, so capping chunks at [`CHUNK_SYMBOL_CAP`]
+    // symbols keeps both the symbol count and the worst-case payload
+    // length in range (and leaves the top bit free for
+    // [`CHUNK_DELTA_BIT`]); [`write_chunk_table`] re-checks the cap
+    // and `Err`s rather than emit a colliding count.  The lower bound
+    // keeps the chunk *count* in its u32 field too (only binds past
+    // 4 Gi symbols of 1-symbol chunks).
     let min_chunk = symbols.len() / u32::MAX as usize + 1;
     let chunk_symbols = opts
         .chunk_symbols
-        .clamp(min_chunk.min((u32::MAX / 8) as usize), (u32::MAX / 8) as usize)
+        .clamp(min_chunk.min(CHUNK_SYMBOL_CAP), CHUNK_SYMBOL_CAP)
         .max(1);
     let chunks: Vec<&[u8]> = chunk_spans(symbols.len(), chunk_symbols)
         .into_iter()
@@ -250,19 +268,39 @@ fn encode_payload_chunks<'a>(
 }
 
 /// Append `n_chunks | chunk table | payloads` (the shared QLF2/QLS1
-/// body layout) to `out`.  `deltas[i]` sets [`CHUNK_DELTA_BIT`] on
-/// chunk `i`'s symbol count.
+/// body layout) to `out`.  `counts[i]` is chunk `i`'s symbol count;
+/// `deltas[i]` sets [`CHUNK_DELTA_BIT`] on it.
+///
+/// Enforces the decode-side caps at encode time: a chunk whose symbol
+/// count exceeds [`CHUNK_SYMBOL_CAP`] (its bits would collide with the
+/// adaptive-delta flag bit the decoder tests) or whose payload
+/// overflows the u32 length field is an `Err`, never a silently
+/// corrupted table.  On `Err`, `out` may hold a partial table and must
+/// be discarded.
 fn write_chunk_table(
     out: &mut Vec<u8>,
-    chunks: &[&[u8]],
+    counts: &[usize],
     payloads: &[Vec<u8>],
     deltas: &[bool],
-) {
+) -> Result<(), CodecError> {
     out.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
-    for ((chunk, payload), &delta) in
-        chunks.iter().zip(payloads).zip(deltas)
+    for ((&n_symbols, payload), &delta) in
+        counts.iter().zip(payloads).zip(deltas)
     {
-        let mut n = chunk.len() as u32;
+        if n_symbols > CHUNK_SYMBOL_CAP {
+            return Err(CodecError::BadHeader(format!(
+                "chunk of {n_symbols} symbols exceeds the QLF2 chunk cap \
+                 {CHUNK_SYMBOL_CAP} (the count field's top bit is the \
+                 chunk-table delta flag)"
+            )));
+        }
+        if payload.len() > u32::MAX as usize {
+            return Err(CodecError::BadHeader(format!(
+                "chunk payload of {} bytes overflows the u32 length field",
+                payload.len()
+            )));
+        }
+        let mut n = n_symbols as u32;
         if delta {
             n |= CHUNK_DELTA_BIT;
         }
@@ -272,16 +310,21 @@ fn write_chunk_table(
     for payload in payloads {
         out.extend_from_slice(payload);
     }
+    Ok(())
 }
 
-/// Compress `symbols` into a chunked QLF2 frame.
+/// Compress `symbols` into a chunked QLF2 frame.  `Err` only when a
+/// chunk would overflow the chunk-table fields (see
+/// [`CHUNK_SYMBOL_CAP`]) — unreachable through the clamped chunking,
+/// enforced anyway so the cap can never silently rot.
 pub fn compress_with(
     handle: &CodecHandle,
     symbols: &[u8],
     opts: &FrameOptions,
-) -> Vec<u8> {
+) -> Result<Vec<u8>, CodecError> {
     let (chunks, payloads, deltas) =
         encode_payload_chunks(handle, symbols, opts, opts.adaptive_chunks);
+    let counts: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
     let header = handle.wire_header();
     let payload_bytes: usize = payloads.iter().map(|p| p.len()).sum();
     let mut out = Vec::with_capacity(
@@ -301,8 +344,8 @@ pub fn compress_with(
     out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
     out.extend_from_slice(&(header.len() as u32).to_le_bytes());
     out.extend_from_slice(header);
-    write_chunk_table(&mut out, &chunks, &payloads, &deltas);
-    out
+    write_chunk_table(&mut out, &counts, &payloads, &deltas)?;
+    Ok(out)
 }
 
 /// Compress `symbols` into a chunked QLF2 frame with per-chunk
@@ -311,7 +354,7 @@ pub fn compress_adaptive(
     handle: &CodecHandle,
     symbols: &[u8],
     opts: &FrameOptions,
-) -> Vec<u8> {
+) -> Result<Vec<u8>, CodecError> {
     let opts = FrameOptions { adaptive_chunks: true, ..*opts };
     compress_with(handle, symbols, &opts)
 }
@@ -431,6 +474,12 @@ fn parse_chunk_table(
             return Err(bad("chunk delta bit set in a non-adaptive frame"));
         }
         let chunk_n = (raw_n & !CHUNK_DELTA_BIT) as usize;
+        // The encoder never emits counts past the cap (see
+        // [`CHUNK_SYMBOL_CAP`] / [`write_chunk_table`]); a larger
+        // count can only come from a corrupt or hostile table.
+        if chunk_n > CHUNK_SYMBOL_CAP {
+            return Err(bad("chunk symbol count exceeds the chunk cap"));
+        }
         let plen = u32::from_le_bytes(e[4..8].try_into().unwrap()) as usize;
         // Per-chunk sanity: ≥ 1 bit per symbol.
         if chunk_n as u64 > plen as u64 * 8 {
@@ -485,6 +534,8 @@ fn split_chunk_delta(payload: &[u8]) -> Result<(&[u8], &[u8]), CodecError> {
 /// Decode carved chunk jobs on up to `threads_req` scoped workers.
 /// Delta-carrying chunks rebuild their chunk-local codec via the
 /// handle's [`ChunkTables`](super::registry::ChunkTables) hooks.
+/// Under [`DecodeMode::Lanes`] each worker's band is scheduled through
+/// [`decode_band_lanes`] instead of chunk-after-chunk.
 fn decode_chunk_jobs(
     handle: &CodecHandle,
     jobs: Vec<(&[u8], &mut [u8], bool)>,
@@ -494,17 +545,13 @@ fn decode_chunk_jobs(
     let mode = opts.decode;
     run_banded(jobs, threads, |band| {
         let mut dec = handle.decoder_with(mode);
+        if mode == DecodeMode::Lanes {
+            return decode_band_lanes(handle, &mut dec, band);
+        }
         for (payload, dst, has_delta) in band {
             if has_delta {
-                let tables = handle.chunk_tables().ok_or_else(|| {
-                    CodecError::BadHeader(
-                        "chunk table delta for a codec without \
-                         per-chunk tables"
-                            .into(),
-                    )
-                })?;
-                let (delta, rest) = split_chunk_delta(payload)?;
-                let chunk_codec = tables.from_delta(delta)?;
+                let (rest, chunk_codec) =
+                    rebuild_delta_codec(handle, payload)?;
                 DecoderSession::with_mode(chunk_codec.as_ref(), mode)
                     .decode_chunk(rest, dst)?;
             } else {
@@ -513,6 +560,50 @@ fn decode_chunk_jobs(
         }
         Ok(())
     })
+}
+
+/// Rebuild a delta chunk's chunk-local codec from the delta its
+/// payload starts with; returns the codec plus the encoded remainder.
+fn rebuild_delta_codec<'a>(
+    handle: &CodecHandle,
+    payload: &'a [u8],
+) -> Result<(&'a [u8], Box<dyn super::Codec>), CodecError> {
+    let tables = handle.chunk_tables().ok_or_else(|| {
+        CodecError::BadHeader(
+            "chunk table delta for a codec without per-chunk tables".into(),
+        )
+    })?;
+    let (delta, rest) = split_chunk_delta(payload)?;
+    let chunk_codec = tables.from_delta(delta)?;
+    Ok((rest, chunk_codec))
+}
+
+/// Lane-mode decode of one worker band: fixed-table chunks collect
+/// into lane groups stepped in lockstep through the frame codec's
+/// tables, while each adaptive table-delta chunk rebuilds its own
+/// chunk-local tables via
+/// [`ChunkTables`](super::registry::ChunkTables) and decodes as its
+/// own (single-cursor) group — per-lane tables, so adaptive frames and
+/// lane decode compose.
+fn decode_band_lanes<'p, 'o>(
+    handle: &CodecHandle,
+    dec: &mut DecoderSession<'_>,
+    band: Vec<(&'p [u8], &'o mut [u8], bool)>,
+) -> Result<(), CodecError> {
+    let mut fixed: Vec<LaneJob<'p, 'o>> = Vec::with_capacity(band.len());
+    for (payload, dst, has_delta) in band {
+        if has_delta {
+            let (rest, chunk_codec) = rebuild_delta_codec(handle, payload)?;
+            DecoderSession::with_mode(
+                chunk_codec.as_ref(),
+                DecodeMode::Lanes,
+            )
+            .decode_chunk(rest, dst)?;
+        } else {
+            fixed.push(LaneJob { payload, out: dst });
+        }
+    }
+    dec.decode_chunk_group(&mut fixed)
 }
 
 fn decompress_qlf2_body(
@@ -730,9 +821,10 @@ pub fn compress_shard(
     shard_index: u32,
     symbols: &[u8],
     opts: &FrameOptions,
-) -> Vec<u8> {
+) -> Result<Vec<u8>, CodecError> {
     let (chunks, payloads, deltas) =
         encode_payload_chunks(handle, symbols, opts, false);
+    let counts: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
     let payload_bytes: usize = payloads.iter().map(|p| p.len()).sum();
     let mut out = Vec::with_capacity(
         SHARD_FIXED + 4 + payloads.len() * 8 + payload_bytes,
@@ -740,8 +832,8 @@ pub fn compress_shard(
     out.extend_from_slice(&MAGIC_SHARD);
     out.extend_from_slice(&shard_index.to_le_bytes());
     out.extend_from_slice(&(symbols.len() as u64).to_le_bytes());
-    write_chunk_table(&mut out, &chunks, &payloads, &deltas);
-    out
+    write_chunk_table(&mut out, &counts, &payloads, &deltas)?;
+    Ok(out)
 }
 
 /// Compress `symbols` into `n_shards` independently-decodable shards
@@ -753,31 +845,29 @@ pub fn compress_sharded(
     symbols: &[u8],
     n_shards: usize,
     opts: &FrameOptions,
-) -> (ShardManifest, Vec<Vec<u8>>) {
+) -> Result<(ShardManifest, Vec<Vec<u8>>), CodecError> {
     let plan = shard_plan(symbols.len(), n_shards);
     let mut bodies: Vec<Vec<u8>> = vec![Vec::new(); plan.len()];
     let jobs: Vec<(ShardDesc, &mut Vec<u8>)> =
         plan.iter().copied().zip(bodies.iter_mut()).collect();
     let threads = effective_threads(opts.threads, jobs.len());
     let serial = FrameOptions { threads: 1, ..*opts };
-    let encode_ok: Result<(), std::convert::Infallible> =
-        run_banded(jobs, threads, |band| {
-            for (desc, slot) in band {
-                *slot = compress_shard(
-                    handle,
-                    desc.index as u32,
-                    &symbols[desc.start..desc.start + desc.n_symbols],
-                    &serial,
-                );
-            }
-            Ok(())
-        });
-    encode_ok.unwrap(); // Infallible: encoding cannot fail
+    run_banded(jobs, threads, |band| {
+        for (desc, slot) in band {
+            *slot = compress_shard(
+                handle,
+                desc.index as u32,
+                &symbols[desc.start..desc.start + desc.n_symbols],
+                &serial,
+            )?;
+        }
+        Ok(())
+    })?;
     let manifest = ShardManifest::from_handle(
         handle,
         plan.iter().map(|d| d.n_symbols as u64).collect(),
     );
-    (manifest, bodies)
+    Ok((manifest, bodies))
 }
 
 /// Reassemble a sharded tensor.  `shards` may arrive in **any order**
@@ -867,7 +957,7 @@ mod tests {
         let hist = Histogram::from_symbols(&symbols);
         for name in registry().known_names() {
             let handle = registry().resolve(name, &hist).unwrap();
-            let frame = compress(&handle, &symbols);
+            let frame = compress(&handle, &symbols).unwrap();
             assert_eq!(&frame[0..4], &MAGIC_QLF2, "{name}");
             let back = decompress(&frame).unwrap();
             assert_eq!(back, symbols, "codec {name}");
@@ -894,7 +984,7 @@ mod tests {
         let handle = registry().resolve("qlc", &hist).unwrap();
         for chunk_symbols in [1usize, 37, 4096, 64 * 1024, 1 << 30] {
             let opts = FrameOptions { chunk_symbols, ..Default::default() };
-            let frame = compress_with(&handle, &symbols, &opts);
+            let frame = compress_with(&handle, &symbols, &opts).unwrap();
             assert_eq!(
                 decompress(&frame).unwrap(),
                 symbols,
@@ -909,10 +999,10 @@ mod tests {
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("huffman", &hist).unwrap();
         let opts = |threads| FrameOptions { chunk_symbols: 8192, threads, ..Default::default() };
-        let serial = compress_with(&handle, &symbols, &opts(1));
+        let serial = compress_with(&handle, &symbols, &opts(1)).unwrap();
         for threads in [2usize, 4, 8] {
             assert_eq!(
-                compress_with(&handle, &symbols, &opts(threads)),
+                compress_with(&handle, &symbols, &opts(threads)).unwrap(),
                 serial,
                 "threads={threads}"
             );
@@ -935,7 +1025,7 @@ mod tests {
         let symbols = skewed_symbols(5_000, 2);
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("qlc", &hist).unwrap();
-        let frame = compress(&handle, &symbols);
+        let frame = compress(&handle, &symbols).unwrap();
         drop(handle);
         drop(hist);
         assert_eq!(decompress(&frame).unwrap(), symbols);
@@ -953,13 +1043,15 @@ mod tests {
             &handle,
             &symbols,
             &FrameOptions { chunk_symbols: usize::MAX, threads: 1, ..Default::default() },
-        );
+        )
+        .unwrap();
         let chunks = 256; // 1 Ki symbols per chunk
         let many = compress_with(
             &handle,
             &symbols,
             &FrameOptions { chunk_symbols: 1024, threads: 1, ..Default::default() },
-        );
+        )
+        .unwrap();
         assert!(
             many.len() <= one.len() + chunks * 9,
             "chunk overhead too large: {} vs {}",
@@ -973,10 +1065,10 @@ mod tests {
         let symbols = skewed_symbols(50_000, 3);
         let hist = Histogram::from_symbols(&symbols);
         let raw_handle = registry().resolve("raw", &hist).unwrap();
-        let raw = compress(&raw_handle, &symbols).len();
+        let raw = compress(&raw_handle, &symbols).unwrap().len();
         for name in ["huffman", "qlc", "qlc-t1"] {
             let handle = registry().resolve(name, &hist).unwrap();
-            let framed = compress(&handle, &symbols).len();
+            let framed = compress(&handle, &symbols).unwrap().len();
             assert!(framed < raw, "{name}: {framed} !< {raw}");
         }
     }
@@ -986,7 +1078,7 @@ mod tests {
         let symbols = skewed_symbols(1000, 4);
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("huffman", &hist).unwrap();
-        let frame = compress(&handle, &symbols);
+        let frame = compress(&handle, &symbols).unwrap();
 
         let mut bad = frame.clone();
         bad[0] = b'X';
@@ -1017,7 +1109,8 @@ mod tests {
             &handle,
             &symbols,
             &FrameOptions { chunk_symbols: 4096, threads: 1, ..Default::default() },
-        );
+        )
+        .unwrap();
         let hlen =
             u32::from_le_bytes(frame[14..18].try_into().unwrap()) as usize;
         let table_off = FIXED_HEADER + hlen + 4;
@@ -1054,12 +1147,78 @@ mod tests {
         let symbols = skewed_symbols(100, 6);
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("huffman", &hist).unwrap();
-        type Compressor = fn(&CodecHandle, &[u8]) -> Vec<u8>;
-        for make in [compress as Compressor, compress_qlf1 as Compressor] {
-            let mut frame = make(&handle, &symbols);
+        for qlf1 in [false, true] {
+            let mut frame = if qlf1 {
+                compress_qlf1(&handle, &symbols)
+            } else {
+                compress(&handle, &symbols).unwrap()
+            };
             frame[6..14].copy_from_slice(&(1u64 << 50).to_le_bytes());
-            assert!(decompress(&frame).is_err());
+            assert!(decompress(&frame).is_err(), "qlf1={qlf1}");
         }
+    }
+
+    #[test]
+    fn encode_rejects_chunks_past_the_delta_flag_cap() {
+        // Regression: the chunk-table writer used to cast
+        // `chunk.len() as u32` unchecked, relying on a distant clamp;
+        // a count at or past the cap would collide with the
+        // adaptive-delta flag bit the decoder tests.  The writer now
+        // enforces the decode-side cap itself.
+        let payloads = vec![vec![0u8; 4]];
+        let deltas = vec![false];
+        // At the cap: fine.
+        let mut out = Vec::new();
+        write_chunk_table(&mut out, &[CHUNK_SYMBOL_CAP], &payloads, &deltas)
+            .unwrap();
+        // One past the cap: Err, not a silent collision-in-waiting.
+        let mut out = Vec::new();
+        assert!(matches!(
+            write_chunk_table(
+                &mut out,
+                &[CHUNK_SYMBOL_CAP + 1],
+                &payloads,
+                &deltas
+            ),
+            Err(CodecError::BadHeader(_))
+        ));
+        // The actual collision point (the delta bit itself) is far
+        // past the cap and must certainly be rejected.
+        let mut out = Vec::new();
+        assert!(write_chunk_table(
+            &mut out,
+            &[CHUNK_DELTA_BIT as usize],
+            &payloads,
+            &deltas
+        )
+        .is_err());
+        // The public encode paths stay Ok: chunking is clamped to the
+        // cap before the writer ever sees a count.
+        let symbols = skewed_symbols(10_000, 40);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let opts = FrameOptions {
+            chunk_symbols: usize::MAX,
+            threads: 1,
+            ..Default::default()
+        };
+        assert!(compress_with(&handle, &symbols, &opts).is_ok());
+        assert!(compress_shard(&handle, 0, &symbols, &opts).is_ok());
+        // The decode side enforces the same cap: a chunk-table count
+        // past it is rejected while parsing the table, before any
+        // allocation sized by it.
+        let frame = compress_with(&handle, &symbols, &opts).unwrap();
+        let hlen =
+            u32::from_le_bytes(frame[14..18].try_into().unwrap()) as usize;
+        let table_off = FIXED_HEADER + hlen + 4;
+        let huge = CHUNK_SYMBOL_CAP as u32 + 1;
+        let mut bad = frame.clone();
+        bad[6..14].copy_from_slice(&(huge as u64).to_le_bytes());
+        bad[table_off..table_off + 4].copy_from_slice(&huge.to_le_bytes());
+        assert!(matches!(
+            decompress(&bad),
+            Err(CodecError::BadHeader(_))
+        ));
     }
 
     #[test]
@@ -1074,7 +1233,7 @@ mod tests {
         let hist = Histogram::from_symbols(&[0]);
         for name in ["raw", "huffman", "qlc-t1", "elias-gamma", "eg0"] {
             let handle = registry().resolve(name, &hist).unwrap();
-            let frame = compress(&handle, &[]);
+            let frame = compress(&handle, &[]).unwrap();
             assert_eq!(decompress(&frame).unwrap(), Vec::<u8>::new(), "{name}");
             let v1 = compress_qlf1(&handle, &[]);
             assert_eq!(decompress(&v1).unwrap(), Vec::<u8>::new(), "{name}");
@@ -1102,7 +1261,7 @@ mod tests {
                 threads: 1 + rng.below(4) as usize,
                 ..Default::default()
             };
-            let frame = compress_with(&handle, &symbols, &opts);
+            let frame = compress_with(&handle, &symbols, &opts).unwrap();
             let back = decompress(&frame).map_err(|e| e.to_string())?;
             if back != symbols {
                 return Err(format!("{name} roundtrip"));
@@ -1152,7 +1311,8 @@ mod tests {
                     &symbols,
                     n_shards,
                     &FrameOptions { chunk_symbols: 4096, threads: 0, ..Default::default() },
-                );
+                )
+                .unwrap();
                 assert_eq!(manifest.n_shards(), shards.len());
                 assert_eq!(
                     manifest.total_symbols(),
@@ -1168,6 +1328,17 @@ mod tests {
                 )
                 .unwrap();
                 assert_eq!(back, symbols, "{name} x{n_shards}");
+                // Shard chunks decode through the lane engine too.
+                let laned = decompress_sharded(
+                    &manifest,
+                    &shards,
+                    &FrameOptions {
+                        decode: DecodeMode::Lanes,
+                        ..FrameOptions::default()
+                    },
+                )
+                .unwrap();
+                assert_eq!(laned, symbols, "{name} x{n_shards} lanes");
             }
         }
     }
@@ -1182,7 +1353,8 @@ mod tests {
             &symbols,
             4,
             &FrameOptions::default(),
-        );
+        )
+        .unwrap();
         let bytes = manifest.to_bytes();
         assert_eq!(&bytes[0..4], &MAGIC_MANIFEST);
         let parsed = ShardManifest::parse(&bytes).unwrap();
@@ -1217,9 +1389,10 @@ mod tests {
         let symbols = skewed_symbols(256 * 1024, 13);
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("qlc", &hist).unwrap();
-        let single = compress(&handle, &symbols);
+        let single = compress(&handle, &symbols).unwrap();
         let (manifest, shards) =
-            compress_sharded(&handle, &symbols, 8, &FrameOptions::default());
+            compress_sharded(&handle, &symbols, 8, &FrameOptions::default())
+                .unwrap();
         let sharded: usize = manifest.to_bytes().len()
             + shards.iter().map(|s| s.len()).sum::<usize>();
         let slack = 8 * (SHARD_FIXED + 4 + 9 * 8) + 64;
@@ -1236,7 +1409,8 @@ mod tests {
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("huffman", &hist).unwrap();
         let (manifest, shards) =
-            compress_sharded(&handle, &symbols, 3, &FrameOptions::default());
+            compress_sharded(&handle, &symbols, 3, &FrameOptions::default())
+                .unwrap();
         let opts = FrameOptions::default();
 
         // Wrong shard count.
@@ -1298,7 +1472,8 @@ mod tests {
                     threads: 1,
                     ..Default::default()
                 },
-            );
+            )
+            .map_err(|e| e.to_string())?;
             let mut manifest_bytes = manifest.to_bytes();
             for _ in 0..16 {
                 // Corrupt the manifest or one shard, alternating.
@@ -1360,7 +1535,8 @@ mod tests {
         let hist = Histogram::from_symbols(&[0]);
         let handle = registry().resolve("huffman", &hist).unwrap();
         let (manifest, shards) =
-            compress_sharded(&handle, &[], 4, &FrameOptions::default());
+            compress_sharded(&handle, &[], 4, &FrameOptions::default())
+                .unwrap();
         assert_eq!(manifest.n_shards(), 1, "empty input → one empty shard");
         let back = decompress_sharded(
             &manifest,
@@ -1393,7 +1569,8 @@ mod tests {
                 chunk_symbols: 1 + rng.below(512) as usize,
                 threads: 1,
                 ..Default::default()
-            });
+            })
+            .map_err(|e| e.to_string())?;
             for _ in 0..20 {
                 let mut corrupt = frame.clone();
                 match rng.below(3) {
@@ -1460,8 +1637,8 @@ mod tests {
             threads: 0,
             ..Default::default()
         };
-        let fixed = compress_with(&handle, &symbols, &opts);
-        let adaptive = compress_adaptive(&handle, &symbols, &opts);
+        let fixed = compress_with(&handle, &symbols, &opts).unwrap();
+        let adaptive = compress_adaptive(&handle, &symbols, &opts).unwrap();
         // The drifted half re-fits: flag byte set, frame no larger
         // than the fixed-table frame (the refit criterion is
         // break-even in bits).
@@ -1497,8 +1674,8 @@ mod tests {
             threads: 1,
             ..Default::default()
         };
-        let fixed = compress_with(&handle, &symbols, &opts);
-        let adaptive = compress_adaptive(&handle, &symbols, &opts);
+        let fixed = compress_with(&handle, &symbols, &opts).unwrap();
+        let adaptive = compress_adaptive(&handle, &symbols, &opts).unwrap();
         assert_eq!(adaptive, fixed);
     }
 
@@ -1509,8 +1686,8 @@ mod tests {
         let hist = Histogram::from_symbols(&symbols);
         let handle = registry().resolve("huffman", &hist).unwrap();
         let opts = FrameOptions::serial();
-        let fixed = compress_with(&handle, &symbols, &opts);
-        let adaptive = compress_adaptive(&handle, &symbols, &opts);
+        let fixed = compress_with(&handle, &symbols, &opts).unwrap();
+        let adaptive = compress_adaptive(&handle, &symbols, &opts).unwrap();
         assert_eq!(adaptive, fixed);
         assert_eq!(decompress(&adaptive).unwrap(), symbols);
     }
@@ -1525,7 +1702,7 @@ mod tests {
             threads: 1,
             ..Default::default()
         };
-        let frame = compress_adaptive(&handle, &symbols, &opts);
+        let frame = compress_adaptive(&handle, &symbols, &opts).unwrap();
         assert_eq!(frame[5], FLAG_ADAPTIVE_CHUNKS);
         // Clearing the flags byte leaves delta bits dangling in the
         // chunk table — the parser must reject, not mis-read counts.
@@ -1535,6 +1712,120 @@ mod tests {
             decompress(&bad),
             Err(CodecError::BadHeader(_))
         ));
+    }
+
+    #[test]
+    fn lane_decode_matches_batched_on_adaptive_frames() {
+        // The lane satellite, frame-level: an adaptive frame with
+        // mixed delta/fixed chunks must decode identically through
+        // lanes, batched and scalar, serial and parallel.
+        let symbols = drifting_symbols(128 * 1024, 31);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let opts = FrameOptions {
+            chunk_symbols: 8 * 1024,
+            threads: 1,
+            ..Default::default()
+        };
+        let frame = compress_adaptive(&handle, &symbols, &opts).unwrap();
+        assert_eq!(
+            frame[5] & FLAG_ADAPTIVE_CHUNKS,
+            FLAG_ADAPTIVE_CHUNKS,
+            "drift must produce at least one delta chunk"
+        );
+        for threads in [1usize, 4] {
+            let lanes = FrameOptions {
+                decode: DecodeMode::Lanes,
+                threads,
+                ..Default::default()
+            };
+            assert_eq!(
+                decompress_with(&frame, &lanes).unwrap(),
+                symbols,
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_lane_frame_decode_equals_batched_and_scalar() {
+        // Random codecs, chunkings and (for QLC) adaptive frames: the
+        // three decode modes must agree byte-for-byte, and truncated
+        // frames must agree on Ok-ness.
+        prop::check("frame lanes==batched==scalar", prop::Config {
+            cases: 48, ..Default::default()
+        }, |rng, size| {
+            let adaptive = rng.below(2) == 0;
+            let symbols = if adaptive {
+                drifting_symbols(size.max(64), rng.below(1 << 20))
+            } else {
+                prop::arb_bytes(rng, size)
+            };
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = ["raw", "huffman", "qlc", "elias-gamma", "eg2"];
+            let name = if adaptive {
+                "qlc"
+            } else {
+                names[rng.below(names.len() as u64) as usize]
+            };
+            let handle = registry()
+                .resolve(name, &hist)
+                .map_err(|e| e.to_string())?;
+            let opts = FrameOptions {
+                chunk_symbols: 1 + rng.below(2048) as usize,
+                threads: 1 + rng.below(4) as usize,
+                ..Default::default()
+            };
+            let frame = if adaptive {
+                compress_adaptive(&handle, &symbols, &opts)
+            } else {
+                compress_with(&handle, &symbols, &opts)
+            }
+            .map_err(|e| e.to_string())?;
+            let mode_opts = |decode| FrameOptions {
+                decode,
+                ..FrameOptions::serial()
+            };
+            let batched =
+                decompress_with(&frame, &mode_opts(DecodeMode::Batched))
+                    .map_err(|e| e.to_string())?;
+            let laned =
+                decompress_with(&frame, &mode_opts(DecodeMode::Lanes))
+                    .map_err(|e| e.to_string())?;
+            let scalar =
+                decompress_with(&frame, &mode_opts(DecodeMode::Scalar))
+                    .map_err(|e| e.to_string())?;
+            if batched != symbols || laned != symbols || scalar != symbols {
+                return Err(format!("{name}: decode-mode disagreement"));
+            }
+            // Truncated frames: lanes and batched must agree on
+            // Ok-ness (and bytes when both somehow succeed).
+            let keep = rng.below(frame.len() as u64 + 1) as usize;
+            let cut = &frame[..keep];
+            let b = decompress_with(cut, &mode_opts(DecodeMode::Batched));
+            let l = decompress_with(cut, &mode_opts(DecodeMode::Lanes));
+            match (&b, &l) {
+                (Ok(bv), Ok(lv)) if bv != lv => {
+                    return Err(format!(
+                        "{name}: truncated at {keep}: modes decoded \
+                         different bytes"
+                    ));
+                }
+                (Ok(_), Err(_)) | (Err(_), Ok(_)) => {
+                    return Err(format!(
+                        "{name}: truncated at {keep}: batched \
+                         {:?} vs lanes {:?}",
+                        b.is_ok(),
+                        l.is_ok()
+                    ));
+                }
+                _ => {}
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -1556,7 +1847,8 @@ mod tests {
                 chunk_symbols: 1 + rng.below(n as u64 / 2 + 1) as usize,
                 threads: 1,
                 ..Default::default()
-            });
+            })
+            .map_err(|e| e.to_string())?;
             for _ in 0..20 {
                 let mut corrupt = frame.clone();
                 match rng.below(3) {

@@ -1,6 +1,7 @@
 //! The batched decode kernel: a 64-bit buffered [`BitCursor`]
-//! (refill once, peek many) and the [`DecodeKernel`] trait every codec
-//! implements.
+//! (refill once, peek many), the [`DecodeKernel`] trait every codec
+//! implements, and the lane-interleaved engine ([`LaneDecoder`]) that
+//! steps several independent chunk cursors in lockstep.
 //!
 //! The paper's whole argument is that QLC's 3-prefix-bit + LUT
 //! structure decodes *fast*.  The scalar path
@@ -32,6 +33,22 @@
 //! entry, and it is left exactly past the last consumed code on
 //! success — callers (the adaptive codec, multi-chunk QLF1 payloads)
 //! may keep decoding from the same cursor.
+//!
+//! # Lanes
+//!
+//! One cursor's decode is a serial dependency chain: every symbol's
+//! table lookup waits on the previous symbol's shift-and-consume.
+//! QLF2 chunks are *independent* streams, so
+//! [`DecodeKernel::decode_lanes`] steps N of them in lockstep — each
+//! round resolves
+//! one code from every lane, and because the lanes share no state the
+//! lookups of different chunks overlap in the pipeline (software ILP;
+//! QLC additionally has an AVX2 vector-peek path behind runtime
+//! feature detection).  [`LaneDecoder`] is the scheduling engine:
+//! runtime-selected 4- or 8-wide, it tiles an arbitrary job list into
+//! lane groups and must decode **exactly** what the batched path
+//! decodes, symbol for symbol and consumed-bit for consumed-bit (the
+//! equivalence proptests below hold every registered codec to that).
 
 use super::CodecError;
 
@@ -178,6 +195,158 @@ impl<'a> BitCursor<'a> {
     }
 }
 
+/// Maximum number of lanes a lockstep group steps together.
+pub const MAX_LANES: usize = 8;
+
+/// One independent compressed stream inside a lockstep lane group: a
+/// cursor over its payload plus the destination slice and fill mark.
+pub struct Lane<'d, 'o> {
+    pub cur: BitCursor<'d>,
+    pub out: &'o mut [u8],
+    /// Next output index (lanes of unequal size finish at different
+    /// rounds).
+    pub pos: usize,
+}
+
+impl<'d, 'o> Lane<'d, 'o> {
+    pub fn new(payload: &'d [u8], out: &'o mut [u8]) -> Lane<'d, 'o> {
+        Lane { cur: BitCursor::new(payload), out, pos: 0 }
+    }
+
+    /// Symbols this lane still has to decode.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.out.len() - self.pos
+    }
+}
+
+/// One decode job for the lane engine: an independent byte-aligned
+/// chunk payload and the slice its symbols land in (exactly
+/// `out.len()` symbols are decoded).
+pub struct LaneJob<'d, 'o> {
+    pub payload: &'d [u8],
+    pub out: &'o mut [u8],
+}
+
+/// Whether the AVX2 vector-peek lane path is available on this CPU
+/// (cached runtime detection; always `false` off x86_64).
+#[inline]
+pub fn lanes_avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        static CACHE: AtomicU8 = AtomicU8::new(0); // 0 unknown, 1 no, 2 yes
+        match CACHE.load(Ordering::Relaxed) {
+            2 => true,
+            1 => false,
+            _ => {
+                let yes = is_x86_feature_detected!("avx2");
+                CACHE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Vector peek for a full 8-lane group: the top `bits` of eight
+/// staging words extracted with one AVX2 shift per 4-word half.
+///
+/// # Safety
+///
+/// Requires AVX2; callers must have checked
+/// [`lanes_avx2_available`] first.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn peek_top_bits_x8(words: &[u64; 8], bits: u32) -> [u32; 8] {
+    use std::arch::x86_64::{
+        __m256i, _mm256_loadu_si256, _mm256_srl_epi64, _mm256_storeu_si256,
+        _mm_cvtsi32_si128,
+    };
+    let shift = _mm_cvtsi32_si128(64 - bits as i32);
+    let lo = _mm256_loadu_si256(words.as_ptr() as *const __m256i);
+    let hi = _mm256_loadu_si256(words.as_ptr().add(4) as *const __m256i);
+    let lo = _mm256_srl_epi64(lo, shift);
+    let hi = _mm256_srl_epi64(hi, shift);
+    let mut shifted = [0u64; 8];
+    _mm256_storeu_si256(shifted.as_mut_ptr() as *mut __m256i, lo);
+    _mm256_storeu_si256(shifted.as_mut_ptr().add(4) as *mut __m256i, hi);
+    let mut out = [0u32; 8];
+    for (o, w) in out.iter_mut().zip(shifted.iter()) {
+        *o = *w as u32;
+    }
+    out
+}
+
+/// The lane-interleaved decode engine: tiles independent chunk jobs
+/// into groups of up to [`MAX_LANES`] lanes and steps each group in
+/// lockstep through one codec's [`DecodeKernel::decode_lanes`].
+///
+/// The width is runtime-selected: 8 lanes when the CPU has AVX2 (a
+/// full group feeds the vector peek path), 4 otherwise (enough
+/// independent chains to fill a scalar out-of-order pipeline).
+#[derive(Clone, Copy, Debug)]
+pub struct LaneDecoder {
+    lanes: usize,
+}
+
+impl LaneDecoder {
+    /// Runtime-selected lane width (see the type docs).
+    pub fn auto() -> LaneDecoder {
+        LaneDecoder { lanes: if lanes_avx2_available() { 8 } else { 4 } }
+    }
+
+    /// Explicit lane width; 4 and 8 are supported.
+    pub fn with_lanes(lanes: usize) -> Result<LaneDecoder, String> {
+        if lanes == 4 || lanes == 8 {
+            Ok(LaneDecoder { lanes })
+        } else {
+            Err(format!("lane width {lanes} unsupported (expected 4 or 8)"))
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Decode every job — `self.lanes` of them in lockstep at a time —
+    /// through `kernel`.  Each job decodes exactly `out.len()`
+    /// symbols.  Jobs that cannot possibly hold their symbol count
+    /// (every code is ≥ 1 bit) are rejected before any cursor is
+    /// built, matching
+    /// [`DecoderSession::decode_chunk`](super::DecoderSession::decode_chunk).
+    /// On `Err` the contents of every job's `out` are unspecified.
+    pub fn decode_jobs<K: DecodeKernel + ?Sized>(
+        &self,
+        kernel: &K,
+        jobs: &mut [LaneJob<'_, '_>],
+    ) -> Result<(), CodecError> {
+        for group in jobs.chunks_mut(self.lanes) {
+            for job in group.iter() {
+                if job.out.len() as u64 > job.payload.len() as u64 * 8 {
+                    return Err(CodecError::UnexpectedEof);
+                }
+            }
+            let mut lanes: Vec<Lane<'_, '_>> = group
+                .iter_mut()
+                .map(|job| Lane::new(job.payload, &mut *job.out))
+                .collect();
+            kernel.decode_lanes(&mut lanes)?;
+            debug_assert!(lanes.iter().all(|l| l.remaining() == 0));
+        }
+        Ok(())
+    }
+}
+
+impl Default for LaneDecoder {
+    fn default() -> LaneDecoder {
+        LaneDecoder::auto()
+    }
+}
+
 /// The batched decode primitive.  See the module docs for the full
 /// contract: decode **exactly `out.len()`** symbols, return the count,
 /// leave the cursor just past the last code.
@@ -187,6 +356,29 @@ pub trait DecodeKernel {
         cur: &mut BitCursor<'_>,
         out: &mut [u8],
     ) -> Result<usize, CodecError>;
+
+    /// Decode every lane to completion (`lane.pos` reaches
+    /// `lane.out.len()`), stepping the lanes in lockstep where the
+    /// codec supports it.  Must agree with [`decode_batch`]
+    /// symbol-for-symbol and consumed-bit-for-bit on every lane; on
+    /// `Err` the lanes' outputs and cursors are unspecified.
+    ///
+    /// The default decodes lane-after-lane through the batched path —
+    /// correct for every codec; table-driven codecs (QLC) override it
+    /// with a genuinely interleaved loop.
+    ///
+    /// [`decode_batch`]: Self::decode_batch
+    fn decode_lanes(
+        &self,
+        lanes: &mut [Lane<'_, '_>],
+    ) -> Result<(), CodecError> {
+        for lane in lanes.iter_mut() {
+            let pos = lane.pos;
+            let n = self.decode_batch(&mut lane.cur, &mut lane.out[pos..])?;
+            lane.pos += n;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -310,6 +502,229 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The lane satellite property: lane decode ≡ batched ≡ scalar
+    /// symbol-for-symbol for every registered codec, at both supported
+    /// lane widths, over independent chunks of every ragged shape.
+    #[test]
+    fn prop_lanes_equal_batched_equal_scalar_all_registered_codecs() {
+        let reg = CodecRegistry::global();
+        prop::check("lanes==batched==scalar", prop::Config {
+            cases: 64, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size);
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = reg.known_names();
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle =
+                reg.resolve(name, &hist).map_err(|e| e.to_string())?;
+            let codec = handle.codec();
+            // Independent chunks (the lane unit), ragged tail included.
+            let chunk = 1 + rng.below(size as u64) as usize;
+            let payloads: Vec<Vec<u8>> = symbols
+                .chunks(chunk)
+                .map(|c| codec.encode_to_vec(c))
+                .collect();
+
+            let mut batched = vec![0u8; symbols.len()];
+            for (p, dst) in payloads.iter().zip(batched.chunks_mut(chunk)) {
+                let mut cur = BitCursor::new(p);
+                codec
+                    .decode_into(&mut cur, dst)
+                    .map_err(|e| format!("{name} batched: {e}"))?;
+            }
+            if batched != symbols {
+                return Err(format!("{name}: batched chunk decode mismatch"));
+            }
+
+            let mut scalar = vec![0u8; symbols.len()];
+            for (p, dst) in payloads.iter().zip(scalar.chunks_mut(chunk)) {
+                let mut rdr = BitReader::new(p);
+                codec
+                    .decode_scalar_into(&mut rdr, dst)
+                    .map_err(|e| format!("{name} scalar: {e}"))?;
+            }
+            if scalar != symbols {
+                return Err(format!("{name}: scalar chunk decode mismatch"));
+            }
+
+            for width in [4usize, 8] {
+                let engine = LaneDecoder::with_lanes(width)?;
+                let mut laned = vec![0u8; symbols.len()];
+                let mut jobs: Vec<LaneJob> = payloads
+                    .iter()
+                    .zip(laned.chunks_mut(chunk))
+                    .map(|(p, o)| LaneJob { payload: p, out: o })
+                    .collect();
+                engine
+                    .decode_jobs(codec, &mut jobs)
+                    .map_err(|e| format!("{name} lanes x{width}: {e}"))?;
+                if laned != symbols {
+                    return Err(format!(
+                        "{name}: lane decode mismatch at width {width}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Lane cursors must consume exactly the bits the batched path
+    /// consumes — a lockstep loop cannot "win" by skipping validation.
+    #[test]
+    fn lane_cursors_consume_exactly_like_batched() {
+        let reg = CodecRegistry::global();
+        let symbols: Vec<u8> =
+            (0..40_000u32).map(|i| (i * 31 % 251) as u8).collect();
+        let hist = Histogram::from_symbols(&symbols);
+        for name in ["qlc", "huffman", "elias-gamma", "eg2", "raw"] {
+            let handle = reg.resolve(name, &hist).unwrap();
+            let codec = handle.codec();
+            // Unequal chunk sizes force lanes to drop out at different
+            // rounds and exercise the tail path.
+            let sizes = [9000usize, 1, 12_000, 7, 18_992];
+            assert_eq!(sizes.iter().sum::<usize>(), symbols.len());
+            let mut payloads = Vec::new();
+            let mut start = 0usize;
+            for &s in &sizes {
+                payloads.push(codec.encode_to_vec(&symbols[start..start + s]));
+                start += s;
+            }
+            let mut outs: Vec<Vec<u8>> =
+                sizes.iter().map(|&s| vec![0u8; s]).collect();
+            let mut lanes: Vec<Lane> = payloads
+                .iter()
+                .zip(outs.iter_mut())
+                .map(|(p, o)| Lane::new(p, o))
+                .collect();
+            codec.decode_lanes(&mut lanes).unwrap();
+            let mut start = 0usize;
+            for ((lane, p), &s) in lanes.iter().zip(&payloads).zip(&sizes) {
+                assert_eq!(lane.remaining(), 0, "{name}");
+                assert_eq!(&lane.out[..], &symbols[start..start + s], "{name}");
+                let mut cur = BitCursor::new(p);
+                let mut reference = vec![0u8; s];
+                codec.decode_into(&mut cur, &mut reference).unwrap();
+                assert_eq!(
+                    lane.cur.bits_consumed(),
+                    cur.bits_consumed(),
+                    "{name}: lane consumed differently from batched"
+                );
+                start += s;
+            }
+        }
+    }
+
+    /// Truncated lane inputs must agree with the batched path on
+    /// Ok-ness (and on bytes when both succeed).
+    #[test]
+    fn prop_lanes_and_batched_agree_on_truncation() {
+        let reg = CodecRegistry::global();
+        prop::check("lanes==batched truncated", prop::Config {
+            cases: 48, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size.max(8));
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = reg.known_names();
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle =
+                reg.resolve(name, &hist).map_err(|e| e.to_string())?;
+            let codec = handle.codec();
+            let encoded = codec.encode_to_vec(&symbols);
+            let keep = rng.below(encoded.len() as u64 + 1) as usize;
+            let cut = &encoded[..keep];
+
+            let mut batched = vec![0u8; symbols.len()];
+            let mut cur = BitCursor::new(cut);
+            let b = codec.decode_into(&mut cur, &mut batched);
+
+            for width in [4usize, 8] {
+                let engine = LaneDecoder::with_lanes(width)?;
+                let mut laned = vec![0u8; symbols.len()];
+                let mut jobs =
+                    [LaneJob { payload: cut, out: &mut laned }];
+                let l = engine.decode_jobs(codec, &mut jobs);
+                if b.is_ok() != l.is_ok() {
+                    return Err(format!(
+                        "{name}: truncated at {keep}: batched {b:?}, \
+                         lanes x{width} {l:?}"
+                    ));
+                }
+                if b.is_ok() && laned != batched {
+                    return Err(format!(
+                        "{name}: truncated lane decode diverged"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_decoder_widths() {
+        assert!(LaneDecoder::with_lanes(4).is_ok());
+        assert!(LaneDecoder::with_lanes(8).is_ok());
+        assert!(LaneDecoder::with_lanes(0).is_err());
+        assert!(LaneDecoder::with_lanes(3).is_err());
+        assert!(LaneDecoder::with_lanes(16).is_err());
+        let auto = LaneDecoder::auto().lanes();
+        assert!(auto == 4 || auto == 8);
+        if lanes_avx2_available() {
+            assert_eq!(auto, 8);
+        }
+    }
+
+    #[test]
+    fn lane_jobs_reject_impossible_counts() {
+        let reg = CodecRegistry::global();
+        let hist = Histogram::from_symbols(&[0]);
+        let handle = reg.resolve("raw", &hist).unwrap();
+        let mut out = vec![0u8; 17];
+        let mut jobs = [LaneJob { payload: &[0xAB, 0xCD], out: &mut out }];
+        assert_eq!(
+            LaneDecoder::auto().decode_jobs(handle.codec(), &mut jobs),
+            Err(CodecError::UnexpectedEof)
+        );
+        // Empty job lists and empty jobs are no-ops.
+        let mut none: [LaneJob; 0] = [];
+        LaneDecoder::auto()
+            .decode_jobs(handle.codec(), &mut none)
+            .unwrap();
+        let mut empty = [LaneJob { payload: &[], out: &mut [] }];
+        LaneDecoder::auto()
+            .decode_jobs(handle.codec(), &mut empty)
+            .unwrap();
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_peek_matches_scalar_shift() {
+        if !lanes_avx2_available() {
+            return;
+        }
+        let words = [
+            0xFFFF_FFFF_FFFF_FFFFu64,
+            0x8000_0000_0000_0000,
+            0x0123_4567_89AB_CDEF,
+            0,
+            0x7FFF_FFFF_FFFF_FFFF,
+            0xDEAD_BEEF_CAFE_F00D,
+            1,
+            0xA5A5_A5A5_A5A5_A5A5,
+        ];
+        for bits in [1u32, 3, 5, 8, 16, 32] {
+            let got = unsafe { peek_top_bits_x8(&words, bits) };
+            for (g, w) in got.iter().zip(words.iter()) {
+                assert_eq!(*g as u64, w >> (64 - bits), "bits={bits}");
+            }
+        }
     }
 
     /// Truncations must error on both paths (never panic, never

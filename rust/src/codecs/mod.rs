@@ -20,7 +20,11 @@
 //! `decode`/`decode_from_slice` remain as thin convenience wrappers,
 //! and [`Codec::decode_scalar_into`] keeps the one-symbol-per-step
 //! reference path alive for equivalence tests and the
-//! batched-vs-scalar bench.
+//! batched-vs-scalar bench.  When a caller holds *several* independent
+//! chunks, the lane engine ([`LaneDecoder`],
+//! [`DecodeKernel::decode_lanes`]) steps up to [`MAX_LANES`] cursors
+//! in lockstep so the table lookups of different chunks overlap in the
+//! pipeline — the multi-cursor path behind `--decode=lanes`.
 //!
 //! Block-oriented streaming goes through *sessions*:
 //! [`EncoderSession`] / [`DecoderSession`] (constructed via
@@ -49,7 +53,9 @@ mod session;
 #[cfg(feature = "zstd")]
 pub mod zstd_baseline;
 
-pub use kernel::{BitCursor, DecodeKernel};
+pub use kernel::{
+    BitCursor, DecodeKernel, Lane, LaneDecoder, LaneJob, MAX_LANES,
+};
 pub use registry::{CodecHandle, CodecRegistry};
 pub use session::{
     chunk_spans, DecodeMode, DecoderSession, EncoderSession,

@@ -8,7 +8,7 @@
 
 use super::scheme::AreaScheme;
 use crate::bitstream::{BitReader, BitWriter};
-use crate::codecs::kernel::{BitCursor, DecodeKernel};
+use crate::codecs::kernel::{BitCursor, DecodeKernel, Lane};
 use crate::codecs::{Codec, CodecError};
 use crate::stats::Pmf;
 
@@ -156,6 +156,88 @@ impl QlcCodec {
         Ok(self.rank_to_symbol[(e.base + idx) as usize])
     }
 
+    /// Resolve one whole code for `lane` from its staging word `w` and
+    /// pre-extracted `area` index.  The single copy of the
+    /// validate/consume/store sequence both burst flavours call, so
+    /// the proptested lanes ≡ batched equivalence cannot diverge
+    /// between the scalar and AVX2 paths.
+    #[inline]
+    fn resolve_lane_code(
+        &self,
+        lane: &mut Lane<'_, '_>,
+        w: u64,
+        area: usize,
+    ) -> Result<(), CodecError> {
+        let e = &self.fast_table[area];
+        let idx = (w >> e.word_shift) as u32 & e.suffix_mask;
+        if idx >= e.size {
+            return Err(CodecError::InvalidCode {
+                bit_offset: lane.cur.bits_consumed(),
+            });
+        }
+        lane.cur.consume(e.total_len);
+        lane.out[lane.pos] = self.rank_to_symbol[(e.base + idx) as usize];
+        lane.pos += 1;
+        Ok(())
+    }
+
+    /// One lockstep burst: resolve `rounds` whole codes from every
+    /// unfinished lane, lane-major, so the per-lane table chains run
+    /// independently.  The caller sized `rounds` from every unfinished
+    /// lane's refilled budget, so no refill or EOF check is needed
+    /// inside the burst.
+    fn lockstep_scalar(
+        &self,
+        lanes: &mut [Lane<'_, '_>],
+        rounds: usize,
+    ) -> Result<(), CodecError> {
+        let prefix_shift = 64 - self.scheme.prefix_bits;
+        for _ in 0..rounds {
+            for lane in lanes.iter_mut() {
+                if lane.remaining() == 0 {
+                    continue;
+                }
+                let w = lane.cur.word();
+                self.resolve_lane_code(
+                    lane,
+                    w,
+                    (w >> prefix_shift) as usize,
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    /// AVX2 burst for a full 8-lane group: one vector shift peeks all
+    /// eight area prefixes per round; suffix extraction and the rank
+    /// LUT stay scalar (suffix widths vary per lane).
+    #[cfg(target_arch = "x86_64")]
+    fn lockstep_avx2(
+        &self,
+        lanes: &mut [Lane<'_, '_>],
+        rounds: usize,
+    ) -> Result<(), CodecError> {
+        debug_assert_eq!(lanes.len(), 8);
+        let prefix_bits = self.scheme.prefix_bits;
+        for _ in 0..rounds {
+            let mut words = [0u64; 8];
+            for (w, lane) in words.iter_mut().zip(lanes.iter()) {
+                *w = lane.cur.word();
+            }
+            // Safety: this path is only dispatched after
+            // `lanes_avx2_available()` reported AVX2.
+            let areas = unsafe {
+                crate::codecs::kernel::peek_top_bits_x8(&words, prefix_bits)
+            };
+            for (lane, (&w, &area)) in
+                lanes.iter_mut().zip(words.iter().zip(areas.iter()))
+            {
+                self.resolve_lane_code(lane, w, area as usize)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Cursor analogue of [`decode_one`](Self::decode_one) — the
     /// kernel's slow tail when fewer than `max_code_bits` are buffered.
     #[inline]
@@ -220,6 +302,62 @@ impl DecodeKernel for QlcCodec {
             i += k;
         }
         Ok(n)
+    }
+
+    /// Lane-interleaved lockstep decode: every unfinished lane refills
+    /// once, then a burst of `rounds` codes is resolved from each lane
+    /// in lane-major order, so the prefix-table lookups of independent
+    /// chunks overlap in the pipeline instead of serializing on one
+    /// cursor's shift-consume chain.  A full 8-lane group takes the
+    /// AVX2 vector-peek path when the CPU has it (runtime-detected);
+    /// ragged tails fall back to the checked batched path, keeping
+    /// lane decode ≡ batched decode symbol-for-symbol and
+    /// consumed-bit-for-bit.
+    fn decode_lanes(
+        &self,
+        lanes: &mut [Lane<'_, '_>],
+    ) -> Result<(), CodecError> {
+        let max = self.max_code_bits;
+        loop {
+            // Size one burst: the largest `rounds` every unfinished
+            // lane can sustain without another refill or EOF check.
+            // A lane that reaches its sub-word tail (its final codes
+            // may be shorter than `max_code_bits`) is finished right
+            // here on the checked batched path — which surfaces
+            // EOF/InvalidCode exactly like batched decode would — so
+            // the *group* stays in lockstep instead of collapsing to
+            // serial because one ragged chunk ran short.
+            let mut rounds = usize::MAX;
+            let mut unfinished = 0usize;
+            for lane in lanes.iter_mut() {
+                if lane.remaining() == 0 {
+                    continue;
+                }
+                let avail = lane.cur.refill_buffered();
+                if avail < max {
+                    let pos = lane.pos;
+                    let n = self
+                        .decode_batch(&mut lane.cur, &mut lane.out[pos..])?;
+                    lane.pos += n;
+                    continue;
+                }
+                unfinished += 1;
+                rounds = rounds
+                    .min(((avail / max) as usize).min(lane.remaining()));
+            }
+            if unfinished == 0 {
+                return Ok(());
+            }
+            #[cfg(target_arch = "x86_64")]
+            if unfinished == 8
+                && lanes.len() == 8
+                && crate::codecs::kernel::lanes_avx2_available()
+            {
+                self.lockstep_avx2(lanes, rounds)?;
+                continue;
+            }
+            self.lockstep_scalar(lanes, rounds)?;
+        }
     }
 }
 
@@ -409,6 +547,62 @@ mod tests {
     #[test]
     fn prop_roundtrip_t1() {
         testutil::roundtrip_property(&t1_identity());
+    }
+
+    #[test]
+    fn lane_decode_roundtrips_at_both_widths() {
+        use crate::codecs::kernel::{LaneDecoder, LaneJob};
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-0.03 * i as f64).exp();
+        }
+        let symbols =
+            AliasTable::new(&p).sample_many(&mut Rng::new(17), 120_000);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+        // 8 equal chunks hit the full-group (AVX2 where present) path;
+        // the ragged split exercises drop-out and tails.
+        for chunk in [symbols.len() / 8, 7_919] {
+            let payloads: Vec<Vec<u8>> = symbols
+                .chunks(chunk)
+                .map(|c| codec.encode_to_vec(c))
+                .collect();
+            for width in [4usize, 8] {
+                let engine = LaneDecoder::with_lanes(width).unwrap();
+                let mut out = vec![0u8; symbols.len()];
+                let mut jobs: Vec<LaneJob> = payloads
+                    .iter()
+                    .zip(out.chunks_mut(chunk))
+                    .map(|(p, o)| LaneJob { payload: p, out: o })
+                    .collect();
+                engine.decode_jobs(&codec, &mut jobs).unwrap();
+                assert_eq!(out, symbols, "chunk={chunk} width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_decode_surfaces_invalid_codes() {
+        use crate::codecs::kernel::Lane;
+        let codec = t1_identity();
+        // Area 7 of Table 1 holds 168 symbols; suffix 200 is invalid.
+        let mut w = BitWriter::new();
+        w.write_bits(0b111, 3);
+        w.write_bits(200, 8);
+        // Pad so the lockstep (not the tail) sees the bad code.
+        w.write_zeros(61);
+        let bad = w.finish();
+        let good = codec.encode_to_vec(&[1u8; 64]);
+        let mut out_bad = vec![0u8; 4];
+        let mut out_good = vec![0u8; 64];
+        let mut lanes = vec![
+            Lane::new(&bad, &mut out_bad),
+            Lane::new(&good, &mut out_good),
+        ];
+        assert!(matches!(
+            codec.decode_lanes(&mut lanes),
+            Err(CodecError::InvalidCode { .. })
+        ));
     }
 
     #[test]

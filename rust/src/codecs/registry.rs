@@ -25,6 +25,7 @@ use std::sync::OnceLock;
 use super::elias::{EliasCodec, EliasKind};
 use super::expgolomb::ExpGolombCodec;
 use super::huffman::HuffmanCodec;
+use super::kernel::LaneJob;
 use super::qlc::{self, AreaScheme, QlcCodec};
 use super::raw::RawCodec;
 use super::session::{DecodeMode, DecoderSession, EncoderSession};
@@ -173,9 +174,23 @@ impl CodecHandle {
     }
 
     /// Start a streaming decode session on an explicit decode path
-    /// (the CLI's `--decode=batched|scalar`).
+    /// (the CLI's `--decode=batched|scalar|lanes`).
     pub fn decoder_with(&self, mode: DecodeMode) -> DecoderSession<'_> {
         DecoderSession::with_mode(self.codec(), mode)
+    }
+
+    /// Decode several independent chunk payloads through the
+    /// lane-interleaved engine — the [`DecodeMode::Lanes`] entry
+    /// point: up to [`MAX_LANES`](super::kernel::MAX_LANES) chunk
+    /// cursors step in lockstep through this codec's tables, so their
+    /// prefix lookups overlap in the pipeline.  Every job decodes
+    /// exactly `out.len()` symbols; results are byte-identical to
+    /// decoding each chunk through [`CodecHandle::decoder`].
+    pub fn decode_chunks_lanes(
+        &self,
+        jobs: &mut [LaneJob<'_, '_>],
+    ) -> Result<(), CodecError> {
+        self.decoder_with(DecodeMode::Lanes).decode_chunk_group(jobs)
     }
 }
 
@@ -594,6 +609,33 @@ mod tests {
         let mut dup = delta.clone();
         dup[0] = dup[1];
         assert!(tables.from_delta(&dup).is_err());
+    }
+
+    #[test]
+    fn handles_decode_lane_groups() {
+        // Every family's handle must decode chunk groups through the
+        // lane entry point bit-identically to its plain decoder.
+        let hist = skewed_hist(8);
+        let reg = CodecRegistry::global();
+        let symbols =
+            AliasTable::new(&hist.pmf().p).sample_many(&mut Rng::new(4), 30_000);
+        for name in reg.known_names() {
+            let handle = reg.resolve(name, &hist).unwrap();
+            let chunk = 4_100usize;
+            let mut enc = handle.encoder();
+            let payloads: Vec<Vec<u8>> = symbols
+                .chunks(chunk)
+                .map(|c| enc.encode_chunk_to_vec(c))
+                .collect();
+            let mut out = vec![0u8; symbols.len()];
+            let mut jobs: Vec<LaneJob> = payloads
+                .iter()
+                .zip(out.chunks_mut(chunk))
+                .map(|(p, o)| LaneJob { payload: p, out: o })
+                .collect();
+            handle.decode_chunks_lanes(&mut jobs).unwrap();
+            assert_eq!(out, symbols, "{name}");
+        }
     }
 
     #[test]

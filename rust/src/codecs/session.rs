@@ -13,21 +13,26 @@
 //! so the destination (tensor shard, frame slice) is written exactly
 //! once.  Both track totals for throughput accounting.
 
-use super::kernel::BitCursor;
+use super::kernel::{BitCursor, LaneDecoder, LaneJob};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
 /// Which decode path a [`DecoderSession`] (and everything above it —
 /// frame, transport, CLI) runs: the batched
-/// [`DecodeKernel`](super::DecodeKernel) word-at-a-time path, or the
-/// scalar one-symbol-per-step reference path.  Batched is the default
-/// everywhere; scalar exists for equivalence testing and the
-/// batched-vs-scalar bench/CLI comparison.
+/// [`DecodeKernel`](super::DecodeKernel) word-at-a-time path, the
+/// lane-interleaved multi-cursor path
+/// ([`LaneDecoder`](super::LaneDecoder), stepping independent chunks
+/// in lockstep), or the scalar one-symbol-per-step reference path.
+/// Batched is the default everywhere; lanes multiply single-core
+/// throughput when a caller has several chunks in hand
+/// ([`DecoderSession::decode_chunk_group`]); scalar exists for
+/// equivalence testing and the bench/CLI comparisons.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum DecodeMode {
     #[default]
     Batched,
     Scalar,
+    Lanes,
 }
 
 impl DecodeMode {
@@ -36,8 +41,10 @@ impl DecodeMode {
         match name {
             "batched" => Ok(DecodeMode::Batched),
             "scalar" => Ok(DecodeMode::Scalar),
+            "lanes" => Ok(DecodeMode::Lanes),
             other => Err(format!(
-                "unknown decode mode '{other}' (expected batched|scalar)"
+                "unknown decode mode '{other}' (expected \
+                 batched|scalar|lanes)"
             )),
         }
     }
@@ -46,6 +53,7 @@ impl DecodeMode {
         match self {
             DecodeMode::Batched => "batched",
             DecodeMode::Scalar => "scalar",
+            DecodeMode::Lanes => "lanes",
         }
     }
 }
@@ -149,11 +157,16 @@ impl<'c> EncoderSession<'c> {
 
 /// Streaming decoder bound to one codec.  Decodes byte-aligned chunk
 /// payloads into caller-provided slices via the batched
-/// [`DecodeKernel`](super::DecodeKernel) (or the scalar reference path
-/// when constructed with [`DecodeMode::Scalar`]).
+/// [`DecodeKernel`](super::DecodeKernel), the lane-interleaved engine
+/// ([`DecodeMode::Lanes`], see
+/// [`decode_chunk_group`](Self::decode_chunk_group)), or the scalar
+/// reference path ([`DecodeMode::Scalar`]).
 pub struct DecoderSession<'c> {
     codec: &'c dyn Codec,
     mode: DecodeMode,
+    /// Lane engine for [`DecodeMode::Lanes`] group decodes
+    /// (runtime-selected width, cached at construction).
+    lane: LaneDecoder,
     symbols_out: u64,
     bytes_in: u64,
     chunks: u64,
@@ -165,7 +178,14 @@ impl<'c> DecoderSession<'c> {
     }
 
     pub fn with_mode(codec: &'c dyn Codec, mode: DecodeMode) -> Self {
-        DecoderSession { codec, mode, symbols_out: 0, bytes_in: 0, chunks: 0 }
+        DecoderSession {
+            codec,
+            mode,
+            lane: LaneDecoder::auto(),
+            symbols_out: 0,
+            bytes_in: 0,
+            chunks: 0,
+        }
     }
 
     pub fn codec(&self) -> &'c dyn Codec {
@@ -192,7 +212,10 @@ impl<'c> DecoderSession<'c> {
             return Err(CodecError::UnexpectedEof);
         }
         match self.mode {
-            DecodeMode::Batched => {
+            // A single chunk has nothing to interleave with, so Lanes
+            // degenerates to the batched kernel here; the lane win
+            // comes from [`Self::decode_chunk_group`].
+            DecodeMode::Batched | DecodeMode::Lanes => {
                 let mut cur = BitCursor::new(payload);
                 self.codec.decode_into(&mut cur, out)?;
             }
@@ -205,6 +228,39 @@ impl<'c> DecoderSession<'c> {
         self.bytes_in += payload.len() as u64;
         self.chunks += 1;
         Ok(())
+    }
+
+    /// Decode several independent chunk payloads in one call; every
+    /// job decodes exactly `job.out.len()` symbols.
+    ///
+    /// Under [`DecodeMode::Lanes`] the jobs run through the
+    /// lane-interleaved engine: up to
+    /// [`MAX_LANES`](super::kernel::MAX_LANES) chunk cursors step in
+    /// lockstep so their table lookups overlap in the pipeline.  The
+    /// other modes decode the jobs serially through
+    /// [`decode_chunk`](Self::decode_chunk), so the result (and the
+    /// session accounting) is mode-independent.
+    pub fn decode_chunk_group(
+        &mut self,
+        jobs: &mut [LaneJob<'_, '_>],
+    ) -> Result<(), CodecError> {
+        match self.mode {
+            DecodeMode::Lanes => {
+                self.lane.decode_jobs(self.codec, &mut *jobs)?;
+                for job in jobs.iter() {
+                    self.symbols_out += job.out.len() as u64;
+                    self.bytes_in += job.payload.len() as u64;
+                    self.chunks += 1;
+                }
+                Ok(())
+            }
+            DecodeMode::Batched | DecodeMode::Scalar => {
+                for job in jobs.iter_mut() {
+                    self.decode_chunk(job.payload, job.out)?;
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Decode `n` symbols from `payload` into a fresh buffer.
@@ -332,8 +388,49 @@ mod tests {
         let mut s = DecoderSession::with_mode(&codec, DecodeMode::Scalar);
         assert_eq!(s.mode(), DecodeMode::Scalar);
         s.decode_chunk(&payload, &mut scalar).unwrap();
+        // A lanes-mode session on a single chunk degenerates to the
+        // batched kernel — same bytes either way.
+        let mut laned = vec![0u8; symbols.len()];
+        let mut l = DecoderSession::with_mode(&codec, DecodeMode::Lanes);
+        assert_eq!(l.mode(), DecodeMode::Lanes);
+        l.decode_chunk(&payload, &mut laned).unwrap();
         assert_eq!(batched, symbols);
         assert_eq!(scalar, symbols);
+        assert_eq!(laned, symbols);
+    }
+
+    #[test]
+    fn lane_session_group_decodes_independent_chunks() {
+        let symbols = skewed(60_000, 9);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+        let chunk = 7_000usize;
+        let mut enc = codec.encoder();
+        let payloads: Vec<Vec<u8>> = symbols
+            .chunks(chunk)
+            .map(|c| enc.encode_chunk_to_vec(c))
+            .collect();
+        for mode in [DecodeMode::Lanes, DecodeMode::Batched] {
+            let mut out = vec![0u8; symbols.len()];
+            let mut s = DecoderSession::with_mode(&codec, mode);
+            let mut jobs: Vec<LaneJob> = payloads
+                .iter()
+                .zip(out.chunks_mut(chunk))
+                .map(|(p, o)| LaneJob { payload: p, out: o })
+                .collect();
+            s.decode_chunk_group(&mut jobs).unwrap();
+            assert_eq!(out, symbols, "{mode:?}");
+            assert_eq!(s.chunks(), payloads.len() as u64, "{mode:?}");
+            assert_eq!(s.symbols_out(), symbols.len() as u64, "{mode:?}");
+        }
+        // Impossible counts are rejected in lanes mode too.
+        let mut out = vec![0u8; 17];
+        let mut s = DecoderSession::with_mode(&codec, DecodeMode::Lanes);
+        let mut jobs = [LaneJob { payload: &[0xAB, 0xCD], out: &mut out }];
+        assert_eq!(
+            s.decode_chunk_group(&mut jobs),
+            Err(CodecError::UnexpectedEof)
+        );
     }
 
     #[test]

@@ -314,7 +314,8 @@ fn run_allgather(cfg: &WorkerConfig) -> Result<DistOutcome, String> {
         desc.index as u32,
         &symbols[desc.start..desc.start + desc.n_symbols],
         &FrameOptions::serial(),
-    );
+    )
+    .map_err(|e| e.to_string())?;
 
     let (bodies, stats, wall_s) = if cfg.world == 1 {
         (vec![body], WorkerStats::default(), 0.0)
@@ -353,6 +354,92 @@ fn run_allgather(cfg: &WorkerConfig) -> Result<DistOutcome, String> {
         report,
         result_bytes: gathered,
     })
+}
+
+/// Kill-on-drop guard over the worker processes `qlc launch` spawns.
+///
+/// Every exit path that abandons the fleet — a spawn error halfway
+/// through the ranks, a failed rank, unparseable worker output, an
+/// `Err` in the polling loop — must not leave orphan workers holding
+/// their sockets until their own timeouts expire (a broken worker
+/// could hang CI's distributed-smoke job that way).  Dropping the
+/// fleet kills and reaps whatever is still running.
+pub struct Fleet {
+    children: Vec<Option<std::process::Child>>,
+}
+
+impl Fleet {
+    pub fn new() -> Fleet {
+        Fleet { children: Vec::new() }
+    }
+
+    /// Track a spawned worker; its index is its rank order.
+    pub fn push(&mut self, child: std::process::Child) {
+        self.children.push(Some(child));
+    }
+
+    pub fn len(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Non-blocking poll of child `i`: `Ok(Some(status))` once it has
+    /// exited (the child stays tracked until [`Fleet::take_output`]),
+    /// `Ok(None)` while running or after it was collected.
+    pub fn try_wait(
+        &mut self,
+        i: usize,
+    ) -> Result<Option<std::process::ExitStatus>, String> {
+        match self.children[i].as_mut() {
+            None => Ok(None),
+            Some(child) => child
+                .try_wait()
+                .map_err(|e| format!("wait for rank {i}: {e}")),
+        }
+    }
+
+    /// Collect an exited child's captured output, untracking it.
+    pub fn take_output(
+        &mut self,
+        i: usize,
+    ) -> Result<std::process::Output, String> {
+        let child = self.children[i]
+            .take()
+            .ok_or_else(|| format!("rank {i} already collected"))?;
+        child
+            .wait_with_output()
+            .map_err(|e| format!("collect rank {i}: {e}"))
+    }
+
+    /// Kill and reap every child still tracked (idempotent; also what
+    /// `Drop` runs).
+    pub fn kill_all(&mut self) {
+        for slot in &mut self.children {
+            if let Some(child) = slot.as_mut() {
+                let _ = child.kill();
+            }
+        }
+        for slot in &mut self.children {
+            if let Some(mut child) = slot.take() {
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+impl Default for Fleet {
+    fn default() -> Fleet {
+        Fleet::new()
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.kill_all();
+    }
 }
 
 /// A free `127.0.0.1` address for a rendezvous listener.  The probe
@@ -412,6 +499,40 @@ mod tests {
         );
         assert!(round_size(BLOCK, 4).is_err(), "too small");
         assert!(round_size(100, 0).is_err(), "zero world");
+    }
+
+    #[test]
+    fn fleet_kills_children_on_drop() {
+        // Two long-sleeping children stand in for hung workers; the
+        // fleet's Drop must kill and reap them promptly (a plain wait
+        // would block the full 30 s and fail the bound below).
+        let t0 = Instant::now();
+        {
+            let mut fleet = Fleet::new();
+            for _ in 0..2 {
+                let child = match std::process::Command::new("sleep")
+                    .arg("30")
+                    .spawn()
+                {
+                    Ok(c) => c,
+                    // No `sleep` binary in this environment — nothing
+                    // to reap, nothing to test.
+                    Err(_) => return,
+                };
+                fleet.push(child);
+            }
+            assert_eq!(fleet.len(), 2);
+            assert!(!fleet.is_empty());
+            // Children are alive: polling reports still-running.
+            let mut f = fleet;
+            assert!(f.try_wait(0).unwrap().is_none());
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "fleet drop must kill children, not wait for them \
+             ({:?})",
+            t0.elapsed()
+        );
     }
 
     #[test]

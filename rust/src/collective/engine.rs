@@ -489,7 +489,8 @@ mod tests {
             &symbols,
             4,
             &FrameOptions::serial(),
-        );
+        )
+        .unwrap();
         assert_eq!(manifest.n_shards(), 4);
         let endpoints = threaded::ring(4, 2);
         let manifest = Arc::new(manifest);

@@ -885,7 +885,8 @@ mod tests {
             &symbols,
             w,
             &crate::codecs::frame::FrameOptions::serial(),
-        );
+        )
+        .unwrap();
         let (gathered, report) =
             ring_allgather_shards(&fabric, &manifest, &bodies).unwrap();
         assert_eq!(gathered, symbols);

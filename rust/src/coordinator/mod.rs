@@ -124,18 +124,22 @@ impl Pipeline {
                 let Ok(job) = job else { break };
                 let slice = &job.stream[job.start..job.start + job.len];
                 let t0 = Instant::now();
+                // Job slices are always far below the QLF2 chunk cap,
+                // so the checked writer cannot fail here.
                 let bytes = match job.shard {
                     None => frame::compress_with(
                         &handle,
                         slice,
                         &FrameOptions::serial(),
-                    ),
+                    )
+                    .expect("pipeline chunks stay under the QLF2 chunk cap"),
                     Some(index) => frame::compress_shard(
                         &handle,
                         index,
                         slice,
                         &FrameOptions::serial(),
-                    ),
+                    )
+                    .expect("pipeline shards stay under the QLF2 chunk cap"),
                 };
                 let dt = t0.elapsed().as_secs_f64();
                 {
@@ -340,7 +344,8 @@ mod tests {
             &symbols,
             5,
             &FrameOptions::serial(),
-        );
+        )
+        .unwrap();
         assert_eq!(manifest, direct_manifest);
         assert_eq!(shards, direct_shards);
         // And the sharded set reassembles.

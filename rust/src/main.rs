@@ -99,11 +99,13 @@ USAGE: qlc <subcommand> [options]
                          better, chunks stay independently decodable)
              [--shards N]  (QLM1 manifest at <out> + <out>.shardK files,
                             one table header shared by all shards)
-  decompress <in> <out> [--decode batched|scalar]
+  decompress <in> <out> [--decode batched|scalar|lanes]
                           (reads QLF1, QLF2 and QLM1 manifests —
                            shard files are found next to the manifest;
-                           --decode picks the kernel or the scalar
-                           reference path, default batched)
+                           --decode picks the batched kernel, the
+                           scalar reference path, or lane-interleaved
+                           multi-cursor decode of independent chunks;
+                           default batched)
   datagen    --kind K --n SYMBOLS --out DIR [--seed S]
              [--target-entropy H | --knob X]
   optimize   [--kind K | --dir TRACES --name NAME] [--prefix P] [--json]
@@ -229,7 +231,8 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
             &symbols,
             n_shards,
             &FrameOptions::default(),
-        );
+        )
+        .map_err(|e| e.to_string())?;
         std::fs::write(&output, manifest.to_bytes())
             .map_err(|e| e.to_string())?;
         let mut total = 0usize;
@@ -262,8 +265,9 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
         frame::compress_qlf1(&handle, &symbols)
     } else if adaptive {
         frame::compress_adaptive(&handle, &symbols, &FrameOptions::default())
+            .map_err(|e| e.to_string())?
     } else {
-        frame::compress(&handle, &symbols)
+        frame::compress(&handle, &symbols).map_err(|e| e.to_string())?
     };
     std::fs::write(&output, &framed).map_err(|e| e.to_string())?;
     println!(
@@ -801,7 +805,11 @@ fn cmd_launch(args: &Args) -> Result<(), String> {
     let exe = std::env::current_exe()
         .map_err(|e| format!("cannot locate the qlc binary: {e}"))?;
     let timeout_s = template.timeout.as_secs_f64();
-    let mut children = Vec::with_capacity(world);
+    // Every spawned worker goes straight into a kill-on-drop Fleet:
+    // any `?` below (spawn failure mid-roster, a wait error, garbage
+    // output) reaps the rest of the fleet instead of leaking workers
+    // that would otherwise linger until their own timeouts.
+    let mut fleet = dist::Fleet::new();
     for rank in 0..world {
         let mut argv: Vec<String> = vec![
             "worker".to_string(),
@@ -832,14 +840,11 @@ fn cmd_launch(args: &Args) -> Result<(), String> {
         cmd.args(argv);
         cmd.stdout(std::process::Stdio::piped());
         cmd.stderr(std::process::Stdio::piped());
-        children
-            .push(cmd.spawn().map_err(|e| format!("spawn rank {rank}: {e}"))?);
+        fleet.push(cmd.spawn().map_err(|e| format!("spawn rank {rank}: {e}"))?);
     }
     // Poll the whole fleet so one rank's failure surfaces immediately
     // (and kills the rest) instead of stalling behind rank 0's full
     // rendezvous timeout and leaking orphan workers.
-    let mut slots: Vec<Option<std::process::Child>> =
-        children.into_iter().map(Some).collect();
     let mut outputs: Vec<Option<std::process::Output>> =
         (0..world).map(|_| None).collect();
     let mut failed: Option<(usize, String)> = None;
@@ -847,17 +852,11 @@ fn cmd_launch(args: &Args) -> Result<(), String> {
     while remaining > 0 && failed.is_none() {
         let mut progressed = false;
         for rank in 0..world {
-            let status = match slots[rank].as_mut() {
-                None => continue,
-                Some(child) => child
-                    .try_wait()
-                    .map_err(|e| format!("wait for rank {rank}: {e}"))?,
-            };
-            let Some(status) = status else { continue };
-            let child = slots[rank].take().expect("child present");
-            let out = child
-                .wait_with_output()
-                .map_err(|e| format!("collect rank {rank}: {e}"))?;
+            if outputs[rank].is_some() {
+                continue;
+            }
+            let Some(status) = fleet.try_wait(rank)? else { continue };
+            let out = fleet.take_output(rank)?;
             remaining -= 1;
             progressed = true;
             if !status.success() {
@@ -876,16 +875,7 @@ fn cmd_launch(args: &Args) -> Result<(), String> {
         }
     }
     if let Some((rank, stderr)) = failed {
-        for slot in &mut slots {
-            if let Some(child) = slot.as_mut() {
-                let _ = child.kill();
-            }
-        }
-        for slot in &mut slots {
-            if let Some(mut child) = slot.take() {
-                let _ = child.wait();
-            }
-        }
+        fleet.kill_all();
         return Err(format!("worker rank {rank} failed: {stderr}"));
     }
     let mut reports: Vec<Json> = Vec::with_capacity(world);

@@ -11,7 +11,10 @@
 //! buffers exactly the way the threaded backend is bounded by its
 //! channel depth.  A configurable progress timeout turns a stalled or
 //! silent peer into an `Err`, mirroring the threaded backend's
-//! `recv_timeout` failure mode.
+//! `recv_timeout` failure mode; an overall per-call deadline cap
+//! ([`NetConfig::hop_timeout`]) additionally fails a *trickling* peer
+//! whose byte-at-a-time progress would reset the stall deadline
+//! forever.
 //!
 //! Frame ordering is validated on both directions: the link stamps a
 //! per-direction hop ordinal (incremented after each `last` chunk) and
@@ -38,6 +41,18 @@ pub struct NetConfig {
     /// Maximum time with zero forward progress (no byte written or
     /// read) before `send`/`recv` gives up with an `Err`.
     pub io_timeout: Duration,
+    /// Hard cap on one whole `send`/`recv` call, **regardless** of
+    /// progress.  The progress timeout alone is gameable: a peer
+    /// trickling one byte per poll interval resets it forever and
+    /// never completes a frame.  This cap turns that pathology into an
+    /// `Err` too.  Defaults to 10× `io_timeout`; size it for the
+    /// largest chunk a link legitimately moves.
+    pub hop_timeout: Duration,
+    /// Whether `hop_timeout` was set explicitly
+    /// ([`NetConfig::with_hop_timeout`]); [`NetConfig::with_timeout`]
+    /// re-derives the default 10× cap only while this is unset, so the
+    /// two builders compose in either order.
+    hop_explicit: bool,
     /// Wire tag of the transport codec both endpoints agreed on
     /// apriori (tables are never shipped per hop); stamped on outgoing
     /// frames and enforced on inbound ones.
@@ -46,11 +61,29 @@ pub struct NetConfig {
 
 impl NetConfig {
     pub fn new(codec_tag: u8) -> NetConfig {
-        NetConfig { io_timeout: Duration::from_secs(30), codec_tag }
+        NetConfig {
+            io_timeout: Duration::from_secs(30),
+            hop_timeout: Duration::from_secs(300),
+            hop_explicit: false,
+            codec_tag,
+        }
     }
 
+    /// Set the progress timeout; the overall per-call cap follows at
+    /// its default 10× relationship unless it was set explicitly with
+    /// [`NetConfig::with_hop_timeout`].
     pub fn with_timeout(mut self, io_timeout: Duration) -> NetConfig {
         self.io_timeout = io_timeout;
+        if !self.hop_explicit {
+            self.hop_timeout = io_timeout.saturating_mul(10);
+        }
+        self
+    }
+
+    /// Set the overall per-call deadline cap independently.
+    pub fn with_hop_timeout(mut self, hop_timeout: Duration) -> NetConfig {
+        self.hop_timeout = hop_timeout;
+        self.hop_explicit = true;
         self
     }
 }
@@ -169,8 +202,23 @@ impl Link for TcpLink {
         if last {
             self.send_hop = self.send_hop.wrapping_add(1);
         }
+        let hard_deadline = Instant::now() + self.cfg.hop_timeout;
         let mut deadline = Instant::now() + self.cfg.io_timeout;
         while self.out_pos < self.out.len() {
+            // The per-call cap is checked while the send is still
+            // incomplete — a call whose final bytes just flushed exits
+            // through the loop condition, never through this error.
+            // Trickled progress resets the stall deadline below
+            // forever; this cap is what still fails fast.
+            let now = Instant::now();
+            if now >= hard_deadline {
+                return Err(format!(
+                    "tcp send: {} bytes still queued after the {:?} \
+                     per-call deadline (peer draining too slowly?)",
+                    self.pending_out(),
+                    self.cfg.hop_timeout
+                ));
+            }
             let wrote = self.try_flush()?;
             let read = self.try_fill()?;
             if wrote || read {
@@ -192,6 +240,7 @@ impl Link for TcpLink {
     /// Pump until one complete frame is buffered, validate its framing
     /// (codec tag, hop/seq order) and hand back the [`ChunkMsg`].
     fn recv(&mut self) -> Result<ChunkMsg, String> {
+        let hard_deadline = Instant::now() + self.cfg.hop_timeout;
         let mut deadline = Instant::now() + self.cfg.io_timeout;
         loop {
             if let Some((frame, used)) = wire::decode_frame(&self.inbuf)? {
@@ -230,6 +279,19 @@ impl Link for TcpLink {
                     "tcp recv: upstream peer disconnected mid-frame"
                         .to_string()
                 });
+            }
+            // The per-call cap is checked only after the frame-decode
+            // attempt above failed, so bytes that just completed a
+            // frame are always decoded before the deadline can reject
+            // them.  A trickling peer makes progress every poll and
+            // never trips the stall deadline; this cap does.
+            let now = Instant::now();
+            if now >= hard_deadline {
+                return Err(format!(
+                    "tcp recv: no complete frame after the {:?} per-call \
+                     deadline (peer trickling?)",
+                    self.cfg.hop_timeout
+                ));
             }
             let read = self.try_fill()?;
             let wrote = self.try_flush()?;
@@ -363,6 +425,45 @@ mod tests {
         });
         assert_eq!(ta.join().unwrap(), expect);
         assert_eq!(tb.join().unwrap(), expect);
+    }
+
+    #[test]
+    fn trickling_peer_trips_the_per_call_deadline() {
+        // One byte every 20 ms is forward progress on every poll, so
+        // the 80 ms stall deadline never fires — only the overall
+        // per-call cap can fail this peer.
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_timeout(Duration::from_millis(80))
+            .with_hop_timeout(Duration::from_millis(250));
+        let (mut a, _b, mut raw) = loopback_pair(cfg);
+        let mut frame = Vec::new();
+        crate::transport::net::wire::encode_frame(
+            0,
+            TAG_RAW,
+            &msg(0, true, vec![7u8; 256]),
+            &mut frame,
+        )
+        .unwrap();
+        let writer = std::thread::spawn(move || {
+            for &byte in &frame {
+                if raw.write_all(&[byte]).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+        let t0 = Instant::now();
+        let err = a.recv().unwrap_err();
+        assert!(err.contains("per-call deadline"), "{err}");
+        // The full trickled frame would take > 5 s; the cap fails it
+        // at ~250 ms.
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "recv took {:?}",
+            t0.elapsed()
+        );
+        drop(a);
+        writer.join().unwrap();
     }
 
     #[test]

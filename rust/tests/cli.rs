@@ -95,8 +95,8 @@ fn adaptive_chunks_cli_roundtrip_and_validation() {
         .output()
         .unwrap();
     assert!(out.status.success(), "{out:?}");
-    // Bit-exact roundtrip on both decode paths.
-    for mode in ["batched", "scalar"] {
+    // Bit-exact roundtrip on every decode path.
+    for mode in ["batched", "scalar", "lanes"] {
         let restored = dir.join(format!("out.{mode}"));
         let out = qlc()
             .args([

@@ -33,13 +33,14 @@ fn full_tensor_compression_roundtrip() {
     for name in registry.known_names() {
         let handle = registry.resolve(name, &hist).unwrap();
         // Chunked QLF2 (default), small-chunk QLF2, and legacy QLF1.
-        let framed = frame::compress(&handle, &q.symbols);
+        let framed = frame::compress(&handle, &q.symbols).unwrap();
         assert_eq!(frame::decompress(&framed).unwrap(), q.symbols, "{name}");
         let small = frame::compress_with(
             &handle,
             &q.symbols,
             &FrameOptions { chunk_symbols: 1000, ..Default::default() },
-        );
+        )
+        .unwrap();
         assert_eq!(frame::decompress(&small).unwrap(), q.symbols, "{name}");
         let v1 = frame::compress_qlf1(&handle, &q.symbols);
         assert_eq!(frame::decompress(&v1).unwrap(), q.symbols, "{name}");
@@ -236,7 +237,7 @@ fn trace_roundtrip_preserves_compressibility() {
     assert_eq!(back.symbols, symbols);
     let hist = Histogram::from_symbols(&back.symbols);
     let handle = CodecRegistry::global().resolve("qlc", &hist).unwrap();
-    let framed = frame::compress(&handle, &back.symbols);
+    let framed = frame::compress(&handle, &back.symbols).unwrap();
     assert!(framed.len() < symbols.len());
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -292,7 +293,7 @@ fn corrupted_frames_never_panic() {
     let mut rng = Rng::new(99);
     for name in ["huffman", "qlc", "elias-gamma", "eg2", "raw"] {
         let handle = CodecRegistry::global().resolve(name, &hist).unwrap();
-        let frame_bytes = frame::compress(&handle, &symbols);
+        let frame_bytes = frame::compress(&handle, &symbols).unwrap();
         for _ in 0..200 {
             let mut corrupt = frame_bytes.clone();
             match rng.below(3) {
@@ -334,7 +335,7 @@ fn ocp_variant_end_to_end() {
     assert!(q.symbols.iter().all(|&s| (s & 0x7F) != 0x7F));
     let hist = Histogram::from_symbols(&q.symbols);
     let handle = CodecRegistry::global().resolve("qlc", &hist).unwrap();
-    let framed = frame::compress(&handle, &q.symbols);
+    let framed = frame::compress(&handle, &q.symbols).unwrap();
     assert_eq!(frame::decompress(&framed).unwrap(), q.symbols);
     let deq = quant.dequantize(&q);
     assert!(deq.iter().all(|v| v.is_finite()));
@@ -353,7 +354,7 @@ fn huffman_qlc_agree_on_degenerate_streams() {
         for name in ["huffman", "qlc", "qlc-t1"] {
             let handle =
                 CodecRegistry::global().resolve(name, &hist).unwrap();
-            let framed = frame::compress(&handle, &stream);
+            let framed = frame::compress(&handle, &stream).unwrap();
             assert_eq!(frame::decompress(&framed).unwrap(), stream, "{name}");
         }
     }
