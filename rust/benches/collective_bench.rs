@@ -236,7 +236,7 @@ fn main() {
         )
         .unwrap();
         let t0 = std::time::Instant::now();
-        let frames = pipe.compress_stream(&stream);
+        let frames = pipe.compress_stream(&stream).unwrap();
         let wall = t0.elapsed().as_secs_f64();
         println!(
             "  workers={workers}: {:>7.1} MB/s end-to-end ({} frames, {:.1}% compressibility)",
@@ -254,7 +254,7 @@ fn main() {
     )
     .unwrap();
     let t0 = std::time::Instant::now();
-    let (manifest, bodies) = pipe.compress_sharded(&stream, 8);
+    let (manifest, bodies) = pipe.compress_sharded(&stream, 8).unwrap();
     let wall = t0.elapsed().as_secs_f64();
     let total: usize = bodies.iter().map(|b| b.len()).sum();
     println!(

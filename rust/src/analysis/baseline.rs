@@ -1,0 +1,91 @@
+//! Baseline file support: `analysis/baseline.txt` grandfathers
+//! pre-existing findings so `qlc analyze` fails only on *new*
+//! violations.  The format is one rendered finding per line
+//! (`file:line: rule: message`), with `#` comments and blank lines
+//! ignored; `qlc analyze --update-baseline` regenerates it.
+
+use std::collections::BTreeSet;
+
+use super::rules::Finding;
+
+/// Parse a baseline file into the set of grandfathered finding lines.
+pub fn parse(text: &str) -> BTreeSet<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// Render findings into baseline-file form (deterministic: findings
+/// arrive sorted by file then line from the tree walk).
+pub fn render(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# qlc analyze baseline: grandfathered findings.\n\
+         # One rendered finding per line; `#` comments ignored.\n\
+         # Regenerate: cargo run --bin qlc -- analyze --update-baseline\n",
+    );
+    for f in findings {
+        out.push_str(&f.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Split findings into (new, grandfathered) against a baseline set.
+pub fn split<'a>(
+    findings: &'a [Finding],
+    baseline: &BTreeSet<String>,
+) -> (Vec<&'a Finding>, Vec<&'a Finding>) {
+    let mut fresh = Vec::new();
+    let mut known = Vec::new();
+    for f in findings {
+        if baseline.contains(&f.render()) {
+            known.push(f);
+        } else {
+            fresh.push(f);
+        }
+    }
+    (fresh, known)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(file: &str, line: usize) -> Finding {
+        Finding {
+            file: file.to_string(),
+            line,
+            rule: "panic-free",
+            msg: "test message".to_string(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_render_and_parse() {
+        let fs = vec![finding("src/a.rs", 3), finding("src/b.rs", 9)];
+        let set = parse(&render(&fs));
+        assert_eq!(set.len(), 2);
+        assert!(set.contains(&fs[0].render()));
+        assert!(set.contains(&fs[1].render()));
+    }
+
+    #[test]
+    fn comments_and_blanks_are_ignored() {
+        let set = parse("# header\n\n  \nsrc/a.rs:1: x: y\n");
+        assert_eq!(set.len(), 1);
+    }
+
+    #[test]
+    fn split_separates_new_from_grandfathered() {
+        let fs = vec![finding("src/a.rs", 3), finding("src/b.rs", 9)];
+        let baseline = parse(&fs[0].render());
+        let (fresh, known) = split(&fs, &baseline);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(known.len(), 1);
+        assert_eq!(fresh[0].line, 9);
+        assert_eq!(known[0].line, 3);
+    }
+}

@@ -1,0 +1,472 @@
+//! Region stripper for the `qlc analyze` linter: a tiny hand-rolled
+//! Rust lexer (no `syn`, no regex — the offline crate lints itself).
+//!
+//! [`strip`] masks comment and string *contents* to spaces (newlines
+//! preserved, so findings keep their 1-indexed line numbers into the
+//! original file), records waiver comments and safety comments before
+//! they vanish, and then blanks `#[cfg(test)]` / `#[test]` regions so
+//! the rules in [`super::rules`] only ever see real library code.
+//!
+//! The masking is deliberately lossy and deliberately forgiving: on
+//! malformed input (unterminated strings, stray quotes, arbitrary
+//! bytes) it masks to end-of-file rather than erroring — the linter
+//! must never be the thing that panics.
+
+use std::collections::BTreeMap;
+
+/// One waiver comment: `// lint: <kind>(<why>)`.  A waiver suppresses
+/// findings of the matching rule on its own line and the four lines
+/// below it (enough to cover a multi-line statement under the
+/// comment).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Waiver {
+    /// 1-indexed line of the waiver comment.
+    pub line: usize,
+    /// The waiver kind: `cast-checked`, `cap-checked`, `infallible`.
+    pub kind: String,
+}
+
+/// The stripped view of one source file.
+#[derive(Clone, Debug, Default)]
+pub struct Masked {
+    /// Source with comments, strings, char literals and test-only
+    /// regions blanked to spaces.  Line structure matches the input.
+    pub code: String,
+    /// All `lint:` waivers found in comments.
+    pub waivers: Vec<Waiver>,
+    /// 1-indexed lines whose comments state a safety invariant
+    /// (`SAFETY:` or a `# Safety` doc section).
+    pub safety_lines: Vec<usize>,
+}
+
+impl Masked {
+    /// Is a finding of `kind` at `line` waived?  (Waiver on the same
+    /// line or up to four lines above.)
+    pub fn waived(&self, line: usize, kind: &str) -> bool {
+        self.waivers
+            .iter()
+            .any(|w| w.kind == kind && w.line <= line && line - w.line <= 4)
+    }
+
+    /// Is there a safety comment adjacent to `line` (same line or up
+    /// to eight lines above — enough for a doc block plus attributes
+    /// between the comment and the `unsafe` token)?
+    pub fn has_safety_comment(&self, line: usize) -> bool {
+        self.safety_lines
+            .iter()
+            .any(|&s| s <= line && line - s <= 8)
+    }
+}
+
+/// Strip `text` down to lintable code (see the module docs).
+pub fn strip(text: &str) -> Masked {
+    let (mut code, comments) = mask_comments_and_strings(text);
+    strip_test_regions(&mut code);
+    let mut waivers = Vec::new();
+    let mut safety_lines = Vec::new();
+    for (line, comment) in comments {
+        if comment.contains("SAFETY:") || comment.contains("# Safety") {
+            safety_lines.push(line);
+        }
+        let mut rest = comment.as_str();
+        while let Some(pos) = rest.find("lint:") {
+            rest = &rest[pos + 5..];
+            let kind: String = rest
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '-')
+                .collect();
+            if !kind.is_empty() {
+                waivers.push(Waiver { line, kind });
+            }
+        }
+    }
+    Masked { code, waivers, safety_lines }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If `chars[i..]` begins a raw-string introducer (`r`/`br` plus
+/// hashes plus a quote) at an identifier boundary, the offset of the
+/// opening quote from `i` and the hash count.
+fn raw_string_intro(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return None;
+    }
+    let mut j = match chars.get(i) {
+        Some('r') => i + 1,
+        Some('b') if chars.get(i + 1) == Some(&'r') => i + 2,
+        _ => return None,
+    };
+    let hash_start = j;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j - i, j - hash_start))
+    } else {
+        None
+    }
+}
+
+/// Mask comment/string/char-literal contents to spaces (preserving
+/// newlines) and collect per-line comment text.
+fn mask_comments_and_strings(
+    text: &str,
+) -> (String, BTreeMap<usize, String>) {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(text.len());
+    let mut comments: BTreeMap<usize, String> = BTreeMap::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < n && chars[i] != '\n' {
+                comments.entry(line).or_default().push(chars[i]);
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    comments.entry(line).or_default().push_str("/*");
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth = depth.saturating_sub(1);
+                    comments.entry(line).or_default().push_str("*/");
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        comments.entry(line).or_default().push(chars[i]);
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (byte) string: no escapes, closed by `"` + same hashes.
+        if let Some((quote_off, hashes)) = raw_string_intro(&chars, i) {
+            for _ in 0..=quote_off {
+                out.push(' ');
+            }
+            i += quote_off + 1;
+            while i < n {
+                if chars[i] == '"' {
+                    let mut h = 0usize;
+                    while h < hashes && chars.get(i + 1 + h) == Some(&'#') {
+                        h += 1;
+                    }
+                    if h == hashes {
+                        for _ in 0..=hashes {
+                            out.push(' ');
+                        }
+                        i += hashes + 1;
+                        break;
+                    }
+                }
+                if chars[i] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Plain (or byte) string with escapes.
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d == '\\' && i + 1 < n {
+                    out.push(' ');
+                    if chars[i + 1] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 2;
+                    continue;
+                }
+                if d == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                if d == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime: `'x'` / `'\n'` mask, `'a` keeps.
+        if c == '\'' {
+            let literal = if chars.get(i + 1) == Some(&'\\') {
+                true
+            } else {
+                chars.get(i + 2) == Some(&'\'')
+            };
+            if literal {
+                out.push(' ');
+                i += 1;
+                while i < n {
+                    let d = chars[i];
+                    if d == '\\' && i + 1 < n {
+                        out.push(' ');
+                        if chars[i + 1] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if d == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    }
+                    if d == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+            // Lifetime: fall through and keep the quote.
+        }
+        if c == '\n' {
+            line += 1;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, comments)
+}
+
+/// Blank `#[cfg(test)]` / `#[test]` attributes and the item that
+/// follows each (to its matching close brace, or to `;` for
+/// brace-less items).  Operates on already comment/string-masked
+/// text, so attribute detection cannot be fooled by literals.
+fn strip_test_regions(code: &mut String) {
+    let chars: Vec<char> = code.chars().collect();
+    let mut masked = vec![false; chars.len()];
+    let mut i = 0usize;
+    while i < chars.len() {
+        if chars[i] == '#' && chars.get(i + 1) == Some(&'[') {
+            // Read the attribute content up to the matching `]`.
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut content = String::new();
+            while j < chars.len() && depth > 0 {
+                match chars[j] {
+                    '[' => depth += 1,
+                    ']' => depth -= 1,
+                    d if !d.is_whitespace() && depth == 1 => content.push(d),
+                    _ => {}
+                }
+                j += 1;
+            }
+            if content == "test" || content == "cfg(test)" {
+                let end = item_end(&chars, j);
+                for flag in masked.iter_mut().take(end).skip(i) {
+                    *flag = true;
+                }
+                i = end;
+                continue;
+            }
+            i = j.max(i + 1);
+            continue;
+        }
+        i += 1;
+    }
+    let mut out = String::with_capacity(code.len());
+    for (k, c) in chars.iter().enumerate() {
+        if masked[k] && *c != '\n' {
+            out.push(' ');
+        } else {
+            out.push(*c);
+        }
+    }
+    *code = out;
+}
+
+/// End (exclusive) of the item starting after an attribute: the first
+/// top-level `;` before any brace, or the close of the first brace
+/// group.
+fn item_end(chars: &[char], from: usize) -> usize {
+    let mut depth = 0usize;
+    let mut seen_brace = false;
+    let mut k = from;
+    while k < chars.len() {
+        match chars[k] {
+            '{' => {
+                depth += 1;
+                seen_brace = true;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                if seen_brace && depth == 0 {
+                    return k + 1;
+                }
+            }
+            ';' if !seen_brace && depth == 0 => return k + 1,
+            _ => {}
+        }
+        k += 1;
+    }
+    chars.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, Config};
+
+    #[test]
+    fn comments_and_strings_are_masked() {
+        let src = "let x = \"a.unwrap()\"; // b.unwrap()\nlet y = 1;\n";
+        let m = strip(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(m.code.contains("let x ="));
+        assert!(m.code.contains("let y = 1;"));
+        assert_eq!(m.code.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_masked() {
+        let src = "let a = r#\"x.unwrap()\"#; let b = 'u'; let c = '\\n';";
+        let m = strip(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(!m.code.contains('\''));
+    }
+
+    #[test]
+    fn lifetimes_survive_masking() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }";
+        let m = strip(src);
+        assert_eq!(m.code, src);
+    }
+
+    #[test]
+    fn waivers_and_safety_comments_are_recorded() {
+        let src = "\
+// lint: infallible(slice length checked above)
+let x = v.first();
+// SAFETY: pointer is in bounds
+unsafe { body() }
+";
+        let m = strip(src);
+        assert_eq!(m.waivers.len(), 1);
+        assert_eq!(m.waivers[0].kind, "infallible");
+        assert_eq!(m.waivers[0].line, 1);
+        assert!(m.waived(2, "infallible"));
+        assert!(!m.waived(2, "cast-checked"));
+        assert!(!m.waived(7, "infallible"), "waiver reach is bounded");
+        assert_eq!(m.safety_lines, vec![3]);
+        assert!(m.has_safety_comment(4));
+    }
+
+    #[test]
+    fn waiver_markers_inside_strings_are_ignored() {
+        let src = "let s = \"lint: infallible(nope)\";\nlet t = 1;\n";
+        let m = strip(src);
+        assert!(m.waivers.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_blanked() {
+        let src = "\
+fn lib() -> usize { 1 }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { x.unwrap(); }
+}
+fn lib2() -> usize { 2 }
+";
+        let m = strip(src);
+        assert!(!m.code.contains("unwrap"));
+        assert!(!m.code.contains("mod tests"));
+        assert!(m.code.contains("fn lib()"));
+        assert!(m.code.contains("fn lib2()"));
+        assert_eq!(m.code.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn test_attribute_on_single_fn_is_blanked() {
+        let src = "#[test]\nfn t() { panic!(\"x\") }\nfn keep() {}\n";
+        let m = strip(src);
+        assert!(!m.code.contains("panic!"));
+        assert!(m.code.contains("fn keep()"));
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_stops_at_semicolon() {
+        let src = "#[cfg(test)]\nuse crate::thing;\nfn keep() {}\n";
+        let m = strip(src);
+        assert!(!m.code.contains("thing"));
+        assert!(m.code.contains("fn keep()"));
+    }
+
+    #[test]
+    fn strip_never_panics_and_is_line_stable() {
+        prop::check(
+            "lexer strip on arbitrary bytes",
+            Config { cases: 256, ..Config::default() },
+            |rng, size| {
+                let bytes = prop::arb_bytes(rng, size);
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                let a = strip(&text);
+                // Line structure is preserved exactly.
+                if a.code.matches('\n').count() != text.matches('\n').count()
+                {
+                    return Err("newline count changed".into());
+                }
+                // String delimiters never leak into the code view.
+                if a.code.contains('"') {
+                    return Err("unmasked string quote".into());
+                }
+                // Deterministic: a second run agrees byte-for-byte.
+                let b = strip(&text);
+                if a.code != b.code
+                    || a.waivers != b.waivers
+                    || a.safety_lines != b.safety_lines
+                {
+                    return Err("strip is not deterministic".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

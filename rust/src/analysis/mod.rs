@@ -1,0 +1,111 @@
+//! `qlc analyze`: a dependency-free static-analysis pass over the
+//! crate's own source tree.
+//!
+//! The paper's argument is that a 256-entry LUT is simple enough to
+//! get right in hardware; this module gives the software reproduction
+//! the same property mechanically.  PR 5's headline bug — an
+//! unchecked `chunk.len() as u32` silently colliding with the QLF2
+//! adaptive-delta flag bit — was a *class* bug fixed at one site by
+//! hand; the five rules here (see [`rules`]) make the whole class a
+//! CI failure for wire/serde modules, unsafe kernels, and library
+//! panic paths.
+//!
+//! Everything is hand-rolled (no `syn`, no network): [`lexer`] masks
+//! comments, strings, and test-only regions; [`rules`] scans the
+//! masked view; [`baseline`] grandfathers pre-existing findings so CI
+//! fails only on new ones.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use rules::{check_file, Finding};
+
+/// Analyze every `.rs` file under `src_root` (recursively), returning
+/// findings sorted by file label then line.  Labels are
+/// `<root-name>/<relative-path>` with forward slashes — stable across
+/// platforms and working directories so baseline entries match.
+pub fn analyze_tree(src_root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let root_name = src_root
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "src".to_string());
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .map_err(|e| format!("analyze: bad path {}: {e}", path.display()))?;
+        let label = format!(
+            "{root_name}/{}",
+            rel.to_string_lossy().replace('\\', "/")
+        );
+        let bytes = fs::read(&path)
+            .map_err(|e| format!("analyze: read {}: {e}", path.display()))?;
+        let text = String::from_utf8_lossy(&bytes);
+        findings.extend(check_file(&label, &text));
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(
+    dir: &Path,
+    out: &mut Vec<PathBuf>,
+) -> Result<(), String> {
+    let entries = fs::read_dir(dir)
+        .map_err(|e| format!("analyze: read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry
+            .map_err(|e| format!("analyze: walk {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_tree(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("qlc-analysis-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("src/transport/net")).unwrap();
+        dir
+    }
+
+    #[test]
+    fn analyze_tree_walks_and_labels_findings() {
+        let dir = tmp_tree("walk");
+        fs::write(
+            dir.join("src/transport/net/bad.rs"),
+            "fn put(n: usize, o: &mut Vec<u8>) {\n    \
+             o.extend_from_slice(&(n as u32).to_le_bytes());\n}\n",
+        )
+        .unwrap();
+        fs::write(dir.join("src/clean.rs"), "pub fn ok() -> u8 { 0 }\n")
+            .unwrap();
+        let findings = analyze_tree(&dir.join("src")).unwrap();
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].file, "src/transport/net/bad.rs");
+        assert_eq!(findings[0].line, 2);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn analyze_tree_errors_on_missing_root() {
+        let dir = std::env::temp_dir().join("qlc-analysis-absent");
+        let _ = fs::remove_dir_all(&dir);
+        assert!(analyze_tree(&dir).is_err());
+    }
+}

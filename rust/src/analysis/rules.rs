@@ -1,0 +1,739 @@
+//! The `qlc analyze` rule set — five rules targeting this repo's
+//! proven bug classes (see ROADMAP.md § Static analysis):
+//!
+//! * **unchecked-narrowing** (L1): `as u8/u16/u32` casts in wire and
+//!   serde modules must follow a visible range check on the cast
+//!   operand earlier in the same function, or carry a
+//!   `// lint: cast-checked(<why>)` waiver.  PR 5's chunk-table
+//!   length-collision bug was exactly this shape.
+//! * **cap-before-alloc** (L2): `Vec::with_capacity` / `vec![x; n]` /
+//!   `.reserve(n)` sized by a runtime value in a wire module needs an
+//!   earlier cap comparison in the same function, or a
+//!   `// lint: cap-checked(<why>)` waiver.
+//! * **panic-free** (L3): `unwrap()` / `expect(` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in library code
+//!   needs a `// lint: infallible(<why>)` waiver.  `main.rs` is
+//!   exempt (the CLI may die loudly); tests and benches never reach
+//!   the rules because the lexer blanks `#[cfg(test)]` regions and
+//!   the tree walk only visits `src/`.
+//! * **safety-comment** (L4): every `unsafe` token needs an adjacent
+//!   `// SAFETY:` comment (or `# Safety` doc section) within the
+//!   eight lines above it.
+//! * **forbidden-construct** (L5): `transmute` and `static mut` are
+//!   rejected everywhere, with no waiver syntax.
+//!
+//! All scanning happens on the lexer's masked view, so string
+//! literals, comments, and test code can never false-positive.  The
+//! guard heuristic is deliberately crude — "some earlier line in this
+//! function mentions the same identifier next to a comparison-ish
+//! token" — because a waiver comment is cheap and reviewable, while a
+//! missed unchecked cast costs a corrupted frame.
+
+use super::lexer::{self, Masked};
+
+/// One analysis finding, rendered as `file:line: rule: message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+pub const RULE_NARROWING: &str = "unchecked-narrowing";
+pub const RULE_CAP_ALLOC: &str = "cap-before-alloc";
+pub const RULE_PANIC_FREE: &str = "panic-free";
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_FORBIDDEN: &str = "forbidden-construct";
+
+/// Tokens that read as "a range/cap check happened here".
+const GUARD_MARKS: [&str; 10] = [
+    "<", ">", "try_from", "try_into", ".min(", ".clamp(", "contains(",
+    "MAX", "CAP", "assert",
+];
+
+/// Identifier-shaped tokens that carry no information about which
+/// value is being cast or sized.
+const NOISE_IDENTS: [&str; 44] = [
+    "as", "bool", "break", "const", "continue", "crate", "else", "enum",
+    "false", "fn", "for", "if", "impl", "in", "let", "loop", "match",
+    "move", "mut", "pub", "ref", "return", "self", "Self", "static",
+    "struct", "super", "true", "u8", "u16", "u32", "u64", "u128",
+    "usize", "i8", "i16", "i32", "i64", "i128", "isize", "f32", "f64",
+    "use", "while",
+];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Identifier tokens of `text`, in order, with their char columns.
+fn idents(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut start = 0usize;
+    for (col, c) in text.chars().enumerate() {
+        if is_ident_char(c) {
+            if cur.is_empty() {
+                start = col;
+            }
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push((start, std::mem::take(&mut cur)));
+        }
+    }
+    if !cur.is_empty() {
+        out.push((start, cur));
+    }
+    out
+}
+
+/// Identifiers in `text` that plausibly name the value being cast or
+/// sized (everything minus keywords/primitive types, deduplicated).
+fn value_idents(text: &str) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for (_, id) in idents(text) {
+        if id.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+            continue;
+        }
+        if NOISE_IDENTS.contains(&id.as_str()) {
+            continue;
+        }
+        if !out.contains(&id) {
+            out.push(id);
+        }
+    }
+    out
+}
+
+/// Does `line` look like a range/cap check that mentions any of the
+/// given identifiers?  (Token-level identifier match, substring-level
+/// guard-mark match.)
+fn line_guards(line: &str, wanted: &[String]) -> bool {
+    if !GUARD_MARKS.iter().any(|m| line.contains(m)) {
+        return false;
+    }
+    idents(line).iter().any(|(_, id)| wanted.iter().any(|w| w == id))
+}
+
+/// For each 0-indexed line, the 1-indexed start line of the innermost
+/// enclosing `fn` body, if any.  Brace-depth tracking over the masked
+/// text — closures do not start a scope, only the `fn` keyword does.
+fn enclosing_fn_map(code: &str) -> Vec<Option<usize>> {
+    let mut map: Vec<Option<usize>> = vec![None];
+    let mut stack: Vec<(usize, usize)> = Vec::new(); // (fn line, depth)
+    let mut depth = 0usize;
+    let mut pending_fn: Option<usize> = None;
+    let mut line = 1usize;
+    let mut cur = String::new();
+    for c in code.chars() {
+        if is_ident_char(c) {
+            cur.push(c);
+            continue;
+        }
+        if cur == "fn" {
+            pending_fn = Some(line);
+        }
+        cur.clear();
+        match c {
+            '{' => {
+                if let Some(fl) = pending_fn.take() {
+                    stack.push((fl, depth));
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                if stack.last().is_some_and(|&(_, d)| d == depth) {
+                    stack.pop();
+                }
+            }
+            ';' => pending_fn = None,
+            '\n' => {
+                line += 1;
+                map.push(stack.last().map(|&(fl, _)| fl));
+            }
+            _ => {}
+        }
+    }
+    map
+}
+
+/// Is any line in `[from_line, to_line)` (1-indexed, exclusive end) a
+/// guard for `wanted`?
+fn guarded_between(
+    lines: &[&str],
+    from_line: usize,
+    to_line: usize,
+    wanted: &[String],
+) -> bool {
+    lines
+        .iter()
+        .enumerate()
+        .skip(from_line.saturating_sub(1))
+        .take_while(|(i, _)| i + 1 < to_line)
+        .any(|(_, l)| line_guards(l, wanted))
+}
+
+/// Does this path belong to the wire/serde scope of L1/L2?
+fn in_wire_scope(path: &str) -> bool {
+    path.contains("transport/net/")
+        || path.ends_with("codecs/frame.rs")
+        || path.ends_with("codecs/qlc/serde.rs")
+}
+
+/// Run every rule over one file.  `path` is the label findings carry
+/// (forward slashes); `text` is the raw source.
+pub fn check_file(path: &str, text: &str) -> Vec<Finding> {
+    let path = path.replace('\\', "/");
+    let masked = lexer::strip(text);
+    let lines: Vec<&str> = masked.code.lines().collect();
+    let fn_map = enclosing_fn_map(&masked.code);
+    let wire = in_wire_scope(&path);
+    let panic_exempt = path.ends_with("main.rs");
+    let mut out = Vec::new();
+    for (i, raw_line) in lines.iter().enumerate() {
+        let lineno = i + 1;
+        if wire {
+            check_narrowing(
+                &path, lineno, raw_line, &lines, &fn_map, &masked, &mut out,
+            );
+            check_cap_alloc(
+                &path, lineno, raw_line, &lines, &fn_map, &masked, &mut out,
+            );
+        }
+        if !panic_exempt {
+            check_panic_free(&path, lineno, raw_line, &masked, &mut out);
+        }
+        check_safety(&path, lineno, raw_line, &masked, &mut out);
+        check_forbidden(&path, lineno, raw_line, &mut out);
+    }
+    out
+}
+
+/// L1: `<expr> as u8/u16/u32` with no earlier guard on the operand.
+fn check_narrowing(
+    path: &str,
+    lineno: usize,
+    line: &str,
+    lines: &[&str],
+    fn_map: &[Option<usize>],
+    masked: &Masked,
+    out: &mut Vec<Finding>,
+) {
+    let toks = idents(line);
+    for (k, (col, tok)) in toks.iter().enumerate() {
+        if tok != "as" {
+            continue;
+        }
+        let Some((next_col, next)) = toks.get(k + 1) else { continue };
+        if !matches!(next.as_str(), "u8" | "u16" | "u32") {
+            continue;
+        }
+        // Only whitespace may separate `as` from the target type.
+        let between: String = line
+            .chars()
+            .skip(col + 2)
+            .take(next_col - (col + 2))
+            .collect();
+        if !between.chars().all(|c| c.is_whitespace()) {
+            continue;
+        }
+        // The operand: identifiers on this line before the `as`.
+        let before: String = line.chars().take(*col).collect();
+        let wanted = value_idents(&before);
+        if wanted.is_empty() {
+            continue; // literal cast, nothing dynamic to range-check
+        }
+        if masked.waived(lineno, "cast-checked") {
+            continue;
+        }
+        let fn_start =
+            fn_map.get(lineno - 1).copied().flatten().unwrap_or(lineno);
+        // Search strictly after the `fn` line: signatures are full of
+        // `<`/`>` (generics, `->`) and mention every parameter, so
+        // including them would vacuously guard everything.
+        if guarded_between(lines, fn_start + 1, lineno, &wanted) {
+            continue;
+        }
+        let ident = wanted.last().cloned().unwrap_or_default();
+        out.push(Finding {
+            file: path.to_string(),
+            line: lineno,
+            rule: RULE_NARROWING,
+            msg: format!(
+                "narrowing `as {next}` cast of '{ident}' with no visible \
+                 range check (add one or // lint: cast-checked(why))"
+            ),
+        });
+    }
+}
+
+/// L2: allocation sized by a runtime value with no earlier cap check.
+fn check_cap_alloc(
+    path: &str,
+    lineno: usize,
+    line: &str,
+    lines: &[&str],
+    fn_map: &[Option<usize>],
+    masked: &Masked,
+    out: &mut Vec<Finding>,
+) {
+    let mut size_exprs: Vec<String> = Vec::new();
+    for pat in ["with_capacity(", ".reserve("] {
+        if let Some(pos) = line.find(pat) {
+            let after = &line[pos + pat.len()..];
+            size_exprs.push(paren_arg(after, '(', ')'));
+        }
+    }
+    if let Some(pos) = line.find("vec![") {
+        let inner = paren_arg(&line[pos + 5..], '[', ']');
+        // `vec![elem; len]` — only the length expression matters.
+        if let Some(semi) = inner.rfind(';') {
+            size_exprs.push(inner[semi + 1..].to_string());
+        }
+    }
+    for expr in size_exprs {
+        let wanted = value_idents(&expr);
+        if wanted.is_empty() {
+            continue; // constant-sized allocation
+        }
+        if masked.waived(lineno, "cap-checked") {
+            continue;
+        }
+        let fn_start =
+            fn_map.get(lineno - 1).copied().flatten().unwrap_or(lineno);
+        if guarded_between(lines, fn_start + 1, lineno, &wanted) {
+            continue;
+        }
+        let ident = wanted.last().cloned().unwrap_or_default();
+        out.push(Finding {
+            file: path.to_string(),
+            line: lineno,
+            rule: RULE_CAP_ALLOC,
+            msg: format!(
+                "allocation sized by '{ident}' with no earlier cap \
+                 comparison (add one or // lint: cap-checked(why))"
+            ),
+        });
+    }
+}
+
+/// The argument text from `after` up to the matching close delimiter
+/// (or end of line if it never closes on this line).
+fn paren_arg(after: &str, open: char, close: char) -> String {
+    let mut depth = 0usize;
+    let mut out = String::new();
+    for c in after.chars() {
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// L3: panicking constructs in library code.
+fn check_panic_free(
+    path: &str,
+    lineno: usize,
+    line: &str,
+    masked: &Masked,
+    out: &mut Vec<Finding>,
+) {
+    const PATTERNS: [&str; 6] = [
+        ".unwrap()", ".expect(", "panic!", "unreachable!", "todo!",
+        "unimplemented!",
+    ];
+    for pat in PATTERNS {
+        if !line.contains(pat) {
+            continue;
+        }
+        if masked.waived(lineno, "infallible") {
+            continue;
+        }
+        out.push(Finding {
+            file: path.to_string(),
+            line: lineno,
+            rule: RULE_PANIC_FREE,
+            msg: format!(
+                "'{pat}' in library code (return Err or \
+                 // lint: infallible(why))"
+            ),
+        });
+    }
+}
+
+/// L4: `unsafe` without an adjacent SAFETY comment.
+fn check_safety(
+    path: &str,
+    lineno: usize,
+    line: &str,
+    masked: &Masked,
+    out: &mut Vec<Finding>,
+) {
+    if !idents(line).iter().any(|(_, id)| id == "unsafe") {
+        return;
+    }
+    if masked.has_safety_comment(lineno) {
+        return;
+    }
+    out.push(Finding {
+        file: path.to_string(),
+        line: lineno,
+        rule: RULE_SAFETY,
+        msg: "`unsafe` without an adjacent // SAFETY: comment stating \
+              the invariant"
+            .to_string(),
+    });
+}
+
+/// L5: transmute / static mut, no waiver syntax.
+fn check_forbidden(
+    path: &str,
+    lineno: usize,
+    line: &str,
+    out: &mut Vec<Finding>,
+) {
+    let toks = idents(line);
+    for (k, (_, tok)) in toks.iter().enumerate() {
+        let what = if tok == "transmute" {
+            "transmute"
+        } else if tok == "static"
+            && toks.get(k + 1).is_some_and(|(_, t)| t == "mut")
+        {
+            "static mut"
+        } else {
+            continue;
+        };
+        out.push(Finding {
+            file: path.to_string(),
+            line: lineno,
+            rule: RULE_FORBIDDEN,
+            msg: format!("'{what}' is forbidden in this crate"),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIRE: &str = "src/transport/net/fixture.rs";
+    const LIB: &str = "src/collective/fixture.rs";
+
+    fn rules_of(path: &str, src: &str) -> Vec<&'static str> {
+        check_file(path, src).iter().map(|f| f.rule).collect()
+    }
+
+    // ---- L1 unchecked-narrowing ----
+
+    #[test]
+    fn narrowing_cast_without_guard_is_flagged() {
+        let src = "\
+fn put(n: usize, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+}
+";
+        let f = check_file(WIRE, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_NARROWING);
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].render().starts_with(WIRE), "{}", f[0].render());
+    }
+
+    #[test]
+    fn narrowing_cast_with_guard_passes() {
+        let src = "\
+fn put(n: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    if n > 1000 {
+        return Err(\"too big\".into());
+    }
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    Ok(())
+}
+";
+        assert!(rules_of(WIRE, src).is_empty());
+    }
+
+    #[test]
+    fn narrowing_cast_with_waiver_passes() {
+        let src = "\
+fn put(n: usize, out: &mut Vec<u8>) {
+    // lint: cast-checked(n is a table index bounded by 256 upstream)
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+}
+";
+        assert!(rules_of(WIRE, src).is_empty());
+    }
+
+    #[test]
+    fn narrowing_cast_outside_wire_scope_is_ignored() {
+        let src = "fn f(n: usize) -> u32 { n as u32 }\n";
+        assert!(rules_of("src/stats/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn literal_cast_is_ignored() {
+        let src = "fn f() -> u8 { 7 as u8 }\n";
+        assert!(rules_of(WIRE, src).is_empty());
+    }
+
+    #[test]
+    fn cast_in_string_or_comment_is_ignored() {
+        let src = "\
+fn f() -> &'static str {
+    // n as u32 would truncate here
+    \"n as u32\"
+}
+";
+        assert!(rules_of(WIRE, src).is_empty());
+    }
+
+    // ---- L2 cap-before-alloc ----
+
+    #[test]
+    fn uncapped_alloc_is_flagged() {
+        let src = "\
+fn read(len: usize) -> Vec<u8> {
+    vec![0u8; len]
+}
+";
+        let f = check_file(WIRE, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_CAP_ALLOC);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn capped_alloc_passes() {
+        let src = "\
+fn read(len: usize) -> Result<Vec<u8>, String> {
+    if len > MAX_BODY {
+        return Err(\"cap\".into());
+    }
+    Ok(vec![0u8; len])
+}
+";
+        assert!(rules_of(WIRE, src).is_empty());
+    }
+
+    #[test]
+    fn with_capacity_variants_are_flagged_and_waivable() {
+        let bad = "\
+fn f(n: usize) {
+    let mut v = Vec::with_capacity(n);
+    v.reserve(n);
+}
+";
+        assert_eq!(rules_of(WIRE, bad), vec![RULE_CAP_ALLOC, RULE_CAP_ALLOC]);
+        let waived = "\
+fn f(n: usize) {
+    // lint: cap-checked(n mirrors an in-memory buffer length)
+    let mut v: Vec<u8> = Vec::with_capacity(n);
+}
+";
+        assert!(rules_of(WIRE, waived).is_empty());
+    }
+
+    #[test]
+    fn constant_sized_alloc_passes() {
+        let src = "fn f() -> Vec<u8> { Vec::with_capacity(256) }\n";
+        assert!(rules_of(WIRE, src).is_empty());
+    }
+
+    // ---- L3 panic-free ----
+
+    #[test]
+    fn unwrap_in_library_is_flagged() {
+        let src = "fn f(v: &[u8]) -> u8 { *v.first().unwrap() }\n";
+        let f = check_file(LIB, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_PANIC_FREE);
+    }
+
+    #[test]
+    fn waived_unwrap_passes() {
+        let src = "\
+fn f(v: &[u8]) -> u8 {
+    // lint: infallible(caller guarantees non-empty)
+    *v.first().unwrap()
+}
+";
+        assert!(rules_of(LIB, src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_test_code_is_ignored() {
+        let src = "\
+fn lib() -> usize { 1 }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        std::fs::read(\"x\").unwrap();
+        panic!(\"boom\");
+    }
+}
+";
+        assert!(rules_of(LIB, src).is_empty());
+    }
+
+    #[test]
+    fn main_rs_is_exempt_from_panic_free() {
+        let src = "fn main() { run().unwrap(); }\n";
+        assert!(rules_of("src/main.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_macros_are_flagged() {
+        let src = "\
+fn f(x: u8) {
+    if x > 3 {
+        panic!(\"x\");
+    }
+    unreachable!()
+}
+";
+        assert_eq!(
+            rules_of(LIB, src),
+            vec![RULE_PANIC_FREE, RULE_PANIC_FREE]
+        );
+    }
+
+    #[test]
+    fn unwrap_or_variants_pass() {
+        let src = "fn f(v: Option<u8>) -> u8 { v.unwrap_or(0) }\n";
+        assert!(rules_of(LIB, src).is_empty());
+    }
+
+    // ---- L4 safety-comment ----
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let src = "\
+fn f(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+";
+        let f = check_file(LIB, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_SAFETY);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_passes() {
+        let src = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads
+    unsafe { *p }
+}
+";
+        assert!(rules_of(LIB, src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_with_safety_doc_section_passes() {
+        let src = "\
+/// Reads a byte.
+///
+/// # Safety
+/// `p` must be valid for reads.
+unsafe fn read(p: *const u8) -> u8 {
+    // SAFETY: contract forwarded to the caller.
+    unsafe { *p }
+}
+";
+        assert!(rules_of(LIB, src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_string_is_ignored() {
+        let src = "fn f() -> &'static str { \"unsafe\" }\n";
+        assert!(rules_of(LIB, src).is_empty());
+    }
+
+    // ---- L5 forbidden-construct ----
+
+    #[test]
+    fn transmute_is_flagged() {
+        let src = "\
+fn f(x: u32) -> f32 {
+    // SAFETY: same size
+    unsafe { std::mem::transmute(x) }
+}
+";
+        let f = check_file(LIB, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_FORBIDDEN);
+    }
+
+    #[test]
+    fn static_mut_is_flagged_even_in_main() {
+        let src = "static mut COUNTER: u32 = 0;\nfn main() {}\n";
+        let f = check_file("src/main.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_FORBIDDEN);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn plain_static_passes() {
+        let src = "static NAME: &str = \"qlc\";\n";
+        assert!(rules_of(LIB, src).is_empty());
+    }
+
+    // ---- scope plumbing ----
+
+    #[test]
+    fn guard_in_previous_function_does_not_leak() {
+        let src = "\
+fn checked(n: usize) -> bool {
+    n < 100
+}
+fn put(n: usize, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+}
+";
+        let f = check_file(WIRE, src);
+        assert_eq!(f.len(), 1, "guard must not leak across fns: {f:?}");
+        assert_eq!(f[0].line, 5);
+    }
+
+    #[test]
+    fn all_five_rules_fire_on_a_seeded_fixture() {
+        let src = "\
+static mut GLOBAL: u32 = 0;
+fn bad(n: usize, v: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    out.push((n as u8).to_le_bytes()[0]);
+    let first = *v.first().unwrap();
+    let x: f32 = unsafe { std::mem::transmute(n as u32) };
+    out.push(first.wrapping_add(x as u8));
+    out
+}
+";
+        let rules: Vec<&str> = rules_of(WIRE, src);
+        for rule in [
+            RULE_NARROWING,
+            RULE_CAP_ALLOC,
+            RULE_PANIC_FREE,
+            RULE_SAFETY,
+            RULE_FORBIDDEN,
+        ] {
+            assert!(rules.contains(&rule), "{rule} missing from {rules:?}");
+        }
+    }
+}

@@ -176,6 +176,8 @@ where
         }
         workers
             .into_iter()
+            // lint: infallible(join fails only when a worker panicked;
+            // re-raising that panic on the caller is the contract)
             .map(|w| w.join().expect("frame worker panicked"))
             .collect::<Vec<_>>()
     });
@@ -263,7 +265,7 @@ fn encode_payload_chunks<'a>(
             }
             Ok(())
         });
-    encode_ok.unwrap(); // Infallible: encoding cannot fail
+    encode_ok.unwrap(); // lint: infallible(the error type is Infallible)
     (chunks, payloads, deltas)
 }
 
@@ -365,6 +367,8 @@ pub fn compress_adaptive(
 pub fn compress_qlf1(handle: &CodecHandle, symbols: &[u8]) -> Vec<u8> {
     let header = handle.wire_header();
     let payload = handle.codec().encode_to_vec(symbols);
+    debug_assert!(header.len() <= u32::MAX as usize);
+    // lint: cap-checked(sized by this encoder's own output, not wire input)
     let mut out =
         Vec::with_capacity(FIXED_HEADER + header.len() + payload.len());
     out.extend_from_slice(&MAGIC_QLF1);
@@ -394,6 +398,7 @@ pub fn decompress_with(
     if data.len() < FIXED_HEADER {
         return Err(bad("frame too short"));
     }
+    // lint: infallible(fixed slices of the FIXED_HEADER-checked prefix)
     let magic: [u8; 4] = data[0..4].try_into().unwrap();
     let tag = data[4];
     let n = u64::from_le_bytes(data[6..14].try_into().unwrap());
@@ -401,6 +406,7 @@ pub fn decompress_with(
         return Err(bad("declared symbol count exceeds address space"));
     }
     let n = n as usize;
+    // lint: infallible(fixed 4-byte slice of the checked prefix)
     let hlen = u32::from_le_bytes(data[14..18].try_into().unwrap()) as usize;
     if data.len() - FIXED_HEADER < hlen {
         return Err(bad("truncated header"));
@@ -454,6 +460,7 @@ fn parse_chunk_table(
     if body.len() < 4 {
         return Err(bad("truncated chunk count"));
     }
+    // lint: infallible(4-byte slice; body.len() >= 4 checked above)
     let n_chunks =
         u32::from_le_bytes(body[0..4].try_into().unwrap()) as usize;
     let table = &body[4..];
@@ -468,6 +475,7 @@ fn parse_chunk_table(
     let mut total_payload = 0u64;
     let mut entries = Vec::with_capacity(n_chunks);
     for e in table.chunks_exact(8) {
+        // lint: infallible(chunks_exact(8) yields 8-byte entries)
         let raw_n = u32::from_le_bytes(e[0..4].try_into().unwrap());
         let has_delta = raw_n & CHUNK_DELTA_BIT != 0;
         if has_delta && !adaptive {
@@ -480,6 +488,7 @@ fn parse_chunk_table(
         if chunk_n > CHUNK_SYMBOL_CAP {
             return Err(bad("chunk symbol count exceeds the chunk cap"));
         }
+        // lint: infallible(4-byte slice of an 8-byte table entry)
         let plen = u32::from_le_bytes(e[4..8].try_into().unwrap()) as usize;
         // Per-chunk sanity: ≥ 1 bit per symbol.
         if chunk_n as u64 > plen as u64 * 8 {
@@ -524,6 +533,7 @@ fn split_chunk_delta(payload: &[u8]) -> Result<(&[u8], &[u8]), CodecError> {
     if payload.len() < 2 {
         return Err(bad("chunk too short for its table delta length"));
     }
+    // lint: infallible(2-byte slice; payload.len() >= 2 checked above)
     let dlen = u16::from_le_bytes(payload[0..2].try_into().unwrap()) as usize;
     if payload.len() - 2 < dlen {
         return Err(bad("chunk too short for its table delta"));
@@ -616,6 +626,8 @@ fn decompress_qlf2_body(
 ) -> Result<Vec<u8>, CodecError> {
     let (entries, payload_area) = parse_chunk_table(n, body, adaptive)?;
     let handle = CodecRegistry::global().resolve_wire(tag, header)?;
+    // lint: cap-checked(parse_chunk_table bounds n and the entry count
+    // against the actual body length before returning)
     let mut out = vec![0u8; n];
     let mut jobs: Vec<(&[u8], &mut [u8], bool)> =
         Vec::with_capacity(entries.len());
@@ -719,6 +731,8 @@ impl ShardManifest {
     }
 
     pub fn to_bytes(&self) -> Vec<u8> {
+        debug_assert!(self.header.len() <= u32::MAX as usize);
+        debug_assert!(self.shard_symbols.len() <= u32::MAX as usize);
         let mut out = Vec::with_capacity(
             MANIFEST_FIXED + self.header.len() + 4 + self.shard_symbols.len() * 8,
         );
@@ -750,10 +764,12 @@ impl ShardManifest {
         if data[5] != 0 {
             return Err(bad("unsupported manifest flags"));
         }
+        // lint: infallible(fixed 8-byte slice of the checked prefix)
         let total = u64::from_le_bytes(data[6..14].try_into().unwrap());
         if total > usize::MAX as u64 {
             return Err(bad("declared symbol count exceeds address space"));
         }
+        // lint: infallible(fixed 4-byte slice of the checked prefix)
         let hlen =
             u32::from_le_bytes(data[14..18].try_into().unwrap()) as usize;
         let rest = &data[MANIFEST_FIXED..];
@@ -764,6 +780,7 @@ impl ShardManifest {
         if rest.len() < 4 {
             return Err(bad("truncated shard count"));
         }
+        // lint: infallible(4-byte slice; rest.len() >= 4 checked above)
         let n_shards =
             u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
         let table = &rest[4..];
@@ -778,6 +795,7 @@ impl ShardManifest {
         let mut shard_symbols = Vec::with_capacity(n_shards);
         let mut sum = 0u64;
         for e in table[..n_shards * 8].chunks_exact(8) {
+            // lint: infallible(chunks_exact(8) yields 8-byte entries)
             let n = u64::from_le_bytes(e.try_into().unwrap());
             sum = sum
                 .checked_add(n)
@@ -847,6 +865,17 @@ pub fn compress_sharded(
     opts: &FrameOptions,
 ) -> Result<(ShardManifest, Vec<Vec<u8>>), CodecError> {
     let plan = shard_plan(symbols.len(), n_shards);
+    // The shard header's index field is u32; a plan only grows past it
+    // on > 4 Gi-symbol inputs split into > 4 Gi shards, but truncating
+    // there would scatter shards onto colliding indices.
+    if plan.len() > u32::MAX as usize {
+        return Err(CodecError::BadHeader(format!(
+            "{} shards overflow the u32 shard-index field",
+            plan.len()
+        )));
+    }
+    // lint: cap-checked(one slot per planned shard; plan.len() is
+    // bounded by the symbol count and checked against u32::MAX above)
     let mut bodies: Vec<Vec<u8>> = vec![Vec::new(); plan.len()];
     let jobs: Vec<(ShardDesc, &mut Vec<u8>)> =
         plan.iter().copied().zip(bodies.iter_mut()).collect();
@@ -856,6 +885,8 @@ pub fn compress_sharded(
         for (desc, slot) in band {
             *slot = compress_shard(
                 handle,
+                // lint: cast-checked(plan.len() <= u32::MAX is enforced
+                // above, and every index is < plan.len())
                 desc.index as u32,
                 &symbols[desc.start..desc.start + desc.n_symbols],
                 &serial,
@@ -900,6 +931,7 @@ pub fn decompress_sharded(
         if s[0..4] != MAGIC_SHARD {
             return Err(bad("bad shard magic"));
         }
+        // lint: infallible(fixed slices of the SHARD_FIXED-checked prefix)
         let index =
             u32::from_le_bytes(s[4..8].try_into().unwrap()) as usize;
         let n = u64::from_le_bytes(s[8..16].try_into().unwrap());

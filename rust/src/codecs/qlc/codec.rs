@@ -88,6 +88,7 @@ impl QlcCodec {
                 size: scheme.areas[a].size as u32,
             })
             .collect();
+        // lint: infallible(AreaScheme::new rejects schemes with no areas)
         let max_code_bits = (0..scheme.num_areas())
             .map(|a| scheme.code_length(a))
             .max()
@@ -211,7 +212,7 @@ impl QlcCodec {
     /// AVX2 burst for a full 8-lane group: one vector shift peeks all
     /// eight area prefixes per round; suffix extraction and the rank
     /// LUT stay scalar (suffix widths vary per lane).
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     fn lockstep_avx2(
         &self,
         lanes: &mut [Lane<'_, '_>],
@@ -224,7 +225,7 @@ impl QlcCodec {
             for (w, lane) in words.iter_mut().zip(lanes.iter()) {
                 *w = lane.cur.word();
             }
-            // Safety: this path is only dispatched after
+            // SAFETY: this path is only dispatched after
             // `lanes_avx2_available()` reported AVX2.
             let areas = unsafe {
                 crate::codecs::kernel::peek_top_bits_x8(&words, prefix_bits)
@@ -348,7 +349,7 @@ impl DecodeKernel for QlcCodec {
             if unfinished == 0 {
                 return Ok(());
             }
-            #[cfg(target_arch = "x86_64")]
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
             if unfinished == 8
                 && lanes.len() == 8
                 && crate::codecs::kernel::lanes_avx2_available()

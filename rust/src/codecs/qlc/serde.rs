@@ -38,10 +38,13 @@ pub fn rank_from_bytes(data: &[u8]) -> Result<[u8; 256], String> {
 /// Serialize scheme + rank order to the binary header format.
 pub fn to_bytes(codec: &QlcCodec) -> Vec<u8> {
     let scheme = codec.scheme();
+    // lint: cap-checked(sized by the in-memory scheme: ≤ 256 areas)
     let mut out = Vec::with_capacity(2 + scheme.num_areas() * 3 + 256);
+    // lint: cast-checked(AreaScheme::new caps prefix_bits at 8)
     out.push(scheme.prefix_bits as u8);
     for a in &scheme.areas {
         out.extend_from_slice(&a.size.to_le_bytes());
+        // lint: cast-checked(AreaScheme::new caps symbol_bits at 8)
         out.push(a.symbol_bits as u8);
     }
     out.extend_from_slice(codec.rank_order());
@@ -53,7 +56,7 @@ pub fn from_bytes(data: &[u8], label: &str) -> Result<QlcCodec, String> {
     if data.is_empty() {
         return Err("empty qlc header".into());
     }
-    let prefix_bits = data[0] as u32;
+    let prefix_bits = u32::from(data[0]);
     if !(1..=8).contains(&prefix_bits) {
         return Err(format!("bad prefix_bits {prefix_bits}"));
     }
@@ -66,7 +69,7 @@ pub fn from_bytes(data: &[u8], label: &str) -> Result<QlcCodec, String> {
     for i in 0..k {
         let off = 1 + i * 3;
         let size = u16::from_le_bytes([data[off], data[off + 1]]);
-        let bits = data[off + 2] as u32;
+        let bits = u32::from(data[off + 2]);
         areas.push(Area { size, symbol_bits: bits });
     }
     let scheme = AreaScheme::new(prefix_bits, areas)?;
@@ -119,25 +122,35 @@ pub fn to_json(codec: &QlcCodec) -> Json {
 
 /// Parse the JSON form.
 pub fn from_json(v: &Json, label: &str) -> Result<QlcCodec, String> {
-    let prefix_bits = v
+    let prefix_raw = v
         .get("prefix_bits")
         .and_then(Json::as_usize)
-        .ok_or("missing prefix_bits")? as u32;
+        .ok_or("missing prefix_bits")?;
+    // Checked narrowing: an oversized JSON value must be rejected, not
+    // silently truncated into a plausible-looking small one.
+    let prefix_bits = u32::try_from(prefix_raw)
+        .map_err(|_| format!("prefix_bits {prefix_raw} out of range"))?;
     let areas_json = v
         .get("areas")
         .and_then(Json::as_arr)
         .ok_or("missing areas")?;
+    // lint: cap-checked(sized by the already-materialized JSON array)
     let mut areas = Vec::with_capacity(areas_json.len());
     for a in areas_json {
+        let symbols = a
+            .get("symbols")
+            .and_then(Json::as_usize)
+            .ok_or("area missing symbols")?;
+        let symbol_bits = a
+            .get("symbol_bits")
+            .and_then(Json::as_usize)
+            .ok_or("area missing symbol_bits")?;
         areas.push(Area {
-            size: a
-                .get("symbols")
-                .and_then(Json::as_usize)
-                .ok_or("area missing symbols")? as u16,
-            symbol_bits: a
-                .get("symbol_bits")
-                .and_then(Json::as_usize)
-                .ok_or("area missing symbol_bits")? as u32,
+            size: u16::try_from(symbols)
+                .map_err(|_| format!("area symbols {symbols} out of range"))?,
+            symbol_bits: u32::try_from(symbol_bits).map_err(|_| {
+                format!("area symbol_bits {symbol_bits} out of range")
+            })?,
         });
     }
     let scheme = AreaScheme::new(prefix_bits, areas)?;
@@ -235,6 +248,52 @@ mod tests {
         let back = from_json(&parsed, "qlc").unwrap();
         assert_eq!(back.scheme(), codec.scheme());
         assert_eq!(back.rank_order(), codec.rank_order());
+    }
+
+    /// Regression: oversized JSON integers used to be `as`-truncated
+    /// into plausible small values (e.g. `symbols: 65552` → 16, which
+    /// still sums to 256 and parses "successfully" as the wrong
+    /// scheme).  They must be rejected outright.
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn json_rejects_out_of_range_scheme_fields() {
+        let codec = sample_codec();
+        let text = to_json(&codec).to_string_pretty();
+
+        // prefix_bits = 2^32 + 3 used to truncate to 3 and round-trip.
+        let big_prefix = (1usize << 32) + 3;
+        let bad = text.replacen(
+            "\"prefix_bits\": 3",
+            &format!("\"prefix_bits\": {big_prefix}"),
+            1,
+        );
+        assert_ne!(bad, text, "fixture must actually rewrite the field");
+        let parsed = crate::util::json::Json::parse(&bad).unwrap();
+        let err = from_json(&parsed, "x").unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+
+        // symbols = 65536 + 16 used to truncate to 16 (the true area
+        // size) and be accepted.
+        let bad = text.replacen(
+            "\"symbols\": 16",
+            &format!("\"symbols\": {}", (1usize << 16) + 16),
+            1,
+        );
+        assert_ne!(bad, text, "fixture must actually rewrite the field");
+        let parsed = crate::util::json::Json::parse(&bad).unwrap();
+        let err = from_json(&parsed, "x").unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+
+        // symbol_bits = 2^32 + 4 likewise truncated to 4.
+        let bad = text.replacen(
+            "\"symbol_bits\": 4",
+            &format!("\"symbol_bits\": {}", (1usize << 32) + 4),
+            1,
+        );
+        assert_ne!(bad, text, "fixture must actually rewrite the field");
+        let parsed = crate::util::json::Json::parse(&bad).unwrap();
+        let err = from_json(&parsed, "x").unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
     }
 
     #[test]

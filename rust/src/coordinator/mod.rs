@@ -118,6 +118,9 @@ impl Pipeline {
             let metrics = metrics.clone();
             handles.push(thread::spawn(move || loop {
                 let job = {
+                    // lint: infallible(worker-pool mutex: poisoned only
+                    // if a sibling worker already panicked, and then
+                    // this thread cannot make progress anyway)
                     let guard = rx.lock().expect("job queue");
                     guard.recv()
                 };
@@ -132,6 +135,8 @@ impl Pipeline {
                         slice,
                         &FrameOptions::serial(),
                     )
+                    // lint: infallible(job slices are chunk_size-bounded,
+                    // far under the QLF2 chunk cap)
                     .expect("pipeline chunks stay under the QLF2 chunk cap"),
                     Some(index) => frame::compress_shard(
                         &handle,
@@ -139,10 +144,14 @@ impl Pipeline {
                         slice,
                         &FrameOptions::serial(),
                     )
+                    // lint: infallible(job slices are chunk_size-bounded,
+                    // far under the QLF2 chunk cap)
                     .expect("pipeline shards stay under the QLF2 chunk cap"),
                 };
                 let dt = t0.elapsed().as_secs_f64();
                 {
+                    // lint: infallible(metrics mutex: poisoned only if a
+                    // sibling worker already panicked)
                     let mut m = metrics.lock().expect("metrics");
                     m.jobs += 1;
                     if job.shard.is_some() {
@@ -165,8 +174,8 @@ impl Pipeline {
                 }
             }));
         }
-        let (wire_tag, wire_header) =
-            wire_identity.expect("at least one worker resolved");
+        let (wire_tag, wire_header) = wire_identity
+            .ok_or("pipeline: no worker resolved a codec identity")?;
         Ok(Pipeline {
             tx: Some(tx),
             rx_done,
@@ -185,8 +194,13 @@ impl Pipeline {
         &self,
         stream: Arc<Vec<u8>>,
         descs: Vec<(usize, usize, Option<u32>)>,
-    ) -> Vec<Vec<u8>> {
-        let tx = self.tx.as_ref().expect("pipeline already shut down");
+    ) -> Result<Vec<Vec<u8>>, String> {
+        // A shut-down pipeline is a caller-reachable state (shutdown()
+        // is public), so this is an error, not a panic.
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or("pipeline already shut down; create a new Pipeline")?;
         let total = descs.len();
         let mut results: Vec<Option<Vec<u8>>> = vec![None; total];
         let mut submitted = 0usize;
@@ -205,20 +219,33 @@ impl Pipeline {
                 match tx.try_send(job) {
                     Ok(()) => submitted += 1,
                     Err(std::sync::mpsc::TrySendError::Full(_)) => break,
-                    Err(e) => panic!("pipeline send: {e}"),
+                    Err(e) => {
+                        return Err(format!(
+                            "pipeline send failed (worker pool died): {e}"
+                        ))
+                    }
                 }
             }
-            let done = self.rx_done.recv().expect("pipeline drain");
+            let done = self.rx_done.recv().map_err(|_| {
+                "pipeline drain failed: worker pool disconnected"
+                    .to_string()
+            })?;
             results[done.seq] = Some(done.bytes);
             let _ = (done.n_symbols, done.codec_seconds);
             received += 1;
         }
-        results.into_iter().map(|r| r.expect("all chunks done")).collect()
+        results
+            .into_iter()
+            .map(|r| r.ok_or_else(|| "pipeline lost a chunk".to_string()))
+            .collect()
     }
 
     /// Compress a full stream: chunk, fan out, re-assemble in order.
     /// Returns the ordered frames.
-    pub fn compress_stream(&self, symbols: &[u8]) -> Vec<Vec<u8>> {
+    pub fn compress_stream(
+        &self,
+        symbols: &[u8],
+    ) -> Result<Vec<Vec<u8>>, String> {
         let stream = Arc::new(symbols.to_vec());
         let descs = chunk_spans(symbols.len(), self.chunk_size)
             .into_iter()
@@ -236,33 +263,40 @@ impl Pipeline {
         &self,
         symbols: &[u8],
         n_shards: usize,
-    ) -> (ShardManifest, Vec<Vec<u8>>) {
+    ) -> Result<(ShardManifest, Vec<Vec<u8>>), String> {
         let plan = frame::shard_plan(symbols.len(), n_shards);
         let stream = Arc::new(symbols.to_vec());
         let descs = plan
             .iter()
             .map(|d| (d.start, d.n_symbols, Some(d.index as u32)))
             .collect();
-        let bodies = self.run_jobs(stream, descs);
+        let bodies = self.run_jobs(stream, descs)?;
         let manifest = ShardManifest::new(
             self.wire_tag,
             self.wire_header.clone(),
             plan.iter().map(|d| d.n_symbols as u64).collect(),
         );
-        (manifest, bodies)
+        Ok((manifest, bodies))
     }
 
     /// Convenience: compress and decompress back, returning the
     /// reconstructed stream (used by integration tests).
-    pub fn roundtrip(&self, symbols: &[u8]) -> Vec<u8> {
-        self.compress_stream(symbols)
-            .iter()
-            .flat_map(|f| frame::decompress(f).expect("pipeline frame"))
-            .collect()
+    pub fn roundtrip(&self, symbols: &[u8]) -> Result<Vec<u8>, String> {
+        let mut out = Vec::with_capacity(symbols.len());
+        for f in self.compress_stream(symbols)? {
+            out.extend(frame::decompress(&f)?);
+        }
+        Ok(out)
     }
 
     pub fn metrics(&self) -> PipelineMetrics {
-        self.metrics.lock().expect("metrics").clone()
+        // A poisoned metrics mutex (a worker panicked mid-update) still
+        // holds valid-enough counters; return them instead of
+        // propagating the panic to the caller.
+        self.metrics
+            .lock()
+            .map(|m| m.clone())
+            .unwrap_or_else(|poisoned| poisoned.into_inner().clone())
     }
 
     /// Graceful shutdown (also runs on drop).
@@ -300,7 +334,7 @@ mod tests {
         let (symbols, hist) = sample(512 * 1024, 1);
         let cfg = PipelineConfig { workers: 4, chunk_size: 10_000, queue_depth: 4 };
         let pipe = Pipeline::new(cfg, "qlc", &hist).unwrap();
-        assert_eq!(pipe.roundtrip(&symbols), symbols);
+        assert_eq!(pipe.roundtrip(&symbols).unwrap(), symbols);
     }
 
     #[test]
@@ -319,8 +353,8 @@ mod tests {
         )
         .unwrap();
         assert_eq!(
-            one.compress_stream(&symbols),
-            many.compress_stream(&symbols),
+            one.compress_stream(&symbols).unwrap(),
+            many.compress_stream(&symbols).unwrap(),
             "frame content must not depend on worker count"
         );
     }
@@ -334,7 +368,7 @@ mod tests {
             &hist,
         )
         .unwrap();
-        let (manifest, shards) = pipe.compress_sharded(&symbols, 5);
+        let (manifest, shards) = pipe.compress_sharded(&symbols, 5).unwrap();
         // Worker pool and direct scoped-thread encode agree byte for
         // byte (and so does the manifest).
         let handle =
@@ -370,7 +404,7 @@ mod tests {
             &hist,
         )
         .unwrap();
-        let frames = pipe.compress_stream(&symbols);
+        let frames = pipe.compress_stream(&symbols).unwrap();
         let m = pipe.metrics();
         assert_eq!(m.jobs as usize, frames.len());
         assert_eq!(m.input_bytes as usize, symbols.len());
@@ -389,9 +423,9 @@ mod tests {
             &hist,
         )
         .unwrap();
-        assert_eq!(pipe.roundtrip(&[]), Vec::<u8>::new());
+        assert_eq!(pipe.roundtrip(&[]).unwrap(), Vec::<u8>::new());
         let data = vec![7u8, 8, 9];
-        assert_eq!(pipe.roundtrip(&data), data);
+        assert_eq!(pipe.roundtrip(&data).unwrap(), data);
     }
 
     #[test]
@@ -405,7 +439,7 @@ mod tests {
         .unwrap();
         // 256 jobs through a depth-2 queue: backpressure must not
         // deadlock or reorder.
-        assert_eq!(pipe.roundtrip(&symbols), symbols);
+        assert_eq!(pipe.roundtrip(&symbols).unwrap(), symbols);
     }
 
     #[test]
@@ -415,6 +449,23 @@ mod tests {
             Pipeline::new(PipelineConfig::default(), "raw", &hist).unwrap();
         pipe.shutdown();
         pipe.shutdown();
+    }
+
+    /// Regression: compressing through a shut-down pipeline used to
+    /// panic on an `expect` inside `run_jobs`; `shutdown()` is public,
+    /// so that state is caller-reachable and must be an `Err`.
+    #[test]
+    fn compress_after_shutdown_is_an_error_not_a_panic() {
+        let (symbols, hist) = sample(4096, 9);
+        let mut pipe =
+            Pipeline::new(PipelineConfig::default(), "raw", &hist).unwrap();
+        pipe.shutdown();
+        let err = pipe.compress_stream(&symbols).unwrap_err();
+        assert!(err.contains("shut down"), "{err}");
+        assert!(pipe.compress_sharded(&symbols, 2).is_err());
+        assert!(pipe.roundtrip(&symbols).is_err());
+        // Metrics stay readable after shutdown.
+        assert_eq!(pipe.metrics().jobs, 0);
     }
 
     #[test]

@@ -27,8 +27,13 @@
 //!   (feature `pjrt`; needs the `xla` + `anyhow` crates, see
 //!   `Cargo.toml`);
 //! * [`util`] — offline-environment substrates (RNG, JSON, CLI, bench,
-//!   property testing).
+//!   property testing);
+//! * [`analysis`] — the `qlc analyze` invariant linter: a
+//!   dependency-free static-analysis pass over this crate's own source
+//!   (wire-format casts, cap-before-alloc, panic-free library paths,
+//!   SAFETY-documented unsafe, forbidden constructs).
 
+pub mod analysis;
 pub mod bitstream;
 pub mod codecs;
 pub mod collective;

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   tables      regenerate the paper's figures/tables (DESIGN.md §5)
-//!   analyze     PMF/entropy/codec comparison for generated or trace data
+//!   analyze     static-analysis linter over the crate's own source
+//!   entropy     PMF/entropy/codec comparison for generated or trace data
 //!   compress    compress a raw symbol file into a self-describing frame
 //!   decompress  invert `compress`
 //!   datagen     write calibrated symbol traces to a directory
@@ -42,7 +43,7 @@ const VALUE_OPTS: &[&str] = &[
     "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
     "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
     "name", "prefix", "rank", "world", "listen", "connect", "timeout-s",
-    "decode",
+    "decode", "src", "baseline",
 ];
 
 fn main() -> ExitCode {
@@ -57,6 +58,7 @@ fn main() -> ExitCode {
     let result = match args.subcommand.as_deref() {
         Some("tables") => cmd_tables(&args),
         Some("analyze") => cmd_analyze(&args),
+        Some("entropy") => cmd_entropy(&args),
         Some("compress") => cmd_compress(&args),
         Some("decompress") => cmd_decompress(&args),
         Some("datagen") => cmd_datagen(&args),
@@ -88,7 +90,14 @@ const HELP: &str = "qlc — Quad Length Codes for lossless e4m3 compression
 USAGE: qlc <subcommand> [options]
 
   tables     [--fig N | --table N | --all] [--seed S] [--scale K] [--json]
-  analyze    [--kind ffn1_act|ffn2_act|weight|wgrad|agrad] [--n SYMBOLS]
+  analyze    [--src DIR] [--baseline FILE] [--update-baseline] [--deny-new]
+             (dependency-free invariant linter over the crate source:
+              unchecked-narrowing, cap-before-alloc, panic-free,
+              safety-comment, forbidden-construct; prints
+              file:line: rule: message and exits non-zero on findings
+              not grandfathered by the baseline — failing on new
+              findings is the default, --deny-new names it for CI)
+  entropy    [--kind ffn1_act|ffn2_act|weight|wgrad|agrad] [--n SYMBOLS]
              [--dir TRACES --name NAME] [--json]
   compress   <in> <out> --codec raw|huffman|qlc|qlc-t1|qlc-t2|elias-*|egK
              [--qlf1]   (legacy single-payload frame; default is
@@ -176,6 +185,62 @@ fn load_symbols(args: &Args) -> Result<(String, Vec<u8>), String> {
 }
 
 fn cmd_analyze(args: &Args) -> Result<(), String> {
+    use qlc::analysis::{self, baseline};
+    let src = match args.opt("src") {
+        Some(dir) => PathBuf::from(dir),
+        None => ["src", "rust/src"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or("cannot locate the crate source tree; pass --src DIR")?,
+    };
+    let baseline_path = match args.opt("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => src
+            .parent()
+            .unwrap_or(Path::new("."))
+            .join("analysis/baseline.txt"),
+    };
+    let findings = analysis::analyze_tree(&src)?;
+    if args.has_flag("update-baseline") {
+        if let Some(dir) = baseline_path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        std::fs::write(&baseline_path, baseline::render(&findings))
+            .map_err(|e| e.to_string())?;
+        println!(
+            "wrote {} finding(s) to {}",
+            findings.len(),
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let known = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => baseline::parse(&text),
+        Err(_) => Default::default(),
+    };
+    let (fresh, grandfathered) = baseline::split(&findings, &known);
+    for f in &fresh {
+        println!("{}", f.render());
+    }
+    println!(
+        "qlc analyze: {} file finding(s), {} baselined, {} new",
+        findings.len(),
+        grandfathered.len(),
+        fresh.len()
+    );
+    if fresh.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            "{} new analysis finding(s); fix, waive, or re-baseline with \
+             --update-baseline",
+            fresh.len()
+        ))
+    }
+}
+
+fn cmd_entropy(args: &Args) -> Result<(), String> {
     let (label, symbols) = load_symbols(args)?;
     let pmf = Histogram::from_symbols(&symbols).pmf();
     let art = report::codec_comparison("ANALYZE", &label, &pmf);
@@ -641,7 +706,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let n_shards = args.opt_usize("shards", 0).map_err(|e| e.to_string())?;
     let t0 = std::time::Instant::now();
     let (label, units) = if n_shards > 0 {
-        let (manifest, shards) = pipe.compress_sharded(&symbols, n_shards);
+        let (manifest, shards) = pipe.compress_sharded(&symbols, n_shards)?;
         println!(
             "manifest: {} shards, {} header bytes shared once",
             manifest.n_shards(),
@@ -649,7 +714,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         );
         ("shards", shards.len())
     } else {
-        ("jobs", pipe.compress_stream(&symbols).len())
+        ("jobs", pipe.compress_stream(&symbols)?.len())
     };
     let wall = t0.elapsed().as_secs_f64();
     let m = pipe.metrics();

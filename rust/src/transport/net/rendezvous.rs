@@ -76,6 +76,7 @@ fn read_msg(
         return Err("rendezvous: bad handshake magic".to_string());
     }
     let kind = head[4];
+    // lint: infallible(fixed 4-byte slices of a 17-byte array)
     let rank = u32::from_le_bytes(head[5..9].try_into().unwrap());
     let world = u32::from_le_bytes(head[9..13].try_into().unwrap());
     let len = u32::from_le_bytes(head[13..17].try_into().unwrap()) as usize;
@@ -204,6 +205,8 @@ fn gather_roster(
     world: usize,
     timeout: Duration,
 ) -> Result<Vec<String>, String> {
+    // lint: cap-checked(form_ring rejects world > u32::MAX before the
+    // roster starts; a launcher-chosen world is not hostile input)
     let mut addrs: Vec<Option<String>> = vec![None; world];
     addrs[0] = advertised;
     let mut peers: Vec<TcpStream> = Vec::with_capacity(world - 1);
@@ -243,8 +246,8 @@ fn gather_roster(
     }
     let table: Vec<String> = addrs
         .into_iter()
-        .map(|a| a.expect("roster complete: every rank reported once"))
-        .collect();
+        .collect::<Option<Vec<String>>>()
+        .ok_or("rendezvous: roster incomplete (a rank never reported)")?;
     let body = table.join("\n");
     for s in &mut peers {
         write_msg(s, KIND_WELCOME, 0, world as u32, body.as_bytes())?;
@@ -260,13 +263,10 @@ fn join_roster(
     rank: usize,
     world: usize,
 ) -> Result<Vec<String>, String> {
-    write_msg(
-        rdzv,
-        KIND_HELLO,
-        rank as u32,
-        world as u32,
-        my_ring_addr.as_bytes(),
-    )?;
+    // lint: cast-checked(form_ring rejects world > u32::MAX before any
+    // roster I/O, and validates rank < world)
+    let (rank32, world32) = (rank as u32, world as u32);
+    write_msg(rdzv, KIND_HELLO, rank32, world32, my_ring_addr.as_bytes())?;
     let (kind, _, w, body) = read_msg(rdzv)?;
     if kind != KIND_WELCOME {
         return Err(format!(
@@ -309,6 +309,14 @@ pub fn form_ring(
     }
     if rank >= world {
         return Err(format!("rank {rank} out of range for world {world}"));
+    }
+    // QRZ1 headers carry rank/world in u32 fields; a world that cannot
+    // be represented must be rejected here, before any socket I/O,
+    // instead of truncating into a different (plausible) world size.
+    if world > u32::MAX as usize {
+        return Err(format!(
+            "form_ring: world {world} exceeds the QRZ1 u32 wire field"
+        ));
     }
     let timeout = cfg.io_timeout;
 
@@ -530,6 +538,18 @@ mod tests {
         assert!(form_ring(0, 0, "127.0.0.1:1", &cfg).is_err());
         assert!(form_ring(0, 1, "127.0.0.1:1", &cfg).is_err());
         assert!(form_ring(5, 3, "127.0.0.1:1", &cfg).is_err());
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn oversized_world_is_rejected_before_io() {
+        // The QRZ1 header stores world as u32; a larger world must be
+        // an immediate Err (no sockets touched) rather than a
+        // truncated handshake a peer could mistake for a valid ring.
+        let cfg = NetConfig::new(TAG_RAW);
+        let world = (u32::MAX as usize) + 2;
+        let err = form_ring(1, world, "127.0.0.1:1", &cfg).unwrap_err();
+        assert!(err.contains("u32 wire field"), "{err}");
     }
 
     #[test]

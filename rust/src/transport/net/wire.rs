@@ -130,10 +130,12 @@ pub fn decode_frame(buf: &[u8]) -> Result<Option<(WireFrame, usize)>, String> {
         return Err(format!("unknown frame flag bits {flags:#04x}"));
     }
     let codec_tag = buf[5];
+    // lint: infallible(fixed 4-byte slices; HEADER_LEN checked above)
     let hop = u32::from_le_bytes(buf[6..10].try_into().unwrap());
     let seq = u32::from_le_bytes(buf[10..14].try_into().unwrap());
     let n_symbols = u32::from_le_bytes(buf[14..18].try_into().unwrap()) as usize;
     let n_scales = u32::from_le_bytes(buf[18..22].try_into().unwrap()) as usize;
+    // lint: infallible(fixed 4-byte slice of the length-checked header)
     let payload_len =
         u32::from_le_bytes(buf[22..26].try_into().unwrap()) as usize;
     if payload_len > MAX_PAYLOAD_BYTES {
@@ -153,6 +155,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<Option<(WireFrame, usize)>, String> {
     let payload = buf[HEADER_LEN..HEADER_LEN + payload_len].to_vec();
     let mut scales = Vec::with_capacity(n_scales);
     for c in buf[HEADER_LEN + payload_len..total].chunks_exact(4) {
+        // lint: infallible(chunks_exact(4) yields 4-byte slices)
         scales.push(f32::from_le_bytes(c.try_into().unwrap()));
     }
     let frame = WireFrame {

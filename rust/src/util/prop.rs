@@ -21,12 +21,35 @@ impl Default for Config {
     }
 }
 
+/// True when iteration counts should shrink: under Miri, or when the
+/// `QLC_MIRI=1` environment variable is set (the CI Miri job sets it
+/// so host-compiled helpers agree with the interpreted crate).
+pub fn reduced() -> bool {
+    cfg!(miri) || std::env::var("QLC_MIRI").map_or(false, |v| v == "1")
+}
+
+/// Scale an iteration/case count down for interpreted or
+/// explicitly-reduced runs: `reduced` when [`reduced`] holds, `full`
+/// otherwise.  Heavy loops in tests and benches route their counts
+/// through this so the Miri job finishes in minutes, not days.
+pub fn scaled(full: usize, reduced_count: usize) -> usize {
+    if reduced() {
+        reduced_count.min(full)
+    } else {
+        full
+    }
+}
+
 /// Run `prop(rng, size)`; panics with the failing seed on the first
-/// counterexample, after trying to re-fail at smaller sizes.
+/// counterexample, after trying to re-fail at smaller sizes.  Case
+/// counts shrink automatically under Miri / `QLC_MIRI=1` (see
+/// [`scaled`]).
 pub fn check<F>(name: &str, cfg: Config, mut prop: F)
 where
     F: FnMut(&mut Rng, usize) -> Result<(), String>,
 {
+    let cases = scaled(cfg.cases, 4);
+    let cfg = Config { cases, ..cfg };
     for case in 0..cfg.cases {
         let seed = cfg.base_seed ^ (case as u64).wrapping_mul(0xA24B_AED4_963E_E407);
         // Ramp sizes: small cases first to catch edge conditions early.
@@ -48,6 +71,8 @@ where
                 }
                 s /= 2;
             }
+            // lint: infallible(property-test harness: panicking with
+            // the reproducible failing seed IS this API's contract)
             panic!(
                 "property '{name}' failed (seed={seed:#x}, case={case}, \
                  size={}): {}",
@@ -82,6 +107,14 @@ mod tests {
         check("fails", Config { cases: 4, ..Config::default() }, |_, _| {
             Err("nope".into())
         });
+    }
+
+    #[test]
+    fn scaled_picks_a_consistent_count() {
+        let n = scaled(1000, 8);
+        assert_eq!(n, if reduced() { 8 } else { 1000 });
+        // The reduced count never exceeds the full count.
+        assert_eq!(scaled(5, 8), 5);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! CLI smoke tests: drive the `qlc` binary end-to-end through its
-//! subcommands (compress/decompress file roundtrip, tables, analyze,
-//! optimize, collective, datagen).
+//! subcommands (compress/decompress file roundtrip, tables, entropy,
+//! optimize, collective, datagen, and the `analyze` source linter).
 
 use std::path::PathBuf;
 use std::process::Command;
@@ -22,7 +22,10 @@ fn help_lists_subcommands() {
     let out = qlc().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["tables", "compress", "collective", "hw", "serve"] {
+    for cmd in
+        ["tables", "compress", "collective", "hw", "serve", "analyze",
+         "entropy"]
+    {
         assert!(text.contains(cmd), "{cmd} missing from help");
     }
 }
@@ -265,9 +268,9 @@ fn tables_json_is_parseable() {
 }
 
 #[test]
-fn analyze_reports_entropy() {
+fn entropy_reports_codec_comparison() {
     let out = qlc()
-        .args(["analyze", "--kind", "ffn2_act", "--n", "65536"])
+        .args(["entropy", "--kind", "ffn2_act", "--n", "65536"])
         .output()
         .unwrap();
     assert!(out.status.success());
@@ -278,7 +281,7 @@ fn analyze_reports_entropy() {
 }
 
 #[test]
-fn datagen_then_analyze_trace() {
+fn datagen_then_entropy_trace() {
     let dir = tmp("datagen");
     let out = qlc()
         .args([
@@ -298,7 +301,7 @@ fn datagen_then_analyze_trace() {
     assert!(dir.join("ffn1_act.syms").exists());
     let out = qlc()
         .args([
-            "analyze",
+            "entropy",
             "--dir",
             dir.to_str().unwrap(),
             "--name",
@@ -307,6 +310,102 @@ fn datagen_then_analyze_trace() {
         .output()
         .unwrap();
     assert!(out.status.success());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The committed baseline must keep the crate's own tree clean: a new
+/// finding anywhere in `src/` fails this test (and the CI analyze job)
+/// until it is fixed, waived with a reasoned `// lint:` comment, or
+/// consciously re-baselined.
+#[test]
+fn analyze_is_clean_against_the_committed_baseline() {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let out = qlc()
+        .args([
+            "analyze",
+            "--src",
+            manifest.join("src").to_str().unwrap(),
+            "--baseline",
+            manifest.join("analysis/baseline.txt").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "qlc analyze found new findings:\n{stdout}\n{stderr}"
+    );
+    assert!(stdout.contains("0 new"), "{stdout}");
+}
+
+/// Seeding each of the five rule classes into a fresh wire-scope
+/// module must make `analyze` exit non-zero and name every rule; after
+/// `--update-baseline` the same tree passes.
+#[test]
+fn analyze_flags_seeded_violations_and_baseline_grandfathers() {
+    let dir = tmp("analyze");
+    let net = dir.join("src/transport/net");
+    std::fs::create_dir_all(&net).unwrap();
+    std::fs::write(
+        net.join("seeded.rs"),
+        concat!(
+            "pub fn narrow(n: usize, out: &mut Vec<u8>) {\n",
+            "    out.extend_from_slice(&(n as u32).to_le_bytes());\n",
+            "}\n",
+            "pub fn alloc(len: usize) -> Vec<u8> {\n",
+            "    Vec::with_capacity(len)\n",
+            "}\n",
+            "pub fn boom(v: Option<u8>) -> u8 {\n",
+            "    v.unwrap()\n",
+            "}\n",
+            "pub unsafe fn danger(p: *const u8) -> u8 {\n",
+            "    unsafe { *p }\n",
+            "}\n",
+            "pub fn forbidden(x: i8) -> u8 {\n",
+            "    unsafe { std::mem::transmute(x) }\n",
+            "}\n",
+        ),
+    )
+    .unwrap();
+    let src = dir.join("src");
+    let baseline = dir.join("analysis/baseline.txt");
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "analyze",
+            "--src",
+            src.to_str().unwrap(),
+            "--baseline",
+            baseline.to_str().unwrap(),
+        ];
+        args.extend_from_slice(extra);
+        qlc().args(&args).output().unwrap()
+    };
+
+    let out = run(&["--deny-new"]);
+    assert!(!out.status.success(), "seeded violations must fail");
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    for rule in [
+        "unchecked-narrowing",
+        "cap-before-alloc",
+        "panic-free",
+        "safety-comment",
+        "forbidden-construct",
+    ] {
+        assert!(text.contains(rule), "{rule} missing from:\n{text}");
+    }
+    assert!(
+        text.contains("src/transport/net/seeded.rs:"),
+        "findings must carry file:line labels:\n{text}"
+    );
+
+    let out = run(&["--update-baseline"]);
+    assert!(out.status.success(), "{out:?}");
+    let out = run(&[]);
+    assert!(
+        out.status.success(),
+        "baselined findings must be grandfathered: {out:?}"
+    );
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

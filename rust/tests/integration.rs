@@ -110,7 +110,7 @@ fn pipeline_feeds_collective() {
     .unwrap();
     for data in &per_worker {
         let q = quant.quantize(data);
-        assert_eq!(pipe.roundtrip(&q.symbols), q.symbols);
+        assert_eq!(pipe.roundtrip(&q.symbols).unwrap(), q.symbols);
     }
 
     // Stage 2: compressed all-reduce equals raw all-reduce.
@@ -207,7 +207,7 @@ fn sharded_coordinator_roundtrip_with_shuffled_arrival() {
         &hist,
     )
     .unwrap();
-    let (manifest, mut shards) = pipe.compress_sharded(&symbols, 6);
+    let (manifest, mut shards) = pipe.compress_sharded(&symbols, 6).unwrap();
     assert_eq!(manifest.n_shards(), shards.len());
     // Manifest survives serialization (as it would ship to consumers).
     let manifest =
