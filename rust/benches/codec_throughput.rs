@@ -11,23 +11,32 @@
 //! same payload split into independent chunks, chunk-after-chunk vs
 //! lane-interleaved lockstep.
 //!
+//! New with the encode kernel: the encode side now mirrors decode —
+//! scalar `encode_scalar` (one `BitWriter::write_bits` per code) vs
+//! batched `encode_batch` (staging-word [`BitSink`]), plus a
+//! chunk-encode batched-vs-lanes section through [`LaneEncoder`].
+//!
 //! Under `QLC_BENCH_SMOKE=1` (the CI bench-smoke job) the
-//! batched-vs-scalar *and* lanes-vs-batched sections are also
-//! *gates*: the process exits non-zero if the batched QLC kernel
-//! decodes fewer symbols/sec than the scalar path, or lane decode
-//! drops below batched (with a 10% noise floor — the two fast paths
-//! sit much closer together than batched vs scalar).
+//! batched-vs-scalar sections (decode *and* encode) and the
+//! lanes-vs-batched decode section are also *gates*: the process
+//! exits non-zero if the batched QLC kernel moves fewer symbols/sec
+//! than the scalar path in either direction, or lane decode drops
+//! below batched (with a 10% noise floor — the two fast paths sit
+//! much closer together than batched vs scalar).
 //!
 //! Every throughput number also lands in a machine-readable
-//! `BENCH_5.json` (path overridable via `QLC_BENCH_JSON`), so the perf
+//! `BENCH_7.json` (path overridable via `QLC_BENCH_JSON`), so the perf
 //! trajectory is tracked run over run instead of living only in CI
 //! logs.
 
-use qlc::bitstream::BitReader;
+use qlc::bitstream::{BitReader, BitWriter};
 use qlc::codecs::frame::{self, FrameOptions};
 use qlc::codecs::huffman::decode::{TableDecoder, TreeDecoder};
 use qlc::codecs::huffman::HuffmanCodec;
-use qlc::codecs::{BitCursor, Codec, CodecRegistry, LaneDecoder, LaneJob};
+use qlc::codecs::{
+    BitCursor, BitSink, Codec, CodecRegistry, EncodeJob, EncodeKernel,
+    LaneDecoder, LaneEncoder, LaneJob,
+};
 use qlc::report;
 use qlc::util::bench::{smoke_config, smoke_scaled, Bencher};
 use qlc::util::json::Json;
@@ -51,12 +60,14 @@ fn main() {
         let symbols = report::sample_symbols(pmf, n, 7);
         let mut b = Bencher::with_config(smoke_config());
 
-        // Encode throughput + decode in both kernel modes.  Batched
-        // kernel vs scalar reference: same tables, same bits; the
+        // Encode + decode in both kernel modes.  Batched kernel vs
+        // scalar reference: same tables, same bits.  On decode the
         // delta is one refill + word-at-a-time resolution per run of
-        // codes vs per-symbol refill/EOF checks.  This is the software
-        // form of the paper's decode-speed claim.
-        println!("  [batched = DecodeKernel/BitCursor, scalar = decode_one per symbol]");
+        // codes vs per-symbol refill/EOF checks; on encode it is one
+        // staging-word insert per code (quad-packed for QLC) vs a
+        // `write_bits` shift-and-flush per code.  This is the software
+        // form of the paper's speed claim, now in both directions.
+        println!("  [batched = DecodeKernel/BitCursor + EncodeKernel/BitSink, scalar = per-symbol reference]");
         for name in ["raw", "huffman", "qlc", "qlc-t1", "elias-gamma",
                      "elias-delta", "eg3"] {
             let handle = registry.resolve(name, hist).unwrap();
@@ -68,12 +79,43 @@ fn main() {
                 encoded.len(),
                 (1.0 - encoded.len() as f64 / symbols.len() as f64) * 100.0
             );
-            let enc_tp = b
-                .bench_bytes(&format!("{label}/encode/{name}"), n as u64, || {
-                    std::hint::black_box(codec.encode_to_vec(&symbols));
-                })
+            let enc_scalar_tp = b
+                .bench_bytes(
+                    &format!("{label}/encode-scalar/{name}"),
+                    n as u64,
+                    || {
+                        let mut w = BitWriter::with_capacity(symbols.len());
+                        codec.encode_scalar(&symbols, &mut w);
+                        std::hint::black_box(w.finish().len());
+                    },
+                )
                 .throughput_mbps();
-            record(format!("{label}/encode/{name}"), enc_tp);
+            let enc_batched_tp = b
+                .bench_bytes(
+                    &format!("{label}/encode-batched/{name}"),
+                    n as u64,
+                    || {
+                        let mut sink = BitSink::with_capacity(symbols.len());
+                        codec.encode_batch(&symbols, &mut sink);
+                        std::hint::black_box(sink.finish().len());
+                    },
+                )
+                .throughput_mbps();
+            println!(
+                "  {name}: encode batched/scalar = {:.2}x ({:.1} vs {:.1} \
+                 MB/s)",
+                enc_batched_tp / enc_scalar_tp,
+                enc_batched_tp,
+                enc_scalar_tp
+            );
+            record(format!("{label}/encode-scalar/{name}"), enc_scalar_tp);
+            record(format!("{label}/encode-batched/{name}"), enc_batched_tp);
+            if name == "qlc" && enc_batched_tp < enc_scalar_tp {
+                qlc_gate_failures.push(format!(
+                    "{label}: encode batched {enc_batched_tp:.1} MB/s < \
+                     scalar {enc_scalar_tp:.1} MB/s"
+                ));
+            }
             let mut out = vec![0u8; n];
             let scalar_tp = b
                 .bench_bytes(
@@ -116,11 +158,15 @@ fn main() {
         // Batched vs lanes: the same payload split into independent
         // chunks (the QLF2/transport unit), decoded chunk-after-chunk
         // through one cursor vs lane-interleaved lockstep over 4/8
-        // cursors.  Same tables, same bits — the delta is purely the
-        // ILP of overlapping independent prefix-table chains.
+        // cursors — and, mirrored, encoded chunk-after-chunk through
+        // one sink vs lane-interleaved lockstep over 4/8 sinks.  Same
+        // tables, same bits — the delta is purely the ILP of
+        // overlapping independent table-lookup chains.
         let lane_engine = LaneDecoder::auto();
+        let lane_encoder = LaneEncoder::auto();
         println!(
-            "  [lanes = LaneDecoder x{} lockstep over independent chunks]",
+            "  [lanes = LaneDecoder/LaneEncoder x{} lockstep over \
+             independent chunks]",
             lane_engine.lanes()
         );
         let chunk_sym = (n / 64).max(1);
@@ -173,6 +219,60 @@ fn main() {
                 chunks_batched_tp,
             );
             record(format!("{label}/decode-chunks-lanes/{name}"), lanes_tp);
+            // Encode mirror: same chunks, one reused sink
+            // chunk-after-chunk vs lane-interleaved sinks.
+            let enc_chunks_batched_tp = b
+                .bench_bytes(
+                    &format!("{label}/encode-chunks-batched/{name}"),
+                    n as u64,
+                    || {
+                        let mut sink = BitSink::with_capacity(chunk_sym);
+                        let mut buf = Vec::new();
+                        for chunk in symbols.chunks(chunk_sym) {
+                            codec.encode_batch(chunk, &mut sink);
+                            sink.drain_into(&mut buf);
+                        }
+                        std::hint::black_box(buf.len());
+                    },
+                )
+                .throughput_mbps();
+            let mut lane_outs: Vec<Vec<u8>> =
+                vec![Vec::new(); payloads.len()];
+            let enc_chunks_lanes_tp = b
+                .bench_bytes(
+                    &format!("{label}/encode-chunks-lanes/{name}"),
+                    n as u64,
+                    || {
+                        for o in lane_outs.iter_mut() {
+                            o.clear();
+                        }
+                        let mut jobs: Vec<EncodeJob> = symbols
+                            .chunks(chunk_sym)
+                            .zip(lane_outs.iter_mut())
+                            .map(|(c, o)| EncodeJob { symbols: c, out: o })
+                            .collect();
+                        lane_encoder.encode_jobs(codec, &mut jobs);
+                        std::hint::black_box(
+                            lane_outs.iter().map(Vec::len).sum::<usize>(),
+                        );
+                    },
+                )
+                .throughput_mbps();
+            println!(
+                "  {name}: encode lanes/batched = {:.2}x ({:.1} vs {:.1} \
+                 MB/s)",
+                enc_chunks_lanes_tp / enc_chunks_batched_tp,
+                enc_chunks_lanes_tp,
+                enc_chunks_batched_tp
+            );
+            record(
+                format!("{label}/encode-chunks-batched/{name}"),
+                enc_chunks_batched_tp,
+            );
+            record(
+                format!("{label}/encode-chunks-lanes/{name}"),
+                enc_chunks_lanes_tp,
+            );
             // Gate with a 10% noise floor: unlike batched-vs-scalar
             // (a ~2x structural gap), lanes-vs-batched compares two
             // close fast paths, and a shared CI runner can wobble a
@@ -342,7 +442,7 @@ fn main() {
     // run, plus the gate verdicts, so the perf trajectory can be
     // tracked across commits instead of re-read from CI logs.
     let out_path = std::env::var("QLC_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_5.json".to_string());
+        .unwrap_or_else(|_| "BENCH_7.json".to_string());
     let doc = Json::obj()
         .set("bench", "codec_throughput")
         .set("symbols_per_stream", n)
@@ -365,7 +465,8 @@ fn main() {
 
     if !qlc_gate_failures.is_empty() {
         eprintln!(
-            "FAIL: QLC decode gates (batched ≥ scalar, lanes ≥ batched):\n  {}",
+            "FAIL: QLC perf gates (decode: batched ≥ scalar, lanes ≥ batched; \
+             encode: batched ≥ scalar):\n  {}",
             qlc_gate_failures.join("\n  ")
         );
         if smoke {

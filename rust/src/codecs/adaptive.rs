@@ -77,7 +77,9 @@ pub fn encode(cfg: &AdaptiveConfig, symbols: &[u8]) -> Vec<u8> {
     let mut prev_hist: Option<Histogram> = None;
     for chunk in symbols.chunks(cfg.chunk_symbols) {
         let codec = codec_for(cfg, prev_hist.as_ref());
-        codec.encode(chunk, &mut out);
+        // Chunks share one continuous (non-byte-aligned) bitstream, so
+        // this stays on the scalar writer rather than a per-chunk sink.
+        codec.encode_scalar(chunk, &mut out);
         prev_hist = Some(Histogram::from_symbols(chunk));
     }
     out.finish()

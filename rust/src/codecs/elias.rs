@@ -7,7 +7,7 @@
 //! through a frequency-rank LUT, the "universal code + LUT" hybrid
 //! ablation used in `benches/ablation_scheme.rs`.
 
-use super::kernel::{BitCursor, DecodeKernel};
+use super::kernel::{BitCursor, BitSink, DecodeKernel, EncodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
@@ -263,6 +263,84 @@ impl DecodeKernel for EliasCodec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Batched kernel path, encode side: each code's prefix and payload are
+// fused into a single (value, width) field — a gamma code for n is
+// just the integer n in `2·nbits − 1` bits (the high nbits − 1 bits of
+// that field are the zero prefix), so one masked insert replaces the
+// write_zeros + write_bits pair.  Delta and omega concatenate their
+// sub-fields into one push the same way; every fused code for n ≤ 2³²
+// is ≤ 43 bits, inside the sink's 57-bit budget.
+
+/// Gamma code of `n` as one (value, width) field.
+#[inline]
+fn gamma_code(n: u32) -> (u64, u32) {
+    let nbits = 32 - n.leading_zeros();
+    (n as u64, 2 * nbits - 1)
+}
+
+/// Delta code of `n`: gamma(bit-length) ++ low `nbits − 1` payload
+/// bits, fused.
+#[inline]
+fn delta_code(n: u32) -> (u64, u32) {
+    let nbits = 32 - n.leading_zeros();
+    let (gval, glen) = gamma_code(nbits);
+    if nbits == 1 {
+        return (gval, glen);
+    }
+    let payload = (n & ((1 << (nbits - 1)) - 1)) as u64;
+    ((gval << (nbits - 1)) | payload, glen + nbits - 1)
+}
+
+/// Omega code of `n`: the recursive length groups concatenated
+/// front-to-back plus the terminating 0 bit, fused.  At most 5 groups
+/// for 32-bit `n`, built on the stack (the scalar path's per-symbol
+/// `Vec` is the thing this kills).
+#[inline]
+fn omega_code(n: u32) -> (u64, u32) {
+    let mut groups = [(0u32, 0u32); 5];
+    let mut count = 0usize;
+    let mut m = n;
+    while m > 1 {
+        let bits = 32 - m.leading_zeros();
+        groups[count] = (m, bits);
+        count += 1;
+        m = bits - 1;
+    }
+    let mut acc = 0u64;
+    let mut len = 0u32;
+    for &(v, bits) in groups[..count].iter().rev() {
+        acc = (acc << bits) | v as u64;
+        len += bits;
+    }
+    (acc << 1, len + 1)
+}
+
+impl EncodeKernel for EliasCodec {
+    fn encode_batch(&self, symbols: &[u8], sink: &mut BitSink) {
+        match self.kind {
+            EliasKind::Gamma => {
+                for &s in symbols {
+                    let (v, len) = gamma_code(self.map[s as usize] as u32 + 1);
+                    sink.push(v, len);
+                }
+            }
+            EliasKind::Delta => {
+                for &s in symbols {
+                    let (v, len) = delta_code(self.map[s as usize] as u32 + 1);
+                    sink.push(v, len);
+                }
+            }
+            EliasKind::Omega => {
+                for &s in symbols {
+                    let (v, len) = omega_code(self.map[s as usize] as u32 + 1);
+                    sink.push(v, len);
+                }
+            }
+        }
+    }
+}
+
 impl Codec for EliasCodec {
     fn name(&self) -> String {
         if self.ranked {
@@ -272,7 +350,7 @@ impl Codec for EliasCodec {
         }
     }
 
-    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+    fn encode_scalar(&self, symbols: &[u8], out: &mut BitWriter) {
         for &s in symbols {
             self.encode_value(self.map[s as usize] as u32 + 1, out);
         }
@@ -373,6 +451,36 @@ mod tests {
                     EliasCodec::value_length(kind, n) as u64,
                     "{kind:?} n={n}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_codes_match_scalar_all_values() {
+        // The single-insert (value, width) fields must reproduce the
+        // write_zeros/write_bits scalar encoders bit-for-bit.
+        for n in 1..=300u32 {
+            for kind in [EliasKind::Gamma, EliasKind::Delta, EliasKind::Omega]
+            {
+                let mut w = BitWriter::new();
+                let (v, len) = match kind {
+                    EliasKind::Gamma => {
+                        encode_gamma(n, &mut w);
+                        gamma_code(n)
+                    }
+                    EliasKind::Delta => {
+                        encode_delta(n, &mut w);
+                        delta_code(n)
+                    }
+                    EliasKind::Omega => {
+                        encode_omega(n, &mut w);
+                        omega_code(n)
+                    }
+                };
+                let mut sink = BitSink::new();
+                sink.push(v, len);
+                assert_eq!(sink.bit_len(), w.bit_len(), "{kind:?} n={n}");
+                assert_eq!(sink.finish(), w.finish(), "{kind:?} n={n}");
             }
         }
     }

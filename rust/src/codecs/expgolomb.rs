@@ -2,7 +2,7 @@
 //! H.264 ue(v) code).  Like the Elias codecs, supports an optional
 //! frequency-rank mapping for the hybrid ablation.
 
-use super::kernel::{BitCursor, DecodeKernel};
+use super::kernel::{BitCursor, BitSink, DecodeKernel, EncodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
@@ -133,6 +133,27 @@ impl DecodeKernel for ExpGolombCodec {
     }
 }
 
+impl EncodeKernel for ExpGolombCodec {
+    /// Encode mirror of [`decode_value_cursor`]'s fused window: the
+    /// unary quotient prefix and the k-bit remainder collapse into one
+    /// (value, width) field — `q` carries its own `qbits − 1` zero
+    /// prefix, so `(q << k) | low` in `2·qbits − 1 + k` bits is the
+    /// whole code (≤ 17 + 8 bits for a 256-symbol alphabet).
+    ///
+    /// [`decode_value_cursor`]: ExpGolombCodec::decode_value_cursor
+    fn encode_batch(&self, symbols: &[u8], sink: &mut BitSink) {
+        let k = self.k;
+        let low_mask = (1u32 << k) - 1;
+        for &s in symbols {
+            let n = self.map[s as usize] as u32;
+            let q = (n >> k) + 1;
+            let qbits = 32 - q.leading_zeros();
+            let code = ((q as u64) << k) | (n & low_mask) as u64;
+            sink.push(code, (2 * qbits - 1) + k);
+        }
+    }
+}
+
 impl Codec for ExpGolombCodec {
     fn name(&self) -> String {
         if self.ranked {
@@ -142,7 +163,7 @@ impl Codec for ExpGolombCodec {
         }
     }
 
-    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+    fn encode_scalar(&self, symbols: &[u8], out: &mut BitWriter) {
         for &s in symbols {
             self.encode_value(self.map[s as usize] as u32, out);
         }

@@ -68,10 +68,10 @@
 //! The table header is written exactly once (in the manifest), so N
 //! shards cost N×16 bytes of framing instead of N table copies.
 
-use super::kernel::LaneJob;
+use super::kernel::{DecodeKernel, EncodeJob, LaneJob, MixedLaneJob};
 use super::registry::{CodecHandle, CodecRegistry};
 use super::session::{
-    chunk_spans, DecodeMode, DecoderSession, EncoderSession,
+    chunk_spans, DecodeMode, DecoderSession, EncodeMode, EncoderSession,
     DEFAULT_CHUNK_SYMBOLS,
 };
 use super::CodecError;
@@ -121,6 +121,12 @@ pub struct FrameOptions {
     /// ([`DecodeMode::Lanes`] — independent chunks within a worker
     /// band decode together), or scalar for the reference comparison.
     pub decode: DecodeMode,
+    /// Which encode path chunk encoding runs: the batched
+    /// staging-word kernel by default, lane-interleaved lockstep
+    /// ([`EncodeMode::Lanes`] — independent chunks within a worker
+    /// band encode together), or scalar for the reference comparison.
+    /// Every mode writes bit-for-bit identical frames.
+    pub encode: EncodeMode,
 }
 
 impl Default for FrameOptions {
@@ -130,6 +136,7 @@ impl Default for FrameOptions {
             threads: 0,
             adaptive_chunks: false,
             decode: DecodeMode::Batched,
+            encode: EncodeMode::Batched,
         }
     }
 }
@@ -243,7 +250,12 @@ fn encode_payload_chunks<'a>(
         .collect();
     let encode_ok: Result<(), std::convert::Infallible> =
         run_banded(jobs, threads, |band| {
-            let mut enc = handle.encoder();
+            let mut enc = handle.encoder_with(opts.encode);
+            // Under lane mode, fixed-table chunks of the band collect
+            // into one lockstep group (mirror of `decode_band_lanes`);
+            // each table-delta chunk encodes through its own
+            // chunk-local codec.  Payload bytes are mode-independent.
+            let mut fixed: Vec<EncodeJob<'_, '_>> = Vec::new();
             for (chunk, slot, delta_slot) in band {
                 if let Some((delta, codec)) =
                     tables.and_then(|t| t.refit(chunk))
@@ -255,14 +267,17 @@ fn encode_payload_chunks<'a>(
                         &(delta.len() as u16).to_le_bytes(),
                     );
                     out.extend_from_slice(&delta);
-                    EncoderSession::new(codec.as_ref())
+                    EncoderSession::with_mode(codec.as_ref(), opts.encode)
                         .encode_chunk(chunk, &mut out);
                     *slot = out;
                     *delta_slot = true;
+                } else if opts.encode == EncodeMode::Lanes {
+                    fixed.push(EncodeJob { symbols: chunk, out: slot });
                 } else {
                     *slot = enc.encode_chunk_to_vec(chunk);
                 }
             }
+            enc.encode_chunk_group(&mut fixed);
             Ok(())
         });
     encode_ok.unwrap(); // lint: infallible(the error type is Infallible)
@@ -588,32 +603,59 @@ fn rebuild_delta_codec<'a>(
     Ok((rest, chunk_codec))
 }
 
-/// Lane-mode decode of one worker band: fixed-table chunks collect
-/// into lane groups stepped in lockstep through the frame codec's
-/// tables, while each adaptive table-delta chunk rebuilds its own
-/// chunk-local tables via
-/// [`ChunkTables`](super::registry::ChunkTables) and decodes as its
-/// own (single-cursor) group — per-lane tables, so adaptive frames and
-/// lane decode compose.
+/// Lane-mode decode of one worker band.
+///
+/// A band with no table-delta chunks runs through the homogeneous lane
+/// engine (one shared table pointer, full-group AVX2 peeks).  A band
+/// that mixes adaptive table-delta chunks with fixed-table chunks
+/// rebuilds each delta chunk's codec via
+/// [`ChunkTables`](super::registry::ChunkTables) and schedules the
+/// *whole* band as mixed lockstep groups ([`MixedLaneJob`], per-lane
+/// table pointers): delta chunks of a QLC frame share the frame's
+/// [`AreaScheme`](super::qlc::AreaScheme) — same `max_code_bits` — so
+/// they join the same burst rounds instead of falling back to
+/// single-cursor decode.
 fn decode_band_lanes<'p, 'o>(
     handle: &CodecHandle,
     dec: &mut DecoderSession<'_>,
     band: Vec<(&'p [u8], &'o mut [u8], bool)>,
 ) -> Result<(), CodecError> {
-    let mut fixed: Vec<LaneJob<'p, 'o>> = Vec::with_capacity(band.len());
-    for (payload, dst, has_delta) in band {
-        if has_delta {
+    if band.iter().all(|(_, _, has_delta)| !has_delta) {
+        let mut fixed: Vec<LaneJob<'p, 'o>> = band
+            .into_iter()
+            .map(|(payload, out, _)| LaneJob { payload, out })
+            .collect();
+        return dec.decode_chunk_group(&mut fixed);
+    }
+    // Rebuild the chunk-local codecs first (kept alive in `codecs` for
+    // the lifetime of the lane group), splitting each delta payload
+    // into delta bytes and encoded remainder.
+    let mut rests: Vec<&'p [u8]> = Vec::with_capacity(band.len());
+    let mut codecs: Vec<Option<Box<dyn super::Codec>>> =
+        Vec::with_capacity(band.len());
+    for (payload, _, has_delta) in &band {
+        if *has_delta {
             let (rest, chunk_codec) = rebuild_delta_codec(handle, payload)?;
-            DecoderSession::with_mode(
-                chunk_codec.as_ref(),
-                DecodeMode::Lanes,
-            )
-            .decode_chunk(rest, dst)?;
+            rests.push(rest);
+            codecs.push(Some(chunk_codec));
         } else {
-            fixed.push(LaneJob { payload, out: dst });
+            rests.push(payload);
+            codecs.push(None);
         }
     }
-    dec.decode_chunk_group(&mut fixed)
+    let frame_kernel: &dyn DecodeKernel = handle.codec();
+    let mut jobs: Vec<MixedLaneJob<'_, 'o, '_>> = band
+        .into_iter()
+        .enumerate()
+        .map(|(i, (_, out, _))| MixedLaneJob {
+            payload: rests[i],
+            out,
+            kernel: codecs[i]
+                .as_deref()
+                .map_or(frame_kernel, |c| c as &dyn DecodeKernel),
+        })
+        .collect();
+    dec.decode_chunk_group_mixed(&mut jobs)
 }
 
 fn decompress_qlf2_body(
@@ -1858,6 +1900,160 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn encode_modes_write_identical_frames() {
+        // The encode-tentpole contract, frame-level: scalar, batched
+        // and lane encode write byte-identical frames for every codec
+        // family, at any thread count.
+        let symbols = skewed_symbols(96 * 1024, 41);
+        let hist = Histogram::from_symbols(&symbols);
+        for name in ["qlc", "huffman", "raw", "elias-delta", "eg2"] {
+            let handle = registry().resolve(name, &hist).unwrap();
+            let opts = |encode, threads| FrameOptions {
+                chunk_symbols: 8 * 1024,
+                threads,
+                encode,
+                ..Default::default()
+            };
+            let base =
+                compress_with(&handle, &symbols, &opts(EncodeMode::Scalar, 1))
+                    .unwrap();
+            for encode in [EncodeMode::Batched, EncodeMode::Lanes] {
+                for threads in [1usize, 4] {
+                    let frame = compress_with(
+                        &handle,
+                        &symbols,
+                        &opts(encode, threads),
+                    )
+                    .unwrap();
+                    assert_eq!(frame, base, "{name} {encode:?} x{threads}");
+                }
+            }
+            assert_eq!(decompress(&base).unwrap(), symbols, "{name}");
+        }
+    }
+
+    #[test]
+    fn adaptive_frames_identical_across_encode_modes() {
+        // Table-delta chunks re-encode through a chunk-local codec;
+        // that path too must be encode-mode-independent, so adaptive
+        // frames stay deterministic bytes.
+        let symbols = drifting_symbols(128 * 1024, 42);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let opts = |encode| FrameOptions {
+            chunk_symbols: 8 * 1024,
+            threads: 1,
+            encode,
+            ..Default::default()
+        };
+        let base =
+            compress_adaptive(&handle, &symbols, &opts(EncodeMode::Scalar))
+                .unwrap();
+        assert_eq!(base[5] & FLAG_ADAPTIVE_CHUNKS, FLAG_ADAPTIVE_CHUNKS);
+        for encode in [EncodeMode::Batched, EncodeMode::Lanes] {
+            let frame =
+                compress_adaptive(&handle, &symbols, &opts(encode)).unwrap();
+            assert_eq!(frame, base, "{encode:?}");
+        }
+        assert_eq!(decompress(&base).unwrap(), symbols);
+    }
+
+    #[test]
+    fn prop_encode_modes_byte_identical_frames() {
+        // Random codecs, chunkings, thread counts and (for QLC)
+        // adaptive frames: all three encode modes must write the same
+        // bytes, and the result must decode through the lane engine.
+        prop::check("frame encode modes identical", prop::Config {
+            cases: 48, ..Default::default()
+        }, |rng, size| {
+            let adaptive = rng.below(2) == 0;
+            let symbols = if adaptive {
+                drifting_symbols(size.max(64), rng.below(1 << 20))
+            } else {
+                prop::arb_bytes(rng, size)
+            };
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = ["raw", "huffman", "qlc", "elias-omega", "eg1"];
+            let name = if adaptive {
+                "qlc"
+            } else {
+                names[rng.below(names.len() as u64) as usize]
+            };
+            let handle = registry()
+                .resolve(name, &hist)
+                .map_err(|e| e.to_string())?;
+            let chunk_symbols = 1 + rng.below(2048) as usize;
+            let threads = 1 + rng.below(4) as usize;
+            let opts = |encode| FrameOptions {
+                chunk_symbols,
+                threads,
+                encode,
+                ..Default::default()
+            };
+            let emit = |encode| {
+                if adaptive {
+                    compress_adaptive(&handle, &symbols, &opts(encode))
+                } else {
+                    compress_with(&handle, &symbols, &opts(encode))
+                }
+                .map_err(|e| e.to_string())
+            };
+            let scalar = emit(EncodeMode::Scalar)?;
+            let batched = emit(EncodeMode::Batched)?;
+            let laned = emit(EncodeMode::Lanes)?;
+            if batched != scalar || laned != scalar {
+                return Err(format!("{name}: encode-mode disagreement"));
+            }
+            let back = decompress_with(&scalar, &FrameOptions {
+                decode: DecodeMode::Lanes,
+                ..FrameOptions::serial()
+            })
+            .map_err(|e| e.to_string())?;
+            if back != symbols {
+                return Err(format!("{name}: roundtrip"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_heavy_adaptive_frames_decode_in_mixed_lane_groups() {
+        // Satellite: adaptive table-delta chunks now join the lane
+        // lockstep via per-lane table pointers.  Build a frame where
+        // *most* chunks carry deltas (calibration on the full stream
+        // of two opposed halves makes nearly every chunk drift) and
+        // pin lanes ≡ batched ≡ scalar on it.
+        let symbols = drifting_symbols(256 * 1024, 43);
+        let hist = Histogram::from_symbols(&symbols);
+        let handle = registry().resolve("qlc", &hist).unwrap();
+        let frame = compress_adaptive(&handle, &symbols, &FrameOptions {
+            chunk_symbols: 4 * 1024,
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(frame[5] & FLAG_ADAPTIVE_CHUNKS, FLAG_ADAPTIVE_CHUNKS);
+        let mode_opts = |decode, threads| FrameOptions {
+            decode,
+            threads,
+            ..Default::default()
+        };
+        let batched =
+            decompress_with(&frame, &mode_opts(DecodeMode::Batched, 1))
+                .unwrap();
+        assert_eq!(batched, symbols);
+        for threads in [1usize, 4] {
+            let laned =
+                decompress_with(&frame, &mode_opts(DecodeMode::Lanes, threads))
+                    .unwrap();
+            assert_eq!(laned, batched, "threads={threads}");
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@
 pub mod build;
 pub mod decode;
 
-use super::kernel::{BitCursor, DecodeKernel};
+use super::kernel::{BitCursor, BitSink, DecodeKernel, EncodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 use crate::stats::Histogram;
@@ -80,12 +80,24 @@ impl DecodeKernel for HuffmanCodec {
     }
 }
 
+impl EncodeKernel for HuffmanCodec {
+    /// Straight from the code table into the staging word, one push
+    /// per symbol (codes are depth-limited to ≤ 48 bits, inside the
+    /// sink's 57-bit budget).
+    fn encode_batch(&self, symbols: &[u8], sink: &mut BitSink) {
+        for &s in symbols {
+            let (code, len) = self.book.code(s);
+            sink.push(code, len);
+        }
+    }
+}
+
 impl Codec for HuffmanCodec {
     fn name(&self) -> String {
         "huffman".to_string()
     }
 
-    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+    fn encode_scalar(&self, symbols: &[u8], out: &mut BitWriter) {
         for &s in symbols {
             let (code, len) = self.book.code(s);
             out.write_bits(code, len);

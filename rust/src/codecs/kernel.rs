@@ -1,7 +1,9 @@
-//! The batched decode kernel: a 64-bit buffered [`BitCursor`]
-//! (refill once, peek many), the [`DecodeKernel`] trait every codec
-//! implements, and the lane-interleaved engine ([`LaneDecoder`]) that
-//! steps several independent chunk cursors in lockstep.
+//! The batched codec kernels: a 64-bit buffered [`BitCursor`]
+//! (refill once, peek many) and its write-side mirror [`BitSink`]
+//! (accumulate codes in a staging word, spill whole words), the
+//! [`DecodeKernel`]/[`EncodeKernel`] traits every codec implements,
+//! and the lane-interleaved engines ([`LaneDecoder`]/[`LaneEncoder`])
+//! that step several independent chunk streams in lockstep.
 //!
 //! The paper's whole argument is that QLC's 3-prefix-bit + LUT
 //! structure decodes *fast*.  The scalar path
@@ -49,6 +51,27 @@
 //! lane groups and must decode **exactly** what the batched path
 //! decodes, symbol for symbol and consumed-bit for consumed-bit (the
 //! equivalence proptests below hold every registered codec to that).
+//!
+//! # The encode side
+//!
+//! Encode mirrors the same design.  The scalar path
+//! ([`Codec::encode_scalar`](super::Codec::encode_scalar)) pushes one
+//! code at a time through [`BitWriter`](crate::bitstream::BitWriter),
+//! flushing bytes as they fill.  [`EncodeKernel::encode_batch`]
+//! instead reads the codec's (code, length) LUT once per symbol and
+//! shift-ors the code into a [`BitSink`] staging word, spilling eight
+//! bytes at a time — the "single-stage encoder" structure: no per-bit
+//! loop anywhere on the hot path.  Codecs with short codes pack
+//! several per push (QLC's ≤ 13-bit codes go four to a staging word;
+//! raw bytes go seven); codecs that compute prefix + payload (Elias
+//! γ/δ/ω, Exp-Golomb) fuse both into one masked insert.
+//! `encode_batch` must produce **bit-for-bit identical** bytes to
+//! `encode_scalar` — scalar is the proptest ground truth, and the
+//! QLF2 frame format is unchanged no matter which path produced it.
+//! [`EncodeKernel::encode_lanes`] interleaves independent chunk
+//! encodes in lane-major rounds like the decode engine, and
+//! [`LaneEncoder`] tiles job lists into groups the same way
+//! [`LaneDecoder`] does.
 
 use super::CodecError;
 
@@ -193,6 +216,109 @@ impl<'a> BitCursor<'a> {
 
     pub fn remaining_bits(&self) -> u64 {
         (self.data.len() as u64) * 8 - self.consumed
+    }
+}
+
+/// A 64-bit staging-word bit writer, MSB-first — [`BitCursor`]'s
+/// write-side mirror and the batch *encode* substrate.  Codes are
+/// shift-or'd into the top of the staging word; whenever the word
+/// fills, all eight bytes spill to the byte buffer at once
+/// (big-endian, so the byte stream is identical to
+/// [`BitWriter`](crate::bitstream::BitWriter)'s bit-at-a-time /
+/// byte-at-a-time output), and [`finish`](Self::finish) /
+/// [`drain_into`](Self::drain_into) flush the ragged tail zero-padded
+/// to a byte boundary.  For any sequence of `(value, width)` pushes,
+/// the bytes are **exactly** the bytes `BitWriter::write_bits` +
+/// `finish` would produce — the kernel equivalence proptests depend
+/// on that.
+#[derive(Clone, Debug)]
+pub struct BitSink {
+    buf: Vec<u8>,
+    /// Staging word, filled from the MSB down; bits below the filled
+    /// window are always zero (so the tail flush is pre-padded).
+    word: u64,
+    /// Unfilled low bits in `word` (64 − filled).
+    free: u32,
+    /// Total bits pushed since construction / the last reset.
+    total_bits: u64,
+}
+
+impl BitSink {
+    pub fn new() -> BitSink {
+        BitSink { buf: Vec::new(), word: 0, free: 64, total_bits: 0 }
+    }
+
+    /// Pre-size the byte buffer for roughly `nbytes` of output.
+    pub fn with_capacity(nbytes: usize) -> BitSink {
+        BitSink { buf: Vec::with_capacity(nbytes), word: 0, free: 64, total_bits: 0 }
+    }
+
+    /// Append the low `n ≤ 57` bits of `code`, MSB-first.  Bits of
+    /// `code` above `n` must be zero (codecs' LUT entries and fused
+    /// prefix+payload inserts satisfy this by construction).
+    #[inline]
+    pub fn push(&mut self, code: u64, n: u32) {
+        debug_assert!(n <= 57, "push width {n} exceeds the staging budget");
+        debug_assert!(n == 64 || code >> 1 >> (n.max(1) - 1) == 0);
+        self.total_bits += n as u64;
+        if n < self.free {
+            self.free -= n;
+            self.word |= code << self.free;
+        } else {
+            // Split: the top `free` bits of the field complete the
+            // staging word, the low `over` bits seed the next one.
+            let over = n - self.free; // 0..=56
+            self.word |= if over == 0 { code } else { code >> over };
+            self.buf.extend_from_slice(&self.word.to_be_bytes());
+            self.word = if over == 0 { 0 } else { code << (64 - over) };
+            self.free = 64 - over;
+        }
+    }
+
+    /// Total bits pushed (not rounded up to bytes).
+    pub fn bit_len(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Spill the staged tail (zero-padded to a byte boundary) into the
+    /// byte buffer.
+    fn flush_tail(&mut self) {
+        let filled = 64 - self.free;
+        if filled > 0 {
+            let nbytes = ((filled + 7) / 8) as usize;
+            self.buf.extend_from_slice(&self.word.to_be_bytes()[..nbytes]);
+        }
+        self.word = 0;
+        self.free = 64;
+    }
+
+    /// Flush the tail and return the encoded bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.flush_tail();
+        self.buf
+    }
+
+    /// Flush the tail, append all bytes to `out`, and reset for reuse
+    /// — mirrors [`BitWriter::drain_into`](crate::bitstream::BitWriter::drain_into)
+    /// for per-chunk (byte-aligned) encode loops.
+    pub fn drain_into(&mut self, out: &mut Vec<u8>) {
+        self.flush_tail();
+        out.extend_from_slice(&self.buf);
+        self.reset();
+    }
+
+    /// Clear all state for reuse.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.word = 0;
+        self.free = 64;
+        self.total_bits = 0;
+    }
+}
+
+impl Default for BitSink {
+    fn default() -> BitSink {
+        BitSink::new()
     }
 }
 
@@ -349,6 +475,32 @@ impl LaneDecoder {
         }
         Ok(())
     }
+
+    /// Like [`decode_jobs`](Self::decode_jobs), but every job carries
+    /// its own kernel: lanes with different code tables (adaptive
+    /// table-delta chunks) step in the same lockstep group.  Same
+    /// prechecks, same exact-equivalence contract per lane.
+    pub fn decode_jobs_mixed(
+        &self,
+        jobs: &mut [MixedLaneJob<'_, '_, '_>],
+    ) -> Result<(), CodecError> {
+        for group in jobs.chunks_mut(self.lanes) {
+            for job in group.iter() {
+                if job.out.len() as u64 > job.payload.len() as u64 * 8 {
+                    return Err(CodecError::UnexpectedEof);
+                }
+            }
+            let kernels: Vec<&dyn DecodeKernel> =
+                group.iter().map(|job| job.kernel).collect();
+            let mut lanes: Vec<Lane<'_, '_>> = group
+                .iter_mut()
+                .map(|job| Lane::new(job.payload, &mut *job.out))
+                .collect();
+            decode_lanes_mixed(&kernels, &mut lanes)?;
+            debug_assert!(lanes.iter().all(|l| l.remaining() == 0));
+        }
+        Ok(())
+    }
 }
 
 impl Default for LaneDecoder {
@@ -388,6 +540,223 @@ pub trait DecodeKernel {
             lane.pos += n;
         }
         Ok(())
+    }
+
+    /// Upper bound on the bits one [`lane_step`](Self::lane_step)
+    /// consumes, when the codec can resolve one whole code from a
+    /// refilled staging word with no further refill or EOF checks.
+    /// `None` (the default) opts the codec out of *mixed* lockstep
+    /// groups — its lanes then decode through [`decode_batch`]
+    /// lane-after-lane, which is always correct.
+    ///
+    /// [`decode_batch`]: Self::decode_batch
+    fn lockstep_bits(&self) -> Option<u32> {
+        None
+    }
+
+    /// Resolve exactly one code for `lane` (store the symbol, consume
+    /// the bits).  Only called by the mixed-lane engine, on lanes with
+    /// ≥ [`lockstep_bits`](Self::lockstep_bits) buffered bits and at
+    /// least one symbol remaining.  Must agree with
+    /// [`decode_batch`](Self::decode_batch) symbol-for-symbol and
+    /// consumed-bit-for-bit.
+    fn lane_step(&self, lane: &mut Lane<'_, '_>) -> Result<(), CodecError> {
+        debug_assert!(
+            self.lockstep_bits().is_some(),
+            "lane_step called on a codec without lockstep support"
+        );
+        let pos = lane.pos;
+        let n = self.decode_batch(&mut lane.cur, &mut lane.out[pos..pos + 1])?;
+        lane.pos += n;
+        Ok(())
+    }
+}
+
+/// One decode job for the *mixed* lane engine: like [`LaneJob`] but
+/// carrying its own kernel, so lanes in one lockstep group may decode
+/// through different code tables (the adaptive QLF2 case: table-delta
+/// chunks ride in the same group as fixed-table chunks).
+pub struct MixedLaneJob<'d, 'o, 'k> {
+    pub payload: &'d [u8],
+    pub out: &'o mut [u8],
+    /// The per-lane table pointer.
+    pub kernel: &'k dyn DecodeKernel,
+}
+
+/// Step a group of lanes in lockstep where every lane carries its own
+/// kernel.  Lanes whose kernel reports no
+/// [`lockstep_bits`](DecodeKernel::lockstep_bits) (and lanes too close
+/// to EOF for an unchecked burst) finish through their own
+/// `decode_batch`; the rest run burst rounds sized by the minimum
+/// buffered budget across the group, exactly like the homogeneous
+/// lockstep loops.
+fn decode_lanes_mixed(
+    kernels: &[&dyn DecodeKernel],
+    lanes: &mut [Lane<'_, '_>],
+) -> Result<(), CodecError> {
+    debug_assert_eq!(kernels.len(), lanes.len());
+    loop {
+        // Plan the burst: refill every unfinished lane, retire lanes
+        // that cannot sustain unchecked steps, and size the rounds so
+        // no in-burst refill or EOF check is needed.
+        let mut rounds = usize::MAX;
+        let mut unfinished = 0usize;
+        for (lane, kernel) in lanes.iter_mut().zip(kernels.iter()) {
+            let remaining = lane.remaining();
+            if remaining == 0 {
+                continue;
+            }
+            let Some(bits) = kernel.lockstep_bits() else {
+                let pos = lane.pos;
+                let n = kernel.decode_batch(&mut lane.cur, &mut lane.out[pos..])?;
+                lane.pos += n;
+                continue;
+            };
+            let avail = lane.cur.refill_buffered();
+            if avail < bits {
+                // Near EOF: the checked batch path drains the tail.
+                let pos = lane.pos;
+                let n = kernel.decode_batch(&mut lane.cur, &mut lane.out[pos..])?;
+                lane.pos += n;
+                continue;
+            }
+            unfinished += 1;
+            rounds = rounds.min(((avail / bits) as usize).min(remaining));
+        }
+        if unfinished == 0 {
+            return Ok(());
+        }
+        for _ in 0..rounds {
+            for (lane, kernel) in lanes.iter_mut().zip(kernels.iter()) {
+                // Retired and batch-finished lanes have remaining 0;
+                // every other lane was sized for `rounds` full steps.
+                if lane.remaining() == 0 {
+                    continue;
+                }
+                kernel.lane_step(lane)?;
+            }
+        }
+    }
+}
+
+/// One independent symbol stream inside a lockstep *encode* lane
+/// group: the chunk's symbols, the read mark, and the sink its codes
+/// land in.  Each lane owns its sink, so lane-major interleaving
+/// cannot perturb any lane's output bytes.
+pub struct EncodeLane<'s> {
+    pub symbols: &'s [u8],
+    /// Next symbol index (lanes of unequal size finish at different
+    /// rounds).
+    pub pos: usize,
+    pub sink: BitSink,
+}
+
+impl<'s> EncodeLane<'s> {
+    pub fn new(symbols: &'s [u8]) -> EncodeLane<'s> {
+        // A QLC/Huffman code averages ≤ 8 bits on any input the codec
+        // would be chosen for; one byte per symbol avoids regrowth.
+        EncodeLane { symbols, pos: 0, sink: BitSink::with_capacity(symbols.len()) }
+    }
+
+    /// Symbols this lane still has to encode.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.symbols.len() - self.pos
+    }
+}
+
+/// One encode job for the lane engine: an independent chunk of
+/// symbols and the byte vector its (byte-aligned) payload is appended
+/// to.
+pub struct EncodeJob<'s, 'o> {
+    pub symbols: &'s [u8],
+    pub out: &'o mut Vec<u8>,
+}
+
+/// The lane-interleaved encode engine: [`LaneDecoder`]'s mirror.
+/// Tiles independent chunk jobs into groups of up to [`MAX_LANES`]
+/// lanes, steps each group through one codec's
+/// [`EncodeKernel::encode_lanes`], then drains each lane's sink into
+/// its job's output in job order.  Payload bytes per job are
+/// **exactly** the bytes `encode_batch` (and therefore
+/// `encode_scalar`) would produce for that job alone.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneEncoder {
+    lanes: usize,
+}
+
+impl LaneEncoder {
+    /// Runtime-selected lane width, matching [`LaneDecoder::auto`]:
+    /// 8 on AVX2-class cores, 4 otherwise.  Encode has no vector peek
+    /// yet — the width is about independent dependency chains per
+    /// out-of-order window, which the same detection proxies.
+    pub fn auto() -> LaneEncoder {
+        LaneEncoder { lanes: if lanes_avx2_available() { 8 } else { 4 } }
+    }
+
+    /// Explicit lane width; 4 and 8 are supported.
+    pub fn with_lanes(lanes: usize) -> Result<LaneEncoder, String> {
+        if lanes == 4 || lanes == 8 {
+            Ok(LaneEncoder { lanes })
+        } else {
+            Err(format!("lane width {lanes} unsupported (expected 4 or 8)"))
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Encode every job — `self.lanes` of them in lockstep at a time —
+    /// through `kernel`, appending each job's payload to its `out`.
+    pub fn encode_jobs<K: EncodeKernel + ?Sized>(
+        &self,
+        kernel: &K,
+        jobs: &mut [EncodeJob<'_, '_>],
+    ) {
+        for group in jobs.chunks_mut(self.lanes) {
+            let mut lanes: Vec<EncodeLane<'_>> =
+                group.iter().map(|job| EncodeLane::new(job.symbols)).collect();
+            kernel.encode_lanes(&mut lanes);
+            for (lane, job) in lanes.iter_mut().zip(group.iter_mut()) {
+                debug_assert_eq!(lane.remaining(), 0);
+                lane.sink.drain_into(job.out);
+            }
+        }
+    }
+}
+
+impl Default for LaneEncoder {
+    fn default() -> LaneEncoder {
+        LaneEncoder::auto()
+    }
+}
+
+/// The batched encode primitive.  See the module docs:
+/// `encode_batch` appends the codes for every symbol to `sink` and
+/// must be bit-for-bit identical to
+/// [`Codec::encode_scalar`](super::Codec::encode_scalar) on the same
+/// symbols.  Encoding every byte value is total for every registered
+/// codec, so the encode side is infallible.
+pub trait EncodeKernel {
+    fn encode_batch(&self, symbols: &[u8], sink: &mut BitSink);
+
+    /// Encode every lane to completion (`lane.pos` reaches
+    /// `lane.symbols.len()`), stepping the lanes in lockstep where the
+    /// codec supports it.  Each lane's sink must end up bit-for-bit
+    /// identical to an [`encode_batch`] of that lane's symbols alone.
+    ///
+    /// The default encodes lane-after-lane through the batched path —
+    /// correct for every codec; table-driven codecs (QLC) override it
+    /// with a genuinely interleaved lane-major loop.
+    ///
+    /// [`encode_batch`]: Self::encode_batch
+    fn encode_lanes(&self, lanes: &mut [EncodeLane<'_>]) {
+        for lane in lanes.iter_mut() {
+            let pos = lane.pos;
+            self.encode_batch(&lane.symbols[pos..], &mut lane.sink);
+            lane.pos = lane.symbols.len();
+        }
     }
 }
 
@@ -784,5 +1153,244 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn sink_known_bytes() {
+        let mut s = BitSink::new();
+        s.push(0b1, 1);
+        s.push(0b0101, 4);
+        assert_eq!(s.bit_len(), 5);
+        // Tail is zero-padded to a byte boundary, like BitWriter.
+        assert_eq!(s.finish(), vec![0b1010_1000]);
+
+        // An exact 64-bit fill spills the whole word with no tail.
+        let mut s = BitSink::new();
+        for _ in 0..8 {
+            s.push(0xAB, 8);
+        }
+        assert_eq!(s.bit_len(), 64);
+        assert_eq!(s.finish(), vec![0xAB; 8]);
+
+        // A push that straddles the word boundary splits cleanly.
+        let mut s = BitSink::new();
+        s.push(0, 57);
+        s.push((1u64 << 14) - 1, 14); // 7 bits complete word 0, 7 seed word 1
+        assert_eq!(s.finish(), vec![0, 0, 0, 0, 0, 0, 0, 1, 0xFE]);
+    }
+
+    /// The write-side mirror of `cursor_matches_bitreader`: for any
+    /// field sequence, `BitSink` must produce exactly `BitWriter`'s
+    /// bytes (the exact-output contract every `encode_batch` relies
+    /// on).
+    #[test]
+    fn sink_matches_bitwriter_on_random_fields() {
+        prop::check("sink==writer", Default::default(), |rng, size| {
+            let nfields = rng.below(size as u64 + 1) as usize;
+            let mut w = BitWriter::new();
+            let mut s = BitSink::new();
+            for _ in 0..nfields {
+                let n = 1 + rng.below(57) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                w.write_bits(v, n);
+                s.push(v, n);
+            }
+            if s.bit_len() != w.bit_len() {
+                return Err(format!(
+                    "sink counted {} bits, writer {}",
+                    s.bit_len(),
+                    w.bit_len()
+                ));
+            }
+            if s.finish() != w.finish() {
+                return Err("sink bytes diverge from writer".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Streamed per-chunk `drain_into` must equal a fresh sink's
+    /// `finish` per chunk — the reuse pattern every session encoder
+    /// depends on.
+    #[test]
+    fn sink_drain_into_matches_finish_per_chunk() {
+        let mut streamed = Vec::new();
+        let mut reference = Vec::new();
+        let mut sink = BitSink::new();
+        for chunk in 0u64..5 {
+            let mut one = BitSink::new();
+            for i in 0..37u64 {
+                let n = 1 + ((chunk * 37 + i) % 57) as u32;
+                let v = (chunk * 1_000_003 + i)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    & ((1u64 << n) - 1);
+                sink.push(v, n);
+                one.push(v, n);
+            }
+            sink.drain_into(&mut streamed);
+            reference.extend_from_slice(&one.finish());
+        }
+        assert_eq!(streamed, reference);
+        assert_eq!(sink.bit_len(), 0);
+    }
+
+    /// The encode satellite property: `encode_batch` ≡ `encode_scalar`
+    /// bit-for-bit (bytes *and* bit counts) for every registered
+    /// codec, and the batched bytes roundtrip through the batched
+    /// decoder.
+    #[test]
+    fn prop_encode_batch_equals_scalar_all_registered_codecs() {
+        let reg = CodecRegistry::global();
+        prop::check("encode batch==scalar", prop::Config {
+            cases: 64, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size);
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = reg.known_names();
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle =
+                reg.resolve(name, &hist).map_err(|e| e.to_string())?;
+            let codec = handle.codec();
+
+            let mut w = BitWriter::new();
+            codec.encode_scalar(&symbols, &mut w);
+            let scalar_bits = w.bit_len();
+            let scalar = w.finish();
+
+            let mut sink = BitSink::new();
+            codec.encode_batch(&symbols, &mut sink);
+            if sink.bit_len() != scalar_bits {
+                return Err(format!(
+                    "{name}: batched pushed {} bits, scalar wrote {}",
+                    sink.bit_len(),
+                    scalar_bits
+                ));
+            }
+            let batched = sink.finish();
+            if batched != scalar {
+                return Err(format!(
+                    "{name}: batched encode bytes diverge from scalar"
+                ));
+            }
+
+            let mut out = vec![0u8; symbols.len()];
+            let mut cur = BitCursor::new(&batched);
+            codec
+                .decode_into(&mut cur, &mut out)
+                .map_err(|e| format!("{name}: {e}"))?;
+            if out != symbols {
+                return Err(format!(
+                    "{name}: batched-encode roundtrip mismatch"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// The lane-encode satellite property: the lane engine's per-job
+    /// payloads ≡ scalar encode of each chunk alone, at both widths,
+    /// over ragged chunk splits — and the payloads roundtrip through
+    /// the lane *decoder*.
+    #[test]
+    fn prop_lane_encode_equals_scalar_all_registered_codecs() {
+        let reg = CodecRegistry::global();
+        prop::check("lane encode==scalar", prop::Config {
+            cases: 64, ..Default::default()
+        }, |rng, size| {
+            let symbols = prop::arb_bytes(rng, size);
+            let mut hist = Histogram::from_symbols(&symbols);
+            if hist.total() == 0 {
+                hist = Histogram::from_symbols(&[0]);
+            }
+            let names = reg.known_names();
+            let name = names[rng.below(names.len() as u64) as usize];
+            let handle =
+                reg.resolve(name, &hist).map_err(|e| e.to_string())?;
+            let codec = handle.codec();
+            let chunk = 1 + rng.below(size as u64) as usize;
+            let scalar_payloads: Vec<Vec<u8>> = symbols
+                .chunks(chunk)
+                .map(|c| {
+                    let mut w = BitWriter::new();
+                    codec.encode_scalar(c, &mut w);
+                    w.finish()
+                })
+                .collect();
+
+            for width in [4usize, 8] {
+                let engine = LaneEncoder::with_lanes(width)?;
+                let mut outs: Vec<Vec<u8>> =
+                    vec![Vec::new(); scalar_payloads.len()];
+                let mut jobs: Vec<EncodeJob<'_, '_>> = symbols
+                    .chunks(chunk)
+                    .zip(outs.iter_mut())
+                    .map(|(c, o)| EncodeJob { symbols: c, out: o })
+                    .collect();
+                engine.encode_jobs(codec, &mut jobs);
+                if outs != scalar_payloads {
+                    return Err(format!(
+                        "{name}: lane encode diverged at width {width}"
+                    ));
+                }
+            }
+
+            let mut decoded = vec![0u8; symbols.len()];
+            let mut jobs: Vec<LaneJob<'_, '_>> = scalar_payloads
+                .iter()
+                .zip(decoded.chunks_mut(chunk))
+                .map(|(p, o)| LaneJob { payload: p, out: o })
+                .collect();
+            LaneDecoder::auto()
+                .decode_jobs(codec, &mut jobs)
+                .map_err(|e| format!("{name}: {e}"))?;
+            if decoded != symbols {
+                return Err(format!("{name}: lane roundtrip mismatch"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_encoder_widths() {
+        assert!(LaneEncoder::with_lanes(4).is_ok());
+        assert!(LaneEncoder::with_lanes(8).is_ok());
+        assert!(LaneEncoder::with_lanes(0).is_err());
+        assert!(LaneEncoder::with_lanes(3).is_err());
+        assert!(LaneEncoder::with_lanes(16).is_err());
+        let auto = LaneEncoder::auto().lanes();
+        assert!(auto == 4 || auto == 8);
+        assert_eq!(auto, LaneDecoder::auto().lanes());
+    }
+
+    /// Mixed groups: lanes with *different* code tables (and one
+    /// no-lockstep codec) in the same group must each decode exactly
+    /// their own stream.
+    #[test]
+    fn mixed_lane_groups_decode_heterogeneous_tables() {
+        let reg = CodecRegistry::global();
+        let a_sym: Vec<u8> = (0..4001u32).map(|i| (i % 7) as u8).collect();
+        let b_sym: Vec<u8> =
+            (0..5003u32).map(|i| (255 - (i % 11)) as u8).collect();
+        let ha = reg.resolve("qlc", &Histogram::from_symbols(&a_sym)).unwrap();
+        let hb = reg.resolve("qlc", &Histogram::from_symbols(&b_sym)).unwrap();
+        let hr = reg.resolve("raw", &Histogram::from_symbols(&a_sym)).unwrap();
+        let pa = ha.codec().encode_to_vec(&a_sym);
+        let pb = hb.codec().encode_to_vec(&b_sym);
+        let pr = hr.codec().encode_to_vec(&a_sym);
+        let mut oa = vec![0u8; a_sym.len()];
+        let mut ob = vec![0u8; b_sym.len()];
+        let mut oc = vec![0u8; a_sym.len()];
+        let mut jobs = [
+            MixedLaneJob { payload: &pa, out: &mut oa, kernel: ha.codec() },
+            MixedLaneJob { payload: &pb, out: &mut ob, kernel: hb.codec() },
+            MixedLaneJob { payload: &pr, out: &mut oc, kernel: hr.codec() },
+        ];
+        LaneDecoder::auto().decode_jobs_mixed(&mut jobs).unwrap();
+        assert_eq!(oa, a_sym);
+        assert_eq!(ob, b_sym);
+        assert_eq!(oc, a_sym);
     }
 }

@@ -26,6 +26,17 @@
 //! in lockstep so the table lookups of different chunks overlap in the
 //! pipeline — the multi-cursor path behind `--decode=lanes`.
 //!
+//! Encode mirrors that structure: the primitive is
+//! [`kernel::EncodeKernel::encode_batch`], which shift-ors (code,
+//! length) LUT entries into a [`kernel::BitSink`] staging word and
+//! spills whole words — the single-stage encoder, no per-bit loop.
+//! [`Codec::encode_scalar`] keeps the one-code-per-step
+//! `BitWriter` path alive as the bit-exact ground truth (and the
+//! `--encode=scalar` CLI path), and [`LaneEncoder`] /
+//! [`EncodeKernel::encode_lanes`] interleave independent chunk
+//! encodes behind `--encode=lanes`.  Whichever path runs, the bytes
+//! are identical — the encode-equivalence proptests pin that.
+//!
 //! Block-oriented streaming goes through *sessions*:
 //! [`EncoderSession`] / [`DecoderSession`] (constructed via
 //! [`Codec::encoder`] / [`Codec::decoder`] or from any `&dyn Codec`)
@@ -54,11 +65,12 @@ mod session;
 pub mod zstd_baseline;
 
 pub use kernel::{
-    BitCursor, DecodeKernel, Lane, LaneDecoder, LaneJob, MAX_LANES,
+    BitCursor, BitSink, DecodeKernel, EncodeJob, EncodeKernel, EncodeLane,
+    Lane, LaneDecoder, LaneEncoder, LaneJob, MixedLaneJob, MAX_LANES,
 };
 pub use registry::{CodecHandle, CodecRegistry};
 pub use session::{
-    chunk_spans, DecodeMode, DecoderSession, EncoderSession,
+    chunk_spans, DecodeMode, DecoderSession, EncodeMode, EncoderSession,
     DEFAULT_CHUNK_SYMBOLS,
 };
 
@@ -91,15 +103,20 @@ impl std::error::Error for CodecError {}
 
 /// A lossless symbol codec. Implementations must satisfy, for all
 /// symbol slices `s`: `decode(encode(s), s.len()) == s` (the roundtrip
-/// property every codec's proptest asserts), and
-/// `decode_batch` ≡ `decode_scalar_into` symbol-for-symbol (asserted
-/// by the kernel equivalence proptests).
-pub trait Codec: Send + Sync + DecodeKernel {
+/// property every codec's proptest asserts),
+/// `decode_batch` ≡ `decode_scalar_into` symbol-for-symbol, and
+/// `encode_batch` ≡ `encode_scalar` bit-for-bit (both asserted by the
+/// kernel equivalence proptests).
+pub trait Codec: Send + Sync + DecodeKernel + EncodeKernel {
     /// Short identifier, e.g. "huffman", "qlc-t1".
     fn name(&self) -> String;
 
-    /// Append the codes for `symbols` to `out`.
-    fn encode(&self, symbols: &[u8], out: &mut BitWriter);
+    /// Scalar reference encode: append the codes for `symbols` to
+    /// `out`, one `write_bits` call per field.  This is the pre-kernel
+    /// behaviour, kept as the bit-exact ground truth
+    /// [`EncodeKernel::encode_batch`] is checked against (and as the
+    /// `--encode=scalar` CLI path).
+    fn encode_scalar(&self, symbols: &[u8], out: &mut BitWriter);
 
     /// Scalar reference decode: exactly `out.len()` symbols, one
     /// symbol per step through `reader`.  This is the pre-kernel
@@ -149,11 +166,12 @@ pub trait Codec: Send + Sync + DecodeKernel {
         }
     }
 
-    /// Convenience: encode to a fresh byte buffer.
+    /// Convenience: encode to a fresh byte buffer (batched kernel
+    /// path — bit-identical to the scalar path by contract).
     fn encode_to_vec(&self, symbols: &[u8]) -> Vec<u8> {
-        let mut w = BitWriter::with_capacity(symbols.len());
-        self.encode(symbols, &mut w);
-        w.finish()
+        let mut sink = BitSink::with_capacity(symbols.len());
+        self.encode_batch(symbols, &mut sink);
+        sink.finish()
     }
 
     /// Convenience: decode `n` symbols from a byte buffer (batched
@@ -222,6 +240,13 @@ pub(crate) mod testutil {
                     .map_err(|e| format!("scalar: {e}"))?;
                 if scalar != symbols {
                     return Err("scalar decode mismatch".into());
+                }
+                // The scalar encoder must produce the same bytes the
+                // batched encode_to_vec path did.
+                let mut w = BitWriter::with_capacity(symbols.len());
+                codec.encode_scalar(&symbols, &mut w);
+                if w.finish() != encoded {
+                    return Err("batched encode != scalar encode".into());
                 }
                 // encoded_bits must match the writer exactly.
                 let bits = codec.encoded_bits(&symbols);

@@ -8,7 +8,9 @@
 
 use super::scheme::AreaScheme;
 use crate::bitstream::{BitReader, BitWriter};
-use crate::codecs::kernel::{BitCursor, DecodeKernel, Lane};
+use crate::codecs::kernel::{
+    BitCursor, BitSink, DecodeKernel, EncodeKernel, EncodeLane, Lane,
+};
 use crate::codecs::{Codec, CodecError};
 use crate::stats::Pmf;
 
@@ -114,25 +116,34 @@ impl QlcCodec {
         &self.rank_to_symbol
     }
 
-    /// Paper Table 3 rows: (input symbol, mapped rank, code, length).
-    pub fn encoder_table(&self) -> Vec<(u8, u8, u32, u8)> {
-        (0..256usize)
-            .map(|s| {
-                (
-                    s as u8,
-                    self.symbol_to_rank[s],
-                    self.enc_code[s],
-                    self.enc_len[s],
-                )
-            })
-            .collect()
+    /// Paper Table 3 row for one input symbol:
+    /// (input symbol, mapped rank, code, length).
+    #[inline]
+    pub fn encoder_row(&self, s: u8) -> (u8, u8, u32, u8) {
+        let i = s as usize;
+        (s, self.symbol_to_rank[i], self.enc_code[i], self.enc_len[i])
     }
 
-    /// Paper Table 4 rows: (encoded symbol/rank, output symbol).
-    pub fn decoder_table(&self) -> Vec<(u8, u8)> {
-        (0..256usize)
-            .map(|r| (r as u8, self.rank_to_symbol[r]))
-            .collect()
+    /// Paper Table 3 rows: (input symbol, mapped rank, code, length).
+    /// A borrowed view over the LUTs the codec already holds — nothing
+    /// is rebuilt or allocated per call.
+    pub fn encoder_table(
+        &self,
+    ) -> impl Iterator<Item = (u8, u8, u32, u8)> + '_ {
+        (0..=255u8).map(|s| self.encoder_row(s))
+    }
+
+    /// Paper Table 4 row for one encoded symbol (rank):
+    /// (encoded symbol/rank, output symbol).
+    #[inline]
+    pub fn decoder_row(&self, rank: u8) -> (u8, u8) {
+        (rank, self.rank_to_symbol[rank as usize])
+    }
+
+    /// Paper Table 4 rows: (encoded symbol/rank, output symbol) — a
+    /// borrowed view, like [`encoder_table`](Self::encoder_table).
+    pub fn decoder_table(&self) -> impl Iterator<Item = (u8, u8)> + '_ {
+        (0..=255u8).map(|r| self.decoder_row(r))
     }
 
     /// Decode one symbol: a single peek covering prefix + longest
@@ -360,6 +371,88 @@ impl DecodeKernel for QlcCodec {
             self.lockstep_scalar(lanes, rounds)?;
         }
     }
+
+    /// Every QLC code resolves from one `max_code_bits`-wide window of
+    /// a refilled staging word, so table-delta chunks can ride mixed
+    /// lockstep groups next to fixed-table chunks.
+    fn lockstep_bits(&self) -> Option<u32> {
+        Some(self.max_code_bits)
+    }
+
+    fn lane_step(&self, lane: &mut Lane<'_, '_>) -> Result<(), CodecError> {
+        let w = lane.cur.word();
+        self.resolve_lane_code(
+            lane,
+            w,
+            (w >> (64 - self.scheme.prefix_bits)) as usize,
+        )
+    }
+}
+
+impl EncodeKernel for QlcCodec {
+    /// The single-stage encoder (paper §7 mirrored onto software): one
+    /// `enc_code`/`enc_len` LUT read per symbol, shift-or into a local
+    /// accumulator.  Every code is ≤ 13 bits, so four codes (≤ 52
+    /// bits) always fit one staging-word push — the sink's word-fill
+    /// bookkeeping runs once per *quad*, not once per code.
+    fn encode_batch(&self, symbols: &[u8], sink: &mut BitSink) {
+        let mut quads = symbols.chunks_exact(4);
+        for quad in quads.by_ref() {
+            let mut acc = 0u64;
+            let mut bits = 0u32;
+            for &s in quad {
+                let len = self.enc_len[s as usize] as u32;
+                acc = (acc << len) | self.enc_code[s as usize] as u64;
+                bits += len;
+            }
+            sink.push(acc, bits);
+        }
+        for &s in quads.remainder() {
+            sink.push(
+                self.enc_code[s as usize] as u64,
+                self.enc_len[s as usize] as u32,
+            );
+        }
+    }
+
+    /// Lane-major interleaved encode, the mirror of
+    /// [`decode_lanes`](DecodeKernel::decode_lanes): each round pushes
+    /// one code from every unfinished lane, so the LUT loads of 4/8
+    /// independent chunks overlap in the pipeline instead of
+    /// serializing on one sink's shift-or chain.  Each lane owns its
+    /// sink, so its bytes equal an `encode_batch` of its symbols alone.
+    fn encode_lanes(&self, lanes: &mut [EncodeLane<'_>]) {
+        loop {
+            // Size one burst: every unfinished lane sustains `rounds`
+            // pushes with no per-round completion checks.
+            let mut rounds = usize::MAX;
+            let mut unfinished = 0usize;
+            for lane in lanes.iter() {
+                let remaining = lane.remaining();
+                if remaining == 0 {
+                    continue;
+                }
+                unfinished += 1;
+                rounds = rounds.min(remaining);
+            }
+            if unfinished == 0 {
+                return;
+            }
+            for _ in 0..rounds {
+                for lane in lanes.iter_mut() {
+                    if lane.remaining() == 0 {
+                        continue;
+                    }
+                    let s = lane.symbols[lane.pos] as usize;
+                    lane.sink.push(
+                        self.enc_code[s] as u64,
+                        self.enc_len[s] as u32,
+                    );
+                    lane.pos += 1;
+                }
+            }
+        }
+    }
 }
 
 impl Codec for QlcCodec {
@@ -367,7 +460,7 @@ impl Codec for QlcCodec {
         self.label.clone()
     }
 
-    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+    fn encode_scalar(&self, symbols: &[u8], out: &mut BitWriter) {
         for &s in symbols {
             out.write_bits(
                 self.enc_code[s as usize] as u64,
@@ -479,7 +572,7 @@ mod tests {
         );
         // Tables are mutually inverse.
         for (rank, sym) in codec.decoder_table() {
-            assert_eq!(codec.encoder_table()[sym as usize].1, rank);
+            assert_eq!(codec.encoder_row(sym).1, rank);
         }
     }
 
@@ -578,6 +671,39 @@ mod tests {
                     .collect();
                 engine.decode_jobs(&codec, &mut jobs).unwrap();
                 assert_eq!(out, symbols, "chunk={chunk} width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_encode_matches_batched_at_both_widths() {
+        use crate::codecs::kernel::{EncodeJob, LaneEncoder};
+        let mut p = [0f64; 256];
+        for (i, v) in p.iter_mut().enumerate() {
+            *v = (-0.03 * i as f64).exp();
+        }
+        let symbols =
+            AliasTable::new(&p).sample_many(&mut Rng::new(23), 120_000);
+        let pmf = Histogram::from_symbols(&symbols).pmf();
+        let codec = QlcCodec::from_pmf(AreaScheme::table1(), &pmf);
+        // 8 equal chunks fill whole lane groups; the ragged split
+        // forces lanes to finish at different rounds.
+        for chunk in [symbols.len() / 8, 7_919] {
+            let reference: Vec<Vec<u8>> = symbols
+                .chunks(chunk)
+                .map(|c| codec.encode_to_vec(c))
+                .collect();
+            for width in [4usize, 8] {
+                let engine = LaneEncoder::with_lanes(width).unwrap();
+                let mut outs: Vec<Vec<u8>> =
+                    vec![Vec::new(); reference.len()];
+                let mut jobs: Vec<EncodeJob> = symbols
+                    .chunks(chunk)
+                    .zip(outs.iter_mut())
+                    .map(|(c, o)| EncodeJob { symbols: c, out: o })
+                    .collect();
+                engine.encode_jobs(&codec, &mut jobs);
+                assert_eq!(outs, reference, "chunk={chunk} width={width}");
             }
         }
     }

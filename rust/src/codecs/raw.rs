@@ -1,7 +1,7 @@
 //! Identity codec: 8 bits/symbol. The uncompressed baseline every
 //! paper table normalizes against.
 
-use super::kernel::{BitCursor, DecodeKernel};
+use super::kernel::{BitCursor, BitSink, DecodeKernel, EncodeKernel};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
@@ -37,12 +37,31 @@ impl DecodeKernel for RawCodec {
     }
 }
 
+impl EncodeKernel for RawCodec {
+    fn encode_batch(&self, symbols: &[u8], sink: &mut BitSink) {
+        // Seven whole symbols fit one 56-bit push (the mirror of the
+        // decoder's up-to-8-per-refill loop; the sink's staging budget
+        // is 57 bits).
+        let mut groups = symbols.chunks_exact(7);
+        for group in groups.by_ref() {
+            let mut acc = 0u64;
+            for &s in group {
+                acc = (acc << 8) | s as u64;
+            }
+            sink.push(acc, 56);
+        }
+        for &s in groups.remainder() {
+            sink.push(s as u64, 8);
+        }
+    }
+}
+
 impl Codec for RawCodec {
     fn name(&self) -> String {
         "raw".to_string()
     }
 
-    fn encode(&self, symbols: &[u8], out: &mut BitWriter) {
+    fn encode_scalar(&self, symbols: &[u8], out: &mut BitWriter) {
         for &s in symbols {
             out.write_bits(s as u64, 8);
         }

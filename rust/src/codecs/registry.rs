@@ -25,10 +25,10 @@ use std::sync::OnceLock;
 use super::elias::{EliasCodec, EliasKind};
 use super::expgolomb::ExpGolombCodec;
 use super::huffman::HuffmanCodec;
-use super::kernel::LaneJob;
+use super::kernel::{EncodeJob, LaneJob};
 use super::qlc::{self, AreaScheme, QlcCodec};
 use super::raw::RawCodec;
-use super::session::{DecodeMode, DecoderSession, EncoderSession};
+use super::session::{DecodeMode, DecoderSession, EncodeMode, EncoderSession};
 use super::{Codec, CodecError};
 use crate::stats::Histogram;
 
@@ -163,9 +163,26 @@ impl CodecHandle {
         &self.header
     }
 
-    /// Start a streaming encode session.
+    /// Start a streaming encode session (batched kernel path).
     pub fn encoder(&self) -> EncoderSession<'_> {
         EncoderSession::new(self.codec())
+    }
+
+    /// Start a streaming encode session on an explicit encode path
+    /// (the CLI's `--encode=batched|scalar|lanes`).
+    pub fn encoder_with(&self, mode: EncodeMode) -> EncoderSession<'_> {
+        EncoderSession::with_mode(self.codec(), mode)
+    }
+
+    /// Encode several independent chunks through the lane-interleaved
+    /// engine — the [`EncodeMode::Lanes`] entry point, mirror of
+    /// [`decode_chunks_lanes`](Self::decode_chunks_lanes): up to
+    /// [`MAX_LANES`](super::kernel::MAX_LANES) chunk sinks step in
+    /// lockstep through this codec's tables.  Each job's payload is
+    /// appended to its own `out`, bit-for-bit identical to encoding
+    /// the chunk through [`CodecHandle::encoder`].
+    pub fn encode_chunks_lanes(&self, jobs: &mut [EncodeJob<'_, '_>]) {
+        self.encoder_with(EncodeMode::Lanes).encode_chunk_group(jobs)
     }
 
     /// Start a streaming decode session (batched kernel path).
@@ -635,6 +652,36 @@ mod tests {
                 .collect();
             handle.decode_chunks_lanes(&mut jobs).unwrap();
             assert_eq!(out, symbols, "{name}");
+        }
+    }
+
+    #[test]
+    fn handles_encode_lane_groups() {
+        // Mirror of `handles_decode_lane_groups`: every family's
+        // handle must encode chunk groups through the lane entry point
+        // bit-identically to its plain (batched) and scalar encoders.
+        let hist = skewed_hist(11);
+        let reg = CodecRegistry::global();
+        let symbols =
+            AliasTable::new(&hist.pmf().p).sample_many(&mut Rng::new(5), 30_000);
+        for name in reg.known_names() {
+            let handle = reg.resolve(name, &hist).unwrap();
+            let chunk = 4_100usize;
+            let mut scalar = handle.encoder_with(EncodeMode::Scalar);
+            let expected: Vec<Vec<u8>> = symbols
+                .chunks(chunk)
+                .map(|c| scalar.encode_chunk_to_vec(c))
+                .collect();
+            let mut outs: Vec<Vec<u8>> = vec![Vec::new(); expected.len()];
+            {
+                let mut jobs: Vec<EncodeJob> = symbols
+                    .chunks(chunk)
+                    .zip(outs.iter_mut())
+                    .map(|(c, o)| EncodeJob { symbols: c, out: o })
+                    .collect();
+                handle.encode_chunks_lanes(&mut jobs);
+            }
+            assert_eq!(outs, expected, "{name}");
         }
     }
 

@@ -7,13 +7,18 @@
 //! makes chunked payloads (frame format QLF2, the collective
 //! transport) decodable in parallel and at line rate in hardware.
 //!
-//! The encoder session keeps one [`BitWriter`] alive across chunks so
-//! a long stream is encoded with a single scratch allocation; the
-//! decoder session decodes into caller-provided `&mut [u8]` buffers,
-//! so the destination (tensor shard, frame slice) is written exactly
-//! once.  Both track totals for throughput accounting.
+//! The encoder session keeps one [`BitSink`] (or, in scalar mode, one
+//! [`BitWriter`]) alive across chunks so a long stream is encoded with
+//! a single scratch allocation; the decoder session decodes into
+//! caller-provided `&mut [u8]` buffers, so the destination (tensor
+//! shard, frame slice) is written exactly once.  Both track totals for
+//! throughput accounting.  Every encode path produces identical bytes
+//! — [`EncodeMode`] selects *how* they are produced, never *what*.
 
-use super::kernel::{BitCursor, LaneDecoder, LaneJob};
+use super::kernel::{
+    BitCursor, BitSink, DecodeKernel, EncodeJob, LaneDecoder, LaneEncoder,
+    LaneJob, MixedLaneJob,
+};
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
 
@@ -58,6 +63,46 @@ impl DecodeMode {
     }
 }
 
+/// Which encode path an [`EncoderSession`] (and everything above it —
+/// frame, transport, CLI) runs: the batched
+/// [`EncodeKernel`](super::EncodeKernel) staging-word path, the
+/// lane-interleaved path ([`LaneEncoder`](super::LaneEncoder),
+/// stepping independent chunks in lockstep through
+/// [`EncoderSession::encode_chunk_group`]), or the scalar
+/// one-code-per-`write_bits` reference path.  [`DecodeMode`]'s mirror:
+/// batched is the default everywhere, and all three produce
+/// bit-for-bit identical payloads — the mode only changes throughput.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EncodeMode {
+    #[default]
+    Batched,
+    Scalar,
+    Lanes,
+}
+
+impl EncodeMode {
+    /// Parse the CLI's `--encode` vocabulary.
+    pub fn parse(name: &str) -> Result<EncodeMode, String> {
+        match name {
+            "batched" => Ok(EncodeMode::Batched),
+            "scalar" => Ok(EncodeMode::Scalar),
+            "lanes" => Ok(EncodeMode::Lanes),
+            other => Err(format!(
+                "unknown encode mode '{other}' (expected \
+                 batched|scalar|lanes)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EncodeMode::Batched => "batched",
+            EncodeMode::Scalar => "scalar",
+            EncodeMode::Lanes => "lanes",
+        }
+    }
+}
+
 /// Default chunk granularity in symbols (64 KiB of e4m3 symbols).
 /// Large enough that per-chunk overhead (8 bytes of QLF2 chunk table,
 /// one flush) is noise; small enough that a multi-core decode of a
@@ -97,8 +142,14 @@ pub fn chunk_spans(total: usize, chunk_symbols: usize) -> Vec<(usize, usize)> {
 /// ```
 pub struct EncoderSession<'c> {
     codec: &'c dyn Codec,
-    /// Reused scratch writer; drained after every chunk.
+    mode: EncodeMode,
+    /// Reused scratch writer (scalar mode); drained after every chunk.
     writer: BitWriter,
+    /// Reused scratch sink (batched/lanes); drained after every chunk.
+    sink: BitSink,
+    /// Lane engine for [`EncodeMode::Lanes`] group encodes
+    /// (runtime-selected width, cached at construction).
+    lane: LaneEncoder,
     symbols_in: u64,
     bytes_out: u64,
     chunks: u64,
@@ -106,9 +157,16 @@ pub struct EncoderSession<'c> {
 
 impl<'c> EncoderSession<'c> {
     pub fn new(codec: &'c dyn Codec) -> Self {
+        Self::with_mode(codec, EncodeMode::default())
+    }
+
+    pub fn with_mode(codec: &'c dyn Codec, mode: EncodeMode) -> Self {
         EncoderSession {
             codec,
+            mode,
             writer: BitWriter::new(),
+            sink: BitSink::new(),
+            lane: LaneEncoder::auto(),
             symbols_in: 0,
             bytes_out: 0,
             chunks: 0,
@@ -119,17 +177,63 @@ impl<'c> EncoderSession<'c> {
         self.codec
     }
 
+    /// Which encode path this session runs.
+    pub fn mode(&self) -> EncodeMode {
+        self.mode
+    }
+
     /// Encode one chunk, appending its byte-aligned payload to `out`.
-    /// Returns the payload length in bytes.
+    /// Returns the payload length in bytes.  The bytes are identical
+    /// in every mode; a lanes-mode session encodes a single chunk
+    /// through the batched kernel (the lane win comes from
+    /// [`encode_chunk_group`](Self::encode_chunk_group)).
     pub fn encode_chunk(&mut self, symbols: &[u8], out: &mut Vec<u8>) -> usize {
         let before = out.len();
-        self.codec.encode(symbols, &mut self.writer);
-        self.writer.drain_into(out);
+        match self.mode {
+            EncodeMode::Batched | EncodeMode::Lanes => {
+                self.codec.encode_batch(symbols, &mut self.sink);
+                self.sink.drain_into(out);
+            }
+            EncodeMode::Scalar => {
+                self.codec.encode_scalar(symbols, &mut self.writer);
+                self.writer.drain_into(out);
+            }
+        }
         let written = out.len() - before;
         self.symbols_in += symbols.len() as u64;
         self.bytes_out += written as u64;
         self.chunks += 1;
         written
+    }
+
+    /// Encode several independent chunks in one call, appending each
+    /// job's payload to its own `out`.
+    ///
+    /// Under [`EncodeMode::Lanes`] the jobs run through the
+    /// lane-interleaved engine: up to
+    /// [`MAX_LANES`](super::kernel::MAX_LANES) chunk sinks step in
+    /// lockstep so their LUT loads overlap in the pipeline.  The other
+    /// modes encode the jobs serially through
+    /// [`encode_chunk`](Self::encode_chunk), so the payload bytes (and
+    /// the session accounting) are mode-independent.
+    pub fn encode_chunk_group(&mut self, jobs: &mut [EncodeJob<'_, '_>]) {
+        match self.mode {
+            EncodeMode::Lanes => {
+                let before: usize = jobs.iter().map(|j| j.out.len()).sum();
+                self.lane.encode_jobs(self.codec, &mut *jobs);
+                let after: usize = jobs.iter().map(|j| j.out.len()).sum();
+                for job in jobs.iter() {
+                    self.symbols_in += job.symbols.len() as u64;
+                    self.chunks += 1;
+                }
+                self.bytes_out += (after - before) as u64;
+            }
+            EncodeMode::Batched | EncodeMode::Scalar => {
+                for job in jobs.iter_mut() {
+                    self.encode_chunk(job.symbols, job.out);
+                }
+            }
+        }
     }
 
     /// Encode one chunk into a fresh buffer.
@@ -257,6 +361,46 @@ impl<'c> DecoderSession<'c> {
             DecodeMode::Batched | DecodeMode::Scalar => {
                 for job in jobs.iter_mut() {
                     self.decode_chunk(job.payload, job.out)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Decode several chunk payloads that do not all share one codec:
+    /// each [`MixedLaneJob`] carries its own kernel (e.g. a per-chunk
+    /// adaptive table-delta codec alongside the frame codec).
+    ///
+    /// Under [`DecodeMode::Lanes`] the jobs run through the
+    /// mixed-table lockstep engine
+    /// ([`LaneDecoder::decode_jobs_mixed`]); lanes whose kernels agree
+    /// on a lockstep budget interleave even across different tables.
+    /// The other modes decode each job serially through its own
+    /// kernel, so the result and accounting stay mode-independent.
+    pub fn decode_chunk_group_mixed(
+        &mut self,
+        jobs: &mut [MixedLaneJob<'_, '_, '_>],
+    ) -> Result<(), CodecError> {
+        match self.mode {
+            DecodeMode::Lanes => {
+                self.lane.decode_jobs_mixed(&mut *jobs)?;
+                for job in jobs.iter() {
+                    self.symbols_out += job.out.len() as u64;
+                    self.bytes_in += job.payload.len() as u64;
+                    self.chunks += 1;
+                }
+                Ok(())
+            }
+            DecodeMode::Batched | DecodeMode::Scalar => {
+                for job in jobs.iter_mut() {
+                    if job.out.len() as u64 > job.payload.len() as u64 * 8 {
+                        return Err(CodecError::UnexpectedEof);
+                    }
+                    let mut cur = BitCursor::new(job.payload);
+                    job.kernel.decode_batch(&mut cur, job.out)?;
+                    self.symbols_out += job.out.len() as u64;
+                    self.bytes_in += job.payload.len() as u64;
+                    self.chunks += 1;
                 }
                 Ok(())
             }

@@ -88,11 +88,13 @@ pub struct CollectiveReport {
     pub raw_bytes: u64,
     /// Modelled network time (latency + busiest-link bytes / bw).
     pub network_time_s: f64,
-    /// Measured encode+decode wall time on the critical path.  Decode
-    /// runs the batched [`crate::codecs::DecodeKernel`] word-at-a-time
-    /// path (via the chunk sessions), so this number reflects the
-    /// kernel the paper's speed argument is about — not the scalar
-    /// reference decoder.
+    /// Measured encode+decode wall time on the critical path.  Both
+    /// halves run the batched kernels via the chunk sessions — encode
+    /// through the [`crate::codecs::EncodeKernel`] staging-word path,
+    /// decode through the [`crate::codecs::DecodeKernel`]
+    /// word-at-a-time path — so this number reflects the kernels the
+    /// paper's speed argument is about, not the scalar reference
+    /// paths.
     pub codec_time_s: f64,
     /// Modelled wall time with chunk-granular pipelining: decode of
     /// chunk `k` overlaps transfer of chunk `k+1`, so codec time hides

@@ -43,7 +43,7 @@ const VALUE_OPTS: &[&str] = &[
     "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
     "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
     "name", "prefix", "rank", "world", "listen", "connect", "timeout-s",
-    "decode", "src", "baseline",
+    "decode", "encode", "src", "baseline",
 ];
 
 fn main() -> ExitCode {
@@ -108,6 +108,12 @@ USAGE: qlc <subcommand> [options]
                          better, chunks stay independently decodable)
              [--shards N]  (QLM1 manifest at <out> + <out>.shardK files,
                             one table header shared by all shards)
+             [--encode batched|scalar|lanes]
+                          (which encode path writes the chunks: the
+                           batched staging-word kernel, the scalar
+                           reference path, or lane-interleaved encode
+                           of independent chunks; every mode writes
+                           bit-identical frames; default batched)
   decompress <in> <out> [--decode batched|scalar|lanes]
                           (reads QLF1, QLF2 and QLM1 manifests —
                            shard files are found next to the manifest;
@@ -274,6 +280,10 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
              (qlc family), not '{codec}'"
         ));
     }
+    let encode = qlc::codecs::EncodeMode::parse(
+        &args.opt_or("encode", "batched"),
+    )?;
+    let opts = FrameOptions { encode, ..Default::default() };
     let n_shards = args.opt_usize("shards", 0).map_err(|e| e.to_string())?;
     if n_shards > 0 {
         if args.has_flag("qlf1") {
@@ -295,7 +305,7 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
             &handle,
             &symbols,
             n_shards,
-            &FrameOptions::default(),
+            &opts,
         )
         .map_err(|e| e.to_string())?;
         std::fs::write(&output, manifest.to_bytes())
@@ -329,10 +339,11 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
         }
         frame::compress_qlf1(&handle, &symbols)
     } else if adaptive {
-        frame::compress_adaptive(&handle, &symbols, &FrameOptions::default())
+        frame::compress_adaptive(&handle, &symbols, &opts)
             .map_err(|e| e.to_string())?
     } else {
-        frame::compress(&handle, &symbols).map_err(|e| e.to_string())?
+        frame::compress_with(&handle, &symbols, &opts)
+            .map_err(|e| e.to_string())?
     };
     std::fs::write(&output, &framed).map_err(|e| e.to_string())?;
     println!(

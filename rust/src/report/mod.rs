@@ -237,8 +237,6 @@ pub fn fig_symbol_pmf(id: &str, label: &str, pmf: &Pmf) -> Artifact {
 /// Tables 3 & 4: encoder/decoder LUT excerpts.
 pub fn table_luts(id: &str, pmf: &Pmf, scheme: AreaScheme) -> Artifact {
     let codec = QlcCodec::from_pmf(scheme, pmf);
-    let enc = codec.encoder_table();
-    let dec = codec.decoder_table();
     // Paper Table 3 shows rows for mapped ranks 0,1,2,8,253,254,255.
     let mut text = format!(
         "{id}: encoder LUT (input → rank → code) and decoder LUT excerpts\n"
@@ -246,20 +244,21 @@ pub fn table_luts(id: &str, pmf: &Pmf, scheme: AreaScheme) -> Artifact {
     let by_rank = codec.rank_order();
     for &r in &[0usize, 1, 2, 8, 253, 254, 255] {
         let sym = by_rank[r];
-        let (_, rank, code, len) = enc[sym as usize];
+        let (_, rank, code, len) = codec.encoder_row(sym);
         text += &format!(
             "  enc: input {sym:>3} → rank {rank:>3} → {:0width$b} ({len} \
              bits)   dec: {r:>3} → {}\n",
             code,
-            dec[r].1,
+            codec.decoder_row(r as u8).1,
             width = len as usize
         );
     }
     let json = Json::obj().set("id", id).set(
         "encoder_rows",
         Json::Arr(
-            enc.iter()
-                .map(|&(s, r, c, l)| {
+            codec
+                .encoder_table()
+                .map(|(s, r, c, l)| {
                     Json::obj()
                         .set("input", s as usize)
                         .set("rank", r as usize)

@@ -142,7 +142,11 @@ pub trait Link {
 }
 
 /// Payload-only chunk encode (tables pre-shared apriori; paper §7).
-/// `None` session means raw transport.
+/// `None` session means raw transport.  Sessions route through the
+/// batched [`crate::codecs::EncodeKernel`] staging-word path (the
+/// session default), so the encode half of every measured hop — and
+/// therefore the `codec_time_s` the collectives report — runs the
+/// batched encoder, mirroring [`decode_payload_into`].
 pub fn encode_payload(
     enc: &mut Option<EncoderSession<'_>>,
     symbols: &[u8],

@@ -157,6 +157,64 @@ fn adaptive_chunks_cli_roundtrip_and_validation() {
 }
 
 #[test]
+fn encode_modes_cli_write_identical_frames() {
+    let dir = tmp("encmodes");
+    let input = dir.join("in.bin");
+    let data: Vec<u8> = (0..60_000u64)
+        .map(|i| (i.wrapping_mul(3 * i + 5) % 101 % 64) as u8)
+        .collect();
+    std::fs::write(&input, &data).unwrap();
+    // All three encode paths must write bit-identical frames, and the
+    // frame must roundtrip.
+    let mut frames = Vec::new();
+    for mode in ["batched", "scalar", "lanes"] {
+        let framed = dir.join(format!("out.{mode}.qlf"));
+        let out = qlc()
+            .args([
+                "compress",
+                input.to_str().unwrap(),
+                framed.to_str().unwrap(),
+                "--codec",
+                "qlc",
+                "--encode",
+                mode,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{mode}: {out:?}");
+        frames.push(std::fs::read(&framed).unwrap());
+    }
+    assert_eq!(frames[0], frames[1], "batched vs scalar");
+    assert_eq!(frames[0], frames[2], "batched vs lanes");
+    let restored = dir.join("out.bin");
+    let out = qlc()
+        .args([
+            "decompress",
+            dir.join("out.lanes.qlf").to_str().unwrap(),
+            restored.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    assert_eq!(std::fs::read(&restored).unwrap(), data);
+    // Unknown encode mode is a clean CLI error.
+    let out = qlc()
+        .args([
+            "compress",
+            input.to_str().unwrap(),
+            dir.join("x.qlf").to_str().unwrap(),
+            "--codec",
+            "qlc",
+            "--encode",
+            "quantum",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn sharded_compress_decompress_roundtrip() {
     let dir = tmp("sharded");
     let input = dir.join("in.bin");
