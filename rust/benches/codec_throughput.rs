@@ -25,9 +25,12 @@
 //! much closer together than batched vs scalar).
 //!
 //! Every throughput number also lands in a machine-readable
-//! `BENCH_7.json` (path overridable via `QLC_BENCH_JSON`), so the perf
+//! `BENCH_8.json` (path overridable via `QLC_BENCH_JSON`), so the perf
 //! trajectory is tracked run over run instead of living only in CI
-//! logs.
+//! logs.  New with the obs subsystem: every section's raw per-sample
+//! timings are also folded through an [`qlc::obs`] log2 latency
+//! histogram, and the JSON gains a `latency` array with p50/p90/p99
+//! nanoseconds per section.
 
 use qlc::bitstream::{BitReader, BitWriter};
 use qlc::codecs::frame::{self, FrameOptions};
@@ -37,6 +40,7 @@ use qlc::codecs::{
     BitCursor, BitSink, Codec, CodecRegistry, EncodeJob, EncodeKernel,
     LaneDecoder, LaneEncoder, LaneJob,
 };
+use qlc::obs;
 use qlc::report;
 use qlc::util::bench::{smoke_config, smoke_scaled, Bencher};
 use qlc::util::json::Json;
@@ -48,6 +52,9 @@ fn main() {
     let registry = CodecRegistry::global();
     let pmfs = report::paper_pmfs(42, 6);
     let mut qlc_gate_failures = Vec::new();
+    // Local registry (not the process-global one): these histograms
+    // hold exactly this run's per-section sample timings.
+    let reg = obs::Registry::new();
     let mut records: Vec<Json> = Vec::new();
     let mut record = |name: String, mbps: f64| {
         records.push(Json::obj().set("name", name.as_str()).set("mbps", mbps));
@@ -435,6 +442,16 @@ fn main() {
             )
             .throughput_mbps();
         record(format!("{label}/sharded-decode/qlc/x{n_shards}"), tp);
+        // Fold this label's raw per-sample timings through the obs
+        // latency histograms (one per section) for the JSON quantile
+        // summary below.
+        for r in b.results() {
+            let h = reg
+                .hist(&obs::label("bench_ns", &[("section", &r.name)]));
+            for s in &r.samples {
+                h.record(u64::try_from(s.as_nanos()).unwrap_or(u64::MAX));
+            }
+        }
         println!();
     }
 
@@ -442,13 +459,29 @@ fn main() {
     // run, plus the gate verdicts, so the perf trajectory can be
     // tracked across commits instead of re-read from CI logs.
     let out_path = std::env::var("QLC_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_7.json".to_string());
+        .unwrap_or_else(|_| "BENCH_8.json".to_string());
+    // Per-section latency quantiles from the obs histograms: p50/p90/
+    // p99 of the raw sample timings (log2-bucket upper edges, ns).
+    let snap = reg.snapshot();
+    let latency: Vec<Json> = snap
+        .hists
+        .iter()
+        .map(|(key, h)| {
+            Json::obj()
+                .set("metric", key.as_str())
+                .set("samples", h.count as usize)
+                .set("p50_ns", h.quantile(0.5).unwrap_or(0) as usize)
+                .set("p90_ns", h.quantile(0.9).unwrap_or(0) as usize)
+                .set("p99_ns", h.quantile(0.99).unwrap_or(0) as usize)
+        })
+        .collect();
     let doc = Json::obj()
         .set("bench", "codec_throughput")
         .set("symbols_per_stream", n)
         .set("smoke", smoke)
         .set("lane_width", LaneDecoder::auto().lanes())
         .set("results", Json::Arr(records))
+        .set("latency", Json::Arr(latency))
         .set(
             "gate_failures",
             Json::Arr(

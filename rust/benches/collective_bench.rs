@@ -242,7 +242,7 @@ fn main() {
             "  workers={workers}: {:>7.1} MB/s end-to-end ({} frames, {:.1}% compressibility)",
             stream.len() as f64 / wall / 1e6,
             frames.len(),
-            pipe.metrics().compressibility() * 100.0
+            pipe.metrics().compressibility().unwrap_or(0.0) * 100.0
         );
     }
 

@@ -75,6 +75,7 @@ use super::session::{
     DEFAULT_CHUNK_SYMBOLS,
 };
 use super::CodecError;
+use crate::obs;
 
 pub const MAGIC_QLF1: [u8; 4] = *b"QLF1";
 pub const MAGIC_QLF2: [u8; 4] = *b"QLF2";
@@ -250,6 +251,13 @@ fn encode_payload_chunks<'a>(
         .collect();
     let encode_ok: Result<(), std::convert::Infallible> =
         run_banded(jobs, threads, |band| {
+            let _sp = obs::span("frame.encode_band")
+                .arg("chunks", band.len())
+                .arg("mode", opts.encode.name());
+            let lane_chunks =
+                obs::global().counter("frame_encode_lane_chunks_total");
+            let solo_chunks =
+                obs::global().counter("frame_encode_solo_chunks_total");
             let mut enc = handle.encoder_with(opts.encode);
             // Under lane mode, fixed-table chunks of the band collect
             // into one lockstep group (mirror of `decode_band_lanes`);
@@ -271,12 +279,15 @@ fn encode_payload_chunks<'a>(
                         .encode_chunk(chunk, &mut out);
                     *slot = out;
                     *delta_slot = true;
+                    solo_chunks.inc();
                 } else if opts.encode == EncodeMode::Lanes {
                     fixed.push(EncodeJob { symbols: chunk, out: slot });
                 } else {
                     *slot = enc.encode_chunk_to_vec(chunk);
+                    solo_chunks.inc();
                 }
             }
+            lane_chunks.add(fixed.len() as u64);
             enc.encode_chunk_group(&mut fixed);
             Ok(())
         });
@@ -339,6 +350,9 @@ pub fn compress_with(
     symbols: &[u8],
     opts: &FrameOptions,
 ) -> Result<Vec<u8>, CodecError> {
+    let _sp = obs::span("frame.compress")
+        .arg("codec", handle.codec().name())
+        .arg("symbols", symbols.len());
     let (chunks, payloads, deltas) =
         encode_payload_chunks(handle, symbols, opts, opts.adaptive_chunks);
     let counts: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
@@ -409,6 +423,7 @@ pub fn decompress_with(
     data: &[u8],
     opts: &FrameOptions,
 ) -> Result<Vec<u8>, CodecError> {
+    let _sp = obs::span("frame.decompress").arg("bytes", data.len());
     let bad = |msg: &str| CodecError::BadHeader(msg.to_string());
     if data.len() < FIXED_HEADER {
         return Err(bad("frame too short"));
@@ -569,10 +584,15 @@ fn decode_chunk_jobs(
     let threads = effective_threads(opts.threads, jobs.len());
     let mode = opts.decode;
     run_banded(jobs, threads, |band| {
+        let _sp = obs::span("frame.decode_band")
+            .arg("chunks", band.len())
+            .arg("mode", mode.name());
         let mut dec = handle.decoder_with(mode);
         if mode == DecodeMode::Lanes {
             return decode_band_lanes(handle, &mut dec, band);
         }
+        let solo_chunks =
+            obs::global().counter("frame_decode_solo_chunks_total");
         for (payload, dst, has_delta) in band {
             if has_delta {
                 let (rest, chunk_codec) =
@@ -582,6 +602,7 @@ fn decode_chunk_jobs(
             } else {
                 dec.decode_chunk(payload, dst)?;
             }
+            solo_chunks.inc();
         }
         Ok(())
     })
@@ -621,12 +642,18 @@ fn decode_band_lanes<'p, 'o>(
     band: Vec<(&'p [u8], &'o mut [u8], bool)>,
 ) -> Result<(), CodecError> {
     if band.iter().all(|(_, _, has_delta)| !has_delta) {
+        obs::global()
+            .counter("frame_decode_lane_chunks_total")
+            .add(band.len() as u64);
         let mut fixed: Vec<LaneJob<'p, 'o>> = band
             .into_iter()
             .map(|(payload, out, _)| LaneJob { payload, out })
             .collect();
         return dec.decode_chunk_group(&mut fixed);
     }
+    obs::global()
+        .counter("frame_decode_mixed_chunks_total")
+        .add(band.len() as u64);
     // Rebuild the chunk-local codecs first (kept alive in `codecs` for
     // the lifetime of the lane group), splitting each delta payload
     // into delta bytes and encoded remainder.

@@ -358,9 +358,16 @@ impl CodecRegistry {
     ) -> Result<CodecHandle, String> {
         for f in &self.families {
             if (f.matches)(name) {
+                crate::obs::global()
+                    .counter(&crate::obs::label(
+                        "codec_resolve_total",
+                        &[("family", f.family)],
+                    ))
+                    .inc();
                 return (f.build)(name, hist);
             }
         }
+        crate::obs::global().counter("codec_resolve_unknown_total").inc();
         Err(format!("unknown codec '{name}'"))
     }
 
@@ -372,9 +379,16 @@ impl CodecRegistry {
     ) -> Result<CodecHandle, CodecError> {
         for f in &self.families {
             if f.tag == tag {
+                crate::obs::global()
+                    .counter(&crate::obs::label(
+                        "codec_resolve_wire_total",
+                        &[("family", f.family)],
+                    ))
+                    .inc();
                 return (f.from_header)(header);
             }
         }
+        crate::obs::global().counter("codec_resolve_unknown_total").inc();
         Err(CodecError::BadHeader(format!("unknown codec tag {tag}")))
     }
 

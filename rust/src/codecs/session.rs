@@ -21,6 +21,42 @@ use super::kernel::{
 };
 use super::{Codec, CodecError};
 use crate::bitstream::{BitReader, BitWriter};
+use crate::obs;
+
+/// Handles onto the global obs registry for one session direction
+/// (`encode`/`decode`), labelled by codec + mode.  Acquired once at
+/// session construction; the per-chunk cost is one stopwatch read and
+/// a few relaxed atomic adds.
+struct SessionStats {
+    chunk_ns: obs::Hist,
+    group_ns: obs::Hist,
+    symbols: obs::Counter,
+    bytes: obs::Counter,
+    chunks: obs::Counter,
+}
+
+impl SessionStats {
+    fn new(dir: &str, codec: &dyn Codec, mode: &'static str) -> SessionStats {
+        let reg = obs::global();
+        let codec_name = codec.name();
+        let labels = [("codec", codec_name.as_str()), ("mode", mode)];
+        let key = |metric: &str| obs::label(&format!("codec_{dir}_{metric}"), &labels);
+        SessionStats {
+            chunk_ns: reg.hist(&key("chunk_ns")),
+            group_ns: reg.hist(&key("group_ns")),
+            symbols: reg.counter(&key("symbols_total")),
+            bytes: reg.counter(&key("bytes_total")),
+            chunks: reg.counter(&key("chunks_total")),
+        }
+    }
+
+    fn chunk(&self, elapsed_ns: u64, symbols: u64, bytes: u64) {
+        self.chunk_ns.record(elapsed_ns);
+        self.symbols.add(symbols);
+        self.bytes.add(bytes);
+        self.chunks.inc();
+    }
+}
 
 /// Which decode path a [`DecoderSession`] (and everything above it —
 /// frame, transport, CLI) runs: the batched
@@ -153,6 +189,8 @@ pub struct EncoderSession<'c> {
     symbols_in: u64,
     bytes_out: u64,
     chunks: u64,
+    /// Global-registry handles (per-chunk latency hist + totals).
+    stats: SessionStats,
 }
 
 impl<'c> EncoderSession<'c> {
@@ -170,6 +208,7 @@ impl<'c> EncoderSession<'c> {
             symbols_in: 0,
             bytes_out: 0,
             chunks: 0,
+            stats: SessionStats::new("encode", codec, mode.name()),
         }
     }
 
@@ -188,6 +227,7 @@ impl<'c> EncoderSession<'c> {
     /// through the batched kernel (the lane win comes from
     /// [`encode_chunk_group`](Self::encode_chunk_group)).
     pub fn encode_chunk(&mut self, symbols: &[u8], out: &mut Vec<u8>) -> usize {
+        let sw = obs::Stopwatch::start();
         let before = out.len();
         match self.mode {
             EncodeMode::Batched | EncodeMode::Lanes => {
@@ -203,6 +243,7 @@ impl<'c> EncoderSession<'c> {
         self.symbols_in += symbols.len() as u64;
         self.bytes_out += written as u64;
         self.chunks += 1;
+        self.stats.chunk(sw.elapsed_ns(), symbols.len() as u64, written as u64);
         written
     }
 
@@ -219,14 +260,19 @@ impl<'c> EncoderSession<'c> {
     pub fn encode_chunk_group(&mut self, jobs: &mut [EncodeJob<'_, '_>]) {
         match self.mode {
             EncodeMode::Lanes => {
+                let sw = obs::Stopwatch::start();
                 let before: usize = jobs.iter().map(|j| j.out.len()).sum();
                 self.lane.encode_jobs(self.codec, &mut *jobs);
                 let after: usize = jobs.iter().map(|j| j.out.len()).sum();
                 for job in jobs.iter() {
                     self.symbols_in += job.symbols.len() as u64;
                     self.chunks += 1;
+                    self.stats.symbols.add(job.symbols.len() as u64);
+                    self.stats.chunks.inc();
                 }
                 self.bytes_out += (after - before) as u64;
+                self.stats.bytes.add((after - before) as u64);
+                self.stats.group_ns.record(sw.elapsed_ns());
             }
             EncodeMode::Batched | EncodeMode::Scalar => {
                 for job in jobs.iter_mut() {
@@ -274,6 +320,8 @@ pub struct DecoderSession<'c> {
     symbols_out: u64,
     bytes_in: u64,
     chunks: u64,
+    /// Global-registry handles (per-chunk latency hist + totals).
+    stats: SessionStats,
 }
 
 impl<'c> DecoderSession<'c> {
@@ -289,6 +337,7 @@ impl<'c> DecoderSession<'c> {
             symbols_out: 0,
             bytes_in: 0,
             chunks: 0,
+            stats: SessionStats::new("decode", codec, mode.name()),
         }
     }
 
@@ -315,6 +364,7 @@ impl<'c> DecoderSession<'c> {
         if out.len() as u64 > payload.len() as u64 * 8 {
             return Err(CodecError::UnexpectedEof);
         }
+        let sw = obs::Stopwatch::start();
         match self.mode {
             // A single chunk has nothing to interleave with, so Lanes
             // degenerates to the batched kernel here; the lane win
@@ -331,6 +381,11 @@ impl<'c> DecoderSession<'c> {
         self.symbols_out += out.len() as u64;
         self.bytes_in += payload.len() as u64;
         self.chunks += 1;
+        self.stats.chunk(
+            sw.elapsed_ns(),
+            out.len() as u64,
+            payload.len() as u64,
+        );
         Ok(())
     }
 
@@ -350,12 +405,17 @@ impl<'c> DecoderSession<'c> {
     ) -> Result<(), CodecError> {
         match self.mode {
             DecodeMode::Lanes => {
+                let sw = obs::Stopwatch::start();
                 self.lane.decode_jobs(self.codec, &mut *jobs)?;
                 for job in jobs.iter() {
                     self.symbols_out += job.out.len() as u64;
                     self.bytes_in += job.payload.len() as u64;
                     self.chunks += 1;
+                    self.stats.symbols.add(job.out.len() as u64);
+                    self.stats.bytes.add(job.payload.len() as u64);
+                    self.stats.chunks.inc();
                 }
+                self.stats.group_ns.record(sw.elapsed_ns());
                 Ok(())
             }
             DecodeMode::Batched | DecodeMode::Scalar => {
@@ -383,12 +443,17 @@ impl<'c> DecoderSession<'c> {
     ) -> Result<(), CodecError> {
         match self.mode {
             DecodeMode::Lanes => {
+                let sw = obs::Stopwatch::start();
                 self.lane.decode_jobs_mixed(&mut *jobs)?;
                 for job in jobs.iter() {
                     self.symbols_out += job.out.len() as u64;
                     self.bytes_in += job.payload.len() as u64;
                     self.chunks += 1;
+                    self.stats.symbols.add(job.out.len() as u64);
+                    self.stats.bytes.add(job.payload.len() as u64);
+                    self.stats.chunks.inc();
                 }
+                self.stats.group_ns.record(sw.elapsed_ns());
                 Ok(())
             }
             DecodeMode::Batched | DecodeMode::Scalar => {
@@ -575,6 +640,24 @@ mod tests {
             s.decode_chunk_group(&mut jobs),
             Err(CodecError::UnexpectedEof)
         );
+    }
+
+    #[test]
+    fn sessions_record_into_the_global_registry() {
+        let codec = RawCodec;
+        let name = codec.name();
+        let labels = [("codec", name.as_str()), ("mode", "batched")];
+        let sym_key = obs::label("codec_encode_symbols_total", &labels);
+        let hist_key = obs::label("codec_decode_chunk_ns", &labels);
+        let reg = obs::global();
+        let syms_before = reg.counter(&sym_key).get();
+        let decodes_before = reg.hist(&hist_key).count();
+        let payload = codec.encoder().encode_chunk_to_vec(&[1, 2, 3, 4]);
+        let mut out = [0u8; 4];
+        codec.decoder().decode_chunk(&payload, &mut out).unwrap();
+        // `>=` not `==`: other tests share the raw codec's global keys.
+        assert!(reg.counter(&sym_key).get() >= syms_before + 4);
+        assert!(reg.hist(&hist_key).count() >= decodes_before + 1);
     }
 
     #[test]

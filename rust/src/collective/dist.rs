@@ -40,6 +40,7 @@ use crate::codecs::registry::TAG_RAW;
 use crate::codecs::CodecRegistry;
 use crate::data::{TensorGen, TensorKind};
 use crate::formats::{Variant, BLOCK};
+use crate::obs;
 use crate::stats::Histogram;
 use crate::transport::net::{form_ring, NetConfig};
 use crate::transport::{SimLink, DEFAULT_TRANSPORT_CHUNK};
@@ -258,7 +259,13 @@ fn run_allreduce(cfg: &WorkerConfig) -> Result<DistOutcome, String> {
         (r, s, t0.elapsed().as_secs_f64())
     } else {
         let net = NetConfig::new(tag).with_timeout(cfg.timeout);
+        let ring_sp = obs::span("dist.form_ring").arg("rank", cfg.rank);
         let mut link = form_ring(cfg.rank, cfg.world, &cfg.addr, &net)?;
+        drop(ring_sp);
+        let _sp = obs::span("dist.allreduce")
+            .arg("rank", cfg.rank)
+            .arg("world", cfg.world)
+            .arg("codec", &cfg.codec);
         let t0 = Instant::now();
         let (r, s) = engine::allreduce_worker(
             &mut link,
@@ -321,7 +328,13 @@ fn run_allgather(cfg: &WorkerConfig) -> Result<DistOutcome, String> {
         (vec![body], WorkerStats::default(), 0.0)
     } else {
         let net = NetConfig::new(TAG_RAW).with_timeout(cfg.timeout);
+        let ring_sp = obs::span("dist.form_ring").arg("rank", cfg.rank);
         let mut link = form_ring(cfg.rank, cfg.world, &cfg.addr, &net)?;
+        drop(ring_sp);
+        let _sp = obs::span("dist.allgather")
+            .arg("rank", cfg.rank)
+            .arg("world", cfg.world)
+            .arg("codec", &cfg.codec);
         let t0 = Instant::now();
         let (b, s) = engine::allgather_shards_worker(
             &mut link,

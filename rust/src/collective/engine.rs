@@ -19,6 +19,7 @@ use std::time::Instant;
 use super::Transport;
 use crate::codecs::CodecHandle;
 use crate::formats::{BlockQuantizer, QuantizedBlocks, Variant, BLOCK};
+use crate::obs;
 use crate::transport::{exchange_hop, threaded, Link, DEFAULT_TRANSPORT_CHUNK};
 
 /// Wall-clock result of a threaded all-reduce.
@@ -94,8 +95,14 @@ pub fn allreduce_worker<L: Link>(
     let i = rank;
     let mut stats = WorkerStats::default();
 
+    let hops = obs::global().counter("collective_hops_total");
+
     // --- Reduce-scatter (quantize per hop). --------------------------
     for s in 0..w - 1 {
+        let _sp = obs::span("allreduce.hop")
+            .arg("rank", i)
+            .arg("step", s)
+            .arg("phase", "reduce-scatter");
         let send_ci = (i + w - s) % w;
         let q = quant.quantize(&chunks[send_ci]);
         let ex = exchange_hop(
@@ -106,6 +113,7 @@ pub fn allreduce_worker<L: Link>(
             &q.scales,
             chunk_symbols,
         )?;
+        hops.inc();
         stats.add_hop(&ex);
         let incoming = quant.dequantize(&QuantizedBlocks {
             symbols: ex.symbols,
@@ -126,6 +134,10 @@ pub fn allreduce_worker<L: Link>(
 
     // --- All-gather (lossless circulation). --------------------------
     for s in 0..w - 1 {
+        let _sp = obs::span("allreduce.hop")
+            .arg("rank", i)
+            .arg("step", s)
+            .arg("phase", "all-gather");
         let send_ci = (i + 1 + w - s) % w;
         let q = quantized[send_ci]
             .as_ref()
@@ -138,6 +150,7 @@ pub fn allreduce_worker<L: Link>(
             &q.scales,
             chunk_symbols,
         )?;
+        hops.inc();
         stats.add_hop(&ex);
         let recv_ci = (i + w - s) % w;
         quantized[recv_ci] = Some(QuantizedBlocks {
@@ -191,7 +204,12 @@ pub fn allgather_shards_worker<L: Link>(
     let mut stats = WorkerStats::default();
     let mut enc = None;
     let mut dec = None;
+    let hops = obs::global().counter("collective_hops_total");
     for s in 0..world - 1 {
+        let _sp = obs::span("allgather.hop")
+            .arg("rank", rank)
+            .arg("step", s)
+            .arg("phase", "shard-gather");
         let send_i = (rank + world - s) % world;
         // Borrow the body for the hop only (no per-hop clone of a
         // potentially large compressed shard).
@@ -208,6 +226,7 @@ pub fn allgather_shards_worker<L: Link>(
                 DEFAULT_TRANSPORT_CHUNK,
             )?
         };
+        hops.inc();
         stats.wire_bytes += ex.wire_bytes;
         stats.raw_bytes += shard_symbols[send_i];
         stats.codec_s += ex.trace.codec_s();

@@ -1,5 +1,10 @@
 //! Pipeline metrics: compression ratio and throughput accounting for
 //! the coordinator (and its JSON report for the CLI).
+//!
+//! The pipeline's counters themselves live on the coordinator's
+//! private [`obs::Registry`](crate::obs::Registry); this struct is the
+//! derived, report-facing view ([`Pipeline::metrics`](super::Pipeline)
+//! reconstructs it from a registry snapshot).
 
 use crate::util::json::Json;
 
@@ -15,31 +20,39 @@ pub struct PipelineMetrics {
 }
 
 impl PipelineMetrics {
-    /// Fraction of bytes removed (the paper's metric).
-    pub fn compressibility(&self) -> f64 {
+    /// Fraction of bytes removed (the paper's metric).  `None` when no
+    /// input bytes were processed — an empty pipeline has no ratio,
+    /// and reporting `0.0` would be indistinguishable from "ran and
+    /// compressed nothing away".
+    pub fn compressibility(&self) -> Option<f64> {
         if self.input_bytes == 0 {
-            return 0.0;
+            return None;
         }
-        1.0 - self.output_bytes as f64 / self.input_bytes as f64
+        Some(1.0 - self.output_bytes as f64 / self.input_bytes as f64)
     }
 
-    /// Aggregate codec throughput, MB/s (1e6 bytes).
-    pub fn throughput_mbps(&self) -> f64 {
+    /// Aggregate codec throughput, MB/s (1e6 bytes).  `None` when no
+    /// codec time was recorded (zero denominator).
+    pub fn throughput_mbps(&self) -> Option<f64> {
         if self.codec_seconds <= 0.0 {
-            return 0.0;
+            return None;
         }
-        self.input_bytes as f64 / self.codec_seconds / 1e6
+        Some(self.input_bytes as f64 / self.codec_seconds / 1e6)
     }
 
     pub fn to_json(&self) -> Json {
+        let ratio = |v: Option<f64>| match v {
+            Some(x) => Json::from(x),
+            None => Json::from("n/a"),
+        };
         Json::obj()
             .set("jobs", self.jobs as usize)
             .set("shards", self.shards as usize)
             .set("input_bytes", self.input_bytes as usize)
             .set("output_bytes", self.output_bytes as usize)
             .set("codec_seconds", self.codec_seconds)
-            .set("compressibility", self.compressibility())
-            .set("throughput_mbps", self.throughput_mbps())
+            .set("compressibility", ratio(self.compressibility()))
+            .set("throughput_mbps", ratio(self.throughput_mbps()))
     }
 }
 
@@ -48,10 +61,29 @@ mod tests {
     use super::*;
 
     #[test]
-    fn empty_metrics_are_zero() {
+    fn empty_metrics_have_no_ratios() {
+        // Regression: both ratios used to silently return 0.0 on a
+        // zero denominator, conflating "nothing ran" with "ran and
+        // achieved zero".  They are `None` now, rendered "n/a".
         let m = PipelineMetrics::default();
-        assert_eq!(m.compressibility(), 0.0);
-        assert_eq!(m.throughput_mbps(), 0.0);
+        assert_eq!(m.compressibility(), None);
+        assert_eq!(m.throughput_mbps(), None);
+        let j = m.to_json();
+        assert_eq!(j.get("compressibility").unwrap().as_str(), Some("n/a"));
+        assert_eq!(j.get("throughput_mbps").unwrap().as_str(), Some("n/a"));
+    }
+
+    #[test]
+    fn zero_codec_seconds_only_masks_throughput() {
+        let m = PipelineMetrics {
+            jobs: 1,
+            shards: 0,
+            input_bytes: 100,
+            output_bytes: 80,
+            codec_seconds: 0.0,
+        };
+        assert!(m.compressibility().is_some());
+        assert_eq!(m.throughput_mbps(), None);
     }
 
     #[test]
@@ -63,8 +95,10 @@ mod tests {
             output_bytes: 85,
             codec_seconds: 0.5,
         };
-        assert!((m.compressibility() - 0.15).abs() < 1e-12);
-        assert!((m.throughput_mbps() - 100.0 / 0.5 / 1e6).abs() < 1e-12);
+        assert!((m.compressibility().unwrap() - 0.15).abs() < 1e-12);
+        assert!(
+            (m.throughput_mbps().unwrap() - 100.0 / 0.5 / 1e6).abs() < 1e-12
+        );
     }
 
     #[test]

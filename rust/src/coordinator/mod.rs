@@ -27,6 +27,7 @@ use std::time::Instant;
 
 use crate::codecs::frame::{self, FrameOptions, ShardManifest};
 use crate::codecs::{chunk_spans, CodecRegistry};
+use crate::obs;
 use crate::stats::Histogram;
 use metrics::PipelineMetrics;
 
@@ -69,7 +70,10 @@ pub struct Pipeline {
     tx: Option<SyncSender<Job>>,
     rx_done: Receiver<Done>,
     handles: Vec<JoinHandle<()>>,
-    metrics: Arc<Mutex<PipelineMetrics>>,
+    /// Private metric registry — one per pipeline, so concurrent
+    /// pipelines (and tests) never see each other's counts.
+    /// [`Pipeline::metrics`] derives [`PipelineMetrics`] from it.
+    obs: Arc<obs::Registry>,
     chunk_size: usize,
     /// The codec's wire identity (tag + table header), captured from
     /// the first worker's resolve — all the leader needs to assemble a
@@ -98,7 +102,7 @@ impl Pipeline {
         let (tx, rx) = sync_channel::<Job>(config.queue_depth);
         let (tx_done, rx_done) = sync_channel::<Done>(config.queue_depth * 2);
         let rx = Arc::new(Mutex::new(rx));
-        let metrics = Arc::new(Mutex::new(PipelineMetrics::default()));
+        let obs_reg = Arc::new(obs::Registry::new());
         let mut wire_identity: Option<(u8, Vec<u8>)> = None;
 
         let mut handles = Vec::with_capacity(config.workers);
@@ -115,7 +119,11 @@ impl Pipeline {
             }
             let rx = rx.clone();
             let tx_done = tx_done.clone();
-            let metrics = metrics.clone();
+            let jobs_total = obs_reg.counter("pipeline_jobs_total");
+            let shards_total = obs_reg.counter("pipeline_shards_total");
+            let input_bytes = obs_reg.counter("pipeline_input_bytes_total");
+            let output_bytes = obs_reg.counter("pipeline_output_bytes_total");
+            let codec_ns = obs_reg.hist("pipeline_codec_ns");
             handles.push(thread::spawn(move || loop {
                 let job = {
                     // lint: infallible(worker-pool mutex: poisoned only
@@ -126,6 +134,9 @@ impl Pipeline {
                 };
                 let Ok(job) = job else { break };
                 let slice = &job.stream[job.start..job.start + job.len];
+                let _sp = obs::span("pipeline.job")
+                    .arg("seq", job.seq)
+                    .arg("symbols", job.len);
                 let t0 = Instant::now();
                 // Job slices are always far below the QLF2 chunk cap,
                 // so the checked writer cannot fail here.
@@ -149,18 +160,13 @@ impl Pipeline {
                     .expect("pipeline shards stay under the QLF2 chunk cap"),
                 };
                 let dt = t0.elapsed().as_secs_f64();
-                {
-                    // lint: infallible(metrics mutex: poisoned only if a
-                    // sibling worker already panicked)
-                    let mut m = metrics.lock().expect("metrics");
-                    m.jobs += 1;
-                    if job.shard.is_some() {
-                        m.shards += 1;
-                    }
-                    m.input_bytes += job.len as u64;
-                    m.output_bytes += bytes.len() as u64;
-                    m.codec_seconds += dt;
+                jobs_total.inc();
+                if job.shard.is_some() {
+                    shards_total.inc();
                 }
+                input_bytes.add(job.len as u64);
+                output_bytes.add(bytes.len() as u64);
+                codec_ns.record((dt * 1e9) as u64);
                 if tx_done
                     .send(Done {
                         seq: job.seq,
@@ -180,7 +186,7 @@ impl Pipeline {
             tx: Some(tx),
             rx_done,
             handles,
-            metrics,
+            obs: obs_reg,
             chunk_size: config.chunk_size,
             wire_tag,
             wire_header,
@@ -289,14 +295,30 @@ impl Pipeline {
         Ok(out)
     }
 
+    /// Report-facing metrics, derived from the pipeline's private
+    /// observability registry (lock-free atomics on the worker path —
+    /// the old bespoke `Mutex<PipelineMetrics>` is gone).
     pub fn metrics(&self) -> PipelineMetrics {
-        // A poisoned metrics mutex (a worker panicked mid-update) still
-        // holds valid-enough counters; return them instead of
-        // propagating the panic to the caller.
-        self.metrics
-            .lock()
-            .map(|m| m.clone())
-            .unwrap_or_else(|poisoned| poisoned.into_inner().clone())
+        let snap = self.obs.snapshot();
+        let c = |key: &str| snap.counters.get(key).copied().unwrap_or(0);
+        let codec_ns = snap
+            .hists
+            .get("pipeline_codec_ns")
+            .map(|h| h.sum)
+            .unwrap_or(0);
+        PipelineMetrics {
+            jobs: c("pipeline_jobs_total"),
+            shards: c("pipeline_shards_total"),
+            input_bytes: c("pipeline_input_bytes_total"),
+            output_bytes: c("pipeline_output_bytes_total"),
+            codec_seconds: codec_ns as f64 / 1e9,
+        }
+    }
+
+    /// Raw snapshot of the pipeline's registry (counters plus the
+    /// per-job codec latency histogram), for exporters.
+    pub fn obs_snapshot(&self) -> obs::Snapshot {
+        self.obs.snapshot()
     }
 
     /// Graceful shutdown (also runs on drop).
@@ -411,7 +433,20 @@ mod tests {
         assert_eq!(m.shards, 0, "frame jobs are not shard jobs");
         assert!(m.output_bytes > 0);
         assert!(m.codec_seconds > 0.0);
-        assert!(m.compressibility() > 0.0, "skewed data must compress");
+        assert!(
+            m.compressibility().unwrap() > 0.0,
+            "skewed data must compress"
+        );
+        // The registry view agrees with the derived struct: one
+        // latency sample per job, on this pipeline's private registry
+        // (concurrent tests must not bleed into these counts).
+        let snap = pipe.obs_snapshot();
+        let lat = snap.hists.get("pipeline_codec_ns").unwrap();
+        assert_eq!(lat.count, m.jobs);
+        assert_eq!(
+            snap.counters.get("pipeline_input_bytes_total").copied(),
+            Some(symbols.len() as u64)
+        );
     }
 
     #[test]

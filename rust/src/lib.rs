@@ -23,6 +23,9 @@
 //!   processes over sockets (`qlc worker` / `qlc launch`);
 //! * [`coordinator`] — threaded leader/worker compression pipeline
 //!   placing frame/shard descriptors on a worker pool;
+//! * [`obs`] — dependency-free observability: atomic counter/histogram
+//!   registry (p50/p90/p99, cross-rank merge), runtime-switched spans,
+//!   Chrome-trace and Prometheus-text exporters (`--trace`/`--metrics`);
 //! * `runtime` — PJRT executor for the AOT JAX/Pallas artifacts
 //!   (feature `pjrt`; needs the `xla` + `anyhow` crates, see
 //!   `Cargo.toml`);
@@ -41,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod formats;
 pub mod hw;
+pub mod obs;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -30,6 +30,7 @@ use qlc::data::trace::Trace;
 use qlc::data::{calibrate_generator, TensorGen, TensorKind};
 use qlc::formats::Variant;
 use qlc::hw;
+use qlc::obs;
 use qlc::report;
 #[cfg(feature = "pjrt")]
 use qlc::runtime::{inputs::InputStats, Runtime};
@@ -43,7 +44,7 @@ const VALUE_OPTS: &[&str] = &[
     "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
     "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
     "name", "prefix", "rank", "world", "listen", "connect", "timeout-s",
-    "decode", "encode", "src", "baseline",
+    "decode", "encode", "src", "baseline", "trace", "metrics",
 ];
 
 fn main() -> ExitCode {
@@ -127,6 +128,10 @@ USAGE: qlc <subcommand> [options]
   collective --op allreduce|allgather --workers W --size N --codec C
              [--fabric pod|superpod|ethernet]
              [--bandwidth-gbps G] [--latency-us L] [--json]
+             [--trace FILE]    (Chrome trace-event JSON of the run's
+                                spans — load in Perfetto/about:tracing)
+             [--metrics FILE]  (metric snapshot: Prometheus text, or
+                                the JSON form when FILE ends in .json)
              (reports serial + chunk-pipelined time and overlap savings)
   hw         [--seed S] [--n SYMBOLS] [--json]
   formats    [--n SYMBOLS] [--seed S]      cross-eXmY-format QLC sweep
@@ -138,12 +143,20 @@ USAGE: qlc <subcommand> [options]
              [--op allreduce|allgather] [--codec C] [--size N]
              [--chunk SYMBOLS] [--seed S] [--timeout-s T]
              [--out FILE] [--json]
+             [--trace FILE] [--metrics FILE]
              (rank 0 listens for the rendezvous; other ranks connect;
-              the ring then runs over real TCP sockets)
+              the ring then runs over real TCP sockets; --trace writes
+              this rank's Chrome trace with pid = rank, --metrics its
+              metric snapshot — Prometheus text, or JSON when FILE
+              ends in .json)
   launch     --world N [--op allreduce|allgather] [--codec C] [--size N]
              [--chunk SYMBOLS] [--seed S] [--timeout-s T] [--json]
+             [--trace FILE] [--metrics FILE]
              (spawns N local `qlc worker` processes on 127.0.0.1 and
-              checks all ranks finish with bit-identical results)
+              checks all ranks finish with bit-identical results;
+              --trace merges every rank's trace into one world-level
+              Chrome trace — one pid per rank — and --metrics folds
+              every rank's counters/histograms into one snapshot)
 ";
 
 // ---------------------------------------------------------------------------
@@ -461,6 +474,10 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_collective(args: &Args) -> Result<(), String> {
+    let trace_path = args.opt("trace");
+    if trace_path.is_some() {
+        obs::set_trace(true);
+    }
     let op = args.opt_or("op", "allreduce");
     let workers = args.opt_usize("workers", 8).map_err(|e| e.to_string())?;
     if workers == 0 {
@@ -551,6 +568,21 @@ fn cmd_collective(args: &Args) -> Result<(), String> {
             report.pipelined_time_s * 1e3,
             report.overlap_savings() * 100.0,
         );
+    }
+    if let Some(path) = trace_path {
+        obs::write_trace(Path::new(path), 0, "collective-sim")
+            .map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("trace -> {path}");
+    }
+    if let Some(path) = args.opt("metrics") {
+        let art = report::obs_artifact("OBS", &obs::global().snapshot());
+        let body = if path.ends_with(".json") {
+            art.json.to_string_pretty()
+        } else {
+            art.text
+        };
+        std::fs::write(path, body).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("metrics -> {path}");
     }
     Ok(())
 }
@@ -735,10 +767,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         units,
         m.input_bytes,
         m.output_bytes,
-        m.compressibility() * 100.0,
+        m.compressibility().unwrap_or(0.0) * 100.0,
         wall,
         m.input_bytes as f64 / wall / 1e6,
-        m.throughput_mbps()
+        m.throughput_mbps().unwrap_or(0.0)
     );
     Ok(())
 }
@@ -841,9 +873,29 @@ fn cmd_worker(args: &Args) -> Result<(), String> {
     let mut cfg = dist_template(args, world)?;
     cfg.rank = rank;
     cfg.addr = addr;
+    // Tracing must be armed before the ring forms so the rendezvous
+    // and every hop land in the ring buffers.
+    let trace_path = args.opt("trace");
+    if trace_path.is_some() {
+        obs::set_trace(true);
+    }
     let outcome = dist::run_worker(&cfg)?;
     if let Some(path) = args.opt("out") {
         std::fs::write(path, &outcome.result_bytes)
+            .map_err(|e| format!("{path}: {e}"))?;
+    }
+    if let Some(path) = trace_path {
+        // One pid per rank: `qlc launch` merges the per-rank traces
+        // into a single world-level timeline.
+        obs::write_trace(
+            Path::new(path),
+            rank as u64,
+            &format!("rank {rank}"),
+        )
+        .map_err(|e| format!("{path}: {e}"))?;
+    }
+    if let Some(path) = args.opt("metrics") {
+        obs::write_metrics(Path::new(path), &obs::global().snapshot())
             .map_err(|e| format!("{path}: {e}"))?;
     }
     let r = &outcome.report;
@@ -911,6 +963,15 @@ fn cmd_launch(args: &Args) -> Result<(), String> {
             let role = if rank == 0 { "--listen" } else { "--connect" };
             argv.push(role.to_string());
             argv.push(addr.clone());
+        }
+        // Per-rank observability temps; merged (and removed) below.
+        if let Some(t) = args.opt("trace") {
+            argv.push("--trace".to_string());
+            argv.push(format!("{t}.rank{rank}"));
+        }
+        if let Some(m) = args.opt("metrics") {
+            argv.push("--metrics".to_string());
+            argv.push(format!("{m}.rank{rank}.json"));
         }
         let mut cmd = std::process::Command::new(&exe);
         cmd.args(argv);
@@ -980,6 +1041,41 @@ fn cmd_launch(args: &Args) -> Result<(), String> {
                  — distributed result diverged"
             ));
         }
+    }
+    // Merge the per-rank observability temps into world-level files:
+    // trace events concatenate (each rank already carries its own
+    // pid), metric snapshots fold counter-wise/bucket-wise.
+    if let Some(t) = args.opt("trace") {
+        let mut parts = Vec::with_capacity(world);
+        for rank in 0..world {
+            let path = format!("{t}.rank{rank}");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("{path}: {e}"))?;
+            parts.push(
+                Json::parse(&text).map_err(|e| format!("{path}: {e}"))?,
+            );
+            let _ = std::fs::remove_file(&path);
+        }
+        let merged = obs::merge_chrome_traces(&parts);
+        std::fs::write(t, merged.to_string_pretty())
+            .map_err(|e| format!("{t}: {e}"))?;
+        eprintln!("world trace ({world} ranks) -> {t}");
+    }
+    if let Some(m) = args.opt("metrics") {
+        let mut merged = obs::Snapshot::default();
+        for rank in 0..world {
+            let path = format!("{m}.rank{rank}.json");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("{path}: {e}"))?;
+            merged.merge(
+                &obs::Snapshot::parse(&text)
+                    .map_err(|e| format!("{path}: {e}"))?,
+            );
+            let _ = std::fs::remove_file(&path);
+        }
+        obs::write_metrics(Path::new(m), &merged)
+            .map_err(|e| format!("{m}: {e}"))?;
+        eprintln!("world metrics ({world} ranks) -> {m}");
     }
     let scalar = |k: &str| -> f64 {
         reports[0].get(k).and_then(|j| j.as_f64()).unwrap_or(0.0)

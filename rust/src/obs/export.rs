@@ -1,0 +1,316 @@
+//! Exporters: Chrome trace-event JSON and metrics snapshots.
+//!
+//! The trace format is the Chrome/Perfetto "trace event" JSON object:
+//! `{"traceEvents": [...]}` with complete-duration (`ph:"X"`) events —
+//! `ts`/`dur` in *microseconds* — plus `ph:"M"` metadata events naming
+//! each process and thread.  A `qlc launch` world merges one such
+//! trace per rank ([`merge_chrome_traces`]), with the rank as the
+//! `pid`, so Perfetto shows one process track per rank and one thread
+//! track per worker thread.
+//!
+//! Metrics go out via [`write_metrics`]: a `.json` path gets the
+//! [`Snapshot`] JSON form (machine-mergeable), any other path gets the
+//! Prometheus-style text exposition (human-readable, carries
+//! p50/p90/p99 per histogram).
+
+use std::path::Path;
+
+use crate::obs::registry::Snapshot;
+use crate::obs::span::{drain_events, ThreadEvents};
+use crate::util::json::Json;
+
+/// Build one Chrome trace-event JSON object from drained span events.
+/// `pid` labels every event (one pid per rank in a launch world) and
+/// `process_name` becomes its Perfetto track title.
+pub fn chrome_trace_from(
+    threads: &[ThreadEvents],
+    pid: u64,
+    process_name: &str,
+) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    events.push(
+        Json::obj()
+            .set("ph", "M")
+            .set("name", "process_name")
+            .set("pid", pid as f64)
+            .set("tid", 0.0)
+            .set("args", Json::obj().set("name", process_name)),
+    );
+    for t in threads {
+        events.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("name", "thread_name")
+                .set("pid", pid as f64)
+                .set("tid", t.tid as f64)
+                .set(
+                    "args",
+                    Json::obj().set(
+                        "name",
+                        format!("{} (tid {})", t.thread_name, t.tid),
+                    ),
+                ),
+        );
+        for ev in &t.events {
+            let mut args = Json::obj();
+            for (k, v) in &ev.args {
+                args = args.set(k, v.as_str());
+            }
+            events.push(
+                Json::obj()
+                    .set("ph", "X")
+                    .set("name", ev.name.as_str())
+                    .set("pid", pid as f64)
+                    .set("tid", t.tid as f64)
+                    .set("ts", ev.start_ns as f64 / 1000.0)
+                    .set("dur", ev.dur_ns as f64 / 1000.0)
+                    .set("args", args),
+            );
+        }
+        if t.dropped > 0 {
+            // Surface ring overflow in the trace itself rather than
+            // silently under-reporting.
+            events.push(
+                Json::obj()
+                    .set("ph", "M")
+                    .set("name", "dropped_events")
+                    .set("pid", pid as f64)
+                    .set("tid", t.tid as f64)
+                    .set(
+                        "args",
+                        Json::obj().set("dropped", t.dropped as f64),
+                    ),
+            );
+        }
+    }
+    Json::obj().set("traceEvents", events)
+}
+
+/// Drain this process's span rings into a Chrome trace object.
+pub fn chrome_trace(pid: u64, process_name: &str) -> Json {
+    chrome_trace_from(&drain_events(), pid, process_name)
+}
+
+/// Concatenate the `traceEvents` arrays of several traces (typically
+/// one per rank, each already stamped with its own pid).
+pub fn merge_chrome_traces(traces: &[Json]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for t in traces {
+        if let Some(arr) = t.get("traceEvents").and_then(|e| e.as_arr()) {
+            events.extend(arr.iter().cloned());
+        }
+    }
+    Json::obj().set("traceEvents", events)
+}
+
+/// Drain spans and write a Chrome trace file.
+pub fn write_trace(
+    path: &Path,
+    pid: u64,
+    process_name: &str,
+) -> std::io::Result<()> {
+    let trace = chrome_trace(pid, process_name);
+    std::fs::write(path, trace.to_string_pretty())
+}
+
+/// Write a metrics snapshot: `.json` paths get the JSON form, anything
+/// else the Prometheus-style text exposition.
+pub fn write_metrics(path: &Path, snap: &Snapshot) -> std::io::Result<()> {
+    let is_json = path
+        .extension()
+        .map_or(false, |e| e.eq_ignore_ascii_case("json"));
+    let body = if is_json {
+        snap.to_json().to_string_pretty()
+    } else {
+        snap.to_prometheus()
+    };
+    std::fs::write(path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+    use crate::obs::span::tests::{drain_named, trace_lock};
+    use crate::obs::span::{set_trace, span, SpanEvent};
+    use crate::util::prop::{self, Config};
+    use crate::util::rng::Rng;
+
+    fn arb_threads(rng: &mut Rng, size: usize) -> Vec<ThreadEvents> {
+        let n_threads = rng.below(4) as usize;
+        (0..n_threads)
+            .map(|i| {
+                let n_ev = rng.below(size.max(1) as u64) as usize;
+                let events = (0..n_ev)
+                    .map(|_| SpanEvent {
+                        name: format!("ev{}", rng.below(5)),
+                        start_ns: rng.next_u64() >> 20,
+                        dur_ns: rng.next_u64() >> 24,
+                        args: if rng.below(2) == 0 {
+                            vec![(
+                                "k\"quoted\\".to_string(),
+                                format!("v{}", rng.below(9)),
+                            )]
+                        } else {
+                            Vec::new()
+                        },
+                    })
+                    .collect();
+                ThreadEvents {
+                    tid: i as u64 + 1,
+                    thread_name: format!("w{i}"),
+                    events,
+                    dropped: rng.below(2),
+                }
+            })
+            .collect()
+    }
+
+    /// The export must round-trip through the repo's own JSON parser
+    /// (i.e. be valid JSON even with hostile span args) and every
+    /// duration event must carry a non-negative `dur`.
+    #[test]
+    fn prop_chrome_trace_is_valid_json_with_nonnegative_durations() {
+        prop::check(
+            "chrome_trace_valid",
+            Config { cases: 48, base_seed: 0xc0de, max_size: 64 },
+            |rng, size| {
+                let threads = arb_threads(rng, size);
+                let n_events: usize =
+                    threads.iter().map(|t| t.events.len()).sum();
+                let trace = chrome_trace_from(&threads, 7, "rank 7");
+                let text = trace.to_string_pretty();
+                let parsed = Json::parse(&text)
+                    .map_err(|e| format!("invalid JSON: {e}"))?;
+                let arr = parsed
+                    .get("traceEvents")
+                    .and_then(|e| e.as_arr())
+                    .ok_or("missing traceEvents")?;
+                let mut n_x = 0usize;
+                for ev in arr {
+                    let ph = ev
+                        .get("ph")
+                        .and_then(|p| p.as_str())
+                        .ok_or("event missing ph")?;
+                    if ph != "X" {
+                        continue;
+                    }
+                    n_x += 1;
+                    let dur = ev
+                        .get("dur")
+                        .and_then(|d| d.as_f64())
+                        .ok_or("X event missing dur")?;
+                    if dur < 0.0 {
+                        return Err(format!("negative dur {dur}"));
+                    }
+                    if ev.get("pid").and_then(|p| p.as_f64()) != Some(7.0) {
+                        return Err("wrong pid".into());
+                    }
+                }
+                if n_x != n_events {
+                    return Err(format!(
+                        "{n_x} X events exported for {n_events} spans"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_concatenates_rank_traces() {
+        let mk = |pid: u64| {
+            chrome_trace_from(
+                &[ThreadEvents {
+                    tid: 1,
+                    thread_name: "main".into(),
+                    events: vec![SpanEvent {
+                        name: "hop".into(),
+                        start_ns: 1000,
+                        dur_ns: 500,
+                        args: Vec::new(),
+                    }],
+                    dropped: 0,
+                }],
+                pid,
+                &format!("rank {pid}"),
+            )
+        };
+        let merged = merge_chrome_traces(&[mk(0), mk(1), mk(2)]);
+        let arr = merged.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let mut pids: Vec<f64> = arr
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .filter_map(|e| e.get("pid").and_then(|p| p.as_f64()))
+            .collect();
+        pids.sort_by(f64::total_cmp);
+        assert_eq!(pids, vec![0.0, 1.0, 2.0]);
+        // One process_name metadata record per rank survives the merge.
+        let names = arr
+            .iter()
+            .filter(|e| {
+                e.get("name").and_then(|n| n.as_str())
+                    == Some("process_name")
+            })
+            .count();
+        assert_eq!(names, 3);
+    }
+
+    #[test]
+    fn live_spans_export_through_chrome_trace() {
+        let _g = trace_lock();
+        set_trace(true);
+        {
+            let _s = span("export_test_live").arg("band", 2);
+        }
+        set_trace(false);
+        let events = drain_named("export_test_live");
+        assert_eq!(events.len(), 1);
+        let trace = chrome_trace_from(
+            &[ThreadEvents {
+                tid: 9,
+                thread_name: "t".into(),
+                events,
+                dropped: 0,
+            }],
+            0,
+            "rank 0",
+        );
+        let text = trace.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let x = arr
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .unwrap();
+        assert_eq!(
+            x.get("name").and_then(|n| n.as_str()),
+            Some("export_test_live")
+        );
+        assert_eq!(
+            x.get("args").and_then(|a| a.get("band")).and_then(|b| b.as_str()),
+            Some("2")
+        );
+    }
+
+    #[test]
+    fn write_metrics_picks_format_by_extension() {
+        let reg = Registry::new();
+        reg.counter("c_total").add(4);
+        reg.hist("d_ns").record(1_000);
+        let snap = reg.snapshot();
+        let dir = std::env::temp_dir();
+        let txt = dir.join("qlc_obs_test_metrics.txt");
+        let json = dir.join("qlc_obs_test_metrics.json");
+        write_metrics(&txt, &snap).unwrap();
+        write_metrics(&json, &snap).unwrap();
+        let prom = std::fs::read_to_string(&txt).unwrap();
+        assert!(prom.contains("c_total 4"), "{prom}");
+        assert!(prom.contains("d_ns{quantile=\"0.5\"}"), "{prom}");
+        let back =
+            Snapshot::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        let _ = std::fs::remove_file(&txt);
+        let _ = std::fs::remove_file(&json);
+    }
+}

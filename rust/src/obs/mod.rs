@@ -1,0 +1,50 @@
+//! Observability substrate: counters, log2 latency histograms and
+//! lightweight spans, with Chrome-trace and Prometheus-text exporters.
+//!
+//! Dependency-free by design (no tracing/prometheus crates — the same
+//! offline discipline as [`crate::analysis`]), because it instruments
+//! the hot paths whose performance the repo's claims rest on:
+//!
+//! * [`Registry`] — named atomic [`Counter`]s plus fixed-bucket log2
+//!   [`Hist`]ograms (p50/p90/p99 via [`HistSnapshot::quantile`]).  A
+//!   process-wide instance lives behind [`Registry::global`]; unit
+//!   tests and the coordinator pipeline use private instances so
+//!   concurrent runs never cross-contaminate counts.  [`Snapshot`]s
+//!   are order- and partition-invariant under [`Snapshot::merge`], so
+//!   per-rank snapshots from a `qlc launch` world fold into one.
+//! * [`span`] — RAII spans recorded into per-thread ring buffers
+//!   behind a runtime switch ([`set_trace`] / `QLC_TRACE=1`).  When
+//!   tracing is off a span is one relaxed atomic load and no clock
+//!   read; nothing is allocated or recorded.
+//! * [`chrome_trace`] / [`Snapshot::to_prometheus`] — exporters: the
+//!   Chrome trace-event JSON loads in Perfetto (`qlc launch --trace`
+//!   merges one pid per rank, one tid per worker thread); the
+//!   Prometheus-style text carries counter lines and summary-quantile
+//!   lines for every histogram.
+//!
+//! Metric keys carry their labels inline in Prometheus form —
+//! `base{k="v",...}` via [`label`] — so the registry map is flat and
+//! the exporters never re-parse label sets.
+
+mod export;
+mod registry;
+mod span;
+
+pub use export::{
+    chrome_trace, chrome_trace_from, merge_chrome_traces, write_metrics,
+    write_trace,
+};
+pub use registry::{
+    label, Counter, Hist, HistSnapshot, Registry, Snapshot, Stopwatch,
+    HIST_BUCKETS,
+};
+pub use span::{
+    drain_events, set_trace, span, trace_enabled, SpanEvent, SpanGuard,
+    ThreadEvents,
+};
+
+/// The process-wide registry ([`Registry::global`]), re-exported as a
+/// free function because every instrumentation site uses it.
+pub fn global() -> &'static Registry {
+    Registry::global()
+}

@@ -1,0 +1,673 @@
+//! Atomic counters, log2 histograms and mergeable snapshots.
+//!
+//! The hot path is lock-free: a [`Counter`] or [`Hist`] handle is an
+//! `Arc` onto shared atomics, acquired once (construction time) under
+//! a short registry lock and then recorded into with relaxed atomic
+//! adds.  Histograms use fixed power-of-two buckets — bucket `i` holds
+//! values whose bit length is `i` (bucket 0 holds zero, the last
+//! bucket absorbs everything ≥ 2^62) — so `merge` is a bucketwise sum
+//! and therefore order- and partition-invariant, and quantiles come
+//! from a cumulative scan returning the bucket's upper edge (a ≤ 2×
+//! overestimate, monotone in `q` by construction).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets: one per possible bit length (0..=63,
+/// with the last bucket absorbing 64-bit values too).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Monotonic nanosecond stopwatch for latency histograms.  Under Miri
+/// (which interprets no host clocks deterministically enough for
+/// throughput accounting) it reads zero, so instrumented library paths
+/// stay interpretable.
+pub struct Stopwatch {
+    #[cfg(not(miri))]
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch {
+            #[cfg(not(miri))]
+            start: std::time::Instant::now(),
+        }
+    }
+
+    /// Nanoseconds since [`Stopwatch::start`] (saturating at u64::MAX).
+    pub fn elapsed_ns(&self) -> u64 {
+        #[cfg(not(miri))]
+        {
+            u64::try_from(self.start.elapsed().as_nanos()).unwrap_or(u64::MAX)
+        }
+        #[cfg(miri)]
+        {
+            0
+        }
+    }
+}
+
+/// Lock a mutex, recovering the data from a poisoned lock (the only
+/// writers are atomic handle acquisitions; a panic mid-insert leaves
+/// the map structurally valid).
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Shared storage of one histogram.
+#[derive(Debug)]
+struct HistCore {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for HistCore {
+    // std ships Default for arrays only up to length 32, so spell the
+    // 64-bucket zero state out.
+    fn default() -> HistCore {
+        HistCore {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index of a value: its bit length, clamped into the table.
+fn bucket_index(v: u64) -> usize {
+    ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Upper edge of bucket `i` — the quantile estimate for values that
+/// landed there.
+fn bucket_edge(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Handle onto a registered counter; `clone` is cheap and all clones
+/// add into the same atomic.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A counter not attached to any registry (for tests / defaults).
+    pub fn detached() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle onto a registered histogram; `clone` is cheap and all clones
+/// record into the same buckets.
+#[derive(Clone, Debug)]
+pub struct Hist(Arc<HistCore>);
+
+impl Hist {
+    /// A histogram not attached to any registry.
+    pub fn detached() -> Hist {
+        Hist(Arc::new(HistCore::default()))
+    }
+
+    pub fn record(&self, v: u64) {
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (slot, b) in buckets.iter_mut().zip(&self.0.buckets) {
+            *slot = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.0.count.load(Ordering::Relaxed),
+            sum: self.0.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Quantile estimate straight off the live buckets.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        self.snapshot().quantile(q)
+    }
+}
+
+/// Frozen histogram state: mergeable, serializable, quantile-queryable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Bucketwise sum — the operation that makes cross-thread and
+    /// cross-rank aggregation order- and partition-invariant.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// The value at quantile `q` (clamped to `[0, 1]`): the upper edge
+    /// of the first bucket whose cumulative count reaches `ceil(q *
+    /// count)`.  `None` on an empty histogram.  Monotone in `q`.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return Some(bucket_edge(i));
+            }
+        }
+        // Bucket counts sum to `count`, so the scan always returns
+        // above; this arm is unreachable but cheap to keep total.
+        Some(bucket_edge(HIST_BUCKETS - 1))
+    }
+
+    /// Mean of the recorded values (exact — the sum is tracked
+    /// outside the buckets).  `None` on an empty histogram.
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum as f64 / self.count as f64)
+        }
+    }
+}
+
+/// A set of named counters and histograms.  Hot-path handles are
+/// acquired once and recorded into lock-free; the internal maps are
+/// locked only at acquisition and snapshot time.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<String, Arc<HistCore>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry every library instrumentation site
+    /// records into by default.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Handle onto the counter named `name` (created on first use).
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = lock_or_recover(&self.counters);
+        Counter(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+                .clone(),
+        )
+    }
+
+    /// Handle onto the histogram named `name` (created on first use).
+    pub fn hist(&self, name: &str) -> Hist {
+        let mut map = lock_or_recover(&self.hists);
+        Hist(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(HistCore::default()))
+                .clone(),
+        )
+    }
+
+    /// Freeze every metric into a [`Snapshot`].
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = lock_or_recover(&self.counters)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let hists = lock_or_recover(&self.hists)
+            .iter()
+            .map(|(k, core)| (k.clone(), Hist(core.clone()).snapshot()))
+            .collect();
+        Snapshot { counters, hists }
+    }
+}
+
+/// Build a metric key with inline Prometheus-style labels:
+/// `label("x_ns", &[("codec", "qlc")])` → `x_ns{codec="qlc"}`.
+pub fn label(base: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return base.to_string();
+    }
+    let mut out = String::with_capacity(base.len() + 16 * labels.len());
+    out.push_str(base);
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(v);
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Split a `base{labels}` key into `(base, labels-with-braces)`;
+/// plain keys return an empty label part.
+fn split_key(key: &str) -> (&str, &str) {
+    match key.find('{') {
+        Some(i) => (&key[..i], &key[i..]),
+        None => (key, ""),
+    }
+}
+
+/// Insert one more label into a key's label set (creating it if the
+/// key has none) — used to stamp `quantile="..."` onto summary lines.
+fn with_extra_label(key: &str, extra: &str) -> String {
+    let (base, labels) = split_key(key);
+    if labels.is_empty() {
+        format!("{base}{{{extra}}}")
+    } else {
+        // labels == "{...}": splice before the closing brace.
+        let inner = &labels[1..labels.len() - 1];
+        format!("{base}{{{inner},{extra}}}")
+    }
+}
+
+/// Suffix a key's *base* name, keeping its labels: `x{k="v"}` →
+/// `x_count{k="v"}`.
+fn with_suffix(key: &str, suffix: &str) -> String {
+    let (base, labels) = split_key(key);
+    format!("{base}{suffix}{labels}")
+}
+
+/// Frozen registry state: serializable (JSON), renderable (Prometheus
+/// text) and mergeable across threads, processes and ranks.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl Snapshot {
+    /// Fold `other` into `self`: counters add, histograms merge
+    /// bucketwise.  Commutative and associative — a world-level
+    /// snapshot is the same whatever order the ranks merge in.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(k, *v as f64);
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.hists {
+            let buckets: Vec<f64> =
+                h.buckets.iter().map(|&b| b as f64).collect();
+            hists = hists.set(
+                k,
+                Json::obj()
+                    .set("count", h.count as f64)
+                    .set("sum", h.sum as f64)
+                    .set("buckets", buckets),
+            );
+        }
+        Json::obj().set("counters", counters).set("hists", hists)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Snapshot, String> {
+        let mut snap = Snapshot::default();
+        if let Some(Json::Obj(m)) = j.get("counters") {
+            for (k, v) in m {
+                let v = v
+                    .as_f64()
+                    .ok_or_else(|| format!("counter {k} is not a number"))?;
+                snap.counters.insert(k.clone(), v as u64);
+            }
+        }
+        if let Some(Json::Obj(m)) = j.get("hists") {
+            for (k, h) in m {
+                let count = h
+                    .get("count")
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| format!("hist {k} missing count"))?
+                    as u64;
+                let sum = h
+                    .get("sum")
+                    .and_then(|x| x.as_f64())
+                    .ok_or_else(|| format!("hist {k} missing sum"))?
+                    as u64;
+                let arr = h
+                    .get("buckets")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| format!("hist {k} missing buckets"))?;
+                if arr.len() > HIST_BUCKETS {
+                    return Err(format!(
+                        "hist {k} has {} buckets (max {HIST_BUCKETS})",
+                        arr.len()
+                    ));
+                }
+                let mut buckets = [0u64; HIST_BUCKETS];
+                for (i, b) in arr.iter().enumerate() {
+                    buckets[i] = b
+                        .as_f64()
+                        .ok_or_else(|| format!("hist {k} bucket {i}"))?
+                        as u64;
+                }
+                snap.hists
+                    .insert(k.clone(), HistSnapshot { buckets, count, sum });
+            }
+        }
+        Ok(snap)
+    }
+
+    pub fn parse(text: &str) -> Result<Snapshot, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        Snapshot::from_json(&j)
+    }
+
+    /// Prometheus-style text exposition: one line per counter, and for
+    /// every histogram a summary — `quantile="0.5|0.9|0.99"` lines
+    /// plus `_count` / `_sum`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = "";
+        for (k, v) in &self.counters {
+            let (base, _) = split_key(k);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} counter\n"));
+                last_base = base;
+            }
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        let mut last_base = "";
+        for (k, h) in &self.hists {
+            let (base, _) = split_key(k);
+            if base != last_base {
+                out.push_str(&format!("# TYPE {base} summary\n"));
+                last_base = base;
+            }
+            for (qs, q) in [("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99)] {
+                let line = with_extra_label(k, &format!("quantile=\"{qs}\""));
+                match h.quantile(q) {
+                    Some(v) => out.push_str(&format!("{line} {v}\n")),
+                    None => out.push_str(&format!("{line} NaN\n")),
+                }
+            }
+            out.push_str(&format!("{} {}\n", with_suffix(k, "_count"), h.count));
+            out.push_str(&format!("{} {}\n", with_suffix(k, "_sum"), h.sum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, Config};
+
+    #[test]
+    fn bucket_scheme_is_bit_length() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_edge(0), 0);
+        assert_eq!(bucket_edge(1), 1);
+        assert_eq!(bucket_edge(2), 3);
+        assert_eq!(bucket_edge(63), u64::MAX);
+    }
+
+    #[test]
+    fn counters_accumulate_across_clones() {
+        let reg = Registry::new();
+        let a = reg.counter("hits");
+        let b = reg.counter("hits");
+        a.add(2);
+        b.inc();
+        assert_eq!(reg.counter("hits").get(), 3);
+        assert_eq!(reg.snapshot().counters["hits"], 3);
+    }
+
+    #[test]
+    fn hist_quantiles_track_recorded_values() {
+        let reg = Registry::new();
+        let h = reg.hist("lat_ns");
+        for v in [10u64, 20, 30, 1000, 2000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 3060);
+        // p50 lands in 30's bucket [16,31]; the edge estimate is 31.
+        assert_eq!(s.quantile(0.5), Some(31));
+        // p99 lands in the top recorded bucket [1024,2047].
+        assert_eq!(s.quantile(0.99), Some(2047));
+        assert!(s.mean().unwrap() > 0.0);
+        assert_eq!(HistSnapshot::default().quantile(0.5), None);
+        assert_eq!(HistSnapshot::default().mean(), None);
+    }
+
+    #[test]
+    fn label_builder_and_key_surgery() {
+        assert_eq!(label("x", &[]), "x");
+        let k = label("x_ns", &[("codec", "qlc"), ("mode", "lanes")]);
+        assert_eq!(k, "x_ns{codec=\"qlc\",mode=\"lanes\"}");
+        assert_eq!(
+            with_extra_label(&k, "quantile=\"0.5\""),
+            "x_ns{codec=\"qlc\",mode=\"lanes\",quantile=\"0.5\"}"
+        );
+        assert_eq!(
+            with_extra_label("plain", "quantile=\"0.9\""),
+            "plain{quantile=\"0.9\"}"
+        );
+        assert_eq!(
+            with_suffix(&k, "_count"),
+            "x_ns_count{codec=\"qlc\",mode=\"lanes\"}"
+        );
+        assert_eq!(with_suffix("plain", "_sum"), "plain_sum");
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let reg = Registry::new();
+        reg.counter("c{op=\"x\"}").add(7);
+        let h = reg.hist("h_ns");
+        h.record(5);
+        h.record(500);
+        let snap = reg.snapshot();
+        let back =
+            Snapshot::parse(&snap.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn prometheus_text_has_quantiles_and_counts() {
+        let reg = Registry::new();
+        reg.counter("ops_total").inc();
+        let h = reg.hist("lat_ns{codec=\"qlc\"}");
+        h.record(100);
+        let text = reg.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE ops_total counter"), "{text}");
+        assert!(text.contains("ops_total 1"), "{text}");
+        assert!(
+            text.contains("lat_ns{codec=\"qlc\",quantile=\"0.5\"} 127"),
+            "{text}"
+        );
+        assert!(
+            text.contains("lat_ns{codec=\"qlc\",quantile=\"0.99\"} 127"),
+            "{text}"
+        );
+        assert!(text.contains("lat_ns_count{codec=\"qlc\"} 1"), "{text}");
+        assert!(text.contains("lat_ns_sum{codec=\"qlc\"} 100"), "{text}");
+    }
+
+    #[test]
+    fn empty_hist_renders_nan_quantiles() {
+        let reg = Registry::new();
+        let _ = reg.hist("never_recorded_ns");
+        let text = reg.snapshot().to_prometheus();
+        assert!(
+            text.contains("never_recorded_ns{quantile=\"0.5\"} NaN"),
+            "{text}"
+        );
+    }
+
+    /// Random values, random shard partition: merging per-shard
+    /// histograms (in shuffled order) must equal one histogram that
+    /// recorded everything — the invariant cross-rank merge rests on.
+    #[test]
+    fn prop_merge_is_order_and_partition_invariant() {
+        prop::check(
+            "hist_merge_invariance",
+            Config { cases: 64, base_seed: 0x0b5e, max_size: 512 },
+            |rng, size| {
+                let n = rng.below(size.max(1) as u64) as usize;
+                let values: Vec<u64> =
+                    (0..n).map(|_| rng.next_u64() >> (rng.below(64) as u32)).collect();
+                let shards = 1 + rng.below(7) as usize;
+                // Single recorder over everything.
+                let single = Hist::detached();
+                for &v in &values {
+                    single.record(v);
+                }
+                // Sharded recorders, assigned pseudo-randomly.
+                let parts: Vec<Hist> =
+                    (0..shards).map(|_| Hist::detached()).collect();
+                for &v in &values {
+                    parts[rng.below(shards as u64) as usize].record(v);
+                }
+                // Merge in a rotated (i.e. non-canonical) order.
+                let start = rng.below(shards as u64) as usize;
+                let mut merged = HistSnapshot::default();
+                for i in 0..shards {
+                    merged.merge(&parts[(start + i) % shards].snapshot());
+                }
+                if merged != single.snapshot() {
+                    return Err(format!(
+                        "merged {shards} shards != single recorder for \
+                         {n} values"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Quantiles must be monotone in `q` and bracket the recorded
+    /// range (upper-edge estimates are ≥ the true quantile value and
+    /// ≤ 2× its bucket ceiling).
+    #[test]
+    fn prop_quantiles_monotone() {
+        prop::check(
+            "hist_quantile_monotone",
+            Config { cases: 64, base_seed: 0x9a17, max_size: 512 },
+            |rng, size| {
+                let n = 1 + rng.below(size.max(1) as u64) as usize;
+                let h = Hist::detached();
+                let mut max = 0u64;
+                for _ in 0..n {
+                    let v = rng.next_u64() >> (rng.below(64) as u32);
+                    max = max.max(v);
+                    h.record(v);
+                }
+                let s = h.snapshot();
+                let mut prev = None;
+                for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+                    let v = s
+                        .quantile(q)
+                        .ok_or("non-empty hist returned None")?;
+                    if let Some(p) = prev {
+                        if v < p {
+                            return Err(format!(
+                                "quantile({q}) = {v} < previous {p}"
+                            ));
+                        }
+                    }
+                    prev = Some(v);
+                }
+                // p100 is the upper edge of the max value's bucket.
+                let top = s.quantile(1.0).ok_or("empty")?;
+                if top < max {
+                    return Err(format!("p100 {top} < recorded max {max}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn snapshot_merge_adds_counters_and_buckets() {
+        let a_reg = Registry::new();
+        a_reg.counter("c").add(1);
+        a_reg.hist("h").record(8);
+        let b_reg = Registry::new();
+        b_reg.counter("c").add(2);
+        b_reg.counter("only_b").add(5);
+        b_reg.hist("h").record(8);
+        let mut merged = a_reg.snapshot();
+        merged.merge(&b_reg.snapshot());
+        assert_eq!(merged.counters["c"], 3);
+        assert_eq!(merged.counters["only_b"], 5);
+        assert_eq!(merged.hists["h"].count, 2);
+        assert_eq!(merged.hists["h"].buckets[bucket_index(8)], 2);
+    }
+
+    #[test]
+    fn stopwatch_reports_monotone_ns() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+    }
+}

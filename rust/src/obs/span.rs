@@ -1,0 +1,316 @@
+//! Lightweight RAII spans behind a runtime switch.
+//!
+//! When tracing is off ([`trace_enabled`] == false) a [`span`] call is
+//! one relaxed atomic load: no clock read, no allocation, no lock.
+//! When on, each thread records `{name, start_ns, dur_ns, args}`
+//! events into its own fixed-capacity ring buffer; rings are
+//! registered in a process-wide list so [`drain_events`] can collect
+//! events from worker threads that have already exited (scoped threads
+//! in the frame encoder, the collective fleet, the coordinator pool).
+//!
+//! The switch initialises from the `QLC_TRACE` environment variable on
+//! first query and can be forced either way with [`set_trace`] (the
+//! `--trace` CLI flag does this before running work).
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity.  A 4-rank loopback collective emits a few
+/// thousand spans per rank; 16Ki gives generous headroom while
+/// bounding memory at ~1.5 MiB/thread worst case.
+const RING_CAP: usize = 16 * 1024;
+
+/// Trace switch states for [`TRACE`].
+const TRACE_UNINIT: u8 = 0;
+const TRACE_OFF: u8 = 1;
+const TRACE_ON: u8 = 2;
+
+static TRACE: AtomicU8 = AtomicU8::new(TRACE_UNINIT);
+
+/// Monotonic id handed to each thread's ring, used as the `tid` in the
+/// Chrome trace export.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Force tracing on or off for the whole process (overrides
+/// `QLC_TRACE`).
+pub fn set_trace(on: bool) {
+    TRACE.store(if on { TRACE_ON } else { TRACE_OFF }, Ordering::Relaxed);
+}
+
+/// Whether spans are being recorded.  After first use this is a single
+/// relaxed load — the entire cost of an inactive [`span`] call.
+pub fn trace_enabled() -> bool {
+    match TRACE.load(Ordering::Relaxed) {
+        TRACE_ON => true,
+        TRACE_OFF => false,
+        _ => {
+            let on = std::env::var("QLC_TRACE").map_or(false, |v| v == "1");
+            set_trace(on);
+            on
+        }
+    }
+}
+
+/// Process-wide monotonic epoch all span timestamps are relative to,
+/// so events from different threads share one timeline.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    u64::try_from(epoch().elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: String,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// `(key, value)` pairs attached via [`SpanGuard::arg`].
+    pub args: Vec<(String, String)>,
+}
+
+/// All events drained from one thread's ring.
+#[derive(Clone, Debug)]
+pub struct ThreadEvents {
+    pub tid: u64,
+    pub thread_name: String,
+    pub events: Vec<SpanEvent>,
+    /// Events overwritten because the ring filled (oldest dropped).
+    pub dropped: u64,
+}
+
+/// Fixed-capacity event ring for one thread.
+struct Ring {
+    tid: u64,
+    thread_name: String,
+    events: Vec<SpanEvent>,
+    /// Next overwrite position once `events` reached capacity.
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: SpanEvent) {
+        if self.events.len() < RING_CAP {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+
+    /// Take the buffered events in chronological order and reset.
+    fn drain(&mut self) -> (Vec<SpanEvent>, u64) {
+        let dropped = self.dropped;
+        self.dropped = 0;
+        let head = self.head;
+        self.head = 0;
+        let mut events = std::mem::take(&mut self.events);
+        events.rotate_left(head);
+        (events, dropped)
+    }
+}
+
+/// Registry of every thread's ring, so events outlive their threads.
+fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+    &RINGS
+}
+
+thread_local! {
+    static LOCAL_RING: Arc<Mutex<Ring>> = {
+        let ring = Arc::new(Mutex::new(Ring {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            thread_name: std::thread::current()
+                .name()
+                .unwrap_or("thread")
+                .to_string(),
+            events: Vec::new(),
+            head: 0,
+            dropped: 0,
+        }));
+        lock_or_recover(rings()).push(ring.clone());
+        ring
+    };
+}
+
+/// Collect (and clear) every thread's buffered events, including rings
+/// whose threads have exited.  Rings stay registered so long-lived
+/// threads keep recording into the same `tid` afterwards.
+pub fn drain_events() -> Vec<ThreadEvents> {
+    let rings = lock_or_recover(rings()).clone();
+    let mut out = Vec::with_capacity(rings.len());
+    for ring in rings {
+        let mut r = lock_or_recover(&ring);
+        let (events, dropped) = r.drain();
+        if events.is_empty() && dropped == 0 {
+            continue;
+        }
+        out.push(ThreadEvents {
+            tid: r.tid,
+            thread_name: r.thread_name.clone(),
+            events,
+            dropped,
+        });
+    }
+    out
+}
+
+/// RAII guard: records one [`SpanEvent`] when dropped.  Inactive
+/// guards (tracing off) carry no state and drop for free.
+pub struct SpanGuard {
+    /// `Some` only while tracing is active.
+    active: Option<ActiveSpan>,
+}
+
+struct ActiveSpan {
+    name: &'static str,
+    start_ns: u64,
+    args: Vec<(String, String)>,
+}
+
+impl SpanGuard {
+    /// Attach a `key=value` argument (shows up under `args` in the
+    /// Chrome trace).  No-op — and no formatting — when inactive.
+    pub fn arg(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        if let Some(a) = self.active.as_mut() {
+            a.args.push((key.to_string(), value.to_string()));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else { return };
+        let ev = SpanEvent {
+            name: a.name.to_string(),
+            start_ns: a.start_ns,
+            dur_ns: now_ns().saturating_sub(a.start_ns),
+            args: a.args,
+        };
+        LOCAL_RING.with(|ring| lock_or_recover(ring).push(ev));
+    }
+}
+
+/// Open a span covering the enclosing scope.  When tracing is off this
+/// is one relaxed atomic load and returns an inert guard.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !trace_enabled() {
+        return SpanGuard { active: None };
+    }
+    SpanGuard {
+        active: Some(ActiveSpan {
+            name,
+            start_ns: now_ns(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Span tests toggle the process-wide switch and drain the shared
+    /// rings; serialise them (export.rs tests join in) so parallel
+    /// test threads don't steal each other's events.
+    pub(crate) fn trace_lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        lock_or_recover(&LOCK)
+    }
+
+    /// Drain only the events whose span names start with `prefix` —
+    /// other tests' stragglers on this shared ring are not ours.
+    pub(crate) fn drain_named(prefix: &str) -> Vec<SpanEvent> {
+        drain_events()
+            .into_iter()
+            .flat_map(|t| t.events)
+            .filter(|e| e.name.starts_with(prefix))
+            .collect()
+    }
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _g = trace_lock();
+        set_trace(false);
+        drop(span("span_test_disabled").arg("k", 1));
+        let got = drain_named("span_test_disabled");
+        assert!(got.is_empty(), "disabled trace recorded {got:?}");
+    }
+
+    #[test]
+    fn enabled_tracing_records_name_args_and_duration() {
+        let _g = trace_lock();
+        set_trace(true);
+        {
+            let _s = span("span_test_enabled").arg("rank", 3).arg("step", "x");
+        }
+        set_trace(false);
+        let got = drain_named("span_test_enabled");
+        assert_eq!(got.len(), 1, "{got:?}");
+        let ev = &got[0];
+        assert_eq!(ev.name, "span_test_enabled");
+        assert_eq!(
+            ev.args,
+            vec![
+                ("rank".to_string(), "3".to_string()),
+                ("step".to_string(), "x".to_string()),
+            ]
+        );
+        // dur is computed after start on the same monotonic epoch.
+        assert!(ev.start_ns <= ev.start_ns + ev.dur_ns);
+    }
+
+    #[test]
+    fn drain_clears_and_spans_survive_thread_exit() {
+        let _g = trace_lock();
+        set_trace(true);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                drop(span("span_test_scoped"));
+            });
+        });
+        set_trace(false);
+        assert_eq!(drain_named("span_test_scoped").len(), 1);
+        // A second drain finds nothing: the ring was cleared.
+        assert!(drain_named("span_test_scoped").is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = Ring {
+            tid: 0,
+            thread_name: "t".into(),
+            events: Vec::new(),
+            head: 0,
+            dropped: 0,
+        };
+        for i in 0..(RING_CAP as u64 + 3) {
+            r.push(SpanEvent {
+                name: "x".into(),
+                start_ns: i,
+                dur_ns: 0,
+                args: Vec::new(),
+            });
+        }
+        let (events, dropped) = r.drain();
+        assert_eq!(events.len(), RING_CAP);
+        assert_eq!(dropped, 3);
+        // Chronological order after rotation: oldest surviving first.
+        assert_eq!(events[0].start_ns, 3);
+        assert_eq!(events[RING_CAP - 1].start_ns, RING_CAP as u64 + 2);
+    }
+}

@@ -60,6 +60,18 @@ pub struct Artifact {
     pub json: Json,
 }
 
+/// An observability snapshot as a report artifact: the text form is
+/// the Prometheus exposition, the JSON form is the snapshot itself
+/// (parseable back via [`Snapshot::parse`](crate::obs::Snapshot)).
+/// Used by `qlc collective --metrics`.
+pub fn obs_artifact(id: &str, snap: &crate::obs::Snapshot) -> Artifact {
+    Artifact {
+        id: id.to_string(),
+        text: snap.to_prometheus(),
+        json: snap.to_json(),
+    }
+}
+
 fn hist_from_pmf(pmf: &Pmf) -> Histogram {
     // Huffman construction needs counts; scale probabilities to a large
     // virtual sample (the paper's shards hold ~1.15e9 symbols/type).

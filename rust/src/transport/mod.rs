@@ -60,6 +60,7 @@ pub use threaded::ThreadedEndpoint;
 use std::time::Instant;
 
 use crate::codecs::{chunk_spans, DecoderSession, EncoderSession};
+use crate::obs;
 
 /// Default transport chunk granularity, in symbols.  Small enough that
 /// a megabyte-scale hop splits into several pipeline stages, large
@@ -237,18 +238,34 @@ pub fn exchange_hop<L: Link>(
     let mut out_symbols: Vec<u8> = Vec::with_capacity(symbols.len());
     let mut out_scales: Vec<f32> = Vec::new();
 
+    // Per-phase latency histograms + traffic counters on the global
+    // registry; the per-chunk cost is a few relaxed atomic adds.
+    let reg = obs::global();
+    let encode_ns = reg.hist("transport_encode_ns");
+    let decode_ns = reg.hist("transport_decode_ns");
+    let wire_wait_ns = reg.hist("transport_wire_wait_ns");
+    let chunks_sent = reg.counter("transport_chunks_sent_total");
+    let chunks_recv = reg.counter("transport_chunks_recv_total");
+    let wire_total = reg.counter("transport_wire_bytes_total");
+    let raw_total = reg.counter("transport_raw_bytes_total");
+    raw_total.add(raw_bytes);
+
     let mut sent = 0usize;
     let mut done_recv = false;
     while sent < n_out || !done_recv {
         if sent < n_out {
             let (a, b) = spans[sent];
+            let _sp = obs::span("hop.encode").arg("seq", sent);
             let t0 = Instant::now();
             let payload = encode_payload(enc, &symbols[a..b]);
             let encode_s = t0.elapsed().as_secs_f64();
+            drop(_sp);
+            encode_ns.record((encode_s * 1e9) as u64);
             let first = sent == 0;
             let chunk_wire =
                 hop_bytes(payload.len(), if first { scales.len() } else { 0 });
             wire_bytes += chunk_wire as u64;
+            wire_total.add(chunk_wire as u64);
             trace.push(ChunkTiming {
                 encode_s,
                 wire_bytes: chunk_wire,
@@ -261,10 +278,17 @@ pub fn exchange_hop<L: Link>(
                 payload,
                 scales: if first { scales.to_vec() } else { Vec::new() },
             })?;
+            chunks_sent.inc();
             sent += 1;
         }
         if !done_recv {
+            let wait = obs::Stopwatch::start();
+            let sp = obs::span("hop.wire_wait");
             let msg = link.recv()?;
+            drop(sp);
+            wire_wait_ns.record(wait.elapsed_ns());
+            chunks_recv.inc();
+            let _sp = obs::span("hop.decode").arg("seq", msg.seq);
             let t0 = Instant::now();
             decode_payload_into(
                 dec,
@@ -273,6 +297,8 @@ pub fn exchange_hop<L: Link>(
                 &mut out_symbols,
             )?;
             let decode_s = t0.elapsed().as_secs_f64();
+            drop(_sp);
+            decode_ns.record((decode_s * 1e9) as u64);
             trace.set_decode(msg.seq as usize, decode_s);
             if msg.seq == 0 {
                 out_scales = msg.scales;

@@ -95,6 +95,7 @@ fn read_msg(
 /// Connect with retries until `timeout` — the rendezvous listener may
 /// not be up yet when a launcher starts all ranks at once.
 fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
+    let retries = crate::obs::global().counter("rendezvous_connect_retries_total");
     let deadline = Instant::now() + timeout;
     loop {
         match TcpStream::connect(addr) {
@@ -106,6 +107,7 @@ fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
                          {timeout:?}: {e}"
                     ));
                 }
+                retries.inc();
                 std::thread::sleep(Duration::from_millis(20));
             }
         }

@@ -27,6 +27,7 @@ use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use super::wire;
+use crate::obs;
 use crate::transport::{ChunkMsg, Link};
 
 /// How long the I/O pump sleeps between polls when neither direction
@@ -88,6 +89,30 @@ impl NetConfig {
     }
 }
 
+/// Global-registry counters for the socket pump's traffic and
+/// failure/backoff paths (shared by every link in the process — the
+/// keys carry no per-link label, so a world-level merge just sums).
+struct LinkStats {
+    frames_sent: obs::Counter,
+    frames_recv: obs::Counter,
+    poll_sleeps: obs::Counter,
+    hop_timeouts: obs::Counter,
+    stall_timeouts: obs::Counter,
+}
+
+impl LinkStats {
+    fn new() -> LinkStats {
+        let reg = obs::global();
+        LinkStats {
+            frames_sent: reg.counter("tcp_frames_sent_total"),
+            frames_recv: reg.counter("tcp_frames_recv_total"),
+            poll_sleeps: reg.counter("tcp_poll_sleeps_total"),
+            hop_timeouts: reg.counter("tcp_hop_timeouts_total"),
+            stall_timeouts: reg.counter("tcp_stall_timeouts_total"),
+        }
+    }
+}
+
 /// One worker's socket endpoints in the ring: `tx` to the downstream
 /// neighbour, `rx` from the upstream one.
 pub struct TcpLink {
@@ -103,6 +128,7 @@ pub struct TcpLink {
     send_hop: u32,
     recv_hop: u32,
     recv_seq: u32,
+    stats: LinkStats,
 }
 
 impl TcpLink {
@@ -131,6 +157,7 @@ impl TcpLink {
             send_hop: 0,
             recv_hop: 0,
             recv_seq: 0,
+            stats: LinkStats::new(),
         })
     }
 
@@ -212,6 +239,7 @@ impl Link for TcpLink {
             // forever; this cap is what still fails fast.
             let now = Instant::now();
             if now >= hard_deadline {
+                self.stats.hop_timeouts.inc();
                 return Err(format!(
                     "tcp send: {} bytes still queued after the {:?} \
                      per-call deadline (peer draining too slowly?)",
@@ -224,6 +252,7 @@ impl Link for TcpLink {
             if wrote || read {
                 deadline = Instant::now() + self.cfg.io_timeout;
             } else if Instant::now() >= deadline {
+                self.stats.stall_timeouts.inc();
                 return Err(format!(
                     "tcp send: no progress for {:?} ({} bytes still \
                      queued; peer stalled?)",
@@ -231,9 +260,11 @@ impl Link for TcpLink {
                     self.pending_out()
                 ));
             } else {
+                self.stats.poll_sleeps.inc();
                 std::thread::sleep(POLL_SLEEP);
             }
         }
+        self.stats.frames_sent.inc();
         Ok(())
     }
 
@@ -270,6 +301,7 @@ impl Link for TcpLink {
                 } else {
                     self.recv_seq += 1;
                 }
+                self.stats.frames_recv.inc();
                 return Ok(frame.msg);
             }
             if self.rx_eof {
@@ -287,6 +319,7 @@ impl Link for TcpLink {
             // never trips the stall deadline; this cap does.
             let now = Instant::now();
             if now >= hard_deadline {
+                self.stats.hop_timeouts.inc();
                 return Err(format!(
                     "tcp recv: no complete frame after the {:?} per-call \
                      deadline (peer trickling?)",
@@ -298,11 +331,13 @@ impl Link for TcpLink {
             if read || wrote {
                 deadline = Instant::now() + self.cfg.io_timeout;
             } else if Instant::now() >= deadline {
+                self.stats.stall_timeouts.inc();
                 return Err(format!(
                     "tcp recv: no data for {:?} (peer stalled?)",
                     self.cfg.io_timeout
                 ));
             } else {
+                self.stats.poll_sleeps.inc();
                 std::thread::sleep(POLL_SLEEP);
             }
         }

@@ -505,6 +505,57 @@ fn collective_reports_ratio() {
 }
 
 #[test]
+fn collective_writes_trace_and_metrics() {
+    let dir = tmp("obs");
+    let trace = dir.join("trace.json");
+    let metrics_txt = dir.join("metrics.txt");
+    let metrics_json = dir.join("metrics.json");
+    for metrics in [&metrics_txt, &metrics_json] {
+        let out = qlc()
+            .args([
+                "collective", "--op", "allreduce", "--workers", "4",
+                "--size", "16384", "--codec", "qlc", "--json", "--trace",
+                trace.to_str().unwrap(), "--metrics",
+                metrics.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{out:?}");
+        // --json stdout must stay pure JSON (status lines go to stderr).
+        let text = String::from_utf8_lossy(&out.stdout);
+        qlc::util::json::Json::parse(text.trim()).unwrap();
+    }
+    // The trace is a Chrome trace-event object with real span events.
+    let trace_doc = qlc::util::json::Json::parse(
+        &std::fs::read_to_string(&trace).unwrap(),
+    )
+    .unwrap();
+    let events = trace_doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert!(
+        events.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("X")
+        }),
+        "trace has no duration events"
+    );
+    // .txt gets the Prometheus exposition, .json the mergeable snapshot.
+    let prom = std::fs::read_to_string(&metrics_txt).unwrap();
+    assert!(prom.contains("_total"), "{prom}");
+    let snap = qlc::obs::Snapshot::parse(
+        &std::fs::read_to_string(&metrics_json).unwrap(),
+    )
+    .unwrap();
+    assert!(
+        snap.counters.keys().any(|k| k.starts_with("transport_")),
+        "snapshot missing transport counters: {:?}",
+        snap.counters.keys().collect::<Vec<_>>()
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn serve_runs_pipeline() {
     let out = qlc()
         .args([
