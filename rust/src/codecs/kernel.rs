@@ -380,6 +380,39 @@ pub fn lanes_avx2_available() -> bool {
     }
 }
 
+/// Whether the NEON vector-peek lane path is available on this CPU
+/// (cached runtime detection; always `false` off aarch64, and under
+/// Miri, which interprets no vector intrinsics).
+#[inline]
+pub fn lanes_neon_available() -> bool {
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
+    {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        static CACHE: AtomicU8 = AtomicU8::new(0); // 0 unknown, 1 no, 2 yes
+        match CACHE.load(Ordering::Relaxed) {
+            2 => true,
+            1 => false,
+            _ => {
+                let yes = std::arch::is_aarch64_feature_detected!("neon");
+                CACHE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+    #[cfg(any(not(target_arch = "aarch64"), miri))]
+    {
+        false
+    }
+}
+
+/// Whether *any* vector-peek lane path is available — AVX2 on x86_64,
+/// NEON on aarch64.  The lane-width auto-selection keys off this so a
+/// full 8-lane group feeds whichever vector burst the CPU has.
+#[inline]
+pub fn lanes_vector_available() -> bool {
+    lanes_avx2_available() || lanes_neon_available()
+}
+
 /// Vector peek for a full 8-lane group: the top `bits` of eight
 /// staging words extracted with one AVX2 shift per 4-word half.
 ///
@@ -417,13 +450,51 @@ pub unsafe fn peek_top_bits_x8(words: &[u64; 8], bits: u32) -> [u32; 8] {
     }
 }
 
+/// NEON analogue of [`peek_top_bits_x8`]: the top `bits` of eight
+/// staging words extracted with four 2-wide `USHL` right shifts
+/// (NEON's variable shift takes a negative count for right shifts —
+/// there is no variable-immediate `vshrq`).
+///
+/// # Safety
+///
+/// Requires NEON; callers must have checked [`lanes_neon_available`]
+/// first.
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+#[target_feature(enable = "neon")]
+pub unsafe fn peek_top_bits_x8_neon(
+    words: &[u64; 8],
+    bits: u32,
+) -> [u32; 8] {
+    use std::arch::aarch64::{vdupq_n_s64, vld1q_u64, vshlq_u64, vst1q_u64};
+    // SAFETY: the caller upholds the NEON contract above; every
+    // load/store touches exactly one 2-word pair of a stack-owned
+    // `[u64; 8]`-sized buffer, in bounds by construction.
+    unsafe {
+        let shift = vdupq_n_s64(-((64 - bits) as i64));
+        let mut shifted = [0u64; 8];
+        for pair in 0..4 {
+            let v = vld1q_u64(words.as_ptr().add(pair * 2));
+            vst1q_u64(
+                shifted.as_mut_ptr().add(pair * 2),
+                vshlq_u64(v, shift),
+            );
+        }
+        let mut out = [0u32; 8];
+        for (o, w) in out.iter_mut().zip(shifted.iter()) {
+            *o = *w as u32;
+        }
+        out
+    }
+}
+
 /// The lane-interleaved decode engine: tiles independent chunk jobs
 /// into groups of up to [`MAX_LANES`] lanes and steps each group in
 /// lockstep through one codec's [`DecodeKernel::decode_lanes`].
 ///
-/// The width is runtime-selected: 8 lanes when the CPU has AVX2 (a
-/// full group feeds the vector peek path), 4 otherwise (enough
-/// independent chains to fill a scalar out-of-order pipeline).
+/// The width is runtime-selected: 8 lanes when the CPU has a vector
+/// peek path (AVX2 on x86_64, NEON on aarch64 — a full group feeds
+/// it), 4 otherwise (enough independent chains to fill a scalar
+/// out-of-order pipeline).
 #[derive(Clone, Copy, Debug)]
 pub struct LaneDecoder {
     lanes: usize,
@@ -432,7 +503,7 @@ pub struct LaneDecoder {
 impl LaneDecoder {
     /// Runtime-selected lane width (see the type docs).
     pub fn auto() -> LaneDecoder {
-        LaneDecoder { lanes: if lanes_avx2_available() { 8 } else { 4 } }
+        LaneDecoder { lanes: if lanes_vector_available() { 8 } else { 4 } }
     }
 
     /// Explicit lane width; 4 and 8 are supported.
@@ -687,11 +758,12 @@ pub struct LaneEncoder {
 
 impl LaneEncoder {
     /// Runtime-selected lane width, matching [`LaneDecoder::auto`]:
-    /// 8 on AVX2-class cores, 4 otherwise.  Encode has no vector peek
-    /// yet — the width is about independent dependency chains per
-    /// out-of-order window, which the same detection proxies.
+    /// 8 on vector-capable cores (AVX2/NEON), 4 otherwise.  Encode
+    /// has no vector peek yet — the width is about independent
+    /// dependency chains per out-of-order window, which the same
+    /// detection proxies.
     pub fn auto() -> LaneEncoder {
-        LaneEncoder { lanes: if lanes_avx2_available() { 8 } else { 4 } }
+        LaneEncoder { lanes: if lanes_vector_available() { 8 } else { 4 } }
     }
 
     /// Explicit lane width; 4 and 8 are supported.
@@ -1061,7 +1133,7 @@ mod tests {
         assert!(LaneDecoder::with_lanes(16).is_err());
         let auto = LaneDecoder::auto().lanes();
         assert!(auto == 4 || auto == 8);
-        if lanes_avx2_available() {
+        if lanes_vector_available() {
             assert_eq!(auto, 8);
         }
     }
@@ -1110,6 +1182,87 @@ mod tests {
                 assert_eq!(*g as u64, w >> (64 - bits), "bits={bits}");
             }
         }
+    }
+
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
+    #[test]
+    fn neon_peek_matches_scalar_shift() {
+        if !lanes_neon_available() {
+            return;
+        }
+        let words = [
+            0xFFFF_FFFF_FFFF_FFFFu64,
+            0x8000_0000_0000_0000,
+            0x0123_4567_89AB_CDEF,
+            0,
+            0x7FFF_FFFF_FFFF_FFFF,
+            0xDEAD_BEEF_CAFE_F00D,
+            1,
+            0xA5A5_A5A5_A5A5_A5A5,
+        ];
+        for bits in [1u32, 3, 5, 8, 16, 32] {
+            let got = unsafe { peek_top_bits_x8_neon(&words, bits) };
+            for (g, w) in got.iter().zip(words.iter()) {
+                assert_eq!(*g as u64, w >> (64 - bits), "bits={bits}");
+            }
+        }
+    }
+
+    /// Whatever vector peek this CPU has must agree with the scalar
+    /// top-bits shift on arbitrary words and every peek width the
+    /// codecs use.
+    #[test]
+    fn prop_vector_peek_matches_scalar_shift() {
+        if !lanes_vector_available() {
+            return;
+        }
+        prop::check(
+            "vector peek == scalar shift",
+            prop::Config { cases: 96, ..Default::default() },
+            |rng, _size| {
+                let mut words = [0u64; 8];
+                for w in &mut words {
+                    let mut b = [0u8; 8];
+                    rng.fill_bytes(&mut b);
+                    *w = u64::from_le_bytes(b);
+                }
+                let bits = 1 + rng.below(32) as u32;
+                #[cfg(all(target_arch = "x86_64", not(miri)))]
+                // SAFETY: lanes_vector_available() on x86_64 implies
+                // AVX2 was runtime-detected.
+                let got = unsafe { peek_top_bits_x8(&words, bits) };
+                #[cfg(all(target_arch = "aarch64", not(miri)))]
+                // SAFETY: lanes_vector_available() on aarch64 implies
+                // NEON was runtime-detected.
+                let got = unsafe { peek_top_bits_x8_neon(&words, bits) };
+                #[cfg(any(
+                    not(any(
+                        target_arch = "x86_64",
+                        target_arch = "aarch64"
+                    )),
+                    miri
+                ))]
+                let got: [u32; 8] = {
+                    let mut g = [0u32; 8];
+                    for (o, w) in g.iter_mut().zip(words.iter()) {
+                        *o = (w >> (64 - bits)) as u32;
+                    }
+                    g
+                };
+                for (i, (g, w)) in
+                    got.iter().zip(words.iter()).enumerate()
+                {
+                    let want = (w >> (64 - bits)) as u32;
+                    if *g != want {
+                        return Err(format!(
+                            "lane {i}: bits={bits} word={w:#018x}: \
+                             vector {g:#x} != scalar {want:#x}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Truncations must error on both paths (never panic, never

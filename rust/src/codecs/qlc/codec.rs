@@ -250,6 +250,40 @@ impl QlcCodec {
         Ok(())
     }
 
+    /// NEON burst for a full 8-lane group — the aarch64 mirror of
+    /// [`lockstep_avx2`](Self::lockstep_avx2): one vector shift peeks
+    /// all eight area prefixes per round; suffix extraction and the
+    /// rank LUT stay scalar (suffix widths vary per lane).
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
+    fn lockstep_neon(
+        &self,
+        lanes: &mut [Lane<'_, '_>],
+        rounds: usize,
+    ) -> Result<(), CodecError> {
+        debug_assert_eq!(lanes.len(), 8);
+        let prefix_bits = self.scheme.prefix_bits;
+        for _ in 0..rounds {
+            let mut words = [0u64; 8];
+            for (w, lane) in words.iter_mut().zip(lanes.iter()) {
+                *w = lane.cur.word();
+            }
+            // SAFETY: this path is only dispatched after
+            // `lanes_neon_available()` reported NEON.
+            let areas = unsafe {
+                crate::codecs::kernel::peek_top_bits_x8_neon(
+                    &words,
+                    prefix_bits,
+                )
+            };
+            for (lane, (&w, &area)) in
+                lanes.iter_mut().zip(words.iter().zip(areas.iter()))
+            {
+                self.resolve_lane_code(lane, w, area as usize)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Cursor analogue of [`decode_one`](Self::decode_one) — the
     /// kernel's slow tail when fewer than `max_code_bits` are buffered.
     #[inline]
@@ -321,7 +355,8 @@ impl DecodeKernel for QlcCodec {
     /// in lane-major order, so the prefix-table lookups of independent
     /// chunks overlap in the pipeline instead of serializing on one
     /// cursor's shift-consume chain.  A full 8-lane group takes the
-    /// AVX2 vector-peek path when the CPU has it (runtime-detected);
+    /// vector-peek path when the CPU has one (AVX2 on x86_64, NEON on
+    /// aarch64, runtime-detected);
     /// ragged tails fall back to the checked batched path, keeping
     /// lane decode ≡ batched decode symbol-for-symbol and
     /// consumed-bit-for-bit.
@@ -366,6 +401,14 @@ impl DecodeKernel for QlcCodec {
                 && crate::codecs::kernel::lanes_avx2_available()
             {
                 self.lockstep_avx2(lanes, rounds)?;
+                continue;
+            }
+            #[cfg(all(target_arch = "aarch64", not(miri)))]
+            if unfinished == 8
+                && lanes.len() == 8
+                && crate::codecs::kernel::lanes_neon_available()
+            {
+                self.lockstep_neon(lanes, rounds)?;
                 continue;
             }
             self.lockstep_scalar(lanes, rounds)?;

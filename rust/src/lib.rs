@@ -23,6 +23,10 @@
 //!   processes over sockets (`qlc worker` / `qlc launch`);
 //! * [`coordinator`] — threaded leader/worker compression pipeline
 //!   placing frame/shard descriptors on a worker pool;
+//! * [`serve`] — the streaming compression service: an event-driven
+//!   (epoll-backed) `qlc serve` server with per-connection codec
+//!   sessions and bounded backpressure, its [`serve::ServeClient`]
+//!   counterpart, and the `qlc loadgen` concurrent load generator;
 //! * [`obs`] — dependency-free observability: atomic counter/histogram
 //!   registry (p50/p90/p99, cross-rank merge), runtime-switched spans,
 //!   Chrome-trace and Prometheus-text exporters (`--trace`/`--metrics`);
@@ -48,6 +52,7 @@ pub mod obs;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod transport;
 pub mod util;

@@ -11,7 +11,10 @@
 //!   collective  compressed ring collectives on the simulated fabric
 //!   hw          decoder hardware-model comparison
 //!   harvest     execute the AOT FFN artifact via PJRT and save traces
-//!   serve       run the leader/worker compression pipeline demo
+//!   pipeline    run the leader/worker compression pipeline demo
+//!   serve       event-driven streaming compression server (epoll)
+//!   call        one compress/decompress round trip against a server
+//!   loadgen     M concurrent verified round-trip streams + latency
 //!   worker      one rank of a multi-process TCP ring collective
 //!   launch      spawn N local worker processes over 127.0.0.1
 //!
@@ -44,7 +47,8 @@ const VALUE_OPTS: &[&str] = &[
     "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
     "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
     "name", "prefix", "rank", "world", "listen", "connect", "timeout-s",
-    "decode", "encode", "src", "baseline", "trace", "metrics",
+    "decode", "encode", "src", "baseline", "trace", "metrics", "reactor",
+    "max-requests", "max-conns", "streams", "requests",
 ];
 
 fn main() -> ExitCode {
@@ -68,7 +72,10 @@ fn main() -> ExitCode {
         Some("hw") => cmd_hw(&args),
         Some("formats") => cmd_formats(&args),
         Some("harvest") => cmd_harvest(&args),
+        Some("pipeline") => cmd_pipeline(&args),
         Some("serve") => cmd_serve(&args),
+        Some("call") => cmd_call(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("worker") => cmd_worker(&args),
         Some("launch") => cmd_launch(&args),
         Some("help") | None => {
@@ -137,8 +144,33 @@ USAGE: qlc <subcommand> [options]
   formats    [--n SYMBOLS] [--seed S]      cross-eXmY-format QLC sweep
   harvest    [--artifacts DIR] --out DIR [--steps N] [--seed S]
              (needs a build with --features pjrt)
-  serve      [--codec C] [--workers W] [--chunk BYTES] [--n SYMBOLS]
+  pipeline   [--codec C] [--workers W] [--chunk BYTES] [--n SYMBOLS]
              [--shards N]  (emit a sharded manifest instead of frames)
+  serve      [--listen ADDR] [--reactor auto|epoll|fallback]
+             [--max-requests N] [--max-conns N]
+             [--trace FILE] [--metrics FILE]
+             (event-driven streaming compression server: clients
+              handshake a codec per connection, then stream QWC1
+              chunk frames; encoder/decoder sessions are reused
+              across a connection's requests; a slow reader
+              backpressures only its own stream; --max-requests N
+              drains and exits after N requests — 0 runs forever)
+  call       <in> <out> --connect ADDR [--op compress|decompress]
+             [--codec C] [--chunk BYTES]
+             [--reactor auto|epoll|fallback] [--timeout-s T]
+             (one round trip: compress writes a self-describing
+              container — the handshake plus the compressed response
+              frames — and decompress replays such a container back
+              into raw bytes)
+  loadgen    (--connect ADDR | --bench) [--streams M] [--requests R]
+             [--size BYTES] [--chunk BYTES] [--codec C]
+             [--reactor auto|epoll|fallback] [--seed S]
+             [--timeout-s T] [--verify] [--json] [--out FILE]
+             (M concurrent streams, each running compress→decompress
+              round trips and checking them bit-exactly; reports
+              aggregate MB/s and per-op p50/p99 request latency;
+              --bench spins an in-process server per reactor backend
+              and writes the BENCH_9.json comparison)
   worker     --world N --rank R (--listen ADDR | --connect ADDR)
              [--op allreduce|allgather] [--codec C] [--size N]
              [--chunk SYMBOLS] [--seed S] [--timeout-s T]
@@ -726,7 +758,7 @@ fn cmd_harvest(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<(), String> {
+fn cmd_pipeline(args: &Args) -> Result<(), String> {
     let codec = args.opt_or("codec", "qlc");
     let workers = args.opt_usize("workers", 4).map_err(|e| e.to_string())?;
     let chunk =
@@ -772,6 +804,368 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         m.input_bytes as f64 / wall / 1e6,
         m.throughput_mbps().unwrap_or(0.0)
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Streaming compression service
+
+/// Shared `--reactor` / `--timeout-s` parsing for the serve-family
+/// subcommands.
+fn reactor_arg(
+    args: &Args,
+) -> Result<qlc::transport::reactor::Backend, String> {
+    qlc::transport::reactor::Backend::parse(&args.opt_or("reactor", "auto"))
+}
+
+fn timeout_arg(args: &Args) -> Result<std::time::Duration, String> {
+    let timeout_s =
+        args.opt_f64("timeout-s", 30.0).map_err(|e| e.to_string())?;
+    if !timeout_s.is_finite() || timeout_s <= 0.0 {
+        return Err("--timeout-s must be a positive number".into());
+    }
+    Ok(std::time::Duration::from_secs_f64(timeout_s))
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use qlc::serve::{Server, ServerConfig};
+    let listen = args.opt_or("listen", "127.0.0.1:0");
+    let cfg = ServerConfig {
+        backend: reactor_arg(args)?,
+        max_requests: args
+            .opt_u64("max-requests", 0)
+            .map_err(|e| e.to_string())?,
+        max_conns: args
+            .opt_usize("max-conns", 256)
+            .map_err(|e| e.to_string())?,
+        ..ServerConfig::default()
+    };
+    let trace_path = args.opt("trace");
+    if trace_path.is_some() {
+        obs::set_trace(true);
+    }
+    let mut server = Server::bind(&listen, cfg)?;
+    println!(
+        "serving on {} (reactor {})",
+        server.local_addr(),
+        server.backend_name()
+    );
+    // Scripts wait for this line to learn the bound port; make sure
+    // it is visible before the (potentially long) event loop starts.
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    let summary = server.run()?;
+    if let Some(path) = trace_path {
+        obs::write_trace(Path::new(path), 0, "serve")
+            .map_err(|e| format!("{path}: {e}"))?;
+    }
+    if let Some(path) = args.opt("metrics") {
+        obs::write_metrics(Path::new(path), &obs::global().snapshot())
+            .map_err(|e| format!("{path}: {e}"))?;
+    }
+    println!(
+        "served {} requests over {} connections",
+        summary.requests, summary.conns
+    );
+    Ok(())
+}
+
+fn cmd_call(args: &Args) -> Result<(), String> {
+    use qlc::serve::{
+        chunks_from_raw, concat_payloads, ClientConfig, ServeClient,
+    };
+    use qlc::transport::net::serve_wire::{self, Handshake, Op};
+    use qlc::transport::net::wire;
+    let [input, output] = two_paths(args)?;
+    let addr = args.require("connect").map_err(|e| e.to_string())?;
+    let op = Op::parse(&args.opt_or("op", "compress"))?;
+    let cfg = ClientConfig {
+        backend: reactor_arg(args)?,
+        timeout: timeout_arg(args)?,
+        chunk: args
+            .opt_usize("chunk", 64 * 1024)
+            .map_err(|e| e.to_string())?,
+    };
+    let data = std::fs::read(&input)
+        .map_err(|e| format!("{}: {e}", input.display()))?;
+    match op {
+        Op::Compress => {
+            let hist = Histogram::from_symbols(&data);
+            let handle = CodecRegistry::global()
+                .resolve(&args.opt_or("codec", "qlc"), &hist)?;
+            let mut client =
+                ServeClient::connect(addr, &handle, Op::Compress, &cfg)?;
+            let responses = client.request(&chunks_from_raw(
+                &data, cfg.chunk,
+            ))?;
+            // Self-describing container: the codec identity (the same
+            // handshake the server saw) followed by the compressed
+            // response frames, so `--op decompress` can replay it
+            // against any server without outside context.
+            let mut out = Vec::new();
+            serve_wire::encode_handshake(
+                &Handshake {
+                    op: Op::Compress,
+                    codec_tag: handle.wire_tag(),
+                    header: handle.wire_header().to_vec(),
+                },
+                &mut out,
+            )?;
+            let mut payload_bytes = 0usize;
+            for c in &responses {
+                payload_bytes += c.payload.len();
+                wire::encode_frame(0, handle.wire_tag(), c, &mut out)?;
+            }
+            std::fs::write(&output, &out)
+                .map_err(|e| format!("{}: {e}", output.display()))?;
+            println!(
+                "compressed {} -> {} payload bytes ({} with framing) \
+                 via reactor {}",
+                data.len(),
+                payload_bytes,
+                out.len(),
+                client.backend_name()
+            );
+        }
+        Op::Decompress => {
+            let Some((hs, used)) = serve_wire::decode_handshake(&data)?
+            else {
+                return Err(
+                    "input is not a qlc call container (truncated \
+                     handshake)"
+                        .into(),
+                );
+            };
+            let handle = CodecRegistry::global()
+                .resolve_wire(hs.codec_tag, &hs.header)
+                .map_err(|e| e.to_string())?;
+            let mut chunks = Vec::new();
+            let mut pos = used;
+            while pos < data.len() {
+                match wire::decode_frame(&data[pos..])? {
+                    Some((frame, n)) => {
+                        pos += n;
+                        chunks.push(frame.msg);
+                    }
+                    None => {
+                        return Err("container ends mid-frame".into())
+                    }
+                }
+            }
+            let mut client =
+                ServeClient::connect(addr, &handle, Op::Decompress, &cfg)?;
+            let responses = client.request(&chunks)?;
+            let raw = concat_payloads(&responses);
+            std::fs::write(&output, &raw)
+                .map_err(|e| format!("{}: {e}", output.display()))?;
+            println!(
+                "decompressed {} container bytes -> {} raw bytes via \
+                 reactor {}",
+                data.len(),
+                raw.len(),
+                client.backend_name()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn loadgen_json(r: &qlc::serve::LoadgenReport) -> Json {
+    Json::obj()
+        .set("streams", r.streams)
+        .set("requests", r.requests as usize)
+        .set("raw_bytes", r.raw_bytes as usize)
+        .set("wire_bytes", r.wire_bytes as usize)
+        .set("wall_s", r.wall_s)
+        .set("aggregate_mbps", r.aggregate_mbps)
+        .set("verified", r.verified as usize)
+        .set("p50_compress_ns", r.p50_compress_ns as usize)
+        .set("p99_compress_ns", r.p99_compress_ns as usize)
+        .set("p50_decompress_ns", r.p50_decompress_ns as usize)
+        .set("p99_decompress_ns", r.p99_decompress_ns as usize)
+        .set("backend", r.backend.as_str())
+}
+
+fn print_loadgen(addr: &str, r: &qlc::serve::LoadgenReport) {
+    println!(
+        "loadgen x{} on {addr} (reactor {}): {} round trips ({} \
+         verified), raw {:.1} MB, wire {:.1} MB, {:.1} MB/s aggregate\n\
+         compress p50 {:.3} ms p99 {:.3} ms; decompress p50 {:.3} ms \
+         p99 {:.3} ms",
+        r.streams,
+        r.backend,
+        r.requests,
+        r.verified,
+        r.raw_bytes as f64 / 1e6,
+        r.wire_bytes as f64 / 1e6,
+        r.aggregate_mbps,
+        r.p50_compress_ns as f64 / 1e6,
+        r.p99_compress_ns as f64 / 1e6,
+        r.p50_decompress_ns as f64 / 1e6,
+        r.p99_decompress_ns as f64 / 1e6,
+    );
+}
+
+fn cmd_loadgen(args: &Args) -> Result<(), String> {
+    use qlc::serve::{run_loadgen, LoadgenConfig};
+    let base = LoadgenConfig {
+        addr: String::new(),
+        streams: args.opt_usize("streams", 4).map_err(|e| e.to_string())?,
+        requests: args.opt_usize("requests", 8).map_err(|e| e.to_string())?,
+        size: args.opt_usize("size", 1 << 20).map_err(|e| e.to_string())?,
+        chunk: args
+            .opt_usize("chunk", 64 * 1024)
+            .map_err(|e| e.to_string())?,
+        codec: args.opt_or("codec", "qlc"),
+        backend: reactor_arg(args)?,
+        verify: args.has_flag("verify"),
+        seed: args.opt_u64("seed", 0x10ad).map_err(|e| e.to_string())?,
+        timeout: timeout_arg(args)?,
+    };
+    if args.has_flag("bench") {
+        return loadgen_bench(args, base);
+    }
+    let addr = args.require("connect").map_err(|e| e.to_string())?;
+    let cfg = LoadgenConfig { addr: addr.to_string(), ..base };
+    let report = run_loadgen(&cfg)?;
+    if args.has_flag("json") {
+        println!("{}", loadgen_json(&report).to_string_pretty());
+    } else {
+        print_loadgen(addr, &report);
+    }
+    Ok(())
+}
+
+/// `qlc loadgen --bench`: run the same verified load against an
+/// in-process server once per reactor backend and record the
+/// comparison (BENCH_9.json).  Gate: epoll aggregate throughput must
+/// not lose to the sleep-polling fallback.
+fn loadgen_bench(
+    args: &Args,
+    base: qlc::serve::LoadgenConfig,
+) -> Result<(), String> {
+    use qlc::serve::{run_loadgen, LoadgenConfig, Server, ServerConfig};
+    use qlc::transport::reactor;
+    use std::sync::atomic::Ordering;
+
+    let mut backends = vec![reactor::Backend::Fallback];
+    if reactor::epoll_available() {
+        backends.push(reactor::Backend::Epoll);
+    }
+    let mut reports = Vec::new();
+    for be in backends {
+        let mut server = Server::bind(
+            "127.0.0.1:0",
+            ServerConfig { backend: be, ..ServerConfig::default() },
+        )?;
+        let addr = server.local_addr().to_string();
+        let stop = server.shutdown_handle();
+        let handle = std::thread::spawn(move || server.run());
+        let cfg = LoadgenConfig {
+            addr: addr.clone(),
+            backend: be,
+            verify: true,
+            ..base.clone()
+        };
+        let res = run_loadgen(&cfg);
+        stop.store(true, Ordering::Relaxed);
+        let server_res = handle.join().unwrap_or_else(|_| {
+            Err("server thread panicked".to_string())
+        });
+        let report = res?;
+        server_res?;
+        print_loadgen(&addr, &report);
+        reports.push(report);
+    }
+
+    let mbps = |name: &str| {
+        reports
+            .iter()
+            .find(|r| r.backend == name)
+            .map(|r| r.aggregate_mbps)
+    };
+    let mut gate_failures: Vec<String> = Vec::new();
+    if let (Some(fallback), Some(epoll)) = (mbps("fallback"), mbps("epoll"))
+    {
+        if epoll < fallback {
+            gate_failures.push(format!(
+                "serve roundtrip: epoll {epoll:.1} MB/s < fallback \
+                 {fallback:.1} MB/s at M={}",
+                base.streams
+            ));
+        }
+    }
+
+    let mut latency = Vec::new();
+    for r in &reports {
+        for (op, p50, p99) in [
+            ("compress", r.p50_compress_ns, r.p99_compress_ns),
+            ("decompress", r.p50_decompress_ns, r.p99_decompress_ns),
+        ] {
+            latency.push(
+                Json::obj()
+                    .set(
+                        "metric",
+                        obs::label(
+                            "serve_request_latency_ns",
+                            &[("backend", r.backend.as_str()), ("op", op)],
+                        )
+                        .as_str(),
+                    )
+                    .set("p50_ns", p50 as usize)
+                    .set("p99_ns", p99 as usize),
+            );
+        }
+    }
+    let doc = Json::obj()
+        .set("bench", "serve_loadgen")
+        .set("streams", base.streams)
+        .set("requests", base.requests)
+        .set("size", base.size)
+        .set(
+            "results",
+            Json::Arr(
+                reports
+                    .iter()
+                    .map(|r| {
+                        Json::obj()
+                            .set(
+                                "name",
+                                format!("serve_roundtrip_{}", r.backend)
+                                    .as_str(),
+                            )
+                            .set("mbps", r.aggregate_mbps)
+                    })
+                    .collect(),
+            ),
+        )
+        .set("latency", Json::Arr(latency))
+        .set(
+            "gate_failures",
+            Json::Arr(
+                gate_failures
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
+            ),
+        );
+    let out_path = match args.opt("out") {
+        Some(p) => p.to_string(),
+        None => std::env::var("QLC_BENCH_JSON")
+            .unwrap_or_else(|_| "BENCH_9.json".to_string()),
+    };
+    std::fs::write(&out_path, doc.to_string_pretty())
+        .map_err(|e| format!("{out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    if !gate_failures.is_empty() {
+        eprintln!(
+            "FAIL: serve perf gate (epoll ≥ fallback):\n  {}",
+            gate_failures.join("\n  ")
+        );
+        if std::env::var("QLC_BENCH_SMOKE").is_ok() {
+            return Err("serve bench gate failed".into());
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,318 @@
+//! The `qlc serve` client: a blocking QSV1 handshake, then a
+//! reactor-driven request/response pump mirroring the server's
+//! non-blocking state machine.
+//!
+//! One [`ServeClient`] speaks one operation (compress or decompress)
+//! over one connection; [`ServeClient::request`] streams the chunks
+//! of a request up and returns the server's response chunks, recording
+//! the whole-request latency into the global
+//! `serve_request_latency_ns{backend=...,op=...}` histogram.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::codecs::CodecHandle;
+use crate::obs;
+use crate::transport::net::serve_wire::{
+    self, Handshake, Op, RequestTracker,
+};
+use crate::transport::net::wire;
+use crate::transport::reactor::{self, new_reactor, Interest, Reactor};
+use crate::transport::ChunkMsg;
+
+use super::io::{read_some, stream_fd, write_some};
+
+/// Reactor token of the client's single socket.
+const TOKEN_SOCK: u64 = 0;
+
+/// Client-side knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientConfig {
+    /// Readiness-wait backend for the response pump.
+    pub backend: reactor::Backend,
+    /// Hard per-request (and handshake) progress deadline.
+    pub timeout: Duration,
+    /// Chunk size [`chunks_from_raw`] splits raw payloads at.
+    pub chunk: usize,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            backend: reactor::Backend::Auto,
+            timeout: Duration::from_secs(30),
+            chunk: 64 * 1024,
+        }
+    }
+}
+
+/// One streaming connection to a `qlc serve` server.
+pub struct ServeClient {
+    stream: TcpStream,
+    reactor: Box<dyn Reactor>,
+    interest: Interest,
+    events: Vec<reactor::Event>,
+    op: Op,
+    codec_tag: u8,
+    next_request: u32,
+    resp_tracker: RequestTracker,
+    inbuf: Vec<u8>,
+    out: Vec<u8>,
+    out_pos: usize,
+    timeout: Duration,
+    latency: obs::Hist,
+}
+
+impl ServeClient {
+    /// Connect, run the blocking QSV1 handshake (the server's QSA1
+    /// ack either opens the stream or carries the rejection reason),
+    /// then switch the socket to the non-blocking pump.
+    pub fn connect(
+        addr: &str,
+        handle: &CodecHandle,
+        op: Op,
+        cfg: &ClientConfig,
+    ) -> Result<ServeClient, String> {
+        let mut stream = TcpStream::connect(addr)
+            .map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(cfg.timeout))
+            .map_err(|e| e.to_string())?;
+
+        let hs = Handshake {
+            op,
+            codec_tag: handle.wire_tag(),
+            header: handle.wire_header().to_vec(),
+        };
+        let mut buf = Vec::new();
+        serve_wire::encode_handshake(&hs, &mut buf)?;
+        stream
+            .write_all(&buf)
+            .map_err(|e| format!("handshake send: {e}"))?;
+
+        // Blocking ack read; anything after the ack (there should be
+        // nothing, but the protocol does not forbid it) is preserved
+        // for the pump.
+        let mut inbuf = Vec::new();
+        let ack = loop {
+            if let Some((ack, used)) = serve_wire::decode_ack(&inbuf)? {
+                inbuf.drain(..used);
+                break ack;
+            }
+            let mut chunk = [0u8; 1024];
+            let n = stream.read(&mut chunk).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                {
+                    format!("handshake: no ack within {:?}", cfg.timeout)
+                } else {
+                    format!("handshake read: {e}")
+                }
+            })?;
+            if n == 0 {
+                return Err(
+                    "handshake: server closed the connection".to_string()
+                );
+            }
+            inbuf.extend_from_slice(&chunk[..n]);
+        };
+        if !ack.ok {
+            return Err(format!("server rejected handshake: {}", ack.msg));
+        }
+
+        stream.set_read_timeout(None).map_err(|e| e.to_string())?;
+        stream.set_nonblocking(true).map_err(|e| e.to_string())?;
+        let mut reactor = new_reactor(cfg.backend)?;
+        reactor.register(
+            stream_fd(&stream),
+            TOKEN_SOCK,
+            Interest::READABLE,
+        )?;
+        let latency = obs::global().hist(&obs::label(
+            "serve_request_latency_ns",
+            &[("backend", reactor.name()), ("op", op.name())],
+        ));
+        Ok(ServeClient {
+            stream,
+            reactor,
+            interest: Interest::READABLE,
+            events: Vec::new(),
+            op,
+            codec_tag: handle.wire_tag(),
+            next_request: 0,
+            resp_tracker: RequestTracker::new(handle.wire_tag()),
+            inbuf,
+            out: Vec::new(),
+            out_pos: 0,
+            timeout: cfg.timeout,
+            latency,
+        })
+    }
+
+    /// Which operation this connection's handshake opened.
+    pub fn op(&self) -> Op {
+        self.op
+    }
+
+    /// Which reactor backend the response pump resolved to.
+    pub fn backend_name(&self) -> &'static str {
+        self.reactor.name()
+    }
+
+    /// Stream one request's chunks up and collect the server's
+    /// response chunks.  `chunks` must be pre-stamped: `seq == index`,
+    /// `last` exactly on the final chunk.
+    pub fn request(
+        &mut self,
+        chunks: &[ChunkMsg],
+    ) -> Result<Vec<ChunkMsg>, String> {
+        if chunks.is_empty() {
+            return Err("request needs at least one chunk".to_string());
+        }
+        for (i, c) in chunks.iter().enumerate() {
+            if c.seq as usize != i {
+                return Err(format!(
+                    "chunk {i} stamped seq {}, want {i}",
+                    c.seq
+                ));
+            }
+            if c.last != (i + 1 == chunks.len()) {
+                return Err(format!("chunk {i} has a misplaced last flag"));
+            }
+        }
+        let hop = self.next_request;
+        self.next_request = self
+            .next_request
+            .checked_add(1)
+            .ok_or("request ordinal overflow")?;
+        for c in chunks {
+            wire::encode_frame(hop, self.codec_tag, c, &mut self.out)?;
+        }
+
+        let _span = obs::span("serve.request")
+            .arg("op", self.op.name())
+            .arg("request", hop)
+            .arg("chunks", chunks.len());
+        let sw = obs::Stopwatch::start();
+        let deadline = Instant::now() + self.timeout;
+        let mut responses: Vec<ChunkMsg> = Vec::new();
+        'pump: loop {
+            let mut progressed = write_some(
+                &mut self.stream,
+                &mut self.out,
+                &mut self.out_pos,
+            )? > 0;
+            let (read, eof) = read_some(&mut self.stream, &mut self.inbuf)?;
+            progressed |= read > 0;
+
+            let mut pos = 0usize;
+            while pos < self.inbuf.len() {
+                match wire::decode_frame(&self.inbuf[pos..])? {
+                    Some((frame, used)) => {
+                        pos += used;
+                        if frame.hop != hop {
+                            self.inbuf.drain(..pos);
+                            return Err(format!(
+                                "response for request {} while waiting on \
+                                 {hop}",
+                                frame.hop
+                            ));
+                        }
+                        let done = self.resp_tracker.accept(&frame)?;
+                        responses.push(frame.msg);
+                        if done {
+                            self.inbuf.drain(..pos);
+                            break 'pump;
+                        }
+                    }
+                    None => break,
+                }
+            }
+            if pos > 0 {
+                self.inbuf.drain(..pos);
+                progressed = true;
+            }
+
+            if eof {
+                return Err(format!(
+                    "server closed mid-request ({} of {} response chunks)",
+                    responses.len(),
+                    chunks.len()
+                ));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(format!(
+                    "request timed out after {:?}",
+                    self.timeout
+                ));
+            }
+            if progressed {
+                self.reactor.note_progress();
+            }
+            self.wait_ready(deadline.saturating_duration_since(now))?;
+        }
+        self.latency.record(sw.elapsed_ns());
+        Ok(responses)
+    }
+
+    /// Park on the reactor, watching for writable only while output
+    /// is actually queued.
+    fn wait_ready(&mut self, timeout: Duration) -> Result<(), String> {
+        let want = Interest {
+            readable: true,
+            writable: self.out_pos < self.out.len(),
+        };
+        if want != self.interest {
+            self.reactor.reregister(
+                stream_fd(&self.stream),
+                TOKEN_SOCK,
+                want,
+            )?;
+            self.interest = want;
+        }
+        let mut events = std::mem::take(&mut self.events);
+        self.reactor.wait(&mut events, timeout.min(self.timeout))?;
+        self.events = events;
+        Ok(())
+    }
+}
+
+/// Split a raw buffer into pre-stamped request chunks of at most
+/// `chunk_bytes` each.  Empty input becomes a single empty last chunk
+/// so zero-length payloads still round-trip.
+pub fn chunks_from_raw(data: &[u8], chunk_bytes: usize) -> Vec<ChunkMsg> {
+    let chunk_bytes = chunk_bytes.max(1);
+    if data.is_empty() {
+        return vec![ChunkMsg {
+            seq: 0,
+            last: true,
+            n_symbols: 0,
+            payload: Vec::new(),
+            scales: Vec::new(),
+        }];
+    }
+    let n_chunks = data.len().div_ceil(chunk_bytes);
+    data.chunks(chunk_bytes)
+        .enumerate()
+        .map(|(i, c)| ChunkMsg {
+            seq: i as u32,
+            last: i + 1 == n_chunks,
+            n_symbols: c.len(),
+            payload: c.to_vec(),
+            scales: Vec::new(),
+        })
+        .collect()
+}
+
+/// Concatenate response payloads back into one buffer.
+pub fn concat_payloads(chunks: &[ChunkMsg]) -> Vec<u8> {
+    let total = chunks.iter().map(|c| c.payload.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for c in chunks {
+        out.extend_from_slice(&c.payload);
+    }
+    out
+}

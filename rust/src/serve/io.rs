@@ -1,0 +1,91 @@
+//! Shared non-blocking socket plumbing for the serve server and
+//! client: raw-fd extraction for reactor registration and the
+//! WouldBlock-aware read/write primitives both state machines build
+//! on.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::transport::reactor;
+
+/// How much one `read` call may pull per attempt.
+pub(crate) const READ_CHUNK: usize = 64 * 1024;
+
+#[cfg(unix)]
+pub(crate) fn stream_fd(s: &TcpStream) -> reactor::RawFd {
+    use std::os::fd::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub(crate) fn stream_fd(s: &TcpStream) -> reactor::RawFd {
+    // No epoll off unix; the fallback reactor only needs a distinct
+    // identifier per registration, and the local port number is one.
+    s.local_addr().map(|a| a.port() as reactor::RawFd).unwrap_or(0)
+}
+
+#[cfg(unix)]
+pub(crate) fn listener_fd(l: &TcpListener) -> reactor::RawFd {
+    use std::os::fd::AsRawFd;
+    l.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub(crate) fn listener_fd(l: &TcpListener) -> reactor::RawFd {
+    l.local_addr().map(|a| a.port() as reactor::RawFd).unwrap_or(0)
+}
+
+/// Pull whatever the socket has ready into `inbuf`, up to one
+/// [`READ_CHUNK`] per inner read.  Returns `(bytes_read, saw_eof)`;
+/// WouldBlock simply ends the attempt.
+pub(crate) fn read_some(
+    stream: &mut TcpStream,
+    inbuf: &mut Vec<u8>,
+) -> Result<(usize, bool), String> {
+    let mut total = 0usize;
+    let mut buf = [0u8; READ_CHUNK];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok((total, true)),
+            Ok(n) => {
+                inbuf.extend_from_slice(&buf[..n]);
+                total += n;
+                if n < buf.len() {
+                    return Ok((total, false));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                return Ok((total, false));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("socket read: {e}")),
+        }
+    }
+}
+
+/// Push `out[*pos..]` at the socket until it pushes back, compacting
+/// the buffer once fully drained.  Returns the byte count accepted.
+pub(crate) fn write_some(
+    stream: &mut TcpStream,
+    out: &mut Vec<u8>,
+    pos: &mut usize,
+) -> Result<usize, String> {
+    let mut total = 0usize;
+    while *pos < out.len() {
+        match stream.write(&out[*pos..]) {
+            Ok(0) => return Err("socket write: wrote 0 bytes".to_string()),
+            Ok(n) => {
+                *pos += n;
+                total += n;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("socket write: {e}")),
+        }
+    }
+    if *pos >= out.len() {
+        out.clear();
+        *pos = 0;
+    }
+    Ok(total)
+}

@@ -1,0 +1,220 @@
+//! Concurrent load generator for `qlc serve`: M independent client
+//! streams, each running compress→decompress round trips against the
+//! server and verifying the round trip bit-exactly, with aggregate
+//! throughput and per-op latency quantiles pulled from the global
+//! [`obs`] registry.
+
+use std::time::{Duration, Instant};
+
+use crate::codecs::CodecRegistry;
+use crate::collective::dist::fnv1a64;
+use crate::data::{TensorGen, TensorKind};
+use crate::formats::Variant;
+use crate::obs;
+use crate::stats::Histogram;
+use crate::transport::net::serve_wire::Op;
+use crate::transport::reactor::{self, new_reactor};
+use crate::util::rng::Rng;
+
+use super::client::{
+    chunks_from_raw, concat_payloads, ClientConfig, ServeClient,
+};
+
+/// Load-generator knobs (the `qlc loadgen` flags, structured).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address to connect to.
+    pub addr: String,
+    /// Concurrent client streams; each opens one compress and one
+    /// decompress connection.
+    pub streams: usize,
+    /// Round trips per stream.
+    pub requests: usize,
+    /// Raw payload bytes per request (rounded down to a multiple of
+    /// 32 symbols, minimum 32).
+    pub size: usize,
+    /// Request chunk size in bytes.
+    pub chunk: usize,
+    /// Codec name resolved against each stream's own calibration
+    /// histogram.
+    pub codec: String,
+    /// Reactor backend for the client pumps.
+    pub backend: reactor::Backend,
+    /// Check every round trip against an FNV-1a checksum of the
+    /// original payload.
+    pub verify: bool,
+    /// Base RNG seed; stream `i` forks stream `i + 1` off it.
+    pub seed: u64,
+    /// Per-request progress deadline.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: String::new(),
+            streams: 4,
+            requests: 8,
+            size: 1 << 20,
+            chunk: 64 * 1024,
+            codec: "qlc".to_string(),
+            backend: reactor::Backend::Auto,
+            verify: true,
+            seed: 0x10ad,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What a load-generator run measured.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub streams: usize,
+    /// Total compress→decompress round trips completed.
+    pub requests: u64,
+    /// Raw bytes pushed through compression (one direction).
+    pub raw_bytes: u64,
+    /// Compressed bytes that came back from the compress streams.
+    pub wire_bytes: u64,
+    pub wall_s: f64,
+    /// Raw MB/s through the server counting both directions (each
+    /// round trip compresses and then decompresses the payload).
+    pub aggregate_mbps: f64,
+    /// Round trips that passed the checksum (0 when `verify` is off).
+    pub verified: u64,
+    pub p50_compress_ns: u64,
+    pub p99_compress_ns: u64,
+    pub p50_decompress_ns: u64,
+    pub p99_decompress_ns: u64,
+    /// Reactor backend the clients resolved to.
+    pub backend: String,
+}
+
+struct StreamTotals {
+    raw_bytes: u64,
+    wire_bytes: u64,
+    requests: u64,
+    verified: u64,
+}
+
+/// Run the load: M scoped worker threads, each with its own data,
+/// calibration, codec handle and connection pair.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
+    if cfg.streams == 0 || cfg.requests == 0 {
+        return Err("loadgen needs at least one stream and one request"
+            .to_string());
+    }
+    // Resolve the backend label once so the quantile lookup below
+    // reads the same histogram the clients record into.
+    let backend_label = new_reactor(cfg.backend)?.name();
+
+    let start = Instant::now();
+    let totals: Vec<Result<StreamTotals, String>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cfg.streams)
+                .map(|idx| scope.spawn(move || run_stream(cfg, idx)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err("stream worker panicked".to_string())
+                    })
+                })
+                .collect()
+        });
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    let mut raw_bytes = 0u64;
+    let mut wire_bytes = 0u64;
+    let mut requests = 0u64;
+    let mut verified = 0u64;
+    for t in totals {
+        let t = t?;
+        raw_bytes += t.raw_bytes;
+        wire_bytes += t.wire_bytes;
+        requests += t.requests;
+        verified += t.verified;
+    }
+
+    let quant = |op: &str, q: f64| -> u64 {
+        obs::global()
+            .hist(&obs::label(
+                "serve_request_latency_ns",
+                &[("backend", backend_label), ("op", op)],
+            ))
+            .quantile(q)
+            .unwrap_or(0)
+    };
+    Ok(LoadgenReport {
+        streams: cfg.streams,
+        requests,
+        raw_bytes,
+        wire_bytes,
+        wall_s,
+        // Each round trip moves the raw payload through the codec
+        // twice (compress up, decompress back).
+        aggregate_mbps: 2.0 * raw_bytes as f64 / wall_s / 1e6,
+        verified,
+        p50_compress_ns: quant("compress", 0.50),
+        p99_compress_ns: quant("compress", 0.99),
+        p50_decompress_ns: quant("decompress", 0.50),
+        p99_decompress_ns: quant("decompress", 0.99),
+        backend: backend_label.to_string(),
+    })
+}
+
+/// One stream: deterministic e4m3 symbol payload, per-stream codec
+/// calibration, a connection pair, `requests` round trips.
+fn run_stream(cfg: &LoadgenConfig, idx: usize) -> Result<StreamTotals, String> {
+    let gen = TensorGen::new(TensorKind::Ffn1Act, Variant::ExmY);
+    let mut base = Rng::new(cfg.seed);
+    let mut rng = base.fork(idx as u64 + 1);
+    let n = (cfg.size - cfg.size % 32).max(32);
+    let data = gen.symbols(&mut rng, n);
+    let hist = Histogram::from_symbols(&data);
+    let handle = CodecRegistry::global().resolve(&cfg.codec, &hist)?;
+    let want_sum = fnv1a64(&data);
+
+    let ccfg = ClientConfig {
+        backend: cfg.backend,
+        timeout: cfg.timeout,
+        chunk: cfg.chunk,
+    };
+    let mut comp =
+        ServeClient::connect(&cfg.addr, &handle, Op::Compress, &ccfg)?;
+    let mut deco =
+        ServeClient::connect(&cfg.addr, &handle, Op::Decompress, &ccfg)?;
+
+    let mut totals = StreamTotals {
+        raw_bytes: 0,
+        wire_bytes: 0,
+        requests: 0,
+        verified: 0,
+    };
+    let chunks = chunks_from_raw(&data, cfg.chunk);
+    for _ in 0..cfg.requests {
+        let compressed = comp.request(&chunks)?;
+        totals.raw_bytes += data.len() as u64;
+        totals.wire_bytes +=
+            compressed.iter().map(|c| c.payload.len() as u64).sum::<u64>();
+        // The compress responses are already stamped as a valid
+        // request stream (same seq/last, n_symbols = raw chunk size),
+        // so they feed the decompress connection unchanged.
+        let raw_back = deco.request(&compressed)?;
+        totals.requests += 1;
+        if cfg.verify {
+            let got = concat_payloads(&raw_back);
+            if got.len() != data.len() || fnv1a64(&got) != want_sum {
+                return Err(format!(
+                    "stream {idx}: round trip mismatch ({} bytes back, \
+                     {} sent)",
+                    got.len(),
+                    data.len()
+                ));
+            }
+            totals.verified += 1;
+        }
+    }
+    Ok(totals)
+}

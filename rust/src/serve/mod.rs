@@ -1,0 +1,37 @@
+//! The `qlc serve` streaming compression service.
+//!
+//! Three pieces over the [`crate::transport::reactor`] event loop and
+//! the [`crate::transport::net::serve_wire`] session protocol:
+//!
+//! * [`server`] — the single-threaded, readiness-driven [`Server`]:
+//!   many concurrent connections, per-connection session reuse,
+//!   bounded per-connection output queues (a slow reader stalls only
+//!   its own stream);
+//! * [`client`] — [`ServeClient`], the matching request/response
+//!   pump, plus the [`chunks_from_raw`]/[`concat_payloads`] chunking
+//!   helpers;
+//! * [`loadgen`] — [`run_loadgen`], M concurrent verified
+//!   compress→decompress round-trip streams reporting aggregate MB/s
+//!   and per-op p50/p99 latency.
+//!
+//! Protocol in one paragraph: a client opens a TCP connection, sends
+//! one QSV1 handshake naming the operation and the codec identity
+//! (wire tag + serialized table header, exactly what
+//! [`CodecHandle::wire_header`](crate::codecs::CodecHandle) emits),
+//! and receives a QSA1 ack.  From then on the connection is a stream
+//! of QWC1 frames: `hop` numbers the request, `seq` the chunk within
+//! it, `FLAG_LAST` ends the request, and the server answers every
+//! request frame with exactly one response frame under the same
+//! `(hop, seq)`.  Compress streams carry raw symbol bytes up and
+//! compressed chunks back; decompress streams the reverse.
+
+pub mod client;
+mod io;
+pub mod loadgen;
+pub mod server;
+
+pub use client::{
+    chunks_from_raw, concat_payloads, ClientConfig, ServeClient,
+};
+pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
+pub use server::{ServeSummary, Server, ServerConfig};

@@ -1,0 +1,593 @@
+//! The event-driven `qlc serve` server: one thread, one [`Reactor`],
+//! many concurrent client connections.
+//!
+//! Every connection is a non-blocking state machine: a partial-frame
+//! read buffer, a per-connection output queue flushed as the socket
+//! accepts bytes, and — after the QSV1 handshake resolves a codec —
+//! one [`EncoderSession`]/[`DecoderSession`] pair reused across every
+//! request on the connection (codec tables are built once per
+//! connection, never per request).
+//!
+//! Backpressure is per-connection and bounded: once a connection's
+//! queued output crosses [`ServerConfig::out_hiwater`] the server
+//! stops reading (and stops decoding) *that* connection — its read
+//! interest is dropped so the level-triggered reactor does not spin —
+//! until the queue drains.  A slow reader therefore stalls only its
+//! own stream; the accept loop and every other connection keep
+//! running.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::codecs::{
+    Codec, CodecHandle, CodecRegistry, DecoderSession, EncoderSession,
+};
+use crate::obs;
+use crate::transport::net::serve_wire::{self, Ack, Op, RequestTracker};
+use crate::transport::net::wire;
+use crate::transport::reactor::{self, new_reactor, Interest, Reactor};
+use crate::transport::ChunkMsg;
+
+use super::io::{listener_fd, read_some, stream_fd, write_some};
+
+/// Reactor token of the accept socket; connections start at 1.
+const TOKEN_LISTENER: u64 = 0;
+
+/// How long one reactor wait may park before the loop re-checks the
+/// shutdown flag and exit condition.
+const WAIT_TICK: Duration = Duration::from_millis(100);
+
+/// A frame that has not completed within this many buffered bytes can
+/// only be one that violates the serve chunk caps — tear the
+/// connection down instead of buffering toward the (much larger)
+/// link-level frame cap.
+const INBUF_CAP: usize = serve_wire::MAX_REQ_PAYLOAD + (64 << 10);
+
+/// `qlc serve` configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Readiness-wait backend for the event loop.
+    pub backend: reactor::Backend,
+    /// Stop (gracefully: drain live connections, accept no new ones)
+    /// after completing this many requests; `0` = run until the
+    /// shutdown handle fires.
+    pub max_requests: u64,
+    /// Accept cap: further connections are closed immediately.
+    pub max_conns: usize,
+    /// Backpressure high-water mark on one connection's output queue,
+    /// in bytes.  Reading (and codec work) for the connection pauses
+    /// above it and resumes once the queue drains below it.
+    pub out_hiwater: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            backend: reactor::Backend::Auto,
+            max_requests: 0,
+            max_conns: 256,
+            out_hiwater: 4 << 20,
+        }
+    }
+}
+
+/// What a finished [`Server::run`] did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeSummary {
+    /// Requests completed (a multi-chunk request counts once).
+    pub requests: u64,
+    /// Connections accepted over the server's lifetime.
+    pub conns: u64,
+}
+
+/// Per-connection codec state: the handle owns the codec, the
+/// sessions borrow it for the connection's whole lifetime so chunk
+/// N+1 of request K+1 reuses the tables (and the session accounting)
+/// built for request 0.
+struct ConnSessions {
+    /// Declared before `handle` so they drop first — both sessions
+    /// borrow the codec that `handle` owns.
+    enc: EncoderSession<'static>,
+    dec: DecoderSession<'static>,
+    tracker: RequestTracker,
+    op: Op,
+    handle: CodecHandle,
+}
+
+impl ConnSessions {
+    fn new(op: Op, handle: CodecHandle) -> ConnSessions {
+        // SAFETY: `handle.codec()` borrows the codec through the
+        // `Box<dyn Codec>` inside `handle`; that heap allocation is
+        // stable when `handle` moves and lives until `handle` drops.
+        // The sessions sit before `handle` in this struct, so they
+        // drop first and the 'static-extended borrow never outlives
+        // the allocation; the handle is never mutated while they live.
+        let codec: &'static dyn Codec =
+            unsafe { &*(handle.codec() as *const dyn Codec) };
+        ConnSessions {
+            enc: EncoderSession::new(codec),
+            dec: DecoderSession::new(codec),
+            tracker: RequestTracker::new(handle.wire_tag()),
+            op,
+            handle,
+        }
+    }
+
+    fn codec_name(&self) -> &str {
+        self.handle.name()
+    }
+}
+
+/// One client connection's non-blocking state machine.
+struct Conn {
+    stream: TcpStream,
+    fd: reactor::RawFd,
+    token: u64,
+    /// Bytes read but not yet framed.
+    inbuf: Vec<u8>,
+    /// Outbound bytes the socket has not accepted yet
+    /// (`out[out_pos..]`).
+    out: Vec<u8>,
+    out_pos: usize,
+    /// What the reactor currently watches this connection for.
+    interest: Interest,
+    /// Peer finished sending (EOF on the read side).
+    rx_eof: bool,
+    /// Tear down once the queued output drains (handshake reject).
+    close_after_flush: bool,
+    /// `None` until the handshake resolves a codec.
+    sessions: Option<ConnSessions>,
+    /// Started at the first chunk of the in-flight request.
+    req_start: Option<obs::Stopwatch>,
+}
+
+impl Conn {
+    fn pending_out(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    /// Nothing left to do for this peer: it stopped sending (or was
+    /// rejected) and every queued response byte has been flushed.
+    fn finished(&self) -> bool {
+        self.pending_out() == 0 && (self.rx_eof || self.close_after_flush)
+    }
+}
+
+/// Global-registry counters/histograms for the serve loop.
+struct ServeStats {
+    conns: obs::Counter,
+    conns_over_cap: obs::Counter,
+    requests: obs::Counter,
+    rejects: obs::Counter,
+    conn_errors: obs::Counter,
+    bytes_in: obs::Counter,
+    bytes_out: obs::Counter,
+    backpressure: obs::Counter,
+    req_ns_compress: obs::Hist,
+    req_ns_decompress: obs::Hist,
+}
+
+impl ServeStats {
+    fn new() -> ServeStats {
+        let reg = obs::global();
+        ServeStats {
+            conns: reg.counter("serve_conns_total"),
+            conns_over_cap: reg.counter("serve_conns_over_cap_total"),
+            requests: reg.counter("serve_requests_total"),
+            rejects: reg.counter("serve_handshake_rejects_total"),
+            conn_errors: reg.counter("serve_conn_errors_total"),
+            bytes_in: reg.counter("serve_bytes_in_total"),
+            bytes_out: reg.counter("serve_bytes_out_total"),
+            backpressure: reg.counter("serve_backpressure_stalls_total"),
+            req_ns_compress: reg.hist(&obs::label(
+                "serve_request_ns",
+                &[("op", "compress")],
+            )),
+            req_ns_decompress: reg.hist(&obs::label(
+                "serve_request_ns",
+                &[("op", "decompress")],
+            )),
+        }
+    }
+}
+
+/// The streaming compression server.  See the module docs.
+pub struct Server {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    reactor: Box<dyn Reactor>,
+    cfg: ServerConfig,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    served: u64,
+    accepted: u64,
+    stop: Arc<AtomicBool>,
+    /// Scratch event buffer reused across waits.
+    events: Vec<reactor::Event>,
+    stats: ServeStats,
+}
+
+impl Server {
+    /// Bind the accept socket and set up the event loop.  `addr` may
+    /// use port 0 to let the OS pick ([`Server::local_addr`] reports
+    /// the real one).
+    pub fn bind(addr: &str, cfg: ServerConfig) -> Result<Server, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("nonblocking listener: {e}"))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| e.to_string())?;
+        let mut reactor = new_reactor(cfg.backend)?;
+        reactor.register(
+            listener_fd(&listener),
+            TOKEN_LISTENER,
+            Interest::READABLE,
+        )?;
+        Ok(Server {
+            listener,
+            local_addr,
+            reactor,
+            cfg,
+            conns: HashMap::new(),
+            next_token: TOKEN_LISTENER + 1,
+            served: 0,
+            accepted: 0,
+            stop: Arc::new(AtomicBool::new(false)),
+            events: Vec::new(),
+            stats: ServeStats::new(),
+        })
+    }
+
+    /// The bound address (real port even when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Which reactor backend the event loop resolved to.
+    pub fn backend_name(&self) -> &'static str {
+        self.reactor.name()
+    }
+
+    /// A flag that makes [`Server::run`] return within one wait tick.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Has the request target been reached (never true for the
+    /// run-forever configuration)?
+    fn target_reached(&self) -> bool {
+        self.cfg.max_requests > 0 && self.served >= self.cfg.max_requests
+    }
+
+    /// Run the event loop until the shutdown handle fires or
+    /// `max_requests` requests have completed **and** every live
+    /// connection has drained (clients still waiting on queued
+    /// responses get them before the loop exits).
+    pub fn run(&mut self) -> Result<ServeSummary, String> {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            if self.target_reached() && self.conns.is_empty() {
+                break;
+            }
+            let mut events = std::mem::take(&mut self.events);
+            self.reactor.wait(&mut events, WAIT_TICK)?;
+            let mut progressed = false;
+            for ev in &events {
+                if ev.token == TOKEN_LISTENER {
+                    progressed |= self.accept_ready()?;
+                } else {
+                    progressed |= self.pump_conn(ev.token);
+                }
+            }
+            self.events = events;
+            if progressed {
+                self.reactor.note_progress();
+            }
+        }
+        Ok(ServeSummary { requests: self.served, conns: self.accepted })
+    }
+
+    /// Drain the accept queue.  Connections over the cap (or arriving
+    /// after the request target was reached) are closed immediately.
+    fn accept_ready(&mut self) -> Result<bool, String> {
+        let mut progressed = false;
+        loop {
+            let stream = match self.listener.accept() {
+                Ok((stream, _peer)) => stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    continue
+                }
+                Err(e) => return Err(format!("accept: {e}")),
+            };
+            progressed = true;
+            if self.conns.len() >= self.cfg.max_conns || self.target_reached()
+            {
+                self.stats.conns_over_cap.inc();
+                drop(stream);
+                continue;
+            }
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            let fd = stream_fd(&stream);
+            let token = self.next_token;
+            self.next_token += 1;
+            if self.reactor.register(fd, token, Interest::READABLE).is_err() {
+                continue;
+            }
+            self.accepted += 1;
+            self.stats.conns.inc();
+            self.conns.insert(
+                token,
+                Conn {
+                    stream,
+                    fd,
+                    token,
+                    inbuf: Vec::new(),
+                    out: Vec::new(),
+                    out_pos: 0,
+                    interest: Interest::READABLE,
+                    rx_eof: false,
+                    close_after_flush: false,
+                    sessions: None,
+                    req_start: None,
+                },
+            );
+        }
+        Ok(progressed)
+    }
+
+    /// Drive one connection as far as it will go.  Per-connection
+    /// failures (I/O errors, protocol violations, codec errors) tear
+    /// that connection down; they never abort the server.
+    fn pump_conn(&mut self, token: u64) -> bool {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return false;
+        };
+        match self.drive(&mut conn) {
+            Ok(progressed) => {
+                if conn.finished() {
+                    self.close_conn(conn);
+                } else if self.update_interest(&mut conn).is_err() {
+                    self.stats.conn_errors.inc();
+                    self.close_conn(conn);
+                } else {
+                    self.conns.insert(token, conn);
+                }
+                progressed
+            }
+            Err(_) => {
+                self.stats.conn_errors.inc();
+                self.close_conn(conn);
+                true
+            }
+        }
+    }
+
+    /// Flush, fill and parse until nothing moves.
+    fn drive(&mut self, conn: &mut Conn) -> Result<bool, String> {
+        let mut progressed = false;
+        loop {
+            let mut round = self.try_flush(conn)?;
+            round |= self.try_fill(conn)?;
+            round |= self.process(conn)?;
+            if !round {
+                break;
+            }
+            progressed = true;
+        }
+        Ok(progressed)
+    }
+
+    /// Write queued output until the socket pushes back.
+    fn try_flush(&mut self, conn: &mut Conn) -> Result<bool, String> {
+        let wrote = write_some(
+            &mut conn.stream,
+            &mut conn.out,
+            &mut conn.out_pos,
+        )?;
+        if wrote > 0 {
+            self.stats.bytes_out.add(wrote as u64);
+        }
+        Ok(wrote > 0)
+    }
+
+    /// Read inbound bytes unless the peer is done or the connection
+    /// is backpressured.
+    fn try_fill(&mut self, conn: &mut Conn) -> Result<bool, String> {
+        if conn.rx_eof
+            || conn.close_after_flush
+            || conn.pending_out() >= self.cfg.out_hiwater
+            || conn.inbuf.len() >= INBUF_CAP
+        {
+            return Ok(false);
+        }
+        let (read, eof) = read_some(&mut conn.stream, &mut conn.inbuf)?;
+        if eof {
+            conn.rx_eof = true;
+        }
+        if read > 0 {
+            self.stats.bytes_in.add(read as u64);
+        }
+        Ok(read > 0 || eof)
+    }
+
+    /// Parse and answer everything complete in the read buffer.
+    fn process(&mut self, conn: &mut Conn) -> Result<bool, String> {
+        let mut pos = 0usize;
+        loop {
+            if conn.close_after_flush {
+                break;
+            }
+            // Backpressure: stop producing output once the queue is
+            // over the high-water mark; the unread frames keep until
+            // the flush side drains it.
+            if conn.pending_out() >= self.cfg.out_hiwater {
+                self.stats.backpressure.inc();
+                break;
+            }
+            if pos >= conn.inbuf.len() {
+                break;
+            }
+            if conn.sessions.is_none() {
+                match serve_wire::decode_handshake(&conn.inbuf[pos..]) {
+                    Ok(Some((hs, used))) => {
+                        pos += used;
+                        self.open_session(conn, hs);
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // Malformed handshake: answer with the reason,
+                        // then close once the ack flushes.
+                        self.stats.rejects.inc();
+                        serve_wire::encode_ack(&Ack::err(e), &mut conn.out);
+                        conn.close_after_flush = true;
+                        break;
+                    }
+                }
+            } else {
+                match wire::decode_frame(&conn.inbuf[pos..]) {
+                    Ok(Some((frame, used))) => {
+                        pos += used;
+                        self.handle_frame(conn, frame)?;
+                    }
+                    Ok(None) => {
+                        if conn.inbuf.len() - pos > INBUF_CAP {
+                            return Err(
+                                "request frame exceeds the serve buffer cap"
+                                    .to_string(),
+                            );
+                        }
+                        break;
+                    }
+                    Err(e) => return Err(format!("request framing: {e}")),
+                }
+            }
+        }
+        if pos > 0 {
+            conn.inbuf.drain(..pos);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Resolve the handshake's codec identity and, on success, build
+    /// the connection's long-lived session pair.
+    fn open_session(&mut self, conn: &mut Conn, hs: serve_wire::Handshake) {
+        match CodecRegistry::global().resolve_wire(hs.codec_tag, &hs.header) {
+            Ok(handle) => {
+                serve_wire::encode_ack(&Ack::ok(), &mut conn.out);
+                conn.sessions = Some(ConnSessions::new(hs.op, handle));
+            }
+            Err(e) => {
+                self.stats.rejects.inc();
+                serve_wire::encode_ack(
+                    &Ack::err(format!("codec rejected: {e}")),
+                    &mut conn.out,
+                );
+                conn.close_after_flush = true;
+            }
+        }
+    }
+
+    /// One validated request chunk in, one response chunk queued out.
+    fn handle_frame(
+        &mut self,
+        conn: &mut Conn,
+        frame: wire::WireFrame,
+    ) -> Result<(), String> {
+        let Some(sessions) = conn.sessions.as_mut() else {
+            return Err("frame before handshake".to_string());
+        };
+        if sessions.tracker.expected_seq() == 0 {
+            conn.req_start = Some(obs::Stopwatch::start());
+        }
+        let completes = sessions.tracker.accept(&frame)?;
+        let _span = obs::span("serve.chunk")
+            .arg("op", sessions.op.name())
+            .arg("codec", sessions.codec_name())
+            .arg("request", frame.hop);
+        let (payload, n_symbols) = match sessions.op {
+            Op::Compress => {
+                // A compress-stream chunk is raw bytes: one symbol per
+                // payload byte, by construction.
+                if frame.msg.n_symbols != frame.msg.payload.len() {
+                    return Err(format!(
+                        "compress chunk declares {} symbols for {} raw \
+                         bytes",
+                        frame.msg.n_symbols,
+                        frame.msg.payload.len()
+                    ));
+                }
+                let n = frame.msg.payload.len();
+                (sessions.enc.encode_chunk_to_vec(&frame.msg.payload), n)
+            }
+            Op::Decompress => {
+                let n = frame.msg.n_symbols;
+                // The tracker capped n at MAX_CHUNK_SYMBOLS, so this
+                // allocation is bounded per chunk.
+                let mut out = vec![0u8; n];
+                sessions
+                    .dec
+                    .decode_chunk(&frame.msg.payload, &mut out)
+                    .map_err(|e| format!("chunk decode: {e}"))?;
+                (out, n)
+            }
+        };
+        let resp = ChunkMsg {
+            seq: frame.msg.seq,
+            last: frame.msg.last,
+            n_symbols,
+            payload,
+            // Block scales ride along unchanged in both directions.
+            scales: frame.msg.scales,
+        };
+        wire::encode_frame(frame.hop, frame.codec_tag, &resp, &mut conn.out)?;
+        if completes {
+            self.served += 1;
+            self.stats.requests.inc();
+            let ns = conn
+                .req_start
+                .take()
+                .map(|sw| sw.elapsed_ns())
+                .unwrap_or(0);
+            match sessions.op {
+                Op::Compress => self.stats.req_ns_compress.record(ns),
+                Op::Decompress => self.stats.req_ns_decompress.record(ns),
+            }
+        }
+        Ok(())
+    }
+
+    /// Keep the reactor's view of this connection in sync: readable
+    /// only while we are willing to read (not EOF, not backpressured),
+    /// writable only while output is queued.
+    fn update_interest(&mut self, conn: &mut Conn) -> Result<(), String> {
+        let want = Interest {
+            readable: !conn.rx_eof
+                && !conn.close_after_flush
+                && conn.pending_out() < self.cfg.out_hiwater
+                && conn.inbuf.len() < INBUF_CAP,
+            writable: conn.pending_out() > 0,
+        };
+        if want != conn.interest {
+            self.reactor.reregister(conn.fd, conn.token, want)?;
+            conn.interest = want;
+        }
+        Ok(())
+    }
+
+    fn close_conn(&mut self, conn: Conn) {
+        let _ = self.reactor.deregister(conn.fd);
+        // `conn.stream` drops (and closes) here.
+    }
+}

@@ -50,10 +50,12 @@
 //! savings `1 - pipelined/serial`.
 
 pub mod net;
+pub mod reactor;
 pub mod sim;
 pub mod threaded;
 
 pub use net::{NetConfig, TcpLink};
+pub use reactor::{Backend, Event, Interest, Reactor};
 pub use sim::{ChunkTiming, HopTrace, SimLink};
 pub use threaded::ThreadedEndpoint;
 

@@ -6,6 +6,10 @@
 //! * [`wire`] — the length-prefixed QWC1 frame protocol: one
 //!   [`ChunkMsg`](crate::transport::ChunkMsg) per frame, strict
 //!   `Err`-returning validation, hard caps on every untrusted length;
+//! * [`serve_wire`] — the `qlc serve` session layer over QWC1: the
+//!   QSV1 handshake / QSA1 ack formats and the [`RequestTracker`]
+//!   request/chunk sequencing state machine (see
+//!   [`crate::serve`] for the event-driven server built on them);
 //! * [`tcp`] — [`TcpLink`], the [`Link`](crate::transport::Link)
 //!   implementation over non-blocking [`std::net::TcpStream`] pairs
 //!   with read/write buffering, bidirectional pumping (no deadlock on
@@ -21,9 +25,11 @@
 //! subcommands.
 
 pub mod rendezvous;
+pub mod serve_wire;
 pub mod tcp;
 pub mod wire;
 
 pub use rendezvous::form_ring;
+pub use serve_wire::RequestTracker;
 pub use tcp::{NetConfig, TcpLink};
 pub use wire::WireFrame;

@@ -1,0 +1,617 @@
+//! Handshake and acknowledgement wire formats for the `qlc serve`
+//! request/response protocol, plus the per-connection request framing
+//! state machine.
+//!
+//! A serve connection opens with exactly one client handshake (format
+//! QSV1) naming the operation and the codec identity:
+//!
+//! ```text
+//! magic "QSV1" | version u8 (= 1) | op u8 (1 = compress,
+//! 2 = decompress) | codec_tag u8 | header_len u32 | header bytes…
+//! ```
+//!
+//! The server answers with one acknowledgement (format QSA1):
+//!
+//! ```text
+//! magic "QSA1" | status u8 (0 = ok, 1 = error) | msg_len u32 | msg…
+//! ```
+//!
+//! On an ok ack both sides switch to [`super::wire`] QWC1 frames:
+//! `hop` carries the request ordinal (0, 1, 2, … per connection),
+//! `seq` the chunk ordinal within the request, and `FLAG_LAST`
+//! terminates a request.  The server streams back one response frame
+//! per request frame under the same hop/seq ordinals, so a client can
+//! pipeline requests and still match responses positionally.
+//!
+//! Validation mirrors `wire`: strict, `Err`-returning, never
+//! panicking, with every untrusted length capped *before* any
+//! allocation it sizes.  Decoders distinguish "incomplete, read more"
+//! (`Ok(None)`) from corruption (`Err`).  [`RequestTracker`] is the
+//! sequencing half: it enforces the hop/seq ordinals and the serve
+//! per-chunk caps so an interleaved, replayed or foreign stream fails
+//! fast instead of corrupting session state.
+
+use super::wire::WireFrame;
+
+/// Handshake magic (client → server, once per connection).
+pub const HS_MAGIC: [u8; 4] = *b"QSV1";
+/// Handshake format version this build speaks.
+pub const HS_VERSION: u8 = 1;
+/// Fixed handshake prefix: magic, version, op, codec_tag, header_len.
+pub const HS_HEADER_LEN: usize = 4 + 1 + 1 + 1 + 4;
+/// Hard cap on the codec wire header carried by a handshake (1 MiB —
+/// real headers are a few bytes of codec parameters).
+pub const MAX_WIRE_HEADER: usize = 1 << 20;
+
+/// Acknowledgement magic (server → client, once per connection).
+pub const ACK_MAGIC: [u8; 4] = *b"QSA1";
+/// Fixed ack prefix: magic, status, msg_len.
+pub const ACK_HEADER_LEN: usize = 4 + 1 + 4;
+/// Hard cap on the ack's human-readable error message.
+pub const MAX_ACK_MSG: usize = 1 << 10;
+
+/// Per-chunk payload cap on the serve path (16 MiB), deliberately
+/// tighter than the link-level [`super::wire::MAX_PAYLOAD_BYTES`]: a
+/// serve request is sliced client-side into transport chunks, so one
+/// hostile connection can never pin a gigabyte of server memory.
+pub const MAX_REQ_PAYLOAD: usize = 1 << 24;
+/// Per-chunk symbol-count cap on the serve path (16 Mi symbols); the
+/// decompress side allocates `n_symbols` output bytes per chunk, so
+/// this bounds that allocation the way `MAX_REQ_PAYLOAD` bounds the
+/// payload one.
+pub const MAX_CHUNK_SYMBOLS: usize = 1 << 24;
+
+/// What a serve connection asks the server to do with its stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Client streams raw bytes up, server streams compressed chunks
+    /// back.
+    Compress,
+    /// Client streams compressed chunks up, server streams raw bytes
+    /// back.
+    Decompress,
+}
+
+impl Op {
+    /// The byte this op travels as in a QSV1 handshake.
+    pub fn wire_byte(self) -> u8 {
+        match self {
+            Op::Compress => 1,
+            Op::Decompress => 2,
+        }
+    }
+
+    /// Inverse of [`Op::wire_byte`].
+    pub fn from_wire(byte: u8) -> Result<Op, String> {
+        match byte {
+            1 => Ok(Op::Compress),
+            2 => Ok(Op::Decompress),
+            other => Err(format!("unknown handshake op byte {other:#04x}")),
+        }
+    }
+
+    /// CLI/metrics-facing name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Compress => "compress",
+            Op::Decompress => "decompress",
+        }
+    }
+
+    /// Inverse of [`Op::name`], for `--op` style flags.
+    pub fn parse(name: &str) -> Result<Op, String> {
+        match name {
+            "compress" => Ok(Op::Compress),
+            "decompress" => Ok(Op::Decompress),
+            other => Err(format!(
+                "unknown op '{other}' (expected compress|decompress)"
+            )),
+        }
+    }
+}
+
+/// The decoded client handshake: what to do, and the full wire
+/// identity of the codec so the server can reconstruct it bit-exactly
+/// via `CodecRegistry::resolve_wire`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Handshake {
+    pub op: Op,
+    /// Registry wire tag of the codec.
+    pub codec_tag: u8,
+    /// Codec-specific wire header (tables, parameters), opaque here.
+    pub header: Vec<u8>,
+}
+
+/// Serialize one handshake appended to `out`.
+pub fn encode_handshake(
+    hs: &Handshake,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    if hs.header.len() > MAX_WIRE_HEADER {
+        return Err(format!(
+            "codec wire header {} exceeds the {MAX_WIRE_HEADER}-byte \
+             handshake cap",
+            hs.header.len()
+        ));
+    }
+    out.reserve(HS_HEADER_LEN + hs.header.len());
+    out.extend_from_slice(&HS_MAGIC);
+    out.push(HS_VERSION);
+    out.push(hs.op.wire_byte());
+    out.push(hs.codec_tag);
+    out.extend_from_slice(&(hs.header.len() as u32).to_le_bytes());
+    out.extend_from_slice(&hs.header);
+    Ok(())
+}
+
+/// Try to decode one handshake from the front of `buf`.
+///
+/// `Ok(Some((hs, consumed)))` on a complete valid handshake,
+/// `Ok(None)` while the (so-far valid) handshake is incomplete,
+/// `Err(_)` on corruption — checked field by field, so a wrong magic,
+/// foreign version, unknown op or hostile header length fails fast
+/// without waiting for (or buffering) the declared tail.
+pub fn decode_handshake(
+    buf: &[u8],
+) -> Result<Option<(Handshake, usize)>, String> {
+    let probe = buf.len().min(4);
+    if buf[..probe] != HS_MAGIC[..probe] {
+        return Err("bad handshake magic (not a qlc serve client?)".to_string());
+    }
+    if buf.len() < HS_HEADER_LEN {
+        return Ok(None);
+    }
+    let version = buf[4];
+    if version != HS_VERSION {
+        return Err(format!(
+            "handshake version {version} not supported (this build speaks \
+             {HS_VERSION})"
+        ));
+    }
+    let op = Op::from_wire(buf[5])?;
+    let codec_tag = buf[6];
+    // lint: infallible(fixed 4-byte slice of the length-checked header)
+    let header_len = u32::from_le_bytes(buf[7..11].try_into().unwrap()) as usize;
+    if header_len > MAX_WIRE_HEADER {
+        return Err(format!(
+            "handshake declares a {header_len}-byte codec header (cap \
+             {MAX_WIRE_HEADER})"
+        ));
+    }
+    let total = HS_HEADER_LEN + header_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let header = buf[HS_HEADER_LEN..total].to_vec();
+    Ok(Some((Handshake { op, codec_tag, header }, total)))
+}
+
+/// The server's verdict on a handshake.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ack {
+    pub ok: bool,
+    /// Human-readable rejection reason (empty on ok).
+    pub msg: String,
+}
+
+impl Ack {
+    pub fn ok() -> Ack {
+        Ack { ok: true, msg: String::new() }
+    }
+
+    pub fn err(msg: impl Into<String>) -> Ack {
+        Ack { ok: false, msg: msg.into() }
+    }
+}
+
+/// Serialize one ack appended to `out`.  Oversized messages are
+/// truncated (on a char boundary) rather than rejected: the ack is the
+/// error path, and an error about the error helps nobody.
+pub fn encode_ack(ack: &Ack, out: &mut Vec<u8>) {
+    let mut msg = ack.msg.as_str();
+    while msg.len() > MAX_ACK_MSG {
+        let mut cut = MAX_ACK_MSG;
+        while !msg.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        msg = &msg[..cut];
+    }
+    out.reserve(ACK_HEADER_LEN + msg.len());
+    out.extend_from_slice(&ACK_MAGIC);
+    out.push(if ack.ok { 0 } else { 1 });
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+}
+
+/// Try to decode one ack from the front of `buf`; same tri-state
+/// contract as [`decode_handshake`].
+pub fn decode_ack(buf: &[u8]) -> Result<Option<(Ack, usize)>, String> {
+    let probe = buf.len().min(4);
+    if buf[..probe] != ACK_MAGIC[..probe] {
+        return Err("bad ack magic (not a qlc serve server?)".to_string());
+    }
+    if buf.len() < ACK_HEADER_LEN {
+        return Ok(None);
+    }
+    let status = buf[4];
+    if status > 1 {
+        return Err(format!("unknown ack status byte {status:#04x}"));
+    }
+    // lint: infallible(fixed 4-byte slice of the length-checked header)
+    let msg_len = u32::from_le_bytes(buf[5..9].try_into().unwrap()) as usize;
+    if msg_len > MAX_ACK_MSG {
+        return Err(format!(
+            "ack declares a {msg_len}-byte message (cap {MAX_ACK_MSG})"
+        ));
+    }
+    let total = ACK_HEADER_LEN + msg_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let msg = String::from_utf8_lossy(&buf[ACK_HEADER_LEN..total]).into_owned();
+    Ok(Some((Ack { ok: status == 0, msg }, total)))
+}
+
+/// Sequencing state machine for one direction of a serve connection:
+/// validates that QWC1 frames arrive with the expected request (`hop`)
+/// and chunk (`seq`) ordinals, the agreed codec tag, and payloads
+/// under the serve caps.
+///
+/// Both endpoints run one per direction — the server on inbound
+/// request frames, the client on inbound response frames — so a
+/// desynchronized, interleaved or foreign stream is rejected at the
+/// framing layer, before any codec state is touched.
+#[derive(Clone, Debug)]
+pub struct RequestTracker {
+    codec_tag: u8,
+    next_hop: u32,
+    next_seq: u32,
+}
+
+impl RequestTracker {
+    pub fn new(codec_tag: u8) -> RequestTracker {
+        RequestTracker { codec_tag, next_hop: 0, next_seq: 0 }
+    }
+
+    /// Ordinal of the request the next frame must belong to.
+    pub fn current_request(&self) -> u32 {
+        self.next_hop
+    }
+
+    /// Ordinal the next frame's `seq` field must carry.
+    pub fn expected_seq(&self) -> u32 {
+        self.next_seq
+    }
+
+    /// Validate one inbound frame.  `Ok(true)` when the frame carries
+    /// `FLAG_LAST` and completes the current request (the tracker
+    /// advances to the next request ordinal), `Ok(false)` mid-request,
+    /// `Err(_)` on any ordinal/tag/cap violation — after which the
+    /// connection must be torn down, not resynchronized.
+    pub fn accept(&mut self, frame: &WireFrame) -> Result<bool, String> {
+        if frame.codec_tag != self.codec_tag {
+            return Err(format!(
+                "frame carries codec tag {} but the handshake agreed on {}",
+                frame.codec_tag, self.codec_tag
+            ));
+        }
+        if frame.hop != self.next_hop {
+            return Err(format!(
+                "frame belongs to request {} but request {} is in flight \
+                 (interleaved or replayed stream?)",
+                frame.hop, self.next_hop
+            ));
+        }
+        if frame.msg.seq != self.next_seq {
+            return Err(format!(
+                "request {} chunk arrived with seq {} (expected {})",
+                frame.hop, frame.msg.seq, self.next_seq
+            ));
+        }
+        if frame.msg.payload.len() > MAX_REQ_PAYLOAD {
+            return Err(format!(
+                "request chunk payload {} exceeds the serve cap \
+                 {MAX_REQ_PAYLOAD}",
+                frame.msg.payload.len()
+            ));
+        }
+        if frame.msg.n_symbols > MAX_CHUNK_SYMBOLS {
+            return Err(format!(
+                "request chunk declares {} symbols (serve cap \
+                 {MAX_CHUNK_SYMBOLS})",
+                frame.msg.n_symbols
+            ));
+        }
+        if frame.msg.last {
+            self.next_hop = self.next_hop.wrapping_add(1);
+            self.next_seq = 0;
+            Ok(true)
+        } else {
+            self.next_seq = self.next_seq.checked_add(1).ok_or_else(|| {
+                "request chunk ordinal overflowed u32".to_string()
+            })?;
+            Ok(false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::wire;
+    use super::*;
+    use crate::transport::ChunkMsg;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn hs(op: Op, tag: u8, header: &[u8]) -> Handshake {
+        Handshake { op, codec_tag: tag, header: header.to_vec() }
+    }
+
+    #[test]
+    fn handshake_roundtrips() {
+        for (op, tag, header) in [
+            (Op::Compress, 2u8, &b"\x01\x02\x03"[..]),
+            (Op::Decompress, 0, &b""[..]),
+            (Op::Compress, 255, &[0u8; 300][..]),
+        ] {
+            let mut buf = Vec::new();
+            encode_handshake(&hs(op, tag, header), &mut buf).unwrap();
+            let (got, used) = decode_handshake(&buf).unwrap().unwrap();
+            assert_eq!(used, buf.len());
+            assert_eq!(got.op, op);
+            assert_eq!(got.codec_tag, tag);
+            assert_eq!(got.header, header);
+        }
+    }
+
+    #[test]
+    fn handshake_prefixes_ask_for_more_bytes() {
+        let mut buf = Vec::new();
+        encode_handshake(&hs(Op::Compress, 2, b"hdr"), &mut buf).unwrap();
+        for keep in 0..buf.len() {
+            assert!(
+                matches!(decode_handshake(&buf[..keep]), Ok(None)),
+                "prefix {keep}"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_handshakes_rejected() {
+        let mut buf = Vec::new();
+        encode_handshake(&hs(Op::Compress, 2, b"hdr"), &mut buf).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(decode_handshake(&bad).is_err());
+        assert!(decode_handshake(&bad[..1]).is_err(), "fail on first byte");
+
+        let mut bad = buf.clone();
+        bad[4] = 9; // foreign version
+        assert!(decode_handshake(&bad).is_err());
+
+        let mut bad = buf.clone();
+        bad[5] = 3; // unknown op
+        assert!(decode_handshake(&bad).is_err());
+
+        // Hostile header length: Err immediately, not Ok(None) while
+        // "waiting" for a megabyte that will never arrive.
+        let mut bad = buf.clone();
+        bad[7..11]
+            .copy_from_slice(&((MAX_WIRE_HEADER as u32) + 1).to_le_bytes());
+        assert!(decode_handshake(&bad).is_err());
+
+        // QWC1 frame where a handshake belongs (client skipped the
+        // handshake): wrong magic, rejected.
+        let msg = ChunkMsg {
+            seq: 0,
+            last: true,
+            n_symbols: 8,
+            payload: vec![0xAB; 8],
+            scales: Vec::new(),
+        };
+        let mut frame = Vec::new();
+        wire::encode_frame(0, 2, &msg, &mut frame).unwrap();
+        assert!(decode_handshake(&frame).is_err());
+    }
+
+    #[test]
+    fn encode_handshake_rejects_oversized_header() {
+        let mut buf = Vec::new();
+        let bad = hs(Op::Compress, 2, &vec![0u8; MAX_WIRE_HEADER + 1]);
+        assert!(encode_handshake(&bad, &mut buf).is_err());
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn ack_roundtrips_and_truncates() {
+        for ack in [Ack::ok(), Ack::err("no such codec 'zstd'")] {
+            let mut buf = Vec::new();
+            encode_ack(&ack, &mut buf);
+            let (got, used) = decode_ack(&buf).unwrap().unwrap();
+            assert_eq!(used, buf.len());
+            assert_eq!(got, ack);
+        }
+        // Oversized message: truncated to the cap, still decodable.
+        let mut buf = Vec::new();
+        encode_ack(&Ack::err("x".repeat(MAX_ACK_MSG * 2)), &mut buf);
+        let (got, _) = decode_ack(&buf).unwrap().unwrap();
+        assert_eq!(got.msg.len(), MAX_ACK_MSG);
+    }
+
+    #[test]
+    fn malformed_acks_rejected() {
+        let mut buf = Vec::new();
+        encode_ack(&Ack::ok(), &mut buf);
+
+        let mut bad = buf.clone();
+        bad[0] = b'Q';
+        bad[1] = b'W'; // QWC1-ish magic
+        assert!(decode_ack(&bad).is_err());
+
+        let mut bad = buf.clone();
+        bad[4] = 2; // unknown status
+        assert!(decode_ack(&bad).is_err());
+
+        let mut bad = buf.clone();
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_ack(&bad).is_err());
+
+        for keep in 0..buf.len() {
+            assert!(matches!(decode_ack(&buf[..keep]), Ok(None)));
+        }
+    }
+
+    fn chunk(seq: u32, last: bool, n: usize) -> ChunkMsg {
+        ChunkMsg {
+            seq,
+            last,
+            n_symbols: n,
+            payload: vec![0x5A; n],
+            scales: Vec::new(),
+        }
+    }
+
+    fn frame_of(hop: u32, tag: u8, msg: &ChunkMsg) -> WireFrame {
+        WireFrame { hop, codec_tag: tag, msg: msg.clone() }
+    }
+
+    #[test]
+    fn tracker_walks_requests_in_order() {
+        let mut t = RequestTracker::new(2);
+        assert_eq!(t.current_request(), 0);
+        // Request 0: three chunks.
+        assert!(!t.accept(&frame_of(0, 2, &chunk(0, false, 4))).unwrap());
+        assert!(!t.accept(&frame_of(0, 2, &chunk(1, false, 4))).unwrap());
+        assert!(t.accept(&frame_of(0, 2, &chunk(2, true, 4))).unwrap());
+        assert_eq!(t.current_request(), 1);
+        assert_eq!(t.expected_seq(), 0);
+        // Request 1: single-chunk.
+        assert!(t.accept(&frame_of(1, 2, &chunk(0, true, 1))).unwrap());
+        assert_eq!(t.current_request(), 2);
+    }
+
+    #[test]
+    fn tracker_rejects_desync_and_oversize() {
+        let mut t = RequestTracker::new(2);
+        // Foreign codec tag.
+        assert!(t.accept(&frame_of(0, 1, &chunk(0, true, 1))).is_err());
+        // Interleaved request (hop from the future).
+        assert!(t.accept(&frame_of(1, 2, &chunk(0, true, 1))).is_err());
+        // Wrong chunk ordinal.
+        assert!(t.accept(&frame_of(0, 2, &chunk(7, false, 1))).is_err());
+        // Over the serve payload cap (declared, not allocated here —
+        // the tracker is exactly the pre-allocation gate).
+        let mut big = chunk(0, false, 1);
+        big.payload = vec![0u8; MAX_REQ_PAYLOAD + 1];
+        big.n_symbols = big.payload.len();
+        assert!(t.accept(&frame_of(0, 2, &big)).is_err());
+        // Errors do not advance the tracker.
+        assert_eq!(t.current_request(), 0);
+        assert_eq!(t.expected_seq(), 0);
+        // A well-formed frame still goes through afterwards.
+        assert!(t.accept(&frame_of(0, 2, &chunk(0, true, 1))).unwrap());
+    }
+
+    #[test]
+    fn prop_corrupt_serve_streams_never_panic() {
+        // Fuzz the whole serve read path the way `qlc serve` runs it:
+        // a handshake followed by request frames, under bit flips,
+        // truncations and junk splices.  Every outcome must be
+        // "incomplete", "clean parse" or `Err` — never a panic, never
+        // consuming more bytes than the buffer holds.
+        prop::check(
+            "serve stream fuzz",
+            prop::Config { cases: 96, ..Default::default() },
+            |rng, size| {
+                let tag = rng.below(7) as u8;
+                let header: Vec<u8> = {
+                    let mut h = vec![0u8; rng.below(24) as usize];
+                    rng.fill_bytes(&mut h);
+                    h
+                };
+                let op =
+                    if rng.below(2) == 0 { Op::Compress } else { Op::Decompress };
+                let mut stream = Vec::new();
+                encode_handshake(&hs(op, tag, &header), &mut stream)
+                    .map_err(|e| e.to_string())?;
+                // Two requests, a few chunks each.
+                for hop in 0..2u32 {
+                    let n_chunks = 1 + rng.below(3) as u32;
+                    for seq in 0..n_chunks {
+                        let n = 1 + rng.below(size.max(1) as u64) as usize;
+                        let msg = chunk(seq, seq + 1 == n_chunks, n);
+                        wire::encode_frame(hop, tag, &msg, &mut stream)
+                            .map_err(|e| e.to_string())?;
+                    }
+                }
+                for _ in 0..12 {
+                    let mut corrupt = stream.clone();
+                    match rng.below(3) {
+                        0 => {
+                            let i = rng.below(corrupt.len() as u64) as usize;
+                            corrupt[i] ^= 1 << rng.below(8);
+                        }
+                        1 => {
+                            let keep = rng.below(corrupt.len() as u64) as usize;
+                            corrupt.truncate(keep);
+                        }
+                        _ => {
+                            let i = rng.below(corrupt.len() as u64) as usize;
+                            let mut junk = vec![0u8; 6.min(corrupt.len() - i)];
+                            rng.fill_bytes(&mut junk);
+                            corrupt[i..i + junk.len()].copy_from_slice(&junk);
+                        }
+                    }
+                    drive_serve_parse(&corrupt)?;
+                }
+                // The uncorrupted stream must parse to completion.
+                let (consumed, requests) = drive_serve_parse(&stream)?;
+                if consumed != stream.len() || requests != 2 {
+                    return Err(format!(
+                        "clean stream: consumed {consumed}/{} bytes, \
+                         {requests} requests",
+                        stream.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The server's framing loop in miniature: handshake, then frames
+    /// through a [`RequestTracker`].  Returns (bytes consumed,
+    /// requests completed); `Err` strings describe contract
+    /// violations (never panics).
+    fn drive_serve_parse(buf: &[u8]) -> Result<(usize, u32), String> {
+        let mut pos = 0usize;
+        let (hs, used) = match decode_handshake(buf) {
+            Ok(Some(v)) => v,
+            Ok(None) => return Ok((0, 0)),
+            Err(_) => return Ok((0, 0)), // rejected: connection torn down
+        };
+        pos += used;
+        let mut tracker = RequestTracker::new(hs.codec_tag);
+        let mut done = 0u32;
+        loop {
+            match wire::decode_frame(&buf[pos..]) {
+                Ok(Some((frame, used))) => {
+                    if pos + used > buf.len() {
+                        return Err(format!(
+                            "frame consumed {used} bytes at {pos} of {}",
+                            buf.len()
+                        ));
+                    }
+                    pos += used;
+                    match tracker.accept(&frame) {
+                        Ok(true) => done += 1,
+                        Ok(false) => {}
+                        Err(_) => break, // torn down
+                    }
+                }
+                Ok(None) | Err(_) => break,
+            }
+        }
+        Ok((pos, done))
+    }
+}

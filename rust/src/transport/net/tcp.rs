@@ -9,7 +9,16 @@
 //! [`exchange_hop`](crate::transport::exchange_hop) can never deadlock
 //! on mutual writes — the in-flight window is bounded by the OS socket
 //! buffers exactly the way the threaded backend is bounded by its
-//! channel depth.  A configurable progress timeout turns a stalled or
+//! channel depth.
+//!
+//! When neither direction can progress the pump does **not** sleep-poll:
+//! it parks on the configured [`Reactor`] backend
+//! ([`NetConfig::backend`]) until the kernel reports one of the two
+//! sockets ready.  On Linux that is epoll — zero sleeps, wakeup at
+//! readiness — and elsewhere the capped exponential-backoff fallback;
+//! `tcp_poll_sleeps_total{backend=...}` counts only waits that actually
+//! slept, so the epoll path can be held to its no-sleep contract.
+//! A configurable progress timeout turns a stalled or
 //! silent peer into an `Err`, mirroring the threaded backend's
 //! `recv_timeout` failure mode; an overall per-call deadline cap
 //! ([`NetConfig::hop_timeout`]) additionally fails a *trickling* peer
@@ -28,13 +37,16 @@ use std::time::{Duration, Instant};
 
 use super::wire;
 use crate::obs;
+use crate::transport::reactor::{self, Backend, Interest, Reactor};
 use crate::transport::{ChunkMsg, Link};
 
-/// How long the I/O pump sleeps between polls when neither direction
-/// can make progress.
-const POLL_SLEEP: Duration = Duration::from_micros(100);
 /// Read granularity of the inbound pump.
 const READ_CHUNK: usize = 64 * 1024;
+
+/// Reactor token for the inbound (upstream) stream.
+const TOKEN_RX: u64 = 0;
+/// Reactor token for the outbound (downstream) stream.
+const TOKEN_TX: u64 = 1;
 
 /// Socket link configuration.
 #[derive(Clone, Copy, Debug)]
@@ -58,6 +70,11 @@ pub struct NetConfig {
     /// apriori (tables are never shipped per hop); stamped on outgoing
     /// frames and enforced on inbound ones.
     pub codec_tag: u8,
+    /// Which [`Reactor`] backend parks the pump when neither direction
+    /// can progress.  `Auto` (the default) resolves to epoll on Linux
+    /// — readiness waits with no sleep-polling — and to the capped
+    /// exponential-backoff fallback elsewhere.
+    pub backend: Backend,
 }
 
 impl NetConfig {
@@ -67,7 +84,14 @@ impl NetConfig {
             hop_timeout: Duration::from_secs(300),
             hop_explicit: false,
             codec_tag,
+            backend: Backend::Auto,
         }
+    }
+
+    /// Select the readiness-wait backend (`--reactor` on the CLI).
+    pub fn with_backend(mut self, backend: Backend) -> NetConfig {
+        self.backend = backend;
+        self
     }
 
     /// Set the progress timeout; the overall per-call cap follows at
@@ -92,21 +116,32 @@ impl NetConfig {
 /// Global-registry counters for the socket pump's traffic and
 /// failure/backoff paths (shared by every link in the process — the
 /// keys carry no per-link label, so a world-level merge just sums).
+/// The two wait-path counters are labeled by reactor backend so a
+/// readiness backend can be held to its no-sleep contract even while
+/// fallback links run in the same process.
 struct LinkStats {
     frames_sent: obs::Counter,
     frames_recv: obs::Counter,
+    /// Waits that *slept* (the fallback's backoff naps) rather than
+    /// parking on kernel readiness.  Zero, by construction, on epoll.
     poll_sleeps: obs::Counter,
+    /// Every no-progress park, sleeping or not.
+    reactor_waits: obs::Counter,
     hop_timeouts: obs::Counter,
     stall_timeouts: obs::Counter,
 }
 
 impl LinkStats {
-    fn new() -> LinkStats {
+    fn new(backend: &str) -> LinkStats {
         let reg = obs::global();
+        let labels = &[("backend", backend)];
         LinkStats {
             frames_sent: reg.counter("tcp_frames_sent_total"),
             frames_recv: reg.counter("tcp_frames_recv_total"),
-            poll_sleeps: reg.counter("tcp_poll_sleeps_total"),
+            poll_sleeps: reg
+                .counter(&obs::label("tcp_poll_sleeps_total", labels)),
+            reactor_waits: reg
+                .counter(&obs::label("tcp_reactor_waits_total", labels)),
             hop_timeouts: reg.counter("tcp_hop_timeouts_total"),
             stall_timeouts: reg.counter("tcp_stall_timeouts_total"),
         }
@@ -128,13 +163,38 @@ pub struct TcpLink {
     send_hop: u32,
     recv_hop: u32,
     recv_seq: u32,
+    /// Parks the pump when neither direction can progress.
+    reactor: Box<dyn Reactor>,
+    /// Whether `tx` is currently registered for writable readiness
+    /// (only while bytes are queued — a drained socket is nearly
+    /// always writable and would turn level-triggered waits into a
+    /// busy loop).
+    tx_armed: bool,
+    /// Scratch event buffer reused across waits.
+    events: Vec<reactor::Event>,
     stats: LinkStats,
+}
+
+/// The identity the reactor watches a stream under.
+fn stream_fd(s: &TcpStream) -> reactor::RawFd {
+    #[cfg(unix)]
+    {
+        use std::os::fd::AsRawFd;
+        s.as_raw_fd()
+    }
+    #[cfg(not(unix))]
+    {
+        // The portable fallback only uses fds as map keys; local
+        // port numbers are distinct per stream here.
+        s.local_addr().map(|a| a.port() as i32).unwrap_or(0)
+    }
 }
 
 impl TcpLink {
     /// Wrap a connected stream pair.  Switches both streams to
-    /// non-blocking mode and disables Nagle on the send side (hops are
-    /// latency-sensitive lockstep exchanges).
+    /// non-blocking mode, disables Nagle on the send side (hops are
+    /// latency-sensitive lockstep exchanges) and registers both with
+    /// the configured [`Reactor`] backend.
     pub fn new(
         tx: TcpStream,
         rx: TcpStream,
@@ -146,6 +206,14 @@ impl TcpLink {
             .map_err(|e| format!("tcp link: set_nonblocking(tx): {e}"))?;
         rx.set_nonblocking(true)
             .map_err(|e| format!("tcp link: set_nonblocking(rx): {e}"))?;
+        let mut reactor = reactor::new_reactor(cfg.backend)?;
+        reactor
+            .register(stream_fd(&rx), TOKEN_RX, Interest::READABLE)
+            .map_err(|e| format!("tcp link: register rx: {e}"))?;
+        reactor
+            .register(stream_fd(&tx), TOKEN_TX, Interest::NONE)
+            .map_err(|e| format!("tcp link: register tx: {e}"))?;
+        let stats = LinkStats::new(reactor.name());
         Ok(TcpLink {
             tx,
             rx,
@@ -157,13 +225,45 @@ impl TcpLink {
             send_hop: 0,
             recv_hop: 0,
             recv_seq: 0,
-            stats: LinkStats::new(),
+            reactor,
+            tx_armed: false,
+            events: Vec::new(),
+            stats,
         })
     }
 
     /// Bytes currently queued for the downstream peer.
     pub fn pending_out(&self) -> usize {
         self.out.len() - self.out_pos
+    }
+
+    /// The reactor backend this link parks on (metric label value).
+    pub fn backend_name(&self) -> &'static str {
+        self.reactor.name()
+    }
+
+    /// Park until the kernel reports a watched socket ready (or
+    /// `timeout` passes): writable interest on `tx` is armed only
+    /// while bytes are queued, and `rx` stops being watched at EOF so
+    /// a closed peer cannot spin the wait loop.
+    fn wait_ready(&mut self, timeout: Duration) -> Result<(), String> {
+        let want_tx = self.pending_out() > 0;
+        if want_tx != self.tx_armed {
+            let interest =
+                if want_tx { Interest::WRITABLE } else { Interest::NONE };
+            self.reactor
+                .reregister(stream_fd(&self.tx), TOKEN_TX, interest)
+                .map_err(|e| format!("tcp link: rearm tx: {e}"))?;
+            self.tx_armed = want_tx;
+        }
+        self.stats.reactor_waits.inc();
+        let mut events = std::mem::take(&mut self.events);
+        let slept = self.reactor.wait(&mut events, timeout)?;
+        self.events = events;
+        if slept {
+            self.stats.poll_sleeps.inc();
+        }
+        Ok(())
     }
 
     /// Push queued bytes into the socket; `Ok(true)` if any moved.
@@ -204,6 +304,12 @@ impl TcpLink {
             match self.rx.read(&mut buf) {
                 Ok(0) => {
                     self.rx_eof = true;
+                    // Stop watching a closed peer: level-triggered
+                    // readiness would otherwise report EOF-readable
+                    // forever and spin the wait loop.
+                    self.reactor
+                        .deregister(stream_fd(&self.rx))
+                        .map_err(|e| format!("tcp link: drop rx: {e}"))?;
                     break;
                 }
                 Ok(n) => {
@@ -251,17 +357,25 @@ impl Link for TcpLink {
             let read = self.try_fill()?;
             if wrote || read {
                 deadline = Instant::now() + self.cfg.io_timeout;
-            } else if Instant::now() >= deadline {
-                self.stats.stall_timeouts.inc();
-                return Err(format!(
-                    "tcp send: no progress for {:?} ({} bytes still \
-                     queued; peer stalled?)",
-                    self.cfg.io_timeout,
-                    self.pending_out()
-                ));
+                self.reactor.note_progress();
             } else {
-                self.stats.poll_sleeps.inc();
-                std::thread::sleep(POLL_SLEEP);
+                let now = Instant::now();
+                if now >= deadline {
+                    self.stats.stall_timeouts.inc();
+                    return Err(format!(
+                        "tcp send: no progress for {:?} ({} bytes still \
+                         queued; peer stalled?)",
+                        self.cfg.io_timeout,
+                        self.pending_out()
+                    ));
+                }
+                // saturating: the hard deadline may have passed
+                // during the I/O pass above; a zero wait falls
+                // through to the deadline checks next iteration.
+                let remaining = deadline
+                    .min(hard_deadline)
+                    .saturating_duration_since(now);
+                self.wait_ready(remaining)?;
             }
         }
         self.stats.frames_sent.inc();
@@ -330,15 +444,23 @@ impl Link for TcpLink {
             let wrote = self.try_flush()?;
             if read || wrote {
                 deadline = Instant::now() + self.cfg.io_timeout;
-            } else if Instant::now() >= deadline {
-                self.stats.stall_timeouts.inc();
-                return Err(format!(
-                    "tcp recv: no data for {:?} (peer stalled?)",
-                    self.cfg.io_timeout
-                ));
+                self.reactor.note_progress();
             } else {
-                self.stats.poll_sleeps.inc();
-                std::thread::sleep(POLL_SLEEP);
+                let now = Instant::now();
+                if now >= deadline {
+                    self.stats.stall_timeouts.inc();
+                    return Err(format!(
+                        "tcp recv: no data for {:?} (peer stalled?)",
+                        self.cfg.io_timeout
+                    ));
+                }
+                // saturating: the hard deadline may have passed
+                // during the I/O pass above; a zero wait falls
+                // through to the deadline checks next iteration.
+                let remaining = deadline
+                    .min(hard_deadline)
+                    .saturating_duration_since(now);
+                self.wait_ready(remaining)?;
             }
         }
     }
@@ -549,5 +671,83 @@ mod tests {
         b.send(msg(5, true, vec![9])).unwrap(); // expected seq 0
         let err = a.recv().unwrap_err();
         assert!(err.contains("out-of-order"), "{err}");
+    }
+
+    /// Readiness waits on the epoll backend never sleep: the labeled
+    /// `tcp_poll_sleeps_total{backend="epoll"}` counter must stay at
+    /// zero across a multi-hop loopback exchange — even one large
+    /// enough to back-pressure the socket buffers and force the pump
+    /// to park repeatedly.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_loopback_hop_never_sleep_polls() {
+        use crate::transport::reactor::Backend;
+        let sleeps = crate::obs::global().counter(&crate::obs::label(
+            "tcp_poll_sleeps_total",
+            &[("backend", "epoll")],
+        ));
+        let before = sleeps.get();
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_backend(Backend::Epoll)
+            .with_timeout(Duration::from_secs(20));
+        let (mut a, mut b, _raw) = loopback_pair(cfg);
+        assert_eq!(a.backend_name(), "epoll");
+        // Big enough that sends block on full socket buffers and the
+        // pump must park on readiness between passes.
+        let big: Vec<u8> = (0..2 << 20).map(|i| (i % 253) as u8).collect();
+        let big2 = big.clone();
+        let expect = big.clone();
+        let ta = std::thread::spawn(move || {
+            let (mut enc, mut dec) = (None, None);
+            exchange_hop(&mut a, &mut enc, &mut dec, &big, &[], 128 * 1024)
+                .unwrap()
+                .symbols
+        });
+        let tb = std::thread::spawn(move || {
+            let (mut enc, mut dec) = (None, None);
+            exchange_hop(&mut b, &mut enc, &mut dec, &big2, &[], 128 * 1024)
+                .unwrap()
+                .symbols
+        });
+        assert_eq!(ta.join().unwrap(), expect);
+        assert_eq!(tb.join().unwrap(), expect);
+        // Other tests share the process-global registry, but every
+        // epoll-backed wait reports `slept = false`, so the epoll
+        // label can never move regardless of what runs concurrently.
+        assert_eq!(
+            sleeps.get(),
+            before,
+            "epoll readiness waits must not sleep-poll"
+        );
+    }
+
+    /// The fallback backend *does* sleep — and says so through the
+    /// same labeled counter, which is what makes the epoll zero above
+    /// a real claim and not a dead metric.
+    #[test]
+    fn fallback_backend_accounts_its_sleeps() {
+        use crate::transport::reactor::Backend;
+        let sleeps = crate::obs::global().counter(&crate::obs::label(
+            "tcp_poll_sleeps_total",
+            &[("backend", "fallback")],
+        ));
+        let before = sleeps.get();
+        let cfg = NetConfig::new(TAG_RAW)
+            .with_backend(Backend::Fallback)
+            .with_timeout(Duration::from_secs(10));
+        let (mut a, mut b, _raw) = loopback_pair(cfg);
+        assert_eq!(a.backend_name(), "fallback");
+        let send = std::thread::spawn(move || {
+            // Delay the peer so a.recv() has to park at least once.
+            std::thread::sleep(Duration::from_millis(30));
+            b.send(msg(0, true, vec![5u8; 64])).unwrap();
+            b
+        });
+        assert_eq!(a.recv().unwrap().payload, vec![5u8; 64]);
+        let _b = send.join().unwrap();
+        assert!(
+            sleeps.get() > before,
+            "fallback waits must be visible as poll sleeps"
+        );
     }
 }

@@ -1,0 +1,654 @@
+//! Readiness-based event loop backends behind the [`Reactor`] trait.
+//!
+//! The sleep-poll pump the TCP link shipped with (fixed
+//! `thread::sleep` between `WouldBlock` passes) burns a syscall and a
+//! scheduler round-trip per idle pass and puts a hard floor under hop
+//! latency.  A reactor replaces that with *readiness waits*: callers
+//! register the file descriptors they are blocked on and `wait` parks
+//! the thread until the kernel reports one of them readable/writable
+//! (or a timeout passes).
+//!
+//! Two backends:
+//!
+//! * [`EpollReactor`] — Linux `epoll` via raw syscalls.  The crate is
+//!   dependency-free by policy, so the four syscalls are declared as
+//!   `extern "C"` bindings against the libc that `std` already links;
+//!   no crate is added.  Level-triggered, so a spurious or stale
+//!   readiness report at worst costs one `WouldBlock` pass — exactly
+//!   the idiom every caller already implements.
+//! * [`BackoffReactor`] — the portable fallback: it cannot ask the
+//!   kernel about readiness, so `wait` sleeps with capped exponential
+//!   backoff and then reports **every** registered descriptor as ready
+//!   per its interest.  That over-approximation is safe for the same
+//!   reason spurious epoll wakeups are: callers retry and absorb
+//!   `WouldBlock`.  [`Reactor::note_progress`] resets the backoff so a
+//!   fresh stall starts at the short end of the curve.
+//!
+//! The contract every backend upholds (documented for implementors and
+//! relied on by `TcpLink` and `qlc serve`):
+//!
+//! 1. `wait` may return spuriously (extra events, or none); callers
+//!    must re-attempt their non-blocking I/O and treat `WouldBlock`
+//!    as "wait again".
+//! 2. Writable interest should be registered only while output is
+//!    actually queued — a mostly-writable socket would otherwise turn
+//!    level-triggered `wait` into a busy loop.
+//! 3. `wait` returns `true` iff it *slept* instead of parking on
+//!    kernel readiness — the signal the link layer uses to keep the
+//!    `tcp_poll_sleeps_total` accounting honest per backend.
+//! 4. Error/hangup conditions are reported as readable+writable so the
+//!    caller's next `read`/`write` surfaces the real `io::Error`.
+
+use std::time::Duration;
+
+#[cfg(unix)]
+pub use std::os::fd::RawFd;
+#[cfg(not(unix))]
+pub type RawFd = i32;
+
+/// Which readiness kinds a registration asks for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READABLE: Interest =
+        Interest { readable: true, writable: false };
+    pub const WRITABLE: Interest =
+        Interest { readable: false, writable: true };
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+    pub const NONE: Interest = Interest { readable: false, writable: false };
+}
+
+/// One readiness report from [`Reactor::wait`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// The token the descriptor was registered under.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// A readiness-wait backend.  See the module docs for the contract.
+/// `Send` is a supertrait so reactor-driven endpoints (links, the
+/// serve loop, clients) can move onto worker threads.
+pub trait Reactor: Send {
+    /// Start watching `fd` under `token`.
+    fn register(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        interest: Interest,
+    ) -> Result<(), String>;
+
+    /// Change the interest set of an already-registered `fd`.
+    fn reregister(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        interest: Interest,
+    ) -> Result<(), String>;
+
+    /// Stop watching `fd`.
+    fn deregister(&mut self, fd: RawFd) -> Result<(), String>;
+
+    /// Park until something registered is ready or `timeout` passes.
+    /// Appends the ready set to `events` (cleared first).  Returns
+    /// `true` iff the backend *slept* rather than parking on kernel
+    /// readiness (the fallback path).
+    fn wait(
+        &mut self,
+        events: &mut Vec<Event>,
+        timeout: Duration,
+    ) -> Result<bool, String>;
+
+    /// Hint that the caller made forward progress since the last
+    /// `wait` — resets the fallback's backoff curve.  No-op on
+    /// kernel-readiness backends.
+    fn note_progress(&mut self) {}
+
+    /// Backend name for metric labels and diagnostics.
+    fn name(&self) -> &'static str;
+}
+
+/// Reactor backend selector (the CLI's `--reactor` vocabulary).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Epoll where the platform supports it, fallback otherwise.
+    #[default]
+    Auto,
+    Epoll,
+    Fallback,
+}
+
+impl Backend {
+    pub fn parse(name: &str) -> Result<Backend, String> {
+        match name {
+            "auto" => Ok(Backend::Auto),
+            "epoll" => Ok(Backend::Epoll),
+            "fallback" => Ok(Backend::Fallback),
+            other => Err(format!(
+                "unknown reactor backend '{other}' (expected \
+                 auto|epoll|fallback)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Epoll => "epoll",
+            Backend::Fallback => "fallback",
+        }
+    }
+}
+
+/// Whether the epoll backend can be constructed on this platform.
+pub fn epoll_available() -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        EpollReactor::new().is_ok()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        false
+    }
+}
+
+/// Build a reactor for `backend`.  `Auto` resolves to epoll on Linux
+/// and the backoff fallback elsewhere (or if epoll setup fails, e.g.
+/// under an fd-exhausted or seccomp-restricted process).
+pub fn new_reactor(backend: Backend) -> Result<Box<dyn Reactor>, String> {
+    match backend {
+        Backend::Fallback => Ok(Box::new(BackoffReactor::new())),
+        Backend::Epoll => {
+            #[cfg(target_os = "linux")]
+            {
+                Ok(Box::new(EpollReactor::new()?))
+            }
+            #[cfg(not(target_os = "linux"))]
+            {
+                Err("the epoll reactor backend is Linux-only".to_string())
+            }
+        }
+        Backend::Auto => {
+            #[cfg(target_os = "linux")]
+            {
+                match EpollReactor::new() {
+                    Ok(r) => Ok(Box::new(r)),
+                    Err(_) => Ok(Box::new(BackoffReactor::new())),
+                }
+            }
+            #[cfg(not(target_os = "linux"))]
+            {
+                Ok(Box::new(BackoffReactor::new()))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Epoll backend (Linux)
+
+#[cfg(target_os = "linux")]
+pub use epoll::EpollReactor;
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{Event, Interest, RawFd, Reactor};
+    use std::io::ErrorKind;
+    use std::time::Duration;
+
+    // The crate links no external crates, but std already links libc;
+    // declaring the four epoll entry points directly keeps the
+    // zero-dependency policy intact.
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(
+            epfd: i32,
+            op: i32,
+            fd: i32,
+            event: *mut EpollEvent,
+        ) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    /// `struct epoll_event` ABI: packed on x86-64 (the kernel chose a
+    /// packed layout there for 32/64-bit compat), natural alignment on
+    /// every other architecture.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    /// Readiness waits via Linux `epoll`, level-triggered.
+    pub struct EpollReactor {
+        epfd: i32,
+        /// Scratch buffer reused across `wait` calls.
+        buf: Vec<EpollEvent>,
+    }
+
+    fn interest_mask(interest: Interest) -> u32 {
+        let mut mask = EPOLLRDHUP;
+        if interest.readable {
+            mask |= EPOLLIN;
+        }
+        if interest.writable {
+            mask |= EPOLLOUT;
+        }
+        mask
+    }
+
+    fn os_err(call: &str) -> String {
+        format!("{call}: {}", std::io::Error::last_os_error())
+    }
+
+    impl EpollReactor {
+        pub fn new() -> Result<EpollReactor, String> {
+            // SAFETY: epoll_create1 takes a flags integer and returns
+            // a new fd or -1; no pointers are involved.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(os_err("epoll_create1"));
+            }
+            Ok(EpollReactor {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 64],
+            })
+        }
+
+        fn ctl(
+            &mut self,
+            op: i32,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> Result<(), String> {
+            let mut ev =
+                EpollEvent { events: interest_mask(interest), data: token };
+            // SAFETY: `ev` is a live, properly initialized
+            // repr(C)-compatible epoll_event for the duration of the
+            // call; the kernel copies it before returning.  DEL
+            // ignores the pointer but a non-null one is valid on every
+            // kernel (pre-2.6.9 required it).
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(os_err("epoll_ctl"));
+            }
+            Ok(())
+        }
+    }
+
+    impl Reactor for EpollReactor {
+        fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> Result<(), String> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        fn reregister(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> Result<(), String> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        fn deregister(&mut self, fd: RawFd) -> Result<(), String> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest::NONE)
+        }
+
+        fn wait(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Duration,
+        ) -> Result<bool, String> {
+            events.clear();
+            // Millisecond resolution; a sub-millisecond remainder must
+            // not round down to "poll and spin", so round it up.
+            let ms = timeout.as_millis();
+            let ms = if ms > i32::MAX as u128 {
+                i32::MAX
+            } else if ms == 0 && !timeout.is_zero() {
+                1
+            } else {
+                ms as i32 // lint: cast-checked(clamped to i32::MAX above)
+            };
+            let cap = self.buf.len() as i32; // lint: cast-checked(fixed 64-slot scratch)
+            // SAFETY: `buf` is a live, writable slice of `cap`
+            // epoll_event slots for the duration of the call; the
+            // kernel writes at most `cap` entries.
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), cap, ms)
+            };
+            if n < 0 {
+                let err = std::io::Error::last_os_error();
+                if err.kind() == ErrorKind::Interrupted {
+                    // EINTR: report an empty ready set; callers loop.
+                    return Ok(false);
+                }
+                return Err(format!("epoll_wait: {err}"));
+            }
+            for slot in self.buf.iter().take(n as usize) {
+                // Copy out of the (possibly packed) struct before use.
+                let mask = slot.events;
+                let token = slot.data;
+                let fatal = mask & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0;
+                events.push(Event {
+                    token,
+                    // Errors/hangups surface as ready-on-everything so
+                    // the caller's next I/O call reads the real error.
+                    readable: mask & EPOLLIN != 0 || fatal,
+                    writable: mask & EPOLLOUT != 0 || fatal,
+                });
+            }
+            Ok(false)
+        }
+
+        fn name(&self) -> &'static str {
+            "epoll"
+        }
+    }
+
+    impl Drop for EpollReactor {
+        fn drop(&mut self) {
+            // SAFETY: `epfd` is a valid fd owned exclusively by this
+            // reactor; closing it once on drop cannot double-close.
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable fallback
+
+/// Shortest fallback sleep — one scheduler quantum's worth of poll.
+const BACKOFF_MIN: Duration = Duration::from_micros(50);
+/// Backoff cap: bounds worst-case added latency once a stream goes
+/// idle, while keeping the idle duty cycle ~zero.
+const BACKOFF_MAX: Duration = Duration::from_millis(5);
+
+/// The portable readiness "wait": capped exponential backoff sleeps
+/// that report every registered descriptor as ready per its interest.
+/// Safe because callers absorb spurious readiness as `WouldBlock`.
+pub struct BackoffReactor {
+    registered: Vec<(RawFd, u64, Interest)>,
+    backoff: Duration,
+}
+
+impl BackoffReactor {
+    pub fn new() -> BackoffReactor {
+        BackoffReactor { registered: Vec::new(), backoff: BACKOFF_MIN }
+    }
+
+    /// The next sleep this reactor would take (test introspection).
+    pub fn current_backoff(&self) -> Duration {
+        self.backoff
+    }
+}
+
+impl Default for BackoffReactor {
+    fn default() -> BackoffReactor {
+        BackoffReactor::new()
+    }
+}
+
+impl Reactor for BackoffReactor {
+    fn register(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        interest: Interest,
+    ) -> Result<(), String> {
+        if self.registered.iter().any(|&(f, _, _)| f == fd) {
+            return Err(format!("fd {fd} is already registered"));
+        }
+        self.registered.push((fd, token, interest));
+        Ok(())
+    }
+
+    fn reregister(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        interest: Interest,
+    ) -> Result<(), String> {
+        for slot in self.registered.iter_mut() {
+            if slot.0 == fd {
+                *slot = (fd, token, interest);
+                return Ok(());
+            }
+        }
+        Err(format!("fd {fd} is not registered"))
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> Result<(), String> {
+        let before = self.registered.len();
+        self.registered.retain(|&(f, _, _)| f != fd);
+        if self.registered.len() == before {
+            return Err(format!("fd {fd} is not registered"));
+        }
+        Ok(())
+    }
+
+    fn wait(
+        &mut self,
+        events: &mut Vec<Event>,
+        timeout: Duration,
+    ) -> Result<bool, String> {
+        events.clear();
+        let nap = self.backoff.min(timeout);
+        if !nap.is_zero() {
+            std::thread::sleep(nap);
+        }
+        self.backoff = (self.backoff * 2).min(BACKOFF_MAX);
+        for &(_, token, interest) in &self.registered {
+            if interest.readable || interest.writable {
+                events.push(Event {
+                    token,
+                    readable: interest.readable,
+                    writable: interest.writable,
+                });
+            }
+        }
+        Ok(true)
+    }
+
+    fn note_progress(&mut self) {
+        self.backoff = BACKOFF_MIN;
+    }
+
+    fn name(&self) -> &'static str {
+        "fallback"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn backend_names_parse_and_roundtrip() {
+        for b in [Backend::Auto, Backend::Epoll, Backend::Fallback] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert!(Backend::parse("kqueue").is_err());
+        assert_eq!(Backend::default(), Backend::Auto);
+    }
+
+    #[test]
+    fn auto_reactor_always_constructs() {
+        let r = new_reactor(Backend::Auto).unwrap();
+        if cfg!(target_os = "linux") {
+            assert_eq!(r.name(), "epoll");
+        } else {
+            assert_eq!(r.name(), "fallback");
+        }
+    }
+
+    #[test]
+    fn fallback_reports_registered_interest_and_backs_off() {
+        let mut r = BackoffReactor::new();
+        r.register(7, 42, Interest::READABLE).unwrap();
+        r.register(8, 43, Interest::NONE).unwrap();
+        let mut events = Vec::new();
+        let slept = r.wait(&mut events, Duration::from_micros(200)).unwrap();
+        assert!(slept);
+        // Interest::NONE registrations are silent; the rest are
+        // reported exactly per their interest.
+        assert_eq!(
+            events,
+            vec![Event { token: 42, readable: true, writable: false }]
+        );
+        // Exponential growth, capped, reset on progress.
+        let b0 = r.current_backoff();
+        r.wait(&mut events, Duration::ZERO).unwrap();
+        assert!(r.current_backoff() > b0);
+        for _ in 0..16 {
+            r.wait(&mut events, Duration::ZERO).unwrap();
+        }
+        assert_eq!(r.current_backoff(), BACKOFF_MAX);
+        r.note_progress();
+        assert_eq!(r.current_backoff(), BACKOFF_MIN);
+    }
+
+    #[test]
+    fn fallback_registration_bookkeeping() {
+        let mut r = BackoffReactor::new();
+        r.register(3, 1, Interest::BOTH).unwrap();
+        assert!(r.register(3, 2, Interest::BOTH).is_err());
+        r.reregister(3, 2, Interest::WRITABLE).unwrap();
+        let mut events = Vec::new();
+        r.wait(&mut events, Duration::ZERO).unwrap();
+        assert_eq!(
+            events,
+            vec![Event { token: 2, readable: false, writable: true }]
+        );
+        r.deregister(3).unwrap();
+        assert!(r.deregister(3).is_err());
+        assert!(r.reregister(3, 1, Interest::BOTH).is_err());
+        r.wait(&mut events, Duration::ZERO).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[cfg(target_os = "linux")]
+    mod linux {
+        use super::*;
+        use std::io::{Read, Write};
+        use std::net::{TcpListener, TcpStream};
+        use std::os::fd::AsRawFd;
+
+        fn pair() -> (TcpStream, TcpStream) {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let a = TcpStream::connect(addr).unwrap();
+            let (b, _) = listener.accept().unwrap();
+            (a, b)
+        }
+
+        #[test]
+        fn epoll_is_available_here() {
+            assert!(epoll_available());
+            assert!(new_reactor(Backend::Epoll).is_ok());
+        }
+
+        #[test]
+        fn epoll_reports_readable_when_bytes_arrive() {
+            let (mut a, b) = pair();
+            b.set_nonblocking(true).unwrap();
+            let mut r = EpollReactor::new().unwrap();
+            r.register(b.as_raw_fd(), 9, Interest::READABLE).unwrap();
+            let mut events = Vec::new();
+            // Nothing to read yet: the wait times out empty (and it
+            // parked on readiness, not a sleep).
+            let slept =
+                r.wait(&mut events, Duration::from_millis(10)).unwrap();
+            assert!(!slept);
+            assert!(events.is_empty());
+            a.write_all(b"ping").unwrap();
+            let t0 = Instant::now();
+            r.wait(&mut events, Duration::from_secs(5)).unwrap();
+            // Readiness, not timeout: the wakeup must be immediate.
+            assert!(t0.elapsed() < Duration::from_secs(1));
+            assert_eq!(events.len(), 1);
+            assert_eq!(events[0].token, 9);
+            assert!(events[0].readable);
+            let mut buf = [0u8; 8];
+            let mut b2 = &b;
+            assert_eq!(b2.read(&mut buf).unwrap(), 4);
+        }
+
+        #[test]
+        fn epoll_writable_interest_and_reregister() {
+            let (a, _b) = pair();
+            a.set_nonblocking(true).unwrap();
+            let mut r = EpollReactor::new().unwrap();
+            // An idle socket with an empty send buffer is writable.
+            r.register(a.as_raw_fd(), 1, Interest::WRITABLE).unwrap();
+            let mut events = Vec::new();
+            r.wait(&mut events, Duration::from_secs(5)).unwrap();
+            assert!(events.iter().any(|e| e.token == 1 && e.writable));
+            // Dropping write interest silences it again.
+            r.reregister(a.as_raw_fd(), 1, Interest::READABLE).unwrap();
+            let slept =
+                r.wait(&mut events, Duration::from_millis(10)).unwrap();
+            assert!(!slept);
+            assert!(events.is_empty());
+            r.deregister(a.as_raw_fd()).unwrap();
+            assert!(r.deregister(a.as_raw_fd()).is_err());
+        }
+
+        #[test]
+        fn epoll_reports_hangup_as_ready_everything() {
+            let (a, b) = pair();
+            b.set_nonblocking(true).unwrap();
+            let mut r = EpollReactor::new().unwrap();
+            r.register(b.as_raw_fd(), 5, Interest::READABLE).unwrap();
+            drop(a);
+            let mut events = Vec::new();
+            r.wait(&mut events, Duration::from_secs(5)).unwrap();
+            assert_eq!(events.len(), 1);
+            assert!(events[0].readable && events[0].writable);
+        }
+
+        #[test]
+        fn epoll_sub_millisecond_timeout_rounds_up_not_to_spin() {
+            let mut r = EpollReactor::new().unwrap();
+            let mut events = Vec::new();
+            // No registrations: a 100 µs wait must still block ~1 ms,
+            // not degrade into timeout=0 spinning.
+            let t0 = Instant::now();
+            r.wait(&mut events, Duration::from_micros(100)).unwrap();
+            assert!(t0.elapsed() >= Duration::from_micros(100));
+            assert!(events.is_empty());
+        }
+    }
+}

@@ -24,7 +24,7 @@ fn help_lists_subcommands() {
     let text = String::from_utf8_lossy(&out.stdout);
     for cmd in
         ["tables", "compress", "collective", "hw", "serve", "analyze",
-         "entropy"]
+         "entropy", "pipeline", "call", "loadgen"]
     {
         assert!(text.contains(cmd), "{cmd} missing from help");
     }
@@ -556,11 +556,11 @@ fn collective_writes_trace_and_metrics() {
 }
 
 #[test]
-fn serve_runs_pipeline() {
+fn pipeline_demo_runs() {
     let out = qlc()
         .args([
-            "serve", "--codec", "qlc", "--workers", "2", "--n", "1048576",
-            "--chunk", "65536",
+            "pipeline", "--codec", "qlc", "--workers", "2", "--n",
+            "1048576", "--chunk", "65536",
         ])
         .output()
         .unwrap();
