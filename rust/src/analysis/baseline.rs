@@ -50,6 +50,23 @@ pub fn split<'a>(
     (fresh, known)
 }
 
+/// Baseline entries that match no current finding — the fix landed
+/// (or the code moved) but the grandfather line was never pruned.
+/// Reported as a warning by default and an error under
+/// `--deny-stale`, so the baseline only ever shrinks.
+pub fn stale(
+    findings: &[Finding],
+    baseline: &BTreeSet<String>,
+) -> Vec<String> {
+    let rendered: BTreeSet<String> =
+        findings.iter().map(Finding::render).collect();
+    baseline
+        .iter()
+        .filter(|entry| !rendered.contains(*entry))
+        .cloned()
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +104,20 @@ mod tests {
         assert_eq!(known.len(), 1);
         assert_eq!(fresh[0].line, 9);
         assert_eq!(known[0].line, 3);
+    }
+
+    #[test]
+    fn stale_reports_entries_with_no_matching_finding() {
+        let fs = vec![finding("src/a.rs", 3)];
+        let baseline = parse(&format!(
+            "{}\nsrc/gone.rs:7: panic-free: fixed long ago\n",
+            fs[0].render()
+        ));
+        let dead = stale(&fs, &baseline);
+        assert_eq!(
+            dead,
+            vec!["src/gone.rs:7: panic-free: fixed long ago".to_string()]
+        );
+        assert!(stale(&fs, &parse(&fs[0].render())).is_empty());
     }
 }

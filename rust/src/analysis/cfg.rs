@@ -1,0 +1,1234 @@
+//! Function-level control-flow recovery for `qlc analyze` v2.
+//!
+//! Built directly on the [`super::lexer`] masked view: [`tokenize`]
+//! turns masked source into a flat token stream (comments, strings,
+//! and test regions are already spaces, so every token is real code),
+//! and [`parse_functions`] recovers `fn` items — name, parameter
+//! names, and a statement tree with `let` bindings, assignments,
+//! branches, loops, and `match` arms — without pulling in `syn`.
+//!
+//! The recovery is deliberately approximate: it only needs to be
+//! good enough for the intra-procedural taint pass in
+//! [`super::taint`].  Whatever it cannot classify becomes an opaque
+//! [`Stmt::Expr`], which the taint pass still scans for sinks, so
+//! parse imprecision degrades to the old line-level behaviour rather
+//! than to silence.  On malformed input the parser must never panic
+//! (a proptest holds it to that) — it simply returns fewer or
+//! stranger statements.
+
+/// Token kind, as coarse as the rules need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `let`, `payload_len`, `u32`, ...).
+    Ident,
+    /// Numeric literal (`0`, `0xFF`, `1_024`, `4u32`).
+    Num,
+    /// Lifetime or loop label (`'a`, `'pump`).
+    Lifetime,
+    /// Punctuation, multi-char operators kept whole (`=>`, `::`, `?`).
+    Punct,
+}
+
+/// One token of masked source, carrying its 1-indexed line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    pub line: usize,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+}
+
+/// Multi-char punctuation, longest first so the scan is greedy.
+const PUNCT3: [&str; 3] = ["<<=", ">>=", "..="];
+const PUNCT2: [&str; 19] = [
+    "==", "!=", "<=", ">=", "->", "=>", "::", "+=", "-=", "*=", "/=",
+    "%=", "&&", "||", "<<", ">>", "..", "&=", "|=",
+];
+
+/// Tokenize masked code.  Never fails: unknown bytes become 1-char
+/// punctuation tokens.
+pub fn tokenize(code: &str) -> Vec<Tok> {
+    let chars: Vec<char> = code.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '_' || c.is_ascii_alphabetic() {
+            let s = i;
+            while i < n && (chars[i] == '_' || chars[i].is_ascii_alphanumeric())
+            {
+                i += 1;
+            }
+            let text: String = chars[s..i].iter().collect();
+            toks.push(Tok { line, kind: TokKind::Ident, text });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let s = i;
+            while i < n {
+                let d = chars[i];
+                // Stop before `..` so ranges stay punctuation.
+                if d == '.' && chars.get(i + 1) == Some(&'.') {
+                    break;
+                }
+                if d == '_' || d == '.' || d.is_ascii_alphanumeric() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = chars[s..i].iter().collect();
+            toks.push(Tok { line, kind: TokKind::Num, text });
+            continue;
+        }
+        if c == '\'' {
+            // The lexer already masked char literals; what remains is
+            // a lifetime or loop label.
+            let s = i;
+            i += 1;
+            while i < n && (chars[i] == '_' || chars[i].is_ascii_alphanumeric())
+            {
+                i += 1;
+            }
+            let text: String = chars[s..i].iter().collect();
+            toks.push(Tok { line, kind: TokKind::Lifetime, text });
+            continue;
+        }
+        let rest: String = chars[i..n.min(i + 3)].iter().collect();
+        let mut len = 1usize;
+        if PUNCT3.iter().any(|p| rest.starts_with(p)) {
+            len = 3;
+        } else if PUNCT2.iter().any(|p| rest.starts_with(p)) {
+            len = 2;
+        }
+        let text: String = chars[i..i + len].iter().collect();
+        toks.push(Tok { line, kind: TokKind::Punct, text });
+        i += len;
+    }
+    toks
+}
+
+/// One recovered statement.  Expression token lists (`rhs`, `cond`,
+/// ...) are flat — nested calls and blocks inside them are kept as
+/// raw tokens for the taint pass to scan.
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    /// `let <pat>(: ty)? = <rhs> (else { .. })? ;`
+    Let {
+        names: Vec<String>,
+        rhs: Vec<Tok>,
+        else_block: Option<Block>,
+        line: usize,
+    },
+    /// `<lhs> =|+=|*=|... <rhs> ;`
+    Assign {
+        lhs: Vec<Tok>,
+        op: String,
+        rhs: Vec<Tok>,
+        line: usize,
+    },
+    If {
+        cond: Vec<Tok>,
+        then_block: Block,
+        else_block: Option<Block>,
+        line: usize,
+    },
+    While {
+        cond: Vec<Tok>,
+        body: Block,
+        line: usize,
+    },
+    For {
+        names: Vec<String>,
+        iter: Vec<Tok>,
+        body: Block,
+        line: usize,
+    },
+    Loop {
+        body: Block,
+        line: usize,
+    },
+    /// `match <scrutinee> { arms }` — each arm is (pattern binders,
+    /// arm body as a block).
+    Match {
+        scrutinee: Vec<Tok>,
+        arms: Vec<(Vec<String>, Block)>,
+        line: usize,
+    },
+    Return {
+        value: Vec<Tok>,
+        line: usize,
+    },
+    Break {
+        line: usize,
+    },
+    Continue {
+        line: usize,
+    },
+    /// Plain or `unsafe` block used as a statement.
+    BlockStmt {
+        body: Block,
+        line: usize,
+    },
+    /// Anything else: opaque expression statement.
+    Expr {
+        toks: Vec<Tok>,
+        line: usize,
+    },
+}
+
+/// A `{ ... }` statement list.
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    pub stmts: Vec<Stmt>,
+}
+
+/// One recovered `fn` item (free function, method, or nested fn).
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub name: String,
+    /// Parameter names (`self` included verbatim).
+    pub params: Vec<String>,
+    pub body: Block,
+    /// 1-indexed line of the `fn` keyword.
+    pub line: usize,
+}
+
+pub(crate) fn text_at<'a>(toks: &'a [Tok], i: usize) -> &'a str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+pub(crate) fn is_open(t: &str) -> bool {
+    t == "(" || t == "[" || t == "{"
+}
+
+pub(crate) fn is_close(t: &str) -> bool {
+    t == ")" || t == "]" || t == "}"
+}
+
+/// Index one past the delimiter group opening at `i` (any of `([{`,
+/// matched loosely against any closer — good enough on real code,
+/// never panics on bad code).
+pub(crate) fn skip_group(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0isize;
+    let mut k = i;
+    while k < toks.len() {
+        let t = text_at(toks, k);
+        if is_open(t) {
+            depth += 1;
+        } else if is_close(t) {
+            depth -= 1;
+            if depth <= 0 {
+                return k + 1;
+            }
+        }
+        k += 1;
+    }
+    toks.len()
+}
+
+pub(crate) const KEYWORDS: [&str; 22] = [
+    "mut", "ref", "move", "let", "if", "else", "match", "while", "for",
+    "loop", "in", "fn", "return", "break", "continue", "as", "box",
+    "dyn", "impl", "where", "pub", "unsafe",
+];
+
+/// Lowercase identifiers in a pattern that plausibly bind values
+/// (skips keywords, `_`, and capitalized constructor names).
+pub(crate) fn pattern_names(toks: &[Tok]) -> Vec<String> {
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text == "_" {
+            continue;
+        }
+        let first = t.text.chars().next().unwrap_or('_');
+        if !(first.is_ascii_lowercase() || first == '_') {
+            continue;
+        }
+        if KEYWORDS.contains(&t.text.as_str()) {
+            continue;
+        }
+        // Skip path segments (`mod::name`) and struct field keys
+        // followed by `:` then a different binder.
+        if text_at(toks, k + 1) == "::" || text_at(toks, k.wrapping_sub(1)) == "::"
+        {
+            continue;
+        }
+        if !out.contains(&t.text) {
+            out.push(t.text.clone());
+        }
+    }
+    out
+}
+
+/// Parse a parameter list starting at `toks[i] == "("`; returns the
+/// parameter names and the index one past the closing paren.
+fn parse_params(toks: &[Tok], i: usize) -> (Vec<String>, usize) {
+    let end = skip_group(toks, i);
+    let inner_end = end.saturating_sub(1);
+    let inner = if i + 1 <= inner_end { &toks[i + 1..inner_end] } else { &[] };
+    let mut params = Vec::new();
+    let mut piece: Vec<Tok> = Vec::new();
+    let mut depth = 0isize;
+    let mut flush = |piece: &mut Vec<Tok>, params: &mut Vec<String>| {
+        if piece.iter().any(|t| t.is("self")) {
+            params.push("self".to_string());
+        } else {
+            // Names are the pattern before the depth-0 `:`.
+            let mut d = 0isize;
+            let mut cut = piece.len();
+            for (k, t) in piece.iter().enumerate() {
+                if is_open(&t.text) {
+                    d += 1;
+                } else if is_close(&t.text) {
+                    d -= 1;
+                } else if t.is(":") && d == 0 {
+                    cut = k;
+                    break;
+                }
+            }
+            for name in pattern_names(&piece[..cut]) {
+                params.push(name);
+            }
+        }
+        piece.clear();
+    };
+    for t in inner {
+        if is_open(&t.text) {
+            depth += 1;
+        } else if is_close(&t.text) {
+            depth -= 1;
+        }
+        if t.is(",") && depth == 0 {
+            flush(&mut piece, &mut params);
+        } else {
+            piece.push(t.clone());
+        }
+    }
+    if !piece.is_empty() {
+        flush(&mut piece, &mut params);
+    }
+    (params, end)
+}
+
+/// Skip a generic parameter list starting at `toks[i] == "<"`,
+/// tolerating `Fn(..) -> T` bounds and shift-shaped closers.
+fn skip_generics(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0isize;
+    let mut k = i;
+    let mut steps = 0usize;
+    while k < toks.len() && steps < 4096 {
+        steps += 1;
+        match text_at(toks, k) {
+            "<" => depth += 1,
+            "<<" => depth += 2,
+            ">" => depth -= 1,
+            ">>" => depth -= 2,
+            "(" | "[" => {
+                k = skip_group(toks, k);
+                continue;
+            }
+            "{" | ";" => return k, // malformed; bail before the body
+            _ => {}
+        }
+        k += 1;
+        if depth <= 0 {
+            return k;
+        }
+    }
+    k
+}
+
+/// All `fn` items in masked code, including nested and `impl` fns.
+pub fn parse_functions(code: &str) -> Vec<Function> {
+    let toks = tokenize(code);
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if !(t.kind == TokKind::Ident && t.is("fn")) {
+            i += 1;
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let line = t.line;
+        let name = name_tok.text.clone();
+        let mut j = i + 2;
+        if text_at(&toks, j) == "<" {
+            j = skip_generics(&toks, j);
+        }
+        if text_at(&toks, j) != "(" {
+            i += 1;
+            continue;
+        }
+        let (params, after_params) = parse_params(&toks, j);
+        // Scan past the return type / where clause to the body.
+        let mut k = after_params;
+        let mut depth = 0isize;
+        let mut body_at: Option<usize> = None;
+        while k < toks.len() {
+            let txt = text_at(&toks, k);
+            if depth == 0 && txt == ";" {
+                break; // trait method / extern decl: no body
+            }
+            if depth == 0 && txt == "{" {
+                body_at = Some(k);
+                break;
+            }
+            if txt == "(" || txt == "[" {
+                depth += 1;
+            } else if txt == ")" || txt == "]" {
+                depth -= 1;
+            }
+            k += 1;
+        }
+        if let Some(b) = body_at {
+            let mut bi = b;
+            let body = parse_block(&toks, &mut bi);
+            fns.push(Function { name, params, body, line });
+            // Continue scanning *inside* the body so nested fns are
+            // found too (parse_stmt skips them as statements).
+            i = b + 1;
+        } else {
+            i = k.max(i + 1);
+        }
+    }
+    fns
+}
+
+/// Parse a `{ ... }` block with the cursor on the opening brace.
+fn parse_block(toks: &[Tok], i: &mut usize) -> Block {
+    let mut stmts = Vec::new();
+    if text_at(toks, *i) != "{" {
+        return Block { stmts };
+    }
+    *i += 1;
+    while *i < toks.len() && text_at(toks, *i) != "}" {
+        let before = *i;
+        if let Some(s) = parse_stmt(toks, i) {
+            stmts.push(s);
+        }
+        if *i == before {
+            *i += 1; // always make progress
+        }
+    }
+    if *i < toks.len() {
+        *i += 1; // consume the closing brace
+    }
+    Block { stmts }
+}
+
+/// Parse a flat token slice as a statement list.  Used for
+/// block-expression `let` initializers (`let x = match .. { .. }`),
+/// where the initializer's inner statements carry their own control
+/// flow and must not be scanned as one flat expression.
+pub(crate) fn parse_stmts(toks: &[Tok]) -> Vec<Stmt> {
+    let mut stmts = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let before = i;
+        if let Some(s) = parse_stmt(toks, &mut i) {
+            stmts.push(s);
+        }
+        if i == before {
+            i += 1; // always make progress
+        }
+    }
+    stmts
+}
+
+/// Collect expression tokens until a depth-0 `;` (consumed) or the
+/// enclosing block's `}` (left in place).
+fn collect_expr(toks: &[Tok], i: &mut usize) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut depth = 0isize;
+    while *i < toks.len() {
+        let t = &toks[*i];
+        if depth == 0 && t.is(";") {
+            *i += 1;
+            break;
+        }
+        if t.is("}") && depth == 0 {
+            break;
+        }
+        if is_open(&t.text) {
+            depth += 1;
+        } else if is_close(&t.text) {
+            depth -= 1;
+        }
+        out.push(t.clone());
+        *i += 1;
+    }
+    out
+}
+
+/// Collect tokens until a depth-0 `{` (left in place) — used for
+/// `if`/`while` conditions and `for` iterators, where Rust forbids
+/// bare struct literals.
+fn collect_until_brace(toks: &[Tok], i: &mut usize) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut depth = 0isize;
+    while *i < toks.len() {
+        let t = &toks[*i];
+        if depth == 0 && t.is("{") {
+            break;
+        }
+        if t.is("(") || t.is("[") {
+            depth += 1;
+        } else if t.is(")") || t.is("]") {
+            depth -= 1;
+        } else if t.is("{") {
+            depth += 1; // closure body inside the condition
+        } else if t.is("}") {
+            depth -= 1;
+        }
+        out.push(t.clone());
+        *i += 1;
+    }
+    out
+}
+
+const ASSIGN_OPS: [&str; 10] =
+    ["=", "+=", "-=", "*=", "/=", "%=", "<<=", ">>=", "&=", "|="];
+
+/// Is `toks[..k]` a plain assignable place (path, maybe indexed)?
+fn looks_like_place(toks: &[Tok]) -> bool {
+    !toks.is_empty()
+        && toks.iter().all(|t| {
+            t.kind == TokKind::Ident
+                || t.kind == TokKind::Num
+                || matches!(
+                    t.text.as_str(),
+                    "." | "::" | "[" | "]" | "*" | "(" | ")"
+                )
+        })
+        && !toks
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && KEYWORDS.contains(&t.text.as_str()))
+}
+
+fn parse_stmt(toks: &[Tok], i: &mut usize) -> Option<Stmt> {
+    let t = toks.get(*i)?;
+    let line = t.line;
+    // Statement attributes: `#[cfg(unix)]` etc.
+    if t.is("#") {
+        *i += 1;
+        if text_at(toks, *i) == "[" {
+            *i = skip_group(toks, *i);
+        }
+        return None;
+    }
+    // Loop labels: `'pump: loop { ... }`.
+    if t.kind == TokKind::Lifetime && text_at(toks, *i + 1) == ":" {
+        *i += 2;
+        return None;
+    }
+    if t.kind == TokKind::Ident {
+        match t.text.as_str() {
+            "let" => return parse_let(toks, i),
+            "if" => return Some(parse_if(toks, i)),
+            "while" => {
+                *i += 1;
+                let cond = collect_until_brace(toks, i);
+                let body = parse_block(toks, i);
+                return Some(Stmt::While { cond, body, line });
+            }
+            "for" => {
+                *i += 1;
+                // Pattern until depth-0 `in`.
+                let mut pat = Vec::new();
+                let mut depth = 0isize;
+                while *i < toks.len() {
+                    let p = &toks[*i];
+                    if depth == 0 && p.is("in") && p.kind == TokKind::Ident {
+                        *i += 1;
+                        break;
+                    }
+                    if is_open(&p.text) {
+                        depth += 1;
+                    } else if is_close(&p.text) {
+                        depth -= 1;
+                    }
+                    pat.push(p.clone());
+                    *i += 1;
+                }
+                let iter = collect_until_brace(toks, i);
+                let body = parse_block(toks, i);
+                return Some(Stmt::For {
+                    names: pattern_names(&pat),
+                    iter,
+                    body,
+                    line,
+                });
+            }
+            "loop" => {
+                *i += 1;
+                let body = parse_block(toks, i);
+                return Some(Stmt::Loop { body, line });
+            }
+            "match" => return Some(parse_match(toks, i)),
+            "return" => {
+                *i += 1;
+                let value = collect_expr(toks, i);
+                return Some(Stmt::Return { value, line });
+            }
+            "break" => {
+                *i += 1;
+                let _ = collect_expr(toks, i);
+                return Some(Stmt::Break { line });
+            }
+            "continue" => {
+                *i += 1;
+                let _ = collect_expr(toks, i);
+                return Some(Stmt::Continue { line });
+            }
+            "unsafe" if text_at(toks, *i + 1) == "{" => {
+                *i += 1;
+                let body = parse_block(toks, i);
+                return Some(Stmt::BlockStmt { body, line });
+            }
+            // Nested items inside a fn body: skip them whole (nested
+            // fns are picked up by parse_functions' own scan).
+            "fn" | "impl" | "struct" | "enum" | "trait" | "mod"
+            | "extern" | "union" | "macro_rules" => {
+                skip_item(toks, i);
+                return None;
+            }
+            "use" | "type" | "const" | "static" => {
+                let _ = collect_expr(toks, i);
+                return None;
+            }
+            _ => {}
+        }
+    }
+    if t.is("{") {
+        let body = parse_block(toks, i);
+        return Some(Stmt::BlockStmt { body, line });
+    }
+    // Expression statement; classify simple assignments.
+    let toks_e = collect_expr(toks, i);
+    if toks_e.is_empty() {
+        return None;
+    }
+    let mut depth = 0isize;
+    for (k, tok) in toks_e.iter().enumerate() {
+        if is_open(&tok.text) {
+            depth += 1;
+        } else if is_close(&tok.text) {
+            depth -= 1;
+        } else if depth == 0
+            && k > 0
+            && tok.kind == TokKind::Punct
+            && ASSIGN_OPS.contains(&tok.text.as_str())
+        {
+            let (lhs, rhs) = toks_e.split_at(k);
+            if looks_like_place(lhs) {
+                return Some(Stmt::Assign {
+                    lhs: lhs.to_vec(),
+                    op: tok.text.clone(),
+                    rhs: rhs[1..].to_vec(),
+                    line,
+                });
+            }
+            break;
+        }
+    }
+    Some(Stmt::Expr { toks: toks_e, line })
+}
+
+/// Skip a nested item (`fn`/`impl`/`mod`/...) with the cursor on its
+/// introducing keyword: to the end of its first brace group, or the
+/// first top-level `;` for brace-less forms.
+fn skip_item(toks: &[Tok], i: &mut usize) {
+    let mut depth = 0isize;
+    while *i < toks.len() {
+        let t = text_at(toks, *i);
+        if depth == 0 && t == ";" {
+            *i += 1;
+            return;
+        }
+        if t == "{" {
+            *i = skip_group(toks, *i);
+            return;
+        }
+        if t == "(" || t == "[" {
+            depth += 1;
+        } else if t == ")" || t == "]" {
+            depth -= 1;
+        }
+        *i += 1;
+    }
+}
+
+fn parse_let(toks: &[Tok], i: &mut usize) -> Option<Stmt> {
+    let line = toks.get(*i)?.line;
+    *i += 1;
+    // Pattern up to `:` / `=` / `;` at depth 0.
+    let mut pat = Vec::new();
+    let mut depth = 0isize;
+    let mut saw_eq = false;
+    while *i < toks.len() {
+        let t = &toks[*i];
+        if depth == 0 {
+            if t.is("=") {
+                saw_eq = true;
+                *i += 1;
+                break;
+            }
+            if t.is(";") {
+                *i += 1;
+                break;
+            }
+            if t.is(":") {
+                // Type annotation: skip to the depth-0 `=` or `;`.
+                *i += 1;
+                while *i < toks.len() {
+                    let u = &toks[*i];
+                    if depth == 0 && u.is("=") {
+                        saw_eq = true;
+                        *i += 1;
+                        break;
+                    }
+                    if depth == 0 && (u.is(";") || u.is("}")) {
+                        if u.is(";") {
+                            *i += 1;
+                        }
+                        break;
+                    }
+                    if is_open(&u.text) {
+                        depth += 1;
+                    } else if is_close(&u.text) {
+                        depth -= 1;
+                    }
+                    *i += 1;
+                }
+                break;
+            }
+        }
+        if is_open(&t.text) {
+            depth += 1;
+        } else if is_close(&t.text) {
+            depth -= 1;
+            if depth < 0 {
+                break;
+            }
+        }
+        pat.push(t.clone());
+        *i += 1;
+    }
+    let names = pattern_names(&pat);
+    if !saw_eq {
+        return Some(Stmt::Let { names, rhs: Vec::new(), else_block: None, line });
+    }
+    // RHS until depth-0 `;`, with let-else detection.  An `else` at
+    // depth 0 is a let-else only when the RHS is not itself an
+    // `if`/`match`/`loop` expression (whose own `else` stays inline).
+    let mut rhs: Vec<Tok> = Vec::new();
+    let mut else_block = None;
+    let mut depth = 0isize;
+    let mut block_expr_rhs = false;
+    while *i < toks.len() {
+        let t = &toks[*i];
+        if rhs.is_empty() {
+            block_expr_rhs = matches!(
+                t.text.as_str(),
+                "if" | "match" | "loop" | "while" | "unsafe" | "{"
+            );
+        }
+        if depth == 0 && t.is(";") {
+            *i += 1;
+            break;
+        }
+        if depth == 0 && t.is("else") && !block_expr_rhs {
+            *i += 1;
+            else_block = Some(parse_block(toks, i));
+            if text_at(toks, *i) == ";" {
+                *i += 1;
+            }
+            break;
+        }
+        if t.is("}") && depth == 0 {
+            break;
+        }
+        if is_open(&t.text) {
+            depth += 1;
+        } else if is_close(&t.text) {
+            depth -= 1;
+        }
+        rhs.push(t.clone());
+        *i += 1;
+    }
+    Some(Stmt::Let { names, rhs, else_block, line })
+}
+
+fn parse_if(toks: &[Tok], i: &mut usize) -> Stmt {
+    let line = toks.get(*i).map(|t| t.line).unwrap_or(1);
+    *i += 1;
+    let cond = collect_until_brace(toks, i);
+    let then_block = parse_block(toks, i);
+    let mut else_block = None;
+    if text_at(toks, *i) == "else" {
+        *i += 1;
+        if text_at(toks, *i) == "if" {
+            let nested = parse_if(toks, i);
+            else_block = Some(Block { stmts: vec![nested] });
+        } else {
+            else_block = Some(parse_block(toks, i));
+        }
+    }
+    Stmt::If { cond, then_block, else_block, line }
+}
+
+fn parse_match(toks: &[Tok], i: &mut usize) -> Stmt {
+    let line = toks.get(*i).map(|t| t.line).unwrap_or(1);
+    *i += 1;
+    let scrutinee = collect_until_brace(toks, i);
+    let mut arms = Vec::new();
+    if text_at(toks, *i) == "{" {
+        *i += 1;
+        while *i < toks.len() && text_at(toks, *i) != "}" {
+            // Arm pattern (with optional guard) up to depth-0 `=>`.
+            let mut pat = Vec::new();
+            let mut depth = 0isize;
+            let mut saw_arrow = false;
+            while *i < toks.len() {
+                let t = &toks[*i];
+                if depth == 0 && t.is("=>") {
+                    saw_arrow = true;
+                    *i += 1;
+                    break;
+                }
+                if depth == 0 && t.is("}") {
+                    break;
+                }
+                if is_open(&t.text) {
+                    depth += 1;
+                } else if is_close(&t.text) {
+                    depth -= 1;
+                }
+                pat.push(t.clone());
+                *i += 1;
+            }
+            if !saw_arrow {
+                break;
+            }
+            // Arm body: a block, or an expression up to depth-0 `,`.
+            let body = if text_at(toks, *i) == "{" {
+                parse_block(toks, i)
+            } else {
+                let mut btoks = Vec::new();
+                let bline =
+                    toks.get(*i).map(|t| t.line).unwrap_or(line);
+                let mut d = 0isize;
+                while *i < toks.len() {
+                    let t = &toks[*i];
+                    if d == 0 && (t.is(",") || t.is("}")) {
+                        if t.is(",") {
+                            *i += 1;
+                        }
+                        break;
+                    }
+                    if is_open(&t.text) {
+                        d += 1;
+                    } else if is_close(&t.text) {
+                        d -= 1;
+                    }
+                    btoks.push(t.clone());
+                    *i += 1;
+                }
+                // Re-parse the expression tokens as a one-stmt block
+                // so `return` arms and nested sinks are seen.
+                let mut bi = 0usize;
+                let mut stmts = Vec::new();
+                while bi < btoks.len() {
+                    let before = bi;
+                    if let Some(s) = parse_stmt(&btoks, &mut bi) {
+                        stmts.push(s);
+                    }
+                    if bi == before {
+                        bi += 1;
+                    }
+                }
+                if stmts.is_empty() && !btoks.is_empty() {
+                    stmts.push(Stmt::Expr { toks: btoks, line: bline });
+                }
+                Block { stmts }
+            };
+            // Strip an `if` guard's tokens from the binder set.
+            let guard_at = pat
+                .iter()
+                .position(|t| t.kind == TokKind::Ident && t.is("if"));
+            let pat_only = match guard_at {
+                Some(g) => &pat[..g],
+                None => &pat[..],
+            };
+            arms.push((pattern_names(pat_only), body));
+            if text_at(toks, *i) == "," {
+                *i += 1;
+            }
+        }
+        if text_at(toks, *i) == "}" {
+            *i += 1;
+        }
+    }
+    Stmt::Match { scrutinee, arms, line }
+}
+
+/// Total number of blocks (the function body plus every nested
+/// block).  Used by the proptests: comment insertion must never
+/// change this count, because masked comments carry no tokens.
+pub fn block_count(f: &Function) -> usize {
+    fn of_block(b: &Block) -> usize {
+        let mut n = 1usize;
+        for s in &b.stmts {
+            n += of_stmt(s);
+        }
+        n
+    }
+    fn of_stmt(s: &Stmt) -> usize {
+        match s {
+            Stmt::Let { else_block, .. } => {
+                else_block.as_ref().map(of_block).unwrap_or(0)
+            }
+            Stmt::If { then_block, else_block, .. } => {
+                of_block(then_block)
+                    + else_block.as_ref().map(of_block).unwrap_or(0)
+            }
+            Stmt::While { body, .. }
+            | Stmt::For { body, .. }
+            | Stmt::Loop { body, .. }
+            | Stmt::BlockStmt { body, .. } => of_block(body),
+            Stmt::Match { arms, .. } => {
+                arms.iter().map(|(_, b)| of_block(b)).sum()
+            }
+            _ => 0,
+        }
+    }
+    of_block(&f.body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer;
+    use crate::util::prop::{self, Config};
+
+    fn functions(src: &str) -> Vec<Function> {
+        parse_functions(&lexer::strip(src).code)
+    }
+
+    #[test]
+    fn recovers_name_params_and_lines() {
+        let src = "\
+fn put(n: usize, out: &mut Vec<u8>) {
+    out.push(0);
+}
+";
+        let fns = functions(src);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "put");
+        assert_eq!(fns[0].params, vec!["n", "out"]);
+        assert_eq!(fns[0].line, 1);
+        assert_eq!(fns[0].body.stmts.len(), 1);
+    }
+
+    #[test]
+    fn recovers_methods_and_self() {
+        let src = "\
+impl Foo {
+    fn go(&mut self, len: usize) -> usize {
+        self.total += len;
+        self.total
+    }
+}
+";
+        let fns = functions(src);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "go");
+        assert_eq!(fns[0].params, vec!["self", "len"]);
+        assert!(matches!(fns[0].body.stmts[0], Stmt::Assign { .. }));
+    }
+
+    #[test]
+    fn let_else_and_if_else_chains_parse() {
+        let src = "\
+fn f(x: Option<usize>) -> usize {
+    let Some(v) = x else {
+        return 0;
+    };
+    if v > 4 {
+        v
+    } else if v > 2 {
+        1
+    } else {
+        2
+    }
+}
+";
+        let fns = functions(src);
+        assert_eq!(fns.len(), 1);
+        let stmts = &fns[0].body.stmts;
+        match &stmts[0] {
+            Stmt::Let { names, else_block, .. } => {
+                assert_eq!(names, &vec!["v".to_string()]);
+                assert!(else_block.is_some());
+            }
+            other => panic!("expected let-else, got {other:?}"),
+        }
+        match &stmts[1] {
+            Stmt::If { else_block, .. } => assert!(else_block.is_some()),
+            other => panic!("expected if, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn loops_and_match_arms_parse() {
+        let src = "\
+fn f(n: usize) -> usize {
+    let mut acc = 0;
+    for i in 0..n {
+        acc += i;
+    }
+    while acc > 10 {
+        acc -= 1;
+    }
+    match acc {
+        0 => 1,
+        v => {
+            v
+        }
+    }
+}
+";
+        let fns = functions(src);
+        let stmts = &fns[0].body.stmts;
+        assert!(matches!(stmts[1], Stmt::For { .. }));
+        assert!(matches!(stmts[2], Stmt::While { .. }));
+        match &stmts[3] {
+            Stmt::Match { arms, .. } => {
+                assert_eq!(arms.len(), 2);
+                assert_eq!(arms[1].0, vec!["v".to_string()]);
+            }
+            other => panic!("expected match, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nested_fns_are_separate_functions() {
+        let src = "\
+fn outer(n: usize) -> usize {
+    fn inner(m: usize) -> usize {
+        m + 1
+    }
+    inner(n)
+}
+";
+        let fns = functions(src);
+        let names: Vec<&str> =
+            fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner"]);
+        // The nested fn's body is not duplicated into outer's stmts.
+        assert_eq!(fns[0].body.stmts.len(), 1);
+    }
+
+    #[test]
+    fn trait_decls_without_bodies_are_skipped() {
+        let src = "\
+trait T {
+    fn sig_only(&self, n: usize) -> usize;
+    fn with_default(&self) -> usize {
+        1
+    }
+}
+";
+        let fns = functions(src);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "with_default");
+    }
+
+    #[test]
+    fn generic_fn_bounds_do_not_eat_the_param_list() {
+        let src = "\
+fn apply<F: FnMut(usize) -> usize>(f: F, seed: usize) -> usize {
+    f(seed)
+}
+";
+        let fns = functions(src);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].params, vec!["f", "seed"]);
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes_do_not_derail_recovery() {
+        let src = "\
+fn lit() -> &'static str {
+    r#\"fn fake(x: usize) { vec![0; x] }\"#
+}
+fn real<'a>(s: &'a str) -> &'a str {
+    'outer: loop {
+        break 'outer;
+    }
+    s
+}
+";
+        let fns = functions(src);
+        let names: Vec<&str> =
+            fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["lit", "real"]);
+    }
+
+    #[test]
+    fn nested_cfg_test_modules_are_invisible() {
+        let src = "\
+fn lib() -> usize { 1 }
+#[cfg(test)]
+mod tests {
+    fn helper(n: usize) -> usize { n }
+    mod inner {
+        fn deeper() {}
+    }
+}
+";
+        let fns = functions(src);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "lib");
+    }
+
+    #[test]
+    fn multi_line_attribute_macros_are_skipped() {
+        let src = "\
+#[derive(
+    Clone,
+    Debug
+)]
+struct S;
+fn keep(n: usize) -> usize {
+    #[cfg(unix)]
+    let x = n;
+    x
+}
+";
+        let fns = functions(src);
+        assert_eq!(fns.len(), 1);
+        assert_eq!(fns[0].name, "keep");
+    }
+
+    #[test]
+    fn tokenizer_separates_labels_from_char_masks() {
+        let toks = tokenize("'pump: loop { break 'pump; }");
+        assert_eq!(toks[0].kind, TokKind::Lifetime);
+        assert_eq!(toks[0].text, "'pump");
+        assert!(toks.iter().any(|t| t.is("loop")));
+    }
+
+    #[test]
+    fn block_count_counts_every_nesting() {
+        let src = "\
+fn f(n: usize) {
+    if n > 1 {
+        for _ in 0..n {
+            let _ = n;
+        }
+    } else {
+        while n > 0 {
+            break;
+        }
+    }
+}
+";
+        let fns = functions(src);
+        // body + then + for-body + else + while-body = 5
+        assert_eq!(block_count(&fns[0]), 5);
+    }
+
+    /// CFG recovery never panics, whatever bytes it is fed.
+    #[test]
+    fn cfg_recovery_never_panics_on_arbitrary_bytes() {
+        prop::check(
+            "cfg recovery on arbitrary bytes",
+            Config { cases: 128, ..Config::default() },
+            |rng, size| {
+                let bytes = prop::arb_bytes(rng, size);
+                let text = String::from_utf8_lossy(&bytes).into_owned();
+                let fns = parse_functions(&lexer::strip(&text).code);
+                for f in &fns {
+                    let _ = block_count(f);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// On token-shaped input (random fragments from a Rust-ish pool),
+    /// inserting a line comment at any line boundary never changes
+    /// the recovered (fn name, block count) shape — masked comments
+    /// carry no tokens.
+    #[test]
+    fn cfg_block_counts_are_stable_under_comment_insertion() {
+        const POOL: [&str; 30] = [
+            "fn", "f", "g", "let", "x", "=", "{", "}", "(", ")", ";",
+            "if", "else", "match", "=>", ",", "0", "+", "*", "loop",
+            "while", "for", "in", "..", "return", "n", "vec", "!",
+            "[", "]",
+        ];
+        prop::check(
+            "cfg comment-insertion stability",
+            Config {
+                cases: 128,
+                max_size: 256,
+                ..Config::default()
+            },
+            |rng, size| {
+                let n_frag = 1 + rng.below(size as u64 + 1) as usize;
+                let mut src = String::new();
+                for k in 0..n_frag {
+                    src.push_str(POOL[rng.below(POOL.len() as u64) as usize]);
+                    // Mix separators so tokens land on many lines.
+                    src.push(if k % 3 == 0 { '\n' } else { ' ' });
+                }
+                let shape = |text: &str| -> Vec<(String, usize)> {
+                    parse_functions(&lexer::strip(text).code)
+                        .iter()
+                        .map(|f| (f.name.clone(), block_count(f)))
+                        .collect()
+                };
+                let before = shape(&src);
+                let mut lines: Vec<String> =
+                    src.split('\n').map(str::to_string).collect();
+                let at = rng.below(lines.len() as u64 + 1) as usize;
+                lines.insert(
+                    at.min(lines.len()),
+                    "// inserted comment".to_string(),
+                );
+                let after = shape(&lines.join("\n"));
+                if before != after {
+                    return Err(format!(
+                        "comment insertion changed recovery: \
+                         {before:?} vs {after:?} in\n{src}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -16,8 +16,10 @@
 //! fails only on new ones.
 
 pub mod baseline;
+pub mod cfg;
 pub mod lexer;
 pub mod rules;
+pub mod taint;
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -51,6 +53,62 @@ pub fn analyze_tree(src_root: &Path) -> Result<Vec<Finding>, String> {
         findings.extend(check_file(&label, &text));
     }
     Ok(findings)
+}
+
+/// Build the `--json` report for a finished analysis run.
+///
+/// Schema (`version: 2`):
+/// ```json
+/// {
+///   "version": 2,
+///   "rules": ["unchecked-narrowing", ...],
+///   "counts": {"total": N, "new": N, "baselined": N, "stale": N},
+///   "findings": [{"file", "line", "rule", "msg", "status"}, ...],
+///   "stale_baseline": ["<exact baseline line>", ...]
+/// }
+/// ```
+/// `status` is `"new"` or `"baselined"`; `stale_baseline` lists
+/// grandfathered entries that no longer match any finding.
+pub fn json_report(
+    findings: &[Finding],
+    baseline_set: &std::collections::BTreeSet<String>,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let (fresh, known) = baseline::split(findings, baseline_set);
+    let stale = baseline::stale(findings, baseline_set);
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let status = if baseline_set.contains(&f.render()) {
+                "baselined"
+            } else {
+                "new"
+            };
+            Json::obj()
+                .set("file", f.file.as_str())
+                .set("line", f.line)
+                .set("rule", f.rule)
+                .set("msg", f.msg.as_str())
+                .set("status", status)
+        })
+        .collect();
+    let rule_names: Vec<Json> =
+        rules::RULES.iter().map(|r| Json::from(r.name)).collect();
+    let stale_items: Vec<Json> =
+        stale.iter().map(|s| Json::from(s.as_str())).collect();
+    Json::obj()
+        .set("version", 2usize)
+        .set("rules", rule_names)
+        .set(
+            "counts",
+            Json::obj()
+                .set("total", findings.len())
+                .set("new", fresh.len())
+                .set("baselined", known.len())
+                .set("stale", stale.len()),
+        )
+        .set("findings", items)
+        .set("stale_baseline", stale_items)
 }
 
 fn collect_rs_files(
@@ -107,5 +165,51 @@ mod tests {
         let dir = std::env::temp_dir().join("qlc-analysis-absent");
         let _ = fs::remove_dir_all(&dir);
         assert!(analyze_tree(&dir).is_err());
+    }
+
+    #[test]
+    fn json_report_counts_and_statuses_are_consistent() {
+        let findings = vec![
+            Finding {
+                file: "src/a.rs".to_string(),
+                line: 3,
+                rule: rules::RULE_PANIC_FREE,
+                msg: "old".to_string(),
+            },
+            Finding {
+                file: "src/b.rs".to_string(),
+                line: 7,
+                rule: rules::RULE_CAP_ALLOC,
+                msg: "fresh".to_string(),
+            },
+        ];
+        let base = baseline::parse(&format!(
+            "{}\nsrc/gone.rs:1: panic-free: fixed\n",
+            findings[0].render()
+        ));
+        let report = json_report(&findings, &base);
+        let counts = report.get("counts").unwrap();
+        assert_eq!(counts.get("total").unwrap().as_usize(), Some(2));
+        assert_eq!(counts.get("new").unwrap().as_usize(), Some(1));
+        assert_eq!(counts.get("baselined").unwrap().as_usize(), Some(1));
+        assert_eq!(counts.get("stale").unwrap().as_usize(), Some(1));
+        let items = report.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(
+            items[0].get("status").unwrap().as_str(),
+            Some("baselined")
+        );
+        assert_eq!(items[1].get("status").unwrap().as_str(), Some("new"));
+        assert_eq!(
+            report.get("rules").unwrap().as_arr().unwrap().len(),
+            rules::RULES.len()
+        );
+        let stale = report.get("stale_baseline").unwrap().as_arr().unwrap();
+        assert_eq!(stale.len(), 1);
+        // The report must survive its own serializer.
+        let parsed =
+            crate::util::json::Json::parse(&report.to_string_pretty())
+                .unwrap();
+        assert_eq!(parsed.get("version").unwrap().as_usize(), Some(2));
     }
 }

@@ -1,35 +1,44 @@
-//! The `qlc analyze` rule set — five rules targeting this repo's
-//! proven bug classes (see ROADMAP.md § Static analysis):
+//! The `qlc analyze` rule set — eight rules targeting this repo's
+//! proven bug classes (see ROADMAP.md § Static analysis).
 //!
-//! * **unchecked-narrowing** (L1): `as u8/u16/u32` casts in wire and
-//!   serde modules must follow a visible range check on the cast
-//!   operand earlier in the same function, or carry a
-//!   `// lint: cast-checked(<why>)` waiver.  PR 5's chunk-table
-//!   length-collision bug was exactly this shape.
-//! * **cap-before-alloc** (L2): `Vec::with_capacity` / `vec![x; n]` /
-//!   `.reserve(n)` sized by a runtime value in a wire module needs an
-//!   earlier cap comparison in the same function, or a
-//!   `// lint: cap-checked(<why>)` waiver.
+//! Since v2 the wire rules run on a real dataflow engine
+//! ([`super::cfg`] recovers functions and statements from the masked
+//! token stream; [`super::taint`] tracks wire-derived values from
+//! sources through assignments to sinks), replacing the v1 "some
+//! earlier line in this function mentions the identifier next to a
+//! comparison" text heuristic.  The practical difference: a cap
+//! check on the *wrong variable* no longer suppresses a finding, and
+//! every finding carries its source-to-sink chain.
+//!
+//! * **unchecked-narrowing** (L1): a wire-derived value reaches an
+//!   `as u8/u16/u32` cast with no reaching sanitizer.
+//! * **cap-before-alloc** (L2): a wire-derived length reaches
+//!   `Vec::with_capacity` / `vec![x; n]` / `reserve` / `resize` or a
+//!   slice index with no reaching cap.
 //! * **panic-free** (L3): `unwrap()` / `expect(` / `panic!` /
 //!   `unreachable!` / `todo!` / `unimplemented!` in library code
-//!   needs a `// lint: infallible(<why>)` waiver.  `main.rs` is
-//!   exempt (the CLI may die loudly); tests and benches never reach
-//!   the rules because the lexer blanks `#[cfg(test)]` regions and
-//!   the tree walk only visits `src/`.
+//!   needs a `// lint: infallible(<why>)` waiver; `main.rs` exempt.
 //! * **safety-comment** (L4): every `unsafe` token needs an adjacent
-//!   `// SAFETY:` comment (or `# Safety` doc section) within the
-//!   eight lines above it.
+//!   `// SAFETY:` comment within the eight lines above it.
 //! * **forbidden-construct** (L5): `transmute` and `static mut` are
 //!   rejected everywhere, with no waiver syntax.
+//! * **tainted-loop-bound** (L6): a wire-derived count bounds a
+//!   `for`/`while` loop with no cap on any path to it.
+//! * **tainted-length-arith** (L7): `a + b` / `a * b` on tainted
+//!   lengths flows to a sink without a checked_/saturating_ op or a
+//!   prior cap — overflow there defeats any later comparison.
+//! * **reactor-interest-leak** (L8): a `Reactor::register` in
+//!   `serve/`/`transport/` followed by an early exit (`?`/`return`)
+//!   before the function's next `deregister` leaks fd interest.
 //!
 //! All scanning happens on the lexer's masked view, so string
-//! literals, comments, and test code can never false-positive.  The
-//! guard heuristic is deliberately crude — "some earlier line in this
-//! function mentions the same identifier next to a comparison-ish
-//! token" — because a waiver comment is cheap and reviewable, while a
-//! missed unchecked cast costs a corrupted frame.
+//! literals, comments, and test code can never false-positive.
+//! Waivers stay cheap and reviewable: `// lint: <kind>(<why>)` on
+//! the finding line or up to four lines above it.
 
+use super::cfg;
 use super::lexer::{self, Masked};
+use super::taint::{self, SinkKind};
 
 /// One analysis finding, rendered as `file:line: rule: message`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -51,22 +60,126 @@ pub const RULE_CAP_ALLOC: &str = "cap-before-alloc";
 pub const RULE_PANIC_FREE: &str = "panic-free";
 pub const RULE_SAFETY: &str = "safety-comment";
 pub const RULE_FORBIDDEN: &str = "forbidden-construct";
+pub const RULE_LOOP_BOUND: &str = "tainted-loop-bound";
+pub const RULE_LEN_ARITH: &str = "tainted-length-arith";
+pub const RULE_REACTOR_LEAK: &str = "reactor-interest-leak";
 
-/// Tokens that read as "a range/cap check happened here".
-const GUARD_MARKS: [&str; 10] = [
-    "<", ">", "try_from", "try_into", ".min(", ".clamp(", "contains(",
-    "MAX", "CAP", "assert",
-];
+/// Documentation record for one rule, surfaced by
+/// `qlc analyze --explain <rule>`.
+pub struct RuleInfo {
+    pub name: &'static str,
+    /// What the rule proves / rejects.
+    pub contract: &'static str,
+    /// Waiver syntax, or a statement that none exists.
+    pub waiver: &'static str,
+    /// One worked example: a violation and its fix.
+    pub example: &'static str,
+}
 
-/// Identifier-shaped tokens that carry no information about which
-/// value is being cast or sized.
-const NOISE_IDENTS: [&str; 44] = [
-    "as", "bool", "break", "const", "continue", "crate", "else", "enum",
-    "false", "fn", "for", "if", "impl", "in", "let", "loop", "match",
-    "move", "mut", "pub", "ref", "return", "self", "Self", "static",
-    "struct", "super", "true", "u8", "u16", "u32", "u64", "u128",
-    "usize", "i8", "i16", "i32", "i64", "i128", "isize", "f32", "f64",
-    "use", "while",
+/// Every registered rule, in L1..L8 order.  `--explain` iterates
+/// this; a test asserts it stays in sync with the `RULE_*` consts.
+pub const RULES: [RuleInfo; 8] = [
+    RuleInfo {
+        name: RULE_NARROWING,
+        contract: "A wire-derived value (length/count field, \
+                   from_le_bytes result, wire-shaped parameter) must \
+                   not reach an `as u8`/`as u16`/`as u32` cast unless \
+                   a sanitizer reaches the cast on every path: a \
+                   diverging comparison guard, `.min(CAP)`, \
+                   `try_from`, or `%`.",
+        waiver: "// lint: cast-checked(<why>) on the cast line or up \
+                 to 4 lines above",
+        example: "BAD:  fn put(n: usize) -> u32 { n as u32 }\n\
+                  GOOD: if n > MAX_N { return Err(..); }\n      \
+                  out.push(n as u32);",
+    },
+    RuleInfo {
+        name: RULE_CAP_ALLOC,
+        contract: "A wire-derived length must not size an allocation \
+                   (`Vec::with_capacity`, `vec![x; n]`, `reserve`, \
+                   `resize`) or index a slice unless a cap reaches \
+                   it.  Checks on a different variable do not count.",
+        waiver: "// lint: cap-checked(<why>) on the allocation line \
+                 or up to 4 lines above",
+        example: "BAD:  vec![0u8; hdr.payload_len]\n\
+                  GOOD: if hdr.payload_len > MAX_PAYLOAD \
+                  { return Err(..); }\n      \
+                  vec![0u8; hdr.payload_len]",
+    },
+    RuleInfo {
+        name: RULE_PANIC_FREE,
+        contract: "Library code must not contain `unwrap()`, \
+                   `expect(`, `panic!`, `unreachable!`, `todo!` or \
+                   `unimplemented!`; return `Err` instead.  `main.rs` \
+                   (the CLI) is exempt; test code is invisible to \
+                   the lexer.",
+        waiver: "// lint: infallible(<why>) on the panicking line or \
+                 up to 4 lines above",
+        example: "BAD:  let b = v.first().unwrap();\n\
+                  GOOD: let b = v.first().ok_or(\"empty\")?;",
+    },
+    RuleInfo {
+        name: RULE_SAFETY,
+        contract: "Every `unsafe` token needs a `// SAFETY:` comment \
+                   (or a `# Safety` doc section) within the eight \
+                   lines above it, stating the upheld invariant.",
+        waiver: "no waiver: write the SAFETY comment",
+        example: "BAD:  unsafe { *p }\n\
+                  GOOD: // SAFETY: caller guarantees p is valid\n      \
+                  unsafe { *p }",
+    },
+    RuleInfo {
+        name: RULE_FORBIDDEN,
+        contract: "`transmute` and `static mut` are rejected \
+                   everywhere in the crate: both defeated review in \
+                   past incidents and have safe replacements \
+                   (`to_bits`/`from_bits`, `OnceLock`, atomics).",
+        waiver: "no waiver: the constructs are banned outright",
+        example: "BAD:  unsafe { std::mem::transmute::<u32, f32>(x) }\n\
+                  GOOD: f32::from_bits(x)",
+    },
+    RuleInfo {
+        name: RULE_LOOP_BOUND,
+        contract: "A wire-derived count must not bound a `for` or \
+                   `while` loop with no cap on any path to it — an \
+                   attacker-chosen iteration count is a CPU-time \
+                   amplifier even when each step is cheap.",
+        waiver: "// lint: loop-capped(<why>) on the loop header line \
+                 or up to 4 lines above",
+        example: "BAD:  for _ in 0..hdr.n_chunks { step(); }\n\
+                  GOOD: if hdr.n_chunks > MAX_CHUNKS \
+                  { return Err(..); }\n      \
+                  for _ in 0..hdr.n_chunks { step(); }",
+    },
+    RuleInfo {
+        name: RULE_LEN_ARITH,
+        contract: "Unchecked `+`/`*` on wire-derived lengths must not \
+                   flow to a sink: the product can wrap before any \
+                   later comparison sees it.  Use `checked_mul`/\
+                   `checked_add`/`saturating_*` or cap each operand \
+                   first.",
+        waiver: "// lint: arith-checked(<why>) on the sink line or up \
+                 to 4 lines above",
+        example: "BAD:  let total = n_rows * row_len; \
+                  out.reserve(total);\n\
+                  GOOD: let total = n_rows.checked_mul(row_len)\
+                  .ok_or(\"overflow\")?;",
+    },
+    RuleInfo {
+        name: RULE_REACTOR_LEAK,
+        contract: "In `serve/` and `transport/`, a `register` call \
+                   followed by an early exit (`?` or `return`) before \
+                   the function's next `deregister` leaks fd interest \
+                   in the reactor.  Functions with no `deregister` \
+                   transfer ownership and are exempt; branches \
+                   handling the register's own failure are exempt.",
+        waiver: "// lint: interest-balanced(<why>) on the register \
+                 line or up to 4 lines above",
+        example: "BAD:  reactor.register(fd, ..)?; probe()?; \
+                  reactor.deregister(fd)?;\n\
+                  GOOD: deregister on the probe-error path before \
+                  returning",
+    },
 ];
 
 fn is_ident_char(c: char) -> bool {
@@ -94,98 +207,32 @@ fn idents(text: &str) -> Vec<(usize, String)> {
     out
 }
 
-/// Identifiers in `text` that plausibly name the value being cast or
-/// sized (everything minus keywords/primitive types, deduplicated).
-fn value_idents(text: &str) -> Vec<String> {
-    let mut out: Vec<String> = Vec::new();
-    for (_, id) in idents(text) {
-        if id.chars().next().is_some_and(|c| c.is_ascii_digit()) {
-            continue;
-        }
-        if NOISE_IDENTS.contains(&id.as_str()) {
-            continue;
-        }
-        if !out.contains(&id) {
-            out.push(id);
-        }
-    }
-    out
-}
-
-/// Does `line` look like a range/cap check that mentions any of the
-/// given identifiers?  (Token-level identifier match, substring-level
-/// guard-mark match.)
-fn line_guards(line: &str, wanted: &[String]) -> bool {
-    if !GUARD_MARKS.iter().any(|m| line.contains(m)) {
-        return false;
-    }
-    idents(line).iter().any(|(_, id)| wanted.iter().any(|w| w == id))
-}
-
-/// For each 0-indexed line, the 1-indexed start line of the innermost
-/// enclosing `fn` body, if any.  Brace-depth tracking over the masked
-/// text — closures do not start a scope, only the `fn` keyword does.
-fn enclosing_fn_map(code: &str) -> Vec<Option<usize>> {
-    let mut map: Vec<Option<usize>> = vec![None];
-    let mut stack: Vec<(usize, usize)> = Vec::new(); // (fn line, depth)
-    let mut depth = 0usize;
-    let mut pending_fn: Option<usize> = None;
-    let mut line = 1usize;
-    let mut cur = String::new();
-    for c in code.chars() {
-        if is_ident_char(c) {
-            cur.push(c);
-            continue;
-        }
-        if cur == "fn" {
-            pending_fn = Some(line);
-        }
-        cur.clear();
-        match c {
-            '{' => {
-                if let Some(fl) = pending_fn.take() {
-                    stack.push((fl, depth));
-                }
-                depth += 1;
-            }
-            '}' => {
-                depth = depth.saturating_sub(1);
-                if stack.last().is_some_and(|&(_, d)| d == depth) {
-                    stack.pop();
-                }
-            }
-            ';' => pending_fn = None,
-            '\n' => {
-                line += 1;
-                map.push(stack.last().map(|&(fl, _)| fl));
-            }
-            _ => {}
-        }
-    }
-    map
-}
-
-/// Is any line in `[from_line, to_line)` (1-indexed, exclusive end) a
-/// guard for `wanted`?
-fn guarded_between(
-    lines: &[&str],
-    from_line: usize,
-    to_line: usize,
-    wanted: &[String],
-) -> bool {
-    lines
-        .iter()
-        .enumerate()
-        .skip(from_line.saturating_sub(1))
-        .take_while(|(i, _)| i + 1 < to_line)
-        .any(|(_, l)| line_guards(l, wanted))
-}
-
-/// Does this path belong to the wire/serde scope of L1/L2?
+/// Does this path belong to the wire/serde taint scope of
+/// L1/L2/L6/L7?  Everything that parses or frames attacker-shaped
+/// bytes: the QWC1 socket modules, the container/scheme serializers,
+/// and (since v2) the serve subsystem's QSV1/QSA1 handlers.
 fn in_wire_scope(path: &str) -> bool {
     path.contains("transport/net/")
         || path.ends_with("codecs/frame.rs")
         || path.ends_with("codecs/qlc/serde.rs")
+        || path.ends_with("serve/server.rs")
+        || path.ends_with("serve/client.rs")
+        || path.ends_with("serve/io.rs")
+}
+
+/// Does this path fall under the reactor-lifecycle rule (L8)?
+fn in_reactor_scope(path: &str) -> bool {
+    path.contains("serve/") || path.contains("transport/")
+}
+
+/// The rule and waiver kind a taint sink maps to.
+fn sink_rule(kind: SinkKind) -> (&'static str, &'static str) {
+    match kind {
+        SinkKind::Narrow => (RULE_NARROWING, "cast-checked"),
+        SinkKind::Alloc | SinkKind::Index => (RULE_CAP_ALLOC, "cap-checked"),
+        SinkKind::LoopBound => (RULE_LOOP_BOUND, "loop-capped"),
+        SinkKind::Arith => (RULE_LEN_ARITH, "arith-checked"),
+    }
 }
 
 /// Run every rule over one file.  `path` is the label findings carry
@@ -193,155 +240,74 @@ fn in_wire_scope(path: &str) -> bool {
 pub fn check_file(path: &str, text: &str) -> Vec<Finding> {
     let path = path.replace('\\', "/");
     let masked = lexer::strip(text);
-    let lines: Vec<&str> = masked.code.lines().collect();
-    let fn_map = enclosing_fn_map(&masked.code);
     let wire = in_wire_scope(&path);
+    let reactor = in_reactor_scope(&path);
     let panic_exempt = path.ends_with("main.rs");
     let mut out = Vec::new();
-    for (i, raw_line) in lines.iter().enumerate() {
+    for (i, raw_line) in masked.code.lines().enumerate() {
         let lineno = i + 1;
-        if wire {
-            check_narrowing(
-                &path, lineno, raw_line, &lines, &fn_map, &masked, &mut out,
-            );
-            check_cap_alloc(
-                &path, lineno, raw_line, &lines, &fn_map, &masked, &mut out,
-            );
-        }
         if !panic_exempt {
             check_panic_free(&path, lineno, raw_line, &masked, &mut out);
         }
         check_safety(&path, lineno, raw_line, &masked, &mut out);
         check_forbidden(&path, lineno, raw_line, &mut out);
     }
-    out
-}
-
-/// L1: `<expr> as u8/u16/u32` with no earlier guard on the operand.
-fn check_narrowing(
-    path: &str,
-    lineno: usize,
-    line: &str,
-    lines: &[&str],
-    fn_map: &[Option<usize>],
-    masked: &Masked,
-    out: &mut Vec<Finding>,
-) {
-    let toks = idents(line);
-    for (k, (col, tok)) in toks.iter().enumerate() {
-        if tok != "as" {
-            continue;
-        }
-        let Some((next_col, next)) = toks.get(k + 1) else { continue };
-        if !matches!(next.as_str(), "u8" | "u16" | "u32") {
-            continue;
-        }
-        // Only whitespace may separate `as` from the target type.
-        let between: String = line
-            .chars()
-            .skip(col + 2)
-            .take(next_col - (col + 2))
-            .collect();
-        if !between.chars().all(|c| c.is_whitespace()) {
-            continue;
-        }
-        // The operand: identifiers on this line before the `as`.
-        let before: String = line.chars().take(*col).collect();
-        let wanted = value_idents(&before);
-        if wanted.is_empty() {
-            continue; // literal cast, nothing dynamic to range-check
-        }
-        if masked.waived(lineno, "cast-checked") {
-            continue;
-        }
-        let fn_start =
-            fn_map.get(lineno - 1).copied().flatten().unwrap_or(lineno);
-        // Search strictly after the `fn` line: signatures are full of
-        // `<`/`>` (generics, `->`) and mention every parameter, so
-        // including them would vacuously guard everything.
-        if guarded_between(lines, fn_start + 1, lineno, &wanted) {
-            continue;
-        }
-        let ident = wanted.last().cloned().unwrap_or_default();
-        out.push(Finding {
-            file: path.to_string(),
-            line: lineno,
-            rule: RULE_NARROWING,
-            msg: format!(
-                "narrowing `as {next}` cast of '{ident}' with no visible \
-                 range check (add one or // lint: cast-checked(why))"
-            ),
-        });
-    }
-}
-
-/// L2: allocation sized by a runtime value with no earlier cap check.
-fn check_cap_alloc(
-    path: &str,
-    lineno: usize,
-    line: &str,
-    lines: &[&str],
-    fn_map: &[Option<usize>],
-    masked: &Masked,
-    out: &mut Vec<Finding>,
-) {
-    let mut size_exprs: Vec<String> = Vec::new();
-    for pat in ["with_capacity(", ".reserve("] {
-        if let Some(pos) = line.find(pat) {
-            let after = &line[pos + pat.len()..];
-            size_exprs.push(paren_arg(after, '(', ')'));
-        }
-    }
-    if let Some(pos) = line.find("vec![") {
-        let inner = paren_arg(&line[pos + 5..], '[', ']');
-        // `vec![elem; len]` — only the length expression matters.
-        if let Some(semi) = inner.rfind(';') {
-            size_exprs.push(inner[semi + 1..].to_string());
-        }
-    }
-    for expr in size_exprs {
-        let wanted = value_idents(&expr);
-        if wanted.is_empty() {
-            continue; // constant-sized allocation
-        }
-        if masked.waived(lineno, "cap-checked") {
-            continue;
-        }
-        let fn_start =
-            fn_map.get(lineno - 1).copied().flatten().unwrap_or(lineno);
-        if guarded_between(lines, fn_start + 1, lineno, &wanted) {
-            continue;
-        }
-        let ident = wanted.last().cloned().unwrap_or_default();
-        out.push(Finding {
-            file: path.to_string(),
-            line: lineno,
-            rule: RULE_CAP_ALLOC,
-            msg: format!(
-                "allocation sized by '{ident}' with no earlier cap \
-                 comparison (add one or // lint: cap-checked(why))"
-            ),
-        });
-    }
-}
-
-/// The argument text from `after` up to the matching close delimiter
-/// (or end of line if it never closes on this line).
-fn paren_arg(after: &str, open: char, close: char) -> String {
-    let mut depth = 0usize;
-    let mut out = String::new();
-    for c in after.chars() {
-        if c == open {
-            depth += 1;
-        } else if c == close {
-            if depth == 0 {
-                break;
+    if wire || reactor {
+        let funcs = cfg::parse_functions(&masked.code);
+        for func in &funcs {
+            if wire {
+                for tf in taint::analyze_fn(&path, func) {
+                    let (rule, waiver_kind) = sink_rule(tf.kind);
+                    if masked.waived(tf.line, waiver_kind) {
+                        continue;
+                    }
+                    out.push(Finding {
+                        file: path.clone(),
+                        line: tf.line,
+                        rule,
+                        msg: taint_msg(&path, &tf, waiver_kind),
+                    });
+                }
             }
-            depth -= 1;
+            if reactor {
+                for leak in taint::reactor_leaks(func) {
+                    if masked.waived(leak.reg_line, "interest-balanced") {
+                        continue;
+                    }
+                    out.push(Finding {
+                        file: path.clone(),
+                        line: leak.reg_line,
+                        rule: RULE_REACTOR_LEAK,
+                        msg: format!(
+                            "fd interest registered here can leak: early \
+                             exit at {path}:{} runs before the next \
+                             deregister (balance the exit or \
+                             // lint: interest-balanced(why))",
+                            leak.exit_line
+                        ),
+                    });
+                }
+            }
         }
-        out.push(c);
     }
+    out.sort_by(|a, b| {
+        (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg))
+    });
+    out.dedup();
     out
+}
+
+/// Render a taint finding's message with its source-to-sink chain.
+fn taint_msg(path: &str, tf: &taint::TaintFinding, waiver_kind: &str) -> String {
+    let mut chain = tf.chain.join(" -> ");
+    if chain.is_empty() {
+        chain = "wire-derived value".to_string();
+    }
+    format!(
+        "{chain} -> reaches {} at {path}:{} with no reaching sanitizer \
+         (cap it or // lint: {waiver_kind}(why))",
+        tf.what, tf.line
+    )
 }
 
 /// L3: panicking constructs in library code.
@@ -431,6 +397,7 @@ mod tests {
     use super::*;
 
     const WIRE: &str = "src/transport/net/fixture.rs";
+    const SERVE: &str = "src/serve/fixture.rs";
     const LIB: &str = "src/collective/fixture.rs";
 
     fn rules_of(path: &str, src: &str) -> Vec<&'static str> {
@@ -551,6 +518,167 @@ fn f(n: usize) {
     fn constant_sized_alloc_passes() {
         let src = "fn f() -> Vec<u8> { Vec::with_capacity(256) }\n";
         assert!(rules_of(WIRE, src).is_empty());
+    }
+
+    #[test]
+    fn cap_on_the_wrong_variable_no_longer_suppresses() {
+        // The exact shape PR 6's heuristic wrongly accepted: guard
+        // mentions `hdr` (shared base), allocation is sized by a
+        // *different* field of it.
+        let src = "\
+fn body(&self) -> Vec<u8> {
+    if self.hdr.n_scales > MAX_SCALES {
+        return Vec::new();
+    }
+    vec![0u8; self.hdr.payload_len]
+}
+";
+        let f = check_file(WIRE, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_CAP_ALLOC);
+        assert_eq!(f[0].line, 5);
+        assert!(f[0].msg.contains("payload_len"), "{}", f[0].msg);
+        let twin = "\
+fn body(&self) -> Vec<u8> {
+    if self.hdr.payload_len > MAX_PAYLOAD {
+        return Vec::new();
+    }
+    vec![0u8; self.hdr.payload_len]
+}
+";
+        assert!(rules_of(WIRE, twin).is_empty());
+    }
+
+    // ---- L6 tainted-loop-bound ----
+
+    #[test]
+    fn tainted_loop_bound_is_flagged_and_waivable() {
+        let bad = "\
+fn walk(n_chunks: usize) {
+    for _ in 0..n_chunks {
+        step();
+    }
+}
+";
+        let f = check_file(WIRE, bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_LOOP_BOUND);
+        assert_eq!(f[0].line, 2);
+        let waived = "\
+fn walk(n_chunks: usize) {
+    // lint: loop-capped(n_chunks <= 64 by construction upstream)
+    for _ in 0..n_chunks {
+        step();
+    }
+}
+";
+        assert!(rules_of(WIRE, waived).is_empty());
+        let guarded = "\
+fn walk(n_chunks: usize) -> Result<(), String> {
+    if n_chunks > MAX_CHUNKS {
+        return Err(\"cap\".into());
+    }
+    for _ in 0..n_chunks {
+        step();
+    }
+    Ok(())
+}
+";
+        assert!(rules_of(WIRE, guarded).is_empty());
+    }
+
+    // ---- L7 tainted-length-arith ----
+
+    #[test]
+    fn tainted_length_arith_is_flagged_and_checked_mul_passes() {
+        let bad = "\
+fn grow(n_rows: usize, row_len: usize, out: &mut Vec<u8>) {
+    let total = n_rows * row_len;
+    out.reserve(total);
+}
+";
+        let f = check_file(WIRE, bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_LEN_ARITH);
+        assert_eq!(f[0].line, 3);
+        let good = "\
+fn grow(n_rows: usize, row_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    let total = n_rows.checked_mul(row_len).ok_or(\"overflow\")?;
+    if total > MAX_TOTAL {
+        return Err(\"cap\".into());
+    }
+    out.reserve(total);
+    Ok(())
+}
+";
+        assert!(rules_of(WIRE, good).is_empty());
+    }
+
+    // ---- L8 reactor-interest-leak ----
+
+    #[test]
+    fn register_with_early_exit_before_deregister_is_flagged() {
+        let src = "\
+fn open(&mut self, fd: i32) -> Result<(), String> {
+    self.reactor.register(fd, 0, READABLE)?;
+    self.probe()?;
+    self.reactor.deregister(fd)?;
+    Ok(())
+}
+";
+        let f = check_file(SERVE, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_REACTOR_LEAK);
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].msg.contains(":3"), "{}", f[0].msg);
+    }
+
+    #[test]
+    fn balanced_or_transferred_registration_passes() {
+        let balanced = "\
+fn open(&mut self, fd: i32) -> Result<(), String> {
+    self.reactor.register(fd, 0, READABLE)?;
+    if self.probe().is_err() {
+        let _ = self.reactor.deregister(fd);
+        return Err(\"probe\".into());
+    }
+    self.reactor.deregister(fd)?;
+    Ok(())
+}
+";
+        assert!(rules_of(SERVE, balanced).is_empty());
+        let transfer = "\
+fn connect(addr: &str) -> Result<Client, String> {
+    let reactor = new_reactor()?;
+    reactor.register(fd, 0, READABLE)?;
+    Ok(Client { reactor })
+}
+";
+        assert!(rules_of(SERVE, transfer).is_empty());
+    }
+
+    #[test]
+    fn reactor_leak_is_waivable_and_scoped() {
+        let src = "\
+fn open(&mut self, fd: i32) -> Result<(), String> {
+    // lint: interest-balanced(probe failure tears down the reactor)
+    self.reactor.register(fd, 0, READABLE)?;
+    self.probe()?;
+    self.reactor.deregister(fd)?;
+    Ok(())
+}
+";
+        assert!(rules_of(SERVE, src).is_empty());
+        // Outside serve//transport/ the rule does not run at all.
+        let unscoped = "\
+fn open(&mut self, fd: i32) -> Result<(), String> {
+    self.reactor.register(fd, 0, READABLE)?;
+    self.probe()?;
+    self.reactor.deregister(fd)?;
+    Ok(())
+}
+";
+        assert!(rules_of(LIB, unscoped).is_empty());
     }
 
     // ---- L3 panic-free ----
@@ -713,6 +841,22 @@ fn put(n: usize, out: &mut Vec<u8>) {
     }
 
     #[test]
+    fn findings_carry_a_taint_chain() {
+        let src = "\
+fn read(len: usize) -> Vec<u8> {
+    let want = len;
+    vec![0u8; want]
+}
+";
+        let f = check_file(WIRE, src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        let msg = &f[0].msg;
+        assert!(msg.contains("`len`"), "{msg}");
+        assert!(msg.contains("flows into `want`"), "{msg}");
+        assert!(msg.contains("reaches"), "{msg}");
+    }
+
+    #[test]
     fn all_five_rules_fire_on_a_seeded_fixture() {
         let src = "\
 static mut GLOBAL: u32 = 0;
@@ -734,6 +878,31 @@ fn bad(n: usize, v: &[u8]) -> Vec<u8> {
             RULE_FORBIDDEN,
         ] {
             assert!(rules.contains(&rule), "{rule} missing from {rules:?}");
+        }
+    }
+
+    // ---- rule registry ----
+
+    #[test]
+    fn registry_covers_every_rule_exactly_once() {
+        let names: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                RULE_NARROWING,
+                RULE_CAP_ALLOC,
+                RULE_PANIC_FREE,
+                RULE_SAFETY,
+                RULE_FORBIDDEN,
+                RULE_LOOP_BOUND,
+                RULE_LEN_ARITH,
+                RULE_REACTOR_LEAK,
+            ]
+        );
+        for r in &RULES {
+            assert!(!r.contract.is_empty());
+            assert!(!r.waiver.is_empty());
+            assert!(!r.example.is_empty());
         }
     }
 }

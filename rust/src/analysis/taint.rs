@@ -1,0 +1,1308 @@
+//! Intra-procedural wire-taint analysis for `qlc analyze` v2.
+//!
+//! Runs over the statement trees recovered by [`super::cfg`] and
+//! tracks, per function, which values are *wire-derived* (attacker
+//! shaped): reads of wire-named parameters and struct fields
+//! (`payload_len`, `n_symbols`, ...), and results of
+//! `from_le_bytes`-family decodes.  Taint propagates through `let`
+//! bindings and assignments; it is killed by **sanitizers**:
+//!
+//! * a comparison guard whose branch diverges (`if len > CAP
+//!   { return Err(..) }`) or encloses the use (`if len <= CAP
+//!   { .. }`),
+//! * bounding calls — any opaque call result is clean, which covers
+//!   `.min(cap)`, `try_from`, `checked_mul`, `saturating_sub`, and
+//!   `.len()` of in-memory buffers alike,
+//! * `%` (modulo bounds the result by its right operand),
+//! * a `while` condition's negation after the loop exits.
+//!
+//! **Sinks** are allocations (`with_capacity` / `vec![x; n]` /
+//! `reserve` / `resize`), narrowing `as u8/u16/u32` casts, slice
+//! indexing, and `for`/`while` loop bounds.  A tainted value that
+//! went through unchecked `+`/`*` arithmetic and then reaches a sink
+//! is reported as arithmetic instead, since overflow there defeats
+//! any later cap.  Every finding carries the taint chain (source →
+//! intermediate bindings → sink) so the report reads as a dataflow
+//! witness, not a line match.
+//!
+//! The module also hosts the reactor-lifecycle check
+//! ([`reactor_leaks`]): a `Reactor::register` call must not be
+//! followed by an early exit (`?` or `return`) before the function's
+//! next `deregister` — the fd-interest analogue of kill-on-drop.
+
+use std::collections::BTreeMap;
+
+use super::cfg::{
+    self, is_close, is_open, pattern_names, skip_group, text_at, Block,
+    Function, Stmt, Tok, TokKind,
+};
+
+/// Taint attached to one value: the dataflow chain from its source,
+/// plus whether it went through unchecked `+`/`*` arithmetic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Taint {
+    pub chain: Vec<String>,
+    pub arith: bool,
+}
+
+/// Per-path facts: `Some(taint)` = tainted, `None` = proven clean.
+/// Paths absent from the map fall back to the wire-name vocabulary.
+type State = BTreeMap<String, Option<Taint>>;
+
+/// What kind of sink a tainted value reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SinkKind {
+    /// `with_capacity` / `vec![x; n]` / `reserve` / `resize`.
+    Alloc,
+    /// Slice or array indexing.
+    Index,
+    /// `as u8` / `as u16` / `as u32`.
+    Narrow,
+    /// A `for` iterator or `while` condition.
+    LoopBound,
+    /// Unchecked `+`/`*` on tainted lengths reaching any sink above.
+    Arith,
+}
+
+/// One taint finding, positioned at the sink.
+#[derive(Clone, Debug)]
+pub struct TaintFinding {
+    pub line: usize,
+    pub kind: SinkKind,
+    /// Short sink description (`"with_capacity argument"`, ...).
+    pub what: String,
+    /// Source-to-sink dataflow chain, rendered per step.
+    pub chain: Vec<String>,
+}
+
+/// Does `name` read as a wire-shaped count/length/ordinal?  This is
+/// the taint vocabulary: parameters and struct fields with these
+/// names are wire-derived unless the analysis proves otherwise.
+pub fn wire_named(name: &str) -> bool {
+    if name.chars().any(|c| c.is_ascii_uppercase()) {
+        return false; // SCREAMING_CASE caps and type names are not values
+    }
+    matches!(
+        name,
+        "n" | "len" | "count" | "size" | "seq" | "hop" | "rank" | "world"
+    ) || name.starts_with("n_")
+        || name.ends_with("len")
+        || name.ends_with("_count")
+        || name.ends_with("_size")
+        || name.ends_with("_symbols")
+        || name.ends_with("_chunks")
+        || name.ends_with("_shards")
+        || name.ends_with("_scales")
+}
+
+/// Byte-decode constructors whose results are wire-derived.
+fn is_source_call(name: &str) -> bool {
+    matches!(name, "from_le_bytes" | "from_be_bytes" | "from_ne_bytes")
+}
+
+/// Constructor-like calls that pass their argument through
+/// unchanged: enum/tuple-struct constructors (`Some`, `Ok`, ...) and
+/// lossless `From` conversions.
+fn propagates(name: &str) -> bool {
+    name == "from"
+        || name
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_ascii_uppercase())
+}
+
+/// Comparison-shaped tokens that make a condition a range guard.
+fn has_comparison(toks: &[Tok]) -> bool {
+    toks.iter().any(|t| {
+        (t.kind == TokKind::Punct
+            && matches!(
+                t.text.as_str(),
+                "<" | ">" | "<=" | ">=" | "==" | "!="
+            ))
+            || (t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "contains" | "matches"))
+    })
+}
+
+/// Does this `let` initializer start a block expression whose inner
+/// statements carry their own control flow?
+fn is_block_expr(toks: &[Tok]) -> bool {
+    matches!(
+        text_at(toks, 0),
+        "if" | "match" | "loop" | "while" | "unsafe" | "{"
+    )
+}
+
+/// Result of evaluating one expression's token list.
+struct Eval {
+    taint: Option<Taint>,
+    /// Normalized paths read with taint (candidates for guard
+    /// sanitization when the enclosing condition compares them).
+    reads: Vec<String>,
+}
+
+struct Engine {
+    file: String,
+    findings: Vec<TaintFinding>,
+}
+
+/// Read a dotted/pathed term (`a.b.c`, `u32::try_from`, `t.0`)
+/// starting at `i`; returns the segments and the next index.
+fn read_path(toks: &[Tok], mut i: usize) -> (Vec<String>, usize) {
+    let mut segs = Vec::new();
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident || (t.kind == TokKind::Num && !segs.is_empty())
+        {
+            segs.push(t.text.clone());
+            i += 1;
+            let sep = text_at(toks, i);
+            let next_is_seg = toks
+                .get(i + 1)
+                .is_some_and(|u| u.kind == TokKind::Ident || u.kind == TokKind::Num);
+            if (sep == "." || sep == "::") && next_is_seg {
+                i += 1;
+                continue;
+            }
+            break;
+        }
+        break;
+    }
+    (segs, i)
+}
+
+/// The primary-expression tokens immediately before an `as` at
+/// `as_idx` — the cast operand (`(rank + 1) as u32` captures the
+/// whole parenthesized group).
+fn operand_before(toks: &[Tok], as_idx: usize) -> &[Tok] {
+    let mut k = as_idx as isize - 1;
+    while k >= 0 {
+        let t = &toks[k as usize];
+        let txt = t.text.as_str();
+        if is_close(txt) {
+            // Walk back over the whole group.
+            let mut depth = 0isize;
+            let mut moved = false;
+            while k >= 0 {
+                let u = text_at(toks, k as usize);
+                if is_close(u) {
+                    depth += 1;
+                } else if is_open(u) {
+                    depth -= 1;
+                    if depth == 0 {
+                        k -= 1;
+                        moved = true;
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+            if !moved {
+                break;
+            }
+            continue;
+        }
+        if (t.kind == TokKind::Ident
+            && !cfg::KEYWORDS.contains(&txt))
+            || t.kind == TokKind::Num
+            || txt == "."
+            || txt == "::"
+        {
+            k -= 1;
+            continue;
+        }
+        break;
+    }
+    let start = (k + 1).max(0) as usize;
+    &toks[start..as_idx]
+}
+
+impl Engine {
+    fn lookup(&self, st: &State, key: &str, line: usize) -> Option<Taint> {
+        if let Some(v) = st.get(key) {
+            return v.clone();
+        }
+        // A tainted base taints every field under it.
+        let mut p = key;
+        while let Some(cut) = p.rfind('.') {
+            p = &p[..cut];
+            if let Some(Some(t)) = st.get(p) {
+                let mut t = t.clone();
+                if t.chain.len() < 8 {
+                    t.chain.push(format!(
+                        "field `{key}` of tainted `{p}` at {}:{line}",
+                        self.file
+                    ));
+                }
+                return Some(t);
+            }
+        }
+        // Vocabulary fallback: wire-named fields/params are tainted
+        // until a guard or a binding proves otherwise.
+        let last = key.rsplit('.').next().unwrap_or(key);
+        if wire_named(last) {
+            return Some(Taint {
+                chain: vec![format!(
+                    "wire-shaped value `{key}` read at {}:{line}",
+                    self.file
+                )],
+                arith: false,
+            });
+        }
+        None
+    }
+
+    /// Evaluate an expression token list under `st`.
+    fn eval(&self, st: &State, toks: &[Tok]) -> Eval {
+        let mut taint: Option<Taint> = None;
+        let mut reads: Vec<String> = Vec::new();
+        let mut arith = false;
+        let mut modulo = false;
+        let mut checked = false;
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t.kind == TokKind::Ident {
+                let (segs, next) = read_path(toks, i);
+                if segs.is_empty() {
+                    i += 1;
+                    continue;
+                }
+                let last = segs.last().map(String::as_str).unwrap_or("");
+                if text_at(toks, next) == "(" {
+                    let end = skip_group(toks, next);
+                    let inner_end = end.saturating_sub(1);
+                    let inner = if next + 1 <= inner_end {
+                        &toks[next + 1..inner_end]
+                    } else {
+                        &[]
+                    };
+                    if is_source_call(last) {
+                        merge(
+                            &mut taint,
+                            Taint {
+                                chain: vec![format!(
+                                    "decoded via `{last}` at {}:{}",
+                                    self.file, t.line
+                                )],
+                                arith: false,
+                            },
+                        );
+                    } else if propagates(last) {
+                        let sub = self.eval(st, inner);
+                        if let Some(tn) = sub.taint {
+                            merge(&mut taint, tn);
+                        }
+                        reads.extend(sub.reads);
+                    } else {
+                        // Opaque or bounding call: result is clean.
+                        // A postfix method (`(..).min(cap)`) consumes
+                        // the receiver's accumulated taint too.
+                        if i > 0 && toks[i - 1].is(".") {
+                            taint = None;
+                            arith = false;
+                        }
+                        if last.starts_with("checked_")
+                            || last.starts_with("saturating_")
+                        {
+                            checked = true;
+                        }
+                    }
+                    i = end;
+                    continue;
+                }
+                if text_at(toks, next) == "!" {
+                    // Macro invocation: its body is scanned for
+                    // sinks elsewhere; the value is opaque here.
+                    let after = next + 1;
+                    if is_open(text_at(toks, after)) {
+                        i = skip_group(toks, after);
+                    } else {
+                        i = after;
+                    }
+                    continue;
+                }
+                // A path followed by a single `:` is a struct-literal
+                // field name or ascription, not a value read.
+                if text_at(toks, next) == ":" {
+                    i = next + 1;
+                    continue;
+                }
+                let key = segs.join(".");
+                if let Some(tn) = self.lookup(st, &key, t.line) {
+                    if !reads.contains(&key) {
+                        reads.push(key.clone());
+                    }
+                    merge(&mut taint, tn);
+                }
+                i = next;
+                continue;
+            }
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "%" => modulo = true,
+                    "+" | "*" => {
+                        // Binary only: a primary must end just left.
+                        if i > 0 {
+                            let p = &toks[i - 1];
+                            if p.kind == TokKind::Ident
+                                || p.kind == TokKind::Num
+                                || is_close(&p.text)
+                            {
+                                arith = true;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        if modulo {
+            // `x % bound` is bounded by construction.
+            return Eval { taint: None, reads };
+        }
+        if let Some(tn) = taint.as_mut() {
+            if arith && !checked {
+                tn.arith = true;
+            }
+        }
+        Eval { taint, reads }
+    }
+
+    fn bind(
+        &self,
+        st: &mut State,
+        names: &[String],
+        taint: &Option<Taint>,
+        line: usize,
+    ) {
+        for n in names {
+            let v = taint.clone().map(|mut t| {
+                if t.chain.len() < 8 {
+                    t.chain.push(format!(
+                        "flows into `{n}` at {}:{line}",
+                        self.file
+                    ));
+                }
+                t
+            });
+            st.insert(n.clone(), v);
+        }
+    }
+
+    fn sanitize(&self, st: &mut State, paths: &[String]) {
+        for p in paths {
+            st.insert(p.clone(), None);
+        }
+    }
+
+    fn sink(
+        &mut self,
+        st: &State,
+        toks: &[Tok],
+        kind: SinkKind,
+        line: usize,
+        what: &str,
+    ) {
+        let ev = self.eval(st, toks);
+        if let Some(t) = ev.taint {
+            let kind = if t.arith && kind != SinkKind::LoopBound {
+                SinkKind::Arith
+            } else {
+                kind
+            };
+            self.findings.push(TaintFinding {
+                line,
+                kind,
+                what: what.to_string(),
+                chain: t.chain,
+            });
+        }
+    }
+
+    /// Scan a flat token list for sinks (allocations, narrowing
+    /// casts, indexing) and report the tainted ones.
+    fn check_sinks(&mut self, st: &State, toks: &[Tok]) {
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t.kind == TokKind::Ident
+                && t.is("vec")
+                && text_at(toks, i + 1) == "!"
+                && text_at(toks, i + 2) == "["
+            {
+                let end = skip_group(toks, i + 2);
+                let inner_end = end.saturating_sub(1);
+                let inner = if i + 3 <= inner_end {
+                    &toks[i + 3..inner_end]
+                } else {
+                    &[]
+                };
+                // `vec![elem; len]`: only the length is a sink.
+                let mut depth = 0isize;
+                let mut semi = None;
+                for (k, u) in inner.iter().enumerate() {
+                    if is_open(&u.text) {
+                        depth += 1;
+                    } else if is_close(&u.text) {
+                        depth -= 1;
+                    } else if u.is(";") && depth == 0 {
+                        semi = Some(k);
+                    }
+                }
+                if let Some(k) = semi {
+                    self.sink(
+                        st,
+                        &inner[k + 1..],
+                        SinkKind::Alloc,
+                        t.line,
+                        "vec! length",
+                    );
+                }
+                i = end;
+                continue;
+            }
+            if t.kind == TokKind::Ident
+                && matches!(
+                    t.text.as_str(),
+                    "with_capacity" | "reserve" | "reserve_exact" | "resize"
+                )
+                && text_at(toks, i + 1) == "("
+            {
+                let end = skip_group(toks, i + 1);
+                let inner_end = end.saturating_sub(1);
+                let inner = if i + 2 <= inner_end {
+                    &toks[i + 2..inner_end]
+                } else {
+                    &[]
+                };
+                // For `resize(len, fill)` only the length matters.
+                let mut arg = inner;
+                if t.is("resize") {
+                    let mut depth = 0isize;
+                    for (k, u) in inner.iter().enumerate() {
+                        if is_open(&u.text) {
+                            depth += 1;
+                        } else if is_close(&u.text) {
+                            depth -= 1;
+                        } else if u.is(",") && depth == 0 {
+                            arg = &inner[..k];
+                            break;
+                        }
+                    }
+                }
+                let what = format!("`{}` argument", t.text);
+                self.sink(st, arg, SinkKind::Alloc, t.line, &what);
+                i = end;
+                continue;
+            }
+            if t.kind == TokKind::Ident && t.is("as") {
+                let target = text_at(toks, i + 1);
+                if matches!(target, "u8" | "u16" | "u32") {
+                    let operand = operand_before(toks, i);
+                    let what = format!("`as {target}` cast");
+                    self.sink(st, operand, SinkKind::Narrow, t.line, &what);
+                    i += 2;
+                    continue;
+                }
+            }
+            if t.is("[") && i > 0 {
+                let p = &toks[i - 1];
+                let indexable = (p.kind == TokKind::Ident
+                    && !cfg::KEYWORDS.contains(&p.text.as_str()))
+                    || p.is(")")
+                    || p.is("]");
+                if indexable {
+                    let end = skip_group(toks, i);
+                    let inner_end = end.saturating_sub(1);
+                    if i + 1 <= inner_end {
+                        self.sink(
+                            st,
+                            &toks[i + 1..inner_end],
+                            SinkKind::Index,
+                            t.line,
+                            "slice index",
+                        );
+                    }
+                }
+                // Fall through so nested groups are scanned too.
+            }
+            i += 1;
+        }
+    }
+
+    fn run_block(&mut self, b: &Block, st: &mut State) -> bool {
+        let mut diverged = false;
+        for s in &b.stmts {
+            if diverged {
+                break; // unreachable
+            }
+            diverged = self.run_stmt(s, st);
+        }
+        diverged
+    }
+
+    fn run_stmt(&mut self, s: &Stmt, st: &mut State) -> bool {
+        match s {
+            Stmt::Let { names, rhs, else_block, line } => {
+                if is_block_expr(rhs) {
+                    // `let x = match .. { .. }` / `= if .. { .. }` /
+                    // `= loop { .. }`: run the initializer
+                    // structurally so arm-local guards reach their
+                    // sinks, instead of scanning it as flat tokens.
+                    let stmts = cfg::parse_stmts(rhs);
+                    let mut sub = st.clone();
+                    let mut diverged = false;
+                    for s in &stmts {
+                        if diverged {
+                            break;
+                        }
+                        diverged = self.run_stmt(s, &mut sub);
+                    }
+                    *st = join(st, &sub);
+                    let ev = self.eval(st, rhs);
+                    self.bind(st, names, &ev.taint, *line);
+                    return false;
+                }
+                self.check_sinks(st, rhs);
+                let ev = self.eval(st, rhs);
+                if let Some(eb) = else_block {
+                    // The else block diverges by language rule; run
+                    // it for its own sinks under the pre-state.
+                    let mut est = st.clone();
+                    let _ = self.run_block(eb, &mut est);
+                }
+                self.bind(st, names, &ev.taint, *line);
+                false
+            }
+            Stmt::Assign { lhs, op, rhs, line } => {
+                self.check_sinks(st, lhs);
+                self.check_sinks(st, rhs);
+                let ev = self.eval(st, rhs);
+                if let Some(key) = place_key(lhs) {
+                    let merged = if op == "=" {
+                        ev.taint.clone()
+                    } else {
+                        // Compound assignment keeps existing taint.
+                        let cur = self.lookup(st, &key, *line);
+                        let arith_op =
+                            matches!(op.as_str(), "+=" | "*=" | "<<=");
+                        match (cur, ev.taint.clone()) {
+                            (None, None) => None,
+                            (a, b) => {
+                                let mut t = a.or(b).unwrap_or(Taint {
+                                    chain: Vec::new(),
+                                    arith: false,
+                                });
+                                if arith_op {
+                                    t.arith = true;
+                                }
+                                Some(t)
+                            }
+                        }
+                    };
+                    self.bind(st, &[key], &merged, *line);
+                }
+                false
+            }
+            Stmt::If { cond, then_block, else_block, line } => {
+                let (binders, cexpr) = split_let(cond);
+                self.check_sinks(st, cexpr);
+                let ev = self.eval(st, cexpr);
+                let guard = has_comparison(cexpr);
+                let mut then_st = st.clone();
+                if guard {
+                    self.sanitize(&mut then_st, &ev.reads);
+                }
+                self.bind(&mut then_st, &binders, &ev.taint, *line);
+                let then_div = self.run_block(then_block, &mut then_st);
+                match else_block {
+                    Some(eb) => {
+                        let mut else_st = st.clone();
+                        let else_div = self.run_block(eb, &mut else_st);
+                        match (then_div, else_div) {
+                            (true, true) => true,
+                            (true, false) => {
+                                *st = else_st;
+                                false
+                            }
+                            (false, true) => {
+                                *st = then_st;
+                                false
+                            }
+                            (false, false) => {
+                                *st = join(&then_st, &else_st);
+                                false
+                            }
+                        }
+                    }
+                    None => {
+                        if then_div {
+                            // `if bad { return Err }`: the
+                            // fall-through is the sanitized world.
+                            if guard {
+                                self.sanitize(st, &ev.reads);
+                            }
+                        } else {
+                            *st = join(st, &then_st);
+                        }
+                        false
+                    }
+                }
+            }
+            Stmt::While { cond, body, line } => {
+                let (binders, cexpr) = split_let(cond);
+                self.check_sinks(st, cexpr);
+                let ev = self.eval(st, cexpr);
+                if binders.is_empty() {
+                    if let Some(t) = &ev.taint {
+                        self.findings.push(TaintFinding {
+                            line: *line,
+                            kind: SinkKind::LoopBound,
+                            what: "`while` bound".to_string(),
+                            chain: t.chain.clone(),
+                        });
+                    }
+                }
+                let mut body_st = st.clone();
+                self.bind(&mut body_st, &binders, &ev.taint, *line);
+                let _ = self.run_block(body, &mut body_st);
+                *st = join(st, &body_st);
+                // On exit the condition is false: its compared
+                // paths are bounded (`while len > CAP { shrink }`).
+                if has_comparison(cexpr) {
+                    self.sanitize(st, &ev.reads);
+                }
+                false
+            }
+            Stmt::For { names, iter, body, line } => {
+                self.check_sinks(st, iter);
+                let ev = self.eval(st, iter);
+                if let Some(t) = &ev.taint {
+                    self.findings.push(TaintFinding {
+                        line: *line,
+                        kind: SinkKind::LoopBound,
+                        what: "`for` iterator bound".to_string(),
+                        chain: t.chain.clone(),
+                    });
+                }
+                let mut body_st = st.clone();
+                self.bind(&mut body_st, names, &ev.taint, *line);
+                let _ = self.run_block(body, &mut body_st);
+                *st = join(st, &body_st);
+                false
+            }
+            Stmt::Loop { body, .. } => {
+                let mut body_st = st.clone();
+                let _ = self.run_block(body, &mut body_st);
+                *st = join(st, &body_st);
+                false
+            }
+            Stmt::Match { scrutinee, arms, line } => {
+                self.check_sinks(st, scrutinee);
+                let ev = self.eval(st, scrutinee);
+                let mut exits: Vec<State> = Vec::new();
+                let mut all_div = !arms.is_empty();
+                for (binders, blk) in arms {
+                    let mut s = st.clone();
+                    self.bind(&mut s, binders, &ev.taint, *line);
+                    let d = self.run_block(blk, &mut s);
+                    if !d {
+                        exits.push(s);
+                        all_div = false;
+                    }
+                }
+                if let Some((first, rest)) = exits.split_first() {
+                    let mut j = first.clone();
+                    for s in rest {
+                        j = join(&j, s);
+                    }
+                    *st = j;
+                }
+                all_div
+            }
+            Stmt::Return { value, .. } => {
+                self.check_sinks(st, value);
+                true
+            }
+            Stmt::Break { .. } | Stmt::Continue { .. } => true,
+            Stmt::BlockStmt { body, .. } => self.run_block(body, st),
+            Stmt::Expr { toks, .. } => {
+                self.check_sinks(st, toks);
+                false
+            }
+        }
+    }
+}
+
+fn merge(dst: &mut Option<Taint>, src: Taint) {
+    match dst {
+        None => *dst = Some(src),
+        Some(d) => d.arith |= src.arith, // keep the first chain
+    }
+}
+
+fn join(a: &State, b: &State) -> State {
+    let mut out = a.clone();
+    for (k, v) in b {
+        match (out.get(k), v) {
+            // Tainted on either branch stays tainted.
+            (Some(Some(_)), _) => {}
+            (_, Some(t)) => {
+                out.insert(k.clone(), Some(t.clone()));
+            }
+            (Some(None), None) => {}
+            (None, None) => {
+                out.insert(k.clone(), None);
+            }
+        }
+    }
+    out
+}
+
+/// `if let PAT = EXPR` / `while let PAT = EXPR`: pattern binders and
+/// the scrutinee expression; plain conditions bind nothing.
+fn split_let(cond: &[Tok]) -> (Vec<String>, &[Tok]) {
+    if text_at(cond, 0) != "let" {
+        return (Vec::new(), cond);
+    }
+    let mut depth = 0isize;
+    for (k, t) in cond.iter().enumerate().skip(1) {
+        if is_open(&t.text) {
+            depth += 1;
+        } else if is_close(&t.text) {
+            depth -= 1;
+        } else if t.is("=") && depth == 0 {
+            return (pattern_names(&cond[1..k]), &cond[k + 1..]);
+        }
+    }
+    (Vec::new(), cond)
+}
+
+/// A pure assignable path (`x`, `self.a.b`) as a state key; complex
+/// places (`arr[i]`, `*p`) return `None` and only get sink-checked.
+fn place_key(lhs: &[Tok]) -> Option<String> {
+    let mut segs = Vec::new();
+    for (k, t) in lhs.iter().enumerate() {
+        if t.kind == TokKind::Ident || (t.kind == TokKind::Num && k > 0) {
+            segs.push(t.text.clone());
+        } else if t.is(".") || t.is("::") {
+            continue;
+        } else {
+            return None;
+        }
+    }
+    if segs.is_empty() {
+        None
+    } else {
+        Some(segs.join("."))
+    }
+}
+
+/// Analyze one function; returns findings positioned at their sinks.
+pub fn analyze_fn(file: &str, func: &Function) -> Vec<TaintFinding> {
+    let mut eng =
+        Engine { file: file.to_string(), findings: Vec::new() };
+    let mut st = State::new();
+    for p in &func.params {
+        if p != "self" && wire_named(p) {
+            st.insert(
+                p.clone(),
+                Some(Taint {
+                    chain: vec![format!(
+                        "wire-shaped parameter `{p}` of `{}` at {file}:{}",
+                        func.name, func.line
+                    )],
+                    arith: false,
+                }),
+            );
+        } else {
+            st.insert(p.clone(), None);
+        }
+    }
+    let _ = eng.run_block(&func.body, &mut st);
+    eng.findings
+}
+
+// ---------------------------------------------------------------
+// Reactor interest lifecycle
+// ---------------------------------------------------------------
+
+/// One fd-interest leak: a `register` that can exit early before the
+/// function's next `deregister`.
+#[derive(Clone, Debug)]
+pub struct LeakFinding {
+    pub reg_line: usize,
+    pub exit_line: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Reg(usize),
+    Dereg(usize),
+    Exit(usize),
+}
+
+fn has_method_call(toks: &[Tok], name: &str) -> bool {
+    toks.windows(3).any(|w| {
+        w[0].is(".") && w[1].is(name) && w[1].kind == TokKind::Ident
+            && w[2].is("(")
+    })
+}
+
+fn note_head(toks: &[Tok], line: usize, evs: &mut Vec<Ev>, suppress: bool) {
+    let reg = has_method_call(toks, "register");
+    if reg {
+        evs.push(Ev::Reg(line));
+    }
+    if has_method_call(toks, "deregister") {
+        evs.push(Ev::Dereg(line));
+    }
+    // A `?` on the register's own statement is its own error path,
+    // not a leak of the (never-completed) registration.
+    if !suppress && !reg {
+        if let Some(q) = toks.iter().find(|t| t.is("?")) {
+            evs.push(Ev::Exit(q.line));
+        }
+    }
+}
+
+fn collect_events(b: &Block, evs: &mut Vec<Ev>, suppress: bool) {
+    for s in &b.stmts {
+        match s {
+            Stmt::Let { rhs, else_block, line, .. } => {
+                note_head(rhs, *line, evs, suppress);
+                if let Some(eb) = else_block {
+                    collect_events(eb, evs, suppress);
+                }
+            }
+            Stmt::Assign { lhs, rhs, line, .. } => {
+                let mut all = lhs.clone();
+                all.extend(rhs.iter().cloned());
+                note_head(&all, *line, evs, suppress);
+            }
+            Stmt::If { cond, then_block, else_block, line } => {
+                let reg_in_cond = has_method_call(cond, "register");
+                note_head(cond, *line, evs, suppress);
+                // Branches of `if reactor.register(..).is_err()` are
+                // the register's own error handling.
+                let sub = suppress || reg_in_cond;
+                collect_events(then_block, evs, sub);
+                if let Some(eb) = else_block {
+                    collect_events(eb, evs, sub);
+                }
+            }
+            Stmt::While { cond, body, line } => {
+                note_head(cond, *line, evs, suppress);
+                collect_events(body, evs, suppress);
+            }
+            Stmt::For { iter, body, line, .. } => {
+                note_head(iter, *line, evs, suppress);
+                collect_events(body, evs, suppress);
+            }
+            Stmt::Loop { body, .. } | Stmt::BlockStmt { body, .. } => {
+                collect_events(body, evs, suppress);
+            }
+            Stmt::Match { scrutinee, arms, line } => {
+                note_head(scrutinee, *line, evs, suppress);
+                for (_, blk) in arms {
+                    collect_events(blk, evs, suppress);
+                }
+            }
+            Stmt::Return { value, line } => {
+                note_head(value, *line, evs, suppress);
+                if !suppress {
+                    evs.push(Ev::Exit(*line));
+                }
+            }
+            Stmt::Break { .. } | Stmt::Continue { .. } => {}
+            Stmt::Expr { toks, line } => {
+                note_head(toks, *line, evs, suppress);
+            }
+        }
+    }
+}
+
+/// Find `register` calls that can leak fd interest: an early exit
+/// (`?` / `return`) strictly between the `register` and the
+/// function's next `deregister`.  A function with no `deregister`
+/// after a `register` transfers ownership (the reactor outlives the
+/// call) and is not flagged.
+pub fn reactor_leaks(func: &Function) -> Vec<LeakFinding> {
+    let mut evs = Vec::new();
+    collect_events(&func.body, &mut evs, false);
+    let mut out = Vec::new();
+    for (i, e) in evs.iter().enumerate() {
+        let Ev::Reg(reg_line) = e else { continue };
+        let Some(off) = evs[i + 1..]
+            .iter()
+            .position(|x| matches!(x, Ev::Dereg(_)))
+        else {
+            continue;
+        };
+        for x in &evs[i + 1..i + 1 + off] {
+            if let Ev::Exit(exit_line) = x {
+                out.push(LeakFinding {
+                    reg_line: *reg_line,
+                    exit_line: *exit_line,
+                });
+                break; // first leaking exit per register is enough
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer;
+
+    fn taint_of(src: &str) -> Vec<TaintFinding> {
+        let fns = cfg::parse_functions(&lexer::strip(src).code);
+        let mut out = Vec::new();
+        for f in &fns {
+            out.extend(analyze_fn("src/x.rs", f));
+        }
+        out
+    }
+
+    fn leaks_of(src: &str) -> Vec<LeakFinding> {
+        let fns = cfg::parse_functions(&lexer::strip(src).code);
+        let mut out = Vec::new();
+        for f in &fns {
+            out.extend(reactor_leaks(f));
+        }
+        out
+    }
+
+    #[test]
+    fn wire_vocabulary_matches_protocol_names() {
+        for name in
+            ["n", "payload_len", "n_symbols", "header_len", "world", "dlen"]
+        {
+            assert!(wire_named(name), "{name} should be wire-shaped");
+        }
+        for name in ["out", "buf", "codec", "reactor", "payload"] {
+            assert!(!wire_named(name), "{name} should be neutral");
+        }
+    }
+
+    #[test]
+    fn guard_on_the_wrong_variable_no_longer_suppresses() {
+        // PR 6's text heuristic accepted this: the guard line
+        // mentions `hdr`, which is also a path segment of the
+        // allocation expression.  Flow facts see through it.
+        let src = "\
+fn f(&self) -> Vec<u8> {
+    if self.hdr.n_scales > MAX_SCALES {
+        return Vec::new();
+    }
+    vec![0u8; self.hdr.payload_len]
+}
+";
+        let f = taint_of(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::Alloc);
+        assert_eq!(f[0].line, 5);
+        let chain = f[0].chain.join(" -> ");
+        assert!(chain.contains("self.hdr.payload_len"), "{chain}");
+    }
+
+    #[test]
+    fn guard_on_the_right_variable_sanitizes() {
+        let src = "\
+fn f(&self) -> Vec<u8> {
+    if self.hdr.payload_len > MAX_PAYLOAD {
+        return Vec::new();
+    }
+    vec![0u8; self.hdr.payload_len]
+}
+";
+        assert!(taint_of(src).is_empty());
+    }
+
+    #[test]
+    fn enclosing_guard_sanitizes_the_then_branch() {
+        let src = "\
+fn f(len: usize) -> Vec<u8> {
+    if len <= MAX_BODY {
+        return vec![0u8; len];
+    }
+    Vec::new()
+}
+";
+        assert!(taint_of(src).is_empty());
+    }
+
+    #[test]
+    fn tainted_loop_bound_is_flagged_and_guard_sanitizes() {
+        let bad = "\
+fn f(n_chunks: usize) {
+    for _ in 0..n_chunks {
+        step();
+    }
+}
+";
+        let f = taint_of(bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::LoopBound);
+        assert_eq!(f[0].line, 2);
+
+        let good = "\
+fn f(n_chunks: usize) -> Result<(), String> {
+    if n_chunks > MAX_CHUNKS {
+        return Err(\"cap\".into());
+    }
+    for _ in 0..n_chunks {
+        step();
+    }
+    Ok(())
+}
+";
+        assert!(taint_of(good).is_empty());
+    }
+
+    #[test]
+    fn tainted_while_bound_is_flagged() {
+        let src = "\
+fn f(mut n: usize) {
+    while n > 0 {
+        n -= 1;
+    }
+}
+";
+        let f = taint_of(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::LoopBound);
+    }
+
+    #[test]
+    fn tainted_length_arithmetic_is_flagged_at_the_sink() {
+        let src = "\
+fn f(n_rows: usize, row_len: usize, out: &mut Vec<u8>) {
+    let total = n_rows * row_len;
+    out.reserve(total);
+}
+";
+        let f = taint_of(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::Arith);
+        assert_eq!(f[0].line, 3);
+        let chain = f[0].chain.join(" -> ");
+        assert!(chain.contains("total"), "{chain}");
+    }
+
+    #[test]
+    fn checked_arithmetic_is_clean() {
+        let src = "\
+fn f(n_rows: usize, row_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    let total = n_rows
+        .checked_mul(row_len)
+        .ok_or(\"overflow\")?;
+    if total > MAX_TOTAL {
+        return Err(\"cap\".into());
+    }
+    out.reserve(total);
+    Ok(())
+}
+";
+        assert!(taint_of(src).is_empty());
+    }
+
+    #[test]
+    fn from_le_bytes_is_a_source_and_min_is_a_sanitizer() {
+        let bad = "\
+fn f(b: [u8; 4]) -> Vec<u8> {
+    let want = u32::from_le_bytes(b) as usize;
+    Vec::with_capacity(want)
+}
+";
+        let f = taint_of(bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::Alloc);
+        assert!(f[0].chain.join(" ").contains("from_le_bytes"));
+
+        let good = "\
+fn f(b: [u8; 4]) -> Vec<u8> {
+    let want = (u32::from_le_bytes(b) as usize).min(MAX_WANT);
+    Vec::with_capacity(want)
+}
+";
+        assert!(taint_of(good).is_empty());
+    }
+
+    #[test]
+    fn modulo_bounds_the_result() {
+        let src = "\
+fn f(rank: usize, world: usize, table: &[u8]) -> u8 {
+    table[(rank + 1) % world]
+}
+";
+        assert!(taint_of(src).is_empty());
+    }
+
+    #[test]
+    fn tainted_slice_index_is_flagged() {
+        let src = "\
+fn f(idx_len: usize, table: &[u8]) -> u8 {
+    table[idx_len]
+}
+";
+        let f = taint_of(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::Index);
+    }
+
+    #[test]
+    fn while_negation_sanitizes_after_the_loop() {
+        // The encode_ack idiom: shrink until under the cap, then
+        // allocate by the now-bounded length.
+        let src = "\
+fn f(mut msg_len: usize, out: &mut Vec<u8>) {
+    while msg_len > MAX_ACK {
+        msg_len = shrink(msg_len);
+    }
+    out.reserve(msg_len);
+}
+";
+        let f = taint_of(src);
+        // The `while` itself flags the tainted bound; the reserve
+        // after the loop must NOT flag.
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::LoopBound);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn opaque_call_results_are_clean() {
+        let src = "\
+fn f(chunks: &[Chunk]) -> Vec<u8> {
+    let total = chunks.iter().map(len_of).sum();
+    Vec::with_capacity(total)
+}
+";
+        assert!(taint_of(src).is_empty());
+    }
+
+    #[test]
+    fn guard_inside_a_match_arm_initializer_sanitizes() {
+        // The serve handle_frame shape: the sink lives inside a
+        // match arm that is itself a `let` initializer.  The arm's
+        // own guard must reach it.
+        let src = "\
+fn f(&self) -> Result<(Vec<u8>, usize), String> {
+    let (payload, n) = match self.op {
+        Op::Fill => {
+            let n = self.msg.n_symbols;
+            if n > MAX_CHUNK {
+                return Err(\"cap\".into());
+            }
+            (vec![0u8; n], n)
+        }
+        Op::Echo => (Vec::new(), 0),
+    };
+    Ok((payload, n))
+}
+";
+        assert!(taint_of(src).is_empty());
+
+        let unguarded = "\
+fn f(&self) -> Vec<u8> {
+    let out = match self.op {
+        Op::Fill => vec![0u8; self.msg.n_symbols],
+        Op::Echo => Vec::new(),
+    };
+    out
+}
+";
+        let f = taint_of(unguarded);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].kind, SinkKind::Alloc);
+    }
+
+    #[test]
+    fn loop_expression_initializer_is_run_structurally() {
+        // The client handshake shape: `let ack = loop { .. }` where
+        // the slice bound is a Read::read return, proven clean by
+        // the inner `let` binding — not a flat-token vocabulary hit.
+        let src = "\
+fn f(stream: &mut S, inbuf: &mut Vec<u8>) {
+    let ack = loop {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break None;
+        }
+        inbuf.extend_from_slice(&chunk[..n]);
+    };
+}
+";
+        assert!(taint_of(src).is_empty());
+    }
+
+    #[test]
+    fn register_then_early_exit_before_deregister_leaks() {
+        let src = "\
+fn open(&mut self, fd: i32) -> Result<(), String> {
+    self.reactor.register(fd, 0, READABLE)?;
+    self.probe()?;
+    self.reactor.deregister(fd)?;
+    Ok(())
+}
+";
+        let l = leaks_of(src);
+        assert_eq!(l.len(), 1, "{l:?}");
+        assert_eq!(l[0].reg_line, 2);
+        assert_eq!(l[0].exit_line, 3);
+    }
+
+    #[test]
+    fn balanced_register_paths_are_clean() {
+        let src = "\
+fn open(&mut self, fd: i32) -> Result<(), String> {
+    self.reactor.register(fd, 0, READABLE)?;
+    if self.probe().is_err() {
+        let _ = self.reactor.deregister(fd);
+        return Err(\"probe\".into());
+    }
+    self.reactor.deregister(fd)?;
+    Ok(())
+}
+";
+        assert!(leaks_of(src).is_empty());
+    }
+
+    #[test]
+    fn ownership_transfer_without_deregister_is_clean() {
+        // The `bind`/`connect` pattern: the registration outlives
+        // the constructor; no deregister exists in this scope.
+        let src = "\
+fn connect(addr: &str) -> Result<Client, String> {
+    let reactor = new_reactor()?;
+    reactor.register(fd, 0, READABLE)?;
+    Ok(Client { reactor })
+}
+";
+        assert!(leaks_of(src).is_empty());
+    }
+
+    #[test]
+    fn register_inside_its_own_error_check_is_clean() {
+        // The accept-loop pattern: the `if` branch handles the
+        // failed registration itself.
+        let src = "\
+fn accept_ready(&mut self) -> Result<(), String> {
+    loop {
+        if self.reactor.register(fd, tok, READABLE).is_err() {
+            continue;
+        }
+        self.conns.push(fd);
+        self.reactor.deregister(fd)?;
+    }
+}
+";
+        assert!(leaks_of(src).is_empty());
+    }
+}

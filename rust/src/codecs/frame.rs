@@ -812,6 +812,8 @@ impl ShardManifest {
         out.extend_from_slice(&(self.header.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.header);
         out.extend_from_slice(&(self.shard_symbols.len() as u32).to_le_bytes());
+        // lint: loop-capped(iterates the in-memory shard table; the
+        // bound is the Vec's own length, not a wire value)
         for &n in &self.shard_symbols {
             out.extend_from_slice(&n.to_le_bytes());
         }
@@ -957,6 +959,8 @@ pub fn compress_sharded(
                 // lint: cast-checked(plan.len() <= u32::MAX is enforced
                 // above, and every index is < plan.len())
                 desc.index as u32,
+                // lint: arith-checked(plan_shards derives every range
+                // from symbols.len(): start + n_symbols <= len)
                 &symbols[desc.start..desc.start + desc.n_symbols],
                 &serial,
             )?;

@@ -104,7 +104,7 @@ pub fn to_json(codec: &QlcCodec) -> Json {
                     format!(
                         "{}-{}",
                         scheme.base_rank(i),
-                        scheme.base_rank(i) + a.size as u32 - 1
+                        scheme.base_rank(i) + u32::from(a.size) - 1
                     ),
                 )
         })

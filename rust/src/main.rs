@@ -47,8 +47,8 @@ const VALUE_OPTS: &[&str] = &[
     "size", "bandwidth-gbps", "latency-us", "fabric", "shards", "out",
     "artifacts", "steps", "chunk", "queue", "target-entropy", "knob", "dir",
     "name", "prefix", "rank", "world", "listen", "connect", "timeout-s",
-    "decode", "encode", "src", "baseline", "trace", "metrics", "reactor",
-    "max-requests", "max-conns", "streams", "requests",
+    "decode", "encode", "src", "baseline", "explain", "trace", "metrics",
+    "reactor", "max-requests", "max-conns", "streams", "requests",
 ];
 
 fn main() -> ExitCode {
@@ -99,12 +99,19 @@ USAGE: qlc <subcommand> [options]
 
   tables     [--fig N | --table N | --all] [--seed S] [--scale K] [--json]
   analyze    [--src DIR] [--baseline FILE] [--update-baseline] [--deny-new]
-             (dependency-free invariant linter over the crate source:
-              unchecked-narrowing, cap-before-alloc, panic-free,
-              safety-comment, forbidden-construct; prints
-              file:line: rule: message and exits non-zero on findings
-              not grandfathered by the baseline — failing on new
-              findings is the default, --deny-new names it for CI)
+             [--deny-stale] [--json] [--explain RULE|all]
+             (dependency-free dataflow linter over the crate source:
+              taint from wire reads to allocation/cast/index/loop
+              sinks plus reactor lifecycle — unchecked-narrowing,
+              cap-before-alloc, panic-free, safety-comment,
+              forbidden-construct, tainted-loop-bound,
+              tainted-length-arith, reactor-interest-leak; prints
+              file:line: rule: message with the source-to-sink taint
+              chain and exits non-zero on findings not grandfathered
+              by the baseline.  Stale baseline entries warn by
+              default and fail under --deny-stale; --json emits the
+              machine-readable report; --explain RULE prints a
+              rule's contract, waiver syntax, and worked example)
   entropy    [--kind ffn1_act|ffn2_act|weight|wgrad|agrad] [--n SYMBOLS]
              [--dir TRACES --name NAME] [--json]
   compress   <in> <out> --codec raw|huffman|qlc|qlc-t1|qlc-t2|elias-*|egK
@@ -237,6 +244,9 @@ fn load_symbols(args: &Args) -> Result<(String, Vec<u8>), String> {
 
 fn cmd_analyze(args: &Args) -> Result<(), String> {
     use qlc::analysis::{self, baseline};
+    if let Some(which) = args.opt("explain") {
+        return explain_rules(which);
+    }
     let src = match args.opt("src") {
         Some(dir) => PathBuf::from(dir),
         None => ["src", "rust/src"]
@@ -271,15 +281,36 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
         Err(_) => Default::default(),
     };
     let (fresh, grandfathered) = baseline::split(&findings, &known);
-    for f in &fresh {
-        println!("{}", f.render());
+    let stale = baseline::stale(&findings, &known);
+    if args.has_flag("json") {
+        println!(
+            "{}",
+            analysis::json_report(&findings, &known).to_string_pretty()
+        );
+    } else {
+        for f in &fresh {
+            println!("{}", f.render());
+        }
+        println!(
+            "qlc analyze: {} file finding(s), {} baselined, {} new",
+            findings.len(),
+            grandfathered.len(),
+            fresh.len()
+        );
     }
-    println!(
-        "qlc analyze: {} file finding(s), {} baselined, {} new",
-        findings.len(),
-        grandfathered.len(),
-        fresh.len()
-    );
+    for entry in &stale {
+        eprintln!(
+            "warning: stale baseline entry (no matching finding): {entry}"
+        );
+    }
+    if args.has_flag("deny-stale") && !stale.is_empty() {
+        return Err(format!(
+            "{} stale baseline entr{}; prune them or regenerate with \
+             --update-baseline",
+            stale.len(),
+            if stale.len() == 1 { "y" } else { "ies" }
+        ));
+    }
     if fresh.is_empty() {
         Ok(())
     } else {
@@ -289,6 +320,37 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
             fresh.len()
         ))
     }
+}
+
+/// `qlc analyze --explain <rule|all>`: print each rule's contract,
+/// waiver syntax, and a worked example.
+fn explain_rules(which: &str) -> Result<(), String> {
+    use qlc::analysis::rules::RULES;
+    let selected: Vec<_> = if which == "all" {
+        RULES.iter().collect()
+    } else {
+        RULES.iter().filter(|r| r.name == which).collect()
+    };
+    if selected.is_empty() {
+        return Err(format!(
+            "unknown rule '{which}'; known rules: {}",
+            RULES
+                .iter()
+                .map(|r| r.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+    }
+    for (i, r) in selected.iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        println!("{}", r.name);
+        println!("  contract: {}", r.contract);
+        println!("  waiver:   {}", r.waiver);
+        println!("  example:  {}", r.example.replace('\n', "\n    "));
+    }
+    Ok(())
 }
 
 fn cmd_entropy(args: &Args) -> Result<(), String> {

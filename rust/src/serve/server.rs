@@ -533,8 +533,14 @@ impl Server {
             }
             Op::Decompress => {
                 let n = frame.msg.n_symbols;
-                // The tracker capped n at MAX_CHUNK_SYMBOLS, so this
-                // allocation is bounded per chunk.
+                // The tracker already rejects oversized chunks;
+                // re-check at the allocation so the bound is local.
+                if n > serve_wire::MAX_CHUNK_SYMBOLS {
+                    return Err(format!(
+                        "decompress chunk declares {n} symbols (cap {})",
+                        serve_wire::MAX_CHUNK_SYMBOLS
+                    ));
+                }
                 let mut out = vec![0u8; n];
                 sessions
                     .dec

@@ -207,8 +207,14 @@ fn gather_roster(
     world: usize,
     timeout: Duration,
 ) -> Result<Vec<String>, String> {
-    // lint: cap-checked(form_ring rejects world > u32::MAX before the
-    // roster starts; a launcher-chosen world is not hostile input)
+    // form_ring validates world before calling us, but the roster is
+    // the trust boundary: re-check here so every allocation, loop and
+    // header cast below is locally bounded.
+    if world < 2 || world > u32::MAX as usize {
+        return Err(format!(
+            "rendezvous: world {world} out of range for QRZ1 headers"
+        ));
+    }
     let mut addrs: Vec<Option<String>> = vec![None; world];
     addrs[0] = advertised;
     let mut peers: Vec<TcpStream> = Vec::with_capacity(world - 1);

@@ -467,6 +467,285 @@ fn analyze_flags_seeded_violations_and_baseline_grandfathers() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// The v2 acceptance shapes: a cap check on the *wrong* variable, a
+/// tainted loop bound, tainted length arithmetic, and a register
+/// without deregister on an early-return path must all flag — and
+/// their sanitized twins must pass with zero findings.
+#[test]
+fn analyze_taint_rules_flag_seeded_shapes_and_accept_twins() {
+    let dir = tmp("taint");
+    let net = dir.join("src/transport/net");
+    let serve = dir.join("src/serve");
+    std::fs::create_dir_all(&net).unwrap();
+    std::fs::create_dir_all(&serve).unwrap();
+    std::fs::write(
+        net.join("taint_seeded.rs"),
+        concat!(
+            "pub struct Hdr { pub n_scales: usize, pub payload_len: usize }\n",
+            "pub fn wrong_cap(hdr: &Hdr) -> Vec<u8> {\n",
+            "    if hdr.n_scales > 1024 {\n",
+            "        return Vec::new();\n",
+            "    }\n",
+            "    vec![0u8; hdr.payload_len]\n",
+            "}\n",
+            "pub fn loop_bound(n_chunks: usize) {\n",
+            "    for _ in 0..n_chunks {\n",
+            "        let _ = n_chunks;\n",
+            "    }\n",
+            "}\n",
+            "pub fn arith(n_rows: usize, row_len: usize, out: &mut Vec<u8>) {\n",
+            "    let total = n_rows * row_len;\n",
+            "    out.reserve(total);\n",
+            "}\n",
+        ),
+    )
+    .unwrap();
+    std::fs::write(
+        serve.join("leaky.rs"),
+        concat!(
+            "pub fn open(r: &mut Reactor, fd: i32) -> Result<(), String> {\n",
+            "    r.register(fd, 0, 1)?;\n",
+            "    probe()?;\n",
+            "    r.deregister(fd)?;\n",
+            "    Ok(())\n",
+            "}\n",
+        ),
+    )
+    .unwrap();
+    let out = qlc()
+        .args([
+            "analyze",
+            "--src",
+            dir.join("src").to_str().unwrap(),
+            "--baseline",
+            dir.join("analysis/baseline.txt").to_str().unwrap(),
+            "--deny-new",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "seeded taint shapes must fail");
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    for rule in [
+        "cap-before-alloc",
+        "tainted-loop-bound",
+        "tainted-length-arith",
+        "reactor-interest-leak",
+    ] {
+        assert!(text.contains(rule), "{rule} missing from:\n{text}");
+    }
+    // Findings carry the source-to-sink chain, not just a line.
+    assert!(
+        text.contains("wire-shaped") && text.contains("reaches"),
+        "taint chain missing from:\n{text}"
+    );
+    assert!(
+        text.contains("flows into `total`"),
+        "arith chain must name the intermediate binding:\n{text}"
+    );
+
+    // Sanitized twins of all four shapes: zero findings.
+    std::fs::remove_file(net.join("taint_seeded.rs")).unwrap();
+    std::fs::remove_file(serve.join("leaky.rs")).unwrap();
+    std::fs::write(
+        net.join("taint_clean.rs"),
+        concat!(
+            "pub struct Hdr { pub n_scales: usize, pub payload_len: usize }\n",
+            "pub fn right_cap(hdr: &Hdr) -> Vec<u8> {\n",
+            "    if hdr.payload_len > 4096 {\n",
+            "        return Vec::new();\n",
+            "    }\n",
+            "    vec![0u8; hdr.payload_len]\n",
+            "}\n",
+            "pub fn loop_capped(n_chunks: usize) {\n",
+            "    if n_chunks > 64 {\n",
+            "        return;\n",
+            "    }\n",
+            "    for _ in 0..n_chunks {\n",
+            "        let _ = n_chunks;\n",
+            "    }\n",
+            "}\n",
+            "pub fn arith_checked(\n",
+            "    n_rows: usize,\n",
+            "    row_len: usize,\n",
+            "    out: &mut Vec<u8>,\n",
+            ") -> Result<(), String> {\n",
+            "    let total = n_rows.checked_mul(row_len).ok_or(\"overflow\")?;\n",
+            "    if total > 4096 {\n",
+            "        return Err(\"cap\".into());\n",
+            "    }\n",
+            "    out.reserve(total);\n",
+            "    Ok(())\n",
+            "}\n",
+        ),
+    )
+    .unwrap();
+    std::fs::write(
+        serve.join("balanced.rs"),
+        concat!(
+            "pub fn open(r: &mut Reactor, fd: i32) -> Result<(), String> {\n",
+            "    r.register(fd, 0, 1)?;\n",
+            "    if probe().is_err() {\n",
+            "        let _ = r.deregister(fd);\n",
+            "        return Err(\"probe\".into());\n",
+            "    }\n",
+            "    r.deregister(fd)?;\n",
+            "    Ok(())\n",
+            "}\n",
+        ),
+    )
+    .unwrap();
+    let out = qlc()
+        .args([
+            "analyze",
+            "--src",
+            dir.join("src").to_str().unwrap(),
+            "--baseline",
+            dir.join("analysis/baseline.txt").to_str().unwrap(),
+            "--deny-new",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(out.status.success(), "sanitized twins must pass:\n{text}");
+    assert!(text.contains("0 new"), "{text}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `--json` must emit a parseable report whose counts agree with the
+/// text run over the same tree.
+#[test]
+fn analyze_json_report_parses_and_matches_text() {
+    use qlc::util::json::Json;
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let src = manifest.join("src");
+    let base = manifest.join("analysis/baseline.txt");
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "analyze",
+            "--src",
+            src.to_str().unwrap(),
+            "--baseline",
+            base.to_str().unwrap(),
+        ];
+        args.extend_from_slice(extra);
+        qlc().args(&args).output().unwrap()
+    };
+    let text_out = run(&[]);
+    assert!(text_out.status.success());
+    let text = String::from_utf8_lossy(&text_out.stdout).to_string();
+
+    let json_out = run(&["--json"]);
+    assert!(json_out.status.success());
+    let report =
+        Json::parse(&String::from_utf8_lossy(&json_out.stdout)).unwrap();
+    assert_eq!(report.get("version").unwrap().as_usize(), Some(2));
+    let counts = report.get("counts").unwrap();
+    let total = counts.get("total").unwrap().as_usize().unwrap();
+    let baselined = counts.get("baselined").unwrap().as_usize().unwrap();
+    let fresh = counts.get("new").unwrap().as_usize().unwrap();
+    assert_eq!(fresh, 0, "committed tree must be clean");
+    assert!(text.contains(&format!(
+        "qlc analyze: {total} file finding(s), {baselined} baselined, \
+         {fresh} new"
+    )));
+    assert_eq!(
+        report.get("findings").unwrap().as_arr().unwrap().len(),
+        total
+    );
+    // Every reported rule name is a registered rule.
+    let rules: Vec<&str> = report
+        .get("rules")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_str().unwrap())
+        .collect();
+    for f in report.get("findings").unwrap().as_arr().unwrap() {
+        let rule = f.get("rule").unwrap().as_str().unwrap();
+        assert!(rules.contains(&rule), "unregistered rule {rule}");
+    }
+}
+
+/// A baseline entry matching no finding warns by default and fails
+/// under `--deny-stale`.
+#[test]
+fn analyze_stale_baseline_warns_then_denies() {
+    let dir = tmp("stale");
+    std::fs::create_dir_all(dir.join("src")).unwrap();
+    std::fs::write(dir.join("src/ok.rs"), "pub fn ok() -> u8 { 0 }\n")
+        .unwrap();
+    std::fs::create_dir_all(dir.join("analysis")).unwrap();
+    std::fs::write(
+        dir.join("analysis/baseline.txt"),
+        "src/gone.rs:7: panic-free: '.unwrap()' fixed long ago\n",
+    )
+    .unwrap();
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "analyze",
+            "--src",
+            dir.join("src").to_str().unwrap(),
+            "--baseline",
+            dir.join("analysis/baseline.txt").to_str().unwrap(),
+        ];
+        args.extend_from_slice(extra);
+        qlc().args(&args).output().unwrap()
+    };
+    let out = run(&[]);
+    assert!(out.status.success(), "stale is a warning by default");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("stale baseline entry")
+            && stderr.contains("src/gone.rs:7"),
+        "missing stale warning: {stderr}"
+    );
+    let out = run(&["--deny-stale"]);
+    assert!(!out.status.success(), "--deny-stale must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("stale baseline"), "{stderr}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `--explain` documents every registered rule (kept in sync by
+/// iterating the registry here) and rejects unknown rule names.
+#[test]
+fn analyze_explain_covers_every_registered_rule() {
+    let out = qlc()
+        .args(["analyze", "--explain", "all"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for rule in &qlc::analysis::rules::RULES {
+        assert!(text.contains(rule.name), "{} missing", rule.name);
+        assert!(
+            text.contains(rule.contract),
+            "{} contract missing",
+            rule.name
+        );
+    }
+    assert!(text.contains("waiver:"), "{text}");
+    assert!(text.contains("example:"), "{text}");
+
+    let one = qlc()
+        .args(["analyze", "--explain", "tainted-loop-bound"])
+        .output()
+        .unwrap();
+    assert!(one.status.success());
+    let text = String::from_utf8_lossy(&one.stdout);
+    assert!(text.contains("tainted-loop-bound"));
+    assert!(!text.contains("unchecked-narrowing"));
+
+    let bad = qlc()
+        .args(["analyze", "--explain", "no-such-rule"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("known rules"), "{err}");
+}
+
 #[test]
 fn optimize_prints_scheme() {
     let out = qlc()
